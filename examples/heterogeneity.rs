@@ -1,0 +1,45 @@
+//! Heterogeneity simulation walk-through (paper §V-A, Table IV shape).
+//!
+//! Trains the same CIFAR-10-style task under increasingly skewed
+//! partitions and prints the accuracy degradation ordering the paper's
+//! Table IV reports: IID ≥ dir(0.5) ≥ class(3) ≥ class(2).
+//!
+//! ```bash
+//! cargo run --release --example heterogeneity
+//! ```
+
+fn run(partition: easyfl::Partition) -> easyfl::Result<f64> {
+    let cfg = easyfl::Config {
+        dataset: easyfl::DatasetKind::Cifar10,
+        partition,
+        num_clients: 30,
+        clients_per_round: 10,
+        rounds: 6,
+        local_epochs: 1,
+        max_samples: 96,
+        test_samples: 256,
+        eval_every: 6, // final round only
+        ..easyfl::Config::default()
+    };
+    Ok(easyfl::init(cfg)?.run()?.final_accuracy)
+}
+
+fn main() -> easyfl::Result<()> {
+    println!("partition     final accuracy   gap vs IID");
+    let iid = run(easyfl::Partition::Iid)?;
+    println!("iid           {:6.2}%           -", iid * 100.0);
+    for (name, p) in [
+        ("dir(0.5)", easyfl::Partition::Dirichlet(0.5)),
+        ("class(3)", easyfl::Partition::ByClass(3)),
+        ("class(2)", easyfl::Partition::ByClass(2)),
+    ] {
+        let acc = run(p)?;
+        println!(
+            "{name:<13} {:6.2}%           {:+.2}pp",
+            acc * 100.0,
+            (acc - iid) * 100.0
+        );
+    }
+    println!("\nExpected shape (Table IV): degradation grows with skew.");
+    Ok(())
+}

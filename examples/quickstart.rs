@@ -1,0 +1,37 @@
+//! Quick start — the paper's Listing 1, Example 1, in three lines.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Everything is defaulted: synthetic FEMNIST, realistic non-IID
+//! partition, 10 clients/round, FedAvg, standalone training. (The config
+//! override below only shrinks the workload so the demo finishes in
+//! seconds; delete it and the paper-scale defaults apply.)
+
+fn main() -> easyfl::Result<()> {
+    // Demo-sized overrides (optional — like the paper's `configs`).
+    let cfg = easyfl::Config {
+        rounds: 3,
+        local_epochs: 1,
+        clients_per_round: 5,
+        max_samples: 96,
+        test_samples: 256,
+        ..easyfl::Config::default()
+    };
+
+    // --- the three lines -------------------------------------------------
+    let session = easyfl::init(cfg)?; // easyfl.init(configs)
+    let report = session.run()?; // easyfl.run()
+    println!("final accuracy: {:.2}%", report.final_accuracy * 100.0);
+    // ----------------------------------------------------------------------
+
+    println!(
+        "best {:.2}% | avg round {:.0} ms | comm {:.1} MiB | {} rounds",
+        report.best_accuracy * 100.0,
+        report.avg_round_ms,
+        report.comm_bytes as f64 / (1024.0 * 1024.0),
+        report.rounds
+    );
+    Ok(())
+}

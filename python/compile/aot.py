@@ -1,0 +1,153 @@
+"""AOT bridge: lower every (model, entry-point) pair to HLO *text*.
+
+This is the only place Python runs in the whole system — at build time
+(`make artifacts`). The Rust runtime loads the emitted text with
+``HloModuleProto::from_text_file``.
+
+HLO **text** (not ``.serialize()``) is the interchange format: jax ≥ 0.5
+emits HloModuleProtos with 64-bit instruction ids which xla_extension 0.5.1
+(the version the published ``xla`` 0.1.6 crate links) rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Per model this writes:
+  artifacts/<model>_train.hlo.txt      train_step
+  artifacts/<model>_fedprox.hlo.txt    fedprox_step
+  artifacts/<model>_eval.hlo.txt       eval_step
+  artifacts/<model>_aggregate.hlo.txt  fedavg aggregation ([K, P] @ [K])
+  artifacts/<model>_meta.json          shapes/dtypes contract for Rust
+  artifacts/<model>_init.bin           initial flat params (f32 LE)
+plus artifacts/manifest.json listing everything.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+
+DEFAULT_BATCH = 32
+DEFAULT_AGG_K = 32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR → XlaComputation → HLO text (ids reassigned)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def write_golden(name: str, out_dir: str, batch: int) -> dict:
+    """Deterministic cross-layer test vector.
+
+    Rust integration tests run the AOT executables on these exact inputs
+    and must reproduce these outputs — the strongest end-to-end numeric
+    check between the Python compile path and the Rust runtime.
+    """
+    import jax.numpy as jnp
+
+    spec = M.MODELS[name]
+    rng = np.random.default_rng(1234)
+    flat = M.init_params(name, seed=0)
+    if spec["input_dtype"] == "f32":
+        x = rng.normal(size=(batch,) + tuple(spec["input_shape"])).astype(np.float32)
+    else:
+        x = rng.integers(
+            0, spec["classes"], size=(batch,) + tuple(spec["input_shape"])
+        ).astype(np.int32)
+    y = rng.integers(0, spec["classes"], size=(batch,)).astype(np.int32)
+    mask = np.ones((batch,), np.float32)
+    lr = jnp.asarray([0.05], jnp.float32)
+
+    golden_dir = os.path.join(out_dir, "golden")
+    os.makedirs(golden_dir, exist_ok=True)
+    x.astype("<f4" if spec["input_dtype"] == "f32" else "<i4").tofile(
+        os.path.join(golden_dir, f"{name}_x.bin")
+    )
+    y.astype("<i4").tofile(os.path.join(golden_dir, f"{name}_y.bin"))
+
+    sum_loss, correct = M.eval_step(name, flat, x, y, mask)
+    new_flat, new_mom, t_loss, t_correct = M.train_step(
+        name, flat, jnp.zeros_like(flat), x, y, mask, lr
+    )
+    golden = {
+        "batch": batch,
+        "lr": 0.05,
+        "eval_sum_loss": float(sum_loss[0]),
+        "eval_correct": float(correct[0]),
+        "train_sum_loss": float(t_loss[0]),
+        "train_correct": float(t_correct[0]),
+        "train_param_l2": float(jnp.sqrt(jnp.sum(new_flat**2))),
+        "train_param_first8": [float(v) for v in np.asarray(new_flat[:8])],
+        "train_mom_l2": float(jnp.sqrt(jnp.sum(new_mom**2))),
+    }
+    with open(os.path.join(golden_dir, f"{name}_golden.json"), "w") as f:
+        json.dump(golden, f, indent=2)
+    return golden
+
+
+def lower_model(name: str, out_dir: str, batch: int, agg_k: int) -> dict:
+    """Lower one model's entry points; returns its manifest entry."""
+    spec = M.MODELS[name]
+    entries = M.make_entry_points(name, batch, agg_k)
+    files = {}
+    for entry, (fn, example_args) in entries.items():
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}_{entry}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        files[entry] = fname
+        print(f"  {fname}: {len(text)} chars")
+
+    flat = np.asarray(M.init_params(name, seed=0), np.float32)
+    init_name = f"{name}_init.bin"
+    flat.astype("<f4").tofile(os.path.join(out_dir, init_name))
+    write_golden(name, out_dir, batch)
+
+    meta = {
+        "model": name,
+        "param_count": M.param_count(name),
+        "batch": batch,
+        "agg_k": agg_k,
+        "input_shape": list(spec["input_shape"]),
+        "input_dtype": spec["input_dtype"],
+        "classes": spec["classes"],
+        "layout": [[n, list(s)] for n, s in spec["layout"]],
+        "files": files,
+        "init": init_name,
+    }
+    with open(os.path.join(out_dir, f"{name}_meta.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+    return meta
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", default="mlp,cnn,charcnn")
+    ap.add_argument("--batch", type=int, default=DEFAULT_BATCH)
+    ap.add_argument("--agg-k", type=int, default=DEFAULT_AGG_K)
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {"models": {}, "batch": args.batch, "agg_k": args.agg_k}
+    for name in args.models.split(","):
+        name = name.strip()
+        print(f"lowering {name} (P={M.param_count(name)})")
+        manifest["models"][name] = lower_model(
+            name, args.out_dir, args.batch, args.agg_k
+        )
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"manifest: {len(manifest['models'])} models → {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

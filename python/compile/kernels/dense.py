@@ -1,0 +1,166 @@
+"""L1 Pallas kernels: fused dense layer (forward + custom-VJP backward).
+
+The dense layer is the compute hot-spot of every EasyFL model head (the
+paper's FEMNIST CNN, CIFAR ResNet head and Shakespeare RNN all end in dense
+layers; our MLP is dense end-to-end).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the kernel tiles the output
+dimension ``O`` into MXU-friendly blocks while keeping the full reduction
+dimension ``I`` resident in VMEM per tile; bias-add and ReLU are fused into
+the same kernel so the pre-activation never round-trips through HBM. The
+BlockSpec index maps below carry the HBM→VMEM schedule a CUDA implementation
+would express with threadblocks.
+
+All kernels are lowered with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, and interpret mode lowers to plain HLO that the
+Rust runtime runs directly. Correctness versus ``ref.py`` is enforced by
+``python/tests/test_kernels.py``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default output-dimension tile. 128 matches the MXU systolic array width;
+# pallas masks the ragged tail so O need not divide evenly.
+# NOTE (perf, EXPERIMENTS.md §Perf iter 1): the MXU tile is the *TPU*
+# schedule. interpret=True pays a whole-operand copy per grid step, so the
+# CPU AOT path uses block=None → one block per kernel call (grid 1).
+DEFAULT_BLOCK_O = 128
+# Tile for flat-vector kernels (bias grad) — a VPU-lane-aligned strip.
+DEFAULT_BLOCK_P = 1024
+
+
+def _dense_fwd_kernel(x_ref, w_ref, b_ref, o_ref, *, relu: bool):
+    """One (B, bo) output tile: ``act(x @ w_tile + b_tile)``."""
+    acc = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    acc = acc + b_ref[...][None, :]
+    if relu:
+        acc = jnp.maximum(acc, 0.0)
+    o_ref[...] = acc
+
+
+def dense_fwd(x, w, b, activation: str = "relu", block_o=None):
+    """Pallas fused dense forward: ``act(x @ w + b)``.
+
+    Shapes: ``x f32[B, I]``, ``w f32[I, O]``, ``b f32[O]`` → ``f32[B, O]``.
+    ``block_o=None`` ⇒ single block (CPU fast path); integer ⇒ MXU tiling.
+    """
+    if activation not in ("relu", "none"):
+        raise ValueError(f"unknown activation {activation!r}")
+    batch, i_dim = x.shape
+    o_dim = w.shape[1]
+    bo = min(block_o or o_dim, o_dim)
+    grid = (pl.cdiv(o_dim, bo),)
+    return pl.pallas_call(
+        functools.partial(_dense_fwd_kernel, relu=activation == "relu"),
+        out_shape=jax.ShapeDtypeStruct((batch, o_dim), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((batch, i_dim), lambda j: (0, 0)),
+            pl.BlockSpec((i_dim, bo), lambda j: (0, j)),
+            pl.BlockSpec((bo,), lambda j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((batch, bo), lambda j: (0, j)),
+        interpret=True,
+    )(x, w, b)
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def matmul(a, b, block_n=None):
+    """Pallas matmul ``a[M, K] @ b[K, N]`` tiled over ``N``.
+
+    Used by the dense backward pass (``dx = g @ wᵀ``, ``dw = xᵀ @ g``); the
+    reduction dimension stays VMEM-resident per tile, same schedule as the
+    forward kernel.
+    """
+    m_dim, k_dim = a.shape
+    n_dim = b.shape[1]
+    bn = min(block_n or n_dim, n_dim)
+    grid = (pl.cdiv(n_dim, bn),)
+    return pl.pallas_call(
+        _matmul_kernel,
+        out_shape=jax.ShapeDtypeStruct((m_dim, n_dim), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m_dim, k_dim), lambda j: (0, 0)),
+            pl.BlockSpec((k_dim, bn), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((m_dim, bn), lambda j: (0, j)),
+        interpret=True,
+    )(a, b)
+
+
+def _relu_mask_kernel(g_ref, o_ref, out_ref):
+    out_ref[...] = g_ref[...] * (o_ref[...] > 0.0).astype(jnp.float32)
+
+
+def relu_mask(g, out, block_o=None):
+    """``g * (out > 0)`` — gates the cotangent through the fused ReLU."""
+    batch, o_dim = g.shape
+    bo = min(block_o or o_dim, o_dim)
+    return pl.pallas_call(
+        _relu_mask_kernel,
+        out_shape=jax.ShapeDtypeStruct((batch, o_dim), jnp.float32),
+        grid=(pl.cdiv(o_dim, bo),),
+        in_specs=[
+            pl.BlockSpec((batch, bo), lambda j: (0, j)),
+            pl.BlockSpec((batch, bo), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((batch, bo), lambda j: (0, j)),
+        interpret=True,
+    )(g, out)
+
+
+def _colsum_kernel(g_ref, o_ref):
+    o_ref[...] = jnp.sum(g_ref[...], axis=0)
+
+
+def colsum(g, block_o=None):
+    """Column sum ``f32[B, O] → f32[O]`` (bias gradient)."""
+    batch, o_dim = g.shape
+    bo = min(block_o or o_dim, o_dim)
+    return pl.pallas_call(
+        _colsum_kernel,
+        out_shape=jax.ShapeDtypeStruct((o_dim,), jnp.float32),
+        grid=(pl.cdiv(o_dim, bo),),
+        in_specs=[pl.BlockSpec((batch, bo), lambda j: (0, j))],
+        out_specs=pl.BlockSpec((bo,), lambda j: (j,)),
+        interpret=True,
+    )(g)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def dense(x, w, b, activation: str = "relu"):
+    """Differentiable fused dense layer backed entirely by Pallas kernels.
+
+    ``jax.grad`` through this op dispatches to :func:`matmul`,
+    :func:`relu_mask` and :func:`colsum` — the whole fwd+bwd of the hot
+    layer stays in L1.
+    """
+    return dense_fwd(x, w, b, activation)
+
+
+def _dense_vjp_fwd(x, w, b, activation):
+    out = dense_fwd(x, w, b, activation)
+    return out, (x, w, out)
+
+
+def _dense_vjp_bwd(activation, res, g):
+    x, w, out = res
+    if activation == "relu":
+        g = relu_mask(g, out)
+    dx = matmul(g, w.T)
+    dw = matmul(x.T, g)
+    db = colsum(g)
+    return dx, dw, db
+
+
+dense.defvjp(_dense_vjp_fwd, _dense_vjp_bwd)

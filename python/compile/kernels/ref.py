@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness contracts: every Pallas kernel in this package
+must match its oracle to float32 tolerance for all shapes/dtypes the AOT
+path emits (and for the randomized shapes hypothesis sweeps in
+python/tests/test_kernels.py).
+"""
+
+import jax.numpy as jnp
+
+
+def dense_ref(x, w, b, activation: str = "relu"):
+    """Fused dense layer: ``act(x @ w + b)``.
+
+    Args:
+      x: ``f32[B, I]`` input activations.
+      w: ``f32[I, O]`` weight matrix.
+      b: ``f32[O]`` bias.
+      activation: ``"relu"`` or ``"none"``.
+    """
+    out = jnp.dot(x, w, preferred_element_type=jnp.float32) + b[None, :]
+    if activation == "relu":
+        out = jnp.maximum(out, 0.0)
+    elif activation != "none":
+        raise ValueError(f"unknown activation {activation!r}")
+    return out
+
+
+def dense_grads_ref(x, w, b, g, activation: str = "relu"):
+    """Reference backward pass of :func:`dense_ref`.
+
+    ``g`` is the cotangent of the *activated* output. Returns ``(dx, dw, db)``.
+    """
+    if activation == "relu":
+        pre = jnp.dot(x, w, preferred_element_type=jnp.float32) + b[None, :]
+        g = g * (pre > 0.0).astype(g.dtype)
+    dx = jnp.dot(g, w.T, preferred_element_type=jnp.float32)
+    dw = jnp.dot(x.T, g, preferred_element_type=jnp.float32)
+    db = jnp.sum(g, axis=0)
+    return dx, dw, db
+
+
+def fedavg_ref(stack, weights):
+    """Weighted federated average.
+
+    Args:
+      stack: ``f32[K, P]`` — one flat parameter/update vector per client.
+      weights: ``f32[K]`` — aggregation weights (already normalized by the
+        caller; zero entries are padding for partial cohorts).
+
+    Returns ``f32[P]``: ``sum_k weights[k] * stack[k]``.
+    """
+    return jnp.einsum("k,kp->p", weights, stack)

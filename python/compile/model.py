@@ -1,0 +1,292 @@
+"""L2: EasyFL model zoo — JAX forward/backward over a flat parameter vector.
+
+Three model families mirror the paper's Table III:
+
+* ``mlp``     — FEMNIST-style: 784 → 256 → 128 → 62, dense layers are the
+                L1 Pallas fused-dense kernel end to end.
+* ``cnn``     — CIFAR-10-style: 2×(conv3x3 + maxpool) → Pallas dense head.
+                (Stands in for the paper's ResNet18 at CPU-tractable size;
+                same code path: conv features + dense classifier.)
+* ``charcnn`` — Shakespeare-style next-char model: embedding + 1-D conv +
+                Pallas dense head over an 80-char window. Substitutes the
+                paper's 2-layer LSTM (DESIGN.md substitution #6).
+
+Every entry point operates on a **flat f32[P] parameter vector** so the Rust
+runtime stays model-agnostic (DESIGN.md "Flat-parameter contract"):
+
+* ``train_step``   — one SGD-with-momentum minibatch step.
+* ``fedprox_step`` — same, plus FedProx's proximal term μ‖w − w_global‖².
+* ``eval_step``    — masked sum-loss and correct-count.
+
+Batches are fixed-size with a 0/1 ``mask`` so wrap-around padding neither
+biases the loss nor the accuracy.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from compile.kernels.dense import dense
+
+# SGD momentum (paper Appendix B-A: SGD with momentum 0.9).
+MOMENTUM = 0.9
+
+
+# --------------------------------------------------------------------------
+# Model definitions: each is (layout, forward) where layout is a list of
+# (name, shape) in flat-vector order and forward(params_dict, x) -> logits.
+# --------------------------------------------------------------------------
+
+
+def _mlp_layout():
+    return [
+        ("w1", (784, 256)),
+        ("b1", (256,)),
+        ("w2", (256, 128)),
+        ("b2", (128,)),
+        ("w3", (128, 62)),
+        ("b3", (62,)),
+    ]
+
+
+def _mlp_forward(p, x):
+    # x: f32[B, 784]
+    h = dense(x, p["w1"], p["b1"], "relu")
+    h = dense(h, p["w2"], p["b2"], "relu")
+    return dense(h, p["w3"], p["b3"], "none")
+
+
+def _cnn_layout():
+    return [
+        ("c1", (3, 3, 3, 16)),  # HWIO
+        ("cb1", (16,)),
+        ("c2", (3, 3, 16, 32)),
+        ("cb2", (32,)),
+        ("w1", (2048, 128)),
+        ("b1", (128,)),
+        ("w2", (128, 10)),
+        ("b2", (10,)),
+    ]
+
+
+def _conv_relu_pool(x, w, b):
+    y = lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    ) + b[None, None, None, :]
+    y = jnp.maximum(y, 0.0)
+    return lax.reduce_window(
+        y, -jnp.inf, lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def _cnn_forward(p, x):
+    # x: f32[B, 32, 32, 3]
+    h = _conv_relu_pool(x, p["c1"], p["cb1"])   # [B,16,16,16]
+    h = _conv_relu_pool(h, p["c2"], p["cb2"])   # [B,8,8,32]
+    h = h.reshape(h.shape[0], -1)               # [B,2048]
+    h = dense(h, p["w1"], p["b1"], "relu")
+    return dense(h, p["w2"], p["b2"], "none")
+
+
+CHAR_VOCAB = 64
+CHAR_SEQ = 80
+
+
+def _charcnn_layout():
+    return [
+        ("emb", (CHAR_VOCAB, 16)),
+        ("c1", (5, 16, 32)),  # (width, in, out) for conv1d
+        ("cb1", (32,)),
+        ("w1", (CHAR_SEQ * 32, 128)),
+        ("b1", (128,)),
+        ("w2", (128, CHAR_VOCAB)),
+        ("b2", (CHAR_VOCAB,)),
+    ]
+
+
+def _charcnn_forward(p, x):
+    # x: i32[B, 80] character ids; predicts the next character.
+    h = p["emb"][x]  # [B, 80, 16]
+    h = lax.conv_general_dilated(
+        h, p["c1"], window_strides=(1,), padding="SAME",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+    ) + p["cb1"][None, None, :]
+    h = jnp.maximum(h, 0.0)
+    h = h.reshape(h.shape[0], -1)  # [B, 2560]
+    h = dense(h, p["w1"], p["b1"], "relu")
+    return dense(h, p["w2"], p["b2"], "none")
+
+
+MODELS = {
+    "mlp": {
+        "layout": _mlp_layout(),
+        "forward": _mlp_forward,
+        "input_shape": (784,),
+        "input_dtype": "f32",
+        "classes": 62,
+    },
+    "cnn": {
+        "layout": _cnn_layout(),
+        "forward": _cnn_forward,
+        "input_shape": (32, 32, 3),
+        "input_dtype": "f32",
+        "classes": 10,
+    },
+    "charcnn": {
+        "layout": _charcnn_layout(),
+        "forward": _charcnn_forward,
+        "input_shape": (CHAR_SEQ,),
+        "input_dtype": "i32",
+        "classes": CHAR_VOCAB,
+    },
+}
+
+
+def param_count(name: str) -> int:
+    """Total flat parameter count P for a model."""
+    total = 0
+    for _, shape in MODELS[name]["layout"]:
+        n = 1
+        for d in shape:
+            n *= d
+        total += n
+    return total
+
+
+def unflatten(name: str, flat):
+    """Slice a flat f32[P] vector into the model's parameter dict."""
+    params, off = {}, 0
+    for pname, shape in MODELS[name]["layout"]:
+        n = 1
+        for d in shape:
+            n *= d
+        params[pname] = flat[off:off + n].reshape(shape)
+        off += n
+    return params
+
+
+def flatten(name: str, params) -> jnp.ndarray:
+    """Inverse of :func:`unflatten`."""
+    return jnp.concatenate(
+        [params[pname].reshape(-1) for pname, _ in MODELS[name]["layout"]]
+    )
+
+
+def init_params(name: str, seed: int = 0) -> jnp.ndarray:
+    """He-initialized flat parameter vector (biases zero)."""
+    key = jax.random.PRNGKey(seed)
+    chunks = []
+    for pname, shape in MODELS[name]["layout"]:
+        key, sub = jax.random.split(key)
+        if len(shape) == 1:
+            chunks.append(jnp.zeros(shape, jnp.float32))
+        else:
+            fan_in = 1
+            for d in shape[:-1]:
+                fan_in *= d
+            std = (2.0 / fan_in) ** 0.5
+            chunks.append(
+                (jax.random.normal(sub, shape, jnp.float32) * std).reshape(-1)
+            )
+    return jnp.concatenate([c.reshape(-1) for c in chunks])
+
+
+# --------------------------------------------------------------------------
+# Loss and entry points
+# --------------------------------------------------------------------------
+
+
+def _masked_loss(name, flat, x, y, mask):
+    """Masked softmax cross-entropy. Returns (sum_loss, correct_count)."""
+    logits = MODELS[name]["forward"](unflatten(name, flat), x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    classes = logits.shape[-1]
+    onehot = (y[:, None] == jnp.arange(classes)[None, :]).astype(jnp.float32)
+    per_sample = -jnp.sum(onehot * logp, axis=-1)
+    sum_loss = jnp.sum(mask * per_sample)
+    correct = jnp.sum(mask * (jnp.argmax(logits, axis=-1) == y))
+    return sum_loss, correct
+
+
+def train_step(name, flat, mom, x, y, mask, lr):
+    """One SGD-with-momentum step on one minibatch.
+
+    Gradient of the *mean* masked loss; ``mom`` is the momentum buffer the
+    Rust client threads between batches (zeroed at round start).
+    Returns ``(flat', mom', sum_loss, correct)``.
+    """
+    def mean_loss(f):
+        sum_loss, correct = _masked_loss(name, f, x, y, mask)
+        denom = jnp.maximum(jnp.sum(mask), 1.0)
+        return sum_loss / denom, (sum_loss, correct)
+
+    grads, (sum_loss, correct) = jax.grad(mean_loss, has_aux=True)(flat)
+    mom = MOMENTUM * mom + grads
+    flat = flat - lr[0] * mom
+    return flat, mom, sum_loss[None], correct[None]
+
+
+def fedprox_step(name, flat, global_flat, mom, x, y, mask, lr, mu):
+    """FedProx local step: FedAvg step + μ(w − w_global) proximal gradient.
+
+    Implements exactly the paper's Table VII characterization of FedProx —
+    only the client *train* stage changes relative to FedAvg.
+    """
+    def mean_loss(f):
+        sum_loss, correct = _masked_loss(name, f, x, y, mask)
+        denom = jnp.maximum(jnp.sum(mask), 1.0)
+        return sum_loss / denom, (sum_loss, correct)
+
+    grads, (sum_loss, correct) = jax.grad(mean_loss, has_aux=True)(flat)
+    grads = grads + mu[0] * (flat - global_flat)
+    mom = MOMENTUM * mom + grads
+    flat = flat - lr[0] * mom
+    return flat, mom, sum_loss[None], correct[None]
+
+
+def eval_step(name, flat, x, y, mask):
+    """Masked evaluation: returns ``(sum_loss[1], correct[1])``."""
+    sum_loss, correct = _masked_loss(name, flat, x, y, mask)
+    return sum_loss[None], correct[None]
+
+
+def make_entry_points(name: str, batch: int, agg_k: int):
+    """Jit-ready callables + example args for AOT lowering.
+
+    Returns a dict: entry name → (fn, example_args). ``aggregate`` reuses
+    the L1 fedavg kernel over ``[agg_k, P]``.
+    """
+    from compile.kernels.fedavg import fedavg_aggregate
+
+    spec = MODELS[name]
+    p = param_count(name)
+    in_dtype = jnp.float32 if spec["input_dtype"] == "f32" else jnp.int32
+    x_s = jax.ShapeDtypeStruct((batch,) + spec["input_shape"], in_dtype)
+    y_s = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    m_s = jax.ShapeDtypeStruct((batch,), jnp.float32)
+    f_s = jax.ShapeDtypeStruct((p,), jnp.float32)
+    s1 = jax.ShapeDtypeStruct((1,), jnp.float32)
+    stack_s = jax.ShapeDtypeStruct((agg_k, p), jnp.float32)
+    wts_s = jax.ShapeDtypeStruct((agg_k,), jnp.float32)
+
+    def train(flat, mom, x, y, mask, lr):
+        return train_step(name, flat, mom, x, y, mask, lr)
+
+    def fedprox(flat, global_flat, mom, x, y, mask, lr, mu):
+        return fedprox_step(name, flat, global_flat, mom, x, y, mask, lr, mu)
+
+    def evaluate(flat, x, y, mask):
+        return eval_step(name, flat, x, y, mask)
+
+    def aggregate(stack, weights):
+        return (fedavg_aggregate(stack, weights),)
+
+    return {
+        "train": (train, (f_s, f_s, x_s, y_s, m_s, s1)),
+        "fedprox": (fedprox, (f_s, f_s, f_s, x_s, y_s, m_s, s1, s1)),
+        "eval": (evaluate, (f_s, x_s, y_s, m_s)),
+        "aggregate": (aggregate, (stack_s, wts_s)),
+    }

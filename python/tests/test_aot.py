@@ -1,0 +1,102 @@
+"""AOT path: HLO text emission and the artifact contract.
+
+True execution of the emitted HLO happens on the Rust side (the runtime's
+integration tests replay ``artifacts/golden/*`` through the compiled
+executables). Here we verify the compile-path half: the text parses back
+into an HloModule (the same parse the Rust loader performs), the artifact
+files honor the flat-parameter contract, and golden vectors are
+deterministic.
+"""
+
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+from jax._src.lib import xla_client as xc
+
+from compile import aot, model as M
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_hlo_text_parses_back():
+    """Emitted text must survive the HLO text parser (what Rust does)."""
+    eps = M.make_entry_points("mlp", batch=2, agg_k=2)
+    fn, example = eps["eval"]
+    lowered = jax.jit(fn).lower(*example)
+    text = aot.to_hlo_text(lowered)
+    assert "ENTRY" in text and "HloModule" in text
+    mod = xc._xla.hlo_module_from_text(text)  # raises on parse failure
+    assert mod.as_serialized_hlo_module_proto()
+
+
+def test_hlo_text_ids_are_32bit_safe():
+    """The whole point of the text interchange: parsed ids fit in i32."""
+    eps = M.make_entry_points("mlp", batch=2, agg_k=2)
+    fn, example = eps["aggregate"]
+    text = aot.to_hlo_text(jax.jit(fn).lower(*example))
+    # A serialized round-trip through the parser implies reassigned ids;
+    # just assert it re-parses and the proto is non-trivial.
+    mod = xc._xla.hlo_module_from_text(text)
+    assert len(mod.as_serialized_hlo_module_proto()) > 100
+
+
+@pytest.mark.parametrize("name", list(M.MODELS))
+def test_artifacts_exist_and_meta_consistent(name):
+    """`make artifacts` output honors the flat-parameter contract."""
+    meta_path = os.path.join(ARTIFACTS, f"{name}_meta.json")
+    if not os.path.exists(meta_path):
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    with open(meta_path) as f:
+        meta = json.load(f)
+    assert meta["param_count"] == M.param_count(name)
+    assert meta["classes"] == M.MODELS[name]["classes"]
+    layout_total = sum(
+        int(np.prod(shape)) for _, shape in (tuple(e) for e in meta["layout"])
+    )
+    assert layout_total == meta["param_count"]
+    for entry in ("train", "fedprox", "eval", "aggregate"):
+        p = os.path.join(ARTIFACTS, meta["files"][entry])
+        assert os.path.exists(p), p
+        with open(p) as f:
+            head = f.read(4096)
+        assert "HloModule" in head
+    init = np.fromfile(os.path.join(ARTIFACTS, meta["init"]), "<f4")
+    assert init.shape == (meta["param_count"],)
+    np.testing.assert_allclose(
+        init, np.asarray(M.init_params(name, seed=0)), rtol=1e-6, atol=1e-7
+    )
+
+
+@pytest.mark.parametrize("name", list(M.MODELS))
+def test_golden_vectors_exist_and_are_finite(name):
+    path = os.path.join(ARTIFACTS, "golden", f"{name}_golden.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built")
+    with open(path) as f:
+        g = json.load(f)
+    for k in (
+        "eval_sum_loss", "train_sum_loss", "train_param_l2", "train_mom_l2"
+    ):
+        assert np.isfinite(g[k]), (k, g[k])
+    assert 0 <= g["eval_correct"] <= g["batch"]
+    x = np.fromfile(os.path.join(ARTIFACTS, "golden", f"{name}_x.bin"), "<f4")
+    assert x.size > 0
+
+
+def test_golden_regeneration_deterministic(tmp_path):
+    g1 = aot.write_golden("mlp", str(tmp_path), batch=8)
+    g2 = aot.write_golden("mlp", str(tmp_path), batch=8)
+    assert g1 == g2
+
+
+def test_manifest_lists_all_models():
+    path = os.path.join(ARTIFACTS, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built")
+    with open(path) as f:
+        manifest = json.load(f)
+    for name in ("mlp", "cnn", "charcnn"):
+        assert name in manifest["models"]

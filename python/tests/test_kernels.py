@@ -1,0 +1,163 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+This is the core numeric signal of the compile path: hypothesis sweeps
+shapes and block sizes (including ragged tails the BlockSpecs must mask)
+and asserts allclose against ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import dense as D
+from compile.kernels import fedavg as F
+from compile.kernels import ref as R
+
+SETTINGS = dict(max_examples=15, deadline=None)
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape), jnp.float32)
+
+
+# ---------------------------------------------------------------- dense fwd
+
+
+@pytest.mark.parametrize("activation", ["relu", "none"])
+@pytest.mark.parametrize("shape", [(32, 784, 256), (8, 100, 130), (1, 3, 5)])
+def test_dense_fwd_matches_ref(activation, shape):
+    b, i, o = shape
+    rng = np.random.default_rng(42)
+    x, w, bias = _rand(rng, b, i), _rand(rng, i, o), _rand(rng, o)
+    got = D.dense_fwd(x, w, bias, activation)
+    want = R.dense_ref(x, w, bias, activation)
+    # Accumulation order differs between the tiled kernel and jnp.dot over
+    # deep reductions (I=784) — tolerance scaled accordingly.
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 48),
+    i=st.integers(1, 300),
+    o=st.integers(1, 300),
+    block=st.sampled_from([32, 128, 256]),
+    relu=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dense_fwd_hypothesis(b, i, o, block, relu, seed):
+    rng = np.random.default_rng(seed)
+    x, w, bias = _rand(rng, b, i), _rand(rng, i, o), _rand(rng, o)
+    act = "relu" if relu else "none"
+    got = D.dense_fwd(x, w, bias, act, block_o=block)
+    want = R.dense_ref(x, w, bias, act)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_dense_rejects_unknown_activation():
+    rng = np.random.default_rng(0)
+    with pytest.raises(ValueError):
+        D.dense_fwd(_rand(rng, 2, 3), _rand(rng, 3, 4), _rand(rng, 4), "gelu")
+
+
+# ---------------------------------------------------------------- dense bwd
+
+
+@pytest.mark.parametrize("activation", ["relu", "none"])
+def test_dense_custom_vjp_matches_ref_grads(activation):
+    rng = np.random.default_rng(7)
+    x, w, b = _rand(rng, 16, 50), _rand(rng, 50, 70), _rand(rng, 70)
+    g = _rand(rng, 16, 70)
+
+    def loss(x, w, b):
+        return jnp.sum(D.dense(x, w, b, activation) * g)
+
+    dx, dw, db = jax.grad(loss, argnums=(0, 1, 2))(x, w, b)
+    rdx, rdw, rdb = R.dense_grads_ref(x, w, b, g, activation)
+    np.testing.assert_allclose(dx, rdx, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(dw, rdw, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(db, rdb, rtol=1e-4, atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 32),
+    i=st.integers(1, 120),
+    o=st.integers(1, 150),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dense_grad_vs_autodiff_of_ref(b, i, o, seed):
+    """grad through the Pallas custom-VJP == grad through the jnp oracle."""
+    rng = np.random.default_rng(seed)
+    x, w, bias = _rand(rng, b, i), _rand(rng, i, o), _rand(rng, o)
+
+    def loss_k(w, bias):
+        return jnp.mean(D.dense(x, w, bias, "relu") ** 2)
+
+    def loss_r(w, bias):
+        return jnp.mean(R.dense_ref(x, w, bias, "relu") ** 2)
+
+    gk = jax.grad(loss_k, argnums=(0, 1))(w, bias)
+    gr = jax.grad(loss_r, argnums=(0, 1))(w, bias)
+    for a, c in zip(gk, gr):
+        np.testing.assert_allclose(a, c, rtol=1e-3, atol=1e-4)
+
+
+def test_matmul_ragged_tail():
+    rng = np.random.default_rng(3)
+    a, b = _rand(rng, 5, 33), _rand(rng, 33, 257)  # 257 % 128 != 0
+    np.testing.assert_allclose(
+        D.matmul(a, b), jnp.dot(a, b), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_colsum_and_relu_mask():
+    rng = np.random.default_rng(4)
+    g, out = _rand(rng, 9, 200), _rand(rng, 9, 200)
+    np.testing.assert_allclose(D.colsum(g), jnp.sum(g, axis=0), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(
+        D.relu_mask(g, out), g * (out > 0), rtol=1e-6, atol=1e-6
+    )
+
+
+# ------------------------------------------------------------------ fedavg
+
+
+@pytest.mark.parametrize("k,p", [(32, 241854), (1, 17), (8, 8192)])
+def test_fedavg_matches_ref(k, p):
+    rng = np.random.default_rng(11)
+    stack = jnp.asarray(rng.normal(size=(k, p)), jnp.float32)
+    wts = jnp.asarray(rng.random(k), jnp.float32)
+    got = F.fedavg_aggregate(stack, wts)
+    want = R.fedavg_ref(stack, wts)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(
+    k=st.integers(1, 40),
+    p=st.integers(1, 20000),
+    block=st.sampled_from([64, 1024, 8192]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fedavg_hypothesis(k, p, block, seed):
+    rng = np.random.default_rng(seed)
+    stack = jnp.asarray(rng.normal(size=(k, p)), jnp.float32)
+    wts = jnp.asarray(rng.random(k), jnp.float32)
+    got = F.fedavg_aggregate(stack, wts, block_p=block)
+    want = R.fedavg_ref(stack, wts)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_fedavg_zero_weight_padding_rows_ignored():
+    """Rust pads partial cohorts with zero weights — padding must not leak."""
+    rng = np.random.default_rng(12)
+    stack = jnp.asarray(rng.normal(size=(8, 1000)), jnp.float32)
+    wts = jnp.asarray([0.5, 0.5, 0, 0, 0, 0, 0, 0], jnp.float32)
+    # Poison the padded rows.
+    stack = stack.at[2:].set(1e30)
+    got = F.fedavg_aggregate(stack, wts)
+    want = 0.5 * stack[0] + 0.5 * stack[1]
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)

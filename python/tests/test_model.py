@@ -1,0 +1,138 @@
+"""L2 correctness: model zoo entry points over the flat-parameter contract."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+def _toy_batch(name, batch, seed=0):
+    rng = np.random.default_rng(seed)
+    spec = M.MODELS[name]
+    if spec["input_dtype"] == "f32":
+        x = jnp.asarray(rng.normal(size=(batch,) + spec["input_shape"]), jnp.float32)
+    else:
+        x = jnp.asarray(
+            rng.integers(0, M.CHAR_VOCAB, size=(batch,) + spec["input_shape"]),
+            jnp.int32,
+        )
+    y = jnp.asarray(rng.integers(0, spec["classes"], size=(batch,)), jnp.int32)
+    mask = jnp.ones((batch,), jnp.float32)
+    return x, y, mask
+
+
+@pytest.mark.parametrize("name", list(M.MODELS))
+def test_flatten_unflatten_roundtrip(name):
+    flat = M.init_params(name, seed=3)
+    assert flat.shape == (M.param_count(name),)
+    params = M.unflatten(name, flat)
+    again = M.flatten(name, params)
+    np.testing.assert_array_equal(flat, again)
+
+
+@pytest.mark.parametrize("name", list(M.MODELS))
+def test_init_params_deterministic(name):
+    a = M.init_params(name, seed=0)
+    b = M.init_params(name, seed=0)
+    c = M.init_params(name, seed=1)
+    np.testing.assert_array_equal(a, b)
+    assert not np.array_equal(np.asarray(a), np.asarray(c))
+
+
+@pytest.mark.parametrize("name", list(M.MODELS))
+def test_forward_shapes(name):
+    spec = M.MODELS[name]
+    x, _, _ = _toy_batch(name, 4)
+    logits = spec["forward"](M.unflatten(name, M.init_params(name)), x)
+    assert logits.shape == (4, spec["classes"])
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_train_step_reduces_loss_mlp():
+    """A few SGD steps on a fixed batch must reduce the loss (overfit test)."""
+    name, batch = "mlp", 16
+    x, y, mask = _toy_batch(name, batch, seed=1)
+    flat = M.init_params(name, seed=0)
+    mom = jnp.zeros_like(flat)
+    lr = jnp.asarray([0.1], jnp.float32)
+    losses = []
+    step = jax.jit(lambda f, m: M.train_step(name, f, m, x, y, mask, lr))
+    for _ in range(8):
+        flat, mom, sum_loss, _ = step(flat, mom)
+        losses.append(float(sum_loss[0]) / batch)
+    assert losses[-1] < losses[0] * 0.8, losses
+
+
+def test_train_step_mask_ignores_padding():
+    """Wrap-around padded samples (mask 0) must not change the update."""
+    name, batch = "mlp", 8
+    x, y, _ = _toy_batch(name, batch, seed=2)
+    flat = M.init_params(name, seed=0)
+    mom = jnp.zeros_like(flat)
+    lr = jnp.asarray([0.05], jnp.float32)
+
+    mask_full = jnp.asarray([1, 1, 1, 1, 0, 0, 0, 0], jnp.float32)
+    # Poison the masked tail: same result expected.
+    x_poison = x.at[4:].set(123.0)
+    y_poison = y.at[4:].set(0)
+    f1, _, l1, c1 = M.train_step(name, flat, mom, x, y, mask_full, lr)
+    f2, _, l2, c2 = M.train_step(name, flat, mom, x_poison, y_poison, mask_full, lr)
+    np.testing.assert_allclose(f1, f2, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(l1, l2, rtol=1e-5, atol=1e-6)
+    np.testing.assert_array_equal(c1, c2)
+
+
+def test_fedprox_zero_mu_equals_fedavg():
+    name, batch = "mlp", 8
+    x, y, mask = _toy_batch(name, batch, seed=4)
+    flat = M.init_params(name, seed=0)
+    g = M.init_params(name, seed=9)  # arbitrary global
+    mom = jnp.zeros_like(flat)
+    lr = jnp.asarray([0.05], jnp.float32)
+    mu0 = jnp.asarray([0.0], jnp.float32)
+    f_avg, *_ = M.train_step(name, flat, mom, x, y, mask, lr)
+    f_prox, *_ = M.fedprox_step(name, flat, g, mom, x, y, mask, lr, mu0)
+    np.testing.assert_allclose(f_avg, f_prox, rtol=1e-6, atol=1e-7)
+
+
+def test_fedprox_pulls_towards_global():
+    """With a huge μ the update must move w towards w_global."""
+    name, batch = "mlp", 8
+    x, y, mask = _toy_batch(name, batch, seed=5)
+    flat = M.init_params(name, seed=0)
+    g = flat + 1.0
+    mom = jnp.zeros_like(flat)
+    lr = jnp.asarray([0.01], jnp.float32)
+    mu = jnp.asarray([100.0], jnp.float32)
+    f_new, *_ = M.fedprox_step(name, flat, g, mom, x, y, mask, lr, mu)
+    d_before = float(jnp.mean(jnp.abs(flat - g)))
+    d_after = float(jnp.mean(jnp.abs(f_new - g)))
+    assert d_after < d_before
+
+
+def test_eval_step_counts():
+    name = "mlp"
+    x, y, mask = _toy_batch(name, 8, seed=6)
+    flat = M.init_params(name, seed=0)
+    sum_loss, correct = M.eval_step(name, flat, x, y, mask)
+    assert sum_loss.shape == (1,) and correct.shape == (1,)
+    assert 0.0 <= float(correct[0]) <= 8.0
+    # A perfect predictor check: train labels = argmax of its own logits.
+    logits = M.MODELS[name]["forward"](M.unflatten(name, flat), x)
+    y_self = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    _, c_self = M.eval_step(name, flat, x, y_self, mask)
+    assert float(c_self[0]) == 8.0
+
+
+@pytest.mark.parametrize("name", list(M.MODELS))
+def test_entry_points_shapes(name):
+    eps = M.make_entry_points(name, batch=4, agg_k=3)
+    p = M.param_count(name)
+    fn, args = eps["aggregate"]
+    stack = jnp.tile(M.init_params(name)[None, :], (3, 1))
+    wts = jnp.asarray([0.2, 0.3, 0.5], jnp.float32)
+    (out,) = fn(stack, wts)
+    assert out.shape == (p,)
+    np.testing.assert_allclose(out, M.init_params(name), rtol=1e-5, atol=1e-5)

@@ -1,0 +1,14 @@
+//! Comparator implementations for the LOC / overhead tables.
+//!
+//! * [`monolith`] — vanilla FL written *without* the platform: what a
+//!   researcher codes from scratch (Table I's "~100–400 LOC" comparators,
+//!   Table V's "original implementations").
+//! * [`naive_lib`] — a deliberately framework-shaped but unoptimized FL
+//!   loop: re-compiles executables and re-materializes data every round,
+//!   copies parameters per client. It stands in for the overheads the
+//!   paper measures in LEAF/TFF (Table VI; DESIGN.md substitution #5).
+
+#![allow(dead_code)]
+
+pub mod monolith;
+pub mod naive_lib;

@@ -1,0 +1,138 @@
+//! Vanilla FL from scratch — no platform, everything inline.
+//!
+//! This is the Table I / Table V comparator: the code a researcher writes
+//! when no low-code platform exists. It re-implements client selection,
+//! local SGD, weighted aggregation, evaluation and a metrics log by hand
+//! against the raw runtime. Its LOC (counted by `common::count_loc`) is
+//! the "original implementation" column; easyfl's plugin files are the
+//! other column. The numerics intentionally mirror the platform defaults
+//! so round-time comparisons are apples-to-apples.
+
+use easyfl::data::FedDataset;
+use easyfl::model::ParamVec;
+use easyfl::runtime::Engine;
+use easyfl::util::rng::Rng;
+use easyfl::{Config, Result};
+
+/// Variants the monolith supports (Table V apps re-written from scratch).
+#[derive(Clone, Copy, PartialEq)]
+pub enum Variant {
+    FedAvg,
+    FedProx { mu: f32 },
+    Stc { sparsity: f64 },
+}
+
+pub struct MonolithReport {
+    pub final_accuracy: f64,
+    pub avg_round_ms: f64,
+    pub comm_bytes: usize,
+}
+
+/// The whole federated training procedure, hand-rolled.
+pub fn run(cfg: &Config, variant: Variant) -> Result<MonolithReport> {
+    let mut cfg = cfg.clone();
+    cfg.model = cfg.resolved_model();
+    let cfg = &cfg;
+    let engine = Engine::new(&cfg.artifacts_dir)?;
+    let dataset = FedDataset::from_config(cfg)?;
+    let mut params = engine.init_params(&cfg.model)?;
+    let test = dataset.materialize_test(cfg.test_samples);
+    let test_batches = test.batches(cfg.batch_size);
+    let mut rng = Rng::new(cfg.seed ^ 0x5E17_EC70);
+    let mut round_times = Vec::new();
+    let mut comm_bytes = 0usize;
+    let mut final_accuracy = 0.0;
+
+    for round in 0..cfg.rounds {
+        let t0 = std::time::Instant::now();
+        // --- selection (hand-rolled sampling without replacement)
+        let cohort = rng.choose_indices(dataset.num_clients(), cfg.clients_per_round);
+
+        // --- local training, one client at a time
+        let mut updates: Vec<(ParamVec, f64)> = Vec::new();
+        for &client in &cohort {
+            let local = dataset.materialize_client(client, cfg.data_amount)?;
+            let batches = local.batches(cfg.batch_size);
+            let mut w = params.clone();
+            let mut mom = ParamVec::zeros(w.len());
+            let mut order: Vec<usize> = (0..batches.len()).collect();
+            let mut brng = Rng::new(cfg.seed ^ ((round as u64) << 32) ^ client as u64);
+            for _ in 0..cfg.local_epochs {
+                brng.shuffle(&mut order);
+                for &bi in &order {
+                    let out = match variant {
+                        Variant::FedProx { mu } => engine.fedprox_step(
+                            &cfg.model, &w, &params, &mom, &batches[bi],
+                            cfg.lr as f32, mu,
+                        )?,
+                        _ => engine.train_step(
+                            &cfg.model, &w, &mom, &batches[bi], cfg.lr as f32,
+                        )?,
+                    };
+                    w = out.params;
+                    mom = out.momentum;
+                }
+            }
+            // --- compression (STC variant) and upload accounting
+            match variant {
+                Variant::Stc { sparsity } => {
+                    // top-k ternary, re-implemented inline
+                    let p = w.len();
+                    let k = ((p as f64 * sparsity).ceil() as usize).clamp(1, p);
+                    let mut delta: Vec<(usize, f32)> = w
+                        .iter()
+                        .zip(params.iter())
+                        .enumerate()
+                        .map(|(i, (n, g))| (i, n - g))
+                        .collect();
+                    delta.select_nth_unstable_by(k - 1, |a, b| {
+                        b.1.abs().partial_cmp(&a.1.abs()).unwrap()
+                    });
+                    delta.truncate(k);
+                    let mag =
+                        delta.iter().map(|(_, d)| d.abs()).sum::<f32>() / k as f32;
+                    let mut recon = params.clone();
+                    for (i, d) in &delta {
+                        recon[*i] += mag * d.signum();
+                    }
+                    comm_bytes += k * 4 + k / 8 + 12;
+                    updates.push((recon, local.num_samples as f64));
+                }
+                _ => {
+                    comm_bytes += w.len() * 4;
+                    updates.push((w, local.num_samples as f64));
+                }
+            }
+            comm_bytes += params.len() * 4; // downlink
+        }
+
+        // --- weighted aggregation, hand-rolled on the CPU
+        let total: f64 = updates.iter().map(|(_, n)| n).sum();
+        let mut agg = vec![0.0f32; params.len()];
+        for (w, n) in &updates {
+            let wt = (*n / total) as f32;
+            for (a, v) in agg.iter_mut().zip(w.iter()) {
+                *a += wt * v;
+            }
+        }
+        params = ParamVec(agg);
+        round_times.push(t0.elapsed().as_secs_f64() * 1000.0);
+
+        // --- evaluation + hand-rolled metrics log
+        if (round + 1) % cfg.eval_every.max(1) == 0 {
+            let mut correct = 0.0;
+            let mut n = 0.0;
+            for b in &test_batches {
+                let (_, c) = engine.eval_step(&cfg.model, &params, b)?;
+                correct += c;
+                n += b.mask.iter().sum::<f32>() as f64;
+            }
+            final_accuracy = correct / n.max(1.0);
+        }
+    }
+    Ok(MonolithReport {
+        final_accuracy,
+        avg_round_ms: round_times.iter().sum::<f64>() / round_times.len().max(1) as f64,
+        comm_bytes,
+    })
+}

@@ -1,0 +1,93 @@
+//! "Naive framework" baseline for the Table VI overhead comparison.
+//!
+//! Exhibits the overheads the paper measures in LEAF / TFF relative to
+//! EasyFL (DESIGN.md substitution #5):
+//!   * re-creates the PJRT client and re-compiles the executables every
+//!     round (no compile cache — TFF's tracing/compilation overhead);
+//!   * re-materializes the test split every evaluation (no data reuse);
+//!   * ships a fresh parameter copy per batch instead of per round.
+//! The numerics are identical to the platform's FedAvg; only the system
+//! behaviour differs, so the measured gap is pure framework overhead.
+
+use easyfl::data::FedDataset;
+use easyfl::model::ParamVec;
+use easyfl::runtime::Engine;
+use easyfl::util::rng::Rng;
+use easyfl::{Config, Result};
+
+pub struct NaiveReport {
+    pub avg_round_ms: f64,
+    pub final_accuracy: f64,
+}
+
+pub fn run(cfg: &Config) -> Result<NaiveReport> {
+    let mut cfg = cfg.clone();
+    cfg.model = cfg.resolved_model();
+    let cfg = &cfg;
+    let dataset = FedDataset::from_config(cfg)?;
+    let mut params: Option<ParamVec> = None;
+    let mut rng = Rng::new(cfg.seed ^ 0x5E17_EC70);
+    let mut round_times = Vec::new();
+    let mut final_accuracy = 0.0;
+
+    for round in 0..cfg.rounds {
+        let t0 = std::time::Instant::now();
+        // Framework overhead #1: fresh client + recompilation every round.
+        let engine = Engine::new(&cfg.artifacts_dir)?;
+        let mut global = match params.take() {
+            Some(p) => p,
+            None => engine.init_params(&cfg.model)?,
+        };
+
+        let cohort = rng.choose_indices(dataset.num_clients(), cfg.clients_per_round);
+        let mut updates: Vec<(ParamVec, f64)> = Vec::new();
+        for &client in &cohort {
+            let local = dataset.materialize_client(client, cfg.data_amount)?;
+            let batches = local.batches(cfg.batch_size);
+            let mut w = global.clone();
+            let mut mom = ParamVec::zeros(w.len());
+            for _ in 0..cfg.local_epochs {
+                for b in &batches {
+                    // Framework overhead #3: defensive copies per step.
+                    let w_copy = w.clone();
+                    let mom_copy = mom.clone();
+                    let out = engine.train_step(
+                        &cfg.model, &w_copy, &mom_copy, b, cfg.lr as f32,
+                    )?;
+                    w = out.params;
+                    mom = out.momentum;
+                }
+            }
+            updates.push((w, local.num_samples as f64));
+        }
+
+        let total: f64 = updates.iter().map(|(_, n)| n).sum();
+        let mut agg = vec![0.0f32; global.len()];
+        for (w, n) in &updates {
+            let wt = (*n / total) as f32;
+            for (a, v) in agg.iter_mut().zip(w.iter()) {
+                *a += wt * v;
+            }
+        }
+        global = ParamVec(agg);
+
+        if (round + 1) % cfg.eval_every.max(1) == 0 {
+            // Framework overhead #2: re-materialize test data every eval.
+            let test = dataset.materialize_test(cfg.test_samples);
+            let mut correct = 0.0;
+            let mut n = 0.0;
+            for b in test.batches(cfg.batch_size) {
+                let (_, c) = engine.eval_step(&cfg.model, &global, &b)?;
+                correct += c;
+                n += b.mask.iter().sum::<f32>() as f64;
+            }
+            final_accuracy = correct / n.max(1.0);
+        }
+        params = Some(global);
+        round_times.push(t0.elapsed().as_secs_f64() * 1000.0);
+    }
+    Ok(NaiveReport {
+        avg_round_ms: round_times.iter().sum::<f64>() / round_times.len().max(1) as f64,
+        final_accuracy,
+    })
+}

@@ -1,0 +1,101 @@
+//! Mini-bench framework shared by the table/figure reproductions
+//! (criterion is not in the offline registry — DESIGN.md substitution #7).
+//!
+//! Each bench binary (`harness = false`) regenerates one table or figure
+//! of the paper and prints paper-vs-measured rows so EXPERIMENTS.md can be
+//! filled by copy-paste.
+
+#![allow(dead_code)]
+
+use std::time::Instant;
+
+/// Print a section header.
+pub fn header(title: &str) {
+    println!("\n================================================================");
+    println!("{title}");
+    println!("================================================================");
+}
+
+/// Print a table row of fixed-width columns.
+pub fn row(cols: &[&str]) {
+    let line: Vec<String> = cols.iter().map(|c| format!("{c:<18}")).collect();
+    println!("{}", line.join(""));
+}
+
+/// Time a closure in milliseconds.
+pub fn time_ms<F: FnOnce()>(f: F) -> f64 {
+    let t = Instant::now();
+    f();
+    t.elapsed().as_secs_f64() * 1000.0
+}
+
+/// Mean and sample standard deviation.
+pub fn mean_std(xs: &[f64]) -> (f64, f64) {
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+    if xs.len() < 2 {
+        return (mean, 0.0);
+    }
+    let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>()
+        / (xs.len() - 1) as f64;
+    (mean, var.sqrt())
+}
+
+/// Count effective lines of code in a source file: excludes blanks,
+/// comment lines and `use`/`import` lines (the paper's Table I/V method:
+/// "not counting the lines of the import statements").
+pub fn count_loc(path: &str) -> usize {
+    let Ok(text) = std::fs::read_to_string(path) else {
+        return 0;
+    };
+    let mut in_block_comment = false;
+    text.lines()
+        .filter(|line| {
+            let t = line.trim();
+            if in_block_comment {
+                if t.contains("*/") {
+                    in_block_comment = false;
+                }
+                return false;
+            }
+            if t.starts_with("/*") {
+                in_block_comment = !t.contains("*/");
+                return false;
+            }
+            !(t.is_empty()
+                || t.starts_with("//")
+                || t.starts_with("#")
+                || t.starts_with("use ")
+                || t.starts_with("import ")
+                || t.starts_with("pub use "))
+        })
+        .count()
+}
+
+/// Artifacts present? (benches skip politely otherwise)
+pub fn artifacts_ready() -> bool {
+    std::path::Path::new("artifacts/manifest.json").exists()
+}
+
+/// Measure the steady-state per-train-step cost of a model (ms).
+pub fn measure_step_ms(engine: &easyfl::runtime::Engine, model: &str) -> f64 {
+    use easyfl::model::{InputDtype, ParamVec};
+    use easyfl::runtime::{Batch, Features};
+    let meta = engine.meta(model).unwrap();
+    let params = engine.init_params(model).unwrap();
+    let mom = ParamVec::zeros(params.len());
+    let x = match meta.input_dtype {
+        InputDtype::F32 => Features::F32(vec![0.1; meta.batch * meta.input_len()]),
+        InputDtype::I32 => Features::I32(vec![1; meta.batch * meta.input_len()]),
+    };
+    let b = Batch { x, y: vec![0; meta.batch], mask: vec![1.0; meta.batch] };
+    engine.train_step(model, &params, &mom, &b, 0.01).unwrap(); // compile
+    let n = 10;
+    let t = Instant::now();
+    for _ in 0..n {
+        engine.train_step(model, &params, &mom, &b, 0.01).unwrap();
+    }
+    t.elapsed().as_secs_f64() * 1000.0 / n as f64
+}

@@ -1,0 +1,95 @@
+//! Fig 8 reproduction: server→client distribution latency vs #clients,
+//! measured over the real RPC stack on loopback.
+//!
+//! Shape to match: latency grows ~linearly with the cohort size and stays
+//! small relative to round (training) time.
+
+mod common;
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use easyfl::algorithms::fedavg_client_factory;
+use easyfl::comm::{ClientService, Registry, RemoteCoordinator};
+use easyfl::flow::DefaultServerFlow;
+use easyfl::tracking::Tracker;
+use easyfl::{Config, DatasetKind, Partition};
+
+fn main() {
+    if !common::artifacts_ready() {
+        println!("fig8: artifacts missing");
+        return;
+    }
+    common::header("Fig 8 — distribution latency vs #clients (loopback RPC)");
+    common::row(&["clients", "distribution ms", "round ms", "dist/round"]);
+
+    let mut per_client = Vec::new();
+    for n in [2usize, 4, 8, 16] {
+        let cfg = Config {
+            dataset: DatasetKind::Femnist,
+            partition: Partition::Iid,
+            num_clients: n,
+            clients_per_round: n,
+            rounds: 3,
+            local_epochs: 1,
+            max_samples: 32,
+            test_samples: 32,
+            eval_every: 0,
+            ..Config::default()
+        };
+        let registry =
+            Registry::serve("127.0.0.1:0", Duration::from_secs(30)).unwrap();
+        let services: Vec<ClientService> = (0..n)
+            .map(|i| {
+                ClientService::start(
+                    &cfg,
+                    i,
+                    "127.0.0.1:0",
+                    Some(registry.addr()),
+                    fedavg_client_factory(),
+                )
+                .unwrap()
+            })
+            .collect();
+        let tracker = Arc::new(Tracker::new(&format!("fig8-{n}")));
+        let mut coord = RemoteCoordinator::new(
+            cfg,
+            Box::new(DefaultServerFlow),
+            tracker.clone(),
+        )
+        .unwrap();
+        assert_eq!(coord.discover(registry.addr()).unwrap(), n);
+        let mut dist = Vec::new();
+        let mut round = Vec::new();
+        for r in 0..3 {
+            let m = coord.run_round(r).unwrap();
+            if r > 0 {
+                // Skip round 0 (client-side engine compilation).
+                dist.push(m.distribution_ms);
+                round.push(m.round_ms);
+            }
+        }
+        let (d, _) = common::mean_std(&dist);
+        let (t, _) = common::mean_std(&round);
+        per_client.push((n, d));
+        common::row(&[
+            &n.to_string(),
+            &format!("{d:.1}"),
+            &format!("{t:.0}"),
+            &format!("{:.1}%", d / t * 100.0),
+        ]);
+        drop(services);
+    }
+
+    // Linear-ish growth + low absolute latency.
+    let (n0, d0) = per_client[0];
+    let (n3, d3) = per_client[per_client.len() - 1];
+    let growth = d3 / d0;
+    let expected = n3 as f64 / n0 as f64;
+    println!(
+        "\nshape check: {}x clients → {growth:.1}x latency (≈linear, paper Fig 8) \
+         and latency ≪ round time: {}",
+        expected,
+        if growth < expected * 3.0 { "OK" } else { "MISMATCH" }
+    );
+}

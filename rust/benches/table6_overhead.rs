@@ -1,0 +1,79 @@
+//! Table VI reproduction: training overhead (round time) of easyfl vs a
+//! framework with the overheads the paper measured in LEAF/TFF.
+//!
+//! DESIGN.md substitution #5: LEAF/TFF themselves cannot run here, so the
+//! comparator is `baselines::naive_lib` — identical numerics, but it
+//! re-compiles executables each round, re-materializes data and copies
+//! parameters per step, i.e. exactly the framework overheads the paper's
+//! table attributes to its comparators. Shape to match: easyfl's round
+//! time strictly lower on every dataset, with the biggest multiple where
+//! compile time dominates compute (the paper's Shakespeare 32.86x case).
+
+mod baselines;
+mod common;
+
+use easyfl::{Config, DatasetKind, Partition};
+
+fn cfg(kind: DatasetKind) -> Config {
+    Config {
+        dataset: kind,
+        partition: Partition::Iid,
+        num_clients: 20,
+        clients_per_round: 10,
+        rounds: 3,
+        local_epochs: 1,
+        max_samples: 64,
+        test_samples: 128,
+        eval_every: 1,
+        lr: if kind == DatasetKind::Shakespeare { 0.5 } else { 0.01 },
+        ..Config::default()
+    }
+}
+
+fn main() {
+    if !common::artifacts_ready() {
+        println!("table6: artifacts missing");
+        return;
+    }
+    common::header("Table VI — training overhead: easyfl vs naive framework");
+    common::row(&[
+        "dataset", "easyfl ms", "naive ms", "ratio", "paper(LEAF)", "paper(TFF)",
+    ]);
+    let paper = [
+        (DatasetKind::Femnist, "2.00x", "1.38x"),
+        (DatasetKind::Shakespeare, "5.71x", "32.86x"),
+        (DatasetKind::Cifar10, "-", "1.07x"),
+    ];
+    let mut all_faster = true;
+    for (kind, leaf, tff) in paper {
+        let rep = easyfl::init(cfg(kind)).unwrap().run().unwrap();
+        let naive = baselines::naive_lib::run(&cfg(kind)).unwrap();
+        let ratio = naive.avg_round_ms / rep.avg_round_ms;
+        all_faster &= ratio > 1.0;
+        common::row(&[
+            kind.name(),
+            &format!("{:.0}", rep.avg_round_ms),
+            &format!("{:.0}", naive.avg_round_ms),
+            &format!("{ratio:.2}x"),
+            leaf,
+            tff,
+        ]);
+        // Accuracy parity: the baseline is numerically identical FL.
+        assert!(
+            (rep.final_accuracy - naive.final_accuracy).abs() < 0.15,
+            "numerics drifted: {} vs {}",
+            rep.final_accuracy,
+            naive.final_accuracy
+        );
+    }
+    println!(
+        "\nshape check: easyfl faster than the overhead-laden framework on \
+         every dataset: {}",
+        if all_faster { "OK" } else { "MISMATCH" }
+    );
+    println!(
+        "(GPU util/memory columns are not reproducible on CPU PJRT; the \
+         compile-cache and buffer-reuse effects the table attributes them \
+         to are what the ratio above isolates.)"
+    );
+}

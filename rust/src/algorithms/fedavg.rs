@@ -1,0 +1,24 @@
+//! FedAvg (McMahan et al. 2017) — the platform default.
+//!
+//! Nothing to override: FedAvg *is* the set of default stages. This module
+//! only provides the canonical factory and a named marker type.
+
+use std::sync::Arc;
+
+use crate::coordinator::ClientFlowFactory;
+use crate::flow::{DefaultClientFlow, DefaultServerFlow, ServerFlow};
+
+/// Marker for the default algorithm.
+pub struct FedAvg;
+
+impl FedAvg {
+    /// The default server flow.
+    pub fn server_flow() -> Box<dyn ServerFlow> {
+        Box::new(DefaultServerFlow)
+    }
+}
+
+/// Factory: one default client flow per device worker.
+pub fn fedavg_client_factory() -> ClientFlowFactory {
+    Arc::new(|| Box::new(DefaultClientFlow))
+}

@@ -1,0 +1,22 @@
+//! Algorithm plugins (paper §V-B, §VIII-F).
+//!
+//! Each plugin overrides exactly the training-flow stages the paper's
+//! Table VII attributes to it:
+//!
+//! | plugin  | stages changed                         |
+//! |---------|----------------------------------------|
+//! | FedAvg  | — (the defaults)                       |
+//! | FedProx | client *train*                         |
+//! | STC     | client *compression*, server *decompression* |
+//! | FedReID | server *aggregation*, client *train* (personal head) |
+//! | Masked  | client *encryption*, server *decompression* (demo) |
+
+pub mod fedavg;
+pub mod fedprox;
+pub mod fedreid;
+pub mod stc;
+
+pub use fedavg::{fedavg_client_factory, FedAvg};
+pub use fedprox::{fedprox_client_factory, FedProxClientFlow};
+pub use fedreid::{fedreid_client_factory, FedReidServerFlow, SharedHeads};
+pub use stc::{stc_client_factory, STCClientFlow, STCServerFlow};

@@ -1,0 +1,134 @@
+//! STC — Sparse Ternary Compression (Sattler et al., TNNLS 2019).
+//!
+//! STC uploads only the top-k fraction of the local update's coordinates,
+//! ternarized to {−μ, 0, +μ} where μ is the mean magnitude of the kept
+//! coordinates. Per Table VII it changes the client **compression** stage
+//! and the matching server **decompression** stage; training and
+//! aggregation stay stock FedAvg. The paper integrated STC "with around 80
+//! lines of code" versus several hundred in the original release — this
+//! file is the equivalent demonstration.
+
+use std::sync::Arc;
+
+use crate::coordinator::ClientFlowFactory;
+use crate::error::Result;
+use crate::flow::{ClientFlow, ServerFlow, Update};
+use crate::model::ParamVec;
+
+/// Client flow: dense update → sparse ternary delta.
+pub struct STCClientFlow {
+    /// Fraction of coordinates kept (paper uses p = 1/400; we default 1%).
+    pub sparsity: f64,
+}
+
+impl STCClientFlow {
+    pub fn new(sparsity: f64) -> Self {
+        assert!(sparsity > 0.0 && sparsity <= 1.0);
+        STCClientFlow { sparsity }
+    }
+}
+
+/// Top-k ternary compression of `new − global`.
+pub fn stc_compress(new: &ParamVec, global: &ParamVec, sparsity: f64) -> Update {
+    let p = new.len();
+    let k = ((p as f64 * sparsity).ceil() as usize).clamp(1, p);
+    let mut delta: Vec<(u32, f32)> = new
+        .iter()
+        .zip(global.iter())
+        .enumerate()
+        .map(|(i, (n, g))| (i as u32, n - g))
+        .collect();
+    // Partial select of the k largest |delta| (O(P) expected).
+    delta.select_nth_unstable_by(k - 1, |a, b| {
+        b.1.abs().partial_cmp(&a.1.abs()).unwrap()
+    });
+    delta.truncate(k);
+    let magnitude =
+        delta.iter().map(|(_, d)| d.abs()).sum::<f32>() / k as f32;
+    let mut indices = Vec::with_capacity(k);
+    let mut signs = Vec::with_capacity(k);
+    for (i, d) in delta {
+        indices.push(i);
+        signs.push(d >= 0.0);
+    }
+    Update::SparseTernary { len: p, indices, signs, magnitude }
+}
+
+impl ClientFlow for STCClientFlow {
+    fn name(&self) -> &'static str {
+        "stc"
+    }
+
+    fn compress(&mut self, new_params: ParamVec, global: &ParamVec) -> Result<Update> {
+        Ok(stc_compress(&new_params, global, self.sparsity))
+    }
+}
+
+/// Server flow: decompression reconstructs `global + ternary delta`.
+/// (`Update::to_dense` already implements the reconstruction; the default
+/// decompress handles it — this type exists to carry the algorithm name
+/// and to make the stage substitution explicit.)
+#[derive(Default)]
+pub struct STCServerFlow;
+
+impl ServerFlow for STCServerFlow {
+    fn name(&self) -> &'static str {
+        "stc"
+    }
+}
+
+/// Factory for the device pool.
+pub fn stc_client_factory(sparsity: f64) -> ClientFlowFactory {
+    Arc::new(move || Box::new(STCClientFlow::new(sparsity)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keeps_topk_and_reconstructs() {
+        let global = ParamVec(vec![0.0; 100]);
+        let mut new = global.clone();
+        new[7] = 5.0;
+        new[42] = -4.0;
+        new[13] = 0.001; // below the cut
+        let u = stc_compress(&new, &global, 0.02); // k = 2
+        match &u {
+            Update::SparseTernary { indices, magnitude, .. } => {
+                let mut idx = indices.clone();
+                idx.sort_unstable();
+                assert_eq!(idx, vec![7, 42]);
+                assert!((magnitude - 4.5).abs() < 1e-6);
+            }
+            _ => panic!("expected sparse ternary"),
+        }
+        let dense = u.to_dense(&global);
+        assert!((dense[7] - 4.5).abs() < 1e-6);
+        assert!((dense[42] + 4.5).abs() < 1e-6);
+        assert_eq!(dense[13], 0.0);
+    }
+
+    #[test]
+    fn compression_ratio_matches_sparsity() {
+        let global = ParamVec(vec![0.0; 10_000]);
+        let new = ParamVec((0..10_000).map(|i| (i as f32).sin()).collect());
+        let u = stc_compress(&new, &global, 0.01);
+        let dense_bytes = 10_000 * 4;
+        assert!(
+            u.wire_bytes() < dense_bytes / 50,
+            "ratio too weak: {} vs {dense_bytes}",
+            u.wire_bytes()
+        );
+    }
+
+    #[test]
+    fn full_sparsity_recovers_signs_everywhere() {
+        let global = ParamVec(vec![1.0; 8]);
+        let new = ParamVec(vec![2.0, 0.0, 2.0, 0.0, 2.0, 0.0, 2.0, 0.0]);
+        let u = stc_compress(&new, &global, 1.0);
+        let dense = u.to_dense(&global);
+        // All deltas are ±1, magnitude 1: perfect ternary reconstruction.
+        assert_eq!(dense.0, new.0);
+    }
+}

@@ -1,0 +1,148 @@
+//! The interface layer (paper §IV, Table II): the low-code API.
+//!
+//! The paper's quick start is three lines; so is ours:
+//!
+//! ```no_run
+//! let session = easyfl::init(easyfl::Config::default()).unwrap();   // init(configs)
+//! let report = session.run().unwrap();                              // run()
+//! println!("accuracy {:.1}%", report.final_accuracy * 100.0);
+//! ```
+//!
+//! `register_dataset`, `register_model`, `register_server` and
+//! `register_client` swap any module for a custom one, mirroring Table II.
+
+use std::sync::Arc;
+
+use crate::algorithms::fedavg_client_factory;
+use crate::config::Config;
+use crate::coordinator::{ClientFlowFactory, Server};
+use crate::data::registry::DataSource;
+use crate::data::FedDataset;
+use crate::error::Result;
+use crate::flow::{DefaultServerFlow, ServerFlow};
+use crate::tracking::Tracker;
+
+/// Outcome of a training run — the numbers the paper's evaluation reports.
+#[derive(Debug, Clone)]
+pub struct Report {
+    /// Test accuracy after the final evaluated round.
+    pub final_accuracy: f64,
+    /// Best test accuracy over all rounds.
+    pub best_accuracy: f64,
+    /// Final-round average training loss.
+    pub final_train_loss: f64,
+    /// Mean simulated round time (T_total / R).
+    pub avg_round_ms: f64,
+    /// Total communication volume.
+    pub comm_bytes: usize,
+    pub rounds: usize,
+}
+
+/// An initialized EasyFL session (paper: the state `init(configs)` sets up).
+pub struct Session {
+    cfg: Config,
+    dataset: Option<Arc<dyn DataSource>>,
+    server_flow: Option<Box<dyn ServerFlow>>,
+    client_factory: ClientFlowFactory,
+    tracker: Option<Arc<Tracker>>,
+}
+
+/// `init(configs)` — Table II row 1.
+pub fn init(cfg: Config) -> Result<Session> {
+    cfg.validate()?;
+    Ok(Session {
+        cfg,
+        dataset: None,
+        server_flow: None,
+        client_factory: fedavg_client_factory(),
+        tracker: None,
+    })
+}
+
+impl Session {
+    /// `register_dataset(train, test)` — plug a custom federated dataset.
+    pub fn register_dataset(mut self, source: Arc<dyn DataSource>) -> Session {
+        self.dataset = Some(source);
+        self
+    }
+
+    /// `register_model(model)` — select a different AOT model artifact.
+    pub fn register_model(mut self, model: &str) -> Session {
+        self.cfg.model = model.to_string();
+        self
+    }
+
+    /// `register_server(server)` — replace server-side flow stages.
+    pub fn register_server(mut self, flow: Box<dyn ServerFlow>) -> Session {
+        self.server_flow = Some(flow);
+        self
+    }
+
+    /// `register_client(client)` — replace client-side flow stages.
+    pub fn register_client(mut self, factory: ClientFlowFactory) -> Session {
+        self.client_factory = factory;
+        self
+    }
+
+    /// Attach a pre-built tracker (remote tracking, shared stores).
+    pub fn with_tracker(mut self, tracker: Arc<Tracker>) -> Session {
+        self.tracker = Some(tracker);
+        self
+    }
+
+    /// Access the effective configuration.
+    pub fn config(&self) -> &Config {
+        &self.cfg
+    }
+
+    /// Build the server without running (examples and remote mode).
+    pub fn build_server(self) -> Result<Server> {
+        let data: Arc<dyn DataSource> = match self.dataset {
+            Some(d) => d,
+            None => Arc::new(FedDataset::from_config(&self.cfg)?),
+        };
+        let flow = self.server_flow.unwrap_or_else(|| Box::new(DefaultServerFlow));
+        let tracker = self.tracker.unwrap_or_else(|| {
+            let id = format!(
+                "task-{}-{}-{}",
+                self.cfg.dataset.name(),
+                self.cfg.partition.name(),
+                self.cfg.seed
+            );
+            match &self.cfg.tracking_dir {
+                Some(dir) => Arc::new(Tracker::persistent(&id, dir.clone())),
+                None => Arc::new(Tracker::new(&id)),
+            }
+        });
+        Server::new(self.cfg, data, flow, self.client_factory, tracker)
+    }
+
+    /// `run(callback)` — train all rounds and report.
+    pub fn run(self) -> Result<Report> {
+        self.run_with(|_server, _round| {})
+    }
+
+    /// `run` with a per-round callback (Table II's optional callback).
+    pub fn run_with<F>(self, mut callback: F) -> Result<Report>
+    where
+        F: FnMut(&Server, usize),
+    {
+        let mut server = self.build_server()?;
+        let rounds = server.cfg.rounds;
+        for round in 0..rounds {
+            server.run_round(round)?;
+            callback(&server, round);
+        }
+        let tracker = server.tracker();
+        tracker.finish()?;
+        let curve = tracker.loss_curve();
+        Ok(Report {
+            final_accuracy: tracker.final_accuracy().unwrap_or(0.0),
+            best_accuracy: tracker.best_accuracy().unwrap_or(0.0),
+            final_train_loss: curve.last().map(|(_, l, _)| *l).unwrap_or(0.0),
+            avg_round_ms: tracker.avg_round_ms(),
+            comm_bytes: tracker.total_comm_bytes(),
+            rounds,
+        })
+    }
+}

@@ -1,0 +1,86 @@
+//! Client-node logic (paper §IV-A "clients" module).
+//!
+//! One function executes a client's whole round — used identically by the
+//! in-process device pool (standalone/distributed training) and by the
+//! remote client service (production), which is exactly how the paper
+//! decouples training from communication.
+
+use std::sync::Arc;
+
+use crate::flow::{run_client_round, ClientFlow, ModelPayload, TrainStats, Update};
+use crate::runtime::Engine;
+use crate::util::clock::{Clock, Stopwatch};
+
+/// Work order for one client in one round.
+#[derive(Clone)]
+pub struct ClientJob {
+    pub client: usize,
+    pub round: usize,
+    pub model: String,
+    pub payload: ModelPayload,
+    pub lr: f32,
+    pub local_epochs: usize,
+    pub batch_size: usize,
+    pub data_amount: f64,
+    /// Per-(client, round) seed for reproducible shuffling.
+    pub seed: u64,
+    /// System-heterogeneity speed ratio (1.0 ⇒ no straggling).
+    pub speed_ratio: f64,
+    /// Simulated device-class name (tracking).
+    pub device_name: String,
+}
+
+/// Everything the server needs back from a client round.
+#[derive(Debug)]
+pub struct ClientOutcome {
+    pub client: usize,
+    pub update: Update,
+    pub stats: TrainStats,
+    /// Real HLO execution + data materialization time.
+    pub compute_ms: f64,
+    /// Simulated straggler wait injected after compute.
+    pub wait_ms: f64,
+    /// compute + wait: the time the scheduler profiles.
+    pub round_ms: f64,
+    pub upload_bytes: usize,
+    pub device_name: String,
+}
+
+/// Execute one client round: materialize data, run the client stages,
+/// then inject the system-heterogeneity wait.
+pub fn execute_client_round(
+    flow: &mut dyn ClientFlow,
+    engine: &Engine,
+    data: &dyn crate::data::registry::DataSource,
+    clock: &dyn Clock,
+    job: &ClientJob,
+) -> crate::error::Result<ClientOutcome> {
+    let sw = Stopwatch::start();
+    let local = Arc::new(data.client_data(job.client, job.data_amount)?);
+    let task = crate::flow::TrainTask {
+        client: job.client,
+        round: job.round,
+        model: job.model.clone(),
+        payload: job.payload.clone(),
+        data: local,
+        lr: job.lr,
+        local_epochs: job.local_epochs,
+        batch_size: job.batch_size,
+        seed: job.seed,
+    };
+    let (update, stats) = run_client_round(flow, engine, &task)?;
+    let compute_ms = sw.elapsed_ms();
+    let wait_ms = (job.speed_ratio - 1.0).max(0.0) * compute_ms;
+    clock.wait_ms(wait_ms);
+    let upload_bytes = update.wire_bytes();
+    Ok(ClientOutcome {
+        client: job.client,
+        update,
+        stats,
+        compute_ms,
+        wait_ms,
+        round_ms: compute_ms + wait_ms,
+        upload_bytes,
+        device_name: job.device_name.clone(),
+    })
+}

@@ -1,0 +1,18 @@
+//! Remote communication (paper §VII, Fig 4a): the three-tier
+//! Protocol / RPC / Handler stack that supports the production phase.
+//!
+//! gRPC + protobuf are substituted by a hand-rolled length-prefixed binary
+//! protocol over TCP with thread-per-connection servers (DESIGN.md
+//! substitution #4) — same architecture, zero external dependencies.
+//! Training flow and communication are decoupled exactly as in §V-B: the
+//! remote path reuses [`crate::client::execute_client_round`] verbatim.
+
+pub mod protocol;
+pub mod registry;
+pub mod remote;
+pub mod rpc;
+
+pub use protocol::Message;
+pub use registry::{Registor, Registry};
+pub use remote::{ClientService, RemoteCoordinator};
+pub use rpc::{call, RpcServer};

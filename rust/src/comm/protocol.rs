@@ -1,0 +1,428 @@
+//! The Protocol tier: message types and their binary wire encoding.
+//!
+//! Frames are `u32 length ‖ u8 tag ‖ fields…`, all little-endian, encoded
+//! with `util::bytes` (no serde offline). Parameter vectors ride as raw
+//! f32 blocks — a 242k-param model is one ~1 MB memcpy, no per-element
+//! overhead.
+
+use crate::error::{Error, Result};
+use crate::flow::Update;
+use crate::model::ParamVec;
+use crate::util::bytes::{Reader, Writer};
+
+/// Every message the platform sends between processes.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Message {
+    // ---- generic
+    Ok,
+    Err { msg: String },
+    Ping,
+    Pong,
+
+    // ---- service discovery (Fig 4b)
+    /// registor → registry: announce a client service.
+    Register { id: String, addr: String },
+    /// registor → registry: remove a client service.
+    Deregister { id: String },
+    /// server → registry: list live clients.
+    ListClients,
+    /// registry → server.
+    ClientList { entries: Vec<(String, String)> },
+
+    // ---- remote training (Fig 4a)
+    /// server → client: run one local round.
+    TrainRequest {
+        round: u32,
+        client_index: u32,
+        model: String,
+        lr: f32,
+        local_epochs: u32,
+        batch_size: u32,
+        data_amount: f32,
+        seed: u64,
+        params: ParamVec,
+    },
+    /// client → server.
+    TrainReply {
+        round: u32,
+        client_index: u32,
+        num_samples: u32,
+        sum_loss: f64,
+        correct: f64,
+        compute_ms: f64,
+        update: Update,
+    },
+    /// server → client: evaluate params on the client's local data.
+    EvalRequest { model: String, params: ParamVec },
+    /// client → server.
+    EvalReply { sum_loss: f64, correct: f64, num_samples: u32 },
+
+    // ---- remote tracking (§V-C)
+    /// any → tracking service: one round's metrics as JSON text.
+    TrackRound { task_id: String, json: String },
+    /// query the tracking service for a task's JSON.
+    TrackQuery { task_id: String },
+    TrackDump { json: String },
+}
+
+const T_OK: u8 = 0;
+const T_ERR: u8 = 1;
+const T_PING: u8 = 2;
+const T_PONG: u8 = 3;
+const T_REGISTER: u8 = 10;
+const T_DEREGISTER: u8 = 11;
+const T_LIST: u8 = 12;
+const T_CLIENTLIST: u8 = 13;
+const T_TRAINREQ: u8 = 20;
+const T_TRAINREP: u8 = 21;
+const T_EVALREQ: u8 = 22;
+const T_EVALREP: u8 = 23;
+const T_TRACKROUND: u8 = 30;
+const T_TRACKQUERY: u8 = 31;
+const T_TRACKDUMP: u8 = 32;
+
+const U_DENSE: u8 = 0;
+const U_SPARSE: u8 = 1;
+const U_MASKED: u8 = 2;
+
+fn write_update(w: &mut Writer, u: &Update) {
+    match u {
+        Update::Dense(p) => {
+            w.u8(U_DENSE);
+            w.f32s(p);
+        }
+        Update::SparseTernary { len, indices, signs, magnitude } => {
+            w.u8(U_SPARSE);
+            w.u32(*len as u32);
+            w.u32(indices.len() as u32);
+            for i in indices {
+                w.u32(*i);
+            }
+            // Bit-packed signs.
+            let mut bits = vec![0u8; signs.len().div_ceil(8)];
+            for (i, &s) in signs.iter().enumerate() {
+                if s {
+                    bits[i / 8] |= 1 << (i % 8);
+                }
+            }
+            w.bytes(&bits);
+            w.f32(*magnitude);
+        }
+        Update::Masked { xor_key, inner } => {
+            w.u8(U_MASKED);
+            w.u64(*xor_key);
+            write_update(w, inner);
+        }
+    }
+}
+
+fn read_update(r: &mut Reader) -> Result<Update> {
+    match r.u8()? {
+        U_DENSE => Ok(Update::Dense(ParamVec(r.f32s()?))),
+        U_SPARSE => {
+            let len = r.u32()? as usize;
+            let k = r.u32()? as usize;
+            let mut indices = Vec::with_capacity(k);
+            for _ in 0..k {
+                indices.push(r.u32()?);
+            }
+            let bits = r.bytes()?;
+            let signs = (0..k)
+                .map(|i| bits[i / 8] & (1 << (i % 8)) != 0)
+                .collect();
+            let magnitude = r.f32()?;
+            Ok(Update::SparseTernary { len, indices, signs, magnitude })
+        }
+        U_MASKED => {
+            let xor_key = r.u64()?;
+            let inner = Box::new(read_update(r)?);
+            Ok(Update::Masked { xor_key, inner })
+        }
+        t => Err(Error::Comm(format!("unknown update tag {t}"))),
+    }
+}
+
+impl Message {
+    /// Encode to a frame body (no length prefix).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::with_capacity(64);
+        match self {
+            Message::Ok => w.u8(T_OK),
+            Message::Err { msg } => {
+                w.u8(T_ERR);
+                w.str(msg);
+            }
+            Message::Ping => w.u8(T_PING),
+            Message::Pong => w.u8(T_PONG),
+            Message::Register { id, addr } => {
+                w.u8(T_REGISTER);
+                w.str(id);
+                w.str(addr);
+            }
+            Message::Deregister { id } => {
+                w.u8(T_DEREGISTER);
+                w.str(id);
+            }
+            Message::ListClients => w.u8(T_LIST),
+            Message::ClientList { entries } => {
+                w.u8(T_CLIENTLIST);
+                w.u32(entries.len() as u32);
+                for (id, addr) in entries {
+                    w.str(id);
+                    w.str(addr);
+                }
+            }
+            Message::TrainRequest {
+                round,
+                client_index,
+                model,
+                lr,
+                local_epochs,
+                batch_size,
+                data_amount,
+                seed,
+                params,
+            } => {
+                w.u8(T_TRAINREQ);
+                w.u32(*round);
+                w.u32(*client_index);
+                w.str(model);
+                w.f32(*lr);
+                w.u32(*local_epochs);
+                w.u32(*batch_size);
+                w.f32(*data_amount);
+                w.u64(*seed);
+                w.f32s(params);
+            }
+            Message::TrainReply {
+                round,
+                client_index,
+                num_samples,
+                sum_loss,
+                correct,
+                compute_ms,
+                update,
+            } => {
+                w.u8(T_TRAINREP);
+                w.u32(*round);
+                w.u32(*client_index);
+                w.u32(*num_samples);
+                w.f64(*sum_loss);
+                w.f64(*correct);
+                w.f64(*compute_ms);
+                write_update(&mut w, update);
+            }
+            Message::EvalRequest { model, params } => {
+                w.u8(T_EVALREQ);
+                w.str(model);
+                w.f32s(params);
+            }
+            Message::EvalReply { sum_loss, correct, num_samples } => {
+                w.u8(T_EVALREP);
+                w.f64(*sum_loss);
+                w.f64(*correct);
+                w.u32(*num_samples);
+            }
+            Message::TrackRound { task_id, json } => {
+                w.u8(T_TRACKROUND);
+                w.str(task_id);
+                w.str(json);
+            }
+            Message::TrackQuery { task_id } => {
+                w.u8(T_TRACKQUERY);
+                w.str(task_id);
+            }
+            Message::TrackDump { json } => {
+                w.u8(T_TRACKDUMP);
+                w.str(json);
+            }
+        }
+        w.finish()
+    }
+
+    /// Decode from a frame body.
+    pub fn decode(buf: &[u8]) -> Result<Message> {
+        let mut r = Reader::new(buf);
+        let msg = match r.u8()? {
+            T_OK => Message::Ok,
+            T_ERR => Message::Err { msg: r.str()? },
+            T_PING => Message::Ping,
+            T_PONG => Message::Pong,
+            T_REGISTER => Message::Register { id: r.str()?, addr: r.str()? },
+            T_DEREGISTER => Message::Deregister { id: r.str()? },
+            T_LIST => Message::ListClients,
+            T_CLIENTLIST => {
+                let n = r.u32()? as usize;
+                let mut entries = Vec::with_capacity(n);
+                for _ in 0..n {
+                    entries.push((r.str()?, r.str()?));
+                }
+                Message::ClientList { entries }
+            }
+            T_TRAINREQ => Message::TrainRequest {
+                round: r.u32()?,
+                client_index: r.u32()?,
+                model: r.str()?,
+                lr: r.f32()?,
+                local_epochs: r.u32()?,
+                batch_size: r.u32()?,
+                data_amount: r.f32()?,
+                seed: r.u64()?,
+                params: ParamVec(r.f32s()?),
+            },
+            T_TRAINREP => Message::TrainReply {
+                round: r.u32()?,
+                client_index: r.u32()?,
+                num_samples: r.u32()?,
+                sum_loss: r.f64()?,
+                correct: r.f64()?,
+                compute_ms: r.f64()?,
+                update: read_update(&mut r)?,
+            },
+            T_EVALREQ => Message::EvalRequest {
+                model: r.str()?,
+                params: ParamVec(r.f32s()?),
+            },
+            T_EVALREP => Message::EvalReply {
+                sum_loss: r.f64()?,
+                correct: r.f64()?,
+                num_samples: r.u32()?,
+            },
+            T_TRACKROUND => Message::TrackRound {
+                task_id: r.str()?,
+                json: r.str()?,
+            },
+            T_TRACKQUERY => Message::TrackQuery { task_id: r.str()? },
+            T_TRACKDUMP => Message::TrackDump { json: r.str()? },
+            t => return Err(Error::Comm(format!("unknown message tag {t}"))),
+        };
+        if r.remaining() != 0 {
+            return Err(Error::Comm(format!(
+                "{} trailing bytes in frame",
+                r.remaining()
+            )));
+        }
+        Ok(msg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn roundtrip(m: &Message) {
+        let enc = m.encode();
+        let dec = Message::decode(&enc).unwrap();
+        assert_eq!(&dec, m);
+    }
+
+    #[test]
+    fn simple_messages_roundtrip() {
+        roundtrip(&Message::Ok);
+        roundtrip(&Message::Err { msg: "boom ✗".into() });
+        roundtrip(&Message::Ping);
+        roundtrip(&Message::Pong);
+        roundtrip(&Message::Register {
+            id: "c1".into(),
+            addr: "127.0.0.1:4001".into(),
+        });
+        roundtrip(&Message::Deregister { id: "c1".into() });
+        roundtrip(&Message::ListClients);
+        roundtrip(&Message::ClientList {
+            entries: vec![("a".into(), "x:1".into()), ("b".into(), "y:2".into())],
+        });
+        roundtrip(&Message::TrackRound {
+            task_id: "t".into(),
+            json: "{\"round\":1}".into(),
+        });
+    }
+
+    #[test]
+    fn train_messages_roundtrip() {
+        roundtrip(&Message::TrainRequest {
+            round: 3,
+            client_index: 17,
+            model: "mlp".into(),
+            lr: 0.05,
+            local_epochs: 2,
+            batch_size: 32,
+            data_amount: 0.5,
+            seed: 0xDEAD_BEEF_CAFE,
+            params: ParamVec(vec![1.0, -2.0, 3.5]),
+        });
+        roundtrip(&Message::TrainReply {
+            round: 3,
+            client_index: 17,
+            num_samples: 100,
+            sum_loss: 12.25,
+            correct: 88.0,
+            compute_ms: 123.456,
+            update: Update::SparseTernary {
+                len: 10,
+                indices: vec![1, 5, 9],
+                signs: vec![true, false, true],
+                magnitude: 0.75,
+            },
+        });
+        roundtrip(&Message::EvalReply {
+            sum_loss: 1.0,
+            correct: 2.0,
+            num_samples: 3,
+        });
+    }
+
+    #[test]
+    fn masked_update_roundtrips() {
+        roundtrip(&Message::TrainReply {
+            round: 0,
+            client_index: 0,
+            num_samples: 1,
+            sum_loss: 0.0,
+            correct: 0.0,
+            compute_ms: 0.0,
+            update: Update::Masked {
+                xor_key: 42,
+                inner: Box::new(Update::Dense(ParamVec(vec![7.0]))),
+            },
+        });
+    }
+
+    #[test]
+    fn rejects_trailing_garbage_and_bad_tags() {
+        let mut enc = Message::Ok.encode();
+        enc.push(0xFF);
+        assert!(Message::decode(&enc).is_err());
+        assert!(Message::decode(&[200]).is_err());
+        assert!(Message::decode(&[]).is_err());
+    }
+
+    #[test]
+    fn prop_random_sparse_updates_roundtrip() {
+        prop::check("sparse-roundtrip", 99, 40, |rng: &mut Rng| {
+            let len = 1 + rng.below(1000) as usize;
+            let k = 1 + rng.below(len as u64) as usize;
+            let indices: Vec<u32> =
+                (0..k).map(|_| rng.below(len as u64) as u32).collect();
+            let signs: Vec<bool> = (0..k).map(|_| rng.uniform() < 0.5).collect();
+            let m = Message::TrainReply {
+                round: rng.below(1000) as u32,
+                client_index: rng.below(4000) as u32,
+                num_samples: rng.below(10_000) as u32,
+                sum_loss: rng.normal(),
+                correct: rng.uniform() * 100.0,
+                compute_ms: rng.uniform() * 1e4,
+                update: Update::SparseTernary {
+                    len,
+                    indices,
+                    signs,
+                    magnitude: rng.normal() as f32,
+                },
+            };
+            let dec = Message::decode(&m.encode()).map_err(|e| e.to_string())?;
+            crate::prop_assert!(dec == m, "mismatch after roundtrip");
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,224 @@
+//! Service discovery (paper §VII, Fig 4b): registry + registor.
+//!
+//! The **registry** is the etcd/Kubernetes-Service stand-in: a TTL'd
+//! key-value store of client addresses served over the platform RPC. The
+//! **registor** is the docker-gen/Pod stand-in: a sidecar on each client
+//! that registers the client's address and heartbeats to keep the lease
+//! alive — clients never need to know their own deployment environment.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::comm::protocol::Message;
+use crate::comm::rpc::{self, Handler, RpcServer};
+use crate::error::{Error, Result};
+
+/// TTL'd address store.
+pub struct Registry {
+    entries: Mutex<HashMap<String, (String, Instant)>>,
+    ttl: Duration,
+}
+
+impl Registry {
+    pub fn new(ttl: Duration) -> Registry {
+        Registry { entries: Mutex::new(HashMap::new()), ttl }
+    }
+
+    /// Default 10 s lease, matching heartbeat every 2 s.
+    pub fn with_default_ttl() -> Registry {
+        Registry::new(Duration::from_secs(10))
+    }
+
+    /// Start a registry service (ephemeral port with `"127.0.0.1:0"`).
+    pub fn serve(addr: &str, ttl: Duration) -> Result<RpcServer> {
+        let registry = Arc::new(Registry::new(ttl));
+        RpcServer::serve(addr, registry)
+    }
+
+    /// Live (non-expired) entries, sorted by id.
+    pub fn live(&self) -> Vec<(String, String)> {
+        let now = Instant::now();
+        let mut out: Vec<(String, String)> = self
+            .entries
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|(_, (_, exp))| *exp > now)
+            .map(|(id, (addr, _))| (id.clone(), addr.clone()))
+            .collect();
+        out.sort();
+        out
+    }
+
+    fn register(&self, id: String, addr: String) {
+        self.entries
+            .lock()
+            .unwrap()
+            .insert(id, (addr, Instant::now() + self.ttl));
+    }
+
+    fn deregister(&self, id: &str) {
+        self.entries.lock().unwrap().remove(id);
+    }
+
+    /// Drop expired leases (called opportunistically).
+    pub fn sweep(&self) {
+        let now = Instant::now();
+        self.entries.lock().unwrap().retain(|_, (_, exp)| *exp > now);
+    }
+}
+
+impl Handler for Registry {
+    fn handle(&self, msg: Message) -> Message {
+        match msg {
+            Message::Register { id, addr } => {
+                self.register(id, addr);
+                Message::Ok
+            }
+            Message::Deregister { id } => {
+                self.deregister(&id);
+                Message::Ok
+            }
+            Message::ListClients => {
+                self.sweep();
+                Message::ClientList { entries: self.live() }
+            }
+            Message::Ping => Message::Pong,
+            _ => Message::Err { msg: "registry: unsupported message".into() },
+        }
+    }
+}
+
+/// Heartbeating registration sidecar.
+pub struct Registor {
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+    registry_addr: String,
+    id: String,
+}
+
+impl Registor {
+    /// Register `id @ service_addr` with the registry and keep the lease
+    /// alive every `interval`.
+    pub fn start(
+        registry_addr: &str,
+        id: &str,
+        service_addr: &str,
+        interval: Duration,
+    ) -> Result<Registor> {
+        // First registration is synchronous so callers can rely on
+        // visibility once `start` returns.
+        let reply = rpc::call(
+            registry_addr,
+            &Message::Register { id: id.into(), addr: service_addr.into() },
+        )?;
+        if reply != Message::Ok {
+            return Err(Error::Comm(format!("registry rejected: {reply:?}")));
+        }
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let (reg_addr, id2, svc) = (
+            registry_addr.to_string(),
+            id.to_string(),
+            service_addr.to_string(),
+        );
+        let handle = std::thread::Builder::new()
+            .name(format!("easyfl-registor-{id}"))
+            .spawn(move || {
+                while !stop2.load(Ordering::Relaxed) {
+                    std::thread::sleep(interval);
+                    if stop2.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    let _ = rpc::call(
+                        &reg_addr,
+                        &Message::Register { id: id2.clone(), addr: svc.clone() },
+                    );
+                }
+            })
+            .map_err(|e| Error::Comm(format!("spawn registor: {e}")))?;
+        Ok(Registor {
+            stop,
+            handle: Some(handle),
+            registry_addr: registry_addr.to_string(),
+            id: id.to_string(),
+        })
+    }
+}
+
+impl Drop for Registor {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        let _ = rpc::call(
+            &self.registry_addr,
+            &Message::Deregister { id: self.id.clone() },
+        );
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Query a registry for live clients (the server's discovery call).
+pub fn discover(registry_addr: &str) -> Result<Vec<(String, String)>> {
+    match rpc::call(registry_addr, &Message::ListClients)? {
+        Message::ClientList { entries } => Ok(entries),
+        other => Err(Error::Comm(format!("bad registry reply: {other:?}"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn register_list_deregister() {
+        let server =
+            Registry::serve("127.0.0.1:0", Duration::from_secs(5)).unwrap();
+        let addr = server.addr().to_string();
+        rpc::call(&addr, &Message::Register { id: "c1".into(), addr: "a:1".into() })
+            .unwrap();
+        rpc::call(&addr, &Message::Register { id: "c2".into(), addr: "a:2".into() })
+            .unwrap();
+        let live = discover(&addr).unwrap();
+        assert_eq!(live.len(), 2);
+        assert_eq!(live[0], ("c1".into(), "a:1".into()));
+        rpc::call(&addr, &Message::Deregister { id: "c1".into() }).unwrap();
+        assert_eq!(discover(&addr).unwrap().len(), 1);
+    }
+
+    #[test]
+    fn leases_expire_without_heartbeat() {
+        let server =
+            Registry::serve("127.0.0.1:0", Duration::from_millis(50)).unwrap();
+        let addr = server.addr().to_string();
+        rpc::call(&addr, &Message::Register { id: "x".into(), addr: "a:1".into() })
+            .unwrap();
+        assert_eq!(discover(&addr).unwrap().len(), 1);
+        std::thread::sleep(Duration::from_millis(80));
+        assert_eq!(discover(&addr).unwrap().len(), 0);
+    }
+
+    #[test]
+    fn registor_keeps_lease_alive_and_cleans_up() {
+        let server =
+            Registry::serve("127.0.0.1:0", Duration::from_millis(120)).unwrap();
+        let addr = server.addr().to_string();
+        let registor = Registor::start(
+            &addr,
+            "cli-7",
+            "10.0.0.7:4000",
+            Duration::from_millis(30),
+        )
+        .unwrap();
+        std::thread::sleep(Duration::from_millis(300));
+        // Still alive well past the TTL thanks to heartbeats.
+        let live = discover(&addr).unwrap();
+        assert_eq!(live, vec![("cli-7".into(), "10.0.0.7:4000".into())]);
+        drop(registor);
+        // Deregistered on drop.
+        assert_eq!(discover(&addr).unwrap().len(), 0);
+    }
+}

@@ -1,0 +1,417 @@
+//! Remote training (paper §VII): client service + remote coordinator.
+//!
+//! `start_server` / `start_client` (Table II) land here. The client
+//! service wraps the same [`crate::flow::ClientFlow`] stages the local
+//! pool runs — the training flow is decoupled from the communication
+//! channel, so switching local ↔ remote changes nothing else.
+
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::comm::protocol::Message;
+use crate::comm::registry::Registor;
+use crate::comm::rpc::{Connection, Handler, RpcServer};
+use crate::config::Config;
+use crate::coordinator::ClientFlowFactory;
+use crate::data::registry::DataSource;
+use crate::data::FedDataset;
+use crate::error::{Error, Result};
+use crate::flow::{run_client_round, ModelPayload, ServerFlow, TrainTask};
+use crate::model::ParamVec;
+use crate::runtime::Engine;
+use crate::tracking::{ClientMetrics, RoundMetrics, Tracker};
+use crate::util::clock::Stopwatch;
+use crate::util::rng::Rng;
+
+// ---------------------------------------------------------------- client
+
+type Job = (Message, Sender<Message>);
+
+/// A client node: RPC front, single engine-owning worker behind a queue.
+pub struct ClientService {
+    rpc: RpcServer,
+    _registor: Option<Registor>,
+}
+
+impl ClientService {
+    /// Start serving. `bind` may use port 0; if `registry` is given, a
+    /// registor announces `client-<index>` with the bound address.
+    pub fn start(
+        cfg: &Config,
+        client_index: usize,
+        bind: &str,
+        registry: Option<&str>,
+        flow_factory: ClientFlowFactory,
+    ) -> Result<ClientService> {
+        let mut cfg = cfg.clone();
+        cfg.model = cfg.resolved_model();
+        let data: Arc<dyn DataSource> = Arc::new(FedDataset::from_config(&cfg)?);
+        let (tx, rx) = channel::<Job>();
+
+        // The engine-owning worker (PjRtClient is !Send, so it lives here).
+        std::thread::Builder::new()
+            .name(format!("easyfl-client-{client_index}"))
+            .spawn(move || {
+                let engine = Engine::new(&cfg.artifacts_dir);
+                let mut flow = flow_factory();
+                while let Ok((msg, reply)) = rx.recv() {
+                    let out = match &engine {
+                        Err(e) => Message::Err { msg: format!("engine: {e}") },
+                        Ok(engine) => {
+                            handle_client_msg(engine, flow.as_mut(), &cfg, data.as_ref(), msg)
+                        }
+                    };
+                    let _ = reply.send(out);
+                }
+            })
+            .map_err(|e| Error::Comm(format!("spawn client worker: {e}")))?;
+
+        let tx = Arc::new(std::sync::Mutex::new(tx));
+        let handler: Arc<dyn Handler> = Arc::new(move |msg: Message| {
+            if matches!(msg, Message::Ping) {
+                return Message::Pong;
+            }
+            let (rtx, rrx) = channel();
+            if tx.lock().unwrap().send((msg, rtx)).is_err() {
+                return Message::Err { msg: "client worker dead".into() };
+            }
+            rrx.recv()
+                .unwrap_or(Message::Err { msg: "client worker dropped".into() })
+        });
+        let rpc = RpcServer::serve(bind, handler)?;
+        let registor = match registry {
+            Some(reg) => Some(Registor::start(
+                reg,
+                &format!("client-{client_index}"),
+                rpc.addr(),
+                Duration::from_secs(2),
+            )?),
+            None => None,
+        };
+        Ok(ClientService { rpc, _registor: registor })
+    }
+
+    pub fn addr(&self) -> &str {
+        self.rpc.addr()
+    }
+}
+
+fn handle_client_msg(
+    engine: &Engine,
+    flow: &mut dyn crate::flow::ClientFlow,
+    cfg: &Config,
+    data: &dyn DataSource,
+    msg: Message,
+) -> Message {
+    match msg {
+        Message::TrainRequest {
+            round,
+            client_index,
+            model,
+            lr,
+            local_epochs,
+            batch_size,
+            data_amount,
+            seed,
+            params,
+        } => {
+            let run = || -> Result<Message> {
+                let sw = Stopwatch::start();
+                let local = Arc::new(
+                    data.client_data(client_index as usize, data_amount as f64)?,
+                );
+                let task = TrainTask {
+                    client: client_index as usize,
+                    round: round as usize,
+                    model,
+                    payload: ModelPayload {
+                        params: Arc::new(params),
+                        wire_bytes: 0,
+                        round: round as usize,
+                    },
+                    data: local,
+                    lr,
+                    local_epochs: local_epochs as usize,
+                    batch_size: batch_size as usize,
+                    seed,
+                };
+                let (update, stats) = run_client_round(flow, engine, &task)?;
+                Ok(Message::TrainReply {
+                    round,
+                    client_index,
+                    num_samples: stats.num_samples as u32,
+                    sum_loss: stats.sum_loss,
+                    correct: stats.correct,
+                    compute_ms: sw.elapsed_ms(),
+                    update,
+                })
+            };
+            run().unwrap_or_else(|e| Message::Err { msg: e.to_string() })
+        }
+        Message::EvalRequest { model, params } => {
+            let run = || -> Result<Message> {
+                let local = data.test_data(cfg.test_samples)?;
+                let mut sum_loss = 0.0;
+                let mut correct = 0.0;
+                let mut n = 0.0f64;
+                for b in local.batches(cfg.batch_size) {
+                    let (l, c) = engine.eval_step(&model, &params, &b)?;
+                    sum_loss += l;
+                    correct += c;
+                    n += b.mask.iter().sum::<f32>() as f64;
+                }
+                Ok(Message::EvalReply {
+                    sum_loss,
+                    correct,
+                    num_samples: n as u32,
+                })
+            };
+            run().unwrap_or_else(|e| Message::Err { msg: e.to_string() })
+        }
+        other => Message::Err { msg: format!("client: unsupported {other:?}") },
+    }
+}
+
+// ---------------------------------------------------------------- server
+
+/// The production-phase coordinator: discovers clients via the registry
+/// and drives scatter/gather rounds over RPC.
+pub struct RemoteCoordinator {
+    pub cfg: Config,
+    engine: Engine,
+    flow: Box<dyn ServerFlow>,
+    tracker: Arc<Tracker>,
+    params: ParamVec,
+    rng: Rng,
+    /// (client_index, addr) discovered from the registry.
+    clients: Vec<(usize, String)>,
+    test_batches: Vec<crate::runtime::Batch>,
+}
+
+impl RemoteCoordinator {
+    pub fn new(
+        cfg: Config,
+        flow: Box<dyn ServerFlow>,
+        tracker: Arc<Tracker>,
+    ) -> Result<RemoteCoordinator> {
+        let mut cfg = cfg;
+        cfg.model = cfg.resolved_model();
+        cfg.validate()?;
+        let engine = Engine::new(&cfg.artifacts_dir)?;
+        let params = engine.init_params(&cfg.model)?;
+        let data = FedDataset::from_config(&cfg)?;
+        let test_batches = data.materialize_test(cfg.test_samples).batches(cfg.batch_size);
+        let rng = Rng::new(cfg.seed ^ 0x5E17_EC70);
+        Ok(RemoteCoordinator {
+            cfg,
+            engine,
+            flow,
+            tracker,
+            params,
+            rng,
+            clients: Vec::new(),
+            test_batches,
+        })
+    }
+
+    /// Query the registry; returns the number of live clients.
+    pub fn discover(&mut self, registry_addr: &str) -> Result<usize> {
+        let entries = crate::comm::registry::discover(registry_addr)?;
+        self.clients = entries
+            .iter()
+            .filter_map(|(id, addr)| {
+                id.strip_prefix("client-")
+                    .and_then(|n| n.parse().ok())
+                    .map(|idx| (idx, addr.clone()))
+            })
+            .collect();
+        self.clients.sort();
+        Ok(self.clients.len())
+    }
+
+    /// Use an explicit address list (no registry).
+    pub fn set_clients(&mut self, clients: Vec<(usize, String)>) {
+        self.clients = clients;
+    }
+
+    pub fn params(&self) -> &ParamVec {
+        &self.params
+    }
+
+    pub fn tracker(&self) -> Arc<Tracker> {
+        self.tracker.clone()
+    }
+
+    /// One remote round. Returns the round metrics (distribution latency
+    /// included — the Fig 8 measurement).
+    pub fn run_round(&mut self, round: usize) -> Result<RoundMetrics> {
+        if self.clients.is_empty() {
+            return Err(Error::Comm("no clients discovered".into()));
+        }
+        let k = self.cfg.clients_per_round.min(self.clients.len());
+        let picked = self.rng.choose_indices(self.clients.len(), k);
+        let cohort: Vec<(usize, String)> = picked
+            .iter()
+            .map(|&i| self.clients[i].clone())
+            .collect();
+
+        // Scatter (distribution stage): connect + send to every client,
+        // multi-threaded exactly as the paper's §VIII-E measurement
+        // ("the distribution latency increases almost linearly using
+        // multi-threading").
+        let sw_dist = Stopwatch::start();
+        let (ctx, crx) = channel();
+        let mut scatter = Vec::new();
+        for (client_index, addr) in cohort.clone() {
+            let ctx = ctx.clone();
+            let msg = Message::TrainRequest {
+                round: round as u32,
+                client_index: client_index as u32,
+                model: self.cfg.model.clone(),
+                lr: self.cfg.lr as f32,
+                local_epochs: self.cfg.local_epochs as u32,
+                batch_size: self.cfg.batch_size as u32,
+                data_amount: self.cfg.data_amount as f32,
+                seed: self.cfg.seed ^ ((round as u64) << 32) ^ client_index as u64,
+                params: self.params.clone(),
+            };
+            scatter.push(std::thread::spawn(move || {
+                let result = Connection::connect(&addr)
+                    .and_then(|mut conn| conn.send(&msg).map(|()| conn));
+                let _ = ctx.send((client_index, result));
+            }));
+        }
+        drop(ctx);
+        let mut conns = Vec::with_capacity(cohort.len());
+        for _ in 0..cohort.len() {
+            let (client_index, result) = crx
+                .recv()
+                .map_err(|_| Error::Comm("scatter channel closed".into()))?;
+            conns.push((client_index, result?));
+        }
+        for t in scatter {
+            let _ = t.join();
+        }
+        let distribution_ms = sw_dist.elapsed_ms();
+        let downlink = self.params.len() * 4 * cohort.len();
+
+        // Gather: parallel receive threads (clients compute concurrently).
+        let sw_round = Stopwatch::start();
+        let (tx, rx) = channel();
+        let mut threads = Vec::new();
+        for (client_index, mut conn) in conns {
+            let tx = tx.clone();
+            threads.push(std::thread::spawn(move || {
+                let reply = conn.recv();
+                let _ = tx.send((client_index, reply));
+            }));
+        }
+        drop(tx);
+        let mut replies = Vec::new();
+        for _ in 0..cohort.len() {
+            let (idx, reply) = rx
+                .recv()
+                .map_err(|_| Error::Comm("gather channel closed".into()))?;
+            match reply? {
+                Message::TrainReply {
+                    num_samples,
+                    sum_loss,
+                    correct,
+                    compute_ms,
+                    update,
+                    ..
+                } => replies.push((idx, num_samples, sum_loss, correct, compute_ms, update)),
+                Message::Err { msg } => {
+                    return Err(Error::Comm(format!("client {idx}: {msg}")))
+                }
+                other => {
+                    return Err(Error::Comm(format!("client {idx}: bad reply {other:?}")))
+                }
+            }
+        }
+        for t in threads {
+            let _ = t.join();
+        }
+        let round_ms = sw_round.elapsed_ms();
+
+        // Decompress + aggregate (same server stages as local training).
+        let mut contributions = Vec::new();
+        let mut uplink = 0usize;
+        let mut clients_m = Vec::new();
+        let mut total_loss = 0.0;
+        let mut total_correct = 0.0;
+        let mut total_n = 0.0;
+        for (idx, n, sum_loss, correct, compute_ms, update) in replies {
+            uplink += update.wire_bytes();
+            let dense = self.flow.decompress(update, &self.params)?;
+            contributions.push((dense, n as f64));
+            total_loss += sum_loss;
+            total_correct += correct;
+            total_n += n as f64;
+            clients_m.push(ClientMetrics {
+                client: idx,
+                num_samples: n as usize,
+                train_loss: sum_loss / (n as f64).max(1.0),
+                train_accuracy: correct / (n as f64).max(1.0),
+                compute_ms,
+                wait_ms: 0.0,
+                round_ms: compute_ms,
+                upload_bytes: 0,
+                device: "remote".into(),
+            });
+        }
+        let new_params =
+            self.flow
+                .aggregate(&self.engine, &self.cfg.model, &contributions)?;
+        if !new_params.is_finite() {
+            return Err(Error::Runtime("remote round diverged".into()));
+        }
+        self.params = new_params;
+
+        let (test_loss, test_accuracy) = if self.cfg.eval_every > 0
+            && (round + 1) % self.cfg.eval_every == 0
+        {
+            let (l, a) = self.evaluate()?;
+            (Some(l), Some(a))
+        } else {
+            (None, None)
+        };
+
+        let metrics = RoundMetrics {
+            round,
+            train_loss: total_loss / total_n.max(1.0),
+            train_accuracy: total_correct / total_n.max(1.0),
+            test_loss,
+            test_accuracy,
+            round_ms,
+            distribution_ms,
+            comm_bytes: downlink + uplink,
+            clients: clients_m,
+        };
+        self.tracker.record_round(metrics.clone());
+        Ok(metrics)
+    }
+
+    /// Train all configured rounds.
+    pub fn run(&mut self) -> Result<()> {
+        for round in 0..self.cfg.rounds {
+            self.run_round(round)?;
+        }
+        Ok(())
+    }
+
+    /// Evaluate the global model on the server-side IID test split.
+    pub fn evaluate(&self) -> Result<(f64, f64)> {
+        let mut sum_loss = 0.0;
+        let mut correct = 0.0;
+        let mut n = 0.0;
+        for b in &self.test_batches {
+            let (l, c) = self.engine.eval_step(&self.cfg.model, &self.params, b)?;
+            sum_loss += l;
+            correct += c;
+            n += b.mask.iter().sum::<f32>() as f64;
+        }
+        Ok((sum_loss / n.max(1.0), correct / n.max(1.0)))
+    }
+}

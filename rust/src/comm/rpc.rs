@@ -1,0 +1,258 @@
+//! The RPC tier: framed request/response over TCP.
+//!
+//! Servers are thread-per-connection (std::net; no tokio offline) with a
+//! shared [`Handler`]. Clients use one-shot `call` or a persistent
+//! [`Connection`] for request pipelining (the remote coordinator keeps one
+//! connection per client service).
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::error::{Error, Result};
+
+use super::protocol::Message;
+
+/// Maximum frame size (guards against corrupt length prefixes): 256 MiB.
+const MAX_FRAME: u32 = 256 << 20;
+
+/// Write one length-prefixed frame.
+pub fn write_frame(stream: &mut TcpStream, msg: &Message) -> Result<()> {
+    let body = msg.encode();
+    if body.len() as u64 > MAX_FRAME as u64 {
+        return Err(Error::Comm(format!("frame too large: {}", body.len())));
+    }
+    stream.write_all(&(body.len() as u32).to_le_bytes())?;
+    stream.write_all(&body)?;
+    stream.flush()?;
+    Ok(())
+}
+
+/// Read one length-prefixed frame.
+pub fn read_frame(stream: &mut TcpStream) -> Result<Message> {
+    let mut len_buf = [0u8; 4];
+    stream.read_exact(&mut len_buf)?;
+    let len = u32::from_le_bytes(len_buf);
+    if len > MAX_FRAME {
+        return Err(Error::Comm(format!("oversized frame: {len}")));
+    }
+    let mut body = vec![0u8; len as usize];
+    stream.read_exact(&mut body)?;
+    Message::decode(&body)
+}
+
+/// Request handler shared across connection threads.
+pub trait Handler: Send + Sync + 'static {
+    fn handle(&self, msg: Message) -> Message;
+}
+
+impl<F> Handler for F
+where
+    F: Fn(Message) -> Message + Send + Sync + 'static,
+{
+    fn handle(&self, msg: Message) -> Message {
+        self(msg)
+    }
+}
+
+/// A running RPC server; stops (and joins) on drop.
+pub struct RpcServer {
+    addr: String,
+    stop: Arc<AtomicBool>,
+    accept_handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl RpcServer {
+    /// Bind `addr` (use port 0 for an ephemeral port) and serve.
+    pub fn serve(addr: &str, handler: Arc<dyn Handler>) -> Result<RpcServer> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| Error::Comm(format!("bind {addr}: {e}")))?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        // Accept loop polls with a timeout so `stop` is honored promptly.
+        listener.set_nonblocking(true)?;
+        let accept_handle = std::thread::Builder::new()
+            .name(format!("easyfl-rpc-{}", local.port()))
+            .spawn(move || {
+                while !stop2.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let handler = handler.clone();
+                            let _ = std::thread::Builder::new()
+                                .name("easyfl-rpc-conn".into())
+                                .spawn(move ||
+
+                                    serve_connection(stream, handler));
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(2));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })
+            .map_err(|e| Error::Comm(format!("spawn accept loop: {e}")))?;
+        Ok(RpcServer {
+            addr: local.to_string(),
+            stop,
+            accept_handle: Some(accept_handle),
+        })
+    }
+
+    /// The bound address (resolves ephemeral ports).
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Request shutdown (also done on drop).
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::Relaxed);
+    }
+}
+
+impl Drop for RpcServer {
+    fn drop(&mut self) {
+        self.shutdown();
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn serve_connection(mut stream: TcpStream, handler: Arc<dyn Handler>) {
+    stream.set_nodelay(true).ok();
+    loop {
+        match read_frame(&mut stream) {
+            Ok(msg) => {
+                let reply = handler.handle(msg);
+                if write_frame(&mut stream, &reply).is_err() {
+                    break;
+                }
+            }
+            Err(_) => break, // peer closed or protocol error
+        }
+    }
+}
+
+/// Persistent client connection (request/response pipelined serially).
+pub struct Connection {
+    stream: TcpStream,
+}
+
+impl Connection {
+    pub fn connect(addr: &str) -> Result<Connection> {
+        let stream = TcpStream::connect(addr)
+            .map_err(|e| Error::Comm(format!("connect {addr}: {e}")))?;
+        stream.set_nodelay(true).ok();
+        Ok(Connection { stream })
+    }
+
+    pub fn connect_timeout(addr: &str, timeout: Duration) -> Result<Connection> {
+        let sock_addr: std::net::SocketAddr = addr
+            .parse()
+            .map_err(|e| Error::Comm(format!("bad addr {addr}: {e}")))?;
+        let stream = TcpStream::connect_timeout(&sock_addr, timeout)
+            .map_err(|e| Error::Comm(format!("connect {addr}: {e}")))?;
+        stream.set_nodelay(true).ok();
+        Ok(Connection { stream })
+    }
+
+    /// One request/response exchange.
+    pub fn call(&mut self, msg: &Message) -> Result<Message> {
+        write_frame(&mut self.stream, msg)?;
+        read_frame(&mut self.stream)
+    }
+
+    /// Send without waiting (scatter phase of scatter/gather rounds;
+    /// Fig 8 measures exactly this half).
+    pub fn send(&mut self, msg: &Message) -> Result<()> {
+        write_frame(&mut self.stream, msg)
+    }
+
+    /// Receive the pending response (gather phase).
+    pub fn recv(&mut self) -> Result<Message> {
+        read_frame(&mut self.stream)
+    }
+}
+
+/// One-shot convenience call (connect → request → response → close).
+pub fn call(addr: &str, msg: &Message) -> Result<Message> {
+    Connection::connect(addr)?.call(msg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn echo_server_roundtrip() {
+        let server = RpcServer::serve(
+            "127.0.0.1:0",
+            Arc::new(|msg: Message| match msg {
+                Message::Ping => Message::Pong,
+                other => other,
+            }),
+        )
+        .unwrap();
+        let addr = server.addr().to_string();
+        assert_eq!(call(&addr, &Message::Ping).unwrap(), Message::Pong);
+        // Persistent connection handles multiple calls.
+        let mut conn = Connection::connect(&addr).unwrap();
+        for i in 0..5 {
+            let m = Message::Err { msg: format!("e{i}") };
+            assert_eq!(conn.call(&m).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn concurrent_clients() {
+        let server = RpcServer::serve(
+            "127.0.0.1:0",
+            Arc::new(|_| Message::Ok),
+        )
+        .unwrap();
+        let addr = server.addr().to_string();
+        let threads: Vec<_> = (0..8)
+            .map(|_| {
+                let addr = addr.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..10 {
+                        assert_eq!(call(&addr, &Message::Ping).unwrap(), Message::Ok);
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn large_frame_roundtrip() {
+        let server = RpcServer::serve(
+            "127.0.0.1:0",
+            Arc::new(|msg: Message| msg),
+        )
+        .unwrap();
+        let params = crate::model::ParamVec(vec![0.5; 300_000]); // 1.2 MB
+        let msg = Message::EvalRequest { model: "mlp".into(), params };
+        let got = call(server.addr(), &msg).unwrap();
+        assert_eq!(got, msg);
+    }
+
+    #[test]
+    fn shutdown_stops_accepting() {
+        let server =
+            RpcServer::serve("127.0.0.1:0", Arc::new(|_| Message::Ok)).unwrap();
+        let addr = server.addr().to_string();
+        drop(server);
+        std::thread::sleep(Duration::from_millis(30));
+        // New connections must fail (or at least not answer).
+        let r = Connection::connect_timeout(&addr, Duration::from_millis(100))
+            .and_then(|mut c| c.call(&Message::Ping));
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,428 @@
+//! Configuration system behind `easyfl::init(configs)` (paper §IV-B).
+//!
+//! A [`Config`] carries everything the simulation manager, data manager,
+//! scheduler and server need. Users construct it from defaults, a JSON
+//! file, or builder-style mutation; `validate` enforces the invariants the
+//! paper's `init` API promises ("default configurations if not specified").
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+/// Which dataset the data manager simulates (paper Table III).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DatasetKind {
+    /// 62-class handwritten characters, 3550 natural writers.
+    Femnist,
+    /// Next-character prediction, 1129 natural speakers.
+    Shakespeare,
+    /// 10-class images, flexible client count.
+    Cifar10,
+}
+
+impl DatasetKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "femnist" => Ok(Self::Femnist),
+            "shakespeare" => Ok(Self::Shakespeare),
+            "cifar10" | "cifar-10" | "cifar" => Ok(Self::Cifar10),
+            other => Err(Error::Config(format!("unknown dataset {other:?}"))),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Femnist => "femnist",
+            Self::Shakespeare => "shakespeare",
+            Self::Cifar10 => "cifar10",
+        }
+    }
+
+    /// Default model artifact for the dataset (paper Table III pairing).
+    pub fn default_model(self) -> &'static str {
+        match self {
+            Self::Femnist => "mlp",
+            Self::Shakespeare => "charcnn",
+            Self::Cifar10 => "cnn",
+        }
+    }
+}
+
+/// Statistical-heterogeneity partition method (paper §V-A).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Partition {
+    /// Independent and identically distributed split.
+    Iid,
+    /// Per-writer realistic non-IID (FEMNIST/Shakespeare style).
+    Realistic,
+    /// Dirichlet process Dir(alpha) over class proportions.
+    Dirichlet(f64),
+    /// Each client holds exactly `n` of the classes.
+    ByClass(usize),
+}
+
+impl Partition {
+    pub fn parse(s: &str) -> Result<Self> {
+        let s = s.to_ascii_lowercase();
+        if s == "iid" {
+            Ok(Self::Iid)
+        } else if s == "realistic" {
+            Ok(Self::Realistic)
+        } else if let Some(a) = s.strip_prefix("dir(").and_then(|r| r.strip_suffix(')')) {
+            a.parse()
+                .map(Self::Dirichlet)
+                .map_err(|_| Error::Config(format!("bad dirichlet alpha {a:?}")))
+        } else if let Some(n) = s.strip_prefix("class(").and_then(|r| r.strip_suffix(')')) {
+            n.parse()
+                .map(Self::ByClass)
+                .map_err(|_| Error::Config(format!("bad class count {n:?}")))
+        } else {
+            Err(Error::Config(format!(
+                "unknown partition {s:?} (iid | realistic | dir(a) | class(n))"
+            )))
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            Self::Iid => "iid".into(),
+            Self::Realistic => "realistic".into(),
+            Self::Dirichlet(a) => format!("dir({a})"),
+            Self::ByClass(n) => format!("class({n})"),
+        }
+    }
+}
+
+/// Client allocation strategy for distributed training (paper §VI).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Allocation {
+    /// Greedy Allocation with Adaptive Profiling (Algorithm 1).
+    GreedyAda,
+    /// Random round-robin (paper's "random allocation" baseline).
+    Random,
+    /// Slowest-together (paper's "slowest allocation" baseline).
+    Slowest,
+}
+
+impl Allocation {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "greedyada" | "greedy" => Ok(Self::GreedyAda),
+            "random" => Ok(Self::Random),
+            "slowest" => Ok(Self::Slowest),
+            other => Err(Error::Config(format!("unknown allocation {other:?}"))),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::GreedyAda => "greedyada",
+            Self::Random => "random",
+            Self::Slowest => "slowest",
+        }
+    }
+}
+
+/// Full platform configuration. Defaults mirror the paper's Appendix B-A.
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// Dataset to simulate.
+    pub dataset: DatasetKind,
+    /// Model artifact name ("mlp" | "cnn" | "charcnn"), or "auto" to
+    /// pair with the dataset (Table III pairing).
+    pub model: String,
+    /// Directory containing AOT artifacts.
+    pub artifacts_dir: PathBuf,
+    /// Total number of simulated clients (0 ⇒ dataset's natural count).
+    pub num_clients: usize,
+    /// Clients selected per round (paper: C).
+    pub clients_per_round: usize,
+    /// Training rounds (paper: R).
+    pub rounds: usize,
+    /// Local epochs per round (paper: E = 10).
+    pub local_epochs: usize,
+    /// Minibatch size must match the AOT batch (paper: B = 64; ours 32).
+    pub batch_size: usize,
+    /// SGD learning rate (0.01 images / 0.8 shakespeare in the paper).
+    pub lr: f64,
+    /// Statistical heterogeneity partition.
+    pub partition: Partition,
+    /// Simulate unbalanced client sizes (log-normal / Dirichlet sizes).
+    pub unbalanced: bool,
+    /// Simulate system heterogeneity (device speed-ratio waits).
+    pub system_heterogeneity: bool,
+    /// Simulated parallel devices ("GPUs"); 1 ⇒ standalone training.
+    pub num_devices: usize,
+    /// Allocation strategy when `num_devices > 1`.
+    pub allocation: Allocation,
+    /// GreedyAda default client time `t` in ms (Algorithm 1 input).
+    pub default_client_time_ms: f64,
+    /// GreedyAda update momentum `m` (Algorithm 1 input).
+    pub profile_momentum: f64,
+    /// Wait-time scale for system-heterogeneity sleeps (1.0 = real time;
+    /// tests/benches use ≤ 0.01 to compress simulated waits).
+    pub time_scale: f64,
+    /// Use a virtual clock (no real sleeps) for heterogeneity waits.
+    pub virtual_clock: bool,
+    /// Fraction of each client's samples used for training (Fig 7b/c).
+    pub data_amount: f64,
+    /// FedProx proximal coefficient μ (used by the fedprox algorithm).
+    pub fedprox_mu: f64,
+    /// Base RNG seed: equal seeds reproduce experiments bit-for-bit.
+    pub seed: u64,
+    /// Where the tracking manager persists metrics (None ⇒ memory only).
+    pub tracking_dir: Option<PathBuf>,
+    /// Evaluate the global model on the test split every `n` rounds.
+    pub eval_every: usize,
+    /// Total samples cap for quick experiments (0 = dataset natural size).
+    pub max_samples: usize,
+    /// Size of the IID test split the server evaluates on.
+    pub test_samples: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            dataset: DatasetKind::Femnist,
+            model: "auto".into(),
+            artifacts_dir: PathBuf::from("artifacts"),
+            num_clients: 0,
+            clients_per_round: 10,
+            rounds: 10,
+            local_epochs: 10,
+            batch_size: 32,
+            lr: 0.01,
+            partition: Partition::Realistic,
+            unbalanced: false,
+            system_heterogeneity: false,
+            num_devices: 1,
+            allocation: Allocation::GreedyAda,
+            default_client_time_ms: 100.0,
+            profile_momentum: 0.5,
+            time_scale: 1.0,
+            virtual_clock: false,
+            data_amount: 1.0,
+            fedprox_mu: 0.01,
+            seed: 42,
+            tracking_dir: None,
+            eval_every: 1,
+            max_samples: 0,
+            test_samples: 512,
+        }
+    }
+}
+
+impl Config {
+    /// The effective model name ("auto" resolves to the dataset default).
+    pub fn resolved_model(&self) -> String {
+        if self.model == "auto" {
+            self.dataset.default_model().to_string()
+        } else {
+            self.model.clone()
+        }
+    }
+
+    /// Paper-style quick constructor: dataset plus defaults.
+    pub fn for_dataset(dataset: DatasetKind) -> Config {
+        let mut c = Config { dataset, ..Config::default() };
+        c.model = dataset.default_model().to_string();
+        if dataset == DatasetKind::Shakespeare {
+            c.lr = 0.8;
+        }
+        c
+    }
+
+    /// Load overrides from a JSON file on top of defaults.
+    pub fn from_file(path: &Path) -> Result<Config> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+
+    /// Apply a JSON object of overrides on top of defaults.
+    pub fn from_json(v: &Json) -> Result<Config> {
+        let mut c = Config::default();
+        if let Some(s) = v.get("dataset").as_str() {
+            c.dataset = DatasetKind::parse(s)?;
+            c.model = c.dataset.default_model().to_string();
+            if c.dataset == DatasetKind::Shakespeare {
+                c.lr = 0.8;
+            }
+        }
+        if let Some(s) = v.get("model").as_str() {
+            c.model = s.to_string();
+        }
+        if let Some(s) = v.get("artifacts_dir").as_str() {
+            c.artifacts_dir = PathBuf::from(s);
+        }
+        if let Some(n) = v.get("num_clients").as_usize() {
+            c.num_clients = n;
+        }
+        if let Some(n) = v.get("clients_per_round").as_usize() {
+            c.clients_per_round = n;
+        }
+        if let Some(n) = v.get("rounds").as_usize() {
+            c.rounds = n;
+        }
+        if let Some(n) = v.get("local_epochs").as_usize() {
+            c.local_epochs = n;
+        }
+        if let Some(n) = v.get("batch_size").as_usize() {
+            c.batch_size = n;
+        }
+        if let Some(x) = v.get("lr").as_f64() {
+            c.lr = x;
+        }
+        if let Some(s) = v.get("partition").as_str() {
+            c.partition = Partition::parse(s)?;
+        }
+        if let Some(b) = v.get("unbalanced").as_bool() {
+            c.unbalanced = b;
+        }
+        if let Some(b) = v.get("system_heterogeneity").as_bool() {
+            c.system_heterogeneity = b;
+        }
+        if let Some(n) = v.get("num_devices").as_usize() {
+            c.num_devices = n;
+        }
+        if let Some(s) = v.get("allocation").as_str() {
+            c.allocation = Allocation::parse(s)?;
+        }
+        if let Some(x) = v.get("default_client_time_ms").as_f64() {
+            c.default_client_time_ms = x;
+        }
+        if let Some(x) = v.get("profile_momentum").as_f64() {
+            c.profile_momentum = x;
+        }
+        if let Some(x) = v.get("time_scale").as_f64() {
+            c.time_scale = x;
+        }
+        if let Some(b) = v.get("virtual_clock").as_bool() {
+            c.virtual_clock = b;
+        }
+        if let Some(x) = v.get("data_amount").as_f64() {
+            c.data_amount = x;
+        }
+        if let Some(x) = v.get("fedprox_mu").as_f64() {
+            c.fedprox_mu = x;
+        }
+        if let Some(n) = v.get("seed").as_usize() {
+            c.seed = n as u64;
+        }
+        if let Some(s) = v.get("tracking_dir").as_str() {
+            c.tracking_dir = Some(PathBuf::from(s));
+        }
+        if let Some(n) = v.get("eval_every").as_usize() {
+            c.eval_every = n;
+        }
+        if let Some(n) = v.get("max_samples").as_usize() {
+            c.max_samples = n;
+        }
+        if let Some(n) = v.get("test_samples").as_usize() {
+            c.test_samples = n;
+        }
+        c.validate()?;
+        Ok(c)
+    }
+
+    /// Enforce cross-field invariants.
+    pub fn validate(&self) -> Result<()> {
+        if self.clients_per_round == 0 {
+            return Err(Error::Config("clients_per_round must be > 0".into()));
+        }
+        if self.num_clients > 0 && self.clients_per_round > self.num_clients {
+            return Err(Error::Config(format!(
+                "clients_per_round ({}) > num_clients ({})",
+                self.clients_per_round, self.num_clients
+            )));
+        }
+        if self.num_devices == 0 {
+            return Err(Error::Config("num_devices must be > 0".into()));
+        }
+        if !(0.0..=1.0).contains(&self.profile_momentum) {
+            return Err(Error::Config("profile_momentum must be in [0,1]".into()));
+        }
+        if !(self.data_amount > 0.0 && self.data_amount <= 1.0) {
+            return Err(Error::Config("data_amount must be in (0,1]".into()));
+        }
+        if self.lr <= 0.0 {
+            return Err(Error::Config("lr must be > 0".into()));
+        }
+        if self.local_epochs == 0 || self.rounds == 0 {
+            return Err(Error::Config("rounds/local_epochs must be > 0".into()));
+        }
+        if matches!(self.partition, Partition::ByClass(0)) {
+            return Err(Error::Config("class(n) needs n ≥ 1".into()));
+        }
+        if matches!(self.partition, Partition::Dirichlet(a) if a <= 0.0) {
+            return Err(Error::Config("dir(a) needs a > 0".into()));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        Config::default().validate().unwrap();
+    }
+
+    #[test]
+    fn dataset_constructor_pairs_model_and_lr() {
+        let c = Config::for_dataset(DatasetKind::Shakespeare);
+        assert_eq!(c.model, "charcnn");
+        assert_eq!(c.lr, 0.8);
+        let c = Config::for_dataset(DatasetKind::Cifar10);
+        assert_eq!(c.model, "cnn");
+        assert_eq!(c.lr, 0.01);
+    }
+
+    #[test]
+    fn partition_parsing() {
+        assert_eq!(Partition::parse("iid").unwrap(), Partition::Iid);
+        assert_eq!(
+            Partition::parse("dir(0.5)").unwrap(),
+            Partition::Dirichlet(0.5)
+        );
+        assert_eq!(Partition::parse("class(3)").unwrap(), Partition::ByClass(3));
+        assert!(Partition::parse("zipf").is_err());
+        assert_eq!(Partition::Dirichlet(0.5).name(), "dir(0.5)");
+    }
+
+    #[test]
+    fn json_overrides_apply() {
+        let j = Json::parse(
+            r#"{"dataset": "cifar10", "rounds": 3, "partition": "class(2)",
+                "num_devices": 4, "allocation": "random", "lr": 0.1}"#,
+        )
+        .unwrap();
+        let c = Config::from_json(&j).unwrap();
+        assert_eq!(c.dataset, DatasetKind::Cifar10);
+        assert_eq!(c.model, "cnn");
+        assert_eq!(c.rounds, 3);
+        assert_eq!(c.partition, Partition::ByClass(2));
+        assert_eq!(c.allocation, Allocation::Random);
+        assert_eq!(c.lr, 0.1);
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        let cases = [
+            r#"{"clients_per_round": 0}"#,
+            r#"{"num_devices": 0}"#,
+            r#"{"data_amount": 0}"#,
+            r#"{"data_amount": 1.5}"#,
+            r#"{"lr": -1}"#,
+            r#"{"partition": "class(0)"}"#,
+            r#"{"num_clients": 5, "clients_per_round": 10}"#,
+            r#"{"profile_momentum": 2}"#,
+        ];
+        for src in cases {
+            let j = Json::parse(src).unwrap();
+            assert!(Config::from_json(&j).is_err(), "{src}");
+        }
+    }
+}

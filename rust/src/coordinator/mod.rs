@@ -1,0 +1,9 @@
+//! Coordinator (paper §IV-A): the server module, the device pool, and the
+//! round orchestration that composes selection, scheduling, training-flow
+//! stages, aggregation, evaluation and tracking.
+
+pub mod pool;
+pub mod server;
+
+pub use pool::{ClientFlowFactory, DevicePool};
+pub use server::Server;

@@ -1,0 +1,137 @@
+//! The simulated device pool (paper §VI).
+//!
+//! Each "GPU" is a worker thread owning its **own** PJRT engine (the
+//! `xla` client is single-threaded) and its own [`ClientFlow`] instance;
+//! clients allocated to a device train sequentially, devices in parallel —
+//! exactly the paper's distributed-training model under resource
+//! constraints. Engines compile once and live for the pool's lifetime.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::client::{execute_client_round, ClientJob, ClientOutcome};
+use crate::data::registry::DataSource;
+use crate::error::{Error, Result};
+use crate::flow::ClientFlow;
+use crate::runtime::Engine;
+use crate::util::clock::Clock;
+
+/// Factory producing one [`ClientFlow`] per worker thread.
+pub type ClientFlowFactory = Arc<dyn Fn() -> Box<dyn ClientFlow> + Send + Sync>;
+
+struct DeviceJob {
+    jobs: Vec<ClientJob>,
+    reply: Sender<(usize, Result<Vec<ClientOutcome>>)>,
+}
+
+/// A pool of M simulated devices.
+pub struct DevicePool {
+    senders: Vec<Sender<DeviceJob>>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl DevicePool {
+    /// Spawn `m` device workers.
+    pub fn new(
+        m: usize,
+        artifacts_dir: std::path::PathBuf,
+        data: Arc<dyn DataSource>,
+        clock: Arc<dyn Clock>,
+        flow_factory: ClientFlowFactory,
+    ) -> Result<DevicePool> {
+        assert!(m > 0);
+        let mut senders = Vec::with_capacity(m);
+        let mut handles = Vec::with_capacity(m);
+        // Engines are constructed inside the threads (PjRtClient is !Send);
+        // construction errors surface on the first job instead.
+        for device in 0..m {
+            let (tx, rx): (Sender<DeviceJob>, Receiver<DeviceJob>) = channel();
+            let dir = artifacts_dir.clone();
+            let data = data.clone();
+            let clock = clock.clone();
+            let factory = flow_factory.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("easyfl-dev{device}"))
+                .spawn(move || {
+                    let engine = Engine::new(&dir);
+                    let mut flow = factory();
+                    while let Ok(DeviceJob { jobs, reply }) = rx.recv() {
+                        let result = match &engine {
+                            Err(e) => Err(Error::Runtime(format!(
+                                "device {device}: engine init failed: {e}"
+                            ))),
+                            Ok(engine) => jobs
+                                .iter()
+                                .map(|job| {
+                                    execute_client_round(
+                                        flow.as_mut(),
+                                        engine,
+                                        data.as_ref(),
+                                        clock.as_ref(),
+                                        job,
+                                    )
+                                })
+                                .collect(),
+                        };
+                        // Receiver may have given up; ignore send errors.
+                        let _ = reply.send((device, result));
+                    }
+                })
+                .map_err(|e| Error::Runtime(format!("spawn device: {e}")))?;
+            senders.push(tx);
+            handles.push(handle);
+        }
+        Ok(DevicePool { senders, handles })
+    }
+
+    pub fn num_devices(&self) -> usize {
+        self.senders.len()
+    }
+
+    /// Run one round: `groups[d]` trains sequentially on device `d`.
+    ///
+    /// Returns per-device outcome lists (same indexing as `groups`).
+    pub fn run_round(
+        &self,
+        groups: Vec<Vec<ClientJob>>,
+    ) -> Result<Vec<Vec<ClientOutcome>>> {
+        if groups.len() > self.senders.len() {
+            return Err(Error::Runtime(format!(
+                "{} groups for {} devices",
+                groups.len(),
+                self.senders.len()
+            )));
+        }
+        let (reply_tx, reply_rx) = channel();
+        let mut expected = 0;
+        for (device, jobs) in groups.into_iter().enumerate() {
+            if jobs.is_empty() {
+                continue;
+            }
+            expected += 1;
+            self.senders[device]
+                .send(DeviceJob { jobs, reply: reply_tx.clone() })
+                .map_err(|_| Error::Runtime(format!("device {device} died")))?;
+        }
+        drop(reply_tx);
+        let mut per_device: Vec<Vec<ClientOutcome>> =
+            (0..self.senders.len()).map(|_| Vec::new()).collect();
+        for _ in 0..expected {
+            let (device, result) = reply_rx
+                .recv()
+                .map_err(|_| Error::Runtime("device pool hung up".into()))?;
+            per_device[device] = result?;
+        }
+        Ok(per_device)
+    }
+}
+
+impl Drop for DevicePool {
+    fn drop(&mut self) {
+        self.senders.clear(); // disconnect: workers exit their recv loops
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}

@@ -1,0 +1,324 @@
+//! The federated server: the round loop tying every module together.
+
+use std::sync::Arc;
+
+use crate::client::{execute_client_round, ClientJob, ClientOutcome};
+use crate::config::Config;
+use crate::coordinator::pool::{ClientFlowFactory, DevicePool};
+use crate::data::registry::DataSource;
+use crate::error::{Error, Result};
+use crate::flow::ServerFlow;
+use crate::model::ParamVec;
+use crate::runtime::{Batch, Engine};
+use crate::scheduler::{self, Strategy};
+use crate::simulation::HeterogeneityPlan;
+use crate::tracking::{ClientMetrics, RoundMetrics, Tracker};
+use crate::util::clock::{Clock, RealClock, Stopwatch, VirtualClock};
+use crate::util::rng::Rng;
+
+/// The FL server (paper §IV-A "server" module).
+pub struct Server {
+    pub cfg: Config,
+    data: Arc<dyn DataSource>,
+    /// Main-thread engine: evaluation + aggregation (and, in standalone
+    /// mode, client training — perf iteration 2 in EXPERIMENTS.md §Perf:
+    /// one engine ⇒ one compile, no thread hop).
+    engine: Engine,
+    /// Parallel device pool; `None` in standalone mode (num_devices == 1).
+    pool: Option<DevicePool>,
+    /// Client flow used for inline standalone training.
+    standalone_flow: Option<Box<dyn crate::flow::ClientFlow>>,
+    strategy: Box<dyn Strategy>,
+    flow: Box<dyn ServerFlow>,
+    plan: HeterogeneityPlan,
+    tracker: Arc<Tracker>,
+    clock: Arc<dyn Clock>,
+    params: ParamVec,
+    rng: Rng,
+    test_batches: Vec<Batch>,
+}
+
+impl Server {
+    /// Assemble a server from the configured modules.
+    pub fn new(
+        cfg: Config,
+        data: Arc<dyn DataSource>,
+        flow: Box<dyn ServerFlow>,
+        client_factory: ClientFlowFactory,
+        tracker: Arc<Tracker>,
+    ) -> Result<Server> {
+        let mut cfg = cfg;
+        cfg.model = cfg.resolved_model();
+        cfg.validate()?;
+        let engine = Engine::new(&cfg.artifacts_dir)?;
+        let params = engine.init_params(&cfg.model)?;
+        let clock: Arc<dyn Clock> = if cfg.virtual_clock {
+            Arc::new(VirtualClock::new())
+        } else {
+            Arc::new(RealClock::new(cfg.time_scale))
+        };
+        let plan = HeterogeneityPlan::from_config(&cfg, data.num_clients());
+        let strategy = scheduler::make_strategy(
+            cfg.allocation,
+            cfg.default_client_time_ms,
+            cfg.profile_momentum,
+        );
+        let (pool, standalone_flow) = if cfg.num_devices == 1 {
+            (None, Some(client_factory()))
+        } else {
+            (
+                Some(DevicePool::new(
+                    cfg.num_devices,
+                    cfg.artifacts_dir.clone(),
+                    data.clone(),
+                    clock.clone(),
+                    client_factory,
+                )?),
+                None,
+            )
+        };
+        let test_batches = data
+            .test_data(cfg.test_samples)?
+            .batches(cfg.batch_size);
+        let rng = Rng::new(cfg.seed ^ 0x5E17_EC70);
+
+        tracker.set_config("dataset", cfg.dataset.name().to_string());
+        tracker.set_config("model", cfg.model.clone());
+        tracker.set_config("partition", cfg.partition.name());
+        tracker.set_config("allocation", cfg.allocation.name().to_string());
+        tracker.set_config("num_devices", cfg.num_devices.to_string());
+        tracker.set_config("clients_per_round", cfg.clients_per_round.to_string());
+        tracker.set_config("server_flow", flow.name().to_string());
+
+        Ok(Server {
+            cfg,
+            data,
+            engine,
+            pool,
+            standalone_flow,
+            strategy,
+            flow,
+            plan,
+            tracker,
+            clock,
+            params,
+            rng,
+            test_batches,
+        })
+    }
+
+    pub fn tracker(&self) -> Arc<Tracker> {
+        self.tracker.clone()
+    }
+
+    pub fn params(&self) -> &ParamVec {
+        &self.params
+    }
+
+    /// Replace the global model (remote ingest, tests).
+    pub fn set_params(&mut self, params: ParamVec) {
+        self.params = params;
+    }
+
+    /// Train all configured rounds.
+    pub fn run(&mut self) -> Result<()> {
+        for round in 0..self.cfg.rounds {
+            self.run_round(round)?;
+        }
+        Ok(())
+    }
+
+    /// One FL round: select → allocate → distribute → train → aggregate →
+    /// evaluate → track.
+    pub fn run_round(&mut self, round: usize) -> Result<RoundMetrics> {
+        let k = self.cfg.clients_per_round;
+        let cohort =
+            self.flow
+                .select(self.data.num_clients(), k, round, &mut self.rng);
+        let num_devices = self.cfg.num_devices;
+        let groups = self.strategy.allocate(&cohort, num_devices, &mut self.rng);
+
+        // Distribution stage: build + enqueue per-client payloads.
+        let payload = self
+            .flow
+            .compress_model(Arc::new(self.params.clone()), round);
+        let downlink_bytes = payload.wire_bytes * cohort.len();
+        let sw_dist = Stopwatch::start();
+        let jobs: Vec<Vec<ClientJob>> = groups
+            .iter()
+            .map(|group| {
+                group
+                    .iter()
+                    .map(|&client| ClientJob {
+                        client,
+                        round,
+                        model: self.cfg.model.clone(),
+                        payload: payload.clone(),
+                        lr: self.cfg.lr as f32,
+                        local_epochs: self.cfg.local_epochs,
+                        batch_size: self.cfg.batch_size,
+                        data_amount: self.cfg.data_amount,
+                        seed: self.cfg.seed
+                            ^ (round as u64) << 32
+                            ^ client as u64,
+                        speed_ratio: self.plan.speed_ratio(client),
+                        device_name: self.plan.device_name(client).to_string(),
+                    })
+                    .collect()
+            })
+            .collect();
+        let sw_round = Stopwatch::start();
+        let per_device = match &self.pool {
+            Some(pool) => pool.run_round(jobs)?,
+            None => {
+                // Standalone: inline on the server engine (single compile).
+                let flow = self.standalone_flow.as_mut().expect("standalone flow");
+                let mut out = Vec::with_capacity(jobs.len());
+                for group in jobs {
+                    let mut outs = Vec::with_capacity(group.len());
+                    for job in &group {
+                        outs.push(execute_client_round(
+                            flow.as_mut(),
+                            &self.engine,
+                            self.data.as_ref(),
+                            self.clock.as_ref(),
+                            job,
+                        )?);
+                    }
+                    out.push(outs);
+                }
+                out
+            }
+        };
+        let distribution_ms = sw_dist.elapsed_ms();
+        let wall_ms = sw_round.elapsed_ms();
+
+        // Adaptive profiling feedback (Algorithm 1 line 14).
+        let measured: Vec<(usize, f64)> = per_device
+            .iter()
+            .flatten()
+            .map(|o| (o.client, o.round_ms))
+            .collect();
+        self.strategy.observe(&measured);
+
+        // Simulated round time = makespan over devices (+ real server work
+        // below). With a real clock the wall time matches this; with a
+        // virtual clock waits were free, so the makespan is authoritative.
+        let makespan_ms = per_device
+            .iter()
+            .map(|outs| outs.iter().map(|o| o.round_ms).sum::<f64>())
+            .fold(0.0, f64::max);
+
+        // Decompression + aggregation stages.
+        let sw_agg = Stopwatch::start();
+        let outcomes: Vec<&ClientOutcome> = per_device.iter().flatten().collect();
+        if outcomes.is_empty() {
+            return Err(Error::Runtime("round produced no outcomes".into()));
+        }
+        let mut contributions = Vec::with_capacity(outcomes.len());
+        let mut uplink_bytes = 0usize;
+        for o in &outcomes {
+            uplink_bytes += o.upload_bytes;
+            let dense = self.flow.decompress(o.update.clone(), &self.params)?;
+            contributions.push((dense, o.stats.num_samples as f64));
+        }
+        let new_params =
+            self.flow
+                .aggregate(&self.engine, &self.cfg.model, &contributions)?;
+        if !new_params.is_finite() {
+            return Err(Error::Runtime(format!(
+                "round {round}: aggregated parameters diverged (NaN/Inf); \
+                 lower the learning rate"
+            )));
+        }
+        self.params = new_params;
+        let agg_ms = sw_agg.elapsed_ms();
+
+        // Evaluation.
+        let (test_loss, test_accuracy) = if self.cfg.eval_every > 0
+            && (round + 1) % self.cfg.eval_every == 0
+        {
+            let (l, a) = self.evaluate()?;
+            (Some(l), Some(a))
+        } else {
+            (None, None)
+        };
+
+        // Tracking (three-level hierarchy).
+        let clients: Vec<ClientMetrics> = outcomes
+            .iter()
+            .map(|o| ClientMetrics {
+                client: o.client,
+                num_samples: o.stats.num_samples,
+                train_loss: o.stats.avg_loss(),
+                train_accuracy: o.stats.accuracy(),
+                compute_ms: o.compute_ms,
+                wait_ms: o.wait_ms,
+                round_ms: o.round_ms,
+                upload_bytes: o.upload_bytes,
+                device: o.device_name.clone(),
+            })
+            .collect();
+        let total_samples: f64 =
+            outcomes.iter().map(|o| o.stats.num_samples as f64).sum();
+        let train_loss = outcomes
+            .iter()
+            .map(|o| o.stats.sum_loss)
+            .sum::<f64>()
+            / total_samples.max(1.0);
+        let train_accuracy = outcomes
+            .iter()
+            .map(|o| o.stats.correct)
+            .sum::<f64>()
+            / total_samples.max(1.0);
+        let metrics = RoundMetrics {
+            round,
+            train_loss,
+            train_accuracy,
+            test_loss,
+            test_accuracy,
+            round_ms: makespan_ms + agg_ms,
+            distribution_ms,
+            comm_bytes: downlink_bytes + uplink_bytes,
+            clients,
+        };
+        self.tracker.record_round(metrics.clone());
+        log::debug!(
+            "round {round}: loss {train_loss:.4} acc {train_accuracy:.3} \
+             makespan {makespan_ms:.0}ms wall {wall_ms:.0}ms"
+        );
+        Ok(metrics)
+    }
+
+    /// Evaluate the global model on the IID test split.
+    pub fn evaluate(&self) -> Result<(f64, f64)> {
+        self.evaluate_params(&self.params)
+    }
+
+    /// Evaluate arbitrary parameters (personalization diagnostics).
+    pub fn evaluate_params(&self, params: &ParamVec) -> Result<(f64, f64)> {
+        let mut sum_loss = 0.0;
+        let mut correct = 0.0;
+        let mut n = 0.0;
+        for b in &self.test_batches {
+            let (l, c) = self.engine.eval_step(&self.cfg.model, params, b)?;
+            sum_loss += l;
+            correct += c;
+            n += b.mask.iter().sum::<f32>() as f64;
+        }
+        if n == 0.0 {
+            return Err(Error::Runtime("empty test split".into()));
+        }
+        Ok((sum_loss / n, correct / n))
+    }
+
+    /// The engine (plugins may need aggregation access).
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    /// Elapsed simulated time (virtual-clock experiments).
+    pub fn now_ms(&self) -> f64 {
+        self.clock.now_ms()
+    }
+}

@@ -1,0 +1,160 @@
+//! Deployment manager (paper §VII): seamless and scalable deployment.
+//!
+//! Docker/Kubernetes are substituted by **process containers** (DESIGN.md
+//! substitution #3): each FL component (registry, client services) runs as
+//! a supervised OS process of the easyfl binary with a role subcommand —
+//! the same lifecycle (build → deploy → register → train → teardown) and
+//! the same discovery problem, without a container runtime in the image.
+//! The deployment manager is what the Fig 8 / deployment-time experiments
+//! drive.
+
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use crate::comm::protocol::Message;
+use crate::comm::rpc;
+use crate::config::Config;
+use crate::error::{Error, Result};
+
+/// A supervised component process ("container").
+pub struct Container {
+    pub name: String,
+    pub addr: String,
+    child: Child,
+}
+
+impl Container {
+    /// Liveness probe (Ping → Pong).
+    pub fn is_ready(&self) -> bool {
+        rpc::call(&self.addr, &Message::Ping)
+            .map(|m| m == Message::Pong)
+            .unwrap_or(false)
+    }
+
+    /// Block until ready or timeout.
+    pub fn wait_ready(&self, timeout: Duration) -> Result<()> {
+        let start = Instant::now();
+        while start.elapsed() < timeout {
+            if self.is_ready() {
+                return Ok(());
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        Err(Error::Deploy(format!("{} not ready within {timeout:?}", self.name)))
+    }
+}
+
+/// The deployment: spawns, probes and tears down component processes.
+#[derive(Default)]
+pub struct Deployment {
+    containers: Vec<Container>,
+    next_port: u16,
+}
+
+impl Deployment {
+    /// Allocate ports from `base_port` upward.
+    pub fn new(base_port: u16) -> Deployment {
+        Deployment { containers: Vec::new(), next_port: base_port }
+    }
+
+    fn alloc_port(&mut self) -> u16 {
+        let p = self.next_port;
+        self.next_port += 1;
+        p
+    }
+
+    fn spawn(&mut self, name: &str, port: u16, args: &[String]) -> Result<&Container> {
+        let exe = std::env::current_exe()
+            .map_err(|e| Error::Deploy(format!("current_exe: {e}")))?;
+        let child = Command::new(exe)
+            .args(args)
+            .stdout(Stdio::null())
+            .stderr(Stdio::null())
+            .spawn()
+            .map_err(|e| Error::Deploy(format!("spawn {name}: {e}")))?;
+        self.containers.push(Container {
+            name: name.to_string(),
+            addr: format!("127.0.0.1:{port}"),
+            child,
+        });
+        Ok(self.containers.last().unwrap())
+    }
+
+    /// Deploy a registry service; returns its address.
+    pub fn deploy_registry(&mut self) -> Result<String> {
+        let port = self.alloc_port();
+        let args = vec![
+            "registry".to_string(),
+            "--port".to_string(),
+            port.to_string(),
+        ];
+        self.spawn("registry", port, &args)?;
+        let c = self.containers.last().unwrap();
+        c.wait_ready(Duration::from_secs(10))?;
+        Ok(c.addr.clone())
+    }
+
+    /// Deploy one client service that self-registers with the registry.
+    pub fn deploy_client(
+        &mut self,
+        cfg: &Config,
+        client_index: usize,
+        registry_addr: &str,
+    ) -> Result<String> {
+        let port = self.alloc_port();
+        let args = vec![
+            "client".to_string(),
+            "--port".to_string(),
+            port.to_string(),
+            "--registry".to_string(),
+            registry_addr.to_string(),
+            "--client-index".to_string(),
+            client_index.to_string(),
+            "--dataset".to_string(),
+            cfg.dataset.name().to_string(),
+            "--partition".to_string(),
+            cfg.partition.name(),
+            "--num-clients".to_string(),
+            cfg.num_clients.to_string(),
+            "--clients-per-round".to_string(),
+            cfg.clients_per_round.min(cfg.num_clients.max(1)).to_string(),
+            "--max-samples".to_string(),
+            cfg.max_samples.to_string(),
+            "--seed".to_string(),
+            cfg.seed.to_string(),
+            "--artifacts".to_string(),
+            cfg.artifacts_dir.display().to_string(),
+            "--batch-size".to_string(),
+            cfg.batch_size.to_string(),
+        ];
+        self.spawn(&format!("client-{client_index}"), port, &args)?;
+        Ok(self.containers.last().unwrap().addr.clone())
+    }
+
+    /// Wait for all deployed containers to answer pings.
+    pub fn wait_all_ready(&self, timeout: Duration) -> Result<()> {
+        for c in &self.containers {
+            c.wait_ready(timeout)?;
+        }
+        Ok(())
+    }
+
+    pub fn containers(&self) -> &[Container] {
+        &self.containers
+    }
+
+    /// Tear everything down (also done on drop).
+    pub fn teardown(&mut self) {
+        for c in &mut self.containers {
+            let _ = c.child.kill();
+            let _ = c.child.wait();
+        }
+        self.containers.clear();
+    }
+}
+
+impl Drop for Deployment {
+    fn drop(&mut self) {
+        self.teardown();
+    }
+}

@@ -1,0 +1,51 @@
+//! Unified error type for the easyfl platform.
+
+use thiserror::Error;
+
+/// All failure modes surfaced by the public API.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// Configuration was syntactically valid but semantically wrong.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// An AOT artifact (HLO text / meta / init params) is missing or bad.
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    /// The XLA/PJRT runtime rejected a compile or execute call.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// A dataset/model/server/client registration problem.
+    #[error("registry error: {0}")]
+    Registry(String),
+
+    /// Remote-communication failure (framing, protocol, transport).
+    #[error("comm error: {0}")]
+    Comm(String),
+
+    /// Deployment-manager failure (spawn, supervise, teardown).
+    #[error("deploy error: {0}")]
+    Deploy(String),
+
+    /// Tracking-store failure (persistence, query).
+    #[error("tracking error: {0}")]
+    Tracking(String),
+
+    /// JSON parse/serialize failure.
+    #[error("json error: {0}")]
+    Json(String),
+
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Runtime(e.to_string())
+    }
+}
+
+/// Platform-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,182 @@
+//! Client-side stages: download → decompression → train → compression →
+//! encryption → upload (paper Fig 3, bottom row).
+
+use std::sync::Arc;
+
+use super::server_stages::ModelPayload;
+use super::Update;
+use crate::data::LocalData;
+use crate::error::Result;
+use crate::model::ParamVec;
+use crate::runtime::Engine;
+use crate::util::rng::Rng;
+
+/// Everything a client needs for one round of local work.
+#[derive(Clone)]
+pub struct TrainTask {
+    pub client: usize,
+    pub round: usize,
+    pub model: String,
+    pub payload: ModelPayload,
+    pub data: Arc<LocalData>,
+    pub lr: f32,
+    pub local_epochs: usize,
+    pub batch_size: usize,
+    /// Per-(client, round) RNG seed for batch-order shuffling.
+    pub seed: u64,
+}
+
+/// Training statistics of the local run (last epoch).
+#[derive(Debug, Clone, Default)]
+pub struct TrainStats {
+    pub sum_loss: f64,
+    pub correct: f64,
+    pub num_samples: usize,
+    pub steps: usize,
+}
+
+impl TrainStats {
+    pub fn avg_loss(&self) -> f64 {
+        if self.num_samples == 0 {
+            0.0
+        } else {
+            self.sum_loss / self.num_samples as f64
+        }
+    }
+
+    pub fn accuracy(&self) -> f64 {
+        if self.num_samples == 0 {
+            0.0
+        } else {
+            self.correct / self.num_samples as f64
+        }
+    }
+}
+
+/// The client half of the training-flow abstraction.
+///
+/// Every method has the FedAvg default; algorithm plugins override the
+/// stages they change (FedProx: `train`; STC: `compress`; secure
+/// aggregation: `encrypt`).
+pub trait ClientFlow: Send {
+    fn name(&self) -> &'static str {
+        "fedavg"
+    }
+
+    /// Decompression stage: payload → local working parameters.
+    fn decompress(&mut self, payload: &ModelPayload) -> Result<ParamVec> {
+        Ok((*payload.params).clone())
+    }
+
+    /// Train stage: E local epochs of minibatch SGD (momentum in-graph).
+    fn train(
+        &mut self,
+        engine: &Engine,
+        task: &TrainTask,
+        params: ParamVec,
+    ) -> Result<(ParamVec, TrainStats)> {
+        local_sgd(engine, task, params, |eng, model, p, m, b, lr| {
+            let out = eng.train_step(model, p, m, b, lr)?;
+            Ok(out)
+        })
+    }
+
+    /// Compression stage: new params → wire update.
+    fn compress(
+        &mut self,
+        new_params: ParamVec,
+        _global: &ParamVec,
+    ) -> Result<Update> {
+        Ok(Update::Dense(new_params))
+    }
+
+    /// Encryption stage (identity by default).
+    fn encrypt(&mut self, update: Update) -> Result<Update> {
+        Ok(update)
+    }
+}
+
+/// FedAvg defaults, stateless.
+#[derive(Default)]
+pub struct DefaultClientFlow;
+
+impl ClientFlow for DefaultClientFlow {}
+
+/// Generic local-SGD loop used by the default and FedProx train stages.
+///
+/// `step` runs one minibatch update; epochs reshuffle batch order with the
+/// task seed so runs are reproducible.
+pub fn local_sgd<F>(
+    engine: &Engine,
+    task: &TrainTask,
+    mut params: ParamVec,
+    mut step: F,
+) -> Result<(ParamVec, TrainStats)>
+where
+    F: FnMut(
+        &Engine,
+        &str,
+        &ParamVec,
+        &ParamVec,
+        &crate::runtime::Batch,
+        f32,
+    ) -> Result<crate::runtime::StepOut>,
+{
+    let batches = task.data.batches(task.batch_size);
+    let mut momentum = ParamVec::zeros(params.len());
+    let mut rng = Rng::new(task.seed);
+    let mut stats = TrainStats::default();
+    for epoch in 0..task.local_epochs {
+        let mut order: Vec<usize> = (0..batches.len()).collect();
+        rng.shuffle(&mut order);
+        if epoch + 1 == task.local_epochs {
+            stats = TrainStats::default();
+        }
+        for &bi in &order {
+            let out = step(
+                engine,
+                &task.model,
+                &params,
+                &momentum,
+                &batches[bi],
+                task.lr,
+            )?;
+            params = out.params;
+            momentum = out.momentum;
+            stats.sum_loss += out.sum_loss;
+            stats.correct += out.correct;
+            stats.steps += 1;
+        }
+    }
+    stats.num_samples = task.data.num_samples;
+    Ok((params, stats))
+}
+
+/// Run the full client round: all stages in paper order.
+/// Returns (update, stats).
+pub fn run_client_round(
+    flow: &mut dyn ClientFlow,
+    engine: &Engine,
+    task: &TrainTask,
+) -> Result<(Update, TrainStats)> {
+    // download happens in the transport (local: Arc clone; remote: RPC).
+    let params = flow.decompress(&task.payload)?;
+    let (new_params, stats) = flow.train(engine, task, params)?;
+    let update = flow.compress(new_params, &task.payload.params)?;
+    let update = flow.encrypt(update)?;
+    // upload happens in the transport.
+    Ok((update, stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_helpers() {
+        let s = TrainStats { sum_loss: 10.0, correct: 8.0, num_samples: 16, steps: 4 };
+        assert!((s.avg_loss() - 0.625).abs() < 1e-12);
+        assert!((s.accuracy() - 0.5).abs() < 1e-12);
+        assert_eq!(TrainStats::default().avg_loss(), 0.0);
+    }
+}

@@ -1,0 +1,99 @@
+//! Training-flow abstraction (paper §V-B, Fig 3).
+//!
+//! The FL round is decomposed into granular stages — server: *selection →
+//! compression → distribution → decompression → aggregation*; client:
+//! *download → decompression → train → compression → encryption → upload*.
+//! Each stage is a trait method with a FedAvg default, so a new algorithm
+//! overrides exactly the stages it changes (Table VII: ~30% of surveyed
+//! papers change one stage, ~57% change two).
+
+pub mod client_stages;
+pub mod server_stages;
+
+pub use client_stages::{run_client_round, ClientFlow, DefaultClientFlow, TrainStats, TrainTask};
+pub use server_stages::{DefaultServerFlow, ModelPayload, ServerFlow};
+
+use crate::model::ParamVec;
+
+/// A client's upload: the unit the compression/encryption stages shape.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Update {
+    /// Full new parameter vector (FedAvg default).
+    Dense(ParamVec),
+    /// Sparse ternary delta w.r.t. the distributed global params (STC):
+    /// `new = global + sign · magnitude` at `indices`.
+    SparseTernary {
+        len: usize,
+        indices: Vec<u32>,
+        /// Sign bit per index (true ⇒ +magnitude).
+        signs: Vec<bool>,
+        magnitude: f32,
+    },
+    /// Opaque encrypted payload wrapping another update (encryption
+    /// stage demo); the server must de-obfuscate before decompression.
+    Masked { xor_key: u64, inner: Box<Update> },
+}
+
+impl Update {
+    /// Bytes this update costs on the wire (communication-cost metric).
+    pub fn wire_bytes(&self) -> usize {
+        match self {
+            Update::Dense(p) => p.len() * 4,
+            Update::SparseTernary { indices, signs, .. } => {
+                // u32 index + 1 bit sign each, plus magnitude + header.
+                indices.len() * 4 + signs.len().div_ceil(8) + 4 + 8
+            }
+            Update::Masked { inner, .. } => 8 + inner.wire_bytes(),
+        }
+    }
+
+    /// Reconstruct the dense parameter vector this update encodes.
+    pub fn to_dense(&self, global: &ParamVec) -> ParamVec {
+        match self {
+            Update::Dense(p) => p.clone(),
+            Update::SparseTernary { len, indices, signs, magnitude } => {
+                debug_assert_eq!(*len, global.len());
+                let mut out = global.clone();
+                for (i, &idx) in indices.iter().enumerate() {
+                    let delta = if signs[i] { *magnitude } else { -*magnitude };
+                    out[idx as usize] += delta;
+                }
+                out
+            }
+            Update::Masked { xor_key, inner } => {
+                // The default server flow refuses masked payloads; plugins
+                // that add encryption must unmask first. For the demo
+                // cipher, unmasking is symmetric.
+                let _ = xor_key;
+                inner.to_dense(global)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_wire_bytes_and_roundtrip() {
+        let g = ParamVec(vec![1.0; 10]);
+        let u = Update::Dense(ParamVec(vec![2.0; 10]));
+        assert_eq!(u.wire_bytes(), 40);
+        assert_eq!(u.to_dense(&g).0, vec![2.0; 10]);
+    }
+
+    #[test]
+    fn sparse_ternary_applies_signed_magnitude() {
+        let g = ParamVec(vec![0.0; 6]);
+        let u = Update::SparseTernary {
+            len: 6,
+            indices: vec![1, 4],
+            signs: vec![true, false],
+            magnitude: 0.5,
+        };
+        let d = u.to_dense(&g);
+        assert_eq!(d.0, vec![0.0, 0.5, 0.0, 0.0, -0.5, 0.0]);
+        assert!(u.wire_bytes() < 40, "sparse must beat dense for k≪P");
+    }
+}

@@ -1,0 +1,145 @@
+//! Server-side stages: selection → compression → distribution →
+//! decompression → aggregation (paper Fig 3, top row).
+
+use std::sync::Arc;
+
+use super::Update;
+use crate::error::{Error, Result};
+use crate::model::ParamVec;
+use crate::runtime::Engine;
+use crate::util::rng::Rng;
+
+/// The broadcast the distribution stage ships to each selected client.
+#[derive(Clone)]
+pub struct ModelPayload {
+    pub params: Arc<ParamVec>,
+    /// Serialized size on the wire (after the compression stage).
+    pub wire_bytes: usize,
+    pub round: usize,
+}
+
+/// The server half of the training-flow abstraction.
+pub trait ServerFlow: Send {
+    fn name(&self) -> &'static str {
+        "fedavg"
+    }
+
+    /// Selection stage: pick the round's cohort.
+    fn select(
+        &mut self,
+        num_clients: usize,
+        per_round: usize,
+        _round: usize,
+        rng: &mut Rng,
+    ) -> Vec<usize> {
+        rng.choose_indices(num_clients, per_round.min(num_clients))
+    }
+
+    /// Compression stage for the downlink broadcast.
+    fn compress_model(&mut self, params: Arc<ParamVec>, round: usize) -> ModelPayload {
+        let wire_bytes = params.len() * 4;
+        ModelPayload { params, wire_bytes, round }
+    }
+
+    /// Decompression stage for one uplink update.
+    fn decompress(&mut self, update: Update, global: &ParamVec) -> Result<ParamVec> {
+        if matches!(update, Update::Masked { .. }) {
+            return Err(Error::Runtime(
+                "default server flow cannot handle encrypted updates; \
+                 register a server plugin with a decryption stage"
+                    .into(),
+            ));
+        }
+        Ok(update.to_dense(global))
+    }
+
+    /// Aggregation stage: weighted FedAvg via the L1 Pallas kernel.
+    ///
+    /// `contributions` are (dense params, weight); weights are normalized
+    /// here so callers can pass raw sample counts.
+    fn aggregate(
+        &mut self,
+        engine: &Engine,
+        model: &str,
+        contributions: &[(ParamVec, f64)],
+    ) -> Result<ParamVec> {
+        if contributions.is_empty() {
+            return Err(Error::Runtime("aggregate: empty cohort".into()));
+        }
+        let total: f64 = contributions.iter().map(|(_, w)| w).sum();
+        if total <= 0.0 {
+            return Err(Error::Runtime("aggregate: zero total weight".into()));
+        }
+        let vectors: Vec<&[f32]> =
+            contributions.iter().map(|(p, _)| &p.0[..]).collect();
+        let weights: Vec<f32> = contributions
+            .iter()
+            .map(|(_, w)| (w / total) as f32)
+            .collect();
+        engine.aggregate(model, &vectors, &weights)
+    }
+}
+
+/// FedAvg defaults, stateless.
+#[derive(Default)]
+pub struct DefaultServerFlow;
+
+impl ServerFlow for DefaultServerFlow {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn selection_is_distinct_and_bounded() {
+        let mut f = DefaultServerFlow;
+        let mut rng = Rng::new(5);
+        let sel = f.select(100, 10, 0, &mut rng);
+        assert_eq!(sel.len(), 10);
+        let mut s = sel.clone();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), 10);
+        // per_round > population clamps.
+        assert_eq!(f.select(3, 10, 0, &mut rng).len(), 3);
+    }
+
+    #[test]
+    fn prop_selection_uniformly_covers_population() {
+        prop::check("selection-covers", 41, 10, |rng| {
+            let mut f = DefaultServerFlow;
+            let mut seen = vec![false; 30];
+            for round in 0..200 {
+                for c in f.select(30, 5, round, rng) {
+                    seen[c] = true;
+                }
+            }
+            crate::prop_assert!(
+                seen.iter().all(|&s| s),
+                "some client never selected in 200 rounds"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn masked_update_rejected_by_default_flow() {
+        let mut f = DefaultServerFlow;
+        let g = ParamVec(vec![0.0; 4]);
+        let u = Update::Masked {
+            xor_key: 7,
+            inner: Box::new(Update::Dense(ParamVec(vec![1.0; 4]))),
+        };
+        assert!(f.decompress(u, &g).is_err());
+    }
+
+    #[test]
+    fn payload_wire_bytes_is_dense_size() {
+        let mut f = DefaultServerFlow;
+        let p = Arc::new(ParamVec(vec![0.0; 100]));
+        let pl = f.compress_model(p, 3);
+        assert_eq!(pl.wire_bytes, 400);
+        assert_eq!(pl.round, 3);
+    }
+}

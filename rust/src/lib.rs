@@ -1,0 +1,41 @@
+//! # easyfl — a low-code federated learning platform
+//!
+//! Rust + JAX + Pallas reproduction of *"EasyFL: A Low-code Federated
+//! Learning Platform For Dummies"* (Zhuang et al., 2021). The platform is
+//! a three-layer stack: Pallas kernels (L1) and JAX models (L2) are
+//! AOT-compiled to HLO at build time; this crate (L3) is the entire
+//! runtime — coordinator, scheduler, simulation, tracking, remote
+//! communication and deployment. Python never runs on the training path.
+//!
+//! ## Quick start (the paper's three lines)
+//!
+//! ```no_run
+//! let session = easyfl::init(easyfl::Config::default()).unwrap();
+//! let report = session.run().unwrap();
+//! println!("accuracy: {:.2}%", report.final_accuracy * 100.0);
+//! ```
+//!
+//! See `examples/` for heterogeneity simulation, distributed-training
+//! optimization (GreedyAda), remote training and the application plugins
+//! (FedProx, STC, FedReID).
+
+pub mod algorithms;
+pub mod api;
+pub mod client;
+pub mod comm;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod deployment;
+pub mod flow;
+pub mod model;
+pub mod runtime;
+pub mod scheduler;
+pub mod simulation;
+pub mod tracking;
+pub mod error;
+pub mod util;
+
+pub use api::{init, Report, Session};
+pub use config::{Allocation, Config, DatasetKind, Partition};
+pub use error::{Error, Result};

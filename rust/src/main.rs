@@ -1,0 +1,338 @@
+//! easyfl — command-line launcher.
+//!
+//! Subcommands mirror the paper's execution APIs (Table II):
+//!   run       standalone / distributed training (`easyfl.run()`)
+//!   server    remote-training coordinator (`easyfl.start_server(args)`)
+//!   client    remote client service (`easyfl.start_client(args)`)
+//!   registry  service-discovery registry (§VII)
+//!   deploy    process-container deployment of a full federation (§VII)
+//!   info      artifact/platform inventory
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use easyfl::algorithms::{fedavg_client_factory, fedprox_client_factory, stc_client_factory};
+use easyfl::comm::{ClientService, RemoteCoordinator, Registry};
+use easyfl::config::{Allocation, Config, DatasetKind, Partition};
+use easyfl::deployment::Deployment;
+use easyfl::flow::DefaultServerFlow;
+use easyfl::tracking::Tracker;
+use easyfl::util::args::{usage, Args, Opt};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match argv.first().map(String::as_str) {
+        Some("run") => dispatch(cmd_run(&argv[1..])),
+        Some("server") => dispatch(cmd_server(&argv[1..])),
+        Some("client") => dispatch(cmd_client(&argv[1..])),
+        Some("registry") => dispatch(cmd_registry(&argv[1..])),
+        Some("deploy") => dispatch(cmd_deploy(&argv[1..])),
+        Some("info") => dispatch(cmd_info(&argv[1..])),
+        _ => {
+            eprintln!(
+                "easyfl — low-code federated learning platform\n\n\
+                 USAGE: easyfl <run|server|client|registry|deploy|info> [options]\n\
+                 Run a subcommand with --help for its options."
+            );
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn dispatch(result: easyfl::Result<()>) -> i32 {
+    match result {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+fn common_opts() -> Vec<Opt> {
+    vec![
+        Opt { name: "dataset", help: "femnist | shakespeare | cifar10", default: Some("femnist"), is_flag: false },
+        Opt { name: "partition", help: "iid | realistic | dir(a) | class(n)", default: Some("realistic"), is_flag: false },
+        Opt { name: "rounds", help: "training rounds R", default: Some("10"), is_flag: false },
+        Opt { name: "clients-per-round", help: "selected clients C", default: Some("10"), is_flag: false },
+        Opt { name: "num-clients", help: "federation size (0 = natural)", default: Some("0"), is_flag: false },
+        Opt { name: "local-epochs", help: "local epochs E", default: Some("10"), is_flag: false },
+        Opt { name: "batch-size", help: "minibatch size B (must match AOT)", default: Some("32"), is_flag: false },
+        Opt { name: "lr", help: "learning rate (0 = dataset default)", default: Some("0"), is_flag: false },
+        Opt { name: "devices", help: "simulated parallel devices M", default: Some("1"), is_flag: false },
+        Opt { name: "allocation", help: "greedyada | random | slowest", default: Some("greedyada"), is_flag: false },
+        Opt { name: "unbalanced", help: "simulate unbalanced data", default: None, is_flag: true },
+        Opt { name: "system-het", help: "simulate system heterogeneity", default: None, is_flag: true },
+        Opt { name: "virtual-clock", help: "no real straggler sleeps", default: None, is_flag: true },
+        Opt { name: "time-scale", help: "wait-time compression factor", default: Some("0.05"), is_flag: false },
+        Opt { name: "data-amount", help: "fraction of client data used", default: Some("1.0"), is_flag: false },
+        Opt { name: "max-samples", help: "per-client sample cap (0 = off)", default: Some("0"), is_flag: false },
+        Opt { name: "test-samples", help: "server test split size", default: Some("512"), is_flag: false },
+        Opt { name: "eval-every", help: "evaluate every n rounds", default: Some("1"), is_flag: false },
+        Opt { name: "seed", help: "base RNG seed", default: Some("42"), is_flag: false },
+        Opt { name: "artifacts", help: "AOT artifact directory", default: Some("artifacts"), is_flag: false },
+        Opt { name: "algorithm", help: "fedavg | fedprox | stc", default: Some("fedavg"), is_flag: false },
+        Opt { name: "fedprox-mu", help: "FedProx μ", default: Some("0.01"), is_flag: false },
+        Opt { name: "stc-sparsity", help: "STC kept fraction", default: Some("0.01"), is_flag: false },
+        Opt { name: "tracking-dir", help: "persist metrics JSON here", default: None, is_flag: false },
+        Opt { name: "config", help: "JSON config file (flags override it)", default: None, is_flag: false },
+        Opt { name: "help", help: "show help", default: None, is_flag: true },
+    ]
+}
+
+fn parse_config(a: &Args) -> easyfl::Result<Config> {
+    let mut cfg = match a.get("config") {
+        Some(path) => Config::from_file(std::path::Path::new(path))?,
+        None => Config::default(),
+    };
+    cfg.dataset = DatasetKind::parse(a.get("dataset").unwrap_or("femnist"))?;
+    cfg.model = cfg.dataset.default_model().to_string();
+    cfg.partition = Partition::parse(a.get("partition").unwrap_or("realistic"))?;
+    cfg.rounds = a.get_usize("rounds")?;
+    cfg.clients_per_round = a.get_usize("clients-per-round")?;
+    cfg.num_clients = a.get_usize("num-clients")?;
+    cfg.local_epochs = a.get_usize("local-epochs")?;
+    cfg.batch_size = a.get_usize("batch-size")?;
+    let lr = a.get_f64("lr")?;
+    cfg.lr = if lr > 0.0 {
+        lr
+    } else if cfg.dataset == DatasetKind::Shakespeare {
+        0.8
+    } else {
+        0.01
+    };
+    cfg.num_devices = a.get_usize("devices")?;
+    cfg.allocation = Allocation::parse(a.get("allocation").unwrap_or("greedyada"))?;
+    cfg.unbalanced = a.has_flag("unbalanced");
+    cfg.system_heterogeneity = a.has_flag("system-het");
+    cfg.virtual_clock = a.has_flag("virtual-clock");
+    cfg.time_scale = a.get_f64("time-scale")?;
+    cfg.data_amount = a.get_f64("data-amount")?;
+    cfg.max_samples = a.get_usize("max-samples")?;
+    cfg.test_samples = a.get_usize("test-samples")?;
+    cfg.eval_every = a.get_usize("eval-every")?;
+    cfg.seed = a.get_usize("seed")? as u64;
+    cfg.artifacts_dir = a.get("artifacts").unwrap_or("artifacts").into();
+    cfg.fedprox_mu = a.get_f64("fedprox-mu")?;
+    if let Some(dir) = a.get("tracking-dir") {
+        cfg.tracking_dir = Some(dir.into());
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn cmd_run(argv: &[String]) -> easyfl::Result<()> {
+    let opts = common_opts();
+    let a = Args::parse(argv, &opts)?;
+    if a.has_flag("help") {
+        println!("{}", usage("run", "Standalone / distributed FL training.", &opts));
+        return Ok(());
+    }
+    let cfg = parse_config(&a)?;
+    let mut session = easyfl::init(cfg.clone())?;
+    session = match a.get("algorithm").unwrap_or("fedavg") {
+        "fedavg" => session,
+        "fedprox" => session.register_client(fedprox_client_factory(cfg.fedprox_mu as f32)),
+        "stc" => session
+            .register_client(stc_client_factory(a.get_f64("stc-sparsity")?))
+            .register_server(Box::new(easyfl::algorithms::STCServerFlow)),
+        other => {
+            return Err(easyfl::Error::Config(format!("unknown algorithm {other:?}")))
+        }
+    };
+    let report = session.run_with(|server, _round| {
+        let t = server.tracker();
+        if let Some((r, loss, acc)) = t.loss_curve().last() {
+            println!(
+                "round {r:>3}  train-loss {loss:.4}  test-acc {}",
+                acc.map(|a| format!("{:.2}%", a * 100.0))
+                    .unwrap_or_else(|| "-".into())
+            );
+        }
+    })?;
+    println!(
+        "\nfinal accuracy {:.2}% | best {:.2}% | avg round {:.0} ms | comm {:.1} MiB",
+        report.final_accuracy * 100.0,
+        report.best_accuracy * 100.0,
+        report.avg_round_ms,
+        report.comm_bytes as f64 / (1024.0 * 1024.0)
+    );
+    Ok(())
+}
+
+fn cmd_registry(argv: &[String]) -> easyfl::Result<()> {
+    let opts = vec![
+        Opt { name: "port", help: "listen port", default: Some("7400"), is_flag: false },
+        Opt { name: "ttl-secs", help: "lease TTL", default: Some("10"), is_flag: false },
+        Opt { name: "help", help: "show help", default: None, is_flag: true },
+    ];
+    let a = Args::parse(argv, &opts)?;
+    if a.has_flag("help") {
+        println!("{}", usage("registry", "Service-discovery registry (§VII).", &opts));
+        return Ok(());
+    }
+    let addr = format!("127.0.0.1:{}", a.get_usize("port")?);
+    let server =
+        Registry::serve(&addr, Duration::from_secs(a.get_usize("ttl-secs")? as u64))?;
+    println!("registry listening on {}", server.addr());
+    loop {
+        std::thread::sleep(Duration::from_secs(3600));
+    }
+}
+
+fn cmd_client(argv: &[String]) -> easyfl::Result<()> {
+    let mut opts = common_opts();
+    opts.extend([
+        Opt { name: "port", help: "listen port (0 = ephemeral)", default: Some("0"), is_flag: false },
+        Opt { name: "registry", help: "registry address to register with", default: None, is_flag: false },
+        Opt { name: "client-index", help: "dataset client index served", default: Some("0"), is_flag: false },
+    ]);
+    let a = Args::parse(argv, &opts)?;
+    if a.has_flag("help") {
+        println!("{}", usage("client", "Remote client service (start_client).", &opts));
+        return Ok(());
+    }
+    let cfg = parse_config(&a)?;
+    let index = a.get_usize("client-index")?;
+    let bind = format!("127.0.0.1:{}", a.get_usize("port")?);
+    let service = ClientService::start(
+        &cfg,
+        index,
+        &bind,
+        a.get("registry"),
+        fedavg_client_factory(),
+    )?;
+    println!("client-{index} serving on {}", service.addr());
+    loop {
+        std::thread::sleep(Duration::from_secs(3600));
+    }
+}
+
+fn cmd_server(argv: &[String]) -> easyfl::Result<()> {
+    let mut opts = common_opts();
+    opts.extend([
+        Opt { name: "registry", help: "registry address for discovery", default: Some("127.0.0.1:7400"), is_flag: false },
+        Opt { name: "min-clients", help: "wait for at least this many", default: Some("1"), is_flag: false },
+        Opt { name: "wait-secs", help: "discovery timeout", default: Some("30"), is_flag: false },
+    ]);
+    let a = Args::parse(argv, &opts)?;
+    if a.has_flag("help") {
+        println!("{}", usage("server", "Remote-training coordinator (start_server).", &opts));
+        return Ok(());
+    }
+    let cfg = parse_config(&a)?;
+    let tracker = Arc::new(Tracker::new("remote-task"));
+    let mut coord =
+        RemoteCoordinator::new(cfg, Box::new(DefaultServerFlow), tracker.clone())?;
+    let registry = a.get("registry").unwrap().to_string();
+    let min_clients = a.get_usize("min-clients")?;
+    let deadline = std::time::Instant::now()
+        + Duration::from_secs(a.get_usize("wait-secs")? as u64);
+    loop {
+        let n = coord.discover(&registry)?;
+        if n >= min_clients {
+            println!("discovered {n} clients");
+            break;
+        }
+        if std::time::Instant::now() > deadline {
+            return Err(easyfl::Error::Comm(format!(
+                "only {n}/{min_clients} clients discovered before timeout"
+            )));
+        }
+        std::thread::sleep(Duration::from_millis(200));
+    }
+    coord.run()?;
+    println!(
+        "remote training done: final acc {:.2}%, avg round {:.0} ms",
+        tracker.final_accuracy().unwrap_or(0.0) * 100.0,
+        tracker.avg_round_ms()
+    );
+    Ok(())
+}
+
+fn cmd_deploy(argv: &[String]) -> easyfl::Result<()> {
+    let mut opts = common_opts();
+    opts.extend([
+        Opt { name: "clients", help: "client services to deploy", default: Some("4"), is_flag: false },
+        Opt { name: "base-port", help: "first port to allocate", default: Some("7500"), is_flag: false },
+    ]);
+    let a = Args::parse(argv, &opts)?;
+    if a.has_flag("help") {
+        println!("{}", usage("deploy", "Deploy a full federation as process containers.", &opts));
+        return Ok(());
+    }
+    let mut cfg = parse_config(&a)?;
+    let n = a.get_usize("clients")?;
+    if cfg.num_clients == 0 {
+        cfg.num_clients = n.max(cfg.clients_per_round);
+    }
+    cfg.clients_per_round = cfg.clients_per_round.min(n);
+
+    let mut deployment = Deployment::new(a.get_usize("base-port")? as u16);
+    let sw = std::time::Instant::now();
+    let registry_addr = deployment.deploy_registry()?;
+    println!("registry up at {registry_addr} ({:.1?})", sw.elapsed());
+    for i in 0..n {
+        deployment.deploy_client(&cfg, i, &registry_addr)?;
+    }
+    deployment.wait_all_ready(Duration::from_secs(30))?;
+    println!("{n} clients deployed + ready in {:.1?}", sw.elapsed());
+
+    let tracker = Arc::new(Tracker::new("deploy-task"));
+    let mut coord =
+        RemoteCoordinator::new(cfg, Box::new(DefaultServerFlow), tracker.clone())?;
+    let deadline = std::time::Instant::now() + Duration::from_secs(20);
+    while coord.discover(&registry_addr)? < n {
+        if std::time::Instant::now() > deadline {
+            return Err(easyfl::Error::Deploy("clients never registered".into()));
+        }
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    coord.run()?;
+    let avg_dist: f64 = {
+        let j = tracker.to_json();
+        let rounds = j.get("rounds").as_arr().map(|r| r.len()).unwrap_or(0);
+        if rounds == 0 {
+            0.0
+        } else {
+            j.get("rounds")
+                .as_arr()
+                .unwrap()
+                .iter()
+                .filter_map(|r| r.get("distribution_ms").as_f64())
+                .sum::<f64>()
+                / rounds as f64
+        }
+    };
+    println!(
+        "deployed training done: final acc {:.2}% | avg distribution latency {avg_dist:.1} ms",
+        tracker.final_accuracy().unwrap_or(0.0) * 100.0,
+    );
+    Ok(())
+}
+
+fn cmd_info(argv: &[String]) -> easyfl::Result<()> {
+    let opts = vec![
+        Opt { name: "artifacts", help: "artifact directory", default: Some("artifacts"), is_flag: false },
+        Opt { name: "help", help: "show help", default: None, is_flag: true },
+    ];
+    let a = Args::parse(argv, &opts)?;
+    if a.has_flag("help") {
+        println!("{}", usage("info", "Show artifact inventory.", &opts));
+        return Ok(());
+    }
+    let dir = std::path::PathBuf::from(a.get("artifacts").unwrap());
+    let engine = easyfl::runtime::Engine::new(&dir)?;
+    println!("easyfl platform — artifact inventory ({})", dir.display());
+    for model in ["mlp", "cnn", "charcnn"] {
+        match engine.meta(model) {
+            Ok(m) => println!(
+                "  {model:<8} P={:<8} B={} K={} classes={} input={:?} ({:?})",
+                m.param_count, m.batch, m.agg_k, m.classes, m.input_shape, m.input_dtype
+            ),
+            Err(e) => println!("  {model:<8} unavailable: {e}"),
+        }
+    }
+    Ok(())
+}

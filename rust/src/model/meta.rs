@@ -1,0 +1,240 @@
+//! `artifacts/<model>_meta.json` — the L2 ↔ L3 shape contract.
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+/// Element type of the model's input features.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InputDtype {
+    F32,
+    I32,
+}
+
+impl InputDtype {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(Self::F32),
+            "i32" => Ok(Self::I32),
+            other => Err(Error::Artifact(format!("bad input_dtype {other:?}"))),
+        }
+    }
+}
+
+/// One named parameter tensor in the flat layout.
+#[derive(Debug, Clone)]
+pub struct LayoutEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl LayoutEntry {
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Parsed model metadata.
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub model: String,
+    /// Total flat parameter count P.
+    pub param_count: usize,
+    /// AOT minibatch size B.
+    pub batch: usize,
+    /// AOT aggregation width K.
+    pub agg_k: usize,
+    /// Per-sample input shape (without the batch dimension).
+    pub input_shape: Vec<usize>,
+    pub input_dtype: InputDtype,
+    pub classes: usize,
+    pub layout: Vec<LayoutEntry>,
+    /// entry name → HLO file name.
+    files: Vec<(String, String)>,
+    pub init_file: String,
+    /// Directory the metadata was loaded from.
+    pub dir: PathBuf,
+}
+
+impl ModelMeta {
+    /// Load `<dir>/<model>_meta.json`.
+    pub fn load(dir: &Path, model: &str) -> Result<ModelMeta> {
+        let path = dir.join(format!("{model}_meta.json"));
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Artifact(format!(
+                "{}: {e} (run `make artifacts`?)",
+                path.display()
+            ))
+        })?;
+        let v = Json::parse(&text)?;
+        let layout = v
+            .get("layout")
+            .as_arr()
+            .ok_or_else(|| Error::Artifact("meta: missing layout".into()))?
+            .iter()
+            .map(|e| {
+                let pair = e.as_arr().ok_or_else(|| {
+                    Error::Artifact("meta: bad layout entry".into())
+                })?;
+                let name = pair[0]
+                    .as_str()
+                    .ok_or_else(|| Error::Artifact("meta: bad layout name".into()))?
+                    .to_string();
+                let shape = pair[1]
+                    .as_arr()
+                    .ok_or_else(|| Error::Artifact("meta: bad layout shape".into()))?
+                    .iter()
+                    .map(|d| {
+                        d.as_usize().ok_or_else(|| {
+                            Error::Artifact("meta: bad layout dim".into())
+                        })
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                Ok(LayoutEntry { name, shape })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let files = v
+            .get("files")
+            .as_obj()
+            .ok_or_else(|| Error::Artifact("meta: missing files".into()))?
+            .iter()
+            .map(|(k, f)| {
+                Ok((
+                    k.clone(),
+                    f.as_str()
+                        .ok_or_else(|| Error::Artifact("meta: bad file".into()))?
+                        .to_string(),
+                ))
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let meta = ModelMeta {
+            model: v.req_str("model")?,
+            param_count: v.req_usize("param_count")?,
+            batch: v.req_usize("batch")?,
+            agg_k: v.req_usize("agg_k")?,
+            input_shape: v
+                .get("input_shape")
+                .as_arr()
+                .ok_or_else(|| Error::Artifact("meta: missing input_shape".into()))?
+                .iter()
+                .map(|d| {
+                    d.as_usize().ok_or_else(|| {
+                        Error::Artifact("meta: bad input dim".into())
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?,
+            input_dtype: InputDtype::parse(&v.req_str("input_dtype")?)?,
+            classes: v.req_usize("classes")?,
+            layout,
+            files,
+            init_file: v.req_str("init")?,
+            dir: dir.to_path_buf(),
+        };
+        meta.validate()?;
+        Ok(meta)
+    }
+
+    /// Cross-check the layout against the declared parameter count.
+    pub fn validate(&self) -> Result<()> {
+        let total: usize = self.layout.iter().map(LayoutEntry::len).sum();
+        if total != self.param_count {
+            return Err(Error::Artifact(format!(
+                "meta {}: layout sums to {total}, param_count says {}",
+                self.model, self.param_count
+            )));
+        }
+        if self.batch == 0 || self.agg_k == 0 || self.classes == 0 {
+            return Err(Error::Artifact(format!(
+                "meta {}: zero batch/agg_k/classes",
+                self.model
+            )));
+        }
+        Ok(())
+    }
+
+    /// Per-sample feature element count.
+    pub fn input_len(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+
+    /// Path of the HLO file for an entry point.
+    pub fn hlo_path(&self, entry: &str) -> Result<PathBuf> {
+        self.files
+            .iter()
+            .find(|(k, _)| k == entry)
+            .map(|(_, f)| self.dir.join(f))
+            .ok_or_else(|| {
+                Error::Artifact(format!(
+                    "model {} has no entry point {entry:?}",
+                    self.model
+                ))
+            })
+    }
+
+    /// Path of the initial-parameter artifact.
+    pub fn init_path(&self) -> PathBuf {
+        self.dir.join(&self.init_file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_meta(dir: &Path) {
+        std::fs::write(
+            dir.join("toy_meta.json"),
+            r#"{
+              "model": "toy", "param_count": 10, "batch": 2, "agg_k": 4,
+              "input_shape": [5], "input_dtype": "f32", "classes": 3,
+              "layout": [["w", [5, 2]]],
+              "files": {"train": "toy_train.hlo.txt"},
+              "init": "toy_init.bin"
+            }"#,
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn loads_and_validates() {
+        let dir = std::env::temp_dir().join("easyfl_meta_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        write_meta(&dir);
+        let m = ModelMeta::load(&dir, "toy").unwrap();
+        assert_eq!(m.param_count, 10);
+        assert_eq!(m.input_len(), 5);
+        assert_eq!(m.input_dtype, InputDtype::F32);
+        assert!(m.hlo_path("train").unwrap().ends_with("toy_train.hlo.txt"));
+        assert!(m.hlo_path("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_inconsistent_layout() {
+        let dir = std::env::temp_dir().join("easyfl_meta_test_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("bad_meta.json"),
+            r#"{
+              "model": "bad", "param_count": 99, "batch": 2, "agg_k": 4,
+              "input_shape": [5], "input_dtype": "f32", "classes": 3,
+              "layout": [["w", [5, 2]]],
+              "files": {}, "init": "x.bin"
+            }"#,
+        )
+        .unwrap();
+        assert!(ModelMeta::load(&dir, "bad").is_err());
+    }
+
+    #[test]
+    fn missing_file_mentions_make_artifacts() {
+        let err = ModelMeta::load(Path::new("/nonexistent"), "mlp").unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

@@ -1,0 +1,12 @@
+//! Model manager (paper §IV-A): artifact metadata and flat parameter
+//! vectors.
+//!
+//! Rust never sees a model graph — only the flat `f32[P]` parameter vector
+//! contract described in DESIGN.md, plus the metadata the AOT compiler
+//! records in `artifacts/<model>_meta.json`.
+
+pub mod meta;
+pub mod params;
+
+pub use meta::{InputDtype, ModelMeta};
+pub use params::ParamVec;

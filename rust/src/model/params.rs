@@ -1,0 +1,128 @@
+//! Flat parameter vector — the unit of state the platform moves around.
+
+use std::ops::{Deref, DerefMut};
+
+use crate::error::{Error, Result};
+use crate::util::bytes;
+
+/// A flat `f32[P]` parameter (or momentum/update) vector.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamVec(pub Vec<f32>);
+
+impl ParamVec {
+    /// All-zero vector (momentum buffers, accumulators).
+    pub fn zeros(n: usize) -> ParamVec {
+        ParamVec(vec![0.0; n])
+    }
+
+    /// Load from a little-endian f32 artifact file.
+    pub fn from_file(path: &std::path::Path, expect_len: usize) -> Result<ParamVec> {
+        let v = bytes::read_f32_file(path)?;
+        if v.len() != expect_len {
+            return Err(Error::Artifact(format!(
+                "{}: has {} params, expected {expect_len}",
+                path.display(),
+                v.len()
+            )));
+        }
+        Ok(ParamVec(v))
+    }
+
+    pub fn len(&self) -> usize {
+        self.0.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.0.is_empty()
+    }
+
+    /// Euclidean norm (f64 accumulation for stability).
+    pub fn l2(&self) -> f64 {
+        self.0.iter().map(|v| (*v as f64) * (*v as f64)).sum::<f64>().sqrt()
+    }
+
+    /// `self += alpha * other` (delta application).
+    pub fn axpy(&mut self, alpha: f32, other: &ParamVec) {
+        assert_eq!(self.len(), other.len(), "axpy length mismatch");
+        for (a, b) in self.0.iter_mut().zip(other.0.iter()) {
+            *a += alpha * b;
+        }
+    }
+
+    /// Elementwise difference `self - other` (update extraction).
+    pub fn delta(&self, other: &ParamVec) -> ParamVec {
+        assert_eq!(self.len(), other.len(), "delta length mismatch");
+        ParamVec(
+            self.0
+                .iter()
+                .zip(other.0.iter())
+                .map(|(a, b)| a - b)
+                .collect(),
+        )
+    }
+
+    /// True when all entries are finite (divergence guard).
+    pub fn is_finite(&self) -> bool {
+        self.0.iter().all(|v| v.is_finite())
+    }
+}
+
+impl Deref for ParamVec {
+    type Target = [f32];
+
+    fn deref(&self) -> &[f32] {
+        &self.0
+    }
+}
+
+impl DerefMut for ParamVec {
+    fn deref_mut(&mut self) -> &mut [f32] {
+        &mut self.0
+    }
+}
+
+impl From<Vec<f32>> for ParamVec {
+    fn from(v: Vec<f32>) -> Self {
+        ParamVec(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_l2_axpy_delta() {
+        let mut a = ParamVec::zeros(4);
+        assert_eq!(a.l2(), 0.0);
+        let b = ParamVec(vec![1.0, 2.0, 2.0, 0.0]);
+        a.axpy(2.0, &b);
+        assert_eq!(a.0, vec![2.0, 4.0, 4.0, 0.0]);
+        assert!((a.l2() - 6.0).abs() < 1e-9);
+        let d = a.delta(&b);
+        assert_eq!(d.0, vec![1.0, 2.0, 2.0, 0.0]);
+    }
+
+    #[test]
+    fn finite_guard() {
+        assert!(ParamVec(vec![1.0, -2.0]).is_finite());
+        assert!(!ParamVec(vec![1.0, f32::NAN]).is_finite());
+        assert!(!ParamVec(vec![f32::INFINITY]).is_finite());
+    }
+
+    #[test]
+    fn file_roundtrip_and_length_check() {
+        let dir = std::env::temp_dir().join("easyfl_params_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("p.bin");
+        let vals = [0.5f32, -1.5, 3.25];
+        let mut raw = Vec::new();
+        for v in vals {
+            raw.extend_from_slice(&v.to_le_bytes());
+        }
+        std::fs::write(&path, raw).unwrap();
+        let p = ParamVec::from_file(&path, 3).unwrap();
+        assert_eq!(&p.0, &vals);
+        assert!(ParamVec::from_file(&path, 4).is_err());
+    }
+}

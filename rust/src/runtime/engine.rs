@@ -1,0 +1,353 @@
+//! The execution engine: HLO text → PJRT executable → typed entry points.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use crate::error::{Error, Result};
+use crate::model::{InputDtype, ModelMeta, ParamVec};
+
+/// Feature payload for a batch: matches the model's `input_dtype`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Features {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Features {
+    pub fn len(&self) -> usize {
+        match self {
+            Features::F32(v) => v.len(),
+            Features::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype(&self) -> InputDtype {
+        match self {
+            Features::F32(_) => InputDtype::F32,
+            Features::I32(_) => InputDtype::I32,
+        }
+    }
+}
+
+/// A materialized minibatch (fixed size B, wrap-around padded + masked).
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub x: Features,
+    pub y: Vec<i32>,
+    pub mask: Vec<f32>,
+}
+
+/// Output of one train/fedprox step.
+#[derive(Debug)]
+pub struct StepOut {
+    pub params: ParamVec,
+    pub momentum: ParamVec,
+    pub sum_loss: f64,
+    pub correct: f64,
+}
+
+/// Per-thread PJRT engine with a compile-once executable cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    metas: RefCell<HashMap<String, Rc<ModelMeta>>>,
+    execs: RefCell<HashMap<(String, &'static str), Rc<xla::PjRtLoadedExecutable>>>,
+    /// Executions performed (profiling / Table VI bookkeeping).
+    pub exec_count: std::cell::Cell<u64>,
+}
+
+impl Engine {
+    /// Create an engine over an artifact directory.
+    pub fn new(artifacts_dir: &Path) -> Result<Engine> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Engine {
+            client,
+            dir: artifacts_dir.to_path_buf(),
+            metas: RefCell::new(HashMap::new()),
+            execs: RefCell::new(HashMap::new()),
+            exec_count: std::cell::Cell::new(0),
+        })
+    }
+
+    /// Load (and cache) a model's metadata.
+    pub fn meta(&self, model: &str) -> Result<Rc<ModelMeta>> {
+        if let Some(m) = self.metas.borrow().get(model) {
+            return Ok(m.clone());
+        }
+        let m = Rc::new(ModelMeta::load(&self.dir, model)?);
+        self.metas.borrow_mut().insert(model.to_string(), m.clone());
+        Ok(m)
+    }
+
+    /// Initial parameters as produced by the Python compile path.
+    pub fn init_params(&self, model: &str) -> Result<ParamVec> {
+        let meta = self.meta(model)?;
+        ParamVec::from_file(&meta.init_path(), meta.param_count)
+    }
+
+    /// Compile-once executable lookup.
+    fn exec(
+        &self,
+        model: &str,
+        entry: &'static str,
+    ) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        let key = (model.to_string(), entry);
+        if let Some(e) = self.execs.borrow().get(&key) {
+            return Ok(e.clone());
+        }
+        let meta = self.meta(model)?;
+        let path = meta.hlo_path(entry)?;
+        let path_str = path
+            .to_str()
+            .ok_or_else(|| Error::Artifact("non-utf8 artifact path".into()))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(self.client.compile(&comp)?);
+        self.execs.borrow_mut().insert(key, exe.clone());
+        Ok(exe)
+    }
+
+    /// Force compilation of the given entry points (warm-up).
+    pub fn warm_up(&self, model: &str, entries: &[&'static str]) -> Result<()> {
+        for e in entries {
+            self.exec(model, e)?;
+        }
+        Ok(())
+    }
+
+    fn f32_literal(&self, data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+        debug_assert_eq!(dims.iter().product::<usize>(), data.len());
+        // SAFETY: f32 slice reinterpreted as bytes; host is little-endian
+        // (asserted at engine construction on exotic targets).
+        let bytes = unsafe {
+            std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+        };
+        Ok(xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::F32,
+            dims,
+            bytes,
+        )?)
+    }
+
+    fn i32_literal(&self, data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
+        debug_assert_eq!(dims.iter().product::<usize>(), data.len());
+        let bytes = unsafe {
+            std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+        };
+        Ok(xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::S32,
+            dims,
+            bytes,
+        )?)
+    }
+
+    fn x_literal(&self, meta: &ModelMeta, x: &Features) -> Result<xla::Literal> {
+        let mut dims = vec![meta.batch];
+        dims.extend_from_slice(&meta.input_shape);
+        match (x, meta.input_dtype) {
+            (Features::F32(v), InputDtype::F32) => self.f32_literal(v, &dims),
+            (Features::I32(v), InputDtype::I32) => self.i32_literal(v, &dims),
+            _ => Err(Error::Runtime(format!(
+                "feature dtype {:?} mismatches model {}",
+                x.dtype(),
+                meta.model
+            ))),
+        }
+    }
+
+    fn run(
+        &self,
+        model: &str,
+        entry: &'static str,
+        args: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let exe = self.exec(model, entry)?;
+        self.exec_count.set(self.exec_count.get() + 1);
+        let result = exe.execute::<xla::Literal>(args)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        Ok(tuple.to_tuple()?)
+    }
+
+    fn batch_args(
+        &self,
+        meta: &ModelMeta,
+        batch: &Batch,
+    ) -> Result<[xla::Literal; 3]> {
+        if batch.y.len() != meta.batch || batch.mask.len() != meta.batch {
+            return Err(Error::Runtime(format!(
+                "batch size {} != AOT batch {}",
+                batch.y.len(),
+                meta.batch
+            )));
+        }
+        Ok([
+            self.x_literal(meta, &batch.x)?,
+            self.i32_literal(&batch.y, &[meta.batch])?,
+            self.f32_literal(&batch.mask, &[meta.batch])?,
+        ])
+    }
+
+    fn scalar1(lit: &xla::Literal) -> Result<f64> {
+        Ok(lit.to_vec::<f32>()?[0] as f64)
+    }
+
+    /// One SGD-with-momentum minibatch step (L2 `train` entry point).
+    pub fn train_step(
+        &self,
+        model: &str,
+        params: &ParamVec,
+        momentum: &ParamVec,
+        batch: &Batch,
+        lr: f32,
+    ) -> Result<StepOut> {
+        let meta = self.meta(model)?;
+        let [x, y, mask] = self.batch_args(&meta, batch)?;
+        let p = self.f32_literal(params, &[meta.param_count])?;
+        let m = self.f32_literal(momentum, &[meta.param_count])?;
+        let lr_l = self.f32_literal(&[lr], &[1])?;
+        let outs = self.run(model, "train", &[p, m, x, y, mask, lr_l])?;
+        self.step_out(outs)
+    }
+
+    /// FedProx local step (adds the proximal pull towards `global`).
+    pub fn fedprox_step(
+        &self,
+        model: &str,
+        params: &ParamVec,
+        global: &ParamVec,
+        momentum: &ParamVec,
+        batch: &Batch,
+        lr: f32,
+        mu: f32,
+    ) -> Result<StepOut> {
+        let meta = self.meta(model)?;
+        let [x, y, mask] = self.batch_args(&meta, batch)?;
+        let p = self.f32_literal(params, &[meta.param_count])?;
+        let g = self.f32_literal(global, &[meta.param_count])?;
+        let m = self.f32_literal(momentum, &[meta.param_count])?;
+        let lr_l = self.f32_literal(&[lr], &[1])?;
+        let mu_l = self.f32_literal(&[mu], &[1])?;
+        let outs = self.run(model, "fedprox", &[p, g, m, x, y, mask, lr_l, mu_l])?;
+        self.step_out(outs)
+    }
+
+    fn step_out(&self, outs: Vec<xla::Literal>) -> Result<StepOut> {
+        if outs.len() != 4 {
+            return Err(Error::Runtime(format!(
+                "train entry returned {} outputs, expected 4",
+                outs.len()
+            )));
+        }
+        Ok(StepOut {
+            params: ParamVec(outs[0].to_vec::<f32>()?),
+            momentum: ParamVec(outs[1].to_vec::<f32>()?),
+            sum_loss: Self::scalar1(&outs[2])?,
+            correct: Self::scalar1(&outs[3])?,
+        })
+    }
+
+    /// Masked evaluation: returns (sum_loss, correct_count).
+    pub fn eval_step(
+        &self,
+        model: &str,
+        params: &ParamVec,
+        batch: &Batch,
+    ) -> Result<(f64, f64)> {
+        let meta = self.meta(model)?;
+        let [x, y, mask] = self.batch_args(&meta, batch)?;
+        let p = self.f32_literal(params, &[meta.param_count])?;
+        let outs = self.run(model, "eval", &[p, x, y, mask])?;
+        if outs.len() != 2 {
+            return Err(Error::Runtime("eval returned wrong arity".into()));
+        }
+        Ok((Self::scalar1(&outs[0])?, Self::scalar1(&outs[1])?))
+    }
+
+    /// Weighted aggregation via the L1 Pallas kernel.
+    ///
+    /// Handles any cohort size: ≤K in one call (zero-padded), larger
+    /// cohorts in chunks whose partial sums are combined with weight 1.
+    pub fn aggregate(
+        &self,
+        model: &str,
+        vectors: &[&[f32]],
+        weights: &[f32],
+    ) -> Result<ParamVec> {
+        let meta = self.meta(model)?;
+        if vectors.len() != weights.len() || vectors.is_empty() {
+            return Err(Error::Runtime(format!(
+                "aggregate: {} vectors vs {} weights",
+                vectors.len(),
+                weights.len()
+            )));
+        }
+        for v in vectors {
+            if v.len() != meta.param_count {
+                return Err(Error::Runtime(format!(
+                    "aggregate: vector of len {} != P {}",
+                    v.len(),
+                    meta.param_count
+                )));
+            }
+        }
+        let k = meta.agg_k;
+        if vectors.len() <= k {
+            return self.aggregate_chunk(&meta, vectors, weights);
+        }
+        // Chunked: partial weighted sums combine associatively.
+        let mut partials: Vec<ParamVec> = Vec::new();
+        for (vs, ws) in vectors.chunks(k).zip(weights.chunks(k)) {
+            partials.push(self.aggregate_chunk(&meta, vs, ws)?);
+        }
+        let refs: Vec<&[f32]> = partials.iter().map(|p| &p.0[..]).collect();
+        let ones = vec![1.0f32; refs.len()];
+        self.aggregate(model, &refs, &ones)
+    }
+
+    fn aggregate_chunk(
+        &self,
+        meta: &ModelMeta,
+        vectors: &[&[f32]],
+        weights: &[f32],
+    ) -> Result<ParamVec> {
+        let k = meta.agg_k;
+        let p = meta.param_count;
+        debug_assert!(vectors.len() <= k);
+        let mut stack = vec![0.0f32; k * p];
+        for (row, v) in vectors.iter().enumerate() {
+            stack[row * p..(row + 1) * p].copy_from_slice(v);
+        }
+        let mut wts = vec![0.0f32; k];
+        wts[..weights.len()].copy_from_slice(weights);
+        let s = self.f32_literal(&stack, &[k, p])?;
+        let w = self.f32_literal(&wts, &[k])?;
+        let outs = self.run(&meta.model, "aggregate", &[s, w])?;
+        Ok(ParamVec(outs[0].to_vec::<f32>()?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Unit tests here cover argument validation; numeric integration
+    //! tests against real artifacts live in rust/tests/runtime_golden.rs.
+    use super::*;
+
+    #[test]
+    fn features_dtype_and_len() {
+        assert_eq!(Features::F32(vec![1.0; 4]).len(), 4);
+        assert_eq!(Features::I32(vec![1; 3]).dtype(), InputDtype::I32);
+        assert!(Features::F32(vec![]).is_empty());
+    }
+
+    #[test]
+    fn engine_errors_on_missing_artifacts() {
+        let e = Engine::new(Path::new("/nonexistent_dir")).unwrap();
+        assert!(e.meta("mlp").is_err());
+    }
+}

@@ -1,0 +1,13 @@
+//! PJRT runtime: load AOT artifacts and execute them on the hot path.
+//!
+//! One [`Engine`] owns a PJRT CPU client plus a compile-once cache of
+//! loaded executables. The `xla` crate's client is `Rc`-based (not
+//! `Send`), so easyfl follows a **engine-per-device-thread** architecture:
+//! every simulated device (worker thread) constructs its own `Engine`;
+//! compiled executables are reused for the whole process lifetime, which
+//! is the platform's key overhead win over re-compiling frameworks
+//! (Table VI reproduction).
+
+pub mod engine;
+
+pub use engine::{Batch, Engine, Features, StepOut};

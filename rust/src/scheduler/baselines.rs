@@ -1,0 +1,167 @@
+//! The paper's allocation baselines (Fig 5): random and slowest-together.
+
+use std::collections::HashMap;
+
+use super::{Groups, Strategy};
+use crate::util::rng::Rng;
+
+/// Random allocation: shuffle, then deal ≈K/M clients per device.
+pub struct RandomAlloc;
+
+impl Strategy for RandomAlloc {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+
+    fn allocate(&mut self, clients: &[usize], m: usize, rng: &mut Rng) -> Groups {
+        assert!(m > 0);
+        let mut order = clients.to_vec();
+        rng.shuffle(&mut order);
+        chunk_contiguous(&order, m)
+    }
+}
+
+/// Slowest allocation: sort by (measured) time descending and pack
+/// contiguous chunks — co-locating the stragglers on one device, the
+/// paper's pathological baseline.
+pub struct SlowestAlloc {
+    times: HashMap<usize, f64>,
+    default_ms: f64,
+}
+
+impl SlowestAlloc {
+    pub fn new(default_ms: f64) -> SlowestAlloc {
+        SlowestAlloc { times: HashMap::new(), default_ms }
+    }
+
+    fn time(&self, c: usize) -> f64 {
+        *self.times.get(&c).unwrap_or(&self.default_ms)
+    }
+}
+
+impl Strategy for SlowestAlloc {
+    fn name(&self) -> &'static str {
+        "slowest"
+    }
+
+    fn allocate(&mut self, clients: &[usize], m: usize, _rng: &mut Rng) -> Groups {
+        assert!(m > 0);
+        let mut order = clients.to_vec();
+        order.sort_by(|&a, &b| {
+            self.time(b).partial_cmp(&self.time(a)).unwrap().then(a.cmp(&b))
+        });
+        chunk_contiguous(&order, m)
+    }
+
+    fn observe(&mut self, measured: &[(usize, f64)]) {
+        for &(c, t) in measured {
+            self.times.insert(c, t);
+        }
+    }
+
+    fn predicted_ms(&self, client: usize) -> Option<f64> {
+        Some(self.time(client))
+    }
+}
+
+/// Deal ≈len/M contiguous chunks (the paper's "around 20/M clients").
+fn chunk_contiguous(order: &[usize], m: usize) -> Groups {
+    let mut groups: Groups = vec![Vec::new(); m];
+    if order.is_empty() {
+        return groups;
+    }
+    let base = order.len() / m;
+    let extra = order.len() % m;
+    let mut it = order.iter();
+    for (d, group) in groups.iter_mut().enumerate() {
+        let take = base + usize::from(d < extra);
+        group.extend(it.by_ref().take(take).copied());
+    }
+    groups
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::{is_partition, makespan};
+    use crate::util::prop;
+
+    #[test]
+    fn random_is_partition_with_even_chunks() {
+        let mut s = RandomAlloc;
+        let cohort: Vec<usize> = (0..20).collect();
+        let groups = s.allocate(&cohort, 4, &mut Rng::new(3));
+        assert!(is_partition(&groups, &cohort));
+        assert!(groups.iter().all(|g| g.len() == 5));
+    }
+
+    #[test]
+    fn slowest_packs_stragglers_together() {
+        let mut s = SlowestAlloc::new(10.0);
+        // Clients 0..3 are very slow.
+        s.observe(&[(0, 100.0), (1, 95.0), (2, 90.0), (3, 85.0)]);
+        let cohort: Vec<usize> = (0..8).collect();
+        let groups = s.allocate(&cohort, 2, &mut Rng::new(1));
+        assert!(is_partition(&groups, &cohort));
+        // First chunk holds exactly the four slow clients.
+        let mut first = groups[0].clone();
+        first.sort_unstable();
+        assert_eq!(first, vec![0, 1, 2, 3]);
+        // And its makespan dominates.
+        let t = |c: usize| s.time(c);
+        assert!(groups[0].iter().map(|&c| t(c)).sum::<f64>()
+            > groups[1].iter().map(|&c| t(c)).sum::<f64>());
+    }
+
+    #[test]
+    fn prop_baselines_always_partition() {
+        prop::check("baselines-partition", 31, 50, |rng| {
+            let n = rng.below(50) as usize;
+            let m = 1 + rng.below(8) as usize;
+            let cohort: Vec<usize> = (0..n).map(|i| i * 3).collect();
+            let g1 = RandomAlloc.allocate(&cohort, m, rng);
+            let mut sa = SlowestAlloc::new(5.0);
+            let g2 = sa.allocate(&cohort, m, rng);
+            crate::prop_assert!(is_partition(&g1, &cohort), "random not partition");
+            crate::prop_assert!(is_partition(&g2, &cohort), "slowest not partition");
+            // Chunk sizes differ by at most 1.
+            for g in [&g1, &g2] {
+                let sizes: Vec<usize> = g.iter().map(Vec::len).collect();
+                let min = sizes.iter().min().unwrap();
+                let max = sizes.iter().max().unwrap();
+                crate::prop_assert!(max - min <= 1, "uneven chunks {sizes:?}");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn greedy_beats_slowest_on_heterogeneous_times() {
+        // The Fig 5 ordering at makespan level: greedy ≤ random ≤ slowest
+        // on a heavy-tailed time distribution (averaged over seeds).
+        let mut rng = Rng::new(77);
+        let mut sums = [0.0f64; 3];
+        for trial in 0..30 {
+            let n = 20;
+            let times: Vec<f64> = (0..n)
+                .map(|_| 50.0 * rng.log_normal(0.0, 1.0))
+                .collect();
+            let cohort: Vec<usize> = (0..n).collect();
+            let measured: Vec<(usize, f64)> =
+                times.iter().enumerate().map(|(i, &t)| (i, t)).collect();
+
+            let mut g = crate::scheduler::GreedyAda::new(50.0, 1.0);
+            g.observe(&measured);
+            let mut r = RandomAlloc;
+            let mut s = SlowestAlloc::new(50.0);
+            s.observe(&measured);
+
+            let mut rr = Rng::new(1000 + trial);
+            sums[0] += makespan(&g.allocate(&cohort, 4, &mut rr), |c| times[c]);
+            sums[1] += makespan(&r.allocate(&cohort, 4, &mut rr), |c| times[c]);
+            sums[2] += makespan(&s.allocate(&cohort, 4, &mut rr), |c| times[c]);
+        }
+        assert!(sums[0] < sums[1], "greedy {} !< random {}", sums[0], sums[1]);
+        assert!(sums[1] < sums[2], "random {} !< slowest {}", sums[1], sums[2]);
+    }
+}

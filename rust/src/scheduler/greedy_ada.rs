@@ -1,0 +1,227 @@
+//! Greedy Allocation with Adaptive Profiling — the paper's Algorithm 1.
+//!
+//! LPT greedy: sort the cohort by (estimated) training time descending and
+//! assign each client to the device with the smallest accumulated load —
+//! the classic Longest-Processing-Time heuristic, ≤ (4/3 − 1/(3M))·OPT
+//! (Graham 1969). Unknown client times start at the configurable default
+//! `t`; after each round, measured times mark clients as *profiled* and
+//! `t` is updated by the momentum rule of Algorithm 1 lines 26–27:
+//! `t ← m·avg(measured) + (1−m)·t`.
+
+use std::collections::HashMap;
+
+use super::{Groups, Strategy};
+use crate::util::rng::Rng;
+
+/// Algorithm 1 state.
+pub struct GreedyAda {
+    /// Measured per-client times (c.time for profiled clients).
+    profiled: HashMap<usize, f64>,
+    /// Default time `t` for unprofiled clients.
+    default_ms: f64,
+    /// Update momentum `m` ∈ [0,1]; m=1 ⇒ trust measurements only.
+    momentum: f64,
+}
+
+impl GreedyAda {
+    pub fn new(default_ms: f64, momentum: f64) -> GreedyAda {
+        GreedyAda {
+            profiled: HashMap::new(),
+            default_ms: default_ms.max(1e-9),
+            momentum: momentum.clamp(0.0, 1.0),
+        }
+    }
+
+    /// Estimated time for a client (Algorithm 1 lines 7–9).
+    pub fn estimate_ms(&self, client: usize) -> f64 {
+        *self.profiled.get(&client).unwrap_or(&self.default_ms)
+    }
+
+    /// Number of clients profiled so far.
+    pub fn profiled_count(&self) -> usize {
+        self.profiled.len()
+    }
+
+    /// Current default time `t`.
+    pub fn default_ms(&self) -> f64 {
+        self.default_ms
+    }
+}
+
+impl Strategy for GreedyAda {
+    fn name(&self) -> &'static str {
+        "greedyada"
+    }
+
+    fn allocate(&mut self, clients: &[usize], m: usize, _rng: &mut Rng) -> Groups {
+        assert!(m > 0);
+        // Sort by estimated time, descending (Algorithm 1 line 3).
+        let mut order: Vec<usize> = clients.to_vec();
+        order.sort_by(|&a, &b| {
+            self.estimate_ms(b)
+                .partial_cmp(&self.estimate_ms(a))
+                .unwrap()
+                .then(a.cmp(&b)) // deterministic tie-break
+        });
+        // Greedy min-load assignment (lines 10–12). M is small (≤ 64);
+        // a linear argmin beats a heap at this size.
+        let mut groups: Groups = vec![Vec::new(); m];
+        let mut load = vec![0.0f64; m];
+        for c in order {
+            let dev = load
+                .iter()
+                .enumerate()
+                .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap();
+            load[dev] += self.estimate_ms(c);
+            groups[dev].push(c);
+        }
+        groups
+    }
+
+    /// ADAPTIVE_PROFILING (Algorithm 1 lines 16–29).
+    fn observe(&mut self, measured: &[(usize, f64)]) {
+        if measured.is_empty() {
+            return;
+        }
+        for &(c, t) in measured {
+            self.profiled.insert(c, t);
+        }
+        let avg = measured.iter().map(|&(_, t)| t).sum::<f64>()
+            / measured.len() as f64;
+        self.default_ms = avg * self.momentum + self.default_ms * (1.0 - self.momentum);
+    }
+
+    fn predicted_ms(&self, client: usize) -> Option<f64> {
+        Some(self.estimate_ms(client))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::{is_partition, makespan};
+    use crate::util::prop;
+
+    fn rng() -> Rng {
+        Rng::new(17)
+    }
+
+    #[test]
+    fn lpt_with_known_times_is_good() {
+        // Classic LPT example: times {7,6,5,4,3,2,2} on 3 machines.
+        let times = [7.0, 6.0, 5.0, 4.0, 3.0, 2.0, 2.0];
+        let mut g = GreedyAda::new(1.0, 1.0);
+        g.observe(
+            &times
+                .iter()
+                .enumerate()
+                .map(|(i, &t)| (i, t))
+                .collect::<Vec<_>>(),
+        );
+        let groups = g.allocate(&[0, 1, 2, 3, 4, 5, 6], 3, &mut rng());
+        assert!(is_partition(&groups, &[0, 1, 2, 3, 4, 5, 6]));
+        let span = makespan(&groups, |c| times[c]);
+        // total = 29, OPT = 10 (e.g. {7,3},{6,4},{5,2,2}); LPT gives ≤ 4/3·OPT.
+        assert!(span <= 10.0 * 4.0 / 3.0 + 1e-9, "span={span}");
+    }
+
+    #[test]
+    fn unprofiled_clients_use_default_then_adapt() {
+        let mut g = GreedyAda::new(100.0, 0.5);
+        assert_eq!(g.estimate_ms(3), 100.0);
+        g.observe(&[(3, 40.0), (4, 60.0)]);
+        assert_eq!(g.estimate_ms(3), 40.0);
+        assert_eq!(g.profiled_count(), 2);
+        // t ← 0.5·avg(50) + 0.5·100 = 75.
+        assert!((g.default_ms() - 75.0).abs() < 1e-9);
+        // m = 1 trusts measurements fully.
+        let mut g1 = GreedyAda::new(100.0, 1.0);
+        g1.observe(&[(0, 10.0)]);
+        assert_eq!(g1.default_ms(), 10.0);
+    }
+
+    #[test]
+    fn allocation_is_deterministic() {
+        let mut a = GreedyAda::new(50.0, 0.5);
+        let mut b = GreedyAda::new(50.0, 0.5);
+        let cohort: Vec<usize> = (0..20).collect();
+        assert_eq!(
+            a.allocate(&cohort, 4, &mut rng()),
+            b.allocate(&cohort, 4, &mut rng())
+        );
+    }
+
+    /// Brute-force optimal makespan for tiny instances.
+    fn opt_makespan(times: &[f64], m: usize) -> f64 {
+        fn rec(i: usize, times: &[f64], load: &mut Vec<f64>, best: &mut f64) {
+            if i == times.len() {
+                let span = load.iter().cloned().fold(0.0, f64::max);
+                *best = best.min(span);
+                return;
+            }
+            for d in 0..load.len() {
+                load[d] += times[i];
+                if load[d] < *best {
+                    rec(i + 1, times, load, best);
+                }
+                load[d] -= times[i];
+                if load[d] == 0.0 {
+                    break; // symmetry cut
+                }
+            }
+        }
+        let mut best = f64::MAX;
+        rec(0, times, &mut vec![0.0; m], &mut best);
+        best
+    }
+
+    #[test]
+    fn prop_lpt_within_graham_bound_of_opt() {
+        prop::check("lpt-graham-bound", 123, 60, |rng| {
+            let n = 2 + rng.below(8) as usize;
+            let m = 1 + rng.below(3) as usize;
+            let times: Vec<f64> =
+                (0..n).map(|_| 1.0 + rng.uniform() * 99.0).collect();
+            let mut g = GreedyAda::new(1.0, 1.0);
+            g.observe(
+                &times.iter().enumerate().map(|(i, &t)| (i, t)).collect::<Vec<_>>(),
+            );
+            let cohort: Vec<usize> = (0..n).collect();
+            let groups = g.allocate(&cohort, m, rng);
+            crate::prop_assert!(
+                crate::scheduler::is_partition(&groups, &cohort),
+                "not a partition"
+            );
+            let span = makespan(&groups, |c| times[c]);
+            let opt = opt_makespan(&times, m);
+            let bound = (4.0 / 3.0 - 1.0 / (3.0 * m as f64)) * opt + 1e-6;
+            crate::prop_assert!(
+                span <= bound,
+                "LPT {span} exceeds Graham bound {bound} (opt {opt}, m {m})"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_every_device_used_when_enough_clients() {
+        prop::check("all-devices-used", 5, 40, |rng| {
+            let m = 1 + rng.below(8) as usize;
+            let n = m + rng.below(40) as usize;
+            let mut g = GreedyAda::new(10.0, 0.5);
+            let cohort: Vec<usize> = (0..n).collect();
+            let groups = g.allocate(&cohort, m, rng);
+            crop_empty(&groups, m, n)
+        });
+
+        fn crop_empty(groups: &Groups, m: usize, n: usize) -> Result<(), String> {
+            let empty = groups.iter().filter(|g| g.is_empty()).count();
+            if n >= m && empty > 0 {
+                return Err(format!("{empty} idle devices with {n} clients"));
+            }
+            Ok(())
+        }
+    }
+}

@@ -1,0 +1,102 @@
+//! Distribution manager (paper §VI): client → device allocation.
+//!
+//! The allocation problem is a multiprocessor-scheduling variant: given M
+//! devices and per-client training times, partition the round's cohort so
+//! the makespan (slowest device) is minimized — Eq. (1) of the paper.
+//!
+//! Strategies:
+//! * [`greedy_ada::GreedyAda`] — the paper's Algorithm 1 (LPT greedy +
+//!   adaptive profiling of unknown client times);
+//! * [`baselines::RandomAlloc`] — random ≈K/M chunks (paper baseline);
+//! * [`baselines::SlowestAlloc`] — slowest clients packed together
+//!   (paper baseline, the pathological case).
+
+pub mod baselines;
+pub mod greedy_ada;
+
+pub use baselines::{RandomAlloc, SlowestAlloc};
+pub use greedy_ada::GreedyAda;
+
+use crate::config::Allocation;
+use crate::util::rng::Rng;
+
+/// One allocation decision: `groups[d]` = client ids on device `d`.
+pub type Groups = Vec<Vec<usize>>;
+
+/// A client → device allocation strategy.
+///
+/// `allocate` receives the round's cohort; `observe` feeds back measured
+/// per-client round times after the round (adaptive profiling).
+pub trait Strategy: Send {
+    fn name(&self) -> &'static str;
+
+    /// Partition `clients` over `m` devices.
+    fn allocate(&mut self, clients: &[usize], m: usize, rng: &mut Rng) -> Groups;
+
+    /// Feed back measured times (client id, round_ms).
+    fn observe(&mut self, _measured: &[(usize, f64)]) {}
+
+    /// Predicted time for a client (tracking/diagnostics; default unknown).
+    fn predicted_ms(&self, _client: usize) -> Option<f64> {
+        None
+    }
+}
+
+/// Construct the configured strategy.
+pub fn make_strategy(
+    alloc: Allocation,
+    default_time_ms: f64,
+    momentum: f64,
+) -> Box<dyn Strategy> {
+    match alloc {
+        Allocation::GreedyAda => {
+            Box::new(GreedyAda::new(default_time_ms, momentum))
+        }
+        Allocation::Random => Box::new(RandomAlloc),
+        Allocation::Slowest => Box::new(SlowestAlloc::new(default_time_ms)),
+    }
+}
+
+/// Makespan of an allocation under known times (simulation/benches).
+pub fn makespan(groups: &Groups, time_of: impl Fn(usize) -> f64) -> f64 {
+    groups
+        .iter()
+        .map(|g| g.iter().map(|&c| time_of(c)).sum::<f64>())
+        .fold(0.0, f64::max)
+}
+
+/// Check an allocation covers exactly the given cohort.
+pub fn is_partition(groups: &Groups, clients: &[usize]) -> bool {
+    let mut seen: Vec<usize> = groups.iter().flatten().copied().collect();
+    seen.sort_unstable();
+    let mut want = clients.to_vec();
+    want.sort_unstable();
+    seen == want
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn makespan_of_known_groups() {
+        let groups = vec![vec![0, 1], vec![2]];
+        let times = [3.0, 4.0, 5.0];
+        assert_eq!(makespan(&groups, |c| times[c]), 7.0);
+    }
+
+    #[test]
+    fn partition_checker() {
+        assert!(is_partition(&vec![vec![3, 1], vec![2]], &[1, 2, 3]));
+        assert!(!is_partition(&vec![vec![1], vec![1]], &[1, 2]));
+        assert!(!is_partition(&vec![vec![1]], &[1, 2]));
+    }
+
+    #[test]
+    fn factory_builds_all() {
+        for a in [Allocation::GreedyAda, Allocation::Random, Allocation::Slowest] {
+            let s = make_strategy(a, 100.0, 0.5);
+            assert_eq!(s.name(), a.name());
+        }
+    }
+}

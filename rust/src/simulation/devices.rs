@@ -1,0 +1,110 @@
+//! Mobile-device speed catalog (AI-Benchmark-style, paper §V-A).
+//!
+//! The paper derives speed ratios of mobile SoCs from AI-Benchmark
+//! (Ignatov et al., ECCV'18). The catalog below mirrors the *spread* of
+//! float-training scores across device tiers — flagship ≈ 1×, mid-tier
+//! 1.5–2.5×, entry 4–6× slower — with market-share-shaped sampling
+//! weights. Exact per-SoC numbers are irrelevant to the experiments; the
+//! straggler spread is what Fig 6(b) exercises.
+
+use crate::util::rng::Rng;
+
+/// One device tier.
+#[derive(Debug, Clone)]
+pub struct DeviceClass {
+    pub name: &'static str,
+    /// Training time ratio relative to the fastest tier.
+    pub speed_ratio: f64,
+    /// Sampling weight (population share).
+    pub weight: f64,
+}
+
+/// A weighted catalog of device tiers.
+#[derive(Debug, Clone)]
+pub struct DeviceCatalog {
+    classes: Vec<DeviceClass>,
+    cumulative: Vec<f64>,
+}
+
+impl DeviceCatalog {
+    pub fn new(classes: Vec<DeviceClass>) -> DeviceCatalog {
+        assert!(!classes.is_empty());
+        let total: f64 = classes.iter().map(|c| c.weight).sum();
+        let mut acc = 0.0;
+        let cumulative = classes
+            .iter()
+            .map(|c| {
+                acc += c.weight / total;
+                acc
+            })
+            .collect();
+        DeviceCatalog { classes, cumulative }
+    }
+
+    /// The default AI-Benchmark-shaped catalog.
+    pub fn ai_benchmark() -> DeviceCatalog {
+        DeviceCatalog::new(vec![
+            DeviceClass { name: "flagship-npu", speed_ratio: 1.0, weight: 0.15 },
+            DeviceClass { name: "flagship", speed_ratio: 1.3, weight: 0.20 },
+            DeviceClass { name: "upper-mid", speed_ratio: 1.8, weight: 0.25 },
+            DeviceClass { name: "mid", speed_ratio: 2.5, weight: 0.20 },
+            DeviceClass { name: "entry", speed_ratio: 4.0, weight: 0.15 },
+            DeviceClass { name: "legacy", speed_ratio: 6.0, weight: 0.05 },
+        ])
+    }
+
+    /// Sample a device class index by population weight.
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let u = rng.uniform();
+        self.cumulative
+            .iter()
+            .position(|&c| u < c)
+            .unwrap_or(self.classes.len() - 1)
+    }
+
+    pub fn ratio(&self, class: usize) -> f64 {
+        self.classes[class].speed_ratio
+    }
+
+    pub fn name(&self, class: usize) -> &'static str {
+        self.classes[class].name
+    }
+
+    pub fn len(&self) -> usize {
+        self.classes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.classes.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sampling_follows_weights() {
+        let cat = DeviceCatalog::ai_benchmark();
+        let mut rng = Rng::new(11);
+        let mut counts = vec![0usize; cat.len()];
+        let n = 50_000;
+        for _ in 0..n {
+            counts[cat.sample(&mut rng)] += 1;
+        }
+        // flagship-npu ≈ 15%, legacy ≈ 5%.
+        let share0 = counts[0] as f64 / n as f64;
+        let share5 = counts[5] as f64 / n as f64;
+        assert!((share0 - 0.15).abs() < 0.01, "{share0}");
+        assert!((share5 - 0.05).abs() < 0.01, "{share5}");
+    }
+
+    #[test]
+    fn ratios_monotone_from_flagship_to_legacy() {
+        let cat = DeviceCatalog::ai_benchmark();
+        for i in 1..cat.len() {
+            assert!(cat.ratio(i) > cat.ratio(i - 1));
+        }
+        assert_eq!(cat.ratio(0), 1.0);
+    }
+}

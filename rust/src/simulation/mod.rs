@@ -1,0 +1,105 @@
+//! Simulation manager (paper §V-A): system heterogeneity.
+//!
+//! System heterogeneity is simulated "in a lightweight and realistic
+//! manner": each client is assigned a mobile-device class with a training
+//! speed ratio derived from AI-Benchmark-style measurements; after real
+//! compute finishes, the client waits proportionally to its ratio before
+//! uploading — exactly the paper's straggler model. Network conditions add
+//! latency on the remote path.
+
+pub mod devices;
+pub mod network;
+
+pub use devices::{DeviceCatalog, DeviceClass};
+pub use network::NetworkModel;
+
+use crate::config::Config;
+use crate::util::rng::Rng;
+
+/// Per-client simulation state the coordinator consults each round.
+#[derive(Debug, Clone)]
+pub struct HeterogeneityPlan {
+    /// Device class index per client (empty ⇒ no system heterogeneity).
+    pub device_of_client: Vec<usize>,
+    pub catalog: DeviceCatalog,
+    pub enabled: bool,
+}
+
+impl HeterogeneityPlan {
+    /// Assign device classes to all clients per the config.
+    pub fn from_config(cfg: &Config, num_clients: usize) -> HeterogeneityPlan {
+        let catalog = DeviceCatalog::ai_benchmark();
+        let mut rng = Rng::new(cfg.seed ^ 0x5157_4E55);
+        let device_of_client = (0..num_clients)
+            .map(|_| catalog.sample(&mut rng))
+            .collect();
+        HeterogeneityPlan {
+            device_of_client,
+            catalog,
+            enabled: cfg.system_heterogeneity,
+        }
+    }
+
+    /// Speed ratio for a client (1.0 = fastest class or disabled).
+    pub fn speed_ratio(&self, client: usize) -> f64 {
+        if !self.enabled {
+            return 1.0;
+        }
+        self.catalog.ratio(self.device_of_client[client])
+    }
+
+    /// Straggler wait to inject after `compute_ms` of real training.
+    ///
+    /// Total simulated time = compute · ratio, so the wait is
+    /// compute · (ratio − 1).
+    pub fn wait_ms(&self, client: usize, compute_ms: f64) -> f64 {
+        (self.speed_ratio(client) - 1.0).max(0.0) * compute_ms
+    }
+
+    /// Device class name for tracking.
+    pub fn device_name(&self, client: usize) -> &'static str {
+        self.catalog.name(self.device_of_client[client])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+
+    #[test]
+    fn disabled_plan_is_homogeneous() {
+        let cfg = Config { system_heterogeneity: false, ..Config::default() };
+        let plan = HeterogeneityPlan::from_config(&cfg, 10);
+        assert!((0..10).all(|c| plan.speed_ratio(c) == 1.0));
+        assert_eq!(plan.wait_ms(3, 100.0), 0.0);
+    }
+
+    #[test]
+    fn enabled_plan_creates_stragglers() {
+        let cfg = Config {
+            system_heterogeneity: true,
+            seed: 7,
+            ..Config::default()
+        };
+        let plan = HeterogeneityPlan::from_config(&cfg, 200);
+        let ratios: Vec<f64> = (0..200).map(|c| plan.speed_ratio(c)).collect();
+        let min = ratios.iter().cloned().fold(f64::MAX, f64::min);
+        let max = ratios.iter().cloned().fold(0.0, f64::max);
+        assert_eq!(min, 1.0, "fastest class is the unit");
+        assert!(max >= 3.0, "must include slow devices, max={max}");
+        // Wait scales with compute and ratio.
+        let c_slow = (0..200).max_by(|&a, &b| {
+            plan.speed_ratio(a).partial_cmp(&plan.speed_ratio(b)).unwrap()
+        }).unwrap();
+        assert!(plan.wait_ms(c_slow, 100.0) > 100.0);
+    }
+
+    #[test]
+    fn assignment_is_deterministic_per_seed() {
+        let cfg = Config { system_heterogeneity: true, seed: 3, ..Config::default() };
+        let a = HeterogeneityPlan::from_config(&cfg, 50);
+        let b = HeterogeneityPlan::from_config(&cfg, 50);
+        assert_eq!(a.device_of_client, b.device_of_client);
+    }
+}

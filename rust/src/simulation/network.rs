@@ -1,0 +1,67 @@
+//! Network-condition model for the remote path (paper §V-A, §VII).
+//!
+//! The paper simulates networking conditions (latency) "with an isolated
+//! environment provided by containerization"; our process-container
+//! deployment injects the same delays in the transport layer instead.
+//! The model is latency + bandwidth: `delay = rtt/2 + bytes / bandwidth`.
+
+use crate::util::rng::Rng;
+
+/// Per-link network model.
+#[derive(Debug, Clone, Copy)]
+pub struct NetworkModel {
+    /// Round-trip latency in ms.
+    pub rtt_ms: f64,
+    /// Bandwidth in bytes/ms (e.g. 12_500 = 100 Mbit/s).
+    pub bytes_per_ms: f64,
+    /// Latency jitter σ (ms), sampled per message.
+    pub jitter_ms: f64,
+}
+
+impl NetworkModel {
+    /// An ideal link: no injected delay.
+    pub fn ideal() -> NetworkModel {
+        NetworkModel { rtt_ms: 0.0, bytes_per_ms: f64::INFINITY, jitter_ms: 0.0 }
+    }
+
+    /// Typical WAN edge link: 40 ms RTT, 50 Mbit/s, 5 ms jitter.
+    pub fn wan() -> NetworkModel {
+        NetworkModel { rtt_ms: 40.0, bytes_per_ms: 6_250.0, jitter_ms: 5.0 }
+    }
+
+    /// One-way delivery delay for a message of `bytes`.
+    pub fn delay_ms(&self, bytes: usize, rng: &mut Rng) -> f64 {
+        let transfer = if self.bytes_per_ms.is_finite() {
+            bytes as f64 / self.bytes_per_ms
+        } else {
+            0.0
+        };
+        let jitter = if self.jitter_ms > 0.0 {
+            (rng.normal() * self.jitter_ms).abs()
+        } else {
+            0.0
+        };
+        self.rtt_ms / 2.0 + transfer + jitter
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ideal_is_zero() {
+        let mut rng = Rng::new(1);
+        assert_eq!(NetworkModel::ideal().delay_ms(1 << 20, &mut rng), 0.0);
+    }
+
+    #[test]
+    fn wan_delay_scales_with_size() {
+        let mut rng = Rng::new(2);
+        let nm = NetworkModel::wan();
+        let small = nm.delay_ms(1_000, &mut rng);
+        let big = nm.delay_ms(10_000_000, &mut rng);
+        assert!(big > small + 1_000.0, "big={big} small={small}");
+        assert!(small >= 20.0); // at least half the RTT
+    }
+}

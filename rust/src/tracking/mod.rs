@@ -1,0 +1,10 @@
+//! Tracking manager (paper §V-C): the three-level metric hierarchy.
+//!
+//! A training **task** contains **rounds**; a round contains per-**client**
+//! metrics — the exact structure the paper contrasts with flat log files.
+//! The store is thread-safe, persists to JSON, and exposes the query
+//! helpers the evaluation section uses (round time, accuracy, comm cost).
+
+pub mod store;
+
+pub use store::{ClientMetrics, RoundMetrics, TaskMetrics, Tracker};

@@ -1,0 +1,347 @@
+//! The hierarchical metric store.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+use crate::error::{Error, Result};
+use crate::util::json::{obj, Json};
+
+/// Client-level metrics for one round (paper: "client metrics of a round").
+#[derive(Debug, Clone, Default)]
+pub struct ClientMetrics {
+    pub client: usize,
+    pub num_samples: usize,
+    pub train_loss: f64,
+    pub train_accuracy: f64,
+    /// Real compute time (HLO execution) in ms.
+    pub compute_ms: f64,
+    /// Simulated straggler wait in ms.
+    pub wait_ms: f64,
+    /// Total (compute + wait) — what the scheduler profiles.
+    pub round_ms: f64,
+    /// Bytes uploaded to the server (after compression).
+    pub upload_bytes: usize,
+    /// Simulated device class name.
+    pub device: String,
+}
+
+/// Round-level metrics (paper: "round metrics of a task").
+#[derive(Debug, Clone, Default)]
+pub struct RoundMetrics {
+    pub round: usize,
+    pub train_loss: f64,
+    pub train_accuracy: f64,
+    pub test_loss: Option<f64>,
+    pub test_accuracy: Option<f64>,
+    /// End-to-end round time (simulated clock).
+    pub round_ms: f64,
+    /// Server→client distribution latency.
+    pub distribution_ms: f64,
+    pub comm_bytes: usize,
+    pub clients: Vec<ClientMetrics>,
+}
+
+/// Task-level metrics (paper: "metrics of the whole training").
+#[derive(Debug, Clone, Default)]
+pub struct TaskMetrics {
+    pub task_id: String,
+    /// Free-form configuration summary stored with the task.
+    pub config: BTreeMap<String, String>,
+    pub rounds: Vec<RoundMetrics>,
+}
+
+/// Thread-safe tracker with optional JSON persistence.
+pub struct Tracker {
+    task: Mutex<TaskMetrics>,
+    dir: Option<PathBuf>,
+}
+
+impl Tracker {
+    /// In-memory tracker.
+    pub fn new(task_id: &str) -> Tracker {
+        Tracker {
+            task: Mutex::new(TaskMetrics {
+                task_id: task_id.to_string(),
+                ..TaskMetrics::default()
+            }),
+            dir: None,
+        }
+    }
+
+    /// Tracker that persists `<dir>/<task_id>.json` on `finish()`.
+    pub fn persistent(task_id: &str, dir: PathBuf) -> Tracker {
+        let mut t = Tracker::new(task_id);
+        t.dir = Some(dir);
+        t
+    }
+
+    /// Attach a config key/value to the task level.
+    pub fn set_config(&self, key: &str, value: String) {
+        self.task.lock().unwrap().config.insert(key.to_string(), value);
+    }
+
+    /// Record a completed round.
+    pub fn record_round(&self, round: RoundMetrics) {
+        self.task.lock().unwrap().rounds.push(round);
+    }
+
+    // ------------------------------------------------------- queries
+
+    pub fn num_rounds(&self) -> usize {
+        self.task.lock().unwrap().rounds.len()
+    }
+
+    /// Latest test accuracy (the paper's headline per-task number).
+    pub fn final_accuracy(&self) -> Option<f64> {
+        self.task
+            .lock()
+            .unwrap()
+            .rounds
+            .iter()
+            .rev()
+            .find_map(|r| r.test_accuracy)
+    }
+
+    pub fn best_accuracy(&self) -> Option<f64> {
+        self.task
+            .lock()
+            .unwrap()
+            .rounds
+            .iter()
+            .filter_map(|r| r.test_accuracy)
+            .fold(None, |acc, v| Some(acc.map_or(v, |a: f64| a.max(v))))
+    }
+
+    /// Mean round time, T_round = T_total / R (paper §VIII-B).
+    pub fn avg_round_ms(&self) -> f64 {
+        let t = self.task.lock().unwrap();
+        if t.rounds.is_empty() {
+            return 0.0;
+        }
+        t.rounds.iter().map(|r| r.round_ms).sum::<f64>() / t.rounds.len() as f64
+    }
+
+    pub fn total_comm_bytes(&self) -> usize {
+        self.task.lock().unwrap().rounds.iter().map(|r| r.comm_bytes).sum()
+    }
+
+    /// (round, train_loss, test_accuracy) series for loss curves.
+    pub fn loss_curve(&self) -> Vec<(usize, f64, Option<f64>)> {
+        self.task
+            .lock()
+            .unwrap()
+            .rounds
+            .iter()
+            .map(|r| (r.round, r.train_loss, r.test_accuracy))
+            .collect()
+    }
+
+    /// Per-client round times of a given round (Fig 6 reproduction).
+    pub fn client_round_times(&self, round: usize) -> Vec<f64> {
+        self.task
+            .lock()
+            .unwrap()
+            .rounds
+            .iter()
+            .find(|r| r.round == round)
+            .map(|r| r.clients.iter().map(|c| c.round_ms).collect())
+            .unwrap_or_default()
+    }
+
+    // ------------------------------------------------- serialization
+
+    /// Full task → JSON (the remote tracking service sends this shape).
+    pub fn to_json(&self) -> Json {
+        let t = self.task.lock().unwrap();
+        let rounds: Vec<Json> = t
+            .rounds
+            .iter()
+            .map(|r| {
+                let clients: Vec<Json> = r
+                    .clients
+                    .iter()
+                    .map(|c| {
+                        obj([
+                            ("client", Json::Num(c.client as f64)),
+                            ("num_samples", Json::Num(c.num_samples as f64)),
+                            ("train_loss", Json::Num(c.train_loss)),
+                            ("train_accuracy", Json::Num(c.train_accuracy)),
+                            ("compute_ms", Json::Num(c.compute_ms)),
+                            ("wait_ms", Json::Num(c.wait_ms)),
+                            ("round_ms", Json::Num(c.round_ms)),
+                            ("upload_bytes", Json::Num(c.upload_bytes as f64)),
+                            ("device", Json::Str(c.device.clone())),
+                        ])
+                    })
+                    .collect();
+                obj([
+                    ("round", Json::Num(r.round as f64)),
+                    ("train_loss", Json::Num(r.train_loss)),
+                    ("train_accuracy", Json::Num(r.train_accuracy)),
+                    (
+                        "test_loss",
+                        r.test_loss.map(Json::Num).unwrap_or(Json::Null),
+                    ),
+                    (
+                        "test_accuracy",
+                        r.test_accuracy.map(Json::Num).unwrap_or(Json::Null),
+                    ),
+                    ("round_ms", Json::Num(r.round_ms)),
+                    ("distribution_ms", Json::Num(r.distribution_ms)),
+                    ("comm_bytes", Json::Num(r.comm_bytes as f64)),
+                    ("clients", Json::Arr(clients)),
+                ])
+            })
+            .collect();
+        obj([
+            ("task_id", Json::Str(t.task_id.clone())),
+            (
+                "config",
+                Json::Obj(
+                    t.config
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::Str(v.clone())))
+                        .collect(),
+                ),
+            ),
+            ("rounds", Json::Arr(rounds)),
+        ])
+    }
+
+    /// Rebuild a tracker from its JSON form (remote tracking ingest).
+    pub fn from_json(v: &Json) -> Result<Tracker> {
+        let task_id = v.req_str("task_id")?;
+        let tracker = Tracker::new(&task_id);
+        if let Some(cfg) = v.get("config").as_obj() {
+            for (k, val) in cfg {
+                if let Some(s) = val.as_str() {
+                    tracker.set_config(k, s.to_string());
+                }
+            }
+        }
+        for r in v.get("rounds").as_arr().unwrap_or(&[]) {
+            let clients = r
+                .get("clients")
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(|c| {
+                    Ok(ClientMetrics {
+                        client: c.req_usize("client")?,
+                        num_samples: c.req_usize("num_samples")?,
+                        train_loss: c.req_f64("train_loss")?,
+                        train_accuracy: c.req_f64("train_accuracy")?,
+                        compute_ms: c.req_f64("compute_ms")?,
+                        wait_ms: c.req_f64("wait_ms")?,
+                        round_ms: c.req_f64("round_ms")?,
+                        upload_bytes: c.req_usize("upload_bytes")?,
+                        device: c.req_str("device").unwrap_or_default(),
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            tracker.record_round(RoundMetrics {
+                round: r.req_usize("round")?,
+                train_loss: r.req_f64("train_loss")?,
+                train_accuracy: r.req_f64("train_accuracy")?,
+                test_loss: r.get("test_loss").as_f64(),
+                test_accuracy: r.get("test_accuracy").as_f64(),
+                round_ms: r.req_f64("round_ms")?,
+                distribution_ms: r.req_f64("distribution_ms")?,
+                comm_bytes: r.req_usize("comm_bytes")?,
+                clients,
+            });
+        }
+        Ok(tracker)
+    }
+
+    /// Persist to `<dir>/<task_id>.json` if a directory was configured.
+    pub fn finish(&self) -> Result<Option<PathBuf>> {
+        let Some(dir) = &self.dir else { return Ok(None) };
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!(
+            "{}.json",
+            self.task.lock().unwrap().task_id
+        ));
+        std::fs::write(&path, self.to_json().to_pretty())
+            .map_err(|e| Error::Tracking(e.to_string()))?;
+        Ok(Some(path))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn round(n: usize, acc: f64) -> RoundMetrics {
+        RoundMetrics {
+            round: n,
+            train_loss: 2.0 / (n + 1) as f64,
+            train_accuracy: acc - 0.05,
+            test_accuracy: Some(acc),
+            test_loss: Some(1.0),
+            round_ms: 100.0 + n as f64,
+            distribution_ms: 5.0,
+            comm_bytes: 1000,
+            clients: vec![ClientMetrics {
+                client: 7,
+                num_samples: 50,
+                train_loss: 1.5,
+                train_accuracy: acc,
+                compute_ms: 80.0,
+                wait_ms: 20.0,
+                round_ms: 100.0,
+                upload_bytes: 500,
+                device: "mid".into(),
+            }],
+        }
+    }
+
+    #[test]
+    fn hierarchy_and_queries() {
+        let t = Tracker::new("task-1");
+        t.set_config("dataset", "femnist".into());
+        t.record_round(round(0, 0.50));
+        t.record_round(round(1, 0.60));
+        t.record_round(round(2, 0.58));
+        assert_eq!(t.num_rounds(), 3);
+        assert_eq!(t.final_accuracy(), Some(0.58));
+        assert_eq!(t.best_accuracy(), Some(0.60));
+        assert!((t.avg_round_ms() - 101.0).abs() < 1e-9);
+        assert_eq!(t.total_comm_bytes(), 3000);
+        assert_eq!(t.client_round_times(1), vec![100.0]);
+        assert_eq!(t.loss_curve().len(), 3);
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_all_levels() {
+        let t = Tracker::new("task-2");
+        t.set_config("model", "mlp".into());
+        t.record_round(round(0, 0.42));
+        let j = t.to_json();
+        let back = Tracker::from_json(&j).unwrap();
+        assert_eq!(back.num_rounds(), 1);
+        assert_eq!(back.final_accuracy(), Some(0.42));
+        assert_eq!(back.to_json(), j);
+    }
+
+    #[test]
+    fn persistence_writes_file() {
+        let dir = std::env::temp_dir().join("easyfl_tracking_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let t = Tracker::persistent("task-3", dir.clone());
+        t.record_round(round(0, 0.9));
+        let path = t.finish().unwrap().unwrap();
+        let text = std::fs::read_to_string(path).unwrap();
+        assert!(text.contains("task-3"));
+        assert!(text.contains("test_accuracy"));
+    }
+
+    #[test]
+    fn empty_tracker_queries() {
+        let t = Tracker::new("empty");
+        assert_eq!(t.final_accuracy(), None);
+        assert_eq!(t.avg_round_ms(), 0.0);
+        assert!(t.client_round_times(0).is_empty());
+    }
+}

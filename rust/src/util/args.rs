@@ -1,0 +1,163 @@
+//! Tiny CLI argument parser (no `clap` in the offline registry).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, positional
+//! subcommands, and generates usage text from the declared options.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// Declarative CLI option.
+#[derive(Debug, Clone)]
+pub struct Opt {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+/// Parsed arguments for one (sub)command.
+#[derive(Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv` against the declared options.
+    pub fn parse(argv: &[String], opts: &[Opt]) -> Result<Args> {
+        let mut out = Args::default();
+        for opt in opts {
+            if let Some(d) = opt.default {
+                out.values.insert(opt.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let arg = &argv[i];
+            if let Some(stripped) = arg.strip_prefix("--") {
+                let (key, inline) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let opt = opts.iter().find(|o| o.name == key).ok_or_else(|| {
+                    Error::Config(format!("unknown option --{key}"))
+                })?;
+                if opt.is_flag {
+                    out.flags.push(key);
+                } else {
+                    let value = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| {
+                                    Error::Config(format!(
+                                        "--{key} requires a value"
+                                    ))
+                                })?
+                        }
+                    };
+                    out.values.insert(key, value);
+                }
+            } else {
+                out.positional.push(arg.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(String::as_str)
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize> {
+        let raw = self.get(name).ok_or_else(|| {
+            Error::Config(format!("missing --{name}"))
+        })?;
+        raw.parse()
+            .map_err(|_| Error::Config(format!("--{name}: not an integer: {raw}")))
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64> {
+        let raw = self.get(name).ok_or_else(|| {
+            Error::Config(format!("missing --{name}"))
+        })?;
+        raw.parse()
+            .map_err(|_| Error::Config(format!("--{name}: not a number: {raw}")))
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+/// Render usage text for a command.
+pub fn usage(cmd: &str, about: &str, opts: &[Opt]) -> String {
+    let mut out = format!("{about}\n\nUSAGE: easyfl {cmd} [options]\n\nOPTIONS:\n");
+    for o in opts {
+        let default = o
+            .default
+            .map(|d| format!(" (default: {d})"))
+            .unwrap_or_default();
+        out.push_str(&format!("  --{:<22} {}{}\n", o.name, o.help, default));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn opts() -> Vec<Opt> {
+        vec![
+            Opt { name: "rounds", help: "rounds", default: Some("10"), is_flag: false },
+            Opt { name: "model", help: "model", default: None, is_flag: false },
+            Opt { name: "verbose", help: "verbose", default: None, is_flag: true },
+        ]
+    }
+
+    fn sv(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_kv_and_flags() {
+        let a = Args::parse(
+            &sv(&["--rounds", "5", "--model=mlp", "--verbose", "pos1"]),
+            &opts(),
+        )
+        .unwrap();
+        assert_eq!(a.get_usize("rounds").unwrap(), 5);
+        assert_eq!(a.get("model"), Some("mlp"));
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(&[], &opts()).unwrap();
+        assert_eq!(a.get_usize("rounds").unwrap(), 10);
+        assert_eq!(a.get("model"), None);
+    }
+
+    #[test]
+    fn rejects_unknown_and_missing_value() {
+        assert!(Args::parse(&sv(&["--nope"]), &opts()).is_err());
+        assert!(Args::parse(&sv(&["--model"]), &opts()).is_err());
+        assert!(Args::parse(&sv(&["--rounds", "abc"]), &opts())
+            .unwrap()
+            .get_usize("rounds")
+            .is_err());
+    }
+
+    #[test]
+    fn usage_mentions_options() {
+        let u = usage("run", "Run training", &opts());
+        assert!(u.contains("--rounds"));
+        assert!(u.contains("default: 10"));
+    }
+}

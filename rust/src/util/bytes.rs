@@ -1,0 +1,257 @@
+//! Little-endian binary encode/decode helpers for the wire protocol and
+//! artifact files (no `serde`/`bincode` in the offline registry).
+
+use crate::error::{Error, Result};
+
+/// Append-only binary writer.
+#[derive(Default)]
+pub struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity(cap: usize) -> Self {
+        Writer { buf: Vec::with_capacity(cap) }
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    /// f32 slice with length prefix; bulk memcpy on LE targets.
+    pub fn f32s(&mut self, vs: &[f32]) {
+        self.u32(vs.len() as u32);
+        self.raw_f32s(vs);
+    }
+
+    /// f32 slice without length prefix.
+    pub fn raw_f32s(&mut self, vs: &[f32]) {
+        if cfg!(target_endian = "little") {
+            // SAFETY: f32 and [u8; 4] are layout-compatible; LE matches wire.
+            let bytes = unsafe {
+                std::slice::from_raw_parts(
+                    vs.as_ptr() as *const u8,
+                    vs.len() * 4,
+                )
+            };
+            self.buf.extend_from_slice(bytes);
+        } else {
+            for v in vs {
+                self.buf.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+    }
+
+    pub fn bytes(&mut self, b: &[u8]) {
+        self.u32(b.len() as u32);
+        self.buf.extend_from_slice(b);
+    }
+
+    pub fn finish(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+}
+
+/// Cursor-style binary reader.
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Reader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self.pos.checked_add(n).ok_or_else(|| {
+            Error::Comm("length overflow".into())
+        })?;
+        if end > self.buf.len() {
+            return Err(Error::Comm(format!(
+                "truncated frame: need {n} bytes at {}, have {}",
+                self.pos,
+                self.buf.len() - self.pos
+            )));
+        }
+        let out = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(out)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn str(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| Error::Comm("invalid utf-8 string".into()))
+    }
+
+    pub fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.u32()? as usize;
+        self.raw_f32s(n)
+    }
+
+    pub fn raw_f32s(&mut self, n: usize) -> Result<Vec<f32>> {
+        let bytes = self.take(n.checked_mul(4).ok_or_else(|| {
+            Error::Comm("f32 length overflow".into())
+        })?)?;
+        let mut out = Vec::with_capacity(n);
+        if cfg!(target_endian = "little") {
+            // SAFETY: reading n f32s from 4n bytes; alignment handled by copy.
+            unsafe {
+                out.set_len(n);
+                std::ptr::copy_nonoverlapping(
+                    bytes.as_ptr(),
+                    out.as_mut_ptr() as *mut u8,
+                    n * 4,
+                );
+            }
+        } else {
+            for chunk in bytes.chunks_exact(4) {
+                out.push(f32::from_le_bytes(chunk.try_into().unwrap()));
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn bytes(&mut self) -> Result<&'a [u8]> {
+        let n = self.u32()? as usize;
+        self.take(n)
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+}
+
+/// Read a whole little-endian f32 file (artifact init params).
+pub fn read_f32_file(path: &std::path::Path) -> Result<Vec<f32>> {
+    let bytes = std::fs::read(path)?;
+    if bytes.len() % 4 != 0 {
+        return Err(Error::Artifact(format!(
+            "{}: length {} not a multiple of 4",
+            path.display(),
+            bytes.len()
+        )));
+    }
+    let mut reader = Reader::new(&bytes);
+    reader.raw_f32s(bytes.len() / 4)
+}
+
+/// Read a whole little-endian i32 file (golden labels).
+pub fn read_i32_file(path: &std::path::Path) -> Result<Vec<i32>> {
+    let bytes = std::fs::read(path)?;
+    if bytes.len() % 4 != 0 {
+        return Err(Error::Artifact(format!(
+            "{}: length {} not a multiple of 4",
+            path.display(),
+            bytes.len()
+        )));
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_all_types() {
+        let mut w = Writer::new();
+        w.u8(7);
+        w.u32(0xDEAD_BEEF);
+        w.u64(u64::MAX - 1);
+        w.f32(1.5);
+        w.f64(-2.25);
+        w.str("hello — utf8 ✓");
+        w.f32s(&[1.0, 2.0, 3.0]);
+        w.bytes(&[9, 8, 7]);
+        let buf = w.finish();
+
+        let mut r = Reader::new(&buf);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.u64().unwrap(), u64::MAX - 1);
+        assert_eq!(r.f32().unwrap(), 1.5);
+        assert_eq!(r.f64().unwrap(), -2.25);
+        assert_eq!(r.str().unwrap(), "hello — utf8 ✓");
+        assert_eq!(r.f32s().unwrap(), vec![1.0, 2.0, 3.0]);
+        assert_eq!(r.bytes().unwrap(), &[9, 8, 7]);
+        assert_eq!(r.remaining(), 0);
+    }
+
+    #[test]
+    fn truncated_reads_error() {
+        let mut w = Writer::new();
+        w.u32(100); // claims 100 f32s
+        let buf = w.finish();
+        let mut r = Reader::new(&buf);
+        assert!(r.f32s().is_err());
+    }
+
+    #[test]
+    fn big_f32_roundtrip() {
+        let vs: Vec<f32> = (0..100_000).map(|i| i as f32 * 0.5).collect();
+        let mut w = Writer::with_capacity(vs.len() * 4 + 4);
+        w.f32s(&vs);
+        let buf = w.finish();
+        let mut r = Reader::new(&buf);
+        assert_eq!(r.f32s().unwrap(), vs);
+    }
+}

@@ -1,0 +1,136 @@
+//! Real vs virtual time.
+//!
+//! Heterogeneity simulation injects waits proportional to device speed
+//! ratios (paper §V-A). Small runs sleep for real (scaled); large sweeps —
+//! Fig 7's 64-GPU grid — run on a virtual clock so the *shape* of the
+//! result is exact without tying up wall-clock. Everything that waits goes
+//! through this trait so the two modes are interchangeable.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// A source of "now" plus the ability to wait.
+pub trait Clock: Send + Sync {
+    /// Milliseconds since the clock's epoch.
+    fn now_ms(&self) -> f64;
+    /// Block the calling worker for `ms` simulated milliseconds.
+    fn wait_ms(&self, ms: f64);
+    /// True when waits consume wall-clock time.
+    fn is_real(&self) -> bool;
+}
+
+/// Wall-clock backed; waits sleep, optionally scaled down.
+pub struct RealClock {
+    epoch: Instant,
+    /// Multiplier applied to waits: 0.01 ⇒ simulated second = 10 real ms.
+    time_scale: f64,
+}
+
+impl RealClock {
+    pub fn new(time_scale: f64) -> Self {
+        RealClock { epoch: Instant::now(), time_scale }
+    }
+}
+
+impl Default for RealClock {
+    fn default() -> Self {
+        Self::new(1.0)
+    }
+}
+
+impl Clock for RealClock {
+    fn now_ms(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64() * 1000.0
+    }
+
+    fn wait_ms(&self, ms: f64) {
+        if ms > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(
+                ms * self.time_scale / 1000.0,
+            ));
+        }
+    }
+
+    fn is_real(&self) -> bool {
+        true
+    }
+}
+
+/// Logical time in integer microseconds; waits advance a shared counter.
+///
+/// Per-worker logical timelines are modeled by the scheduler itself (each
+/// simulated device accumulates its own makespan); the shared counter
+/// provides a monotone global ordering for tracking timestamps.
+#[derive(Default)]
+pub struct VirtualClock {
+    now_us: Arc<AtomicU64>,
+}
+
+impl VirtualClock {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Clock for VirtualClock {
+    fn now_ms(&self) -> f64 {
+        self.now_us.load(Ordering::Relaxed) as f64 / 1000.0
+    }
+
+    fn wait_ms(&self, ms: f64) {
+        if ms > 0.0 {
+            self.now_us
+                .fetch_add((ms * 1000.0) as u64, Ordering::Relaxed);
+        }
+    }
+
+    fn is_real(&self) -> bool {
+        false
+    }
+}
+
+/// Simple monotonic stopwatch for measuring real elapsed time.
+pub struct Stopwatch(Instant);
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch(Instant::now())
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.0.elapsed().as_secs_f64() * 1000.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn real_clock_advances() {
+        let c = RealClock::new(1.0);
+        let t0 = c.now_ms();
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(c.now_ms() > t0);
+        assert!(c.is_real());
+    }
+
+    #[test]
+    fn real_clock_scales_waits() {
+        let c = RealClock::new(0.01);
+        let sw = Stopwatch::start();
+        c.wait_ms(200.0); // scaled → 2ms real
+        assert!(sw.elapsed_ms() < 100.0);
+    }
+
+    #[test]
+    fn virtual_clock_accumulates_without_sleeping() {
+        let c = VirtualClock::new();
+        let sw = Stopwatch::start();
+        c.wait_ms(1_000_000.0);
+        assert!(sw.elapsed_ms() < 50.0);
+        assert!((c.now_ms() - 1_000_000.0).abs() < 1.0);
+        assert!(!c.is_real());
+    }
+}

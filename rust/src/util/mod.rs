@@ -1,0 +1,12 @@
+//! Shared substrates: deterministic RNG, JSON, CLI args, clocks, binary
+//! codecs, and the in-tree property-testing harness.
+//!
+//! These exist because the offline registry ships none of rand / serde /
+//! clap / proptest — see DESIGN.md "Substitutions" #7.
+
+pub mod args;
+pub mod bytes;
+pub mod clock;
+pub mod json;
+pub mod prop;
+pub mod rng;

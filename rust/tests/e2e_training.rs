@@ -1,0 +1,187 @@
+//! Integration: the full local training loop end to end.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use easyfl::tracking::Tracker;
+use easyfl::{Allocation, Config, DatasetKind, Partition};
+
+fn artifacts_ready() -> bool {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts/manifest.json")
+        .exists()
+}
+
+fn quick_cfg() -> Config {
+    Config {
+        dataset: DatasetKind::Femnist,
+        partition: Partition::Realistic,
+        num_clients: 12,
+        clients_per_round: 4,
+        rounds: 3,
+        local_epochs: 2,
+        max_samples: 64,
+        test_samples: 128,
+        eval_every: 1,
+        ..Config::default()
+    }
+}
+
+#[test]
+fn training_learns_above_chance() {
+    if !artifacts_ready() {
+        return;
+    }
+    let report = easyfl::init(quick_cfg()).unwrap().run().unwrap();
+    // 62 classes ⇒ chance ≈ 1.6%; three rounds on separable synthetic data
+    // must land way above it.
+    assert!(
+        report.final_accuracy > 0.04,
+        "acc {} not above chance",
+        report.final_accuracy
+    );
+    assert!(report.final_train_loss.is_finite());
+    assert_eq!(report.rounds, 3);
+    assert!(report.comm_bytes > 0);
+}
+
+#[test]
+fn same_seed_is_deterministic() {
+    if !artifacts_ready() {
+        return;
+    }
+    let r1 = easyfl::init(quick_cfg()).unwrap().run().unwrap();
+    let r2 = easyfl::init(quick_cfg()).unwrap().run().unwrap();
+    assert_eq!(r1.final_accuracy, r2.final_accuracy);
+    assert_eq!(r1.comm_bytes, r2.comm_bytes);
+    let mut cfg3 = quick_cfg();
+    cfg3.seed = 123;
+    let r3 = easyfl::init(cfg3).unwrap().run().unwrap();
+    // Different cohort/partition/init noise ⇒ different numbers whp.
+    assert!(
+        (r1.final_accuracy - r3.final_accuracy).abs() > 1e-12
+            || r1.comm_bytes != r3.comm_bytes
+    );
+}
+
+#[test]
+fn distributed_matches_standalone_statistically() {
+    if !artifacts_ready() {
+        return;
+    }
+    // Same task, 1 vs 3 devices: aggregation is order-insensitive up to
+    // float noise, so accuracy must agree closely.
+    let r1 = easyfl::init(quick_cfg()).unwrap().run().unwrap();
+    let mut cfg = quick_cfg();
+    cfg.num_devices = 3;
+    cfg.allocation = Allocation::GreedyAda;
+    let r3 = easyfl::init(cfg).unwrap().run().unwrap();
+    assert!(
+        (r1.final_accuracy - r3.final_accuracy).abs() < 0.08,
+        "standalone {} vs distributed {}",
+        r1.final_accuracy,
+        r3.final_accuracy
+    );
+}
+
+#[test]
+fn tracker_records_three_level_hierarchy() {
+    if !artifacts_ready() {
+        return;
+    }
+    let tracker = Arc::new(Tracker::new("itest"));
+    let _ = easyfl::init(quick_cfg())
+        .unwrap()
+        .with_tracker(tracker.clone())
+        .run()
+        .unwrap();
+    assert_eq!(tracker.num_rounds(), 3);
+    let j = tracker.to_json();
+    let rounds = j.get("rounds").as_arr().unwrap();
+    assert_eq!(rounds.len(), 3);
+    // Client level present with per-client times.
+    let clients = rounds[0].get("clients").as_arr().unwrap();
+    assert_eq!(clients.len(), 4);
+    for c in clients {
+        assert!(c.get("round_ms").as_f64().unwrap() > 0.0);
+        assert!(c.get("num_samples").as_usize().unwrap() > 0);
+    }
+    // Task level carries config.
+    assert_eq!(j.get("config").get("dataset").as_str(), Some("femnist"));
+}
+
+#[test]
+fn unbalanced_plus_system_het_creates_time_spread() {
+    if !artifacts_ready() {
+        return;
+    }
+    let mut cfg = quick_cfg();
+    cfg.clients_per_round = 8;
+    cfg.unbalanced = true;
+    cfg.system_heterogeneity = true;
+    cfg.virtual_clock = true;
+    cfg.rounds = 1;
+    cfg.eval_every = 0;
+    let tracker = Arc::new(Tracker::new("het"));
+    easyfl::init(cfg)
+        .unwrap()
+        .with_tracker(tracker.clone())
+        .run()
+        .unwrap();
+    let times = tracker.client_round_times(0);
+    assert_eq!(times.len(), 8);
+    let min = times.iter().cloned().fold(f64::MAX, f64::min);
+    let max = times.iter().cloned().fold(0.0f64, f64::max);
+    // Fig 6(c): the combined simulation must produce a clear spread.
+    assert!(
+        max / min > 1.5,
+        "spread too small: {min:.1}..{max:.1} ms"
+    );
+}
+
+#[test]
+fn cnn_and_charcnn_models_train() {
+    if !artifacts_ready() {
+        return;
+    }
+    for dataset in [DatasetKind::Cifar10, DatasetKind::Shakespeare] {
+        let mut cfg = quick_cfg();
+        cfg.dataset = dataset;
+        cfg.model = dataset.default_model().to_string();
+        cfg.partition = Partition::Iid;
+        cfg.num_clients = 6;
+        cfg.clients_per_round = 3;
+        cfg.rounds = 2;
+        cfg.max_samples = 48;
+        cfg.test_samples = 64;
+        if dataset == DatasetKind::Shakespeare {
+            cfg.lr = 0.5;
+        }
+        let report = easyfl::init(cfg).unwrap().run().unwrap();
+        assert!(
+            report.final_train_loss.is_finite(),
+            "{dataset:?} diverged"
+        );
+    }
+}
+
+#[test]
+fn diverging_lr_reports_clean_error() {
+    if !artifacts_ready() {
+        return;
+    }
+    let mut cfg = quick_cfg();
+    cfg.lr = 1e4; // guaranteed blow-up
+    cfg.rounds = 5;
+    let err = easyfl::init(cfg).unwrap().run();
+    match err {
+        Err(easyfl::Error::Runtime(msg)) => {
+            assert!(msg.contains("diverged"), "msg: {msg}")
+        }
+        Err(other) => panic!("wrong error: {other}"),
+        Ok(r) => {
+            // Extremely unlikely, but don't flake if it survived.
+            assert!(r.final_train_loss.is_finite());
+        }
+    }
+}

@@ -1,0 +1,167 @@
+//! Integration: training-flow plugins change exactly their stages
+//! (the Table VII property) and compose with the full round loop.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+use easyfl::algorithms::{
+    fedprox_client_factory, fedreid_client_factory, stc_client_factory,
+    FedReidServerFlow, STCServerFlow, SharedHeads,
+};
+use easyfl::flow::{ServerFlow, Update};
+use easyfl::model::ParamVec;
+use easyfl::{Config, DatasetKind, Partition};
+
+fn artifacts_ready() -> bool {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts/manifest.json")
+        .exists()
+}
+
+fn quick_cfg() -> Config {
+    Config {
+        dataset: DatasetKind::Femnist,
+        partition: Partition::ByClass(3),
+        num_clients: 8,
+        clients_per_round: 4,
+        rounds: 2,
+        local_epochs: 1,
+        max_samples: 48,
+        test_samples: 96,
+        ..Config::default()
+    }
+}
+
+#[test]
+fn plugin_names_reflect_substituted_stages() {
+    // Structural Table VII check: each plugin self-reports its identity
+    // and the stages NOT overridden inherit the FedAvg defaults.
+    let mut prox = fedprox_client_factory(0.1)();
+    assert_eq!(prox.name(), "fedprox");
+    // Compression stage untouched by FedProx ⇒ dense like FedAvg.
+    let u = prox
+        .compress(ParamVec(vec![1.0; 4]), &ParamVec(vec![0.0; 4]))
+        .unwrap();
+    assert!(matches!(u, Update::Dense(_)));
+
+    let mut stc = stc_client_factory(0.5)();
+    assert_eq!(stc.name(), "stc");
+    let u = stc
+        .compress(ParamVec(vec![1.0, 0.0, 2.0, 0.0]), &ParamVec(vec![0.0; 4]))
+        .unwrap();
+    assert!(matches!(u, Update::SparseTernary { .. }));
+
+    assert_eq!(STCServerFlow.name(), "stc");
+    assert_eq!(FedReidServerFlow::new(10).name(), "fedreid");
+}
+
+#[test]
+fn fedprox_trains_end_to_end() {
+    if !artifacts_ready() {
+        return;
+    }
+    let report = easyfl::init(quick_cfg())
+        .unwrap()
+        .register_client(fedprox_client_factory(0.05))
+        .run()
+        .unwrap();
+    assert!(report.final_train_loss.is_finite());
+    assert!(report.final_accuracy >= 0.0);
+}
+
+#[test]
+fn stc_shrinks_uplink_but_still_learns() {
+    if !artifacts_ready() {
+        return;
+    }
+    let dense = easyfl::init(quick_cfg()).unwrap().run().unwrap();
+    let sparse = easyfl::init(quick_cfg())
+        .unwrap()
+        .register_client(stc_client_factory(0.01))
+        .register_server(Box::new(STCServerFlow))
+        .run()
+        .unwrap();
+    assert!(
+        (sparse.comm_bytes as f64) < dense.comm_bytes as f64 * 0.7,
+        "stc comm {} !< dense {}",
+        sparse.comm_bytes,
+        dense.comm_bytes
+    );
+    assert!(sparse.final_train_loss.is_finite());
+}
+
+#[test]
+fn fedreid_keeps_personal_heads() {
+    if !artifacts_ready() {
+        return;
+    }
+    let heads: SharedHeads = Arc::new(Mutex::new(HashMap::new()));
+    let mut cfg = quick_cfg();
+    cfg.num_devices = 2; // heads shared across workers
+    let engine = easyfl::runtime::Engine::new(&cfg.artifacts_dir).unwrap();
+    let meta = engine.meta(&cfg.resolved_model()).unwrap();
+    drop(engine);
+    let _ = easyfl::init(cfg)
+        .unwrap()
+        .register_client(fedreid_client_factory(heads.clone()))
+        .register_server(Box::new(FedReidServerFlow::from_meta(&meta)))
+        .run()
+        .unwrap();
+    let heads = heads.lock().unwrap();
+    // Every selected client persisted a head of the right size.
+    assert!(!heads.is_empty());
+    let head_len = easyfl::algorithms::fedreid::head_len(&meta);
+    for head in heads.values() {
+        assert_eq!(head.len(), head_len);
+    }
+    // Heads differ across clients (personalization actually happened).
+    if heads.len() >= 2 {
+        let vals: Vec<&Vec<f32>> = heads.values().collect();
+        assert_ne!(vals[0], vals[1]);
+    }
+}
+
+#[test]
+fn custom_selection_stage_plugs_in() {
+    if !artifacts_ready() {
+        return;
+    }
+    /// A server flow overriding only the selection stage: round-robin
+    /// deterministic cohorts (an Oort/FedMCCS-style substitution point).
+    struct RoundRobinSelect;
+    impl ServerFlow for RoundRobinSelect {
+        fn name(&self) -> &'static str {
+            "round-robin"
+        }
+        fn select(
+            &mut self,
+            num_clients: usize,
+            per_round: usize,
+            round: usize,
+            _rng: &mut easyfl::util::rng::Rng,
+        ) -> Vec<usize> {
+            (0..per_round)
+                .map(|i| (round * per_round + i) % num_clients)
+                .collect()
+        }
+    }
+    let tracker = Arc::new(easyfl::tracking::Tracker::new("rr"));
+    let _ = easyfl::init(quick_cfg())
+        .unwrap()
+        .register_server(Box::new(RoundRobinSelect))
+        .with_tracker(tracker.clone())
+        .run()
+        .unwrap();
+    // Round 0 must have trained clients 0..4 exactly.
+    let j = tracker.to_json();
+    let mut got: Vec<usize> = j.get("rounds").as_arr().unwrap()[0]
+        .get("clients")
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|c| c.get("client").as_usize().unwrap())
+        .collect();
+    got.sort_unstable();
+    assert_eq!(got, vec![0, 1, 2, 3]);
+}

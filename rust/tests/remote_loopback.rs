@@ -1,0 +1,132 @@
+//! Integration: the remote path (registry → client services → remote
+//! coordinator) over loopback TCP, in-process.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use easyfl::algorithms::fedavg_client_factory;
+use easyfl::comm::{ClientService, Registry, RemoteCoordinator};
+use easyfl::flow::DefaultServerFlow;
+use easyfl::tracking::Tracker;
+use easyfl::{Config, DatasetKind, Partition};
+
+fn artifacts_ready() -> bool {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts/manifest.json")
+        .exists()
+}
+
+fn quick_cfg() -> Config {
+    Config {
+        dataset: DatasetKind::Femnist,
+        partition: Partition::Realistic,
+        num_clients: 3,
+        clients_per_round: 3,
+        rounds: 2,
+        local_epochs: 1,
+        max_samples: 48,
+        test_samples: 96,
+        ..Config::default()
+    }
+}
+
+#[test]
+fn remote_round_trip_learns_and_tracks_latency() {
+    if !artifacts_ready() {
+        return;
+    }
+    let cfg = quick_cfg();
+    let registry = Registry::serve("127.0.0.1:0", Duration::from_secs(10)).unwrap();
+    let _services: Vec<ClientService> = (0..3)
+        .map(|i| {
+            ClientService::start(
+                &cfg,
+                i,
+                "127.0.0.1:0",
+                Some(registry.addr()),
+                fedavg_client_factory(),
+            )
+            .unwrap()
+        })
+        .collect();
+
+    let tracker = Arc::new(Tracker::new("loopback"));
+    let mut coord =
+        RemoteCoordinator::new(cfg, Box::new(DefaultServerFlow), tracker.clone())
+            .unwrap();
+    assert_eq!(coord.discover(registry.addr()).unwrap(), 3);
+
+    let m0 = coord.run_round(0).unwrap();
+    assert_eq!(m0.clients.len(), 3);
+    assert!(m0.distribution_ms > 0.0);
+    assert!(m0.comm_bytes > 3 * 240_000 * 4); // ≥ 3 dense params each way
+    let m1 = coord.run_round(1).unwrap();
+    assert!(m1.train_loss.is_finite());
+    assert_eq!(tracker.num_rounds(), 2);
+    assert!(tracker.final_accuracy().unwrap() > 0.01);
+}
+
+#[test]
+fn remote_matches_local_training_shape() {
+    if !artifacts_ready() {
+        return;
+    }
+    // Same config, local vs remote: both must learn; numbers won't be
+    // bit-identical (cohort selection differs) but should be same scale.
+    let local = easyfl::init(quick_cfg()).unwrap().run().unwrap();
+
+    let cfg = quick_cfg();
+    let registry = Registry::serve("127.0.0.1:0", Duration::from_secs(10)).unwrap();
+    let _services: Vec<ClientService> = (0..3)
+        .map(|i| {
+            ClientService::start(
+                &cfg,
+                i,
+                "127.0.0.1:0",
+                Some(registry.addr()),
+                fedavg_client_factory(),
+            )
+            .unwrap()
+        })
+        .collect();
+    let tracker = Arc::new(Tracker::new("loopback2"));
+    let mut coord =
+        RemoteCoordinator::new(cfg, Box::new(DefaultServerFlow), tracker.clone())
+            .unwrap();
+    coord.discover(registry.addr()).unwrap();
+    coord.run().unwrap();
+    let remote_acc = tracker.final_accuracy().unwrap();
+    assert!(
+        (local.final_accuracy - remote_acc).abs() < 0.25,
+        "local {} vs remote {remote_acc}",
+        local.final_accuracy
+    );
+}
+
+#[test]
+fn coordinator_fails_cleanly_without_clients() {
+    if !artifacts_ready() {
+        return;
+    }
+    let tracker = Arc::new(Tracker::new("empty"));
+    let mut coord =
+        RemoteCoordinator::new(quick_cfg(), Box::new(DefaultServerFlow), tracker)
+            .unwrap();
+    assert!(coord.run_round(0).is_err());
+}
+
+#[test]
+fn dead_client_surfaces_as_comm_error() {
+    if !artifacts_ready() {
+        return;
+    }
+    let tracker = Arc::new(Tracker::new("dead"));
+    let mut coord =
+        RemoteCoordinator::new(quick_cfg(), Box::new(DefaultServerFlow), tracker)
+            .unwrap();
+    // Point at a port nobody listens on.
+    coord.set_clients(vec![(0, "127.0.0.1:1".into())]);
+    let err = coord.run_round(0);
+    assert!(err.is_err());
+}

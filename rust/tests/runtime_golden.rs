@@ -1,0 +1,185 @@
+//! Cross-layer numeric validation: the Rust runtime must reproduce the
+//! exact outputs the Python compile path recorded in `artifacts/golden/`.
+//!
+//! This is the strongest end-to-end check of the AOT bridge: Python
+//! lowered the jitted entry points (Pallas kernels included) to HLO text;
+//! Rust parses, compiles and executes them on PJRT and must agree with
+//! jax's own execution bit-for-bit up to f32 tolerance.
+
+use std::path::{Path, PathBuf};
+
+use easyfl::model::{InputDtype, ParamVec};
+use easyfl::runtime::{Batch, Engine, Features};
+use easyfl::util::{bytes, json::Json};
+
+fn artifacts() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    artifacts().join("manifest.json").exists()
+}
+
+fn load_golden(model: &str) -> (Json, Batch, ParamVec, Engine) {
+    let dir = artifacts();
+    let engine = Engine::new(&dir).expect("engine");
+    let meta = engine.meta(model).expect("meta");
+    let golden_dir = dir.join("golden");
+    let golden = Json::parse(
+        &std::fs::read_to_string(golden_dir.join(format!("{model}_golden.json")))
+            .expect("golden json"),
+    )
+    .expect("parse golden");
+
+    let batch = golden.req_usize("batch").unwrap();
+    assert_eq!(batch, meta.batch, "golden batch must match AOT batch");
+    let x_path = golden_dir.join(format!("{model}_x.bin"));
+    let x = match meta.input_dtype {
+        InputDtype::F32 => Features::F32(bytes::read_f32_file(&x_path).unwrap()),
+        InputDtype::I32 => Features::I32(
+            bytes::read_i32_file(&x_path).unwrap(),
+        ),
+    };
+    let y = bytes::read_i32_file(&golden_dir.join(format!("{model}_y.bin"))).unwrap();
+    assert_eq!(y.len(), meta.batch);
+    assert_eq!(x.len(), meta.batch * meta.input_len());
+    let b = Batch { x, y, mask: vec![1.0; meta.batch] };
+    let params = engine.init_params(model).unwrap();
+    (golden, b, params, engine)
+}
+
+fn assert_close(got: f64, want: f64, tol: f64, what: &str) {
+    let denom = want.abs().max(1.0);
+    assert!(
+        ((got - want) / denom).abs() < tol,
+        "{what}: got {got}, want {want}"
+    );
+}
+
+fn check_model(model: &str) {
+    let (golden, batch, params, engine) = load_golden(model);
+
+    // eval_step reproduces jax numbers.
+    let (sum_loss, correct) = engine.eval_step(model, &params, &batch).unwrap();
+    assert_close(sum_loss, golden.req_f64("eval_sum_loss").unwrap(), 1e-4, "eval loss");
+    assert_eq!(correct, golden.req_f64("eval_correct").unwrap(), "eval correct");
+
+    // train_step reproduces jax numbers, including the updated params.
+    let mom = ParamVec::zeros(params.len());
+    let lr = golden.req_f64("lr").unwrap() as f32;
+    let out = engine.train_step(model, &params, &mom, &batch, lr).unwrap();
+    assert_close(out.sum_loss, golden.req_f64("train_sum_loss").unwrap(), 1e-4, "train loss");
+    assert_eq!(out.correct, golden.req_f64("train_correct").unwrap(), "train correct");
+    assert_close(out.params.l2(), golden.req_f64("train_param_l2").unwrap(), 1e-4, "param l2");
+    assert_close(out.momentum.l2(), golden.req_f64("train_mom_l2").unwrap(), 1e-3, "mom l2");
+    let first8 = golden.get("train_param_first8").as_arr().unwrap();
+    for (i, want) in first8.iter().enumerate() {
+        assert_close(
+            out.params[i] as f64,
+            want.as_f64().unwrap(),
+            1e-3,
+            &format!("param[{i}]"),
+        );
+    }
+}
+
+#[test]
+fn mlp_matches_golden() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    check_model("mlp");
+}
+
+#[test]
+fn cnn_matches_golden() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    check_model("cnn");
+}
+
+#[test]
+fn charcnn_matches_golden() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    check_model("charcnn");
+}
+
+#[test]
+fn aggregate_matches_manual_weighted_sum() {
+    if !have_artifacts() {
+        return;
+    }
+    let dir = artifacts();
+    let engine = Engine::new(&dir).unwrap();
+    let p = engine.meta("mlp").unwrap().param_count;
+    let a: Vec<f32> = (0..p).map(|i| (i % 13) as f32 * 0.1).collect();
+    let b: Vec<f32> = (0..p).map(|i| (i % 7) as f32 * -0.2).collect();
+    let c: Vec<f32> = (0..p).map(|i| ((i % 5) as f32).sin()).collect();
+    let got = engine
+        .aggregate("mlp", &[&a, &b, &c], &[0.5, 0.3, 0.2])
+        .unwrap();
+    for i in (0..p).step_by(9973) {
+        let want = 0.5 * a[i] + 0.3 * b[i] + 0.2 * c[i];
+        assert!((got[i] - want).abs() < 1e-4, "i={i}: {} vs {want}", got[i]);
+    }
+}
+
+#[test]
+fn aggregate_chunks_large_cohorts() {
+    if !have_artifacts() {
+        return;
+    }
+    let dir = artifacts();
+    let engine = Engine::new(&dir).unwrap();
+    let meta = engine.meta("mlp").unwrap();
+    let p = meta.param_count;
+    let n = meta.agg_k + 5; // forces the chunked path
+    let vecs: Vec<Vec<f32>> = (0..n)
+        .map(|r| (0..p).map(|i| ((r * 31 + i) % 11) as f32 * 0.01).collect())
+        .collect();
+    let refs: Vec<&[f32]> = vecs.iter().map(|v| &v[..]).collect();
+    let weights: Vec<f32> = (0..n).map(|r| 1.0 / (r + 1) as f32).collect();
+    let got = engine.aggregate("mlp", &refs, &weights).unwrap();
+    for i in (0..p).step_by(7919) {
+        let want: f32 = (0..n).map(|r| weights[r] * vecs[r][i]).sum();
+        assert!((got[i] - want).abs() < 1e-4, "i={i}");
+    }
+}
+
+#[test]
+fn fedprox_mu_zero_equals_train() {
+    if !have_artifacts() {
+        return;
+    }
+    let (_, batch, params, engine) = load_golden("mlp");
+    let mom = ParamVec::zeros(params.len());
+    let t = engine.train_step("mlp", &params, &mom, &batch, 0.05).unwrap();
+    let f = engine
+        .fedprox_step("mlp", &params, &params, &mom, &batch, 0.05, 0.0)
+        .unwrap();
+    assert!((t.sum_loss - f.sum_loss).abs() < 1e-6);
+    for i in (0..params.len()).step_by(9973) {
+        assert!((t.params[i] - f.params[i]).abs() < 1e-6);
+    }
+}
+
+#[test]
+fn batch_size_mismatch_rejected() {
+    if !have_artifacts() {
+        return;
+    }
+    let engine = Engine::new(Path::new("artifacts")).unwrap();
+    let params = engine.init_params("mlp").unwrap();
+    let bad = Batch {
+        x: Features::F32(vec![0.0; 784 * 3]),
+        y: vec![0; 3],
+        mask: vec![1.0; 3],
+    };
+    assert!(engine.eval_step("mlp", &params, &bad).is_err());
+}
