@@ -39,7 +39,9 @@ fn main() -> easyfl::Result<()> {
     );
 
     let tracker = Arc::new(Tracker::new("e2e-femnist"));
-    let session = easyfl::init(cfg)?.with_tracker(tracker.clone());
+    let session = easyfl::SessionBuilder::new(cfg)
+        .tracker(tracker.clone())
+        .build()?;
     let started = std::time::Instant::now();
     let report = session.run_with(|server, round| {
         if let Some((r, loss, acc)) = server.tracker().loss_curve().last() {

@@ -1,18 +1,18 @@
 //! FedProx application (paper §VIII-F, Table V).
 //!
 //! The paper's point: a published federated optimization algorithm drops
-//! into EasyFL by replacing **one** training-flow stage. The whole
-//! algorithm-specific code is `algorithms/fedprox.rs` (a few dozen lines
-//! vs ~380 in the original implementation); this example just registers it.
+//! into EasyFL by replacing **one** training-flow stage. Since the
+//! component registry landed, even the registration is gone: FedProx is
+//! `cfg.algorithm = "fedprox"` — the whole algorithm-specific code stays
+//! in `algorithms/fedprox.rs` (a few dozen lines vs ~380 in the original
+//! implementation).
 //!
 //! ```bash
 //! cargo run --release --example fedprox_app
 //! ```
 
-use easyfl::algorithms::fedprox_client_factory;
-
-fn run(mu: Option<f32>) -> easyfl::Result<f64> {
-    let cfg = easyfl::Config {
+fn run(mu: Option<f64>) -> easyfl::Result<f64> {
+    let mut cfg = easyfl::Config {
         dataset: easyfl::DatasetKind::Femnist,
         partition: easyfl::Partition::ByClass(2), // heterogeneity FedProx targets
         num_clients: 30,
@@ -24,18 +24,18 @@ fn run(mu: Option<f32>) -> easyfl::Result<f64> {
         eval_every: 6,
         ..easyfl::Config::default()
     };
-    let mut session = easyfl::init(cfg)?;
     if let Some(mu) = mu {
-        // register_client(NewClient) — the paper's Listing 1, Example 2.
-        session = session.register_client(fedprox_client_factory(mu));
+        // The paper's Listing 1, Example 2 — now pure configuration.
+        cfg.algorithm = "fedprox".into();
+        cfg.fedprox_mu = mu;
     }
-    Ok(session.run()?.final_accuracy)
+    Ok(easyfl::init(cfg)?.run()?.final_accuracy)
 }
 
 fn main() -> easyfl::Result<()> {
     let fedavg = run(None)?;
     println!("fedavg          final acc {:.2}%", fedavg * 100.0);
-    for mu in [0.01f32, 0.1] {
+    for mu in [0.01f64, 0.1] {
         let acc = run(Some(mu))?;
         println!(
             "fedprox μ={mu:<5} final acc {:.2}%  ({:+.2}pp vs fedavg)",

@@ -4,21 +4,20 @@
 //! person-ReID benchmarks) — sizes differ by an order of magnitude, label
 //! spaces are personal. The plugin federates the backbone and keeps a
 //! personal classifier head per client (Table VII: aggregation + train
-//! stages). The example also reproduces the Fig 9 observation: with
-//! unbalanced clients, ~3 devices already reach near-optimal round time.
+//! stages). Selecting it is `cfg.algorithm = "fedreid"`; the head
+//! boundary is resolved lazily from artifact metadata, so no engine
+//! preamble is needed. The example also reproduces the Fig 9
+//! observation: with unbalanced clients, ~3 devices already reach
+//! near-optimal round time.
 //!
 //! ```bash
 //! cargo run --release --example fedreid_app
 //! ```
 
-use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
-
-use easyfl::algorithms::{fedreid_client_factory, FedReidServerFlow, SharedHeads};
-
 fn main() -> easyfl::Result<()> {
     // Nine heterogeneous clients: class(3) skew + unbalanced sizes.
     let base = easyfl::Config {
+        algorithm: "fedreid".into(),
         dataset: easyfl::DatasetKind::Femnist,
         partition: easyfl::Partition::ByClass(3),
         num_clients: 9,
@@ -34,19 +33,10 @@ fn main() -> easyfl::Result<()> {
     };
 
     // Personalized federation: shared backbone, per-client heads.
-    let heads: SharedHeads = Arc::new(Mutex::new(HashMap::new()));
-    let engine = easyfl::runtime::Engine::new(&base.artifacts_dir)?;
-    let meta = engine.meta(&base.resolved_model())?;
-    drop(engine);
-
-    let session = easyfl::init(base.clone())?
-        .register_client(fedreid_client_factory(heads.clone()))
-        .register_server(Box::new(FedReidServerFlow::from_meta(&meta)));
-    let report = session.run()?;
+    let report = easyfl::init(base.clone())?.run()?;
     println!(
-        "fedreid: global-backbone acc {:.2}% | {} personal heads retained",
+        "fedreid: global-backbone acc {:.2}%",
         report.final_accuracy * 100.0,
-        heads.lock().unwrap().len()
     );
 
     // Fig 9: round time vs number of devices for the 9-client round.
@@ -59,10 +49,7 @@ fn main() -> easyfl::Result<()> {
             eval_every: 0,
             ..base.clone()
         };
-        let heads: SharedHeads = Arc::new(Mutex::new(HashMap::new()));
-        let report = easyfl::init(cfg)?
-            .register_client(fedreid_client_factory(heads))
-            .run()?;
+        let report = easyfl::init(cfg)?.run()?;
         if m == 1 {
             t1 = report.avg_round_ms;
         }

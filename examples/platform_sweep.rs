@@ -1,0 +1,54 @@
+//! Multi-job platform + sweep demo.
+//!
+//! Submits a dataset × partition × algorithm grid onto a bounded worker
+//! pool and prints the comparative report table — many training tasks,
+//! one process, shared artifact cache.
+//!
+//! ```bash
+//! cargo run --release --example platform_sweep
+//! ```
+
+use easyfl::{Config, DatasetKind, Partition, Platform, Sweep};
+
+fn main() -> easyfl::Result<()> {
+    let base = Config {
+        num_clients: 16,
+        clients_per_round: 6,
+        rounds: 3,
+        local_epochs: 1,
+        max_samples: 64,
+        test_samples: 128,
+        eval_every: 3,
+        ..Config::default()
+    };
+
+    let platform = Platform::new(4);
+    let sweep = Sweep::new(base)
+        .datasets(&[DatasetKind::Femnist, DatasetKind::Cifar10])
+        .partitions(&[Partition::Iid, Partition::ByClass(2)])
+        .algorithms(&["fedavg", "fedprox", "stc"]);
+
+    println!(
+        "submitting {} jobs to {} workers...\n",
+        sweep.configs().len(),
+        platform.num_workers()
+    );
+    let report = sweep.run(&platform)?;
+    print!("{}", report.to_table());
+
+    let best = report
+        .ok_rows()
+        .max_by(|(_, a), (_, b)| {
+            a.final_accuracy.total_cmp(&b.final_accuracy)
+        });
+    if let Some((row, rep)) = best {
+        println!(
+            "\nbest cell: {}/{}/{} at {:.2}%",
+            row.dataset,
+            row.partition,
+            row.algorithm,
+            rep.final_accuracy * 100.0
+        );
+    }
+    Ok(())
+}

@@ -1,17 +1,16 @@
 //! STC compression application (paper §VIII-F, Table V).
 //!
 //! Sparse Ternary Compression replaces the client *compression* stage and
-//! the server *decompression* stage — nothing else. The example compares
-//! uplink volume and accuracy against dense FedAvg.
+//! the server *decompression* stage — nothing else. Selecting it is pure
+//! configuration (`cfg.algorithm = "stc"`); the example compares uplink
+//! volume and accuracy against dense FedAvg.
 //!
 //! ```bash
 //! cargo run --release --example stc_compression
 //! ```
 
-use easyfl::algorithms::{stc_client_factory, STCServerFlow};
-
 fn run(sparsity: Option<f64>) -> easyfl::Result<(f64, usize)> {
-    let cfg = easyfl::Config {
+    let mut cfg = easyfl::Config {
         dataset: easyfl::DatasetKind::Femnist,
         num_clients: 20,
         clients_per_round: 10,
@@ -22,13 +21,11 @@ fn run(sparsity: Option<f64>) -> easyfl::Result<(f64, usize)> {
         eval_every: 6,
         ..easyfl::Config::default()
     };
-    let mut session = easyfl::init(cfg)?;
     if let Some(s) = sparsity {
-        session = session
-            .register_client(stc_client_factory(s))
-            .register_server(Box::new(STCServerFlow));
+        cfg.algorithm = "stc".into();
+        cfg.stc_sparsity = s;
     }
-    let report = session.run()?;
+    let report = easyfl::init(cfg)?.run()?;
     Ok((report.final_accuracy, report.comm_bytes))
 }
 

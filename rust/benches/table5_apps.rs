@@ -9,15 +9,14 @@
 mod baselines;
 mod common;
 
-use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
-
 use baselines::monolith::{self, Variant};
-use easyfl::algorithms::{
-    fedprox_client_factory, fedreid_client_factory, stc_client_factory,
-    FedReidServerFlow, STCServerFlow, SharedHeads,
-};
 use easyfl::{Config, DatasetKind, Partition};
+
+/// The whole "integration" of an easyfl application: one config field.
+fn run_app(mut cfg: Config, algorithm: &str) -> easyfl::Report {
+    cfg.algorithm = algorithm.into();
+    easyfl::init(cfg).unwrap().run().unwrap()
+}
 
 fn cfg() -> Config {
     Config {
@@ -50,13 +49,9 @@ fn main() {
 
     // --- FedProx
     let orig = monolith::run(&cfg(), Variant::FedProx { mu: 0.05 }).unwrap();
-    let t = std::time::Instant::now();
-    let rep = easyfl::init(cfg())
-        .unwrap()
-        .register_client(fedprox_client_factory(0.05))
-        .run()
-        .unwrap();
-    let _ = t;
+    let mut prox_cfg = cfg();
+    prox_cfg.fedprox_mu = 0.05;
+    let rep = run_app(prox_cfg, "fedprox");
     common::row(&[
         "FedProx",
         "~380",
@@ -68,12 +63,9 @@ fn main() {
 
     // --- STC
     let orig = monolith::run(&cfg(), Variant::Stc { sparsity: 0.01 }).unwrap();
-    let rep = easyfl::init(cfg())
-        .unwrap()
-        .register_client(stc_client_factory(0.01))
-        .register_server(Box::new(STCServerFlow))
-        .run()
-        .unwrap();
+    let mut stc_cfg = cfg();
+    stc_cfg.stc_sparsity = 0.01;
+    let rep = run_app(stc_cfg, "stc");
     common::row(&[
         "STC",
         "~560",
@@ -89,16 +81,7 @@ fn main() {
     reid_cfg.clients_per_round = 9;
     reid_cfg.unbalanced = true;
     let orig = monolith::run(&reid_cfg, Variant::FedAvg).unwrap();
-    let heads: SharedHeads = Arc::new(Mutex::new(HashMap::new()));
-    let engine = easyfl::runtime::Engine::new(&reid_cfg.artifacts_dir).unwrap();
-    let meta = engine.meta(&reid_cfg.resolved_model()).unwrap();
-    drop(engine);
-    let rep = easyfl::init(reid_cfg)
-        .unwrap()
-        .register_client(fedreid_client_factory(heads))
-        .register_server(Box::new(FedReidServerFlow::from_meta(&meta)))
-        .run()
-        .unwrap();
+    let rep = run_app(reid_cfg, "fedreid");
     common::row(&[
         "FedReID",
         "~450",

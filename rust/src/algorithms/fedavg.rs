@@ -7,6 +7,7 @@ use std::sync::Arc;
 
 use crate::coordinator::ClientFlowFactory;
 use crate::flow::{DefaultClientFlow, DefaultServerFlow, ServerFlow};
+use crate::registry::{AlgorithmParts, ComponentRegistry};
 
 /// Marker for the default algorithm.
 pub struct FedAvg;
@@ -21,4 +22,17 @@ impl FedAvg {
 /// Factory: one default client flow per device worker.
 pub fn fedavg_client_factory() -> ClientFlowFactory {
     Arc::new(|| Box::new(DefaultClientFlow))
+}
+
+/// Self-register under the name `"fedavg"`.
+pub(crate) fn register(reg: &mut ComponentRegistry) {
+    reg.register_algorithm(
+        "fedavg",
+        Arc::new(|_cfg| {
+            Ok(AlgorithmParts {
+                server_flow: FedAvg::server_flow(),
+                client_factory: fedavg_client_factory(),
+            })
+        }),
+    );
 }

@@ -11,6 +11,7 @@ use std::sync::Arc;
 
 use crate::coordinator::ClientFlowFactory;
 use crate::error::Result;
+use crate::registry::{AlgorithmParts, ComponentRegistry};
 use crate::flow::client_stages::{local_sgd, TrainStats};
 use crate::flow::{ClientFlow, TrainTask};
 use crate::model::ParamVec;
@@ -44,4 +45,18 @@ impl ClientFlow for FedProxClientFlow {
 /// Factory for the device pool.
 pub fn fedprox_client_factory(mu: f32) -> ClientFlowFactory {
     Arc::new(move || Box::new(FedProxClientFlow { mu }))
+}
+
+/// Self-register under the name `"fedprox"`; μ comes from
+/// `Config::fedprox_mu`, so selecting FedProx is pure configuration.
+pub(crate) fn register(reg: &mut ComponentRegistry) {
+    reg.register_algorithm(
+        "fedprox",
+        Arc::new(|cfg| {
+            Ok(AlgorithmParts {
+                server_flow: Box::new(crate::flow::DefaultServerFlow),
+                client_factory: fedprox_client_factory(cfg.fedprox_mu as f32),
+            })
+        }),
+    );
 }

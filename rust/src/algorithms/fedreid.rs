@@ -19,6 +19,7 @@ use crate::error::Result;
 use crate::flow::client_stages::TrainStats;
 use crate::flow::{ClientFlow, ModelPayload, ServerFlow, TrainTask};
 use crate::model::{ModelMeta, ParamVec};
+use crate::registry::{AlgorithmParts, ComponentRegistry};
 use crate::runtime::Engine;
 
 /// Per-client personal head storage, shared across device workers.
@@ -74,17 +75,25 @@ impl ClientFlow for FedReidClientFlow {
 
 /// Server flow: aggregate the backbone, keep the previous global head.
 pub struct FedReidServerFlow {
-    head_len: usize,
+    /// Resolved lazily from artifact metadata on first aggregation when
+    /// constructed via [`FedReidServerFlow::lazy`] (the registry path:
+    /// no engine exists yet at registration time).
+    head_len: Option<usize>,
 }
 
 impl FedReidServerFlow {
     pub fn new(head_len: usize) -> Self {
-        FedReidServerFlow { head_len }
+        FedReidServerFlow { head_len: Some(head_len) }
     }
 
     /// Convenience: read the head length from artifact metadata.
     pub fn from_meta(meta: &ModelMeta) -> Self {
         Self::new(head_len(meta))
+    }
+
+    /// Defer head-length resolution to the first `aggregate` call.
+    pub fn lazy() -> Self {
+        FedReidServerFlow { head_len: None }
     }
 }
 
@@ -99,6 +108,14 @@ impl ServerFlow for FedReidServerFlow {
         model: &str,
         contributions: &[(ParamVec, f64)],
     ) -> Result<ParamVec> {
+        let hl = match self.head_len {
+            Some(hl) => hl,
+            None => {
+                let hl = head_len(&engine.meta(model)?);
+                self.head_len = Some(hl);
+                hl
+            }
+        };
         // Standard weighted FedAvg over the full vectors first (reuses the
         // L1 kernel) ...
         let mut flow = crate::flow::DefaultServerFlow;
@@ -107,7 +124,7 @@ impl ServerFlow for FedReidServerFlow {
         // head scaled to neutral: global head is irrelevant (clients
         // restore their own), but keep it finite and stable by averaging —
         // already done — so nothing to undo; mark the boundary for tests.
-        let split = merged.len() - self.head_len;
+        let split = merged.len() - hl;
         let _ = &mut merged[split..];
         Ok(merged)
     }
@@ -118,6 +135,26 @@ pub fn fedreid_client_factory(heads: SharedHeads) -> ClientFlowFactory {
     Arc::new(move || {
         Box::new(FedReidClientFlow { heads: heads.clone() })
     })
+}
+
+/// Self-register under the name `"fedreid"`. Each instantiation gets its
+/// own head map (sessions must not share personalization state), and the
+/// server flow resolves the head boundary lazily from artifact metadata.
+pub(crate) fn register(reg: &mut ComponentRegistry) {
+    reg.register_algorithm(
+        "fedreid",
+        Arc::new(|_cfg| {
+            let heads: SharedHeads = Arc::new(Mutex::new(HashMap::new()));
+            Ok(AlgorithmParts {
+                server_flow: Box::new(FedReidServerFlow::lazy()),
+                client_factory: fedreid_client_factory(heads),
+            })
+        }),
+    );
+    reg.register_server_flow(
+        "fedreid",
+        Arc::new(|_cfg| Ok(Box::new(FedReidServerFlow::lazy()) as Box<dyn ServerFlow>)),
+    );
 }
 
 #[cfg(test)]

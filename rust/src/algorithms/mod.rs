@@ -20,3 +20,12 @@ pub use fedavg::{fedavg_client_factory, FedAvg};
 pub use fedprox::{fedprox_client_factory, FedProxClientFlow};
 pub use fedreid::{fedreid_client_factory, FedReidServerFlow, SharedHeads};
 pub use stc::{stc_client_factory, STCClientFlow, STCServerFlow};
+
+/// Every built-in algorithm self-registers into the component registry;
+/// `Config::algorithm = "<name>"` is then all it takes to select one.
+pub(crate) fn register_builtins(reg: &mut crate::registry::ComponentRegistry) {
+    fedavg::register(reg);
+    fedprox::register(reg);
+    stc::register(reg);
+    fedreid::register(reg);
+}

@@ -14,6 +14,7 @@ use crate::coordinator::ClientFlowFactory;
 use crate::error::Result;
 use crate::flow::{ClientFlow, ServerFlow, Update};
 use crate::model::ParamVec;
+use crate::registry::{AlgorithmParts, ComponentRegistry};
 
 /// Client flow: dense update → sparse ternary delta.
 pub struct STCClientFlow {
@@ -80,6 +81,24 @@ impl ServerFlow for STCServerFlow {
 /// Factory for the device pool.
 pub fn stc_client_factory(sparsity: f64) -> ClientFlowFactory {
     Arc::new(move || Box::new(STCClientFlow::new(sparsity)))
+}
+
+/// Self-register under the name `"stc"`; the kept fraction comes from
+/// `Config::stc_sparsity`.
+pub(crate) fn register(reg: &mut ComponentRegistry) {
+    reg.register_algorithm(
+        "stc",
+        Arc::new(|cfg| {
+            Ok(AlgorithmParts {
+                server_flow: Box::new(STCServerFlow),
+                client_factory: stc_client_factory(cfg.stc_sparsity),
+            })
+        }),
+    );
+    reg.register_server_flow(
+        "stc",
+        Arc::new(|_cfg| Ok(Box::new(STCServerFlow) as Box<dyn ServerFlow>)),
+    );
 }
 
 #[cfg(test)]

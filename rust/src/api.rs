@@ -1,6 +1,7 @@
 //! The interface layer (paper §IV, Table II): the low-code API.
 //!
-//! The paper's quick start is three lines; so is ours:
+//! The paper's quick start is three lines; so is ours — and, since the
+//! component registry landed, so is every built-in application:
 //!
 //! ```no_run
 //! let session = easyfl::init(easyfl::Config::default()).unwrap();   // init(configs)
@@ -8,18 +9,29 @@
 //! println!("accuracy {:.1}%", report.final_accuracy * 100.0);
 //! ```
 //!
-//! `register_dataset`, `register_model`, `register_server` and
-//! `register_client` swap any module for a custom one, mirroring Table II.
+//! Selecting FedProx (or STC, or FedReID) is configuration, not wiring:
+//!
+//! ```no_run
+//! let mut cfg = easyfl::Config::default();
+//! cfg.algorithm = "fedprox".into();          // registry lookup at init
+//! cfg.fedprox_mu = 0.1;
+//! let report = easyfl::init(cfg).unwrap().run().unwrap();
+//! ```
+//!
+//! Custom components plug in through [`SessionBuilder`], the
+//! non-consuming successor of the old `register_*` methods (mirroring
+//! Table II): `dataset`, `model`, `server_flow`, `client_factory`,
+//! `tracker`. For many concurrent sessions, see [`crate::platform`].
 
 use std::sync::Arc;
 
-use crate::algorithms::fedavg_client_factory;
 use crate::config::Config;
 use crate::coordinator::{ClientFlowFactory, Server};
 use crate::data::registry::DataSource;
 use crate::data::FedDataset;
 use crate::error::Result;
-use crate::flow::{DefaultServerFlow, ServerFlow};
+use crate::flow::ServerFlow;
+use crate::registry;
 use crate::tracking::Tracker;
 
 /// Outcome of a training run — the numbers the paper's evaluation reports.
@@ -36,55 +48,158 @@ pub struct Report {
     /// Total communication volume.
     pub comm_bytes: usize,
     pub rounds: usize,
+    /// True when the run produced evaluation metrics; false means the
+    /// accuracy fields are placeholder zeros (e.g. `eval_every = 0`) and
+    /// a warning was recorded with the tracker.
+    pub converged: bool,
 }
 
-/// An initialized EasyFL session (paper: the state `init(configs)` sets up).
-pub struct Session {
+/// Builder for an EasyFL session: configuration plus optional component
+/// overrides. Non-consuming — methods take `&mut self`, so a builder can
+/// be threaded through helper functions before [`SessionBuilder::build`].
+pub struct SessionBuilder {
     cfg: Config,
     dataset: Option<Arc<dyn DataSource>>,
     server_flow: Option<Box<dyn ServerFlow>>,
+    client_factory: Option<ClientFlowFactory>,
+    tracker: Option<Arc<Tracker>>,
+}
+
+impl SessionBuilder {
+    pub fn new(cfg: Config) -> SessionBuilder {
+        SessionBuilder {
+            cfg,
+            dataset: None,
+            server_flow: None,
+            client_factory: None,
+            tracker: None,
+        }
+    }
+
+    /// Select a registered algorithm by name (`Config::algorithm`).
+    pub fn algorithm(&mut self, name: &str) -> &mut Self {
+        self.cfg.algorithm = name.to_string();
+        self
+    }
+
+    /// Plug a custom federated dataset (paper: `register_dataset`).
+    pub fn dataset(&mut self, source: Arc<dyn DataSource>) -> &mut Self {
+        self.dataset = Some(source);
+        self
+    }
+
+    /// Select a different AOT model artifact (paper: `register_model`).
+    pub fn model(&mut self, model: &str) -> &mut Self {
+        self.cfg.model = model.to_string();
+        self
+    }
+
+    /// Replace server-side flow stages (paper: `register_server`).
+    pub fn server_flow(&mut self, flow: Box<dyn ServerFlow>) -> &mut Self {
+        self.server_flow = Some(flow);
+        self
+    }
+
+    /// Replace client-side flow stages (paper: `register_client`).
+    pub fn client_factory(&mut self, factory: ClientFlowFactory) -> &mut Self {
+        self.client_factory = Some(factory);
+        self
+    }
+
+    /// Attach a pre-built tracker (remote tracking, shared stores).
+    pub fn tracker(&mut self, tracker: Arc<Tracker>) -> &mut Self {
+        self.tracker = Some(tracker);
+        self
+    }
+
+    /// Access the configuration as currently staged.
+    pub fn config(&self) -> &Config {
+        &self.cfg
+    }
+
+    /// Validate the config, resolve the algorithm (and, if requested, the
+    /// data source) through the component registry, and produce a
+    /// ready-to-run [`Session`]. Component overrides staged on the
+    /// builder take precedence over the algorithm's own parts.
+    ///
+    /// The builder can be reused; staged overrides are moved into the
+    /// first session built.
+    pub fn build(&mut self) -> Result<Session> {
+        self.cfg.validate()?;
+        let parts = registry::with_global(|r| r.algorithm(&self.cfg))?;
+        let dataset = match (self.dataset.take(), self.cfg.data_source.clone()) {
+            (Some(d), _) => Some(d),
+            (None, Some(name)) => {
+                // Keep cfg.dataset in sync when the source names a built-in
+                // kind, so "auto" model pairing follows the actual data.
+                if let Ok(kind) = crate::config::DatasetKind::parse(&name) {
+                    self.cfg.dataset = kind;
+                }
+                Some(registry::with_global(|r| r.dataset(&name, &self.cfg))?)
+            }
+            (None, None) => None,
+        };
+        Ok(Session {
+            cfg: self.cfg.clone(),
+            dataset,
+            server_flow: self.server_flow.take().unwrap_or(parts.server_flow),
+            client_factory: self
+                .client_factory
+                .take()
+                .unwrap_or(parts.client_factory),
+            tracker: self.tracker.take(),
+        })
+    }
+}
+
+/// An initialized EasyFL session (paper: the state `init(configs)` sets
+/// up) — every component resolved, ready to `run`.
+pub struct Session {
+    cfg: Config,
+    dataset: Option<Arc<dyn DataSource>>,
+    server_flow: Box<dyn ServerFlow>,
     client_factory: ClientFlowFactory,
     tracker: Option<Arc<Tracker>>,
 }
 
-/// `init(configs)` — Table II row 1.
+/// `init(configs)` — Table II row 1. Resolves `cfg.algorithm` (and
+/// `cfg.data_source`, if set) through the component registry; unknown
+/// names fail here with the catalog of registered names.
 pub fn init(cfg: Config) -> Result<Session> {
-    cfg.validate()?;
-    Ok(Session {
-        cfg,
-        dataset: None,
-        server_flow: None,
-        client_factory: fedavg_client_factory(),
-        tracker: None,
-    })
+    SessionBuilder::new(cfg).build()
 }
 
 impl Session {
     /// `register_dataset(train, test)` — plug a custom federated dataset.
+    #[deprecated(since = "0.2.0", note = "use SessionBuilder::dataset")]
     pub fn register_dataset(mut self, source: Arc<dyn DataSource>) -> Session {
         self.dataset = Some(source);
         self
     }
 
     /// `register_model(model)` — select a different AOT model artifact.
+    #[deprecated(since = "0.2.0", note = "use SessionBuilder::model")]
     pub fn register_model(mut self, model: &str) -> Session {
         self.cfg.model = model.to_string();
         self
     }
 
     /// `register_server(server)` — replace server-side flow stages.
+    #[deprecated(since = "0.2.0", note = "use SessionBuilder::server_flow")]
     pub fn register_server(mut self, flow: Box<dyn ServerFlow>) -> Session {
-        self.server_flow = Some(flow);
+        self.server_flow = flow;
         self
     }
 
     /// `register_client(client)` — replace client-side flow stages.
+    #[deprecated(since = "0.2.0", note = "use SessionBuilder::client_factory")]
     pub fn register_client(mut self, factory: ClientFlowFactory) -> Session {
         self.client_factory = factory;
         self
     }
 
     /// Attach a pre-built tracker (remote tracking, shared stores).
+    #[deprecated(since = "0.2.0", note = "use SessionBuilder::tracker")]
     pub fn with_tracker(mut self, tracker: Arc<Tracker>) -> Session {
         self.tracker = Some(tracker);
         self
@@ -95,26 +210,41 @@ impl Session {
         &self.cfg
     }
 
+    /// The session's tracker (created on demand if none was attached).
+    fn resolve_tracker(&mut self) -> Arc<Tracker> {
+        if let Some(t) = &self.tracker {
+            return t.clone();
+        }
+        let id = format!(
+            "task-{}-{}-{}-{}",
+            self.cfg.algorithm,
+            self.cfg.dataset.name(),
+            self.cfg.partition.name(),
+            self.cfg.seed
+        );
+        let t = match &self.cfg.tracking_dir {
+            Some(dir) => Arc::new(Tracker::persistent(&id, dir.clone())),
+            None => Arc::new(Tracker::new(&id)),
+        };
+        self.tracker = Some(t.clone());
+        t
+    }
+
     /// Build the server without running (examples and remote mode).
-    pub fn build_server(self) -> Result<Server> {
+    pub fn build_server(mut self) -> Result<Server> {
+        let tracker = self.resolve_tracker();
+        tracker.set_config("algorithm", self.cfg.algorithm.clone());
         let data: Arc<dyn DataSource> = match self.dataset {
             Some(d) => d,
             None => Arc::new(FedDataset::from_config(&self.cfg)?),
         };
-        let flow = self.server_flow.unwrap_or_else(|| Box::new(DefaultServerFlow));
-        let tracker = self.tracker.unwrap_or_else(|| {
-            let id = format!(
-                "task-{}-{}-{}",
-                self.cfg.dataset.name(),
-                self.cfg.partition.name(),
-                self.cfg.seed
-            );
-            match &self.cfg.tracking_dir {
-                Some(dir) => Arc::new(Tracker::persistent(&id, dir.clone())),
-                None => Arc::new(Tracker::new(&id)),
-            }
-        });
-        Server::new(self.cfg, data, flow, self.client_factory, tracker)
+        Server::new(
+            self.cfg,
+            data,
+            self.server_flow,
+            self.client_factory,
+            tracker,
+        )
     }
 
     /// `run(callback)` — train all rounds and report.
@@ -134,15 +264,100 @@ impl Session {
             callback(&server, round);
         }
         let tracker = server.tracker();
+        // Assemble the report (which may record warnings) before finish()
+        // persists the task, so warnings land in the saved JSON.
+        let report = report_from_tracker(&tracker, rounds);
         tracker.finish()?;
-        let curve = tracker.loss_curve();
-        Ok(Report {
-            final_accuracy: tracker.final_accuracy().unwrap_or(0.0),
-            best_accuracy: tracker.best_accuracy().unwrap_or(0.0),
-            final_train_loss: curve.last().map(|(_, l, _)| *l).unwrap_or(0.0),
-            avg_round_ms: tracker.avg_round_ms(),
-            comm_bytes: tracker.total_comm_bytes(),
-            rounds,
-        })
+        Ok(report)
+    }
+}
+
+/// Assemble a [`Report`] from a finished tracker. Missing evaluation
+/// metrics are surfaced as `converged = false` plus a tracker warning
+/// instead of being silently zeroed.
+pub(crate) fn report_from_tracker(tracker: &Tracker, rounds: usize) -> Report {
+    let curve = tracker.loss_curve();
+    let final_accuracy = tracker.final_accuracy();
+    if final_accuracy.is_none() {
+        tracker.warn(
+            "no test accuracy was recorded (eval_every = 0 or no evaluated \
+             rounds); Report accuracy fields default to 0.0",
+        );
+    }
+    Report {
+        final_accuracy: final_accuracy.unwrap_or(0.0),
+        best_accuracy: tracker.best_accuracy().unwrap_or(0.0),
+        final_train_loss: curve.last().map(|(_, l, _)| *l).unwrap_or(0.0),
+        avg_round_ms: tracker.avg_round_ms(),
+        comm_bytes: tracker.total_comm_bytes(),
+        rounds,
+        converged: final_accuracy.is_some(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tracking::RoundMetrics;
+
+    #[test]
+    fn init_rejects_unknown_algorithm_with_catalog() {
+        let mut cfg = Config::default();
+        cfg.algorithm = "no-such-algo".into();
+        let err = init(cfg).unwrap_err().to_string();
+        assert!(err.contains("no-such-algo"), "{err}");
+        assert!(err.contains("fedavg"), "{err}");
+        assert!(err.contains("fedprox"), "{err}");
+    }
+
+    #[test]
+    fn builder_is_non_consuming_and_reusable() {
+        let mut b = SessionBuilder::new(Config::default());
+        b.algorithm("stc").model("mlp");
+        assert_eq!(b.config().algorithm, "stc");
+        let s1 = b.build().unwrap();
+        assert_eq!(s1.config().algorithm, "stc");
+        // Second build still resolves (overrides were drained, algorithm
+        // parts resolve fresh from the registry).
+        let s2 = b.build().unwrap();
+        assert_eq!(s2.config().model, "mlp");
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_shims_still_compile_and_chain() {
+        let session = init(Config::default())
+            .unwrap()
+            .register_model("mlp")
+            .with_tracker(Arc::new(Tracker::new("shim")));
+        assert_eq!(session.config().model, "mlp");
+    }
+
+    #[test]
+    fn missing_eval_metrics_warn_instead_of_silently_zeroing() {
+        let t = Tracker::new("no-eval");
+        t.record_round(RoundMetrics {
+            round: 0,
+            train_loss: 1.0,
+            round_ms: 10.0,
+            comm_bytes: 100,
+            ..RoundMetrics::default()
+        });
+        let report = report_from_tracker(&t, 1);
+        assert!(!report.converged);
+        assert_eq!(report.final_accuracy, 0.0);
+        assert_eq!(t.warnings().len(), 1);
+        assert!(t.warnings()[0].contains("no test accuracy"));
+
+        let t2 = Tracker::new("with-eval");
+        t2.record_round(RoundMetrics {
+            round: 0,
+            test_accuracy: Some(0.5),
+            ..RoundMetrics::default()
+        });
+        let report = report_from_tracker(&t2, 1);
+        assert!(report.converged);
+        assert_eq!(report.final_accuracy, 0.5);
+        assert!(t2.warnings().is_empty());
     }
 }

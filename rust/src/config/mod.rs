@@ -127,8 +127,19 @@ impl Allocation {
 /// Full platform configuration. Defaults mirror the paper's Appendix B-A.
 #[derive(Debug, Clone)]
 pub struct Config {
+    /// Algorithm name resolved through the component registry at `init`
+    /// ("fedavg" | "fedprox" | "stc" | "fedreid" | any registered name).
+    /// This is what makes every built-in application a 3-line program:
+    /// selecting FedProx is `cfg.algorithm = "fedprox".into()`.
+    pub algorithm: String,
     /// Dataset to simulate.
     pub dataset: DatasetKind,
+    /// Optional registered data-source name; overrides `dataset` when a
+    /// custom [`crate::data::registry::DataSource`] was registered under
+    /// this name in the component registry. Built-in names ("femnist",
+    /// "shakespeare", "cifar10") also re-pair `dataset` — and therefore
+    /// the "auto" model — with the source actually served.
+    pub data_source: Option<String>,
     /// Model artifact name ("mlp" | "cnn" | "charcnn"), or "auto" to
     /// pair with the dataset (Table III pairing).
     pub model: String,
@@ -169,6 +180,8 @@ pub struct Config {
     pub data_amount: f64,
     /// FedProx proximal coefficient μ (used by the fedprox algorithm).
     pub fedprox_mu: f64,
+    /// STC kept-coordinate fraction (used by the stc algorithm).
+    pub stc_sparsity: f64,
     /// Base RNG seed: equal seeds reproduce experiments bit-for-bit.
     pub seed: u64,
     /// Where the tracking manager persists metrics (None ⇒ memory only).
@@ -184,7 +197,9 @@ pub struct Config {
 impl Default for Config {
     fn default() -> Self {
         Config {
+            algorithm: "fedavg".into(),
             dataset: DatasetKind::Femnist,
+            data_source: None,
             model: "auto".into(),
             artifacts_dir: PathBuf::from("artifacts"),
             num_clients: 0,
@@ -204,6 +219,7 @@ impl Default for Config {
             virtual_clock: false,
             data_amount: 1.0,
             fedprox_mu: 0.01,
+            stc_sparsity: 0.01,
             seed: 42,
             tracking_dir: None,
             eval_every: 1,
@@ -242,6 +258,12 @@ impl Config {
     /// Apply a JSON object of overrides on top of defaults.
     pub fn from_json(v: &Json) -> Result<Config> {
         let mut c = Config::default();
+        if let Some(s) = v.get("algorithm").as_str() {
+            c.algorithm = s.to_string();
+        }
+        if let Some(s) = v.get("data_source").as_str() {
+            c.data_source = Some(s.to_string());
+        }
         if let Some(s) = v.get("dataset").as_str() {
             c.dataset = DatasetKind::parse(s)?;
             c.model = c.dataset.default_model().to_string();
@@ -274,7 +296,9 @@ impl Config {
             c.lr = x;
         }
         if let Some(s) = v.get("partition").as_str() {
-            c.partition = Partition::parse(s)?;
+            // Resolve through the component registry so custom registered
+            // partition schemes are selectable from JSON config too.
+            c.partition = crate::registry::parse_partition(s)?;
         }
         if let Some(b) = v.get("unbalanced").as_bool() {
             c.unbalanced = b;
@@ -305,6 +329,9 @@ impl Config {
         }
         if let Some(x) = v.get("fedprox_mu").as_f64() {
             c.fedprox_mu = x;
+        }
+        if let Some(x) = v.get("stc_sparsity").as_f64() {
+            c.stc_sparsity = x;
         }
         if let Some(n) = v.get("seed").as_usize() {
             c.seed = n as u64;
@@ -356,6 +383,15 @@ impl Config {
         }
         if matches!(self.partition, Partition::Dirichlet(a) if a <= 0.0) {
             return Err(Error::Config("dir(a) needs a > 0".into()));
+        }
+        if self.algorithm.trim().is_empty() {
+            return Err(Error::Config("algorithm must be non-empty".into()));
+        }
+        if !(self.stc_sparsity > 0.0 && self.stc_sparsity <= 1.0) {
+            return Err(Error::Config("stc_sparsity must be in (0,1]".into()));
+        }
+        if self.fedprox_mu < 0.0 {
+            return Err(Error::Config("fedprox_mu must be ≥ 0".into()));
         }
         Ok(())
     }
@@ -409,6 +445,20 @@ mod tests {
     }
 
     #[test]
+    fn algorithm_fields_parse_from_json() {
+        let j = Json::parse(
+            r#"{"algorithm": "fedprox", "fedprox_mu": 0.1,
+                "stc_sparsity": 0.05, "data_source": "my-data"}"#,
+        )
+        .unwrap();
+        let c = Config::from_json(&j).unwrap();
+        assert_eq!(c.algorithm, "fedprox");
+        assert_eq!(c.fedprox_mu, 0.1);
+        assert_eq!(c.stc_sparsity, 0.05);
+        assert_eq!(c.data_source.as_deref(), Some("my-data"));
+    }
+
+    #[test]
     fn invalid_configs_rejected() {
         let cases = [
             r#"{"clients_per_round": 0}"#,
@@ -419,6 +469,10 @@ mod tests {
             r#"{"partition": "class(0)"}"#,
             r#"{"num_clients": 5, "clients_per_round": 10}"#,
             r#"{"profile_momentum": 2}"#,
+            r#"{"algorithm": " "}"#,
+            r#"{"stc_sparsity": 0}"#,
+            r#"{"stc_sparsity": 1.5}"#,
+            r#"{"fedprox_mu": -0.5}"#,
         ];
         for src in cases {
             let j = Json::parse(src).unwrap();

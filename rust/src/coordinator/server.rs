@@ -167,7 +167,6 @@ impl Server {
                     .collect()
             })
             .collect();
-        let sw_round = Stopwatch::start();
         let per_device = match &self.pool {
             Some(pool) => pool.run_round(jobs)?,
             None => {
@@ -191,7 +190,6 @@ impl Server {
             }
         };
         let distribution_ms = sw_dist.elapsed_ms();
-        let wall_ms = sw_round.elapsed_ms();
 
         // Adaptive profiling feedback (Algorithm 1 line 14).
         let measured: Vec<(usize, f64)> = per_device
@@ -283,10 +281,6 @@ impl Server {
             clients,
         };
         self.tracker.record_round(metrics.clone());
-        log::debug!(
-            "round {round}: loss {train_loss:.4} acc {train_accuracy:.3} \
-             makespan {makespan_ms:.0}ms wall {wall_ms:.0}ms"
-        );
         Ok(metrics)
     }
 

@@ -12,9 +12,9 @@ pub mod partition;
 pub mod registry;
 pub mod synth;
 
-use crate::config::{Config, DatasetKind};
-#[cfg(test)]
-use crate::config::Partition;
+use std::sync::Arc;
+
+use crate::config::{Config, DatasetKind, Partition};
 use crate::error::{Error, Result};
 use crate::model::InputDtype;
 use crate::runtime::{Batch, Features};
@@ -189,6 +189,33 @@ impl FedDataset {
             &mut rng,
         );
         LocalData { x, y, num_samples: n, input_len }
+    }
+}
+
+/// Self-register the built-in synthetic datasets and the four partition
+/// schemes into the component registry. Each dataset builder forces its
+/// own [`DatasetKind`] so `Config::data_source = Some("cifar10")` works
+/// regardless of what `Config::dataset` says.
+pub(crate) fn register_builtins(reg: &mut crate::registry::ComponentRegistry) {
+    for kind in [
+        DatasetKind::Femnist,
+        DatasetKind::Shakespeare,
+        DatasetKind::Cifar10,
+    ] {
+        reg.register_dataset(
+            kind.name(),
+            Arc::new(move |cfg: &Config| {
+                let mut c = cfg.clone();
+                c.dataset = kind;
+                Ok(Arc::new(FedDataset::from_config(&c)?)
+                    as Arc<dyn registry::DataSource>)
+            }),
+        );
+    }
+    // Partition specs all share Partition::parse; registering each head
+    // separately gives unknown-name errors a precise catalog.
+    for name in ["iid", "realistic", "dir", "class"] {
+        reg.register_partition(name, Arc::new(Partition::parse));
     }
 }
 

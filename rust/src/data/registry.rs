@@ -1,15 +1,16 @@
-//! Dataset registry behind the `register_dataset` API (paper §IV-B).
+//! The pluggable data-source contract behind `register_dataset`
+//! (paper §IV-B).
 //!
-//! Users plug custom federated datasets into the platform without touching
-//! the training flow: anything implementing [`DataSource`] can be
-//! registered under a name and selected by config. The built-in synthetic
-//! datasets are pre-registered.
-
-use std::collections::BTreeMap;
-use std::sync::Arc;
+//! Users plug custom federated datasets into the platform without
+//! touching the training flow: anything implementing [`DataSource`] can
+//! go straight onto a session (`SessionBuilder::dataset`) or be
+//! registered under a name in the component registry
+//! ([`crate::registry::ComponentRegistry::register_dataset`]) and
+//! selected by `Config::data_source`. The built-in synthetic datasets
+//! are pre-registered there.
 
 use crate::data::LocalData;
-use crate::error::{Error, Result};
+use crate::error::Result;
 
 /// A pluggable federated data source.
 pub trait DataSource: Send + Sync {
@@ -42,44 +43,16 @@ impl DataSource for crate::data::FedDataset {
     }
 }
 
-/// Name → data source registry.
-#[derive(Default)]
-pub struct DataRegistry {
-    sources: BTreeMap<String, Arc<dyn DataSource>>,
-}
-
-impl DataRegistry {
-    pub fn new() -> Self {
-        Self::default()
-    }
-
-    /// Register (or replace) a source under `name`.
-    pub fn register(&mut self, name: &str, source: Arc<dyn DataSource>) {
-        self.sources.insert(name.to_string(), source);
-    }
-
-    pub fn get(&self, name: &str) -> Result<Arc<dyn DataSource>> {
-        self.sources.get(name).cloned().ok_or_else(|| {
-            Error::Registry(format!(
-                "no dataset {name:?} registered (have: {:?})",
-                self.sources.keys().collect::<Vec<_>>()
-            ))
-        })
-    }
-
-    pub fn names(&self) -> Vec<String> {
-        self.sources.keys().cloned().collect()
-    }
-}
-
 #[cfg(test)]
 mod tests {
+    use std::sync::Arc;
+
     use super::*;
     use crate::config::{Config, DatasetKind, Partition};
     use crate::data::FedDataset;
 
     #[test]
-    fn register_and_lookup() {
+    fn fed_dataset_adapts_as_data_source() {
         let cfg = Config {
             dataset: DatasetKind::Cifar10,
             num_clients: 5,
@@ -88,13 +61,11 @@ mod tests {
             max_samples: 100,
             ..Config::default()
         };
-        let ds = Arc::new(FedDataset::from_config(&cfg).unwrap());
-        let mut reg = DataRegistry::new();
-        reg.register("custom", ds.clone());
-        let got = reg.get("custom").unwrap();
-        assert_eq!(got.num_clients(), 5);
-        assert!(got.client_samples(0) > 0);
-        assert!(reg.get("nope").is_err());
-        assert_eq!(reg.names(), vec!["custom"]);
+        let ds: Arc<dyn DataSource> =
+            Arc::new(FedDataset::from_config(&cfg).unwrap());
+        assert_eq!(ds.num_clients(), 5);
+        assert!(ds.client_samples(0) > 0);
+        assert!(ds.client_data(0, 1.0).unwrap().num_samples > 0);
+        assert_eq!(ds.test_data(32).unwrap().num_samples, 32);
     }
 }

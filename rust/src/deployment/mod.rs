@@ -126,6 +126,12 @@ impl Deployment {
             cfg.artifacts_dir.display().to_string(),
             "--batch-size".to_string(),
             cfg.batch_size.to_string(),
+            "--algorithm".to_string(),
+            cfg.algorithm.clone(),
+            "--fedprox-mu".to_string(),
+            cfg.fedprox_mu.to_string(),
+            "--stc-sparsity".to_string(),
+            cfg.stc_sparsity.to_string(),
         ];
         self.spawn(&format!("client-{client_index}"), port, &args)?;
         Ok(self.containers.last().unwrap().addr.clone())

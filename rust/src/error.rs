@@ -1,44 +1,70 @@
 //! Unified error type for the easyfl platform.
+//!
+//! Hand-rolled `Display`/`Error` impls keep the crate dependency-free
+//! (the offline registry ships no `thiserror`).
 
-use thiserror::Error;
+use std::fmt;
 
 /// All failure modes surfaced by the public API.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
     /// Configuration was syntactically valid but semantically wrong.
-    #[error("config error: {0}")]
     Config(String),
 
     /// An AOT artifact (HLO text / meta / init params) is missing or bad.
-    #[error("artifact error: {0}")]
     Artifact(String),
 
     /// The XLA/PJRT runtime rejected a compile or execute call.
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// A dataset/model/server/client registration problem.
-    #[error("registry error: {0}")]
     Registry(String),
 
     /// Remote-communication failure (framing, protocol, transport).
-    #[error("comm error: {0}")]
     Comm(String),
 
     /// Deployment-manager failure (spawn, supervise, teardown).
-    #[error("deploy error: {0}")]
     Deploy(String),
 
     /// Tracking-store failure (persistence, query).
-    #[error("tracking error: {0}")]
     Tracking(String),
 
     /// JSON parse/serialize failure.
-    #[error("json error: {0}")]
     Json(String),
 
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Artifact(m) => write!(f, "artifact error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Registry(m) => write!(f, "registry error: {m}"),
+            Error::Comm(m) => write!(f, "comm error: {m}"),
+            Error::Deploy(m) => write!(f, "deploy error: {m}"),
+            Error::Tracking(m) => write!(f, "tracking error: {m}"),
+            Error::Json(m) => write!(f, "json error: {m}"),
+            // Transparent: IO errors read best undecorated.
+            Error::Io(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 impl From<xla::Error> for Error {
@@ -49,3 +75,19 @@ impl From<xla::Error> for Error {
 
 /// Platform-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_prefixes_match_variants() {
+        assert_eq!(Error::Config("x".into()).to_string(), "config error: x");
+        assert_eq!(Error::Registry("y".into()).to_string(), "registry error: y");
+        let io = Error::from(std::io::Error::new(
+            std::io::ErrorKind::NotFound,
+            "gone",
+        ));
+        assert!(io.to_string().contains("gone"));
+    }
+}

@@ -15,6 +15,17 @@ pub use server_stages::{DefaultServerFlow, ModelPayload, ServerFlow};
 
 use crate::model::ParamVec;
 
+/// Register the default (FedAvg) server flow under its name. Algorithm
+/// modules register their own specialized flows alongside.
+pub(crate) fn register_builtins(reg: &mut crate::registry::ComponentRegistry) {
+    reg.register_server_flow(
+        "fedavg",
+        std::sync::Arc::new(|_cfg| {
+            Ok(Box::new(DefaultServerFlow) as Box<dyn ServerFlow>)
+        }),
+    );
+}
+
 /// A client's upload: the unit the compression/encryption stages shape.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Update {

@@ -15,6 +15,40 @@
 //! println!("accuracy: {:.2}%", report.final_accuracy * 100.0);
 //! ```
 //!
+//! ## Low-code applications: algorithms are configuration
+//!
+//! Every built-in application resolves by name through the
+//! [component registry](registry) — no factory imports, no wiring:
+//!
+//! ```no_run
+//! let mut cfg = easyfl::Config::default();
+//! cfg.algorithm = "fedprox".into();   // or "stc", "fedreid", ...
+//! cfg.fedprox_mu = 0.1;
+//! let report = easyfl::init(cfg).unwrap().run().unwrap();
+//! # let _ = report;
+//! ```
+//!
+//! The same holds from JSON config files (`{"algorithm": "stc"}`) and
+//! the CLI (`easyfl run --algorithm stc`). Custom algorithms, datasets,
+//! partitions and server flows self-register under string names with
+//! [`registry::register`]; custom per-session component overrides go
+//! through [`api::SessionBuilder`].
+//!
+//! ## Many jobs, one process
+//!
+//! [`Platform`] runs concurrent sessions on a bounded worker pool with a
+//! shared artifact cache, and [`Sweep`] expands dataset × partition ×
+//! algorithm grids into comparative report tables:
+//!
+//! ```no_run
+//! let platform = easyfl::Platform::new(4);
+//! let report = easyfl::Sweep::new(easyfl::Config::default())
+//!     .algorithms(&["fedavg", "fedprox", "stc"])
+//!     .run(&platform)
+//!     .unwrap();
+//! println!("{}", report.to_table());
+//! ```
+//!
 //! See `examples/` for heterogeneity simulation, distributed-training
 //! optimization (GreedyAda), remote training and the application plugins
 //! (FedProx, STC, FedReID).
@@ -27,15 +61,18 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod deployment;
+pub mod error;
 pub mod flow;
 pub mod model;
+pub mod platform;
+pub mod registry;
 pub mod runtime;
 pub mod scheduler;
 pub mod simulation;
 pub mod tracking;
-pub mod error;
 pub mod util;
 
-pub use api::{init, Report, Session};
+pub use api::{init, Report, Session, SessionBuilder};
 pub use config::{Allocation, Config, DatasetKind, Partition};
 pub use error::{Error, Result};
+pub use platform::{JobHandle, JobStatus, Platform, Sweep, SweepReport};

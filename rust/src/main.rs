@@ -2,20 +2,21 @@
 //!
 //! Subcommands mirror the paper's execution APIs (Table II):
 //!   run       standalone / distributed training (`easyfl.run()`)
+//!   sweep     dataset × partition × algorithm grid on a job platform
+//!   jobs      concurrent multi-job demo with live status
 //!   server    remote-training coordinator (`easyfl.start_server(args)`)
 //!   client    remote client service (`easyfl.start_client(args)`)
 //!   registry  service-discovery registry (§VII)
 //!   deploy    process-container deployment of a full federation (§VII)
-//!   info      artifact/platform inventory
+//!   info      artifact/platform inventory + registered components
 
 use std::sync::Arc;
 use std::time::Duration;
 
-use easyfl::algorithms::{fedavg_client_factory, fedprox_client_factory, stc_client_factory};
 use easyfl::comm::{ClientService, RemoteCoordinator, Registry};
 use easyfl::config::{Allocation, Config, DatasetKind, Partition};
 use easyfl::deployment::Deployment;
-use easyfl::flow::DefaultServerFlow;
+use easyfl::platform::{Platform, Sweep};
 use easyfl::tracking::Tracker;
 use easyfl::util::args::{usage, Args, Opt};
 
@@ -23,6 +24,8 @@ fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let code = match argv.first().map(String::as_str) {
         Some("run") => dispatch(cmd_run(&argv[1..])),
+        Some("sweep") => dispatch(cmd_sweep(&argv[1..])),
+        Some("jobs") => dispatch(cmd_jobs(&argv[1..])),
         Some("server") => dispatch(cmd_server(&argv[1..])),
         Some("client") => dispatch(cmd_client(&argv[1..])),
         Some("registry") => dispatch(cmd_registry(&argv[1..])),
@@ -31,7 +34,7 @@ fn main() {
         _ => {
             eprintln!(
                 "easyfl — low-code federated learning platform\n\n\
-                 USAGE: easyfl <run|server|client|registry|deploy|info> [options]\n\
+                 USAGE: easyfl <run|sweep|jobs|server|client|registry|deploy|info> [options]\n\
                  Run a subcommand with --help for its options."
             );
             2
@@ -72,7 +75,7 @@ fn common_opts() -> Vec<Opt> {
         Opt { name: "eval-every", help: "evaluate every n rounds", default: Some("1"), is_flag: false },
         Opt { name: "seed", help: "base RNG seed", default: Some("42"), is_flag: false },
         Opt { name: "artifacts", help: "AOT artifact directory", default: Some("artifacts"), is_flag: false },
-        Opt { name: "algorithm", help: "fedavg | fedprox | stc", default: Some("fedavg"), is_flag: false },
+        Opt { name: "algorithm", help: "registered algorithm name (fedavg | fedprox | stc | fedreid | ...)", default: Some("fedavg"), is_flag: false },
         Opt { name: "fedprox-mu", help: "FedProx μ", default: Some("0.01"), is_flag: false },
         Opt { name: "stc-sparsity", help: "STC kept fraction", default: Some("0.01"), is_flag: false },
         Opt { name: "tracking-dir", help: "persist metrics JSON here", default: None, is_flag: false },
@@ -114,7 +117,9 @@ fn parse_config(a: &Args) -> easyfl::Result<Config> {
     cfg.eval_every = a.get_usize("eval-every")?;
     cfg.seed = a.get_usize("seed")? as u64;
     cfg.artifacts_dir = a.get("artifacts").unwrap_or("artifacts").into();
+    cfg.algorithm = a.get("algorithm").unwrap_or("fedavg").to_string();
     cfg.fedprox_mu = a.get_f64("fedprox-mu")?;
+    cfg.stc_sparsity = a.get_f64("stc-sparsity")?;
     if let Some(dir) = a.get("tracking-dir") {
         cfg.tracking_dir = Some(dir.into());
     }
@@ -130,17 +135,8 @@ fn cmd_run(argv: &[String]) -> easyfl::Result<()> {
         return Ok(());
     }
     let cfg = parse_config(&a)?;
-    let mut session = easyfl::init(cfg.clone())?;
-    session = match a.get("algorithm").unwrap_or("fedavg") {
-        "fedavg" => session,
-        "fedprox" => session.register_client(fedprox_client_factory(cfg.fedprox_mu as f32)),
-        "stc" => session
-            .register_client(stc_client_factory(a.get_f64("stc-sparsity")?))
-            .register_server(Box::new(easyfl::algorithms::STCServerFlow)),
-        other => {
-            return Err(easyfl::Error::Config(format!("unknown algorithm {other:?}")))
-        }
-    };
+    // The registry resolves cfg.algorithm into flows — no wiring here.
+    let session = easyfl::init(cfg)?;
     let report = session.run_with(|server, _round| {
         let t = server.tracker();
         if let Some((r, loss, acc)) = t.loss_curve().last() {
@@ -158,6 +154,124 @@ fn cmd_run(argv: &[String]) -> easyfl::Result<()> {
         report.avg_round_ms,
         report.comm_bytes as f64 / (1024.0 * 1024.0)
     );
+    Ok(())
+}
+
+fn list_opt(a: &Args, name: &str, default: &str) -> Vec<String> {
+    a.get(name)
+        .unwrap_or(default)
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect()
+}
+
+fn cmd_sweep(argv: &[String]) -> easyfl::Result<()> {
+    let mut opts = common_opts();
+    opts.extend([
+        Opt { name: "datasets", help: "comma list of datasets to sweep", default: Some("femnist"), is_flag: false },
+        Opt { name: "partitions", help: "comma list of partition specs", default: Some("iid"), is_flag: false },
+        Opt { name: "algorithms", help: "comma list of algorithm names", default: Some("fedavg,fedprox,stc"), is_flag: false },
+        Opt { name: "workers", help: "concurrent platform workers", default: Some("4"), is_flag: false },
+    ]);
+    let a = Args::parse(argv, &opts)?;
+    if a.has_flag("help") {
+        println!(
+            "{}",
+            usage(
+                "sweep",
+                "Grid over datasets × partitions × algorithms on a job platform.",
+                &opts
+            )
+        );
+        return Ok(());
+    }
+    let base = parse_config(&a)?;
+    let datasets = list_opt(&a, "datasets", "femnist")
+        .iter()
+        .map(|s| DatasetKind::parse(s))
+        .collect::<easyfl::Result<Vec<_>>>()?;
+    let partitions = list_opt(&a, "partitions", "iid")
+        .iter()
+        .map(|s| easyfl::registry::parse_partition(s))
+        .collect::<easyfl::Result<Vec<_>>>()?;
+    let algorithms = list_opt(&a, "algorithms", "fedavg,fedprox,stc");
+    let algo_refs: Vec<&str> = algorithms.iter().map(String::as_str).collect();
+
+    let platform = Platform::new(a.get_usize("workers")?);
+    let sweep = Sweep::new(base)
+        .datasets(&datasets)
+        .partitions(&partitions)
+        .algorithms(&algo_refs);
+    let n = sweep.configs().len();
+    println!(
+        "sweeping {n} configurations on {} workers...\n",
+        platform.num_workers()
+    );
+    let report = sweep.run(&platform)?;
+    print!("{}", report.to_table());
+    Ok(())
+}
+
+fn cmd_jobs(argv: &[String]) -> easyfl::Result<()> {
+    let mut opts = common_opts();
+    opts.extend([
+        Opt { name: "algorithms", help: "one concurrent job per algorithm", default: Some("fedavg,fedprox,stc"), is_flag: false },
+        Opt { name: "workers", help: "concurrent platform workers", default: Some("2"), is_flag: false },
+    ]);
+    let a = Args::parse(argv, &opts)?;
+    if a.has_flag("help") {
+        println!(
+            "{}",
+            usage(
+                "jobs",
+                "Submit concurrent jobs and watch their status live.",
+                &opts
+            )
+        );
+        return Ok(());
+    }
+    let base = parse_config(&a)?;
+    let platform = Platform::new(a.get_usize("workers")?);
+    let mut handles = Vec::new();
+    for algo in list_opt(&a, "algorithms", "fedavg,fedprox,stc") {
+        let mut cfg = base.clone();
+        cfg.algorithm = algo;
+        handles.push(platform.submit(cfg)?);
+    }
+    loop {
+        let mut all_done = true;
+        let mut line = String::new();
+        for h in &handles {
+            let status = h.status();
+            if !status.is_terminal() {
+                all_done = false;
+            }
+            line.push_str(&format!(
+                "{}: {:?} {:>3.0}%  ",
+                h.label(),
+                status,
+                h.progress() * 100.0
+            ));
+        }
+        println!("{line}");
+        if all_done {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(500));
+    }
+    for h in handles {
+        let label = h.label().to_string();
+        match h.join() {
+            Ok(rep) => println!(
+                "{label}: acc {:.2}% | avg round {:.0} ms | comm {:.1} MiB",
+                rep.final_accuracy * 100.0,
+                rep.avg_round_ms,
+                rep.comm_bytes as f64 / (1024.0 * 1024.0)
+            ),
+            Err(e) => println!("{label}: failed: {e}"),
+        }
+    }
     Ok(())
 }
 
@@ -194,6 +308,8 @@ fn cmd_client(argv: &[String]) -> easyfl::Result<()> {
         return Ok(());
     }
     let cfg = parse_config(&a)?;
+    // The registry resolves --algorithm into the client-side flow.
+    let parts = easyfl::registry::with_global(|r| r.algorithm(&cfg))?;
     let index = a.get_usize("client-index")?;
     let bind = format!("127.0.0.1:{}", a.get_usize("port")?);
     let service = ClientService::start(
@@ -201,7 +317,7 @@ fn cmd_client(argv: &[String]) -> easyfl::Result<()> {
         index,
         &bind,
         a.get("registry"),
-        fedavg_client_factory(),
+        parts.client_factory,
     )?;
     println!("client-{index} serving on {}", service.addr());
     loop {
@@ -222,9 +338,10 @@ fn cmd_server(argv: &[String]) -> easyfl::Result<()> {
         return Ok(());
     }
     let cfg = parse_config(&a)?;
+    // The registry resolves --algorithm into the server-side flow.
+    let parts = easyfl::registry::with_global(|r| r.algorithm(&cfg))?;
     let tracker = Arc::new(Tracker::new("remote-task"));
-    let mut coord =
-        RemoteCoordinator::new(cfg, Box::new(DefaultServerFlow), tracker.clone())?;
+    let mut coord = RemoteCoordinator::new(cfg, parts.server_flow, tracker.clone())?;
     let registry = a.get("registry").unwrap().to_string();
     let min_clients = a.get_usize("min-clients")?;
     let deadline = std::time::Instant::now()
@@ -280,8 +397,8 @@ fn cmd_deploy(argv: &[String]) -> easyfl::Result<()> {
     println!("{n} clients deployed + ready in {:.1?}", sw.elapsed());
 
     let tracker = Arc::new(Tracker::new("deploy-task"));
-    let mut coord =
-        RemoteCoordinator::new(cfg, Box::new(DefaultServerFlow), tracker.clone())?;
+    let parts = easyfl::registry::with_global(|r| r.algorithm(&cfg))?;
+    let mut coord = RemoteCoordinator::new(cfg, parts.server_flow, tracker.clone())?;
     let deadline = std::time::Instant::now() + Duration::from_secs(20);
     while coord.discover(&registry_addr)? < n {
         if std::time::Instant::now() > deadline {
@@ -334,5 +451,12 @@ fn cmd_info(argv: &[String]) -> easyfl::Result<()> {
             Err(e) => println!("  {model:<8} unavailable: {e}"),
         }
     }
+    let (algos, datasets, partitions, flows) =
+        easyfl::registry::with_global(|r| r.names());
+    println!("\nregistered components:");
+    println!("  algorithms:   {}", algos.join(", "));
+    println!("  data sources: {}", datasets.join(", "));
+    println!("  partitions:   {}", partitions.join(", "));
+    println!("  server flows: {}", flows.join(", "));
     Ok(())
 }

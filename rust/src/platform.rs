@@ -1,0 +1,774 @@
+//! Multi-job orchestration: many FL sessions, one process.
+//!
+//! The classic `init(cfg).run()` flow is one blocking training task per
+//! process. A [`Platform`] turns the crate into a serving architecture:
+//! jobs are submitted as plain [`Config`]s, queued onto a bounded worker
+//! pool, and observed through [`JobHandle`]s (`status`, `progress`,
+//! `join`, `cancel`) backed by each job's own tracker. Workers share the
+//! process-wide artifact cache, so N concurrent jobs parse each model
+//! artifact once.
+//!
+//! ```no_run
+//! let platform = easyfl::Platform::new(4);
+//! let mut cfg = easyfl::Config::default();
+//! cfg.algorithm = "fedprox".into();
+//! let job = platform.submit(cfg).unwrap();
+//! println!("{:?} {:.0}%", job.status(), job.progress() * 100.0);
+//! let report = job.join().unwrap();
+//! # let _ = report;
+//! ```
+//!
+//! [`Sweep`] builds on this: it expands a grid over datasets ×
+//! partitions × algorithms, submits every cell, and renders a
+//! comparative report table.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use crate::api::{report_from_tracker, Report, SessionBuilder};
+use crate::config::{Config, DatasetKind, Partition};
+use crate::error::{Error, Result};
+use crate::registry;
+use crate::tracking::Tracker;
+
+/// Lifecycle of a submitted job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobStatus {
+    /// Waiting for a worker.
+    Queued,
+    /// A worker is training it.
+    Running,
+    /// Finished; `join` returns `Ok(Report)`.
+    Completed,
+    /// Finished; `join` returns the error.
+    Failed,
+    /// Cancelled before or during training.
+    Cancelled,
+}
+
+impl JobStatus {
+    pub fn is_terminal(self) -> bool {
+        matches!(
+            self,
+            JobStatus::Completed | JobStatus::Failed | JobStatus::Cancelled
+        )
+    }
+}
+
+/// Shared per-job state: status + result guarded by one mutex/condvar,
+/// progress read lock-free off the tracker.
+struct JobState {
+    id: u64,
+    label: String,
+    total_rounds: usize,
+    tracker: Arc<Tracker>,
+    cancel: AtomicBool,
+    status: Mutex<(JobStatus, Option<Result<Report>>)>,
+    done: Condvar,
+}
+
+impl JobState {
+    fn set_status(&self, s: JobStatus) {
+        let mut guard = self.status.lock().unwrap();
+        guard.0 = s;
+        if s.is_terminal() {
+            self.done.notify_all();
+        }
+    }
+
+    fn finish(&self, result: Result<Report>) {
+        let status = if self.cancel.load(Ordering::SeqCst) && result.is_err() {
+            JobStatus::Cancelled
+        } else if result.is_ok() {
+            JobStatus::Completed
+        } else {
+            JobStatus::Failed
+        };
+        let mut guard = self.status.lock().unwrap();
+        guard.0 = status;
+        guard.1 = Some(result);
+        self.done.notify_all();
+    }
+}
+
+/// Handle to a submitted job. Dropping the handle does not cancel the
+/// job; the platform keeps it running to completion.
+pub struct JobHandle {
+    state: Arc<JobState>,
+}
+
+impl JobHandle {
+    pub fn id(&self) -> u64 {
+        self.state.id
+    }
+
+    /// Human-readable job label (also the tracker's task id).
+    pub fn label(&self) -> &str {
+        &self.state.label
+    }
+
+    pub fn status(&self) -> JobStatus {
+        self.state.status.lock().unwrap().0
+    }
+
+    /// Completed-round fraction in `[0, 1]`, read from the tracker.
+    pub fn progress(&self) -> f64 {
+        if self.state.total_rounds == 0 {
+            return 0.0;
+        }
+        (self.state.tracker.num_rounds() as f64
+            / self.state.total_rounds as f64)
+            .min(1.0)
+    }
+
+    /// The job's tracker (live metrics while running, full history after).
+    pub fn tracker(&self) -> Arc<Tracker> {
+        self.state.tracker.clone()
+    }
+
+    /// Request cancellation. Queued jobs are dropped when a worker picks
+    /// them up; running jobs stop at the next round boundary.
+    pub fn cancel(&self) {
+        self.state.cancel.store(true, Ordering::SeqCst);
+    }
+
+    /// Block until the job reaches a terminal status and take its result.
+    pub fn join(self) -> Result<Report> {
+        let mut guard = self.state.status.lock().unwrap();
+        while !guard.0.is_terminal() {
+            guard = self.state.done.wait(guard).unwrap();
+        }
+        guard
+            .1
+            .take()
+            .unwrap_or_else(|| Err(Error::Runtime("job result already taken".into())))
+    }
+
+    /// Block until terminal without consuming the result.
+    pub fn wait(&self) -> JobStatus {
+        let mut guard = self.state.status.lock().unwrap();
+        while !guard.0.is_terminal() {
+            guard = self.state.done.wait(guard).unwrap();
+        }
+        guard.0
+    }
+}
+
+/// Context handed to a job body: its tracker plus a cancellation probe.
+pub struct JobCtx {
+    state: Arc<JobState>,
+}
+
+impl JobCtx {
+    pub fn cancelled(&self) -> bool {
+        self.state.cancel.load(Ordering::SeqCst)
+    }
+
+    pub fn tracker(&self) -> Arc<Tracker> {
+        self.state.tracker.clone()
+    }
+}
+
+type JobBody = Box<dyn FnOnce(&JobCtx) -> Result<Report> + Send>;
+
+struct QueuedJob {
+    state: Arc<JobState>,
+    body: JobBody,
+}
+
+/// Shared FIFO queue with shutdown flag.
+struct Queue {
+    jobs: Mutex<(VecDeque<QueuedJob>, bool)>,
+    ready: Condvar,
+}
+
+impl Queue {
+    fn push(&self, job: QueuedJob) {
+        self.jobs.lock().unwrap().0.push_back(job);
+        self.ready.notify_one();
+    }
+
+    /// Pop the next job; `None` once shut down and drained.
+    fn pop(&self) -> Option<QueuedJob> {
+        let mut guard = self.jobs.lock().unwrap();
+        loop {
+            if let Some(job) = guard.0.pop_front() {
+                return Some(job);
+            }
+            if guard.1 {
+                return None;
+            }
+            guard = self.ready.wait(guard).unwrap();
+        }
+    }
+
+    fn shut_down(&self) {
+        self.jobs.lock().unwrap().1 = true;
+        self.ready.notify_all();
+    }
+}
+
+/// A bounded worker pool running many FL sessions concurrently.
+pub struct Platform {
+    queue: Arc<Queue>,
+    workers: Vec<JoinHandle<()>>,
+    jobs: Mutex<Vec<Arc<JobState>>>,
+    next_id: AtomicU64,
+}
+
+impl Platform {
+    /// Spawn a platform with `workers` concurrent job slots.
+    pub fn new(workers: usize) -> Platform {
+        let workers = workers.max(1);
+        let queue = Arc::new(Queue {
+            jobs: Mutex::new((VecDeque::new(), false)),
+            ready: Condvar::new(),
+        });
+        let handles = (0..workers)
+            .map(|i| {
+                let queue = queue.clone();
+                std::thread::Builder::new()
+                    .name(format!("easyfl-platform-{i}"))
+                    .spawn(move || {
+                        while let Some(job) = queue.pop() {
+                            Self::run_job(job);
+                        }
+                    })
+                    .expect("spawn platform worker")
+            })
+            .collect();
+        Platform {
+            queue,
+            workers: handles,
+            jobs: Mutex::new(Vec::new()),
+            next_id: AtomicU64::new(1),
+        }
+    }
+
+    fn run_job(job: QueuedJob) {
+        let QueuedJob { state, body } = job;
+        if state.cancel.load(Ordering::SeqCst) {
+            state.finish(Err(Error::Runtime("job cancelled while queued".into())));
+            return;
+        }
+        state.set_status(JobStatus::Running);
+        let ctx = JobCtx { state: state.clone() };
+        let result = body(&ctx);
+        state.finish(result);
+    }
+
+    /// Submit a training job described entirely by its config. Unknown
+    /// algorithm / data-source names fail here (fast), before queueing.
+    pub fn submit(&self, cfg: Config) -> Result<JobHandle> {
+        cfg.validate()?;
+        registry::with_global(|r| {
+            if !r.has_algorithm(&cfg.algorithm) {
+                // Reuse the catalog-listing error.
+                return r.algorithm(&cfg).map(|_| ());
+            }
+            if let Some(name) = &cfg.data_source {
+                if !r.has_dataset(name) {
+                    return r.dataset(name, &cfg).map(|_| ());
+                }
+            }
+            Ok(())
+        })?;
+        let id = self.next_id.fetch_add(1, Ordering::SeqCst);
+        let label = format!(
+            "job-{id}-{}-{}-{}",
+            cfg.algorithm,
+            cfg.dataset.name(),
+            cfg.partition.name()
+        );
+        let tracker = match &cfg.tracking_dir {
+            Some(dir) => Arc::new(Tracker::persistent(&label, dir.clone())),
+            None => Arc::new(Tracker::new(&label)),
+        };
+        let rounds = cfg.rounds;
+        Ok(self.enqueue(
+            id,
+            label,
+            rounds,
+            tracker,
+            Box::new(move |ctx| run_session_job(cfg, ctx)),
+        ))
+    }
+
+    /// Submit an arbitrary job body (custom workloads, tests). The body
+    /// must poll [`JobCtx::cancelled`] at convenient boundaries and
+    /// record progress through the provided tracker.
+    pub fn spawn_job(
+        &self,
+        label: &str,
+        total_rounds: usize,
+        tracker: Arc<Tracker>,
+        body: JobBody,
+    ) -> Result<JobHandle> {
+        let id = self.next_id.fetch_add(1, Ordering::SeqCst);
+        Ok(self.enqueue(id, label.to_string(), total_rounds, tracker, body))
+    }
+
+    fn enqueue(
+        &self,
+        id: u64,
+        label: String,
+        total_rounds: usize,
+        tracker: Arc<Tracker>,
+        body: JobBody,
+    ) -> JobHandle {
+        let state = Arc::new(JobState {
+            id,
+            label,
+            total_rounds,
+            tracker,
+            cancel: AtomicBool::new(false),
+            status: Mutex::new((JobStatus::Queued, None)),
+            done: Condvar::new(),
+        });
+        self.jobs.lock().unwrap().push(state.clone());
+        self.queue.push(QueuedJob { state: state.clone(), body });
+        JobHandle { state }
+    }
+
+    /// Handles to every retained job (the `jobs` CLI view). Terminal
+    /// jobs stay in the index — and keep their full tracker history —
+    /// until [`Platform::prune_finished`] drops them.
+    pub fn jobs(&self) -> Vec<JobHandle> {
+        self.jobs
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|s| JobHandle { state: s.clone() })
+            .collect()
+    }
+
+    /// Drop terminal jobs from the index so long-lived serving processes
+    /// don't accumulate tracker history without bound. Outstanding
+    /// [`JobHandle`]s keep their own job alive independently. Returns
+    /// how many entries were pruned.
+    pub fn prune_finished(&self) -> usize {
+        let mut jobs = self.jobs.lock().unwrap();
+        let before = jobs.len();
+        jobs.retain(|s| !s.status.lock().unwrap().0.is_terminal());
+        before - jobs.len()
+    }
+
+    pub fn num_workers(&self) -> usize {
+        self.workers.len()
+    }
+}
+
+impl Drop for Platform {
+    /// Graceful shutdown: drain the queue, then join every worker.
+    fn drop(&mut self) {
+        self.queue.shut_down();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// The body `Platform::submit` queues: a full session run with per-round
+/// cancellation checks.
+fn run_session_job(cfg: Config, ctx: &JobCtx) -> Result<Report> {
+    let mut server = SessionBuilder::new(cfg)
+        .tracker(ctx.tracker())
+        .build()?
+        .build_server()?;
+    let rounds = server.cfg.rounds;
+    for round in 0..rounds {
+        if ctx.cancelled() {
+            return Err(Error::Runtime(format!(
+                "job cancelled at round {round}/{rounds}"
+            )));
+        }
+        server.run_round(round)?;
+    }
+    let tracker = server.tracker();
+    // Report first (it may record warnings), then persist.
+    let report = report_from_tracker(&tracker, rounds);
+    tracker.finish()?;
+    Ok(report)
+}
+
+// ----------------------------------------------------------------- sweep
+
+/// Grid expansion over datasets × partitions × algorithms, executed on a
+/// [`Platform`] and summarized as a comparative table.
+pub struct Sweep {
+    base: Config,
+    datasets: Vec<DatasetKind>,
+    partitions: Vec<Partition>,
+    algorithms: Vec<String>,
+}
+
+impl Sweep {
+    /// A sweep whose axes default to the base config's single values.
+    pub fn new(base: Config) -> Sweep {
+        Sweep {
+            datasets: vec![base.dataset],
+            partitions: vec![base.partition],
+            algorithms: vec![base.algorithm.clone()],
+            base,
+        }
+    }
+
+    pub fn datasets(mut self, ds: &[DatasetKind]) -> Sweep {
+        self.datasets = ds.to_vec();
+        self
+    }
+
+    pub fn partitions(mut self, ps: &[Partition]) -> Sweep {
+        self.partitions = ps.to_vec();
+        self
+    }
+
+    pub fn algorithms(mut self, algos: &[&str]) -> Sweep {
+        self.algorithms = algos.iter().map(|s| s.to_string()).collect();
+        self
+    }
+
+    /// Expand the grid. Each cell clones the base config; when a cell's
+    /// dataset differs from the base's, the model is reset to `"auto"`
+    /// so it re-pairs with that dataset (an explicitly configured model
+    /// is kept for cells on the base dataset).
+    pub fn configs(&self) -> Vec<Config> {
+        let mut out = Vec::new();
+        for &dataset in &self.datasets {
+            for &partition in &self.partitions {
+                for algorithm in &self.algorithms {
+                    let mut cfg = self.base.clone();
+                    cfg.dataset = dataset;
+                    cfg.partition = partition;
+                    cfg.algorithm = algorithm.clone();
+                    if dataset != self.base.dataset {
+                        // Swept datasets must actually be served: drop a
+                        // base data_source override and re-pair the model.
+                        cfg.data_source = None;
+                        cfg.model = "auto".into();
+                    }
+                    out.push(cfg);
+                }
+            }
+        }
+        out
+    }
+
+    /// Submit every cell and join them all into a report.
+    pub fn run(self, platform: &Platform) -> Result<SweepReport> {
+        let cells = self.configs();
+        let mut handles = Vec::with_capacity(cells.len());
+        for cfg in cells {
+            let key = (
+                cfg.dataset.name().to_string(),
+                cfg.partition.name(),
+                cfg.algorithm.clone(),
+            );
+            handles.push((key, platform.submit(cfg)?));
+        }
+        let rows = handles
+            .into_iter()
+            .map(|((dataset, partition, algorithm), h)| SweepRow {
+                dataset,
+                partition,
+                algorithm,
+                outcome: h.join(),
+            })
+            .collect();
+        Ok(SweepReport { rows })
+    }
+}
+
+/// One sweep cell's identity and outcome.
+pub struct SweepRow {
+    pub dataset: String,
+    pub partition: String,
+    pub algorithm: String,
+    pub outcome: Result<Report>,
+}
+
+/// Results of a sweep, renderable as an aligned text table.
+pub struct SweepReport {
+    pub rows: Vec<SweepRow>,
+}
+
+impl SweepReport {
+    /// Successful cells only.
+    pub fn ok_rows(&self) -> impl Iterator<Item = (&SweepRow, &Report)> {
+        self.rows
+            .iter()
+            .filter_map(|r| r.outcome.as_ref().ok().map(|rep| (r, rep)))
+    }
+
+    /// Render the comparative table the `sweep` subcommand prints.
+    pub fn to_table(&self) -> String {
+        let mut out = String::new();
+        let header = format!(
+            "{:<12} {:<12} {:<10} {:>8} {:>8} {:>10} {:>10}  {}\n",
+            "dataset", "partition", "algorithm", "acc%", "best%", "round ms",
+            "comm MiB", "status"
+        );
+        out.push_str(&header);
+        out.push_str(&"-".repeat(header.len().saturating_sub(1)));
+        out.push('\n');
+        for row in &self.rows {
+            match &row.outcome {
+                Ok(rep) => out.push_str(&format!(
+                    "{:<12} {:<12} {:<10} {:>8.2} {:>8.2} {:>10.0} {:>10.2}  {}\n",
+                    row.dataset,
+                    row.partition,
+                    row.algorithm,
+                    rep.final_accuracy * 100.0,
+                    rep.best_accuracy * 100.0,
+                    rep.avg_round_ms,
+                    rep.comm_bytes as f64 / (1024.0 * 1024.0),
+                    if rep.converged { "ok" } else { "ok (no eval)" },
+                )),
+                Err(e) => out.push_str(&format!(
+                    "{:<12} {:<12} {:<10} {:>8} {:>8} {:>10} {:>10}  error: {e}\n",
+                    row.dataset, row.partition, row.algorithm, "-", "-", "-", "-",
+                )),
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tracking::RoundMetrics;
+    use std::time::Duration;
+
+    fn quick_report() -> Report {
+        Report {
+            final_accuracy: 0.5,
+            best_accuracy: 0.6,
+            final_train_loss: 1.0,
+            avg_round_ms: 10.0,
+            comm_bytes: 1024,
+            rounds: 1,
+            converged: true,
+        }
+    }
+
+    #[test]
+    fn jobs_run_concurrently_on_the_pool() {
+        let platform = Platform::new(3);
+        let barrier = Arc::new(std::sync::Barrier::new(3));
+        let handles: Vec<JobHandle> = (0..3)
+            .map(|i| {
+                let barrier = barrier.clone();
+                platform
+                    .spawn_job(
+                        &format!("concurrent-{i}"),
+                        1,
+                        Arc::new(Tracker::new(&format!("concurrent-{i}"))),
+                        Box::new(move |_ctx| {
+                            // Deadlocks unless all three run at once.
+                            barrier.wait();
+                            Ok(quick_report())
+                        }),
+                    )
+                    .unwrap()
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(h.wait(), JobStatus::Completed);
+            assert!(h.join().is_ok());
+        }
+    }
+
+    #[test]
+    fn cancel_while_queued_never_runs() {
+        let platform = Platform::new(1);
+        let (tx, rx) = std::sync::mpsc::channel::<()>();
+        let blocker = platform
+            .spawn_job(
+                "blocker",
+                1,
+                Arc::new(Tracker::new("blocker")),
+                Box::new(move |_ctx| {
+                    rx.recv().ok();
+                    Ok(quick_report())
+                }),
+            )
+            .unwrap();
+        let queued = platform
+            .spawn_job(
+                "queued",
+                1,
+                Arc::new(Tracker::new("queued")),
+                Box::new(|_ctx| Ok(quick_report())),
+            )
+            .unwrap();
+        assert_eq!(queued.status(), JobStatus::Queued);
+        queued.cancel();
+        tx.send(()).unwrap();
+        assert_eq!(blocker.wait(), JobStatus::Completed);
+        assert_eq!(queued.wait(), JobStatus::Cancelled);
+        assert!(queued.join().is_err());
+    }
+
+    #[test]
+    fn running_jobs_observe_cancellation() {
+        let platform = Platform::new(1);
+        let h = platform
+            .spawn_job(
+                "loopy",
+                100,
+                Arc::new(Tracker::new("loopy")),
+                Box::new(|ctx| {
+                    for _ in 0..1000 {
+                        if ctx.cancelled() {
+                            return Err(Error::Runtime("cancelled".into()));
+                        }
+                        std::thread::sleep(Duration::from_millis(1));
+                    }
+                    Ok(quick_report())
+                }),
+            )
+            .unwrap();
+        while h.status() == JobStatus::Queued {
+            std::thread::yield_now();
+        }
+        h.cancel();
+        assert_eq!(h.wait(), JobStatus::Cancelled);
+    }
+
+    #[test]
+    fn progress_tracks_recorded_rounds() {
+        let platform = Platform::new(1);
+        let tracker = Arc::new(Tracker::new("progress"));
+        let h = platform
+            .spawn_job(
+                "progress",
+                4,
+                tracker.clone(),
+                Box::new(move |ctx| {
+                    for round in 0..2 {
+                        ctx.tracker().record_round(RoundMetrics {
+                            round,
+                            ..RoundMetrics::default()
+                        });
+                    }
+                    Ok(quick_report())
+                }),
+            )
+            .unwrap();
+        h.wait();
+        assert!((h.progress() - 0.5).abs() < 1e-9);
+        assert_eq!(h.tracker().num_rounds(), 2);
+    }
+
+    #[test]
+    fn submit_rejects_unknown_algorithm_before_queueing() {
+        let platform = Platform::new(1);
+        let mut cfg = Config::default();
+        cfg.algorithm = "not-an-algo".into();
+        let err = platform.submit(cfg).unwrap_err().to_string();
+        assert!(err.contains("not-an-algo"), "{err}");
+        assert!(err.contains("fedavg"), "{err}");
+    }
+
+    #[test]
+    fn sweep_expands_the_full_grid() {
+        let sweep = Sweep::new(Config::default())
+            .datasets(&[DatasetKind::Femnist, DatasetKind::Cifar10])
+            .partitions(&[Partition::Iid, Partition::ByClass(2)])
+            .algorithms(&["fedavg", "fedprox", "stc"]);
+        let cells = sweep.configs();
+        assert_eq!(cells.len(), 12);
+        assert!(cells.iter().all(|c| c.model == "auto"));
+        assert_eq!(
+            cells
+                .iter()
+                .filter(|c| c.algorithm == "stc"
+                    && c.dataset == DatasetKind::Cifar10)
+                .count(),
+            2
+        );
+    }
+
+    #[test]
+    fn sweep_keeps_explicit_model_on_base_dataset_cells() {
+        let base = Config {
+            model: "charcnn".into(),
+            ..Config::default()
+        };
+        let cells = Sweep::new(base)
+            .datasets(&[DatasetKind::Femnist, DatasetKind::Cifar10])
+            .algorithms(&["fedavg", "stc"])
+            .configs();
+        for c in &cells {
+            if c.dataset == DatasetKind::Femnist {
+                assert_eq!(c.model, "charcnn", "base-dataset cells keep model");
+            } else {
+                assert_eq!(c.model, "auto", "swept datasets re-pair the model");
+            }
+        }
+    }
+
+    #[test]
+    fn prune_drops_only_terminal_jobs() {
+        let platform = Platform::new(1);
+        let (tx, rx) = std::sync::mpsc::channel::<()>();
+        let running = platform
+            .spawn_job(
+                "running",
+                1,
+                Arc::new(Tracker::new("running")),
+                Box::new(move |_ctx| {
+                    rx.recv().ok();
+                    Ok(quick_report())
+                }),
+            )
+            .unwrap();
+        let done = platform
+            .spawn_job(
+                "done",
+                1,
+                Arc::new(Tracker::new("done")),
+                Box::new(|_ctx| Ok(quick_report())),
+            )
+            .unwrap();
+        // Nothing terminal yet: the worker is blocked on `running` and
+        // `done` is queued behind it.
+        assert_eq!(platform.prune_finished(), 0);
+        assert_eq!(platform.jobs().len(), 2);
+        tx.send(()).unwrap();
+        assert_eq!(running.wait(), JobStatus::Completed);
+        assert_eq!(done.wait(), JobStatus::Completed);
+        assert_eq!(platform.prune_finished(), 2);
+        assert!(platform.jobs().is_empty());
+        // Handles held by the caller still work after pruning.
+        assert!(running.join().is_ok());
+    }
+
+    #[test]
+    fn sweep_report_renders_errors_and_successes() {
+        let report = SweepReport {
+            rows: vec![
+                SweepRow {
+                    dataset: "femnist".into(),
+                    partition: "iid".into(),
+                    algorithm: "fedavg".into(),
+                    outcome: Ok(quick_report()),
+                },
+                SweepRow {
+                    dataset: "cifar10".into(),
+                    partition: "iid".into(),
+                    algorithm: "stc".into(),
+                    outcome: Err(Error::Runtime("boom".into())),
+                },
+            ],
+        };
+        let table = report.to_table();
+        assert!(table.contains("fedavg"));
+        assert!(table.contains("50.00"));
+        assert!(table.contains("error: runtime error: boom"));
+        assert_eq!(report.ok_rows().count(), 1);
+    }
+}

@@ -1,0 +1,86 @@
+//! Process-wide artifact cache.
+//!
+//! Engines are per-thread (the PJRT client is `Rc`-based), but the
+//! artifacts they load are immutable files — so metadata parses and
+//! initial-parameter reads are shared across every engine, device worker
+//! and [`crate::platform::Platform`] job in the process. A 32-job sweep
+//! parses each `<model>_meta.json` and reads each `<model>_init.bin`
+//! once, not 32 times.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::error::Result;
+use crate::model::{ModelMeta, ParamVec};
+
+type MetaMap = HashMap<(PathBuf, String), Arc<ModelMeta>>;
+type InitMap = HashMap<PathBuf, Arc<ParamVec>>;
+
+static METAS: OnceLock<Mutex<MetaMap>> = OnceLock::new();
+static INITS: OnceLock<Mutex<InitMap>> = OnceLock::new();
+
+/// Load (or fetch the cached) model metadata for `<dir>/<model>_meta.json`.
+pub fn meta(dir: &Path, model: &str) -> Result<Arc<ModelMeta>> {
+    let cache = METAS.get_or_init(Default::default);
+    let key = (dir.to_path_buf(), model.to_string());
+    if let Some(m) = cache.lock().unwrap().get(&key) {
+        return Ok(m.clone());
+    }
+    // Load outside the lock; a racing duplicate load is harmless.
+    let loaded = Arc::new(ModelMeta::load(dir, model)?);
+    cache.lock().unwrap().insert(key, loaded.clone());
+    Ok(loaded)
+}
+
+/// Load (or fetch the cached) initial parameters for a model.
+pub fn init_params(meta: &ModelMeta) -> Result<ParamVec> {
+    let cache = INITS.get_or_init(Default::default);
+    let path = meta.init_path();
+    if let Some(p) = cache.lock().unwrap().get(&path) {
+        return Ok((**p).clone());
+    }
+    let loaded = Arc::new(ParamVec::from_file(&path, meta.param_count)?);
+    cache.lock().unwrap().insert(path, loaded.clone());
+    Ok((*loaded).clone())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn meta_cache_returns_same_instance() {
+        let dir = std::env::temp_dir().join("easyfl_artifact_cache_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("cachetoy_meta.json"),
+            r#"{
+              "model": "cachetoy", "param_count": 6, "batch": 2, "agg_k": 4,
+              "input_shape": [3], "input_dtype": "f32", "classes": 3,
+              "layout": [["w", [3, 2]]],
+              "files": {"train": "cachetoy_train.hlo.txt"},
+              "init": "cachetoy_init.bin"
+            }"#,
+        )
+        .unwrap();
+        let a = meta(&dir, "cachetoy").unwrap();
+        let b = meta(&dir, "cachetoy").unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "second load must hit the cache");
+
+        let mut raw = Vec::new();
+        for v in [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0] {
+            raw.extend_from_slice(&v.to_le_bytes());
+        }
+        std::fs::write(dir.join("cachetoy_init.bin"), raw).unwrap();
+        let p1 = init_params(&a).unwrap();
+        let p2 = init_params(&a).unwrap();
+        assert_eq!(p1, p2);
+        assert_eq!(p1.len(), 6);
+    }
+
+    #[test]
+    fn missing_artifacts_still_error() {
+        assert!(meta(Path::new("/nonexistent_cache_dir"), "mlp").is_err());
+    }
+}

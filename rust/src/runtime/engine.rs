@@ -4,6 +4,7 @@ use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::rc::Rc;
+use std::sync::Arc;
 
 use crate::error::{Error, Result};
 use crate::model::{InputDtype, ModelMeta, ParamVec};
@@ -53,10 +54,14 @@ pub struct StepOut {
 }
 
 /// Per-thread PJRT engine with a compile-once executable cache.
+///
+/// Metadata and initial parameters resolve through the process-wide
+/// [`crate::runtime::artifact_cache`], so concurrent engines (device
+/// workers, platform jobs) share one parse/read per artifact.
 pub struct Engine {
     client: xla::PjRtClient,
     dir: PathBuf,
-    metas: RefCell<HashMap<String, Rc<ModelMeta>>>,
+    metas: RefCell<HashMap<String, Arc<ModelMeta>>>,
     execs: RefCell<HashMap<(String, &'static str), Rc<xla::PjRtLoadedExecutable>>>,
     /// Executions performed (profiling / Table VI bookkeeping).
     pub exec_count: std::cell::Cell<u64>,
@@ -76,11 +81,11 @@ impl Engine {
     }
 
     /// Load (and cache) a model's metadata.
-    pub fn meta(&self, model: &str) -> Result<Rc<ModelMeta>> {
+    pub fn meta(&self, model: &str) -> Result<Arc<ModelMeta>> {
         if let Some(m) = self.metas.borrow().get(model) {
             return Ok(m.clone());
         }
-        let m = Rc::new(ModelMeta::load(&self.dir, model)?);
+        let m = crate::runtime::artifact_cache::meta(&self.dir, model)?;
         self.metas.borrow_mut().insert(model.to_string(), m.clone());
         Ok(m)
     }
@@ -88,7 +93,7 @@ impl Engine {
     /// Initial parameters as produced by the Python compile path.
     pub fn init_params(&self, model: &str) -> Result<ParamVec> {
         let meta = self.meta(model)?;
-        ParamVec::from_file(&meta.init_path(), meta.param_count)
+        crate::runtime::artifact_cache::init_params(&meta)
     }
 
     /// Compile-once executable lookup.

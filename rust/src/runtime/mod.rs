@@ -8,6 +8,7 @@
 //! is the platform's key overhead win over re-compiling frameworks
 //! (Table VI reproduction).
 
+pub mod artifact_cache;
 pub mod engine;
 
 pub use engine::{Batch, Engine, Features, StepOut};

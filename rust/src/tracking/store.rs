@@ -49,6 +49,9 @@ pub struct TaskMetrics {
     /// Free-form configuration summary stored with the task.
     pub config: BTreeMap<String, String>,
     pub rounds: Vec<RoundMetrics>,
+    /// Non-fatal anomalies surfaced during the run (missing metrics,
+    /// degraded behavior) — kept with the task instead of being lost.
+    pub warnings: Vec<String>,
 }
 
 /// Thread-safe tracker with optional JSON persistence.
@@ -84,6 +87,20 @@ impl Tracker {
     /// Record a completed round.
     pub fn record_round(&self, round: RoundMetrics) {
         self.task.lock().unwrap().rounds.push(round);
+    }
+
+    /// Record a non-fatal anomaly with the task (and echo it to stderr so
+    /// interactive runs see it immediately).
+    pub fn warn(&self, msg: impl Into<String>) {
+        let msg = msg.into();
+        let mut t = self.task.lock().unwrap();
+        eprintln!("[easyfl:{}] warning: {msg}", t.task_id);
+        t.warnings.push(msg);
+    }
+
+    /// Warnings recorded so far.
+    pub fn warnings(&self) -> Vec<String> {
+        self.task.lock().unwrap().warnings.clone()
     }
 
     // ------------------------------------------------------- queries
@@ -206,6 +223,12 @@ impl Tracker {
                 ),
             ),
             ("rounds", Json::Arr(rounds)),
+            (
+                "warnings",
+                Json::Arr(
+                    t.warnings.iter().cloned().map(Json::Str).collect(),
+                ),
+            ),
         ])
     }
 
@@ -218,6 +241,11 @@ impl Tracker {
                 if let Some(s) = val.as_str() {
                     tracker.set_config(k, s.to_string());
                 }
+            }
+        }
+        for w in v.get("warnings").as_arr().unwrap_or(&[]) {
+            if let Some(s) = w.as_str() {
+                tracker.task.lock().unwrap().warnings.push(s.to_string());
             }
         }
         for r in v.get("rounds").as_arr().unwrap_or(&[]) {
@@ -335,6 +363,17 @@ mod tests {
         let text = std::fs::read_to_string(path).unwrap();
         assert!(text.contains("task-3"));
         assert!(text.contains("test_accuracy"));
+    }
+
+    #[test]
+    fn warnings_persist_and_roundtrip() {
+        let t = Tracker::new("task-w");
+        t.warn("no test accuracy recorded");
+        assert_eq!(t.warnings(), vec!["no test accuracy recorded"]);
+        let j = t.to_json();
+        let back = Tracker::from_json(&j).unwrap();
+        assert_eq!(back.warnings(), t.warnings());
+        assert_eq!(back.to_json(), j);
     }
 
     #[test]

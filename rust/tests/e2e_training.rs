@@ -90,9 +90,10 @@ fn tracker_records_three_level_hierarchy() {
         return;
     }
     let tracker = Arc::new(Tracker::new("itest"));
-    let _ = easyfl::init(quick_cfg())
+    let _ = easyfl::SessionBuilder::new(quick_cfg())
+        .tracker(tracker.clone())
+        .build()
         .unwrap()
-        .with_tracker(tracker.clone())
         .run()
         .unwrap();
     assert_eq!(tracker.num_rounds(), 3);
@@ -123,9 +124,10 @@ fn unbalanced_plus_system_het_creates_time_spread() {
     cfg.rounds = 1;
     cfg.eval_every = 0;
     let tracker = Arc::new(Tracker::new("het"));
-    easyfl::init(cfg)
+    easyfl::SessionBuilder::new(cfg)
+        .tracker(tracker.clone())
+        .build()
         .unwrap()
-        .with_tracker(tracker.clone())
         .run()
         .unwrap();
     let times = tracker.client_round_times(0);

@@ -1,5 +1,9 @@
 //! Integration: training-flow plugins change exactly their stages
 //! (the Table VII property) and compose with the full round loop.
+//!
+//! The built-in applications are exercised the low-code way — selected
+//! via `Config::algorithm` — while the FedReID head inspection and the
+//! custom selection stage use `SessionBuilder` component overrides.
 
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -11,7 +15,7 @@ use easyfl::algorithms::{
 };
 use easyfl::flow::{ServerFlow, Update};
 use easyfl::model::ParamVec;
-use easyfl::{Config, DatasetKind, Partition};
+use easyfl::{Config, DatasetKind, Partition, SessionBuilder};
 
 fn artifacts_ready() -> bool {
     PathBuf::from(env!("CARGO_MANIFEST_DIR"))
@@ -61,11 +65,10 @@ fn fedprox_trains_end_to_end() {
     if !artifacts_ready() {
         return;
     }
-    let report = easyfl::init(quick_cfg())
-        .unwrap()
-        .register_client(fedprox_client_factory(0.05))
-        .run()
-        .unwrap();
+    let mut cfg = quick_cfg();
+    cfg.algorithm = "fedprox".into();
+    cfg.fedprox_mu = 0.05;
+    let report = easyfl::init(cfg).unwrap().run().unwrap();
     assert!(report.final_train_loss.is_finite());
     assert!(report.final_accuracy >= 0.0);
 }
@@ -76,12 +79,10 @@ fn stc_shrinks_uplink_but_still_learns() {
         return;
     }
     let dense = easyfl::init(quick_cfg()).unwrap().run().unwrap();
-    let sparse = easyfl::init(quick_cfg())
-        .unwrap()
-        .register_client(stc_client_factory(0.01))
-        .register_server(Box::new(STCServerFlow))
-        .run()
-        .unwrap();
+    let mut cfg = quick_cfg();
+    cfg.algorithm = "stc".into();
+    cfg.stc_sparsity = 0.01;
+    let sparse = easyfl::init(cfg).unwrap().run().unwrap();
     assert!(
         (sparse.comm_bytes as f64) < dense.comm_bytes as f64 * 0.7,
         "stc comm {} !< dense {}",
@@ -99,15 +100,19 @@ fn fedreid_keeps_personal_heads() {
     let heads: SharedHeads = Arc::new(Mutex::new(HashMap::new()));
     let mut cfg = quick_cfg();
     cfg.num_devices = 2; // heads shared across workers
-    let engine = easyfl::runtime::Engine::new(&cfg.artifacts_dir).unwrap();
-    let meta = engine.meta(&cfg.resolved_model()).unwrap();
-    drop(engine);
-    let _ = easyfl::init(cfg)
+    let model = cfg.resolved_model();
+    let artifacts_dir = cfg.artifacts_dir.clone();
+    // Explicit factory so the test keeps a handle on the head map; the
+    // server flow resolves the head boundary lazily from metadata.
+    let _ = SessionBuilder::new(cfg)
+        .client_factory(fedreid_client_factory(heads.clone()))
+        .server_flow(Box::new(FedReidServerFlow::lazy()))
+        .build()
         .unwrap()
-        .register_client(fedreid_client_factory(heads.clone()))
-        .register_server(Box::new(FedReidServerFlow::from_meta(&meta)))
         .run()
         .unwrap();
+    let engine = easyfl::runtime::Engine::new(&artifacts_dir).unwrap();
+    let meta = engine.meta(&model).unwrap();
     let heads = heads.lock().unwrap();
     // Every selected client persisted a head of the right size.
     assert!(!heads.is_empty());
@@ -120,6 +125,17 @@ fn fedreid_keeps_personal_heads() {
         let vals: Vec<&Vec<f32>> = heads.values().collect();
         assert_ne!(vals[0], vals[1]);
     }
+}
+
+#[test]
+fn fedreid_selected_by_name_needs_no_wiring() {
+    if !artifacts_ready() {
+        return;
+    }
+    let mut cfg = quick_cfg();
+    cfg.algorithm = "fedreid".into();
+    let report = easyfl::init(cfg).unwrap().run().unwrap();
+    assert!(report.final_train_loss.is_finite());
 }
 
 #[test]
@@ -147,10 +163,11 @@ fn custom_selection_stage_plugs_in() {
         }
     }
     let tracker = Arc::new(easyfl::tracking::Tracker::new("rr"));
-    let _ = easyfl::init(quick_cfg())
+    let _ = SessionBuilder::new(quick_cfg())
+        .server_flow(Box::new(RoundRobinSelect))
+        .tracker(tracker.clone())
+        .build()
         .unwrap()
-        .register_server(Box::new(RoundRobinSelect))
-        .with_tracker(tracker.clone())
         .run()
         .unwrap();
     // Round 0 must have trained clients 0..4 exactly.

@@ -1,0 +1,149 @@
+//! Integration: the multi-job platform drives concurrent sessions end to
+//! end with distinct per-job tracker outputs.
+
+use std::collections::BTreeSet;
+use std::path::PathBuf;
+
+use easyfl::platform::JobStatus;
+use easyfl::{Config, DatasetKind, Partition, Platform, Sweep};
+
+fn artifacts_ready() -> bool {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts/manifest.json")
+        .exists()
+}
+
+fn quick_cfg() -> Config {
+    Config {
+        dataset: DatasetKind::Femnist,
+        partition: Partition::ByClass(3),
+        num_clients: 12,
+        clients_per_round: 4,
+        rounds: 3,
+        local_epochs: 1,
+        max_samples: 48,
+        test_samples: 96,
+        eval_every: 3,
+        ..Config::default()
+    }
+}
+
+#[test]
+fn three_concurrent_jobs_complete_with_distinct_trackers() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let tracking_dir =
+        std::env::temp_dir().join("easyfl_platform_jobs_test_tracking");
+    let _ = std::fs::remove_dir_all(&tracking_dir);
+
+    let platform = Platform::new(3);
+    let mut handles = Vec::new();
+    for algorithm in ["fedavg", "fedprox", "stc"] {
+        let mut cfg = quick_cfg();
+        cfg.algorithm = algorithm.into();
+        cfg.tracking_dir = Some(tracking_dir.clone());
+        handles.push(platform.submit(cfg).unwrap());
+    }
+
+    let mut labels = BTreeSet::new();
+    for h in handles {
+        let label = h.label().to_string();
+        assert!(labels.insert(label.clone()), "duplicate label {label}");
+        let report = h.join().unwrap_or_else(|e| panic!("{label}: {e}"));
+        assert_eq!(report.rounds, 3);
+        assert!(report.converged, "{label} recorded no eval metrics");
+        assert!(report.final_train_loss.is_finite());
+    }
+
+    // Each job persisted its own tracker file, and each file carries its
+    // own algorithm in the task-level config.
+    let mut algorithms_seen = BTreeSet::new();
+    for label in &labels {
+        let path = tracking_dir.join(format!("{label}.json"));
+        let text = std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+        let json = easyfl::util::json::Json::parse(&text).unwrap();
+        assert_eq!(json.get("task_id").as_str(), Some(label.as_str()));
+        assert_eq!(json.get("rounds").as_arr().unwrap().len(), 3);
+        algorithms_seen.insert(
+            json.get("config")
+                .get("algorithm")
+                .as_str()
+                .unwrap()
+                .to_string(),
+        );
+    }
+    assert_eq!(
+        algorithms_seen.into_iter().collect::<Vec<_>>(),
+        vec!["fedavg", "fedprox", "stc"]
+    );
+}
+
+#[test]
+fn sweep_produces_a_row_per_cell() {
+    if !artifacts_ready() {
+        return;
+    }
+    let platform = Platform::new(2);
+    let report = Sweep::new(quick_cfg())
+        .algorithms(&["fedavg", "stc"])
+        .partitions(&[Partition::Iid, Partition::ByClass(2)])
+        .run(&platform)
+        .unwrap();
+    assert_eq!(report.rows.len(), 4);
+    assert_eq!(report.ok_rows().count(), 4, "{}", report.to_table());
+    let table = report.to_table();
+    assert!(table.contains("stc"));
+    assert!(table.contains("class(2)"));
+}
+
+#[test]
+fn cancellation_stops_a_running_session() {
+    if !artifacts_ready() {
+        return;
+    }
+    let platform = Platform::new(1);
+    let mut cfg = quick_cfg();
+    cfg.rounds = 500; // long enough to observe the cancel mid-run
+    let h = platform.submit(cfg).unwrap();
+    // Let it start, then cancel; it must stop at a round boundary.
+    while h.status() == JobStatus::Queued {
+        std::thread::yield_now();
+    }
+    h.cancel();
+    assert_eq!(h.wait(), JobStatus::Cancelled);
+    assert!(h.progress() < 1.0);
+}
+
+// ------------------------------------------------------- artifact-free
+
+#[test]
+fn failed_jobs_surface_their_error_without_artifacts() {
+    let platform = Platform::new(2);
+    let mut cfg = quick_cfg();
+    cfg.artifacts_dir = PathBuf::from("/nonexistent_artifacts_dir");
+    let h = platform.submit(cfg).unwrap();
+    assert_eq!(h.wait(), JobStatus::Failed);
+    let err = h.join().unwrap_err().to_string();
+    assert!(
+        err.contains("nonexistent_artifacts_dir") || err.contains("artifact"),
+        "unhelpful error: {err}"
+    );
+}
+
+#[test]
+fn submitted_jobs_get_distinct_labels_even_for_identical_configs() {
+    let platform = Platform::new(1);
+    let mut cfg = quick_cfg();
+    cfg.artifacts_dir = PathBuf::from("/nonexistent_artifacts_dir");
+    let a = platform.submit(cfg.clone()).unwrap();
+    let b = platform.submit(cfg).unwrap();
+    assert_ne!(a.label(), b.label());
+    assert_ne!(a.id(), b.id());
+    a.wait();
+    b.wait();
+    // The platform's job index saw both.
+    assert_eq!(platform.jobs().len(), 2);
+}

@@ -1,0 +1,151 @@
+//! Integration: config parsing round-trips and component-registry
+//! resolution, including the error messages users actually see.
+
+use std::sync::Arc;
+
+use easyfl::registry::{self, AlgorithmParts};
+use easyfl::{Allocation, Config, DatasetKind, Partition};
+
+// ------------------------------------------------------ parse round-trips
+
+#[test]
+fn dataset_kind_parse_name_roundtrip() {
+    for kind in [
+        DatasetKind::Femnist,
+        DatasetKind::Shakespeare,
+        DatasetKind::Cifar10,
+    ] {
+        assert_eq!(DatasetKind::parse(kind.name()).unwrap(), kind);
+        // Case-insensitive.
+        assert_eq!(
+            DatasetKind::parse(&kind.name().to_uppercase()).unwrap(),
+            kind
+        );
+    }
+    // Aliases.
+    assert_eq!(DatasetKind::parse("cifar-10").unwrap(), DatasetKind::Cifar10);
+    assert_eq!(DatasetKind::parse("cifar").unwrap(), DatasetKind::Cifar10);
+
+    let err = DatasetKind::parse("mnist").unwrap_err().to_string();
+    assert!(err.contains("unknown dataset"), "{err}");
+    assert!(err.contains("\"mnist\""), "{err}");
+}
+
+#[test]
+fn partition_parse_name_roundtrip() {
+    for p in [
+        Partition::Iid,
+        Partition::Realistic,
+        Partition::Dirichlet(0.5),
+        Partition::ByClass(3),
+    ] {
+        assert_eq!(Partition::parse(&p.name()).unwrap(), p);
+    }
+    let err = Partition::parse("zipf").unwrap_err().to_string();
+    assert!(err.contains("unknown partition"), "{err}");
+    // The error teaches the accepted grammar.
+    assert!(err.contains("iid | realistic | dir(a) | class(n)"), "{err}");
+
+    let err = Partition::parse("dir(abc)").unwrap_err().to_string();
+    assert!(err.contains("bad dirichlet alpha"), "{err}");
+    let err = Partition::parse("class(x)").unwrap_err().to_string();
+    assert!(err.contains("bad class count"), "{err}");
+}
+
+#[test]
+fn allocation_parse_name_roundtrip() {
+    for a in [Allocation::GreedyAda, Allocation::Random, Allocation::Slowest] {
+        assert_eq!(Allocation::parse(a.name()).unwrap(), a);
+    }
+    assert_eq!(Allocation::parse("greedy").unwrap(), Allocation::GreedyAda);
+    let err = Allocation::parse("fifo").unwrap_err().to_string();
+    assert!(err.contains("unknown allocation"), "{err}");
+    assert!(err.contains("\"fifo\""), "{err}");
+}
+
+// -------------------------------------------------------- registry misses
+
+#[test]
+fn unknown_algorithm_error_lists_registered_names() {
+    let mut cfg = Config::default();
+    cfg.algorithm = "fancy-new-algo".into();
+    let err = easyfl::init(cfg).unwrap_err();
+    assert!(matches!(err, easyfl::Error::Config(_)), "{err}");
+    let msg = err.to_string();
+    assert!(msg.contains("\"fancy-new-algo\""), "{msg}");
+    for name in ["fedavg", "fedprox", "stc", "fedreid"] {
+        assert!(msg.contains(name), "{msg} should list {name}");
+    }
+}
+
+#[test]
+fn unknown_data_source_error_lists_registered_names() {
+    let mut cfg = Config::default();
+    cfg.data_source = Some("no-such-source".into());
+    let err = easyfl::init(cfg).unwrap_err().to_string();
+    assert!(err.contains("\"no-such-source\""), "{err}");
+    for name in ["femnist", "shakespeare", "cifar10"] {
+        assert!(err.contains(name), "{err} should list {name}");
+    }
+}
+
+#[test]
+fn unknown_partition_spec_lists_registered_names() {
+    let err = registry::parse_partition("zipf(2)").unwrap_err().to_string();
+    assert!(err.contains("registered:"), "{err}");
+    for name in ["iid", "realistic", "dir", "class"] {
+        assert!(err.contains(name), "{err} should list {name}");
+    }
+}
+
+// --------------------------------------------------- custom registration
+
+#[test]
+fn custom_algorithm_becomes_a_config_string() {
+    registry::register(|reg| {
+        reg.register_algorithm(
+            "itest-fedavg-clone",
+            Arc::new(|_cfg| {
+                Ok(AlgorithmParts {
+                    server_flow: Box::new(easyfl::flow::DefaultServerFlow),
+                    client_factory: easyfl::algorithms::fedavg_client_factory(),
+                })
+            }),
+        );
+    });
+    let mut cfg = Config::default();
+    cfg.algorithm = "itest-fedavg-clone".into();
+    // Resolution succeeds (running would need artifacts).
+    let session = easyfl::init(cfg).unwrap();
+    assert_eq!(session.config().algorithm, "itest-fedavg-clone");
+}
+
+#[test]
+fn custom_partition_reaches_json_config() {
+    registry::register(|reg| {
+        reg.register_partition(
+            "itest-pathological",
+            Arc::new(|_| Ok(Partition::ByClass(2))),
+        );
+    });
+    let j = easyfl::util::json::Json::parse(
+        r#"{"partition": "itest-pathological"}"#,
+    )
+    .unwrap();
+    let cfg = Config::from_json(&j).unwrap();
+    assert_eq!(cfg.partition, Partition::ByClass(2));
+}
+
+#[test]
+fn registered_data_source_resolves_from_config() {
+    let mut cfg = Config::default();
+    cfg.data_source = Some("cifar10".into()); // dataset field still femnist
+    cfg.num_clients = 5;
+    cfg.clients_per_round = 2;
+    let session = easyfl::init(cfg).unwrap();
+    assert_eq!(session.config().data_source.as_deref(), Some("cifar10"));
+    // Built-in source names re-pair the dataset (and thus "auto" model)
+    // with the data actually served.
+    assert_eq!(session.config().dataset, DatasetKind::Cifar10);
+    assert_eq!(session.config().resolved_model(), "cnn");
+}

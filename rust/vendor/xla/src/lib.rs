@@ -1,0 +1,268 @@
+//! Offline facade over the subset of the `xla` (xla-rs) API that the
+//! easyfl engine uses.
+//!
+//! The real crate links the native XLA/PJRT runtime, which is not in the
+//! offline registry. This facade keeps the exact same types and
+//! signatures so the platform, its unit tests, and all artifact-gated
+//! integration tests build and run everywhere; only `PjRtClient::compile`
+//! (and therefore HLO execution) reports the runtime as unavailable.
+//! Swapping the native-backed xla-rs crate into `rust/vendor/xla`
+//! re-enables execution with no source change in easyfl.
+//!
+//! Literals are fully functional: they carry a real element type, shape
+//! and byte buffer, so host-side marshalling code paths stay exercised.
+
+use std::borrow::Borrow;
+use std::fmt;
+
+/// Error type mirroring `xla::Error`'s role (message-carrying).
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+const UNAVAILABLE: &str = "PJRT runtime unavailable: easyfl was built \
+against the vendored offline `xla` facade (rust/vendor/xla); swap in the \
+native xla-rs crate to compile and execute HLO artifacts";
+
+/// Element types easyfl marshals (f32 params/features, s32 labels).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+impl ElementType {
+    pub fn byte_size(self) -> usize {
+        4
+    }
+}
+
+/// Host-side native types a literal can be read back into.
+pub trait NativeType: Copy {
+    const ELEMENT_TYPE: ElementType;
+    fn from_le_bytes(b: [u8; 4]) -> Self;
+}
+
+impl NativeType for f32 {
+    const ELEMENT_TYPE: ElementType = ElementType::F32;
+    fn from_le_bytes(b: [u8; 4]) -> Self {
+        f32::from_le_bytes(b)
+    }
+}
+
+impl NativeType for i32 {
+    const ELEMENT_TYPE: ElementType = ElementType::S32;
+    fn from_le_bytes(b: [u8; 4]) -> Self {
+        i32::from_le_bytes(b)
+    }
+}
+
+/// A typed, shaped host buffer (or a tuple of them).
+#[derive(Debug, Clone)]
+pub struct Literal {
+    ty: ElementType,
+    dims: Vec<usize>,
+    bytes: Vec<u8>,
+    tuple: Option<Vec<Literal>>,
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        bytes: &[u8],
+    ) -> Result<Literal> {
+        let expect = dims.iter().product::<usize>() * ty.byte_size();
+        if bytes.len() != expect {
+            return Err(Error(format!(
+                "literal shape {dims:?} needs {expect} bytes, got {}",
+                bytes.len()
+            )));
+        }
+        Ok(Literal {
+            ty,
+            dims: dims.to_vec(),
+            bytes: bytes.to_vec(),
+            tuple: None,
+        })
+    }
+
+    pub fn element_type(&self) -> ElementType {
+        self.ty
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    /// Read the buffer back as native values.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if self.tuple.is_some() {
+            return Err(Error("to_vec on a tuple literal".into()));
+        }
+        if self.ty != T::ELEMENT_TYPE {
+            return Err(Error(format!(
+                "literal is {:?}, requested {:?}",
+                self.ty,
+                T::ELEMENT_TYPE
+            )));
+        }
+        Ok(self
+            .bytes
+            .chunks_exact(4)
+            .map(|c| T::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// Decompose a tuple literal into its elements.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        self.tuple
+            .ok_or_else(|| Error("to_tuple on a non-tuple literal".into()))
+    }
+}
+
+/// Parsed HLO module text (kept verbatim; the facade cannot compile it).
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    pub text: String,
+}
+
+impl HloModuleProto {
+    /// Read an HLO text artifact. Missing files error here, exactly like
+    /// the native crate, so artifact problems surface with the path.
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error(format!("{path}: {e}")))?;
+        Ok(HloModuleProto { text })
+    }
+}
+
+/// A computation wrapping an HLO module.
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    proto: HloModuleProto,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { proto: proto.clone() }
+    }
+
+    pub fn proto(&self) -> &HloModuleProto {
+        &self.proto
+    }
+}
+
+/// Device-side buffer handle.
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error(UNAVAILABLE.into()))
+    }
+}
+
+/// Compiled executable handle.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error(UNAVAILABLE.into()))
+    }
+}
+
+/// PJRT client. Construction succeeds (cheap, host-only); compilation is
+/// where the facade reports the missing native runtime.
+#[derive(Debug)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient { _private: () })
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error(UNAVAILABLE.into()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrips_f32_and_i32() {
+        let vals = [1.5f32, -2.0, 0.25];
+        let mut bytes = Vec::new();
+        for v in vals {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        let lit = Literal::create_from_shape_and_untyped_data(
+            ElementType::F32,
+            &[3],
+            &bytes,
+        )
+        .unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vals);
+        assert!(lit.to_vec::<i32>().is_err(), "dtype mismatch must error");
+
+        let ints = [7i32, -9];
+        let mut bytes = Vec::new();
+        for v in ints {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        let lit = Literal::create_from_shape_and_untyped_data(
+            ElementType::S32,
+            &[2],
+            &bytes,
+        )
+        .unwrap();
+        assert_eq!(lit.to_vec::<i32>().unwrap(), ints);
+    }
+
+    #[test]
+    fn literal_rejects_wrong_byte_count() {
+        assert!(Literal::create_from_shape_and_untyped_data(
+            ElementType::F32,
+            &[2, 2],
+            &[0u8; 4],
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn compile_reports_unavailable_runtime() {
+        let client = PjRtClient::cpu().unwrap();
+        let proto = HloModuleProto { text: "HloModule m".into() };
+        let comp = XlaComputation::from_proto(&proto);
+        let err = client.compile(&comp).unwrap_err();
+        assert!(err.to_string().contains("unavailable"));
+    }
+
+    #[test]
+    fn missing_hlo_file_names_the_path() {
+        let err = HloModuleProto::from_text_file("/no/such/file.hlo.txt")
+            .unwrap_err();
+        assert!(err.to_string().contains("/no/such/file.hlo.txt"));
+    }
+}
