@@ -1,0 +1,107 @@
+//! simnet_scale — a million-client federation on a virtual clock.
+//!
+//! Demonstrates the SimNet discrete-event simulator at population scales
+//! the sleep-based heterogeneity simulation could never touch: the
+//! default run simulates a 1,000,000-client federation for 500
+//! synchronous deadline rounds in seconds of wall time, deterministically
+//! per seed. CI runs the 100k-client variant as a perf smoke test and
+//! records events/sec to `BENCH_simnet.json`:
+//!
+//! ```text
+//! cargo run --release --example simnet_scale -- \
+//!     --clients 100000 --rounds 200 --budget-ms 30000 \
+//!     --bench-out BENCH_simnet.json
+//! ```
+
+use easyfl::config::{Config, DatasetKind, SimMode};
+use easyfl::util::args::{usage, Args, Opt};
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn opts() -> Vec<Opt> {
+    vec![
+        Opt { name: "clients", help: "federation population", default: Some("1000000"), is_flag: false },
+        Opt { name: "rounds", help: "rounds to simulate", default: Some("500"), is_flag: false },
+        Opt { name: "clients-per-round", help: "aggregation target K", default: Some("100"), is_flag: false },
+        Opt { name: "mode", help: "sync | async", default: Some("sync"), is_flag: false },
+        Opt { name: "availability", help: "always-on | diurnal(d) | flaky(on,off)", default: Some("always-on"), is_flag: false },
+        Opt { name: "dropout", help: "per-selection dropout probability", default: Some("0.1"), is_flag: false },
+        Opt { name: "deadline-ms", help: "sync round deadline (virtual ms)", default: Some("60000"), is_flag: false },
+        Opt { name: "devices", help: "parallel emulation devices", default: Some("8"), is_flag: false },
+        Opt { name: "seed", help: "RNG seed", default: Some("42"), is_flag: false },
+        Opt { name: "budget-ms", help: "fail if wall time exceeds this (0 = off)", default: Some("0"), is_flag: false },
+        Opt { name: "bench-out", help: "write throughput JSON here", default: None, is_flag: false },
+        Opt { name: "help", help: "show help", default: None, is_flag: true },
+    ]
+}
+
+fn run() -> easyfl::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let opts = opts();
+    let a = Args::parse(&argv, &opts)?;
+    if a.has_flag("help") {
+        println!(
+            "{}",
+            usage("simnet_scale", "Million-client SimNet demonstration.", &opts)
+        );
+        return Ok(());
+    }
+
+    let mut cfg = Config::for_dataset(DatasetKind::Femnist);
+    cfg.num_clients = a.get_usize("clients")?;
+    cfg.rounds = a.get_usize("rounds")?;
+    cfg.clients_per_round = a.get_usize("clients-per-round")?;
+    cfg.num_devices = a.get_usize("devices")?;
+    cfg.seed = a.get_usize("seed")? as u64;
+    cfg.sim.mode = SimMode::parse(a.get("mode").unwrap_or("sync"))?;
+    cfg.sim.availability = a.get("availability").unwrap_or("always-on").into();
+    cfg.sim.dropout = a.get_f64("dropout")?;
+    cfg.sim.deadline_ms = a.get_f64("deadline-ms")?;
+    cfg.validate()?;
+
+    println!(
+        "simulating {} clients × {} {} rounds ({}, dropout {:.0}%)...",
+        cfg.num_clients,
+        cfg.rounds,
+        cfg.sim.mode.name(),
+        cfg.sim.availability,
+        cfg.sim.dropout * 100.0
+    );
+    let report = easyfl::simnet::simulate(&cfg)?;
+    println!(
+        "done: {:.2} s wall for {:.1} virtual hours ({} events, {:.0} events/s, {:.1} rounds/s)",
+        report.wall_ms / 1000.0,
+        report.makespan_ms / 3.6e6,
+        report.events,
+        report.events_per_sec(),
+        report.rounds_per_sec()
+    );
+    println!(
+        "participation {:.1}% ({} reported / {} selected, {} dropped) | final acc {:.2}%",
+        report.participation * 100.0,
+        report.reported,
+        report.selected,
+        report.dropped,
+        report.final_accuracy * 100.0
+    );
+    println!("trace digest {:#018x}", report.trace_digest);
+
+    if let Some(path) = a.get("bench-out") {
+        std::fs::write(path, report.bench_json())?;
+        println!("benchmark written to {path}");
+    }
+
+    let budget_ms = a.get_f64("budget-ms")?;
+    if budget_ms > 0.0 && report.wall_ms > budget_ms {
+        return Err(easyfl::Error::Runtime(format!(
+            "simulation took {:.0} ms, over the {budget_ms:.0} ms budget",
+            report.wall_ms
+        )));
+    }
+    Ok(())
+}

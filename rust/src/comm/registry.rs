@@ -9,21 +9,38 @@
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use crate::comm::protocol::Message;
 use crate::comm::rpc::{self, Handler, RpcServer};
 use crate::error::{Error, Result};
+use crate::util::clock::{Clock, RealClock};
 
 /// TTL'd address store.
+///
+/// Time is read through the [`Clock`] abstraction: production registries
+/// run on the wall clock, tests inject a
+/// [`crate::util::clock::VirtualClock`] so lease-expiry behavior is
+/// exercised instantly and deterministically instead of with real sleeps.
 pub struct Registry {
-    entries: Mutex<HashMap<String, (String, Instant)>>,
-    ttl: Duration,
+    /// id → (addr, expiry in clock-ms).
+    entries: Mutex<HashMap<String, (String, f64)>>,
+    ttl_ms: f64,
+    clock: Arc<dyn Clock>,
 }
 
 impl Registry {
     pub fn new(ttl: Duration) -> Registry {
-        Registry { entries: Mutex::new(HashMap::new()), ttl }
+        Registry::with_clock(ttl, Arc::new(RealClock::new(1.0)))
+    }
+
+    /// A registry reading time from an injected clock.
+    pub fn with_clock(ttl: Duration, clock: Arc<dyn Clock>) -> Registry {
+        Registry {
+            entries: Mutex::new(HashMap::new()),
+            ttl_ms: ttl.as_secs_f64() * 1000.0,
+            clock,
+        }
     }
 
     /// Default 10 s lease, matching heartbeat every 2 s.
@@ -39,7 +56,7 @@ impl Registry {
 
     /// Live (non-expired) entries, sorted by id.
     pub fn live(&self) -> Vec<(String, String)> {
-        let now = Instant::now();
+        let now = self.clock.now_ms();
         let mut out: Vec<(String, String)> = self
             .entries
             .lock()
@@ -56,7 +73,7 @@ impl Registry {
         self.entries
             .lock()
             .unwrap()
-            .insert(id, (addr, Instant::now() + self.ttl));
+            .insert(id, (addr, self.clock.now_ms() + self.ttl_ms));
     }
 
     fn deregister(&self, id: &str) {
@@ -65,7 +82,7 @@ impl Registry {
 
     /// Drop expired leases (called opportunistically).
     pub fn sweep(&self) {
-        let now = Instant::now();
+        let now = self.clock.now_ms();
         self.entries.lock().unwrap().retain(|_, (_, exp)| *exp > now);
     }
 }
@@ -151,13 +168,15 @@ impl Registor {
 impl Drop for Registor {
     fn drop(&mut self) {
         self.stop.store(true, Ordering::Relaxed);
+        // Join the heartbeat thread FIRST: an in-flight heartbeat racing
+        // the Deregister could otherwise re-register the lease after it.
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
         let _ = rpc::call(
             &self.registry_addr,
             &Message::Deregister { id: self.id.clone() },
         );
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
-        }
     }
 }
 
@@ -172,6 +191,7 @@ pub fn discover(registry_addr: &str) -> Result<Vec<(String, String)>> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::clock::VirtualClock;
 
     #[test]
     fn register_list_deregister() {
@@ -191,32 +211,61 @@ mod tests {
 
     #[test]
     fn leases_expire_without_heartbeat() {
-        let server =
-            Registry::serve("127.0.0.1:0", Duration::from_millis(50)).unwrap();
+        // Virtual clock: lease expiry is exercised instantly and
+        // deterministically — no real sleeps, nothing to flake.
+        let clock = Arc::new(VirtualClock::new());
+        let registry = Arc::new(Registry::with_clock(
+            Duration::from_millis(50),
+            clock.clone(),
+        ));
+        let server = RpcServer::serve("127.0.0.1:0", registry).unwrap();
         let addr = server.addr().to_string();
         rpc::call(&addr, &Message::Register { id: "x".into(), addr: "a:1".into() })
             .unwrap();
         assert_eq!(discover(&addr).unwrap().len(), 1);
-        std::thread::sleep(Duration::from_millis(80));
-        assert_eq!(discover(&addr).unwrap().len(), 0);
+        clock.wait_ms(49.0);
+        assert_eq!(discover(&addr).unwrap().len(), 1, "live just before TTL");
+        clock.wait_ms(2.0);
+        assert_eq!(discover(&addr).unwrap().len(), 0, "expired past TTL");
     }
 
     #[test]
     fn registor_keeps_lease_alive_and_cleans_up() {
-        let server =
-            Registry::serve("127.0.0.1:0", Duration::from_millis(120)).unwrap();
+        // Registry time is virtual; the registor's heartbeats are real.
+        // Expiring the lease on the virtual clock proves the next
+        // heartbeat re-registers it — without waiting out real TTLs.
+        let clock = Arc::new(VirtualClock::new());
+        let registry = Arc::new(Registry::with_clock(
+            Duration::from_millis(50),
+            clock.clone(),
+        ));
+        let server = RpcServer::serve("127.0.0.1:0", registry).unwrap();
         let addr = server.addr().to_string();
         let registor = Registor::start(
             &addr,
             "cli-7",
             "10.0.0.7:4000",
-            Duration::from_millis(30),
+            Duration::from_millis(10),
         )
         .unwrap();
-        std::thread::sleep(Duration::from_millis(300));
-        // Still alive well past the TTL thanks to heartbeats.
-        let live = discover(&addr).unwrap();
-        assert_eq!(live, vec![("cli-7".into(), "10.0.0.7:4000".into())]);
+        assert_eq!(
+            discover(&addr).unwrap(),
+            vec![("cli-7".into(), "10.0.0.7:4000".into())]
+        );
+        // Kill the lease on the virtual clock...
+        clock.wait_ms(60.0);
+        // ...and wait (bounded) for a heartbeat to renew it.
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        loop {
+            if discover(&addr).unwrap().len() == 1 {
+                break;
+            }
+            assert!(
+                std::time::Instant::now() < deadline,
+                "heartbeat never renewed the expired lease"
+            );
+            std::thread::sleep(Duration::from_millis(5));
+        }
         drop(registor);
         // Deregistered on drop.
         assert_eq!(discover(&addr).unwrap().len(), 0);

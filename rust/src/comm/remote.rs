@@ -387,7 +387,11 @@ impl RemoteCoordinator {
             round_ms,
             distribution_ms,
             comm_bytes: downlink + uplink,
+            // Remote rounds wait for every reply: full participation.
+            selected: clients_m.len(),
+            reported: clients_m.len(),
             clients: clients_m,
+            ..RoundMetrics::default()
         };
         self.tracker.record_round(metrics.clone());
         Ok(metrics)

@@ -124,6 +124,150 @@ impl Allocation {
     }
 }
 
+/// SimNet round engine (see [`crate::simnet`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimMode {
+    /// Deadline-bounded synchronous rounds with over-selection.
+    Sync,
+    /// FedBuff-style async aggregation every `async_buffer` arrivals.
+    Async,
+}
+
+impl SimMode {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "sync" | "synchronous" => Ok(Self::Sync),
+            "async" | "asynchronous" | "fedbuff" => Ok(Self::Async),
+            other => Err(Error::Config(format!("unknown sim mode {other:?}"))),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Sync => "sync",
+            Self::Async => "async",
+        }
+    }
+}
+
+/// Discrete-event simulator knobs (see [`crate::simnet`]). All fields
+/// have working defaults so `Config::default()` simulates out of the box.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    /// Round engine: sync (deadline + over-selection) or async (FedBuff).
+    pub mode: SimMode,
+    /// Registered availability model spec: "always-on" | "diurnal(duty)"
+    /// | "flaky(mean_on_ms,mean_off_ms)" | any registered name.
+    pub availability: String,
+    /// Registered cost model: "mobile-wan" | "ideal" | "datacenter" |
+    /// any registered name.
+    pub cost_model: String,
+    /// Per-selection probability that a client abandons the round.
+    pub dropout: f64,
+    /// Sync: aggregate whatever has arrived at this virtual deadline.
+    pub deadline_ms: f64,
+    /// Sync over-selection factor c ≥ 1: select ⌈K·c⌉ clients, aggregate
+    /// the first K reporters, drop the rest.
+    pub over_select: f64,
+    /// Async: aggregate every B arrivals (0 ⇒ clients_per_round).
+    pub async_buffer: usize,
+    /// Async: concurrent trainers (0 ⇒ 2 × clients_per_round).
+    pub async_concurrency: usize,
+    /// Async staleness discount exponent: weight = (1+staleness)^-α.
+    pub staleness_alpha: f64,
+    /// Model update size in bytes (0 ⇒ cost model default).
+    pub model_bytes: usize,
+    /// Fastest-tier local-training time in ms (0 ⇒ cost model default).
+    pub base_compute_ms: f64,
+    /// Train real models through the Engine instead of the surrogate
+    /// curves (small cohorts only; needs AOT artifacts).
+    pub real_training: bool,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            mode: SimMode::Sync,
+            availability: "always-on".into(),
+            cost_model: "mobile-wan".into(),
+            dropout: 0.0,
+            deadline_ms: 60_000.0,
+            over_select: 1.3,
+            async_buffer: 0,
+            async_concurrency: 0,
+            staleness_alpha: 0.5,
+            model_bytes: 0,
+            base_compute_ms: 0.0,
+            real_training: false,
+        }
+    }
+}
+
+impl SimConfig {
+    /// Apply a JSON object of overrides (the `"sim"` sub-object).
+    fn apply_json(&mut self, v: &Json) -> Result<()> {
+        if let Some(s) = v.get("mode").as_str() {
+            self.mode = SimMode::parse(s)?;
+        }
+        if let Some(s) = v.get("availability").as_str() {
+            self.availability = s.to_string();
+        }
+        if let Some(s) = v.get("cost_model").as_str() {
+            self.cost_model = s.to_string();
+        }
+        if let Some(x) = v.get("dropout").as_f64() {
+            self.dropout = x;
+        }
+        if let Some(x) = v.get("deadline_ms").as_f64() {
+            self.deadline_ms = x;
+        }
+        if let Some(x) = v.get("over_select").as_f64() {
+            self.over_select = x;
+        }
+        if let Some(n) = v.get("async_buffer").as_usize() {
+            self.async_buffer = n;
+        }
+        if let Some(n) = v.get("async_concurrency").as_usize() {
+            self.async_concurrency = n;
+        }
+        if let Some(x) = v.get("staleness_alpha").as_f64() {
+            self.staleness_alpha = x;
+        }
+        if let Some(n) = v.get("model_bytes").as_usize() {
+            self.model_bytes = n;
+        }
+        if let Some(x) = v.get("base_compute_ms").as_f64() {
+            self.base_compute_ms = x;
+        }
+        if let Some(b) = v.get("real_training").as_bool() {
+            self.real_training = b;
+        }
+        Ok(())
+    }
+
+    fn validate(&self) -> Result<()> {
+        if !(0.0..1.0).contains(&self.dropout) {
+            return Err(Error::Config("sim.dropout must be in [0,1)".into()));
+        }
+        if !(self.deadline_ms > 0.0) {
+            return Err(Error::Config("sim.deadline_ms must be > 0".into()));
+        }
+        if self.over_select < 1.0 {
+            return Err(Error::Config("sim.over_select must be ≥ 1".into()));
+        }
+        if self.staleness_alpha < 0.0 {
+            return Err(Error::Config("sim.staleness_alpha must be ≥ 0".into()));
+        }
+        if self.availability.trim().is_empty() || self.cost_model.trim().is_empty()
+        {
+            return Err(Error::Config(
+                "sim.availability / sim.cost_model must be non-empty".into(),
+            ));
+        }
+        Ok(())
+    }
+}
+
 /// Full platform configuration. Defaults mirror the paper's Appendix B-A.
 #[derive(Debug, Clone)]
 pub struct Config {
@@ -192,6 +336,9 @@ pub struct Config {
     pub max_samples: usize,
     /// Size of the IID test split the server evaluates on.
     pub test_samples: usize,
+    /// Discrete-event simulator knobs (the `simulate` subcommand and
+    /// [`crate::simnet`] jobs read these; training runs ignore them).
+    pub sim: SimConfig,
 }
 
 impl Default for Config {
@@ -225,6 +372,7 @@ impl Default for Config {
             eval_every: 1,
             max_samples: 0,
             test_samples: 512,
+            sim: SimConfig::default(),
         }
     }
 }
@@ -348,6 +496,10 @@ impl Config {
         if let Some(n) = v.get("test_samples").as_usize() {
             c.test_samples = n;
         }
+        let sim = v.get("sim");
+        if sim.as_obj().is_some() {
+            c.sim.apply_json(sim)?;
+        }
         c.validate()?;
         Ok(c)
     }
@@ -393,6 +545,7 @@ impl Config {
         if self.fedprox_mu < 0.0 {
             return Err(Error::Config("fedprox_mu must be ≥ 0".into()));
         }
+        self.sim.validate()?;
         Ok(())
     }
 }
@@ -473,10 +626,44 @@ mod tests {
             r#"{"stc_sparsity": 0}"#,
             r#"{"stc_sparsity": 1.5}"#,
             r#"{"fedprox_mu": -0.5}"#,
+            r#"{"sim": {"dropout": 1.0}}"#,
+            r#"{"sim": {"deadline_ms": 0}}"#,
+            r#"{"sim": {"over_select": 0.5}}"#,
+            r#"{"sim": {"staleness_alpha": -1}}"#,
+            r#"{"sim": {"mode": "eventually"}}"#,
         ];
         for src in cases {
             let j = Json::parse(src).unwrap();
             assert!(Config::from_json(&j).is_err(), "{src}");
         }
+    }
+
+    #[test]
+    fn sim_fields_parse_from_json() {
+        let j = Json::parse(
+            r#"{"rounds": 5, "sim": {"mode": "async", "availability": "diurnal(0.4)",
+                "cost_model": "ideal", "dropout": 0.2, "deadline_ms": 30000,
+                "over_select": 1.5, "async_buffer": 16, "async_concurrency": 64,
+                "staleness_alpha": 0.7, "model_bytes": 4000000,
+                "base_compute_ms": 2500}}"#,
+        )
+        .unwrap();
+        let c = Config::from_json(&j).unwrap();
+        assert_eq!(c.sim.mode, SimMode::Async);
+        assert_eq!(c.sim.availability, "diurnal(0.4)");
+        assert_eq!(c.sim.cost_model, "ideal");
+        assert_eq!(c.sim.dropout, 0.2);
+        assert_eq!(c.sim.deadline_ms, 30_000.0);
+        assert_eq!(c.sim.over_select, 1.5);
+        assert_eq!(c.sim.async_buffer, 16);
+        assert_eq!(c.sim.async_concurrency, 64);
+        assert_eq!(c.sim.staleness_alpha, 0.7);
+        assert_eq!(c.sim.model_bytes, 4_000_000);
+        assert_eq!(c.sim.base_compute_ms, 2_500.0);
+        assert!(!c.sim.real_training);
+        // Absent "sim" keeps working defaults.
+        let c2 = Config::from_json(&Json::parse(r#"{"rounds": 2}"#).unwrap()).unwrap();
+        assert_eq!(c2.sim.mode, SimMode::Sync);
+        assert_eq!(c2.sim.over_select, 1.3);
     }
 }

@@ -278,7 +278,12 @@ impl Server {
             round_ms: makespan_ms + agg_ms,
             distribution_ms,
             comm_bytes: downlink_bytes + uplink_bytes,
+            // In-process training has full participation: everyone
+            // selected reports, nobody drops, updates are never stale.
+            selected: clients.len(),
+            reported: clients.len(),
             clients,
+            ..RoundMetrics::default()
         };
         self.tracker.record_round(metrics.clone());
         Ok(metrics)

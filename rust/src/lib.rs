@@ -49,9 +49,18 @@
 //! println!("{}", report.to_table());
 //! ```
 //!
+//! ## Simulating at scale
+//!
+//! [`simnet`] is a discrete-event federation simulator on a virtual
+//! clock: 100k+ clients with availability churn, dropout, deadline-bound
+//! sync rounds or async FedBuff aggregation — hundreds of rounds in
+//! seconds, bit-for-bit reproducible per seed. [`SimSweep`] compares
+//! {sync, async} × allocation strategies in one report table.
+//!
 //! See `examples/` for heterogeneity simulation, distributed-training
-//! optimization (GreedyAda), remote training and the application plugins
-//! (FedProx, STC, FedReID).
+//! optimization (GreedyAda), remote training, the application plugins
+//! (FedProx, STC, FedReID), and `simnet_scale` for a million-client
+//! population simulation.
 
 pub mod algorithms;
 pub mod api;
@@ -68,11 +77,15 @@ pub mod platform;
 pub mod registry;
 pub mod runtime;
 pub mod scheduler;
+pub mod simnet;
 pub mod simulation;
 pub mod tracking;
 pub mod util;
 
 pub use api::{init, Report, Session, SessionBuilder};
-pub use config::{Allocation, Config, DatasetKind, Partition};
+pub use config::{Allocation, Config, DatasetKind, Partition, SimMode};
 pub use error::{Error, Result};
-pub use platform::{JobHandle, JobStatus, Platform, Sweep, SweepReport};
+pub use platform::{
+    JobHandle, JobStatus, Platform, SimSweep, SimSweepReport, Sweep, SweepReport,
+};
+pub use simnet::{SimNet, SimReport};

@@ -2,6 +2,7 @@
 //!
 //! Subcommands mirror the paper's execution APIs (Table II):
 //!   run       standalone / distributed training (`easyfl.run()`)
+//!   simulate  discrete-event federation simulation (SimNet, 100k+ clients)
 //!   sweep     dataset × partition × algorithm grid on a job platform
 //!   jobs      concurrent multi-job demo with live status
 //!   server    remote-training coordinator (`easyfl.start_server(args)`)
@@ -14,9 +15,9 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use easyfl::comm::{ClientService, RemoteCoordinator, Registry};
-use easyfl::config::{Allocation, Config, DatasetKind, Partition};
+use easyfl::config::{Allocation, Config, DatasetKind, Partition, SimMode};
 use easyfl::deployment::Deployment;
-use easyfl::platform::{Platform, Sweep};
+use easyfl::platform::{Platform, SimSweep, Sweep};
 use easyfl::tracking::Tracker;
 use easyfl::util::args::{usage, Args, Opt};
 
@@ -24,6 +25,7 @@ fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let code = match argv.first().map(String::as_str) {
         Some("run") => dispatch(cmd_run(&argv[1..])),
+        Some("simulate") => dispatch(cmd_simulate(&argv[1..])),
         Some("sweep") => dispatch(cmd_sweep(&argv[1..])),
         Some("jobs") => dispatch(cmd_jobs(&argv[1..])),
         Some("server") => dispatch(cmd_server(&argv[1..])),
@@ -34,7 +36,7 @@ fn main() {
         _ => {
             eprintln!(
                 "easyfl — low-code federated learning platform\n\n\
-                 USAGE: easyfl <run|sweep|jobs|server|client|registry|deploy|info> [options]\n\
+                 USAGE: easyfl <run|simulate|sweep|jobs|server|client|registry|deploy|info> [options]\n\
                  Run a subcommand with --help for its options."
             );
             2
@@ -157,6 +159,94 @@ fn cmd_run(argv: &[String]) -> easyfl::Result<()> {
     Ok(())
 }
 
+fn cmd_simulate(argv: &[String]) -> easyfl::Result<()> {
+    let mut opts = common_opts();
+    opts.extend([
+        Opt { name: "sim-mode", help: "sync | async (FedBuff)", default: Some("sync"), is_flag: false },
+        Opt { name: "availability", help: "always-on | diurnal(duty) | flaky(on_ms,off_ms)", default: Some("always-on"), is_flag: false },
+        Opt { name: "cost-model", help: "mobile-wan | ideal | datacenter", default: Some("mobile-wan"), is_flag: false },
+        Opt { name: "dropout", help: "per-selection dropout probability (flags override --config)", default: Some("0"), is_flag: false },
+        Opt { name: "deadline-ms", help: "sync round deadline (virtual ms)", default: Some("60000"), is_flag: false },
+        Opt { name: "over-select", help: "sync over-selection factor c ≥ 1", default: Some("1.3"), is_flag: false },
+        Opt { name: "async-buffer", help: "async: aggregate every B arrivals (0 = C)", default: Some("0"), is_flag: false },
+        Opt { name: "async-concurrency", help: "async: concurrent trainers (0 = 2C)", default: Some("0"), is_flag: false },
+        Opt { name: "staleness-alpha", help: "async staleness discount exponent", default: Some("0.5"), is_flag: false },
+        Opt { name: "model-bytes", help: "update size in bytes (0 = cost model)", default: Some("0"), is_flag: false },
+        Opt { name: "base-compute-ms", help: "fastest-tier round compute (0 = cost model)", default: Some("0"), is_flag: false },
+        Opt { name: "sim-sweep", help: "run {sync,async} × {greedyada,random} grid", default: None, is_flag: true },
+        Opt { name: "bench-out", help: "write events/sec benchmark JSON here", default: None, is_flag: false },
+    ]);
+    let a = Args::parse(argv, &opts)?;
+    if a.has_flag("help") {
+        println!(
+            "{}",
+            usage(
+                "simulate",
+                "Discrete-event federation simulation on a virtual clock \
+                 (100k+ clients in seconds).",
+                &opts
+            )
+        );
+        return Ok(());
+    }
+    let mut cfg = parse_config(&a)?;
+    cfg.sim.mode = SimMode::parse(a.get("sim-mode").unwrap_or("sync"))?;
+    cfg.sim.availability = a.get("availability").unwrap_or("always-on").into();
+    cfg.sim.cost_model = a.get("cost-model").unwrap_or("mobile-wan").into();
+    cfg.sim.dropout = a.get_f64("dropout")?;
+    cfg.sim.deadline_ms = a.get_f64("deadline-ms")?;
+    cfg.sim.over_select = a.get_f64("over-select")?;
+    cfg.sim.async_buffer = a.get_usize("async-buffer")?;
+    cfg.sim.async_concurrency = a.get_usize("async-concurrency")?;
+    cfg.sim.staleness_alpha = a.get_f64("staleness-alpha")?;
+    cfg.sim.model_bytes = a.get_usize("model-bytes")?;
+    cfg.sim.base_compute_ms = a.get_f64("base-compute-ms")?;
+    cfg.validate()?;
+
+    if a.has_flag("sim-sweep") {
+        let platform = Platform::new(4);
+        let report = SimSweep::new(cfg)
+            .modes(&[SimMode::Sync, SimMode::Async])
+            .allocations(&[Allocation::GreedyAda, Allocation::Random])
+            .run(&platform)?;
+        print!("{}", report.to_table());
+        return Ok(());
+    }
+
+    let report = easyfl::simnet::simulate(&cfg)?;
+    println!(
+        "simnet {} | {} clients ({}) | {} rounds",
+        report.mode, report.num_clients, report.availability, report.rounds
+    );
+    println!(
+        "  makespan  {:.1} s virtual ({:.0} ms wall, {:.0} events/s)",
+        report.makespan_ms / 1000.0,
+        report.wall_ms,
+        report.events_per_sec()
+    );
+    println!(
+        "  cohorts   selected {} | reported {} | dropped {} | participation {:.1}%",
+        report.selected,
+        report.reported,
+        report.dropped,
+        report.participation * 100.0
+    );
+    println!(
+        "  training  final acc {:.2}% | loss {:.3} | avg staleness {:.2} | comm {:.1} MiB",
+        report.final_accuracy * 100.0,
+        report.final_train_loss,
+        report.avg_staleness,
+        report.comm_bytes as f64 / (1024.0 * 1024.0)
+    );
+    println!("  trace digest {:#018x} (same seed ⇒ same digest)", report.trace_digest);
+
+    if let Some(path) = a.get("bench-out") {
+        std::fs::write(path, report.bench_json())?;
+        println!("  benchmark written to {path}");
+    }
+    Ok(())
+}
+
 fn list_opt(a: &Args, name: &str, default: &str) -> Vec<String> {
     a.get(name)
         .unwrap_or(default)
@@ -240,25 +330,24 @@ fn cmd_jobs(argv: &[String]) -> easyfl::Result<()> {
         handles.push(platform.submit(cfg)?);
     }
     loop {
-        let mut all_done = true;
         let mut line = String::new();
         for h in &handles {
-            let status = h.status();
-            if !status.is_terminal() {
-                all_done = false;
-            }
             line.push_str(&format!(
                 "{}: {:?} {:>3.0}%  ",
                 h.label(),
-                status,
+                h.status(),
                 h.progress() * 100.0
             ));
         }
         println!("{line}");
-        if all_done {
-            break;
+        // Park on the first unfinished job's condvar (bounded so the
+        // status line still refreshes); an idle platform burns no CPU.
+        match handles.iter().find(|h| !h.status().is_terminal()) {
+            Some(h) => {
+                h.wait_timeout(Duration::from_millis(500));
+            }
+            None => break,
         }
-        std::thread::sleep(Duration::from_millis(500));
     }
     for h in handles {
         let label = h.label().to_string();
@@ -453,10 +542,14 @@ fn cmd_info(argv: &[String]) -> easyfl::Result<()> {
     }
     let (algos, datasets, partitions, flows) =
         easyfl::registry::with_global(|r| r.names());
+    let (availability, cost_models) =
+        easyfl::registry::with_global(|r| r.sim_names());
     println!("\nregistered components:");
     println!("  algorithms:   {}", algos.join(", "));
     println!("  data sources: {}", datasets.join(", "));
     println!("  partitions:   {}", partitions.join(", "));
     println!("  server flows: {}", flows.join(", "));
+    println!("  availability: {}", availability.join(", "));
+    println!("  cost models:  {}", cost_models.join(", "));
     Ok(())
 }

@@ -26,11 +26,13 @@ use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use crate::api::{report_from_tracker, Report, SessionBuilder};
-use crate::config::{Config, DatasetKind, Partition};
+use crate::config::{Allocation, Config, DatasetKind, Partition, SimMode};
 use crate::error::{Error, Result};
 use crate::registry;
+use crate::simnet::{SimNet, SimReport};
 use crate::tracking::Tracker;
 
 /// Lifecycle of a submitted job.
@@ -73,9 +75,9 @@ impl JobState {
     fn set_status(&self, s: JobStatus) {
         let mut guard = self.status.lock().unwrap();
         guard.0 = s;
-        if s.is_terminal() {
-            self.done.notify_all();
-        }
+        // Every transition wakes waiters — `wait_running`/`wait_timeout`
+        // observe non-terminal transitions too, so nobody has to poll.
+        self.done.notify_all();
     }
 
     fn finish(&self, result: Result<Report>) {
@@ -151,6 +153,37 @@ impl JobHandle {
         let mut guard = self.state.status.lock().unwrap();
         while !guard.0.is_terminal() {
             guard = self.state.done.wait(guard).unwrap();
+        }
+        guard.0
+    }
+
+    /// Block until the job leaves the queue (a worker picked it up, or
+    /// it went terminal without running). Condvar wait — no CPU spin.
+    pub fn wait_running(&self) -> JobStatus {
+        let mut guard = self.state.status.lock().unwrap();
+        while guard.0 == JobStatus::Queued {
+            guard = self.state.done.wait(guard).unwrap();
+        }
+        guard.0
+    }
+
+    /// Block until the job is terminal or `timeout` elapses, whichever
+    /// comes first, and return the status at that point. This is the
+    /// no-busy-wait primitive status tickers (the `jobs` CLI) drain on.
+    pub fn wait_timeout(&self, timeout: Duration) -> JobStatus {
+        let deadline = Instant::now() + timeout;
+        let mut guard = self.state.status.lock().unwrap();
+        while !guard.0.is_terminal() {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (g, _timed_out) = self
+                .state
+                .done
+                .wait_timeout(guard, deadline - now)
+                .unwrap();
+            guard = g;
         }
         guard.0
     }
@@ -293,6 +326,45 @@ impl Platform {
             rounds,
             tracker,
             Box::new(move |ctx| run_session_job(cfg, ctx)),
+        ))
+    }
+
+    /// Submit a SimNet discrete-event simulation job (see
+    /// [`crate::simnet`]). Unknown availability / cost-model names fail
+    /// here (fast), before queueing. The job's [`Report`] is the
+    /// projection of the final [`SimReport`]; per-round participation,
+    /// dropout and staleness live in the job's tracker.
+    pub fn submit_sim(&self, cfg: Config) -> Result<JobHandle> {
+        cfg.validate()?;
+        registry::with_global(|r| {
+            r.availability(&cfg.sim.availability)?;
+            r.cost_model(&cfg.sim.cost_model, &cfg)?;
+            Ok(())
+        })?;
+        let id = self.next_id.fetch_add(1, Ordering::SeqCst);
+        let label = format!(
+            "sim-{id}-{}-{}-{}",
+            cfg.sim.mode.name(),
+            cfg.allocation.name(),
+            cfg.partition.name()
+        );
+        let tracker = match &cfg.tracking_dir {
+            Some(dir) => Arc::new(Tracker::persistent(&label, dir.clone())),
+            None => Arc::new(Tracker::new(&label)),
+        };
+        let rounds = cfg.rounds;
+        Ok(self.enqueue(
+            id,
+            label,
+            rounds,
+            tracker,
+            Box::new(move |ctx| {
+                let mut net = SimNet::with_tracker(&cfg, ctx.tracker())?;
+                let sim = net.run()?;
+                let report = sim.to_report();
+                ctx.tracker().finish()?;
+                Ok(report)
+            }),
         ))
     }
 
@@ -536,6 +608,172 @@ impl SweepReport {
     }
 }
 
+// ------------------------------------------------------------- sim sweep
+
+/// Grid expansion over SimNet scenarios: {sync, async} × allocation
+/// strategies × partitions, executed on a [`Platform`] and summarized as
+/// one comparative table with makespan and participation columns.
+pub struct SimSweep {
+    base: Config,
+    modes: Vec<SimMode>,
+    allocations: Vec<Allocation>,
+    partitions: Vec<Partition>,
+}
+
+impl SimSweep {
+    /// A sweep whose axes default to the base config's single values.
+    pub fn new(base: Config) -> SimSweep {
+        SimSweep {
+            modes: vec![base.sim.mode],
+            allocations: vec![base.allocation],
+            partitions: vec![base.partition],
+            base,
+        }
+    }
+
+    pub fn modes(mut self, modes: &[SimMode]) -> SimSweep {
+        self.modes = modes.to_vec();
+        self
+    }
+
+    pub fn allocations(mut self, allocations: &[Allocation]) -> SimSweep {
+        self.allocations = allocations.to_vec();
+        self
+    }
+
+    pub fn partitions(mut self, partitions: &[Partition]) -> SimSweep {
+        self.partitions = partitions.to_vec();
+        self
+    }
+
+    /// Expand the grid (mode-major, like the report table).
+    pub fn configs(&self) -> Vec<Config> {
+        let mut out = Vec::new();
+        for &mode in &self.modes {
+            for &allocation in &self.allocations {
+                for &partition in &self.partitions {
+                    let mut cfg = self.base.clone();
+                    cfg.sim.mode = mode;
+                    cfg.allocation = allocation;
+                    cfg.partition = partition;
+                    out.push(cfg);
+                }
+            }
+        }
+        out
+    }
+
+    /// Submit every cell as a SimNet job and join them into a report.
+    pub fn run(self, platform: &Platform) -> Result<SimSweepReport> {
+        let mut handles = Vec::new();
+        for cfg in self.configs() {
+            let mode = cfg.sim.mode.name().to_string();
+            let allocation = cfg.allocation.name().to_string();
+            let partition = cfg.partition.name();
+            // The job body publishes the full SimReport through this
+            // side slot; the JobHandle's Report only carries the
+            // training-shaped projection.
+            let slot: Arc<Mutex<Option<SimReport>>> = Arc::new(Mutex::new(None));
+            let slot_w = slot.clone();
+            let label = format!("simsweep-{mode}-{allocation}-{partition}");
+            let tracker = Arc::new(Tracker::new(&label));
+            let rounds = cfg.rounds;
+            let handle = platform.spawn_job(
+                &label,
+                rounds,
+                tracker,
+                Box::new(move |ctx| {
+                    let mut net = SimNet::with_tracker(&cfg, ctx.tracker())?;
+                    let sim = net.run()?;
+                    let report = sim.to_report();
+                    *slot_w.lock().unwrap() = Some(sim);
+                    Ok(report)
+                }),
+            )?;
+            handles.push((mode, allocation, partition, slot, handle));
+        }
+        let rows = handles
+            .into_iter()
+            .map(|(mode, allocation, partition, slot, handle)| {
+                let outcome = match handle.join() {
+                    Ok(_) => slot.lock().unwrap().take().ok_or_else(|| {
+                        Error::Runtime("sim job finished without a report".into())
+                    }),
+                    Err(e) => Err(e),
+                };
+                SimSweepRow { mode, allocation, partition, outcome }
+            })
+            .collect();
+        Ok(SimSweepReport { rows })
+    }
+}
+
+/// One SimNet sweep cell's identity and outcome.
+pub struct SimSweepRow {
+    pub mode: String,
+    pub allocation: String,
+    pub partition: String,
+    pub outcome: Result<SimReport>,
+}
+
+/// Results of a [`SimSweep`], renderable as an aligned text table.
+pub struct SimSweepReport {
+    pub rows: Vec<SimSweepRow>,
+}
+
+impl SimSweepReport {
+    /// Successful cells only.
+    pub fn ok_rows(&self) -> impl Iterator<Item = (&SimSweepRow, &SimReport)> {
+        self.rows
+            .iter()
+            .filter_map(|r| r.outcome.as_ref().ok().map(|rep| (r, rep)))
+    }
+
+    /// Render the comparative table the `simulate --sweep` subcommand
+    /// prints: makespan + participation are the headline columns.
+    pub fn to_table(&self) -> String {
+        let mut out = String::new();
+        let header = format!(
+            "{:<6} {:<10} {:<10} {:>7} {:>12} {:>8} {:>8} {:>7} {:>7}  {}\n",
+            "mode", "alloc", "partition", "rounds", "makespan s", "part %",
+            "drop %", "stale", "acc%", "status"
+        );
+        out.push_str(&header);
+        out.push_str(&"-".repeat(header.len().saturating_sub(1)));
+        out.push('\n');
+        for row in &self.rows {
+            match &row.outcome {
+                Ok(rep) => {
+                    let drop_pct = if rep.selected > 0 {
+                        rep.dropped as f64 / rep.selected as f64 * 100.0
+                    } else {
+                        0.0
+                    };
+                    out.push_str(&format!(
+                        "{:<6} {:<10} {:<10} {:>7} {:>12.1} {:>8.1} {:>8.1} {:>7.2} {:>7.2}  {}\n",
+                        row.mode,
+                        row.allocation,
+                        row.partition,
+                        rep.rounds,
+                        rep.makespan_ms / 1000.0,
+                        rep.participation * 100.0,
+                        drop_pct,
+                        rep.avg_staleness,
+                        rep.final_accuracy * 100.0,
+                        if rep.converged { "ok" } else { "partial" },
+                    ));
+                }
+                Err(e) => out.push_str(&format!(
+                    "{:<6} {:<10} {:<10} {:>7} {:>12} {:>8} {:>8} {:>7} {:>7}  error: {e}\n",
+                    row.mode, row.allocation, row.partition, "-", "-", "-", "-",
+                    "-", "-",
+                )),
+            }
+        }
+        out
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -631,11 +869,33 @@ mod tests {
                 }),
             )
             .unwrap();
-        while h.status() == JobStatus::Queued {
-            std::thread::yield_now();
-        }
+        // Condvar wait (no yield/sleep spin) until a worker picks it up.
+        assert_eq!(h.wait_running(), JobStatus::Running);
         h.cancel();
         assert_eq!(h.wait(), JobStatus::Cancelled);
+    }
+
+    #[test]
+    fn wait_timeout_returns_early_status_then_terminal() {
+        let platform = Platform::new(1);
+        let (tx, rx) = std::sync::mpsc::channel::<()>();
+        let h = platform
+            .spawn_job(
+                "slowpoke",
+                1,
+                Arc::new(Tracker::new("slowpoke")),
+                Box::new(move |_ctx| {
+                    rx.recv().ok();
+                    Ok(quick_report())
+                }),
+            )
+            .unwrap();
+        // Times out while the job is still blocked on the channel.
+        let status = h.wait_timeout(Duration::from_millis(20));
+        assert!(!status.is_terminal(), "{status:?}");
+        tx.send(()).unwrap();
+        // Wakes on the completion notification well before the timeout.
+        assert_eq!(h.wait_timeout(Duration::from_secs(30)), JobStatus::Completed);
     }
 
     #[test]
@@ -745,6 +1005,63 @@ mod tests {
         assert!(platform.jobs().is_empty());
         // Handles held by the caller still work after pruning.
         assert!(running.join().is_ok());
+    }
+
+    fn small_sim_config() -> Config {
+        let mut cfg = Config::default();
+        cfg.dataset = DatasetKind::Cifar10;
+        cfg.num_clients = 200;
+        cfg.clients_per_round = 10;
+        cfg.rounds = 5;
+        cfg.sim.dropout = 0.1;
+        cfg
+    }
+
+    #[test]
+    fn sim_jobs_ride_the_platform() {
+        let platform = Platform::new(2);
+        let h = platform.submit_sim(small_sim_config()).unwrap();
+        assert!(h.label().starts_with("sim-"));
+        let report = h.join().unwrap();
+        assert_eq!(report.rounds, 5);
+        assert!(report.final_accuracy > 0.0);
+        assert!(report.avg_round_ms > 0.0);
+    }
+
+    #[test]
+    fn submit_sim_rejects_unknown_models_before_queueing() {
+        let platform = Platform::new(1);
+        let mut cfg = small_sim_config();
+        cfg.sim.availability = "lunar".into();
+        let err = platform.submit_sim(cfg).unwrap_err().to_string();
+        assert!(err.contains("lunar"), "{err}");
+        assert!(err.contains("always-on"), "{err}");
+        let mut cfg = small_sim_config();
+        cfg.sim.cost_model = "free-lunch".into();
+        let err = platform.submit_sim(cfg).unwrap_err().to_string();
+        assert!(err.contains("free-lunch"), "{err}");
+    }
+
+    #[test]
+    fn sim_sweep_expands_and_reports_makespan_and_participation() {
+        let sweep = SimSweep::new(small_sim_config())
+            .modes(&[SimMode::Sync, SimMode::Async])
+            .allocations(&[Allocation::GreedyAda, Allocation::Random]);
+        assert_eq!(sweep.configs().len(), 4);
+        let platform = Platform::new(4);
+        let report = sweep.run(&platform).unwrap();
+        assert_eq!(report.rows.len(), 4);
+        assert_eq!(report.ok_rows().count(), 4);
+        let table = report.to_table();
+        assert!(table.contains("makespan s"), "{table}");
+        assert!(table.contains("part %"), "{table}");
+        assert!(table.contains("sync"), "{table}");
+        assert!(table.contains("async"), "{table}");
+        assert!(table.contains("greedyada"), "{table}");
+        for (_, rep) in report.ok_rows() {
+            assert!(rep.makespan_ms > 0.0);
+            assert!(rep.participation > 0.0);
+        }
     }
 
     #[test]

@@ -35,6 +35,7 @@ use crate::coordinator::ClientFlowFactory;
 use crate::data::registry::DataSource;
 use crate::error::{Error, Result};
 use crate::flow::ServerFlow;
+use crate::simnet::{AvailabilityModel, CostModel};
 
 /// Everything an algorithm contributes to a session: the server half and
 /// a per-device factory for the client half of the training flow.
@@ -61,6 +62,15 @@ pub type PartitionParser =
 pub type ServerFlowBuilder =
     Arc<dyn Fn(&Config) -> Result<Box<dyn ServerFlow>> + Send + Sync>;
 
+/// Parser closure for a SimNet availability spec (receives the full spec
+/// string, e.g. `"diurnal(0.4)"` for the registered name `"diurnal"`).
+pub type AvailabilityBuilder =
+    Arc<dyn Fn(&str) -> Result<AvailabilityModel> + Send + Sync>;
+
+/// Constructor closure for a SimNet cost model (reads `cfg.sim` tuning).
+pub type CostModelBuilder =
+    Arc<dyn Fn(&Config) -> Result<CostModel> + Send + Sync>;
+
 /// Name → constructor tables for every pluggable component kind.
 #[derive(Default)]
 pub struct ComponentRegistry {
@@ -68,6 +78,8 @@ pub struct ComponentRegistry {
     datasets: BTreeMap<String, DatasetBuilder>,
     partitions: BTreeMap<String, PartitionParser>,
     server_flows: BTreeMap<String, ServerFlowBuilder>,
+    availability: BTreeMap<String, AvailabilityBuilder>,
+    cost_models: BTreeMap<String, CostModelBuilder>,
 }
 
 fn unknown(kind: &str, name: &str, have: Vec<&String>) -> Error {
@@ -89,6 +101,7 @@ impl ComponentRegistry {
         crate::algorithms::register_builtins(&mut reg);
         crate::data::register_builtins(&mut reg);
         crate::flow::register_builtins(&mut reg);
+        crate::simnet::register_builtins(&mut reg);
         reg
     }
 
@@ -114,6 +127,18 @@ impl ComponentRegistry {
     /// Register (or replace) a standalone server flow under `name`.
     pub fn register_server_flow(&mut self, name: &str, b: ServerFlowBuilder) {
         self.server_flows.insert(name.to_string(), b);
+    }
+
+    /// Register (or replace) a SimNet availability model. `name` is the
+    /// spec head: `"diurnal(0.4)"` resolves the parser registered as
+    /// `"diurnal"`.
+    pub fn register_availability(&mut self, name: &str, b: AvailabilityBuilder) {
+        self.availability.insert(name.to_string(), b);
+    }
+
+    /// Register (or replace) a SimNet cost model under `name`.
+    pub fn register_cost_model(&mut self, name: &str, b: CostModelBuilder) {
+        self.cost_models.insert(name.to_string(), b);
     }
 
     // ------------------------------------------------------------ lookup
@@ -183,6 +208,37 @@ impl ComponentRegistry {
         }
     }
 
+    /// Parse a SimNet availability spec (`"always-on"`, `"diurnal(0.4)"`,
+    /// any registered name). Lookup mirrors [`ComponentRegistry::partition`].
+    pub fn availability(&self, spec: &str) -> Result<AvailabilityModel> {
+        let head = spec
+            .split('(')
+            .next()
+            .unwrap_or(spec)
+            .trim()
+            .to_ascii_lowercase();
+        match self.availability.get(head.as_str()) {
+            Some(b) => b(spec),
+            None => Err(unknown(
+                "availability model",
+                spec,
+                self.availability.keys().collect(),
+            )),
+        }
+    }
+
+    /// Instantiate a registered SimNet cost model by name.
+    pub fn cost_model(&self, name: &str, cfg: &Config) -> Result<CostModel> {
+        match self.cost_models.get(name) {
+            Some(b) => b(cfg),
+            None => Err(unknown(
+                "cost model",
+                name,
+                self.cost_models.keys().collect(),
+            )),
+        }
+    }
+
     /// Registered names per component kind:
     /// `(algorithms, datasets, partitions, server flows)`.
     pub fn names(&self) -> (Vec<String>, Vec<String>, Vec<String>, Vec<String>) {
@@ -191,6 +247,14 @@ impl ComponentRegistry {
             self.datasets.keys().cloned().collect(),
             self.partitions.keys().cloned().collect(),
             self.server_flows.keys().cloned().collect(),
+        )
+    }
+
+    /// Registered SimNet model names: `(availability, cost models)`.
+    pub fn sim_names(&self) -> (Vec<String>, Vec<String>) {
+        (
+            self.availability.keys().cloned().collect(),
+            self.cost_models.keys().cloned().collect(),
         )
     }
 }

@@ -1,0 +1,478 @@
+//! Per-client lifecycle state machine + availability models.
+//!
+//! Every simulated client walks the FLGo-style lifecycle
+//!
+//! ```text
+//! offline ⇄ available → selected → training → uploading → reported
+//!                          └──────────┴────────────┴────→ dropped
+//! ```
+//!
+//! driven by a seeded [`AvailabilityModel`] (when does the device come
+//! online?) and a per-selection dropout probability (does it abandon the
+//! round?). Reported *and* dropped clients are always released back to
+//! the available pool (or offline, if their availability trace flipped
+//! while they were busy) — no client is ever leaked mid-round.
+
+use crate::error::{Error, Result};
+use crate::util::rng::Rng;
+
+/// Lifecycle phase of one simulated client.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClientPhase {
+    /// Device is off / unreachable.
+    Offline,
+    /// Online and selectable.
+    Available,
+    /// Picked for the current round / async slot.
+    Selected,
+    /// Running local epochs.
+    Training,
+    /// Sending its update to the server.
+    Uploading,
+    /// Update received by the server (terminal for the round).
+    Reported,
+    /// Abandoned the round (terminal for the round).
+    Dropped,
+}
+
+impl ClientPhase {
+    /// True while the client occupies a round slot.
+    pub fn is_busy(self) -> bool {
+        matches!(
+            self,
+            ClientPhase::Selected | ClientPhase::Training | ClientPhase::Uploading
+        )
+    }
+}
+
+/// One simulated client.
+#[derive(Debug, Clone)]
+pub struct ClientState {
+    pub phase: ClientPhase,
+    /// Availability-trace state (pool membership is derived from this
+    /// plus `phase` by the engine).
+    pub online: bool,
+    /// Device tier index into the cost model's catalog.
+    pub device_class: usize,
+    /// Uplink bandwidth in bytes/ms (upload = model_bytes / bandwidth).
+    pub bandwidth_bytes_per_ms: f64,
+    /// Per-client availability phase offset (diurnal models).
+    pub avail_phase_ms: f64,
+    /// Selection epoch; in-flight events from stale selections are
+    /// ignored when their epoch no longer matches.
+    pub epoch: u64,
+    /// Global model version the client started training from (async
+    /// staleness = current version − start_version at report time).
+    pub start_version: usize,
+    /// Duration of the client's own current round (compute + upload),
+    /// excluding device-queue waits — what adaptive profiling observes.
+    pub service_ms: f64,
+    pub reports: u32,
+    pub dropouts: u32,
+}
+
+impl ClientState {
+    pub fn new(device_class: usize, bandwidth_bytes_per_ms: f64) -> ClientState {
+        ClientState {
+            phase: ClientPhase::Offline,
+            online: false,
+            device_class,
+            bandwidth_bytes_per_ms,
+            avail_phase_ms: 0.0,
+            epoch: 0,
+            start_version: 0,
+            service_ms: 0.0,
+            reports: 0,
+            dropouts: 0,
+        }
+    }
+
+    pub fn is_busy(&self) -> bool {
+        self.phase.is_busy()
+    }
+
+    /// Available → Selected. Bumps the epoch so any stale in-flight
+    /// events from a previous selection are ignored.
+    pub fn select(&mut self, version: usize) {
+        debug_assert_eq!(self.phase, ClientPhase::Available);
+        self.phase = ClientPhase::Selected;
+        self.epoch += 1;
+        self.start_version = version;
+    }
+
+    /// Selected → Training.
+    pub fn begin_training(&mut self) {
+        debug_assert_eq!(self.phase, ClientPhase::Selected);
+        self.phase = ClientPhase::Training;
+    }
+
+    /// Training → Uploading.
+    pub fn begin_upload(&mut self) {
+        debug_assert_eq!(self.phase, ClientPhase::Training);
+        self.phase = ClientPhase::Uploading;
+    }
+
+    /// Uploading → Reported.
+    pub fn report(&mut self) {
+        debug_assert_eq!(self.phase, ClientPhase::Uploading);
+        self.phase = ClientPhase::Reported;
+        self.reports += 1;
+    }
+
+    /// Any busy phase → Dropped.
+    pub fn drop_out(&mut self) {
+        debug_assert!(self.is_busy(), "drop_out from {:?}", self.phase);
+        self.phase = ClientPhase::Dropped;
+        self.dropouts += 1;
+    }
+
+    /// Terminal (or busy, at simulation teardown) → Available/Offline
+    /// according to the availability trace. Returns true when the client
+    /// re-enters the available pool.
+    pub fn release(&mut self) -> bool {
+        self.phase = if self.online {
+            ClientPhase::Available
+        } else {
+            ClientPhase::Offline
+        };
+        self.online
+    }
+}
+
+// -------------------------------------------------------- availability
+
+/// Named, seeded availability trace generators. Resolved through the
+/// component registry so configs select them by string name:
+/// `"always-on"`, `"diurnal"`, `"diurnal(0.6)"`, `"flaky(1800000,600000)"`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum AvailabilityModel {
+    /// Every client is always online (the 100k-in-seconds default).
+    AlwaysOn,
+    /// Square-wave day/night cycle with per-client phase offsets.
+    Diurnal { period_ms: f64, duty: f64 },
+    /// Memoryless on/off churn with exponential dwell times.
+    Flaky { mean_on_ms: f64, mean_off_ms: f64 },
+}
+
+/// One simulated day, the default diurnal period.
+const DAY_MS: f64 = 86_400_000.0;
+
+fn parse_args(spec: &str) -> Result<Vec<f64>> {
+    let Some(inner) = spec
+        .find('(')
+        .map(|i| &spec[i + 1..])
+        .and_then(|r| r.strip_suffix(')'))
+    else {
+        return Ok(Vec::new());
+    };
+    inner
+        .split(',')
+        .map(|a| {
+            a.trim().parse::<f64>().map_err(|_| {
+                Error::Config(format!("bad availability arg {a:?} in {spec:?}"))
+            })
+        })
+        .collect()
+}
+
+impl AvailabilityModel {
+    /// Parse a spec string (head selects the model, args tune it).
+    pub fn parse(spec: &str) -> Result<AvailabilityModel> {
+        let head = spec.split('(').next().unwrap_or(spec).trim().to_ascii_lowercase();
+        let args = parse_args(spec)?;
+        match head.as_str() {
+            "always-on" | "always" | "on" => Ok(AvailabilityModel::AlwaysOn),
+            "diurnal" => {
+                let duty = args.first().copied().unwrap_or(0.5);
+                let period_ms = args.get(1).copied().unwrap_or(DAY_MS);
+                if !(duty > 0.0 && duty <= 1.0) || !(period_ms > 0.0) {
+                    return Err(Error::Config(format!(
+                        "diurnal needs duty in (0,1] and period > 0, got {spec:?}"
+                    )));
+                }
+                if duty >= 1.0 {
+                    // A 100% duty cycle never flips — same as always-on.
+                    return Ok(AvailabilityModel::AlwaysOn);
+                }
+                Ok(AvailabilityModel::Diurnal { period_ms, duty })
+            }
+            "flaky" => {
+                let mean_on_ms = args.first().copied().unwrap_or(1_800_000.0);
+                let mean_off_ms = args.get(1).copied().unwrap_or(1_800_000.0);
+                if !(mean_on_ms > 0.0 && mean_off_ms > 0.0) {
+                    return Err(Error::Config(format!(
+                        "flaky needs positive mean on/off ms, got {spec:?}"
+                    )));
+                }
+                Ok(AvailabilityModel::Flaky { mean_on_ms, mean_off_ms })
+            }
+            other => Err(Error::Config(format!(
+                "unknown availability model {other:?} (always-on | diurnal | flaky)"
+            ))),
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            AvailabilityModel::AlwaysOn => "always-on".into(),
+            AvailabilityModel::Diurnal { period_ms, duty } => {
+                format!("diurnal({duty},{period_ms})")
+            }
+            AvailabilityModel::Flaky { mean_on_ms, mean_off_ms } => {
+                format!("flaky({mean_on_ms},{mean_off_ms})")
+            }
+        }
+    }
+
+    /// Per-client phase offset (only diurnal traces use it).
+    pub fn sample_phase_ms(&self, rng: &mut Rng) -> f64 {
+        match self {
+            AvailabilityModel::Diurnal { period_ms, .. } => {
+                rng.uniform() * period_ms
+            }
+            _ => 0.0,
+        }
+    }
+
+    /// Is the client online at t = 0?
+    pub fn initial_online(&self, phase_ms: f64, rng: &mut Rng) -> bool {
+        match *self {
+            AvailabilityModel::AlwaysOn => true,
+            AvailabilityModel::Diurnal { period_ms, duty } => {
+                (phase_ms % period_ms) < duty * period_ms
+            }
+            AvailabilityModel::Flaky { mean_on_ms, mean_off_ms } => {
+                // Stationary distribution of the on/off chain.
+                rng.uniform() < mean_on_ms / (mean_on_ms + mean_off_ms)
+            }
+        }
+    }
+
+    /// Absolute time of the next on/off flip after `now_ms`
+    /// (`f64::INFINITY` ⇒ never flips — the engine skips the event).
+    pub fn next_toggle_ms(
+        &self,
+        online: bool,
+        phase_ms: f64,
+        now_ms: f64,
+        rng: &mut Rng,
+    ) -> f64 {
+        match *self {
+            AvailabilityModel::AlwaysOn => f64::INFINITY,
+            AvailabilityModel::Diurnal { period_ms, duty } => {
+                let on_ms = duty * period_ms;
+                let local = (now_ms + phase_ms) % period_ms;
+                if online {
+                    // Next flip at the end of the on-window. Toggles are
+                    // only scheduled right after entering a window, so
+                    // `local` is always strictly inside it.
+                    now_ms + (on_ms - local).max(0.0)
+                } else {
+                    now_ms + (period_ms - local).max(0.0)
+                }
+            }
+            AvailabilityModel::Flaky { mean_on_ms, mean_off_ms } => {
+                let mean = if online { mean_on_ms } else { mean_off_ms };
+                let u = (1.0 - rng.uniform()).max(f64::MIN_POSITIVE);
+                now_ms + (-u.ln()) * mean
+            }
+        }
+    }
+}
+
+// --------------------------------------------------------------- pool
+
+/// O(1) insert/remove/sample set of available client ids — the engine's
+/// "available pool". Swap-remove keeps sampling O(k) regardless of
+/// federation size (a 1M-client pool costs two `Vec<usize>`).
+#[derive(Debug, Clone)]
+pub struct Pool {
+    members: Vec<usize>,
+    /// Position of each client in `members` (`usize::MAX` ⇒ absent).
+    pos: Vec<usize>,
+}
+
+impl Pool {
+    pub fn new(num_clients: usize) -> Pool {
+        Pool { members: Vec::new(), pos: vec![usize::MAX; num_clients] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.members.is_empty()
+    }
+
+    pub fn contains(&self, client: usize) -> bool {
+        self.pos[client] != usize::MAX
+    }
+
+    pub fn insert(&mut self, client: usize) {
+        if self.contains(client) {
+            return;
+        }
+        self.pos[client] = self.members.len();
+        self.members.push(client);
+    }
+
+    pub fn remove(&mut self, client: usize) {
+        let p = self.pos[client];
+        if p == usize::MAX {
+            return;
+        }
+        let last = self.members.len() - 1;
+        self.members.swap(p, last);
+        self.pos[self.members[p]] = p;
+        self.members.pop();
+        self.pos[client] = usize::MAX;
+    }
+
+    /// Draw up to `k` distinct clients uniformly, removing them from the
+    /// pool (they are about to be Selected).
+    pub fn sample(&mut self, k: usize, rng: &mut Rng) -> Vec<usize> {
+        let k = k.min(self.members.len());
+        let mut out = Vec::with_capacity(k);
+        for _ in 0..k {
+            let i = rng.below(self.members.len() as u64) as usize;
+            let c = self.members[i];
+            self.remove(c);
+            out.push(c);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle_walks_the_full_machine() {
+        let mut c = ClientState::new(2, 1000.0);
+        c.online = true;
+        assert!(c.release());
+        assert_eq!(c.phase, ClientPhase::Available);
+        c.select(3);
+        assert_eq!(c.epoch, 1);
+        assert_eq!(c.start_version, 3);
+        c.begin_training();
+        c.begin_upload();
+        c.report();
+        assert_eq!(c.phase, ClientPhase::Reported);
+        assert_eq!(c.reports, 1);
+        assert!(c.release());
+        // Second selection bumps the epoch; dropout path.
+        c.select(4);
+        c.begin_training();
+        c.drop_out();
+        assert_eq!(c.phase, ClientPhase::Dropped);
+        assert_eq!(c.dropouts, 1);
+        c.online = false;
+        assert!(!c.release());
+        assert_eq!(c.phase, ClientPhase::Offline);
+    }
+
+    #[test]
+    fn availability_specs_parse() {
+        assert_eq!(
+            AvailabilityModel::parse("always-on").unwrap(),
+            AvailabilityModel::AlwaysOn
+        );
+        match AvailabilityModel::parse("diurnal(0.25)").unwrap() {
+            AvailabilityModel::Diurnal { duty, .. } => {
+                assert!((duty - 0.25).abs() < 1e-12)
+            }
+            other => panic!("{other:?}"),
+        }
+        match AvailabilityModel::parse("flaky(1000,2000)").unwrap() {
+            AvailabilityModel::Flaky { mean_on_ms, mean_off_ms } => {
+                assert_eq!(mean_on_ms, 1000.0);
+                assert_eq!(mean_off_ms, 2000.0);
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(AvailabilityModel::parse("lunar").is_err());
+        assert!(AvailabilityModel::parse("diurnal(2.0)").is_err());
+    }
+
+    #[test]
+    fn always_on_never_toggles() {
+        let m = AvailabilityModel::AlwaysOn;
+        let mut rng = Rng::new(1);
+        assert!(m.initial_online(0.0, &mut rng));
+        assert!(m.next_toggle_ms(true, 0.0, 5.0, &mut rng).is_infinite());
+    }
+
+    #[test]
+    fn diurnal_toggles_advance_and_alternate() {
+        let m = AvailabilityModel::Diurnal { period_ms: 100.0, duty: 0.6 };
+        let mut rng = Rng::new(2);
+        // Phase 0: online in [0, 60), offline in [60, 100).
+        assert!(m.initial_online(0.0, &mut rng));
+        let t_off = m.next_toggle_ms(true, 0.0, 0.0, &mut rng);
+        assert!((t_off - 60.0).abs() < 1e-6, "{t_off}");
+        let t_on = m.next_toggle_ms(false, 0.0, t_off, &mut rng);
+        assert!((t_on - 100.0).abs() < 1e-6, "{t_on}");
+    }
+
+    #[test]
+    fn flaky_dwell_times_follow_means() {
+        let m = AvailabilityModel::Flaky { mean_on_ms: 500.0, mean_off_ms: 50.0 };
+        let mut rng = Rng::new(3);
+        let n = 4000;
+        let avg_on: f64 = (0..n)
+            .map(|_| m.next_toggle_ms(true, 0.0, 0.0, &mut rng))
+            .sum::<f64>()
+            / n as f64;
+        let avg_off: f64 = (0..n)
+            .map(|_| m.next_toggle_ms(false, 0.0, 0.0, &mut rng))
+            .sum::<f64>()
+            / n as f64;
+        assert!((avg_on - 500.0).abs() < 50.0, "{avg_on}");
+        assert!((avg_off - 50.0).abs() < 5.0, "{avg_off}");
+        // Stationary online fraction ≈ 500/550.
+        let online = (0..n).filter(|_| m.initial_online(0.0, &mut rng)).count();
+        let frac = online as f64 / n as f64;
+        assert!((frac - 500.0 / 550.0).abs() < 0.05, "{frac}");
+    }
+
+    #[test]
+    fn pool_sample_is_distinct_and_removing() {
+        let mut pool = Pool::new(100);
+        for c in 0..100 {
+            pool.insert(c);
+        }
+        let mut rng = Rng::new(4);
+        let picked = pool.sample(30, &mut rng);
+        assert_eq!(picked.len(), 30);
+        let mut sorted = picked.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 30, "samples must be distinct");
+        assert_eq!(pool.len(), 70);
+        for &c in &picked {
+            assert!(!pool.contains(c));
+            pool.insert(c);
+        }
+        assert_eq!(pool.len(), 100);
+        // Over-asking returns everything.
+        let all = pool.sample(1000, &mut rng);
+        assert_eq!(all.len(), 100);
+        assert!(pool.is_empty());
+    }
+
+    #[test]
+    fn pool_remove_is_idempotent() {
+        let mut pool = Pool::new(3);
+        pool.insert(1);
+        pool.remove(1);
+        pool.remove(1);
+        pool.remove(0);
+        assert_eq!(pool.len(), 0);
+        pool.insert(1);
+        pool.insert(1);
+        assert_eq!(pool.len(), 1);
+    }
+}

@@ -1,0 +1,197 @@
+//! Client cost model: virtual compute + upload times.
+//!
+//! Composes the existing [`DeviceCatalog`] speed ratios (paper §V-A) with
+//! a [`NetworkModel`] and per-client uplink bandwidth:
+//!
+//! ```text
+//! round time = base_compute · speed_ratio(device) · jitter
+//!            + rtt/2 + model_bytes / bandwidth + net jitter
+//! ```
+//!
+//! Cost models are registered under string names in the component
+//! registry ("mobile-wan", "ideal", "datacenter"), so a config selects
+//! one the same low-code way it selects an algorithm.
+
+use crate::config::Config;
+use crate::simulation::{DeviceCatalog, DeviceClass, NetworkModel};
+use crate::util::rng::Rng;
+
+/// Named cost model for one federation.
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    pub name: String,
+    /// Device tiers + sampling weights (compute heterogeneity).
+    pub catalog: DeviceCatalog,
+    /// Link latency/jitter on the upload path.
+    pub network: NetworkModel,
+    /// Local-training time of one round on the fastest tier, in ms.
+    pub base_compute_ms: f64,
+    /// Multiplicative log-normal compute jitter σ (0 ⇒ deterministic).
+    pub compute_jitter: f64,
+    /// Serialized model update size in bytes.
+    pub model_bytes: usize,
+    /// Uplink bandwidth range in bytes/ms, sampled log-uniformly per
+    /// client. `INFINITY` ⇒ uploads cost only latency.
+    pub bandwidth_lo: f64,
+    pub bandwidth_hi: f64,
+}
+
+impl CostModel {
+    /// Mobile federation over WAN links — the paper's target scenario.
+    /// 2–100 Mbit/s uplinks, AI-Benchmark device spread, 5 s base compute.
+    pub fn mobile_wan() -> CostModel {
+        CostModel {
+            name: "mobile-wan".into(),
+            catalog: DeviceCatalog::ai_benchmark(),
+            network: NetworkModel::mobile(),
+            base_compute_ms: 5_000.0,
+            compute_jitter: 0.1,
+            model_bytes: 1_600_000,
+            bandwidth_lo: 250.0,     // 2 Mbit/s
+            bandwidth_hi: 12_500.0,  // 100 Mbit/s
+        }
+    }
+
+    /// No network cost, no jitter — isolates scheduling effects.
+    pub fn ideal() -> CostModel {
+        CostModel {
+            name: "ideal".into(),
+            catalog: DeviceCatalog::ai_benchmark(),
+            network: NetworkModel::ideal(),
+            base_compute_ms: 5_000.0,
+            compute_jitter: 0.0,
+            model_bytes: 1_600_000,
+            bandwidth_lo: f64::INFINITY,
+            bandwidth_hi: f64::INFINITY,
+        }
+    }
+
+    /// Homogeneous cross-silo cluster: one device tier, 10 Gbit links.
+    pub fn datacenter() -> CostModel {
+        CostModel {
+            name: "datacenter".into(),
+            catalog: DeviceCatalog::new(vec![DeviceClass {
+                name: "server",
+                speed_ratio: 1.0,
+                weight: 1.0,
+            }]),
+            network: NetworkModel {
+                rtt_ms: 1.0,
+                bytes_per_ms: 1_250_000.0,
+                jitter_ms: 0.1,
+            },
+            base_compute_ms: 500.0,
+            compute_jitter: 0.02,
+            model_bytes: 1_600_000,
+            bandwidth_lo: 1_250_000.0,
+            bandwidth_hi: 1_250_000.0,
+        }
+    }
+
+    /// Apply `cfg.sim` overrides (base compute, model bytes) on top of a
+    /// named model — this is how registry builders tune their output.
+    pub fn tuned(mut self, cfg: &Config) -> CostModel {
+        if cfg.sim.base_compute_ms > 0.0 {
+            self.base_compute_ms = cfg.sim.base_compute_ms;
+        }
+        if cfg.sim.model_bytes > 0 {
+            self.model_bytes = cfg.sim.model_bytes;
+        }
+        self
+    }
+
+    /// Sample a device tier for one client.
+    pub fn sample_device(&self, rng: &mut Rng) -> usize {
+        self.catalog.sample(rng)
+    }
+
+    /// Sample a per-client uplink bandwidth (bytes/ms), log-uniform in
+    /// `[bandwidth_lo, bandwidth_hi]`.
+    pub fn sample_bandwidth(&self, rng: &mut Rng) -> f64 {
+        if !self.bandwidth_hi.is_finite() {
+            return f64::INFINITY;
+        }
+        if self.bandwidth_hi <= self.bandwidth_lo {
+            return self.bandwidth_lo;
+        }
+        let (lo, hi) = (self.bandwidth_lo.ln(), self.bandwidth_hi.ln());
+        (lo + rng.uniform() * (hi - lo)).exp()
+    }
+
+    /// Virtual local-training time for one round on `device`.
+    pub fn compute_ms(&self, device: usize, rng: &mut Rng) -> f64 {
+        let base = self.base_compute_ms * self.catalog.ratio(device);
+        if self.compute_jitter <= 0.0 {
+            return base.max(1.0);
+        }
+        (base * (self.compute_jitter * rng.normal()).exp()).max(1.0)
+    }
+
+    /// Virtual upload time of one model update over `bandwidth` bytes/ms.
+    pub fn upload_ms(&self, bandwidth: f64, rng: &mut Rng) -> f64 {
+        self.network
+            .delay_with_bandwidth_ms(self.model_bytes, bandwidth, rng)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+
+    #[test]
+    fn slower_devices_cost_more_compute() {
+        let cm = CostModel::ideal(); // jitter-free
+        let mut rng = Rng::new(1);
+        let fast = cm.compute_ms(0, &mut rng);
+        let slow = cm.compute_ms(cm.catalog.len() - 1, &mut rng);
+        assert!(slow > 3.0 * fast, "slow={slow} fast={fast}");
+        assert_eq!(fast, cm.base_compute_ms);
+    }
+
+    #[test]
+    fn upload_scales_inversely_with_bandwidth() {
+        let cm = CostModel::mobile_wan();
+        let mut rng = Rng::new(2);
+        let slow_link = cm.upload_ms(250.0, &mut rng);
+        let fast_link = cm.upload_ms(12_500.0, &mut rng);
+        // 1.6 MB at 250 B/ms ≈ 6400 ms of transfer alone.
+        assert!(slow_link > 6_000.0, "{slow_link}");
+        assert!(fast_link < slow_link / 4.0, "{fast_link} vs {slow_link}");
+    }
+
+    #[test]
+    fn ideal_uploads_cost_nothing() {
+        let cm = CostModel::ideal();
+        let mut rng = Rng::new(3);
+        let bw = cm.sample_bandwidth(&mut rng);
+        assert!(bw.is_infinite());
+        assert_eq!(cm.upload_ms(bw, &mut rng), 0.0);
+    }
+
+    #[test]
+    fn bandwidth_samples_stay_in_range() {
+        let cm = CostModel::mobile_wan();
+        let mut rng = Rng::new(4);
+        for _ in 0..1000 {
+            let bw = cm.sample_bandwidth(&mut rng);
+            assert!(
+                (cm.bandwidth_lo..=cm.bandwidth_hi).contains(&bw),
+                "{bw}"
+            );
+        }
+    }
+
+    #[test]
+    fn config_overrides_tune_named_models() {
+        let mut cfg = Config::default();
+        cfg.sim.base_compute_ms = 123.0;
+        cfg.sim.model_bytes = 42;
+        let cm = CostModel::mobile_wan().tuned(&cfg);
+        assert_eq!(cm.base_compute_ms, 123.0);
+        assert_eq!(cm.model_bytes, 42);
+        // Zero means "keep the model's default".
+        let cm2 = CostModel::mobile_wan().tuned(&Config::default());
+        assert_eq!(cm2.base_compute_ms, 5_000.0);
+    }
+}

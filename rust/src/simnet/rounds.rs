@@ -1,0 +1,846 @@
+//! The SimNet engines: synchronous deadline rounds and async FedBuff.
+//!
+//! Two round engines run on the same event queue, client population,
+//! cost model and availability traces:
+//!
+//! * **Sync** — each round over-selects `K · over_select` clients from
+//!   the available pool, allocates them to the `num_devices` virtual
+//!   devices with the *real* scheduler [`Strategy`] (GreedyAda / Random /
+//!   Slowest — unchanged), aggregates as soon as the first `K` reports
+//!   arrive or the deadline fires, and drops the stragglers back into
+//!   the pool.
+//! * **Async (FedBuff)** — keeps up to `async_concurrency` clients
+//!   training at all times and aggregates every `async_buffer` arrivals
+//!   with staleness-discounted weights `(1 + staleness)^-α`.
+//!
+//! Training is surrogate by default (seconds for 100k clients × 500
+//! rounds); setting `sim.real_training` plugs the real [`Server`] /
+//! Engine in for small cohorts.
+
+use std::sync::Arc;
+
+use crate::config::{Config, SimMode};
+use crate::coordinator::Server;
+use crate::data::partition::build_clients;
+use crate::data::synth;
+use crate::error::Result;
+use crate::registry;
+use crate::scheduler::{make_strategy, Strategy};
+use crate::tracking::{RoundMetrics, Tracker};
+use crate::util::clock::Stopwatch;
+use crate::util::rng::Rng;
+
+use super::client_state::{AvailabilityModel, ClientPhase, ClientState, Pool};
+use super::cost::CostModel;
+use super::events::{EventKind, EventQueue};
+use super::surrogate::SurrogateModel;
+
+/// Skew is a population statistic; estimating it from a bounded sample
+/// keeps million-client federations cheap to set up.
+const SKEW_SAMPLE_CLIENTS: usize = 10_000;
+
+/// Outcome of one SimNet run — the numbers the `simulate` CLI prints
+/// and [`crate::platform::SimSweep`] tabulates.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    /// "sync" | "async".
+    pub mode: String,
+    /// Scheduler strategy name (sync engine only).
+    pub allocation: String,
+    pub availability: String,
+    pub num_clients: usize,
+    /// Rounds actually aggregated.
+    pub rounds: usize,
+    /// Virtual time of the last aggregation.
+    pub makespan_ms: f64,
+    /// Events processed (throughput = events / wall_ms).
+    pub events: u64,
+    pub selected: u64,
+    pub reported: u64,
+    pub dropped: u64,
+    /// reported / selected.
+    pub participation: f64,
+    /// Mean staleness of aggregated updates (0 for sync).
+    pub avg_staleness: f64,
+    pub final_accuracy: f64,
+    pub final_train_loss: f64,
+    pub comm_bytes: usize,
+    /// Order-sensitive digest of the full event trace; equal seeds ⇒
+    /// equal digests.
+    pub trace_digest: u64,
+    /// Real elapsed wall time of the run.
+    pub wall_ms: f64,
+    /// True when every configured round actually aggregated; false for
+    /// truncated runs (e.g. a starved async engine broke out early).
+    pub converged: bool,
+}
+
+impl SimReport {
+    /// Events processed per second of wall time.
+    pub fn events_per_sec(&self) -> f64 {
+        self.events as f64 / (self.wall_ms / 1000.0).max(1e-9)
+    }
+
+    /// Rounds aggregated per second of wall time.
+    pub fn rounds_per_sec(&self) -> f64 {
+        self.rounds as f64 / (self.wall_ms / 1000.0).max(1e-9)
+    }
+
+    /// Throughput benchmark JSON (the `BENCH_simnet.json` CI artifact);
+    /// shared by the `simulate --bench-out` flag and `simnet_scale`.
+    pub fn bench_json(&self) -> String {
+        format!(
+            "{{\n  \"clients\": {},\n  \"rounds\": {},\n  \"events\": {},\n  \
+             \"wall_ms\": {:.1},\n  \"events_per_sec\": {:.0},\n  \
+             \"rounds_per_sec\": {:.1},\n  \"makespan_ms\": {:.1}\n}}\n",
+            self.num_clients,
+            self.rounds,
+            self.events,
+            self.wall_ms,
+            self.events_per_sec(),
+            self.rounds_per_sec(),
+            self.makespan_ms
+        )
+    }
+
+    /// Project onto the training [`crate::api::Report`] shape so SimNet
+    /// jobs ride the same `Platform` plumbing as real sessions.
+    pub fn to_report(&self) -> crate::api::Report {
+        crate::api::Report {
+            final_accuracy: self.final_accuracy,
+            best_accuracy: self.final_accuracy,
+            final_train_loss: self.final_train_loss,
+            avg_round_ms: if self.rounds > 0 {
+                self.makespan_ms / self.rounds as f64
+            } else {
+                0.0
+            },
+            comm_bytes: self.comm_bytes,
+            rounds: self.rounds,
+            converged: self.converged,
+        }
+    }
+}
+
+/// A discrete-event federation simulator over one [`Config`].
+pub struct SimNet {
+    cfg: Config,
+    availability: AvailabilityModel,
+    cost: CostModel,
+    surrogate: SurrogateModel,
+    strategy: Box<dyn Strategy>,
+    tracker: Arc<Tracker>,
+    queue: EventQueue,
+    clients: Vec<ClientState>,
+    pool: Pool,
+    rng: Rng,
+    /// Real-Engine backend for small cohorts (`sim.real_training`).
+    server: Option<Server>,
+    /// Global model version = aggregations performed.
+    version: usize,
+    /// Effective aggregated rounds (drives the surrogate curves).
+    progress: f64,
+    total_selected: u64,
+    total_reported: u64,
+    total_dropped: u64,
+    staleness_sum: f64,
+    staleness_n: u64,
+}
+
+impl SimNet {
+    /// Build a simulator with its own in-memory tracker.
+    pub fn from_config(cfg: &Config) -> Result<SimNet> {
+        let label = format!(
+            "simnet-{}-{}-{}-{}",
+            cfg.sim.mode.name(),
+            cfg.allocation.name(),
+            cfg.partition.name(),
+            cfg.seed
+        );
+        Self::with_tracker(cfg, Arc::new(Tracker::new(&label)))
+    }
+
+    /// Build a simulator recording into an existing tracker.
+    pub fn with_tracker(cfg: &Config, tracker: Arc<Tracker>) -> Result<SimNet> {
+        cfg.validate()?;
+        let num_clients = if cfg.num_clients > 0 {
+            cfg.num_clients
+        } else {
+            synth::natural_clients(cfg.dataset)
+        };
+        let availability =
+            registry::with_global(|r| r.availability(&cfg.sim.availability))?;
+        let cost =
+            registry::with_global(|r| r.cost_model(&cfg.sim.cost_model, cfg))?;
+        let mut rng = Rng::new(cfg.seed ^ 0x5349_4D4E_4554); // "SIMNET"
+
+        // Partition skew drives the surrogate curves; estimate it from a
+        // bounded client sample so huge populations stay cheap.
+        let (num_classes, _, _) = synth::shape_of(cfg.dataset);
+        let specs = build_clients(
+            cfg.dataset,
+            num_clients.min(SKEW_SAMPLE_CLIENTS),
+            cfg.partition,
+            cfg.unbalanced,
+            cfg.max_samples,
+            &mut rng.fork(0x5045),
+        )?;
+        let surrogate = SurrogateModel::from_clients(num_classes, &specs);
+
+        let mut clients = Vec::with_capacity(num_clients);
+        for _ in 0..num_clients {
+            let device = cost.sample_device(&mut rng);
+            let bandwidth = cost.sample_bandwidth(&mut rng);
+            clients.push(ClientState::new(device, bandwidth));
+        }
+
+        let server = if cfg.sim.real_training {
+            let mut builder = crate::api::SessionBuilder::new(cfg.clone());
+            Some(builder.build()?.build_server()?)
+        } else {
+            None
+        };
+
+        tracker.set_config("sim_mode", cfg.sim.mode.name().to_string());
+        tracker.set_config("availability", availability.name());
+        tracker.set_config("cost_model", cost.name.clone());
+        tracker.set_config("allocation", cfg.allocation.name().to_string());
+        tracker.set_config("num_clients", num_clients.to_string());
+
+        Ok(SimNet {
+            strategy: make_strategy(
+                cfg.allocation,
+                cfg.default_client_time_ms,
+                cfg.profile_momentum,
+            ),
+            availability,
+            cost,
+            surrogate,
+            tracker,
+            queue: EventQueue::new(),
+            pool: Pool::new(num_clients),
+            clients,
+            rng,
+            server,
+            version: 0,
+            progress: 0.0,
+            total_selected: 0,
+            total_reported: 0,
+            total_dropped: 0,
+            staleness_sum: 0.0,
+            staleness_n: 0,
+            cfg: cfg.clone(),
+        })
+    }
+
+    pub fn tracker(&self) -> Arc<Tracker> {
+        self.tracker.clone()
+    }
+
+    pub fn num_clients(&self) -> usize {
+        self.clients.len()
+    }
+
+    /// Lifecycle phase of one client (tests / diagnostics).
+    pub fn client_phase(&self, client: usize) -> ClientPhase {
+        self.clients[client].phase
+    }
+
+    /// Size of the available pool right now.
+    pub fn pool_len(&self) -> usize {
+        self.pool.len()
+    }
+
+    /// Run the configured engine to completion.
+    pub fn run(&mut self) -> Result<SimReport> {
+        match self.cfg.sim.mode {
+            SimMode::Sync => self.run_sync(),
+            SimMode::Async => self.run_async(),
+        }
+    }
+
+    // ------------------------------------------------------ population
+
+    /// Seed every client's availability trace and initial pool state.
+    fn init_population(&mut self) {
+        for c in 0..self.clients.len() {
+            let phase = self.availability.sample_phase_ms(&mut self.rng);
+            let online = self.availability.initial_online(phase, &mut self.rng);
+            self.clients[c].avail_phase_ms = phase;
+            self.clients[c].online = online;
+            self.clients[c].release();
+            if online {
+                self.pool.insert(c);
+            }
+            let next =
+                self.availability.next_toggle_ms(online, phase, 0.0, &mut self.rng);
+            if next.is_finite() {
+                let kind = if online {
+                    EventKind::Offline { client: c }
+                } else {
+                    EventKind::Online { client: c }
+                };
+                self.queue.push(next, kind);
+            }
+        }
+    }
+
+    /// Apply an availability flip and schedule the next one.
+    fn handle_toggle(&mut self, client: usize, online: bool, now_ms: f64) {
+        self.clients[client].online = online;
+        if !self.clients[client].is_busy() {
+            // Idle clients move between pool and offline immediately;
+            // busy clients finish their round first (release() decides).
+            if self.clients[client].release() {
+                self.pool.insert(client);
+            } else {
+                self.pool.remove(client);
+            }
+        }
+        let phase = self.clients[client].avail_phase_ms;
+        let next =
+            self.availability.next_toggle_ms(online, phase, now_ms, &mut self.rng);
+        if next.is_finite() {
+            let kind = if online {
+                EventKind::Offline { client }
+            } else {
+                EventKind::Online { client }
+            };
+            self.queue.push(next, kind);
+        }
+    }
+
+    /// True when an in-flight event still refers to the client's current
+    /// selection (stale reports/dropouts are ignored).
+    fn live_event(&self, client: usize, epoch: u64) -> bool {
+        let c = &self.clients[client];
+        c.epoch == epoch && c.is_busy()
+    }
+
+    /// Pull up to `k` clients out of the pool into Training.
+    fn select_cohort(&mut self, k: usize) -> Vec<usize> {
+        let cohort = self.pool.sample(k, &mut self.rng);
+        for &c in &cohort {
+            self.clients[c].select(self.version);
+            self.clients[c].begin_training();
+        }
+        self.total_selected += cohort.len() as u64;
+        cohort
+    }
+
+    /// Schedule one client's report (or mid-round dropout) starting at
+    /// `start_ms`; returns the duration it occupies its device slot.
+    fn schedule_client(&mut self, client: usize, start_ms: f64) -> f64 {
+        let device = self.clients[client].device_class;
+        let bandwidth = self.clients[client].bandwidth_bytes_per_ms;
+        let compute = self.cost.compute_ms(device, &mut self.rng);
+        let upload = self.cost.upload_ms(bandwidth, &mut self.rng);
+        let total = compute + upload;
+        self.clients[client].service_ms = total;
+        let epoch = self.clients[client].epoch;
+        let dropout = self.cfg.sim.dropout;
+        if dropout > 0.0 && self.rng.uniform() < dropout {
+            // Abandon at a uniform point of the round; the device slot
+            // frees early.
+            let duration = total * self.rng.uniform();
+            self.queue
+                .push(start_ms + duration, EventKind::Dropout { client, epoch });
+            duration
+        } else {
+            self.queue
+                .push(start_ms + total, EventKind::Report { client, epoch });
+            total
+        }
+    }
+
+    /// Mark a finished (reported/dropped) client and return it to the
+    /// pool when its availability trace says it is still online.
+    fn release(&mut self, client: usize) {
+        if self.clients[client].release() {
+            self.pool.insert(client);
+        }
+    }
+
+    /// Loss/accuracy for the round just aggregated: surrogate curves by
+    /// default, one real Engine round when `sim.real_training` is set.
+    fn backend_metrics(&mut self, round: usize) -> Result<(f64, f64)> {
+        let real = match self.server.as_mut() {
+            Some(server) => Some(server.run_round(round)?),
+            None => None,
+        };
+        Ok(match real {
+            Some(m) => {
+                let acc = m.test_accuracy.unwrap_or(m.train_accuracy);
+                (m.train_loss, acc)
+            }
+            None => (
+                self.surrogate.loss(self.progress),
+                self.surrogate.accuracy(self.progress),
+            ),
+        })
+    }
+
+    // ------------------------------------------------------ sync engine
+
+    fn run_sync(&mut self) -> Result<SimReport> {
+        let sw = Stopwatch::start();
+        let rounds = self.cfg.rounds;
+        let k_target = self.cfg.clients_per_round;
+        let k_select =
+            ((k_target as f64) * self.cfg.sim.over_select).ceil() as usize;
+        let deadline_ms = self.cfg.sim.deadline_ms;
+        self.init_population();
+
+        let mut round = 0usize;
+        let mut t0 = 0.0f64;
+        let mut cohort: Vec<usize> = Vec::new();
+        let mut target = 0usize;
+        let mut reported = 0usize;
+        let mut round_dropped = 0usize;
+        let mut measured: Vec<(usize, f64)> = Vec::new();
+        let mut awaiting = false;
+        let mut rounds_done = 0usize;
+        let mut makespan = 0.0f64;
+
+        self.queue.push(0.0, EventKind::RoundStart { round: 0 });
+        while rounds_done < rounds {
+            let Some(ev) = self.queue.pop() else {
+                self.tracker
+                    .warn("simnet: event queue drained before all rounds ran");
+                break;
+            };
+            let t = ev.time_ms;
+            let mut finish_now = false;
+            match ev.kind {
+                EventKind::Online { client } => self.handle_toggle(client, true, t),
+                EventKind::Offline { client } => {
+                    self.handle_toggle(client, false, t)
+                }
+                EventKind::RoundStart { round: r } => {
+                    round = r;
+                    t0 = t;
+                    reported = 0;
+                    round_dropped = 0;
+                    measured.clear();
+                    cohort = self.select_cohort(k_select);
+                    target = k_target.min(cohort.len());
+                    awaiting = true;
+                    // Over-selected cohort queues per device; clients on
+                    // one device run back-to-back (the makespan model
+                    // the scheduler optimizes).
+                    let groups = self.strategy.allocate(
+                        &cohort,
+                        self.cfg.num_devices.max(1),
+                        &mut self.rng,
+                    );
+                    for group in &groups {
+                        let mut cursor = t0;
+                        for &c in group {
+                            cursor += self.schedule_client(c, cursor);
+                        }
+                    }
+                    // An empty cohort (everyone offline) still burns its
+                    // deadline — the Deadline event closes the round,
+                    // and availability toggles can refill the pool
+                    // before the next one starts.
+                    self.queue
+                        .push(t0 + deadline_ms, EventKind::Deadline { round: r });
+                }
+                EventKind::Report { client, epoch } => {
+                    if awaiting && self.live_event(client, epoch) {
+                        self.clients[client].begin_upload();
+                        self.clients[client].report();
+                        // Profile the client's own service time (compute
+                        // + upload), not its queue-inclusive completion
+                        // time — same as the real Server's observe().
+                        measured.push((client, self.clients[client].service_ms));
+                        self.release(client);
+                        self.total_reported += 1;
+                        reported += 1;
+                        finish_now = reported >= target
+                            || reported + round_dropped >= cohort.len();
+                    }
+                }
+                EventKind::Dropout { client, epoch } => {
+                    if self.live_event(client, epoch) {
+                        self.clients[client].drop_out();
+                        self.release(client);
+                        self.total_dropped += 1;
+                        round_dropped += 1;
+                        finish_now = awaiting
+                            && reported + round_dropped >= cohort.len();
+                    }
+                }
+                EventKind::Deadline { round: r } => {
+                    finish_now = awaiting && r == round;
+                }
+            }
+            if awaiting && finish_now {
+                let now = self.queue.now_ms();
+                // Anything still running missed the aggregation: drop it
+                // back into the pool.
+                for i in 0..cohort.len() {
+                    let c = cohort[i];
+                    if self.clients[c].is_busy() {
+                        self.clients[c].drop_out();
+                        self.release(c);
+                        self.total_dropped += 1;
+                        round_dropped += 1;
+                    }
+                }
+                self.strategy.observe(&measured);
+                self.progress += if k_target > 0 {
+                    (reported as f64 / k_target as f64).min(1.0)
+                } else {
+                    0.0
+                };
+                let (train_loss, acc) = self.backend_metrics(round)?;
+                self.record_round(
+                    round,
+                    now - t0,
+                    cohort.len(),
+                    reported,
+                    round_dropped,
+                    0.0,
+                    train_loss,
+                    acc,
+                );
+                self.version += 1;
+                awaiting = false;
+                rounds_done += 1;
+                makespan = now;
+                if rounds_done < rounds {
+                    self.queue
+                        .push(now, EventKind::RoundStart { round: round + 1 });
+                }
+            }
+        }
+        self.teardown();
+        Ok(self.build_report("sync", makespan, sw.elapsed_ms()))
+    }
+
+    // ----------------------------------------------------- async engine
+
+    fn run_async(&mut self) -> Result<SimReport> {
+        let sw = Stopwatch::start();
+        let rounds = self.cfg.rounds;
+        let k_target = self.cfg.clients_per_round.max(1);
+        let buffer_target = if self.cfg.sim.async_buffer > 0 {
+            self.cfg.sim.async_buffer
+        } else {
+            k_target
+        };
+        let concurrency = if self.cfg.sim.async_concurrency > 0 {
+            self.cfg.sim.async_concurrency
+        } else {
+            2 * k_target
+        };
+        let alpha = self.cfg.sim.staleness_alpha;
+        self.init_population();
+
+        let mut active = 0usize;
+        let mut buffer: Vec<f64> = Vec::new();
+        let mut agg_staleness = 0.0f64;
+        let mut agg_dropped = 0usize;
+        let mut t_last = 0.0f64;
+        let mut makespan = 0.0f64;
+
+        self.refill_async(&mut active, concurrency, 0.0);
+        while self.version < rounds {
+            let Some(ev) = self.queue.pop() else {
+                self.tracker.warn(
+                    "simnet: async engine starved (no clients available and \
+                     no pending events)",
+                );
+                break;
+            };
+            let t = ev.time_ms;
+            match ev.kind {
+                EventKind::Online { client } => self.handle_toggle(client, true, t),
+                EventKind::Offline { client } => {
+                    self.handle_toggle(client, false, t)
+                }
+                EventKind::Report { client, epoch } => {
+                    if !self.live_event(client, epoch) {
+                        continue;
+                    }
+                    let staleness =
+                        (self.version - self.clients[client].start_version) as f64;
+                    self.clients[client].begin_upload();
+                    self.clients[client].report();
+                    self.release(client);
+                    active -= 1;
+                    self.total_reported += 1;
+                    buffer.push((1.0 + staleness).powf(-alpha));
+                    agg_staleness += staleness;
+                    self.staleness_sum += staleness;
+                    self.staleness_n += 1;
+                    if buffer.len() >= buffer_target {
+                        // FedBuff aggregation: staleness-discounted
+                        // weights, normalized against the sync target K
+                        // so sync/async progress is comparable.
+                        let round = self.version;
+                        self.version += 1;
+                        let sum_w: f64 = buffer.iter().sum();
+                        self.progress += sum_w / k_target as f64;
+                        let (train_loss, acc) = self.backend_metrics(round)?;
+                        let avg_staleness = agg_staleness / buffer.len() as f64;
+                        // Async "selected" = selections *resolved* in
+                        // this window (reports + drops), so the
+                        // reported ≤ selected invariant holds per round.
+                        self.record_round(
+                            round,
+                            t - t_last,
+                            buffer.len() + agg_dropped,
+                            buffer.len(),
+                            agg_dropped,
+                            avg_staleness,
+                            train_loss,
+                            acc,
+                        );
+                        buffer.clear();
+                        agg_staleness = 0.0;
+                        agg_dropped = 0;
+                        t_last = t;
+                        makespan = t;
+                    }
+                }
+                EventKind::Dropout { client, epoch } => {
+                    if !self.live_event(client, epoch) {
+                        continue;
+                    }
+                    self.clients[client].drop_out();
+                    self.release(client);
+                    active -= 1;
+                    agg_dropped += 1;
+                    self.total_dropped += 1;
+                }
+                EventKind::RoundStart { .. } | EventKind::Deadline { .. } => {}
+            }
+            if self.version < rounds {
+                let now = self.queue.now_ms();
+                self.refill_async(&mut active, concurrency, now);
+            }
+        }
+        self.teardown();
+        Ok(self.build_report("async", makespan, sw.elapsed_ms()))
+    }
+
+    /// Keep `concurrency` clients training (FedBuff's server-side pull).
+    fn refill_async(&mut self, active: &mut usize, concurrency: usize, now_ms: f64) {
+        while *active < concurrency && !self.pool.is_empty() {
+            let picked = self.pool.sample(1, &mut self.rng);
+            let c = picked[0];
+            self.clients[c].select(self.version);
+            self.clients[c].begin_training();
+            self.total_selected += 1;
+            self.schedule_client(c, now_ms);
+            *active += 1;
+        }
+    }
+
+    // -------------------------------------------------------- wrap-up
+
+    #[allow(clippy::too_many_arguments)]
+    fn record_round(
+        &mut self,
+        round: usize,
+        round_ms: f64,
+        selected: usize,
+        reported: usize,
+        dropped: usize,
+        avg_staleness: f64,
+        train_loss: f64,
+        accuracy: f64,
+    ) {
+        let eval = self.cfg.eval_every > 0
+            && (round + 1) % self.cfg.eval_every == 0;
+        self.tracker.record_round(RoundMetrics {
+            round,
+            train_loss,
+            train_accuracy: accuracy,
+            test_loss: if eval { Some(train_loss) } else { None },
+            test_accuracy: if eval { Some(accuracy) } else { None },
+            round_ms,
+            distribution_ms: 0.0,
+            comm_bytes: (selected + reported) * self.cost.model_bytes,
+            clients: Vec::new(),
+            selected,
+            reported,
+            dropped,
+            avg_staleness,
+        });
+    }
+
+    /// Release every client back to Available/Offline so no one is left
+    /// mid-round when the simulation ends.
+    fn teardown(&mut self) {
+        for c in 0..self.clients.len() {
+            if self.clients[c].release() {
+                self.pool.insert(c);
+            } else {
+                self.pool.remove(c);
+            }
+        }
+    }
+
+    fn build_report(&self, mode: &str, makespan_ms: f64, wall_ms: f64) -> SimReport {
+        let final_accuracy = self
+            .tracker
+            .final_accuracy()
+            .unwrap_or_else(|| self.surrogate.accuracy(self.progress));
+        // Read the loss off the tracker so real-training runs report the
+        // Engine's actual loss, not the surrogate curve.
+        let final_train_loss = self
+            .tracker
+            .loss_curve()
+            .last()
+            .map(|(_, loss, _)| *loss)
+            .unwrap_or_else(|| self.surrogate.loss(self.progress));
+        SimReport {
+            mode: mode.to_string(),
+            allocation: self.cfg.allocation.name().to_string(),
+            availability: self.availability.name(),
+            num_clients: self.clients.len(),
+            rounds: self.tracker.num_rounds(),
+            makespan_ms,
+            events: self.queue.processed(),
+            selected: self.total_selected,
+            reported: self.total_reported,
+            dropped: self.total_dropped,
+            participation: if self.total_selected > 0 {
+                self.total_reported as f64 / self.total_selected as f64
+            } else {
+                0.0
+            },
+            avg_staleness: if self.staleness_n > 0 {
+                self.staleness_sum / self.staleness_n as f64
+            } else {
+                0.0
+            },
+            final_accuracy,
+            final_train_loss,
+            comm_bytes: self.tracker.total_comm_bytes(),
+            trace_digest: self.queue.trace_digest(),
+            wall_ms,
+            converged: self.tracker.num_rounds() == self.cfg.rounds
+                && self.tracker.num_rounds() > 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Allocation, DatasetKind, Partition, SimMode};
+
+    fn sim_cfg(mode: SimMode) -> Config {
+        let mut cfg = Config::for_dataset(DatasetKind::Cifar10);
+        cfg.num_clients = 400;
+        cfg.clients_per_round = 20;
+        cfg.rounds = 12;
+        cfg.partition = Partition::Dirichlet(0.5);
+        cfg.num_devices = 4;
+        cfg.sim.mode = mode;
+        cfg.sim.dropout = 0.1;
+        // Generous deadline: most rounds close on their K-th report, a
+        // few on the deadline — both paths exercised.
+        cfg.sim.deadline_ms = 120_000.0;
+        cfg.seed = 7;
+        cfg
+    }
+
+    #[test]
+    fn sync_engine_runs_all_rounds_and_tracks_participation() {
+        let cfg = sim_cfg(SimMode::Sync);
+        let mut net = SimNet::from_config(&cfg).unwrap();
+        let report = net.run().unwrap();
+        assert_eq!(report.mode, "sync");
+        assert_eq!(report.rounds, 12);
+        assert!(report.makespan_ms > 0.0);
+        assert!(report.selected >= report.reported);
+        assert_eq!(report.selected, report.reported + report.dropped);
+        assert!(report.participation > 0.5, "{}", report.participation);
+        assert!(report.final_accuracy > 0.0);
+        assert!(report.converged, "all configured rounds aggregated");
+        assert_eq!(report.avg_staleness, 0.0, "sync rounds are never stale");
+        // Every round's reporters fit under the over-selected cohort.
+        let t = net.tracker();
+        let json = t.to_json();
+        for r in json.get("rounds").as_arr().unwrap() {
+            let selected = r.req_usize("selected").unwrap();
+            let reported = r.req_usize("reported").unwrap();
+            assert!(reported <= selected, "reported {reported} > selected {selected}");
+            assert!(reported <= cfg.clients_per_round);
+        }
+    }
+
+    #[test]
+    fn async_engine_aggregates_with_staleness() {
+        let mut cfg = sim_cfg(SimMode::Async);
+        cfg.sim.async_buffer = 10;
+        cfg.sim.async_concurrency = 60;
+        let mut net = SimNet::from_config(&cfg).unwrap();
+        let report = net.run().unwrap();
+        assert_eq!(report.mode, "async");
+        assert_eq!(report.rounds, 12);
+        assert!(report.makespan_ms > 0.0);
+        // 60 concurrent trainers vs buffer 10: most updates land after
+        // at least one intervening aggregation.
+        assert!(report.avg_staleness > 0.0);
+        assert!(report.final_accuracy > 0.0);
+    }
+
+    #[test]
+    fn all_clients_are_released_after_a_run() {
+        for mode in [SimMode::Sync, SimMode::Async] {
+            let cfg = sim_cfg(mode);
+            let mut net = SimNet::from_config(&cfg).unwrap();
+            net.run().unwrap();
+            for c in 0..net.num_clients() {
+                let phase = net.client_phase(c);
+                assert!(
+                    matches!(phase, ClientPhase::Available | ClientPhase::Offline),
+                    "client {c} stuck in {phase:?} after {mode:?} run"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn greedy_beats_slowest_allocation_on_makespan() {
+        // Full-cohort aggregation (no over-selection, no dropout, lax
+        // deadline) so round time is exactly the scheduling makespan the
+        // strategies compete on.
+        let run = |alloc| {
+            let mut cfg = sim_cfg(SimMode::Sync);
+            cfg.allocation = alloc;
+            // Small population so adaptive profiling sees repeat clients.
+            cfg.num_clients = 30;
+            cfg.sim.dropout = 0.0;
+            cfg.sim.over_select = 1.0;
+            cfg.sim.deadline_ms = 1e9;
+            cfg.rounds = 20;
+            let mut net = SimNet::from_config(&cfg).unwrap();
+            net.run().unwrap().makespan_ms
+        };
+        let greedy = run(Allocation::GreedyAda);
+        let slowest = run(Allocation::Slowest);
+        assert!(
+            greedy < slowest,
+            "greedyada {greedy} should beat slowest {slowest}"
+        );
+    }
+
+    #[test]
+    fn diurnal_availability_limits_the_pool() {
+        let mut cfg = sim_cfg(SimMode::Sync);
+        cfg.sim.availability = "diurnal(0.3,1000000)".into();
+        cfg.sim.dropout = 0.0;
+        let mut net = SimNet::from_config(&cfg).unwrap();
+        let report = net.run().unwrap();
+        // Roughly 30% of 400 clients online at a time; rounds still run.
+        assert_eq!(report.rounds, 12);
+        assert!(report.reported > 0);
+    }
+}

@@ -26,13 +26,18 @@ pub struct HeterogeneityPlan {
 }
 
 impl HeterogeneityPlan {
-    /// Assign device classes to all clients per the config.
+    /// Assign device classes to all clients per the config. When system
+    /// heterogeneity is off no sampling happens at all — a disabled plan
+    /// must not consume randomness, so toggling the flag can never shift
+    /// unrelated seeded draws elsewhere in the run.
     pub fn from_config(cfg: &Config, num_clients: usize) -> HeterogeneityPlan {
         let catalog = DeviceCatalog::ai_benchmark();
-        let mut rng = Rng::new(cfg.seed ^ 0x5157_4E55);
-        let device_of_client = (0..num_clients)
-            .map(|_| catalog.sample(&mut rng))
-            .collect();
+        let device_of_client = if cfg.system_heterogeneity {
+            let mut rng = Rng::new(cfg.seed ^ 0x5157_4E55);
+            (0..num_clients).map(|_| catalog.sample(&mut rng)).collect()
+        } else {
+            Vec::new()
+        };
         HeterogeneityPlan {
             device_of_client,
             catalog,
@@ -56,8 +61,11 @@ impl HeterogeneityPlan {
         (self.speed_ratio(client) - 1.0).max(0.0) * compute_ms
     }
 
-    /// Device class name for tracking.
+    /// Device class name for tracking ("uniform" when disabled).
     pub fn device_name(&self, client: usize) -> &'static str {
+        if !self.enabled || self.device_of_client.is_empty() {
+            return "uniform";
+        }
         self.catalog.name(self.device_of_client[client])
     }
 }
@@ -73,6 +81,28 @@ mod tests {
         let plan = HeterogeneityPlan::from_config(&cfg, 10);
         assert!((0..10).all(|c| plan.speed_ratio(c) == 1.0));
         assert_eq!(plan.wait_ms(3, 100.0), 0.0);
+        assert_eq!(plan.device_name(3), "uniform");
+    }
+
+    #[test]
+    fn disabled_plan_skips_sampling_and_is_seed_stable() {
+        // Regression: a disabled plan used to sample device classes
+        // anyway, advancing its RNG and coupling unrelated seeds. With
+        // heterogeneity off, the assignment must be empty and identical
+        // across *different* seeds.
+        let mk = |seed| {
+            let cfg = Config {
+                system_heterogeneity: false,
+                seed,
+                ..Config::default()
+            };
+            HeterogeneityPlan::from_config(&cfg, 100)
+        };
+        let a = mk(1);
+        let b = mk(999);
+        assert!(a.device_of_client.is_empty());
+        assert_eq!(a.device_of_client, b.device_of_client);
+        assert!((0..100).all(|c| a.speed_ratio(c) == b.speed_ratio(c)));
     }
 
     #[test]

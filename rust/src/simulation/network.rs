@@ -29,10 +29,28 @@ impl NetworkModel {
         NetworkModel { rtt_ms: 40.0, bytes_per_ms: 6_250.0, jitter_ms: 5.0 }
     }
 
+    /// Mobile uplink (LTE-ish): 60 ms RTT, 20 Mbit/s shared medium,
+    /// 10 ms jitter. SimNet's cost models override the bandwidth
+    /// per-client; this profile supplies latency and jitter.
+    pub fn mobile() -> NetworkModel {
+        NetworkModel { rtt_ms: 60.0, bytes_per_ms: 2_500.0, jitter_ms: 10.0 }
+    }
+
     /// One-way delivery delay for a message of `bytes`.
     pub fn delay_ms(&self, bytes: usize, rng: &mut Rng) -> f64 {
-        let transfer = if self.bytes_per_ms.is_finite() {
-            bytes as f64 / self.bytes_per_ms
+        self.delay_with_bandwidth_ms(bytes, self.bytes_per_ms, rng)
+    }
+
+    /// One-way delay with an explicit link bandwidth (bytes/ms) in place
+    /// of the model's own — SimNet samples bandwidth per client.
+    pub fn delay_with_bandwidth_ms(
+        &self,
+        bytes: usize,
+        bytes_per_ms: f64,
+        rng: &mut Rng,
+    ) -> f64 {
+        let transfer = if bytes_per_ms.is_finite() && bytes_per_ms > 0.0 {
+            bytes as f64 / bytes_per_ms
         } else {
             0.0
         };
@@ -63,5 +81,17 @@ mod tests {
         let big = nm.delay_ms(10_000_000, &mut rng);
         assert!(big > small + 1_000.0, "big={big} small={small}");
         assert!(small >= 20.0); // at least half the RTT
+    }
+
+    #[test]
+    fn explicit_bandwidth_overrides_the_link() {
+        let mut rng = Rng::new(3);
+        let nm = NetworkModel { rtt_ms: 10.0, bytes_per_ms: 1e9, jitter_ms: 0.0 };
+        // 1 MB at 100 bytes/ms = 10_000 ms of transfer + 5 ms latency.
+        let d = nm.delay_with_bandwidth_ms(1_000_000, 100.0, &mut rng);
+        assert!((d - 10_005.0).abs() < 1e-6, "{d}");
+        // Infinite bandwidth leaves only latency.
+        let d0 = nm.delay_with_bandwidth_ms(1_000_000, f64::INFINITY, &mut rng);
+        assert_eq!(d0, 5.0);
     }
 }

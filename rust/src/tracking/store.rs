@@ -40,6 +40,16 @@ pub struct RoundMetrics {
     pub distribution_ms: f64,
     pub comm_bytes: usize,
     pub clients: Vec<ClientMetrics>,
+    /// Selections accounted to this round: the sync cohort size (incl.
+    /// over-selection), or the selections resolved in an async window —
+    /// always ≥ `reported`.
+    pub selected: usize,
+    /// Clients whose updates were aggregated.
+    pub reported: usize,
+    /// Clients that dropped out or missed the deadline.
+    pub dropped: usize,
+    /// Mean staleness of aggregated updates (async engines; 0 for sync).
+    pub avg_staleness: f64,
 }
 
 /// Task-level metrics (paper: "metrics of the whole training").
@@ -208,6 +218,10 @@ impl Tracker {
                     ("distribution_ms", Json::Num(r.distribution_ms)),
                     ("comm_bytes", Json::Num(r.comm_bytes as f64)),
                     ("clients", Json::Arr(clients)),
+                    ("selected", Json::Num(r.selected as f64)),
+                    ("reported", Json::Num(r.reported as f64)),
+                    ("dropped", Json::Num(r.dropped as f64)),
+                    ("avg_staleness", Json::Num(r.avg_staleness)),
                 ])
             })
             .collect();
@@ -278,6 +292,11 @@ impl Tracker {
                 distribution_ms: r.req_f64("distribution_ms")?,
                 comm_bytes: r.req_usize("comm_bytes")?,
                 clients,
+                // Participation fields default for pre-SimNet task JSON.
+                selected: r.get("selected").as_usize().unwrap_or(0),
+                reported: r.get("reported").as_usize().unwrap_or(0),
+                dropped: r.get("dropped").as_usize().unwrap_or(0),
+                avg_staleness: r.get("avg_staleness").as_f64().unwrap_or(0.0),
             });
         }
         Ok(tracker)
@@ -311,6 +330,10 @@ mod tests {
             round_ms: 100.0 + n as f64,
             distribution_ms: 5.0,
             comm_bytes: 1000,
+            selected: 12,
+            reported: 10,
+            dropped: 2,
+            avg_staleness: 0.5,
             clients: vec![ClientMetrics {
                 client: 7,
                 num_samples: 50,

@@ -1,0 +1,197 @@
+//! SimNet determinism + lifecycle invariants.
+//!
+//! Same config + seed must reproduce the *entire* simulation: event
+//! trace (digest), participation counts, makespan and report. On top,
+//! property tests check the engine's structural invariants across random
+//! configurations: reporters never exceed the over-selected cohort, and
+//! every client — reported or dropped — is released back to the
+//! available pool (or offline) by the end of a run.
+
+use easyfl::config::{Allocation, Config, DatasetKind, Partition, SimMode};
+use easyfl::simnet::{ClientPhase, SimNet};
+use easyfl::util::prop;
+
+fn base_cfg() -> Config {
+    let mut cfg = Config::for_dataset(DatasetKind::Cifar10);
+    cfg.num_clients = 300;
+    cfg.clients_per_round = 20;
+    cfg.rounds = 10;
+    cfg.partition = Partition::Dirichlet(0.5);
+    cfg.num_devices = 4;
+    cfg.sim.dropout = 0.15;
+    cfg.sim.deadline_ms = 90_000.0;
+    cfg.sim.over_select = 1.4;
+    cfg
+}
+
+#[test]
+fn same_seed_reproduces_trace_counts_and_report() {
+    for mode in [SimMode::Sync, SimMode::Async] {
+        let mut cfg = base_cfg();
+        cfg.sim.mode = mode;
+        cfg.seed = 1234;
+        let a = SimNet::from_config(&cfg).unwrap().run().unwrap();
+        let b = SimNet::from_config(&cfg).unwrap().run().unwrap();
+        assert_eq!(a.trace_digest, b.trace_digest, "{mode:?} event trace");
+        assert_eq!(a.events, b.events, "{mode:?} event count");
+        assert_eq!(a.selected, b.selected, "{mode:?} selected");
+        assert_eq!(a.reported, b.reported, "{mode:?} reported");
+        assert_eq!(a.dropped, b.dropped, "{mode:?} dropped");
+        assert_eq!(a.rounds, b.rounds, "{mode:?} rounds");
+        assert_eq!(
+            a.makespan_ms.to_bits(),
+            b.makespan_ms.to_bits(),
+            "{mode:?} makespan must be bit-identical"
+        );
+        assert_eq!(
+            a.final_accuracy.to_bits(),
+            b.final_accuracy.to_bits(),
+            "{mode:?} accuracy must be bit-identical"
+        );
+    }
+}
+
+#[test]
+fn different_seeds_diverge() {
+    let mut cfg = base_cfg();
+    cfg.seed = 1;
+    let a = SimNet::from_config(&cfg).unwrap().run().unwrap();
+    cfg.seed = 2;
+    let b = SimNet::from_config(&cfg).unwrap().run().unwrap();
+    assert_ne!(a.trace_digest, b.trace_digest);
+}
+
+#[test]
+fn per_round_metrics_are_reproduced_too() {
+    let cfg = base_cfg();
+    let mut net_a = SimNet::from_config(&cfg).unwrap();
+    net_a.run().unwrap();
+    let mut net_b = SimNet::from_config(&cfg).unwrap();
+    net_b.run().unwrap();
+    let ja = net_a.tracker().to_json();
+    let jb = net_b.tracker().to_json();
+    assert_eq!(ja, jb, "tracker round hierarchy must match exactly");
+}
+
+#[test]
+fn prop_sync_reporters_bounded_and_everyone_released() {
+    prop::check("simnet-sync-invariants", 0x51AE, 8, |rng| {
+        let mut cfg = base_cfg();
+        cfg.seed = rng.next_u64();
+        cfg.num_clients = 100 + rng.below(300) as usize;
+        cfg.clients_per_round = 5 + rng.below(20) as usize;
+        cfg.rounds = 3 + rng.below(6) as usize;
+        cfg.num_devices = 1 + rng.below(6) as usize;
+        cfg.sim.dropout = rng.uniform() * 0.4;
+        cfg.sim.over_select = 1.0 + rng.uniform();
+        cfg.sim.deadline_ms = 20_000.0 + rng.uniform() * 100_000.0;
+        if rng.uniform() < 0.3 {
+            cfg.sim.availability = "flaky(600000,300000)".into();
+        }
+        let k_select =
+            ((cfg.clients_per_round as f64) * cfg.sim.over_select).ceil() as usize;
+
+        let mut net =
+            SimNet::from_config(&cfg).map_err(|e| e.to_string())?;
+        let report = net.run().map_err(|e| e.to_string())?;
+
+        // Conservation: every selection resolves to a report or a drop.
+        easyfl::prop_assert!(
+            report.selected == report.reported + report.dropped,
+            "selected {} != reported {} + dropped {}",
+            report.selected,
+            report.reported,
+            report.dropped
+        );
+
+        // Per-round: reporters ≤ K and cohort ≤ ⌈K·c⌉.
+        let json = net.tracker().to_json();
+        for r in json.get("rounds").as_arr().unwrap_or(&[]) {
+            let selected = r.get("selected").as_usize().unwrap_or(0);
+            let reported = r.get("reported").as_usize().unwrap_or(0);
+            easyfl::prop_assert!(
+                selected <= k_select,
+                "cohort {selected} exceeds over-selection cap {k_select}"
+            );
+            easyfl::prop_assert!(
+                reported <= selected,
+                "reported {reported} > cohort {selected}"
+            );
+            easyfl::prop_assert!(
+                reported <= cfg.clients_per_round,
+                "aggregated {reported} > K {}",
+                cfg.clients_per_round
+            );
+        }
+
+        // Every client — including every dropped one — was released back
+        // to the available pool or offline; nobody leaks mid-round.
+        for c in 0..net.num_clients() {
+            let phase = net.client_phase(c);
+            easyfl::prop_assert!(
+                matches!(phase, ClientPhase::Available | ClientPhase::Offline),
+                "client {c} leaked in phase {phase:?}"
+            );
+        }
+        easyfl::prop_assert!(
+            net.pool_len() <= net.num_clients(),
+            "pool overflows the population"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_async_conservation_and_release() {
+    prop::check("simnet-async-invariants", 0xA51C, 6, |rng| {
+        let mut cfg = base_cfg();
+        cfg.sim.mode = SimMode::Async;
+        cfg.seed = rng.next_u64();
+        cfg.sim.dropout = rng.uniform() * 0.3;
+        cfg.sim.async_buffer = 1 + rng.below(30) as usize;
+        cfg.sim.async_concurrency = 10 + rng.below(80) as usize;
+        let mut net =
+            SimNet::from_config(&cfg).map_err(|e| e.to_string())?;
+        let report = net.run().map_err(|e| e.to_string())?;
+        // In-flight trainers at shutdown are released without reporting,
+        // so selected ≥ reported + dropped (the remainder was in flight).
+        easyfl::prop_assert!(
+            report.selected >= report.reported + report.dropped,
+            "selected {} < reported {} + dropped {}",
+            report.selected,
+            report.reported,
+            report.dropped
+        );
+        easyfl::prop_assert!(
+            report.rounds == cfg.rounds,
+            "async aggregated {} of {} rounds",
+            report.rounds,
+            cfg.rounds
+        );
+        for c in 0..net.num_clients() {
+            let phase = net.client_phase(c);
+            easyfl::prop_assert!(
+                matches!(phase, ClientPhase::Available | ClientPhase::Offline),
+                "client {c} leaked in phase {phase:?}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn greedy_vs_random_sweep_is_deterministic_per_seed() {
+    // The acceptance-criteria grid, shrunk: each cell reproduces itself.
+    for alloc in [Allocation::GreedyAda, Allocation::Random] {
+        for mode in [SimMode::Sync, SimMode::Async] {
+            let mut cfg = base_cfg();
+            cfg.allocation = alloc;
+            cfg.sim.mode = mode;
+            cfg.rounds = 5;
+            let a = SimNet::from_config(&cfg).unwrap().run().unwrap();
+            let b = SimNet::from_config(&cfg).unwrap().run().unwrap();
+            assert_eq!(a.trace_digest, b.trace_digest, "{alloc:?}/{mode:?}");
+            assert_eq!(a.allocation, alloc.name());
+        }
+    }
+}
