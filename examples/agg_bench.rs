@@ -1,0 +1,251 @@
+//! agg_bench — streaming vs legacy batch aggregation.
+//!
+//! Streams `--clients` synthetic updates of `--params` coordinates
+//! through the incremental [`easyfl::aggregate::MeanAggregator`], then
+//! replays the identical update sequence down the legacy batch path
+//! (materialize every dense contribution, reduce once) and compares:
+//!
+//! * throughput (updates/s) per path,
+//! * bytes each path must hold resident at its peak
+//!   (streaming: one accumulator + one in-flight update, O(threads·P);
+//!   legacy: the whole cohort, O(K·P)),
+//! * process peak RSS sampled after each phase (Linux `VmHWM`;
+//!   streaming runs first so its high-water mark is unpolluted),
+//! * max |Δ| between the two results (must stay under 1e-6).
+//!
+//! CI runs the 10k-update configuration as a perf smoke and records the
+//! numbers to `BENCH_agg.json`:
+//!
+//! ```text
+//! cargo run --release --example agg_bench -- \
+//!     --clients 10000 --params 10000 --budget-ms 60000 \
+//!     --bench-out BENCH_agg.json
+//! ```
+//!
+//! The run fails unless the streaming path holds ≥5x less memory than
+//! the batch path (it is ~thousands-of-x at the 10k cohort).
+
+use std::sync::Arc;
+
+use easyfl::aggregate::{batch_weighted_mean, AggContext, Aggregator, MeanAggregator};
+use easyfl::algorithms::stc_compress;
+use easyfl::flow::Update;
+use easyfl::model::ParamVec;
+use easyfl::util::args::{usage, Args, Opt};
+use easyfl::util::clock::Stopwatch;
+use easyfl::util::rng::Rng;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn opts() -> Vec<Opt> {
+    vec![
+        Opt { name: "clients", help: "cohort size (updates to aggregate)", default: Some("10000"), is_flag: false },
+        Opt { name: "params", help: "parameter-vector length P", default: Some("10000"), is_flag: false },
+        Opt { name: "sparse", help: "fraction of STC sparse-ternary updates", default: Some("0.2"), is_flag: false },
+        Opt { name: "threads", help: "chunk-parallel reduce threads (0 = auto)", default: Some("0"), is_flag: false },
+        Opt { name: "seed", help: "RNG seed", default: Some("42"), is_flag: false },
+        Opt { name: "budget-ms", help: "fail if total wall time exceeds this (0 = off)", default: Some("0"), is_flag: false },
+        Opt { name: "bench-out", help: "write benchmark JSON here", default: None, is_flag: false },
+        Opt { name: "help", help: "show help", default: None, is_flag: true },
+    ]
+}
+
+/// Deterministic update stream: both paths replay the same sequence.
+fn gen_update(rng: &mut Rng, global: &ParamVec, sparse_frac: f64) -> (Update, f64) {
+    let p = global.len();
+    let weight = 1.0 + rng.below(100) as f64;
+    if rng.uniform() < sparse_frac {
+        let local =
+            ParamVec((0..p).map(|_| (rng.uniform() as f32) * 2.0 - 1.0).collect());
+        (stc_compress(&local, global, 0.01), weight)
+    } else {
+        let dense =
+            ParamVec((0..p).map(|_| (rng.uniform() as f32) * 2.0 - 1.0).collect());
+        (Update::Dense(dense), weight)
+    }
+}
+
+/// Process peak RSS in kB from /proc/self/status (Linux); 0 elsewhere.
+fn peak_rss_kb() -> u64 {
+    std::fs::read_to_string("/proc/self/status")
+        .ok()
+        .and_then(|s| {
+            s.lines()
+                .find(|l| l.starts_with("VmHWM:"))
+                .and_then(|l| l.split_whitespace().nth(1))
+                .and_then(|v| v.parse().ok())
+        })
+        .unwrap_or(0)
+}
+
+struct PhaseStats {
+    wall_ms: f64,
+    updates_per_sec: f64,
+    buffered_bytes: usize,
+    peak_rss_kb: u64,
+}
+
+impl PhaseStats {
+    fn json(&self) -> String {
+        format!(
+            "{{\"wall_ms\": {:.1}, \"updates_per_sec\": {:.0}, \
+             \"buffered_bytes\": {}, \"peak_rss_kb\": {}}}",
+            self.wall_ms, self.updates_per_sec, self.buffered_bytes, self.peak_rss_kb
+        )
+    }
+}
+
+fn run() -> easyfl::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let opts = opts();
+    let a = Args::parse(&argv, &opts)?;
+    if a.has_flag("help") {
+        println!(
+            "{}",
+            usage("agg_bench", "Streaming vs batch aggregation benchmark.", &opts)
+        );
+        return Ok(());
+    }
+    let k = a.get_usize("clients")?;
+    let p = a.get_usize("params")?;
+    let sparse_frac = a.get_f64("sparse")?;
+    let threads = a.get_usize("threads")?;
+    let seed = a.get_usize("seed")? as u64;
+
+    let global = Arc::new(ParamVec(
+        (0..p).map(|i| (i as f32 * 0.618).sin()).collect(),
+    ));
+    println!(
+        "aggregating {k} updates of P={p} ({:.0}% sparse ternary)...",
+        sparse_frac * 100.0
+    );
+    let baseline_rss_kb = peak_rss_kb();
+
+    // ---------------------------------------------- streaming (first:
+    // its RSS high-water mark must not inherit the batch allocation)
+    let mut ctx = AggContext::new(global.clone()).expect_updates(k);
+    ctx.threads = threads;
+    let mut agg = MeanAggregator::from_ctx(&ctx);
+    let mut rng = Rng::new(seed);
+    let sw = Stopwatch::start();
+    for _ in 0..k {
+        let (update, weight) = gen_update(&mut rng, &global, sparse_frac);
+        agg.add(&update, weight)?;
+    }
+    let streamed = agg.finish()?;
+    let stream_ms = sw.elapsed_ms();
+    // Resident at peak: the f64 accumulator + one in-flight dense update.
+    let stream_bytes = p * 8 + p * 4;
+    let streaming = PhaseStats {
+        wall_ms: stream_ms,
+        updates_per_sec: k as f64 / (stream_ms / 1000.0).max(1e-9),
+        buffered_bytes: stream_bytes,
+        peak_rss_kb: peak_rss_kb(),
+    };
+    println!(
+        "  streaming: {:>8.1} ms  {:>10.0} updates/s  {:>12} bytes buffered",
+        streaming.wall_ms, streaming.updates_per_sec, streaming.buffered_bytes
+    );
+
+    // ------------------------------------------------- legacy batch
+    let mut rng = Rng::new(seed);
+    let sw = Stopwatch::start();
+    let mut contributions: Vec<(ParamVec, f64)> = Vec::with_capacity(k);
+    for _ in 0..k {
+        let (update, weight) = gen_update(&mut rng, &global, sparse_frac);
+        // The legacy path materializes a dense vector per client before
+        // reducing — this allocation is exactly what the plane removed.
+        contributions.push((update.to_dense(&global)?, weight));
+    }
+    let refs: Vec<(&[f32], f64)> =
+        contributions.iter().map(|(u, w)| (&u.0[..], *w)).collect();
+    let batched = batch_weighted_mean(&refs)?;
+    let legacy_ms = sw.elapsed_ms();
+    let legacy_bytes = k * p * 4 + p * 8;
+    let legacy = PhaseStats {
+        wall_ms: legacy_ms,
+        updates_per_sec: k as f64 / (legacy_ms / 1000.0).max(1e-9),
+        buffered_bytes: legacy_bytes,
+        peak_rss_kb: peak_rss_kb(),
+    };
+    println!(
+        "  legacy:    {:>8.1} ms  {:>10.0} updates/s  {:>12} bytes buffered",
+        legacy.wall_ms, legacy.updates_per_sec, legacy.buffered_bytes
+    );
+
+    // ------------------------------------------------------- verdict
+    let max_diff = streamed
+        .iter()
+        .zip(batched.iter())
+        .map(|(s, b)| (s - b).abs())
+        .fold(0.0f32, f32::max);
+    let reduction = legacy_bytes as f64 / stream_bytes as f64;
+    // Measured counterpart of the analytic ratio, from the RSS
+    // high-water marks: what each phase actually added on top of what
+    // came before it. This is the gate that catches a regression which
+    // re-materializes per-client dense vectors inside the streaming
+    // path — the analytic ratio alone cannot (it is pure arithmetic of
+    // the CLI arguments). Floored at 256 kB to keep allocator noise
+    // from inflating the ratio; 0 when /proc is unavailable.
+    let stream_delta_kb = streaming.peak_rss_kb.saturating_sub(baseline_rss_kb);
+    let legacy_delta_kb = legacy.peak_rss_kb.saturating_sub(streaming.peak_rss_kb);
+    let measured_reduction = if legacy.peak_rss_kb > 0 {
+        legacy_delta_kb as f64 / (stream_delta_kb.max(256)) as f64
+    } else {
+        0.0
+    };
+    println!(
+        "  peak-memory reduction: {reduction:.0}x accounted, {measured_reduction:.0}x \
+         measured (RSS +{stream_delta_kb} kB streaming vs +{legacy_delta_kb} kB legacy) \
+         |  max |Δ| = {max_diff:.2e}"
+    );
+
+    if let Some(path) = a.get("bench-out") {
+        let json = format!(
+            "{{\n  \"param_count\": {p},\n  \"cohort\": {k},\n  \
+             \"sparse_frac\": {sparse_frac},\n  \
+             \"mem_reduction\": {reduction:.1},\n  \
+             \"mem_reduction_measured\": {measured_reduction:.1},\n  \
+             \"max_abs_diff\": {max_diff:.3e},\n  \
+             \"streaming\": {},\n  \"legacy\": {}\n}}\n",
+            streaming.json(),
+            legacy.json()
+        );
+        std::fs::write(path, json)?;
+        println!("benchmark written to {path}");
+    }
+
+    if max_diff > 1e-6 {
+        return Err(easyfl::Error::Runtime(format!(
+            "streaming and batch aggregation diverge: max |Δ| = {max_diff}"
+        )));
+    }
+    if reduction < 5.0 {
+        return Err(easyfl::Error::Runtime(format!(
+            "peak-memory reduction {reduction:.1}x is under the required 5x"
+        )));
+    }
+    // Only meaningful when the legacy buffer is big enough to stand out
+    // from allocator noise in the RSS counters.
+    let measurable = legacy_bytes >= 16 << 20;
+    if legacy.peak_rss_kb > 0 && measurable && measured_reduction < 5.0 {
+        return Err(easyfl::Error::Runtime(format!(
+            "measured peak-RSS reduction {measured_reduction:.1}x is under the \
+             required 5x (streaming phase grew RSS by {stream_delta_kb} kB, \
+             legacy by {legacy_delta_kb} kB)"
+        )));
+    }
+    let budget_ms = a.get_f64("budget-ms")?;
+    let total_ms = streaming.wall_ms + legacy.wall_ms;
+    if budget_ms > 0.0 && total_ms > budget_ms {
+        return Err(easyfl::Error::Runtime(format!(
+            "benchmark took {total_ms:.0} ms, over the {budget_ms:.0} ms budget"
+        )));
+    }
+    Ok(())
+}

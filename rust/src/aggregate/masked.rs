@@ -1,0 +1,193 @@
+//! Slice-masked aggregation (the `"backbone"` registry entry).
+//!
+//! FedReID federates the feature backbone while each client keeps a
+//! personal classifier head — on the flat-parameter contract, the
+//! trailing `protected_tail` coordinates. The old batch path averaged
+//! the full vector and discarded the head average anyway (clients
+//! restore their own heads on download); this accumulator never touches
+//! the tail at all: only the backbone slice is reduced, and the global
+//! model's own head is carried over unchanged, keeping it finite and
+//! stable without averaging incompatible identity spaces.
+
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+use crate::flow::Update;
+use crate::model::ParamVec;
+
+use super::mean::{axpy_into, check_weight, finish_into, fold_ternary};
+use super::{AggContext, Aggregator};
+
+/// Weighted mean over the leading `P − protected_tail` coordinates; the
+/// trailing slice is copied from the global model at `finish`.
+pub struct SliceMaskedAggregator {
+    /// Accumulator over the backbone slice only.
+    acc: Vec<f64>,
+    sparse_weight: f64,
+    total_weight: f64,
+    count: usize,
+    global: Arc<ParamVec>,
+    /// Backbone length = P − protected_tail.
+    split: usize,
+    threads: usize,
+}
+
+impl SliceMaskedAggregator {
+    pub fn from_ctx(ctx: &AggContext) -> SliceMaskedAggregator {
+        let p = ctx.global.len();
+        let split = p.saturating_sub(ctx.protected_tail);
+        let threads =
+            if ctx.use_parallel(split) { ctx.effective_threads() } else { 1 };
+        SliceMaskedAggregator {
+            acc: vec![0.0; split],
+            sparse_weight: 0.0,
+            total_weight: 0.0,
+            count: 0,
+            global: ctx.global.clone(),
+            split,
+            threads,
+        }
+    }
+
+    /// Coordinates excluded from aggregation (the personal-head length).
+    pub fn protected_tail(&self) -> usize {
+        self.global.len() - self.split
+    }
+}
+
+impl Aggregator for SliceMaskedAggregator {
+    fn name(&self) -> &'static str {
+        "backbone"
+    }
+
+    fn add(&mut self, update: &Update, weight: f64) -> Result<()> {
+        check_weight(weight)?;
+        let p = self.global.len();
+        match update {
+            Update::Dense(x) => {
+                if x.len() != p {
+                    return Err(Error::Runtime(format!(
+                        "aggregate: vector of len {} != P {p}",
+                        x.len()
+                    )));
+                }
+                axpy_into(&mut self.acc, &x[..self.split], weight, self.threads);
+            }
+            Update::SparseTernary { len, indices, signs, magnitude } => {
+                // Head coordinates are protected: deltas there are
+                // dropped, exactly as a backbone-only upload would be.
+                fold_ternary(
+                    &mut self.acc,
+                    p,
+                    *len,
+                    indices,
+                    signs,
+                    *magnitude,
+                    weight,
+                    self.split,
+                )?;
+                self.sparse_weight += weight;
+            }
+            Update::Masked { .. } => {
+                return Err(Error::Runtime(
+                    "aggregate: masked update reached the aggregator; a \
+                     server plugin with a decryption stage must unmask \
+                     uploads first"
+                        .into(),
+                ))
+            }
+        }
+        self.count += 1;
+        self.total_weight += weight;
+        Ok(())
+    }
+
+    fn count(&self) -> usize {
+        self.count
+    }
+
+    fn total_weight(&self) -> f64 {
+        self.total_weight
+    }
+
+    fn finish(&mut self) -> Result<ParamVec> {
+        if self.count == 0 {
+            return Err(Error::Runtime("aggregate: empty cohort".into()));
+        }
+        if self.total_weight <= 0.0 {
+            return Err(Error::Runtime("aggregate: zero total weight".into()));
+        }
+        let mut out = finish_into(
+            &self.acc,
+            &self.global[..self.split],
+            self.sparse_weight,
+            self.total_weight,
+            self.threads,
+        );
+        // Protected tail: the global model's own head, untouched.
+        out.extend_from_slice(&self.global[self.split..]);
+        self.acc.iter_mut().for_each(|v| *v = 0.0);
+        self.sparse_weight = 0.0;
+        self.total_weight = 0.0;
+        self.count = 0;
+        Ok(ParamVec(out))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx(global: Vec<f32>, tail: usize) -> AggContext {
+        AggContext::new(Arc::new(ParamVec(global))).protected_tail(tail)
+    }
+
+    #[test]
+    fn backbone_is_averaged_and_tail_is_kept_from_the_global() {
+        let mut agg =
+            SliceMaskedAggregator::from_ctx(&ctx(vec![9.0, 9.0, 7.0, 8.0], 2));
+        assert_eq!(agg.protected_tail(), 2);
+        agg.add(&Update::Dense(ParamVec(vec![1.0, 2.0, 0.0, 0.0])), 1.0)
+            .unwrap();
+        agg.add(&Update::Dense(ParamVec(vec![3.0, 6.0, 5.0, 5.0])), 3.0)
+            .unwrap();
+        let out = agg.finish().unwrap();
+        assert!((out[0] - 2.5).abs() < 1e-7);
+        assert!((out[1] - 5.0).abs() < 1e-7);
+        // Client head values are ignored; the global head survives.
+        assert_eq!(&out.0[2..], &[7.0, 8.0]);
+    }
+
+    #[test]
+    fn sparse_deltas_in_the_tail_are_dropped() {
+        let mut agg = SliceMaskedAggregator::from_ctx(&ctx(vec![1.0; 4], 1));
+        let u = Update::SparseTernary {
+            len: 4,
+            indices: vec![0, 3],
+            signs: vec![true, true],
+            magnitude: 2.0,
+        };
+        agg.add(&u, 1.0).unwrap();
+        let out = agg.finish().unwrap();
+        assert!((out[0] - 3.0).abs() < 1e-7, "backbone delta applies");
+        assert!((out[3] - 1.0).abs() < 1e-7, "head delta is protected");
+    }
+
+    #[test]
+    fn zero_tail_degenerates_to_the_plain_mean() {
+        let mut agg = SliceMaskedAggregator::from_ctx(&ctx(vec![0.0; 3], 0));
+        agg.add(&Update::Dense(ParamVec(vec![2.0, 4.0, 6.0])), 1.0).unwrap();
+        assert_eq!(agg.finish().unwrap().0, vec![2.0, 4.0, 6.0]);
+    }
+
+    #[test]
+    fn finish_resets_between_rounds() {
+        let mut agg = SliceMaskedAggregator::from_ctx(&ctx(vec![0.0; 3], 1));
+        agg.add(&Update::Dense(ParamVec(vec![2.0, 2.0, 2.0])), 1.0).unwrap();
+        agg.finish().unwrap();
+        assert_eq!(agg.count(), 0);
+        agg.add(&Update::Dense(ParamVec(vec![4.0, 4.0, 4.0])), 1.0).unwrap();
+        let out = agg.finish().unwrap();
+        assert_eq!(out.0, vec![4.0, 4.0, 0.0]);
+    }
+}

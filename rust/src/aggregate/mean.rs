@@ -1,0 +1,414 @@
+//! Streaming weighted-mean aggregation (the `"mean"` registry entry).
+
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+use crate::flow::Update;
+use crate::model::ParamVec;
+
+use super::{AggContext, Aggregator};
+
+/// Vectors shorter than this never engage the chunk-parallel path, even
+/// with an explicit thread count: the thread-spawn cost dwarfs the
+/// reduce.
+pub(crate) const MIN_PARALLEL_LEN: usize = 4096;
+
+/// Floor for *auto* threading (`AggContext::threads == 0`): scoped
+/// threads are spawned per dense add, so the axpy must be big enough to
+/// amortize ~tens of µs of spawn/join per thread. Explicitly configured
+/// `agg_threads` opts in down to [`MIN_PARALLEL_LEN`].
+pub(crate) const AUTO_PARALLEL_LEN: usize = 1 << 18;
+
+/// `acc[i] += w · x[i]`, split over `threads` disjoint P-ranges when
+/// `threads > 1`. Element-wise, so the result is bit-identical to the
+/// sequential reduce regardless of thread count.
+pub(crate) fn axpy_into(acc: &mut [f64], x: &[f32], w: f64, threads: usize) {
+    if threads <= 1 || acc.len() < MIN_PARALLEL_LEN {
+        for (a, v) in acc.iter_mut().zip(x.iter()) {
+            *a += w * (*v as f64);
+        }
+        return;
+    }
+    let chunk = acc.len().div_ceil(threads);
+    std::thread::scope(|s| {
+        for (a_chunk, x_chunk) in acc.chunks_mut(chunk).zip(x.chunks(chunk)) {
+            s.spawn(move || {
+                for (a, v) in a_chunk.iter_mut().zip(x_chunk.iter()) {
+                    *a += w * (*v as f64);
+                }
+            });
+        }
+    });
+}
+
+/// `out[i] = (acc[i] + base_w · g[i]) / total` as f32, chunk-parallel for
+/// large vectors. `g` may be empty when `base_w == 0` (pure-dense round).
+pub(crate) fn finish_into(
+    acc: &[f64],
+    g: &[f32],
+    base_w: f64,
+    total: f64,
+    threads: usize,
+) -> Vec<f32> {
+    let mut out = vec![0.0f32; acc.len()];
+    let body = |offset: usize, dst: &mut [f32]| {
+        for (i, o) in dst.iter_mut().enumerate() {
+            let base = if base_w != 0.0 { base_w * g[offset + i] as f64 } else { 0.0 };
+            *o = ((acc[offset + i] + base) / total) as f32;
+        }
+    };
+    if threads <= 1 || acc.len() < MIN_PARALLEL_LEN {
+        body(0, &mut out);
+        return out;
+    }
+    let chunk = acc.len().div_ceil(threads);
+    std::thread::scope(|s| {
+        for (ci, dst) in out.chunks_mut(chunk).enumerate() {
+            let body = &body;
+            s.spawn(move || body(ci * chunk, dst));
+        }
+    });
+    out
+}
+
+/// Incremental weighted mean over a stream of [`Update`]s.
+///
+/// Dense updates fold in via a fused axpy (`acc += w·x`); sparse ternary
+/// updates touch only their indices (`acc[idx] += w·±μ`, with the dense
+/// base `w·global` folded in once at `finish`). Accumulation is f64 for
+/// stability, so thread count never changes the result. Memory is one
+/// f64 accumulator — O(P), not O(cohort·P).
+pub struct MeanAggregator {
+    acc: Vec<f64>,
+    /// Σw over sparse adds: their `global +` base, folded in at finish.
+    sparse_weight: f64,
+    total_weight: f64,
+    count: usize,
+    /// Required for sparse updates; `None` for the dense-only legacy shim.
+    global: Option<Arc<ParamVec>>,
+    threads: usize,
+}
+
+impl MeanAggregator {
+    /// Build from a construction context (the registry path).
+    pub fn from_ctx(ctx: &AggContext) -> MeanAggregator {
+        let len = ctx.global.len();
+        let threads = if ctx.use_parallel(len) { ctx.effective_threads() } else { 1 };
+        MeanAggregator {
+            acc: vec![0.0; len],
+            sparse_weight: 0.0,
+            total_weight: 0.0,
+            count: 0,
+            global: Some(ctx.global.clone()),
+            threads,
+        }
+    }
+
+    /// Dense-only accumulator of a known length (no global model):
+    /// sparse updates are rejected. Used by the deprecated batch shim.
+    pub fn dense_only(len: usize) -> MeanAggregator {
+        MeanAggregator {
+            acc: vec![0.0; len],
+            sparse_weight: 0.0,
+            total_weight: 0.0,
+            count: 0,
+            global: None,
+            threads: 1,
+        }
+    }
+
+    /// Fold a dense vector in without wrapping it in an [`Update`].
+    pub fn add_dense(&mut self, x: &[f32], weight: f64) -> Result<()> {
+        check_weight(weight)?;
+        if x.len() != self.acc.len() {
+            return Err(Error::Runtime(format!(
+                "aggregate: vector of len {} != P {}",
+                x.len(),
+                self.acc.len()
+            )));
+        }
+        axpy_into(&mut self.acc, x, weight, self.threads);
+        self.count += 1;
+        self.total_weight += weight;
+        Ok(())
+    }
+
+    fn add_ternary(
+        &mut self,
+        len: usize,
+        indices: &[u32],
+        signs: &[bool],
+        magnitude: f32,
+        weight: f64,
+    ) -> Result<()> {
+        check_weight(weight)?;
+        if self.global.is_none() {
+            return Err(Error::Runtime(
+                "aggregate: sparse update needs the global model \
+                 (dense-only accumulator)"
+                    .into(),
+            ));
+        }
+        let p = self.acc.len();
+        fold_ternary(&mut self.acc, p, len, indices, signs, magnitude, weight, p)?;
+        self.count += 1;
+        self.total_weight += weight;
+        self.sparse_weight += weight;
+        Ok(())
+    }
+}
+
+/// Weight sanity shared by every built-in aggregator.
+pub(crate) fn check_weight(weight: f64) -> Result<()> {
+    if !weight.is_finite() || weight < 0.0 {
+        return Err(Error::Runtime(format!(
+            "aggregate: bad update weight {weight}"
+        )));
+    }
+    Ok(())
+}
+
+/// Validate one sparse ternary update against a P-length contract and
+/// fold `weight · ±magnitude` into `acc` at indices below
+/// `active_limit` (the full vector for the mean, the backbone split for
+/// slice-masked aggregation — deltas at/above the limit are dropped).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn fold_ternary(
+    acc: &mut [f64],
+    p: usize,
+    len: usize,
+    indices: &[u32],
+    signs: &[bool],
+    magnitude: f32,
+    weight: f64,
+    active_limit: usize,
+) -> Result<()> {
+    if len != p {
+        return Err(Error::Runtime(format!(
+            "aggregate: sparse update of len {len} != P {p}"
+        )));
+    }
+    if signs.len() != indices.len() {
+        return Err(Error::Runtime(format!(
+            "aggregate: {} signs for {} indices",
+            signs.len(),
+            indices.len()
+        )));
+    }
+    let mag = magnitude as f64;
+    for (i, &idx) in indices.iter().enumerate() {
+        let idx = idx as usize;
+        if idx >= p {
+            return Err(Error::Runtime(format!(
+                "aggregate: sparse index {idx} out of range (P = {p})"
+            )));
+        }
+        if idx < active_limit {
+            acc[idx] += weight * if signs[i] { mag } else { -mag };
+        }
+    }
+    Ok(())
+}
+
+impl Aggregator for MeanAggregator {
+    fn name(&self) -> &'static str {
+        "mean"
+    }
+
+    fn add(&mut self, update: &Update, weight: f64) -> Result<()> {
+        match update {
+            Update::Dense(p) => self.add_dense(p, weight),
+            Update::SparseTernary { len, indices, signs, magnitude } => {
+                self.add_ternary(*len, indices, signs, *magnitude, weight)
+            }
+            Update::Masked { .. } => Err(Error::Runtime(
+                "aggregate: masked update reached the aggregator; a server \
+                 plugin with a decryption stage must unmask uploads first"
+                    .into(),
+            )),
+        }
+    }
+
+    fn count(&self) -> usize {
+        self.count
+    }
+
+    fn total_weight(&self) -> f64 {
+        self.total_weight
+    }
+
+    fn finish(&mut self) -> Result<ParamVec> {
+        if self.count == 0 {
+            return Err(Error::Runtime("aggregate: empty cohort".into()));
+        }
+        if self.total_weight <= 0.0 {
+            return Err(Error::Runtime("aggregate: zero total weight".into()));
+        }
+        let g: &[f32] = match &self.global {
+            Some(g) => &g.0,
+            None => &[],
+        };
+        let out = finish_into(
+            &self.acc,
+            g,
+            self.sparse_weight,
+            self.total_weight,
+            self.threads,
+        );
+        // Reset for the next round.
+        self.acc.iter_mut().for_each(|v| *v = 0.0);
+        self.sparse_weight = 0.0;
+        self.total_weight = 0.0;
+        self.count = 0;
+        Ok(ParamVec(out))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx(global: Vec<f32>) -> AggContext {
+        AggContext::new(Arc::new(ParamVec(global)))
+    }
+
+    #[test]
+    fn dense_weighted_mean_matches_hand_computation() {
+        let mut agg = MeanAggregator::from_ctx(&ctx(vec![0.0; 2]));
+        agg.add(&Update::Dense(ParamVec(vec![1.0, 2.0])), 1.0).unwrap();
+        agg.add(&Update::Dense(ParamVec(vec![3.0, 6.0])), 3.0).unwrap();
+        assert_eq!(agg.count(), 2);
+        assert!((agg.total_weight() - 4.0).abs() < 1e-12);
+        let out = agg.finish().unwrap();
+        assert!((out[0] - 2.5).abs() < 1e-7);
+        assert!((out[1] - 5.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn sparse_adds_fold_the_global_base_in_once() {
+        // Two sparse updates over global [1, 1, 1]:
+        //   u1 = global + 0.5 at idx 0   (weight 1)
+        //   u2 = global − 0.5 at idx 2   (weight 1)
+        // mean = global + [0.25, 0, −0.25]
+        let mut agg = MeanAggregator::from_ctx(&ctx(vec![1.0; 3]));
+        let u1 = Update::SparseTernary {
+            len: 3,
+            indices: vec![0],
+            signs: vec![true],
+            magnitude: 0.5,
+        };
+        let u2 = Update::SparseTernary {
+            len: 3,
+            indices: vec![2],
+            signs: vec![false],
+            magnitude: 0.5,
+        };
+        agg.add(&u1, 1.0).unwrap();
+        agg.add(&u2, 1.0).unwrap();
+        let out = agg.finish().unwrap();
+        assert!((out[0] - 1.25).abs() < 1e-7);
+        assert!((out[1] - 1.0).abs() < 1e-7);
+        assert!((out[2] - 0.75).abs() < 1e-7);
+    }
+
+    #[test]
+    fn masked_updates_are_rejected() {
+        let mut agg = MeanAggregator::from_ctx(&ctx(vec![0.0; 2]));
+        let u = Update::Masked {
+            xor_key: 9,
+            inner: Box::new(Update::Dense(ParamVec(vec![1.0, 1.0]))),
+        };
+        let err = agg.add(&u, 1.0).unwrap_err().to_string();
+        assert!(err.contains("decryption"), "{err}");
+    }
+
+    #[test]
+    fn bad_inputs_error_instead_of_panicking() {
+        let mut agg = MeanAggregator::from_ctx(&ctx(vec![0.0; 4]));
+        // Length mismatch.
+        assert!(agg.add(&Update::Dense(ParamVec(vec![0.0; 3])), 1.0).is_err());
+        // Out-of-range sparse index (hostile remote upload).
+        let u = Update::SparseTernary {
+            len: 4,
+            indices: vec![9],
+            signs: vec![true],
+            magnitude: 1.0,
+        };
+        assert!(agg.add(&u, 1.0).is_err());
+        // Sign/index arity mismatch.
+        let u = Update::SparseTernary {
+            len: 4,
+            indices: vec![1, 2],
+            signs: vec![true],
+            magnitude: 1.0,
+        };
+        assert!(agg.add(&u, 1.0).is_err());
+        // Bad weights.
+        assert!(agg.add(&Update::Dense(ParamVec(vec![0.0; 4])), -1.0).is_err());
+        assert!(agg
+            .add(&Update::Dense(ParamVec(vec![0.0; 4])), f64::NAN)
+            .is_err());
+        // Empty finish.
+        assert!(agg.finish().is_err());
+    }
+
+    #[test]
+    fn zero_total_weight_errors() {
+        let mut agg = MeanAggregator::from_ctx(&ctx(vec![0.0; 2]));
+        agg.add(&Update::Dense(ParamVec(vec![1.0, 1.0])), 0.0).unwrap();
+        assert!(agg.finish().unwrap_err().to_string().contains("zero total"));
+    }
+
+    #[test]
+    fn finish_resets_for_the_next_round() {
+        let mut agg = MeanAggregator::from_ctx(&ctx(vec![0.0; 2]));
+        agg.add(&Update::Dense(ParamVec(vec![4.0, 4.0])), 2.0).unwrap();
+        assert_eq!(agg.finish().unwrap().0, vec![4.0, 4.0]);
+        assert_eq!(agg.count(), 0);
+        assert_eq!(agg.total_weight(), 0.0);
+        agg.add(&Update::Dense(ParamVec(vec![2.0, 2.0])), 1.0).unwrap();
+        assert_eq!(agg.finish().unwrap().0, vec![2.0, 2.0]);
+    }
+
+    #[test]
+    fn dense_only_accumulator_rejects_sparse() {
+        let mut agg = MeanAggregator::dense_only(3);
+        let u = Update::SparseTernary {
+            len: 3,
+            indices: vec![0],
+            signs: vec![true],
+            magnitude: 1.0,
+        };
+        assert!(agg.add(&u, 1.0).is_err());
+        agg.add_dense(&[3.0, 0.0, 3.0], 2.0).unwrap();
+        assert_eq!(agg.finish().unwrap().0, vec![3.0, 0.0, 3.0]);
+    }
+
+    #[test]
+    fn chunk_parallel_reduce_is_bit_identical_to_sequential() {
+        let p = MIN_PARALLEL_LEN + 37;
+        let global: Vec<f32> = (0..p).map(|i| (i as f32 * 0.37).sin()).collect();
+        let updates: Vec<(Update, f64)> = (0..9)
+            .map(|k| {
+                let dense: Vec<f32> =
+                    (0..p).map(|i| ((i + k) as f32 * 0.11).cos()).collect();
+                (Update::Dense(ParamVec(dense)), (k + 1) as f64)
+            })
+            .collect();
+
+        let run = |threads: usize| {
+            let mut ctx = ctx(global.clone());
+            ctx.threads = threads;
+            ctx.parallel_threshold = 0;
+            ctx.expect_updates = updates.len();
+            let mut agg = MeanAggregator::from_ctx(&ctx);
+            for (u, w) in &updates {
+                agg.add(u, *w).unwrap();
+            }
+            agg.finish().unwrap()
+        };
+        let seq = run(1);
+        let par = run(4);
+        assert_eq!(seq.0, par.0, "thread count must not change the result");
+    }
+}

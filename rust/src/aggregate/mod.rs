@@ -1,0 +1,382 @@
+//! The streaming aggregation plane.
+//!
+//! The original design materialized a dense `ParamVec` per client before
+//! reducing — O(cohort × P) memory and three duplicated copies of the
+//! decompress→aggregate loop (server round, remote ingest, SimNet). This
+//! module replaces the batch path with one incremental [`Aggregator`]
+//! shared by every consumer:
+//!
+//! * [`MeanAggregator`] — weighted mean over a stream of updates. Dense
+//!   updates fold in via a fused axpy, sparse ternary updates index-wise
+//!   in place; no per-client dense materialization, no clone of the
+//!   global. Cohorts at/above a configurable threshold reduce
+//!   chunk-parallel (`std::thread` over P-ranges).
+//! * [`SliceMaskedAggregator`] — FedReID-style backbone merge: only the
+//!   leading `P − protected_tail` coordinates are averaged; the trailing
+//!   personal-head slice is carried over from the global model.
+//! * [`FedBuffBuffer`] — FedBuff's staleness discount expressed as
+//!   aggregator weights, shared by SimNet's async engine and any
+//!   buffered-asynchronous server flow.
+//!
+//! Aggregators are registry-backed: algorithms pick theirs by name
+//! (`"mean"`, `"backbone"`, or any custom registration) through
+//! [`crate::flow::ServerFlow::make_aggregator`]. Peak memory is
+//! O(threads · P) instead of O(cohort · P).
+
+pub mod masked;
+pub mod mean;
+
+pub use masked::SliceMaskedAggregator;
+pub use mean::MeanAggregator;
+
+use std::sync::Arc;
+
+use crate::config::Config;
+use crate::error::{Error, Result};
+use crate::flow::Update;
+use crate::model::ParamVec;
+
+/// Streaming reduction over client updates: `add` folds one update in,
+/// `finish` yields the reduced model and resets the accumulator so the
+/// instance can serve the next round.
+pub trait Aggregator: Send {
+    fn name(&self) -> &'static str;
+
+    /// Fold one update in with its raw (unnormalized) weight — typically
+    /// the client's sample count, or a staleness-discounted weight.
+    fn add(&mut self, update: &Update, weight: f64) -> Result<()>;
+
+    /// Updates folded in since construction / the last `finish`.
+    fn count(&self) -> usize;
+
+    /// Sum of raw weights folded in so far (normalization denominator).
+    fn total_weight(&self) -> f64;
+
+    /// Complete the reduction: the weighted mean of everything added.
+    /// Resets the accumulator for reuse. Errors on an empty cohort or a
+    /// non-positive total weight.
+    fn finish(&mut self) -> Result<ParamVec>;
+}
+
+/// Construction context handed to registered aggregator builders.
+#[derive(Clone)]
+pub struct AggContext {
+    /// The distributed global model this round's updates are relative to
+    /// (sparse deltas decode against it; slice-masked tails copy from it).
+    pub global: Arc<ParamVec>,
+    /// How many updates are expected to stream in (chunk-parallel gate;
+    /// 0 = unknown).
+    pub expect_updates: usize,
+    /// Cohort size at/above which dense adds reduce chunk-parallel
+    /// (0 = always parallel when the vector is large enough).
+    pub parallel_threshold: usize,
+    /// Worker threads for the chunk-parallel reduce (0 = all cores,
+    /// capped at 8).
+    pub threads: usize,
+    /// Trailing coordinates excluded from aggregation (FedReID's
+    /// personal head). 0 for full-vector aggregators.
+    pub protected_tail: usize,
+}
+
+impl AggContext {
+    pub fn new(global: Arc<ParamVec>) -> AggContext {
+        AggContext {
+            global,
+            expect_updates: 0,
+            parallel_threshold: 64,
+            threads: 0,
+            protected_tail: 0,
+        }
+    }
+
+    /// Context tuned from a [`Config`]'s aggregation knobs.
+    pub fn from_config(global: Arc<ParamVec>, cfg: &Config) -> AggContext {
+        let mut ctx = AggContext::new(global);
+        ctx.parallel_threshold = cfg.agg_parallel_threshold;
+        ctx.threads = cfg.agg_threads;
+        ctx
+    }
+
+    pub fn expect_updates(mut self, n: usize) -> AggContext {
+        self.expect_updates = n;
+        self
+    }
+
+    pub fn protected_tail(mut self, n: usize) -> AggContext {
+        self.protected_tail = n;
+        self
+    }
+
+    /// Effective worker-thread count for the chunk-parallel reduce.
+    pub(crate) fn effective_threads(&self) -> usize {
+        if self.threads > 0 {
+            self.threads
+        } else {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+                .min(8)
+        }
+    }
+
+    /// Whether the chunk-parallel path should engage for a vector of
+    /// `len` coordinates. Each dense `add` spawns scoped threads, so the
+    /// per-add work must amortize the spawn cost: with auto threading
+    /// (`threads == 0`) that only holds for large vectors
+    /// ([`mean::AUTO_PARALLEL_LEN`]); an explicit `threads` setting opts
+    /// in down to [`mean::MIN_PARALLEL_LEN`].
+    pub(crate) fn use_parallel(&self, len: usize) -> bool {
+        let floor = if self.threads > 0 {
+            mean::MIN_PARALLEL_LEN
+        } else {
+            mean::AUTO_PARALLEL_LEN
+        };
+        self.effective_threads() > 1
+            && self.expect_updates >= self.parallel_threshold
+            && len >= floor
+    }
+}
+
+/// Constructor closure for a registered aggregator.
+pub type AggregatorBuilder =
+    Arc<dyn Fn(&AggContext) -> Result<Box<dyn Aggregator>> + Send + Sync>;
+
+/// Install the built-in aggregators (called by
+/// [`crate::registry::ComponentRegistry::with_builtins`]).
+pub(crate) fn register_builtins(reg: &mut crate::registry::ComponentRegistry) {
+    reg.register_aggregator(
+        "mean",
+        Arc::new(|ctx| {
+            Ok(Box::new(MeanAggregator::from_ctx(ctx)) as Box<dyn Aggregator>)
+        }),
+    );
+    reg.register_aggregator(
+        "backbone",
+        Arc::new(|ctx| {
+            Ok(Box::new(SliceMaskedAggregator::from_ctx(ctx))
+                as Box<dyn Aggregator>)
+        }),
+    );
+}
+
+// ------------------------------------------------------- legacy oracle
+
+/// The legacy batch reduction: normalize weights, then one weighted sum
+/// over fully materialized dense vectors — exactly what the deprecated
+/// `ServerFlow::aggregate` computed through the L1 Pallas kernel. Kept
+/// as the equivalence oracle for the property tests and `agg_bench`;
+/// new code should stream through an [`Aggregator`] instead.
+pub fn batch_weighted_mean(contributions: &[(&[f32], f64)]) -> Result<ParamVec> {
+    let Some(((first, _), rest)) = contributions.split_first() else {
+        return Err(Error::Runtime("aggregate: empty cohort".into()));
+    };
+    let total: f64 = contributions.iter().map(|(_, w)| w).sum();
+    if total <= 0.0 {
+        return Err(Error::Runtime("aggregate: zero total weight".into()));
+    }
+    for (v, _) in rest {
+        if v.len() != first.len() {
+            return Err(Error::Runtime(format!(
+                "aggregate: vector of len {} != P {}",
+                v.len(),
+                first.len()
+            )));
+        }
+    }
+    let mut acc = vec![0.0f64; first.len()];
+    for (v, w) in contributions {
+        let nw = w / total;
+        for (a, x) in acc.iter_mut().zip(v.iter()) {
+            *a += nw * (*x as f64);
+        }
+    }
+    Ok(ParamVec(acc.into_iter().map(|v| v as f32).collect()))
+}
+
+// ------------------------------------------------------------- fedbuff
+
+/// FedBuff's staleness discount: an update aggregated `s` versions after
+/// the model it trained against weighs `(1 + s)^-α`.
+#[derive(Debug, Clone, Copy)]
+pub struct StalenessDiscount {
+    pub alpha: f64,
+}
+
+impl StalenessDiscount {
+    pub fn new(alpha: f64) -> StalenessDiscount {
+        StalenessDiscount { alpha }
+    }
+
+    /// The aggregator weight a report of this staleness carries.
+    pub fn weight(&self, staleness: f64) -> f64 {
+        (1.0 + staleness).powf(-self.alpha)
+    }
+}
+
+/// One flushed FedBuff window.
+pub struct FedBuffWindow {
+    /// Reports aggregated in the window.
+    pub arrivals: usize,
+    /// Sum of staleness-discounted weights.
+    pub total_weight: f64,
+    /// Mean staleness over the window's reports.
+    pub avg_staleness: f64,
+    /// The reduced model when an [`Aggregator`] is attached; `None` in
+    /// surrogate simulations that track weights only.
+    pub params: Option<ParamVec>,
+}
+
+/// Buffered-asynchronous (FedBuff) aggregation: each arriving report is
+/// pushed with its staleness, which the buffer converts into an
+/// aggregator weight. With an attached [`Aggregator`] the updates stream
+/// straight in; without one (SimNet's surrogate mode) only the weight
+/// ledger is kept, so the same bookkeeping drives both real and
+/// simulated federations.
+pub struct FedBuffBuffer {
+    discount: StalenessDiscount,
+    agg: Option<Box<dyn Aggregator>>,
+    arrivals: usize,
+    sum_weight: f64,
+    sum_staleness: f64,
+}
+
+impl FedBuffBuffer {
+    /// Weight ledger only — no parameter reduction (surrogate SimNet).
+    pub fn surrogate(alpha: f64) -> FedBuffBuffer {
+        FedBuffBuffer {
+            discount: StalenessDiscount::new(alpha),
+            agg: None,
+            arrivals: 0,
+            sum_weight: 0.0,
+            sum_staleness: 0.0,
+        }
+    }
+
+    /// Stream updates into `agg` with staleness-discounted weights.
+    pub fn with_aggregator(alpha: f64, agg: Box<dyn Aggregator>) -> FedBuffBuffer {
+        FedBuffBuffer { agg: Some(agg), ..FedBuffBuffer::surrogate(alpha) }
+    }
+
+    /// Record one report. Returns the discounted weight it carried.
+    /// `update` must be `Some` when an aggregator is attached.
+    pub fn push(&mut self, staleness: f64, update: Option<&Update>) -> Result<f64> {
+        let weight = self.discount.weight(staleness);
+        if let Some(agg) = self.agg.as_mut() {
+            let update = update.ok_or_else(|| {
+                Error::Runtime(
+                    "fedbuff: aggregator attached but no update supplied".into(),
+                )
+            })?;
+            agg.add(update, weight)?;
+        }
+        self.arrivals += 1;
+        self.sum_weight += weight;
+        self.sum_staleness += staleness;
+        Ok(weight)
+    }
+
+    /// Reports buffered since the last flush.
+    pub fn len(&self) -> usize {
+        self.arrivals
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.arrivals == 0
+    }
+
+    /// Sum of discounted weights in the current window.
+    pub fn total_weight(&self) -> f64 {
+        self.sum_weight
+    }
+
+    /// Mean staleness of the current window (0 when empty).
+    pub fn avg_staleness(&self) -> f64 {
+        if self.arrivals == 0 {
+            0.0
+        } else {
+            self.sum_staleness / self.arrivals as f64
+        }
+    }
+
+    /// Close the window: report its stats (and reduced model, when an
+    /// aggregator is attached) and reset for the next one.
+    pub fn flush(&mut self) -> Result<FedBuffWindow> {
+        let window = FedBuffWindow {
+            arrivals: self.arrivals,
+            total_weight: self.sum_weight,
+            avg_staleness: self.avg_staleness(),
+            params: match self.agg.as_mut() {
+                Some(agg) => Some(agg.finish()?),
+                None => None,
+            },
+        };
+        self.arrivals = 0;
+        self.sum_weight = 0.0;
+        self.sum_staleness = 0.0;
+        Ok(window)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_oracle_is_the_normalized_weighted_mean() {
+        let a = [1.0f32, 2.0];
+        let b = [3.0f32, 6.0];
+        let out = batch_weighted_mean(&[(&a, 1.0), (&b, 3.0)]).unwrap();
+        assert!((out[0] - 2.5).abs() < 1e-7);
+        assert!((out[1] - 5.0).abs() < 1e-7);
+        assert!(batch_weighted_mean(&[]).is_err());
+        assert!(batch_weighted_mean(&[(&a[..], 0.0)]).is_err());
+        assert!(batch_weighted_mean(&[(&a[..], 1.0), (&b[..1], 1.0)]).is_err());
+    }
+
+    #[test]
+    fn staleness_discount_matches_fedbuff() {
+        let d = StalenessDiscount::new(0.5);
+        assert!((d.weight(0.0) - 1.0).abs() < 1e-12);
+        assert!((d.weight(3.0) - 0.5).abs() < 1e-12);
+        // α = 0 disables the discount entirely.
+        assert_eq!(StalenessDiscount::new(0.0).weight(7.0), 1.0);
+    }
+
+    #[test]
+    fn fedbuff_surrogate_ledger_tracks_weights_and_staleness() {
+        let mut buf = FedBuffBuffer::surrogate(0.5);
+        assert!(buf.is_empty());
+        let w0 = buf.push(0.0, None).unwrap();
+        let w3 = buf.push(3.0, None).unwrap();
+        assert!((w0 - 1.0).abs() < 1e-12);
+        assert!((w3 - 0.5).abs() < 1e-12);
+        assert_eq!(buf.len(), 2);
+        assert!((buf.total_weight() - 1.5).abs() < 1e-12);
+        assert!((buf.avg_staleness() - 1.5).abs() < 1e-12);
+        let window = buf.flush().unwrap();
+        assert_eq!(window.arrivals, 2);
+        assert!(window.params.is_none());
+        // Flush resets the window.
+        assert!(buf.is_empty());
+        assert_eq!(buf.avg_staleness(), 0.0);
+    }
+
+    #[test]
+    fn fedbuff_with_aggregator_streams_discounted_updates() {
+        let global = Arc::new(ParamVec::zeros(4));
+        let agg = Box::new(MeanAggregator::from_ctx(&AggContext::new(global)));
+        let mut buf = FedBuffBuffer::with_aggregator(0.5, agg);
+        // Missing update with an attached aggregator is an error.
+        assert!(buf.push(0.0, None).is_err());
+        let fresh = Update::Dense(ParamVec(vec![2.0; 4]));
+        let stale = Update::Dense(ParamVec(vec![4.0; 4]));
+        buf.push(0.0, Some(&fresh)).unwrap(); // weight 1
+        buf.push(3.0, Some(&stale)).unwrap(); // weight 0.5
+        let window = buf.flush().unwrap();
+        let params = window.params.unwrap();
+        // (1·2 + 0.5·4) / 1.5 = 8/3
+        for v in params.iter() {
+            assert!((v - 8.0 / 3.0).abs() < 1e-6);
+        }
+    }
+}

@@ -1,7 +1,9 @@
 //! FedAvg (McMahan et al. 2017) — the platform default.
 //!
-//! Nothing to override: FedAvg *is* the set of default stages. This module
-//! only provides the canonical factory and a named marker type.
+//! Nothing to override: FedAvg *is* the set of default stages, including
+//! the streaming `"mean"` aggregator on the aggregation plane (weighted
+//! mean, one fused axpy per arriving update). This module only provides
+//! the canonical factory and a named marker type.
 
 use std::sync::Arc;
 

@@ -1,7 +1,9 @@
 //! FedProx (Li et al., MLSys 2020) as a one-stage plugin.
 //!
 //! FedProx adds a proximal term μ/2‖w − w_global‖² to the local objective.
-//! Per the paper's Table VII it changes **only the client train stage** —
+//! Server-side it inherits everything, streaming `"mean"` aggregation
+//! included. Per the paper's Table VII it changes **only the client train
+//! stage** —
 //! and that is literally the whole plugin: `train` dispatches to the AOT
 //! `fedprox` entry point (the μ-gradient is fused into the L2 graph), all
 //! other stages inherit the FedAvg defaults. The paper's LOC argument

@@ -8,12 +8,16 @@
 //!
 //! On the flat-parameter contract the head is the trailing
 //! `head_len` coordinates (the model's final dense layer). The server
-//! aggregates only the backbone slice; client heads persist across rounds
-//! in a shared [`SharedHeads`] map keyed by client id.
+//! aggregates only the backbone slice — a slice-masked accumulator on
+//! the streaming aggregation plane (the `"backbone"` registry entry):
+//! the personal-head tail is never averaged, the global keeps its own
+//! head, and client heads persist across rounds in a shared
+//! [`SharedHeads`] map keyed by client id.
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
+use crate::aggregate::{AggContext, Aggregator};
 use crate::coordinator::ClientFlowFactory;
 use crate::error::Result;
 use crate::flow::client_stages::TrainStats;
@@ -73,11 +77,11 @@ impl ClientFlow for FedReidClientFlow {
     }
 }
 
-/// Server flow: aggregate the backbone, keep the previous global head.
+/// Server flow: aggregate the backbone, keep the global model's head.
 pub struct FedReidServerFlow {
-    /// Resolved lazily from artifact metadata on first aggregation when
-    /// constructed via [`FedReidServerFlow::lazy`] (the registry path:
-    /// no engine exists yet at registration time).
+    /// Resolved lazily from artifact metadata on first aggregator
+    /// construction when built via [`FedReidServerFlow::lazy`] (the
+    /// registry path: no engine exists yet at registration time).
     head_len: Option<usize>,
 }
 
@@ -102,12 +106,20 @@ impl ServerFlow for FedReidServerFlow {
         "fedreid"
     }
 
-    fn aggregate(
+    fn aggregator_name(&self) -> &str {
+        "backbone"
+    }
+
+    /// The backbone-slice merge as a slice-masked accumulator: resolve
+    /// the head boundary (lazily, from artifact metadata) and hand the
+    /// protected tail to the `"backbone"` registry aggregator. Client
+    /// head slices never enter the reduction; the global keeps its own.
+    fn make_aggregator(
         &mut self,
         engine: &Engine,
         model: &str,
-        contributions: &[(ParamVec, f64)],
-    ) -> Result<ParamVec> {
+        ctx: AggContext,
+    ) -> Result<Box<dyn Aggregator>> {
         let hl = match self.head_len {
             Some(hl) => hl,
             None => {
@@ -116,17 +128,8 @@ impl ServerFlow for FedReidServerFlow {
                 hl
             }
         };
-        // Standard weighted FedAvg over the full vectors first (reuses the
-        // L1 kernel) ...
-        let mut flow = crate::flow::DefaultServerFlow;
-        let mut merged = flow.aggregate(engine, model, contributions)?;
-        // ... then overwrite the head slice with the *first* contribution's
-        // head scaled to neutral: global head is irrelevant (clients
-        // restore their own), but keep it finite and stable by averaging —
-        // already done — so nothing to undo; mark the boundary for tests.
-        let split = merged.len() - hl;
-        let _ = &mut merged[split..];
-        Ok(merged)
+        let ctx = ctx.protected_tail(hl);
+        crate::registry::with_global(|r| r.aggregator("backbone", &ctx))
     }
 }
 
@@ -160,6 +163,27 @@ pub(crate) fn register(reg: &mut ComponentRegistry) {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn backbone_aggregator_protects_the_head_slice() {
+        let mut flow = FedReidServerFlow::new(2);
+        assert_eq!(flow.aggregator_name(), "backbone");
+        let engine = Engine::new(std::path::Path::new("/nonexistent")).unwrap();
+        let global = Arc::new(ParamVec(vec![0.0, 0.0, 7.0, 8.0]));
+        let mut agg = flow
+            .make_aggregator(&engine, "mlp", AggContext::new(global))
+            .unwrap();
+        assert_eq!(agg.name(), "backbone");
+        agg.add(
+            &crate::flow::Update::Dense(ParamVec(vec![2.0, 4.0, 1.0, 1.0])),
+            1.0,
+        )
+        .unwrap();
+        let out = agg.finish().unwrap();
+        // Backbone merged; the client's head coordinates were ignored and
+        // the global head survived.
+        assert_eq!(out.0, vec![2.0, 4.0, 7.0, 8.0]);
+    }
 
     #[test]
     fn shared_heads_type_is_threadsafe() {

@@ -19,7 +19,7 @@ pub mod stc;
 pub use fedavg::{fedavg_client_factory, FedAvg};
 pub use fedprox::{fedprox_client_factory, FedProxClientFlow};
 pub use fedreid::{fedreid_client_factory, FedReidServerFlow, SharedHeads};
-pub use stc::{stc_client_factory, STCClientFlow, STCServerFlow};
+pub use stc::{stc_client_factory, stc_compress, STCClientFlow, STCServerFlow};
 
 /// Every built-in algorithm self-registers into the component registry;
 /// `Config::algorithm = "<name>"` is then all it takes to select one.

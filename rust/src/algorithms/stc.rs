@@ -65,10 +65,11 @@ impl ClientFlow for STCClientFlow {
     }
 }
 
-/// Server flow: decompression reconstructs `global + ternary delta`.
-/// (`Update::to_dense` already implements the reconstruction; the default
-/// decompress handles it — this type exists to carry the algorithm name
-/// and to make the stage substitution explicit.)
+/// Server flow: on the streaming aggregation plane the sparse ternary
+/// delta is applied **index-wise** by the `"mean"` aggregator — k
+/// touched coordinates per update, never a dense `to_dense` round-trip.
+/// This type exists to carry the algorithm name and to make the stage
+/// substitution explicit; every stage inherits the FedAvg defaults.
 #[derive(Default)]
 pub struct STCServerFlow;
 
@@ -122,7 +123,7 @@ mod tests {
             }
             _ => panic!("expected sparse ternary"),
         }
-        let dense = u.to_dense(&global);
+        let dense = u.to_dense(&global).unwrap();
         assert!((dense[7] - 4.5).abs() < 1e-6);
         assert!((dense[42] + 4.5).abs() < 1e-6);
         assert_eq!(dense[13], 0.0);
@@ -146,7 +147,7 @@ mod tests {
         let global = ParamVec(vec![1.0; 8]);
         let new = ParamVec(vec![2.0, 0.0, 2.0, 0.0, 2.0, 0.0, 2.0, 0.0]);
         let u = stc_compress(&new, &global, 1.0);
-        let dense = u.to_dense(&global);
+        let dense = u.to_dense(&global).unwrap();
         // All deltas are ±1, magnitude 1: perfect ternary reconstruction.
         assert_eq!(dense.0, new.0);
     }

@@ -9,6 +9,7 @@ use std::sync::mpsc::{channel, Sender};
 use std::sync::Arc;
 use std::time::Duration;
 
+use crate::aggregate::AggContext;
 use crate::comm::protocol::Message;
 use crate::comm::registry::Registor;
 use crate::comm::rpc::{Connection, Handler, RpcServer};
@@ -182,7 +183,7 @@ pub struct RemoteCoordinator {
     engine: Engine,
     flow: Box<dyn ServerFlow>,
     tracker: Arc<Tracker>,
-    params: ParamVec,
+    params: Arc<ParamVec>,
     rng: Rng,
     /// (client_index, addr) discovered from the registry.
     clients: Vec<(usize, String)>,
@@ -199,7 +200,7 @@ impl RemoteCoordinator {
         cfg.model = cfg.resolved_model();
         cfg.validate()?;
         let engine = Engine::new(&cfg.artifacts_dir)?;
-        let params = engine.init_params(&cfg.model)?;
+        let params = Arc::new(engine.init_params(&cfg.model)?);
         let data = FedDataset::from_config(&cfg)?;
         let test_batches = data.materialize_test(cfg.test_samples).batches(cfg.batch_size);
         let rng = Rng::new(cfg.seed ^ 0x5E17_EC70);
@@ -274,7 +275,9 @@ impl RemoteCoordinator {
                 batch_size: self.cfg.batch_size as u32,
                 data_amount: self.cfg.data_amount as f32,
                 seed: self.cfg.seed ^ ((round as u64) << 32) ^ client_index as u64,
-                params: self.params.clone(),
+                // The wire needs an owned copy per connection; the shared
+                // Arc is untouched.
+                params: (*self.params).clone(),
             };
             scatter.push(std::thread::spawn(move || {
                 let result = Connection::connect(&addr)
@@ -297,6 +300,8 @@ impl RemoteCoordinator {
         let downlink = self.params.len() * 4 * cohort.len();
 
         // Gather: parallel receive threads (clients compute concurrently).
+        // Each reply streams into the round's accumulator the moment it
+        // arrives — the server never buffers the cohort's updates.
         let sw_round = Stopwatch::start();
         let (tx, rx) = channel();
         let mut threads = Vec::new();
@@ -308,20 +313,46 @@ impl RemoteCoordinator {
             }));
         }
         drop(tx);
-        let mut replies = Vec::new();
+        let ctx = AggContext::from_config(self.params.clone(), &self.cfg)
+            .expect_updates(cohort.len());
+        let mut agg =
+            self.flow.make_aggregator(&self.engine, &self.cfg.model, ctx)?;
+        let mut uplink = 0usize;
+        let mut clients_m = Vec::new();
+        let mut total_loss = 0.0;
+        let mut total_correct = 0.0;
+        let mut total_n = 0.0;
         for _ in 0..cohort.len() {
             let (idx, reply) = rx
                 .recv()
                 .map_err(|_| Error::Comm("gather channel closed".into()))?;
             match reply? {
                 Message::TrainReply {
-                    num_samples,
+                    num_samples: n,
                     sum_loss,
                     correct,
                     compute_ms,
                     update,
                     ..
-                } => replies.push((idx, num_samples, sum_loss, correct, compute_ms, update)),
+                } => {
+                    uplink += update.wire_bytes();
+                    let decoded = self.flow.decode_update(&update)?;
+                    agg.add(decoded.as_ref(), n as f64)?;
+                    total_loss += sum_loss;
+                    total_correct += correct;
+                    total_n += n as f64;
+                    clients_m.push(ClientMetrics {
+                        client: idx,
+                        num_samples: n as usize,
+                        train_loss: sum_loss / (n as f64).max(1.0),
+                        train_accuracy: correct / (n as f64).max(1.0),
+                        compute_ms,
+                        wait_ms: 0.0,
+                        round_ms: compute_ms,
+                        upload_bytes: 0,
+                        device: "remote".into(),
+                    });
+                }
                 Message::Err { msg } => {
                     return Err(Error::Comm(format!("client {idx}: {msg}")))
                 }
@@ -335,39 +366,11 @@ impl RemoteCoordinator {
         }
         let round_ms = sw_round.elapsed_ms();
 
-        // Decompress + aggregate (same server stages as local training).
-        let mut contributions = Vec::new();
-        let mut uplink = 0usize;
-        let mut clients_m = Vec::new();
-        let mut total_loss = 0.0;
-        let mut total_correct = 0.0;
-        let mut total_n = 0.0;
-        for (idx, n, sum_loss, correct, compute_ms, update) in replies {
-            uplink += update.wire_bytes();
-            let dense = self.flow.decompress(update, &self.params)?;
-            contributions.push((dense, n as f64));
-            total_loss += sum_loss;
-            total_correct += correct;
-            total_n += n as f64;
-            clients_m.push(ClientMetrics {
-                client: idx,
-                num_samples: n as usize,
-                train_loss: sum_loss / (n as f64).max(1.0),
-                train_accuracy: correct / (n as f64).max(1.0),
-                compute_ms,
-                wait_ms: 0.0,
-                round_ms: compute_ms,
-                upload_bytes: 0,
-                device: "remote".into(),
-            });
-        }
-        let new_params =
-            self.flow
-                .aggregate(&self.engine, &self.cfg.model, &contributions)?;
+        let new_params = agg.finish()?;
         if !new_params.is_finite() {
             return Err(Error::Runtime("remote round diverged".into()));
         }
-        self.params = new_params;
+        self.params = Arc::new(new_params);
 
         let (test_loss, test_accuracy) = if self.cfg.eval_every > 0
             && (round + 1) % self.cfg.eval_every == 0

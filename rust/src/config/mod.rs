@@ -336,6 +336,15 @@ pub struct Config {
     pub max_samples: usize,
     /// Size of the IID test split the server evaluates on.
     pub test_samples: usize,
+    /// Cohort size at/above which the streaming aggregator reduces dense
+    /// updates chunk-parallel across threads (0 ⇒ parallel whenever the
+    /// parameter vector is large enough).
+    pub agg_parallel_threshold: usize,
+    /// Worker threads for the chunk-parallel reduce (0 ⇒ all cores,
+    /// capped at 8). Auto mode only engages for very large parameter
+    /// vectors (the per-add thread spawn must amortize); an explicit
+    /// value opts smaller vectors in.
+    pub agg_threads: usize,
     /// Discrete-event simulator knobs (the `simulate` subcommand and
     /// [`crate::simnet`] jobs read these; training runs ignore them).
     pub sim: SimConfig,
@@ -372,6 +381,8 @@ impl Default for Config {
             eval_every: 1,
             max_samples: 0,
             test_samples: 512,
+            agg_parallel_threshold: 64,
+            agg_threads: 0,
             sim: SimConfig::default(),
         }
     }
@@ -496,6 +507,12 @@ impl Config {
         if let Some(n) = v.get("test_samples").as_usize() {
             c.test_samples = n;
         }
+        if let Some(n) = v.get("agg_parallel_threshold").as_usize() {
+            c.agg_parallel_threshold = n;
+        }
+        if let Some(n) = v.get("agg_threads").as_usize() {
+            c.agg_threads = n;
+        }
         let sim = v.get("sim");
         if sim.as_obj().is_some() {
             c.sim.apply_json(sim)?;
@@ -609,6 +626,20 @@ mod tests {
         assert_eq!(c.fedprox_mu, 0.1);
         assert_eq!(c.stc_sparsity, 0.05);
         assert_eq!(c.data_source.as_deref(), Some("my-data"));
+    }
+
+    #[test]
+    fn aggregation_knobs_parse_from_json_with_defaults() {
+        let c = Config::default();
+        assert_eq!(c.agg_parallel_threshold, 64);
+        assert_eq!(c.agg_threads, 0);
+        let j = Json::parse(
+            r#"{"agg_parallel_threshold": 128, "agg_threads": 4}"#,
+        )
+        .unwrap();
+        let c = Config::from_json(&j).unwrap();
+        assert_eq!(c.agg_parallel_threshold, 128);
+        assert_eq!(c.agg_threads, 4);
     }
 
     #[test]

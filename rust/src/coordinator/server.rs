@@ -2,6 +2,7 @@
 
 use std::sync::Arc;
 
+use crate::aggregate::AggContext;
 use crate::client::{execute_client_round, ClientJob, ClientOutcome};
 use crate::config::Config;
 use crate::coordinator::pool::{ClientFlowFactory, DevicePool};
@@ -33,7 +34,9 @@ pub struct Server {
     plan: HeterogeneityPlan,
     tracker: Arc<Tracker>,
     clock: Arc<dyn Clock>,
-    params: ParamVec,
+    /// The global model, shared by reference: distribution hands clients
+    /// an `Arc` clone instead of copying P floats per round.
+    params: Arc<ParamVec>,
     rng: Rng,
     test_batches: Vec<Batch>,
 }
@@ -51,7 +54,7 @@ impl Server {
         cfg.model = cfg.resolved_model();
         cfg.validate()?;
         let engine = Engine::new(&cfg.artifacts_dir)?;
-        let params = engine.init_params(&cfg.model)?;
+        let params = Arc::new(engine.init_params(&cfg.model)?);
         let clock: Arc<dyn Clock> = if cfg.virtual_clock {
             Arc::new(VirtualClock::new())
         } else {
@@ -117,7 +120,7 @@ impl Server {
 
     /// Replace the global model (remote ingest, tests).
     pub fn set_params(&mut self, params: ParamVec) {
-        self.params = params;
+        self.params = Arc::new(params);
     }
 
     /// Train all configured rounds.
@@ -138,10 +141,9 @@ impl Server {
         let num_devices = self.cfg.num_devices;
         let groups = self.strategy.allocate(&cohort, num_devices, &mut self.rng);
 
-        // Distribution stage: build + enqueue per-client payloads.
-        let payload = self
-            .flow
-            .compress_model(Arc::new(self.params.clone()), round);
+        // Distribution stage: build + enqueue per-client payloads. The
+        // payload shares the global by Arc — no per-round dense copy.
+        let payload = self.flow.compress_model(self.params.clone(), round);
         let downlink_bytes = payload.wire_bytes * cohort.len();
         let sw_dist = Stopwatch::start();
         let jobs: Vec<Vec<ClientJob>> = groups
@@ -207,29 +209,31 @@ impl Server {
             .map(|outs| outs.iter().map(|o| o.round_ms).sum::<f64>())
             .fold(0.0, f64::max);
 
-        // Decompression + aggregation stages.
+        // Streaming aggregation: decode each outcome and feed it straight
+        // into the round's accumulator — no per-client dense vectors.
         let sw_agg = Stopwatch::start();
         let outcomes: Vec<&ClientOutcome> = per_device.iter().flatten().collect();
         if outcomes.is_empty() {
             return Err(Error::Runtime("round produced no outcomes".into()));
         }
-        let mut contributions = Vec::with_capacity(outcomes.len());
+        let ctx = AggContext::from_config(self.params.clone(), &self.cfg)
+            .expect_updates(outcomes.len());
+        let mut agg =
+            self.flow.make_aggregator(&self.engine, &self.cfg.model, ctx)?;
         let mut uplink_bytes = 0usize;
         for o in &outcomes {
             uplink_bytes += o.upload_bytes;
-            let dense = self.flow.decompress(o.update.clone(), &self.params)?;
-            contributions.push((dense, o.stats.num_samples as f64));
+            let decoded = self.flow.decode_update(&o.update)?;
+            agg.add(decoded.as_ref(), o.stats.num_samples as f64)?;
         }
-        let new_params =
-            self.flow
-                .aggregate(&self.engine, &self.cfg.model, &contributions)?;
+        let new_params = agg.finish()?;
         if !new_params.is_finite() {
             return Err(Error::Runtime(format!(
                 "round {round}: aggregated parameters diverged (NaN/Inf); \
                  lower the learning rate"
             )));
         }
-        self.params = new_params;
+        self.params = Arc::new(new_params);
         let agg_ms = sw_agg.elapsed_ms();
 
         // Evaluation.

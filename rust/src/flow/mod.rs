@@ -59,25 +59,52 @@ impl Update {
     }
 
     /// Reconstruct the dense parameter vector this update encodes.
-    pub fn to_dense(&self, global: &ParamVec) -> ParamVec {
+    ///
+    /// Masked payloads are an error: decoding one without unmasking
+    /// would silently drop the `xor_key` and hand ciphertext semantics
+    /// to the aggregator. Plugins with a decryption stage must unwrap
+    /// the inner update first (see
+    /// [`ServerFlow::decode_update`](server_stages::ServerFlow::decode_update)).
+    pub fn to_dense(&self, global: &ParamVec) -> crate::error::Result<ParamVec> {
+        use crate::error::Error;
         match self {
-            Update::Dense(p) => p.clone(),
+            Update::Dense(p) => Ok(p.clone()),
             Update::SparseTernary { len, indices, signs, magnitude } => {
-                debug_assert_eq!(*len, global.len());
+                // Validate like the streaming aggregator does: a
+                // malformed (or hostile remote) update must error, not
+                // panic the coordinator.
+                if *len != global.len() {
+                    return Err(Error::Runtime(format!(
+                        "sparse update of len {len} != P {}",
+                        global.len()
+                    )));
+                }
+                if signs.len() != indices.len() {
+                    return Err(Error::Runtime(format!(
+                        "sparse update has {} signs for {} indices",
+                        signs.len(),
+                        indices.len()
+                    )));
+                }
                 let mut out = global.clone();
                 for (i, &idx) in indices.iter().enumerate() {
+                    let idx = idx as usize;
+                    if idx >= out.len() {
+                        return Err(Error::Runtime(format!(
+                            "sparse index {idx} out of range (P = {})",
+                            out.len()
+                        )));
+                    }
                     let delta = if signs[i] { *magnitude } else { -*magnitude };
-                    out[idx as usize] += delta;
+                    out[idx] += delta;
                 }
-                out
+                Ok(out)
             }
-            Update::Masked { xor_key, inner } => {
-                // The default server flow refuses masked payloads; plugins
-                // that add encryption must unmask first. For the demo
-                // cipher, unmasking is symmetric.
-                let _ = xor_key;
-                inner.to_dense(global)
-            }
+            Update::Masked { .. } => Err(crate::error::Error::Runtime(
+                "masked update cannot be decoded without unmasking; \
+                 register a server plugin with a decryption stage"
+                    .into(),
+            )),
         }
     }
 }
@@ -91,7 +118,47 @@ mod tests {
         let g = ParamVec(vec![1.0; 10]);
         let u = Update::Dense(ParamVec(vec![2.0; 10]));
         assert_eq!(u.wire_bytes(), 40);
-        assert_eq!(u.to_dense(&g).0, vec![2.0; 10]);
+        assert_eq!(u.to_dense(&g).unwrap().0, vec![2.0; 10]);
+    }
+
+    #[test]
+    fn masked_update_refuses_silent_decoding() {
+        let g = ParamVec(vec![0.0; 4]);
+        let u = Update::Masked {
+            xor_key: 0xDEAD_BEEF,
+            inner: Box::new(Update::Dense(ParamVec(vec![1.0; 4]))),
+        };
+        let err = u.to_dense(&g).unwrap_err().to_string();
+        assert!(err.contains("unmasking"), "{err}");
+    }
+
+    #[test]
+    fn malformed_sparse_updates_error_instead_of_panicking() {
+        let g = ParamVec(vec![0.0; 4]);
+        // Out-of-range index (hostile remote upload).
+        let u = Update::SparseTernary {
+            len: 4,
+            indices: vec![9],
+            signs: vec![true],
+            magnitude: 1.0,
+        };
+        assert!(u.to_dense(&g).unwrap_err().to_string().contains("out of range"));
+        // Length contract violation.
+        let u = Update::SparseTernary {
+            len: 5,
+            indices: vec![0],
+            signs: vec![true],
+            magnitude: 1.0,
+        };
+        assert!(u.to_dense(&g).is_err());
+        // Sign/index arity mismatch.
+        let u = Update::SparseTernary {
+            len: 4,
+            indices: vec![0, 1],
+            signs: vec![true],
+            magnitude: 1.0,
+        };
+        assert!(u.to_dense(&g).is_err());
     }
 
     #[test]
@@ -103,7 +170,7 @@ mod tests {
             signs: vec![true, false],
             magnitude: 0.5,
         };
-        let d = u.to_dense(&g);
+        let d = u.to_dense(&g).unwrap();
         assert_eq!(d.0, vec![0.0, 0.5, 0.0, 0.0, -0.5, 0.0]);
         assert!(u.wire_bytes() < 40, "sparse must beat dense for k≪P");
     }

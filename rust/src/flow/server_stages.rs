@@ -1,9 +1,18 @@
 //! Server-side stages: selection → compression → distribution →
-//! decompression → aggregation (paper Fig 3, top row).
+//! decode → streaming aggregation (paper Fig 3, top row).
+//!
+//! Since the aggregation plane landed, the uplink side is streaming: the
+//! round loop calls [`ServerFlow::decode_update`] on each arriving
+//! update and feeds it straight into the [`Aggregator`] built by
+//! [`ServerFlow::make_aggregator`] — no per-client dense
+//! materialization. The old batch `decompress`/`aggregate` methods are
+//! kept as deprecated shims implemented on top of the new plane.
 
+use std::borrow::Cow;
 use std::sync::Arc;
 
 use super::Update;
+use crate::aggregate::{AggContext, Aggregator, MeanAggregator};
 use crate::error::{Error, Result};
 use crate::model::ParamVec;
 use crate::runtime::Engine;
@@ -41,8 +50,12 @@ pub trait ServerFlow: Send {
         ModelPayload { params, wire_bytes, round }
     }
 
-    /// Decompression stage for one uplink update.
-    fn decompress(&mut self, update: Update, global: &ParamVec) -> Result<ParamVec> {
+    /// Decode stage for one uplink update: de-obfuscate/validate it
+    /// before it streams into the aggregator. Plugins with an encryption
+    /// stage override this to unmask; the default refuses masked
+    /// payloads. Returns `Cow::Borrowed` on the (common) pass-through
+    /// path so nothing is copied.
+    fn decode_update<'u>(&mut self, update: &'u Update) -> Result<Cow<'u, Update>> {
         if matches!(update, Update::Masked { .. }) {
             return Err(Error::Runtime(
                 "default server flow cannot handle encrypted updates; \
@@ -50,33 +63,81 @@ pub trait ServerFlow: Send {
                     .into(),
             ));
         }
-        Ok(update.to_dense(global))
+        Ok(Cow::Borrowed(update))
     }
 
-    /// Aggregation stage: weighted FedAvg via the L1 Pallas kernel.
+    /// Registered aggregator this flow reduces with (see
+    /// [`crate::aggregate`]). Algorithms pick theirs by name; the
+    /// default is the streaming weighted mean.
+    fn aggregator_name(&self) -> &str {
+        "mean"
+    }
+
+    /// Aggregation stage, streaming: build the round's accumulator. The
+    /// default resolves [`ServerFlow::aggregator_name`] through the
+    /// component registry; flows needing model metadata (e.g. FedReID's
+    /// head boundary) override this and enrich `ctx` from `engine`.
+    fn make_aggregator(
+        &mut self,
+        engine: &Engine,
+        model: &str,
+        ctx: AggContext,
+    ) -> Result<Box<dyn Aggregator>> {
+        let _ = (engine, model);
+        let name = self.aggregator_name().to_string();
+        crate::registry::with_global(|r| r.aggregator(&name, &ctx))
+    }
+
+    /// Decompression stage for one uplink update (legacy batch path).
     ///
-    /// `contributions` are (dense params, weight); weights are normalized
-    /// here so callers can pass raw sample counts.
+    /// **The runtime no longer calls this.** `Server::run_round`, remote
+    /// ingest and SimNet all stream through [`ServerFlow::decode_update`]
+    /// + [`ServerFlow::make_aggregator`]; a flow that overrides only this
+    /// method will see its override silently unused — move the logic
+    /// (e.g. unmasking) into `decode_update`.
+    #[deprecated(
+        since = "0.3.0",
+        note = "materializes a dense vector per client and is no longer \
+                called by the runtime; stream updates through \
+                decode_update + make_aggregator instead"
+    )]
+    fn decompress(&mut self, update: Update, global: &ParamVec) -> Result<ParamVec> {
+        self.decode_update(&update)?.to_dense(global)
+    }
+
+    /// Aggregation stage over fully materialized contributions (legacy
+    /// batch path). `contributions` are (dense params, weight); weights
+    /// are normalized so callers can pass raw sample counts. The shim
+    /// streams through a [`MeanAggregator`], so it computes exactly the
+    /// weighted mean the old kernel call produced.
+    ///
+    /// **The runtime no longer calls this.** A flow that overrides only
+    /// this method (a robust mean, say) will see its override silently
+    /// unused — register the reduction with
+    /// `registry::register_aggregator` and point
+    /// [`ServerFlow::aggregator_name`] / [`ServerFlow::make_aggregator`]
+    /// at it instead.
+    #[deprecated(
+        since = "0.3.0",
+        note = "needs O(cohort × P) memory and is no longer called by \
+                the runtime; stream updates through make_aggregator \
+                instead"
+    )]
     fn aggregate(
         &mut self,
         engine: &Engine,
         model: &str,
         contributions: &[(ParamVec, f64)],
     ) -> Result<ParamVec> {
-        if contributions.is_empty() {
+        let _ = (engine, model);
+        let Some(((first, _), _)) = contributions.split_first() else {
             return Err(Error::Runtime("aggregate: empty cohort".into()));
+        };
+        let mut agg = MeanAggregator::dense_only(first.len());
+        for (p, w) in contributions {
+            agg.add_dense(p, *w)?;
         }
-        let total: f64 = contributions.iter().map(|(_, w)| w).sum();
-        if total <= 0.0 {
-            return Err(Error::Runtime("aggregate: zero total weight".into()));
-        }
-        let vectors: Vec<&[f32]> =
-            contributions.iter().map(|(p, _)| &p.0[..]).collect();
-        let weights: Vec<f32> = contributions
-            .iter()
-            .map(|(_, w)| (w / total) as f32)
-            .collect();
-        engine.aggregate(model, &vectors, &weights)
+        agg.finish()
     }
 }
 
@@ -124,14 +185,53 @@ mod tests {
     }
 
     #[test]
-    fn masked_update_rejected_by_default_flow() {
+    fn masked_update_rejected_by_default_decode() {
+        let mut f = DefaultServerFlow;
+        let u = Update::Masked {
+            xor_key: 7,
+            inner: Box::new(Update::Dense(ParamVec(vec![1.0; 4]))),
+        };
+        assert!(f.decode_update(&u).is_err());
+        // Non-masked updates pass through without a copy.
+        let u = Update::Dense(ParamVec(vec![1.0; 4]));
+        assert!(matches!(f.decode_update(&u).unwrap(), Cow::Borrowed(_)));
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_batch_shims_ride_the_streaming_plane() {
         let mut f = DefaultServerFlow;
         let g = ParamVec(vec![0.0; 4]);
+        // decompress = decode + to_dense.
         let u = Update::Masked {
             xor_key: 7,
             inner: Box::new(Update::Dense(ParamVec(vec![1.0; 4]))),
         };
         assert!(f.decompress(u, &g).is_err());
+        let d = f.decompress(Update::Dense(ParamVec(vec![2.0; 4])), &g).unwrap();
+        assert_eq!(d.0, vec![2.0; 4]);
+        // aggregate = streamed weighted mean.
+        let engine = Engine::new(std::path::Path::new("/nonexistent")).unwrap();
+        let contributions = vec![
+            (ParamVec(vec![1.0, 2.0]), 1.0),
+            (ParamVec(vec![3.0, 6.0]), 3.0),
+        ];
+        let out = f.aggregate(&engine, "mlp", &contributions).unwrap();
+        assert!((out[0] - 2.5).abs() < 1e-6);
+        assert!((out[1] - 5.0).abs() < 1e-6);
+        assert!(f.aggregate(&engine, "mlp", &[]).is_err());
+    }
+
+    #[test]
+    fn default_flow_builds_the_mean_aggregator_from_the_registry() {
+        let mut f = DefaultServerFlow;
+        assert_eq!(f.aggregator_name(), "mean");
+        let engine = Engine::new(std::path::Path::new("/nonexistent")).unwrap();
+        let ctx = AggContext::new(Arc::new(ParamVec::zeros(4)));
+        let mut agg = f.make_aggregator(&engine, "mlp", ctx).unwrap();
+        assert_eq!(agg.name(), "mean");
+        agg.add(&Update::Dense(ParamVec(vec![2.0; 4])), 1.0).unwrap();
+        assert_eq!(agg.finish().unwrap().0, vec![2.0; 4]);
     }
 
     #[test]

@@ -49,6 +49,14 @@
 //! println!("{}", report.to_table());
 //! ```
 //!
+//! ## Streaming aggregation
+//!
+//! Every consumer — server rounds, remote ingest, SimNet's FedBuff —
+//! reduces uplinks through one incremental [`aggregate::Aggregator`]:
+//! dense updates fold in via fused axpy, sparse ternary updates
+//! index-wise, chunk-parallel for big cohorts. Memory is O(threads·P)
+//! instead of O(cohort·P); `examples/agg_bench.rs` measures the win.
+//!
 //! ## Simulating at scale
 //!
 //! [`simnet`] is a discrete-event federation simulator on a virtual
@@ -62,6 +70,7 @@
 //! (FedProx, STC, FedReID), and `simnet_scale` for a million-client
 //! population simulation.
 
+pub mod aggregate;
 pub mod algorithms;
 pub mod api;
 pub mod client;
@@ -82,6 +91,7 @@ pub mod simulation;
 pub mod tracking;
 pub mod util;
 
+pub use aggregate::{AggContext, Aggregator};
 pub use api::{init, Report, Session, SessionBuilder};
 pub use config::{Allocation, Config, DatasetKind, Partition, SimMode};
 pub use error::{Error, Result};

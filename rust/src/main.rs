@@ -544,11 +544,14 @@ fn cmd_info(argv: &[String]) -> easyfl::Result<()> {
         easyfl::registry::with_global(|r| r.names());
     let (availability, cost_models) =
         easyfl::registry::with_global(|r| r.sim_names());
+    let aggregators =
+        easyfl::registry::with_global(|r| r.aggregator_names());
     println!("\nregistered components:");
     println!("  algorithms:   {}", algos.join(", "));
     println!("  data sources: {}", datasets.join(", "));
     println!("  partitions:   {}", partitions.join(", "));
     println!("  server flows: {}", flows.join(", "));
+    println!("  aggregators:  {}", aggregators.join(", "));
     println!("  availability: {}", availability.join(", "));
     println!("  cost models:  {}", cost_models.join(", "));
     Ok(())

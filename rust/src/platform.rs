@@ -333,7 +333,11 @@ impl Platform {
     /// [`crate::simnet`]). Unknown availability / cost-model names fail
     /// here (fast), before queueing. The job's [`Report`] is the
     /// projection of the final [`SimReport`]; per-round participation,
-    /// dropout and staleness live in the job's tracker.
+    /// dropout and staleness live in the job's tracker. The simulation
+    /// polls [`JobCtx::cancelled`] at every round boundary, so
+    /// [`JobHandle::cancel`] stops a running sim instead of letting it
+    /// run to completion; the rounds finished before the cancel stay in
+    /// the tracker.
     pub fn submit_sim(&self, cfg: Config) -> Result<JobHandle> {
         cfg.validate()?;
         registry::with_global(|r| {
@@ -359,8 +363,7 @@ impl Platform {
             rounds,
             tracker,
             Box::new(move |ctx| {
-                let mut net = SimNet::with_tracker(&cfg, ctx.tracker())?;
-                let sim = net.run()?;
+                let sim = run_sim_job(&cfg, ctx)?;
                 let report = sim.to_report();
                 ctx.tracker().finish()?;
                 Ok(report)
@@ -440,6 +443,22 @@ impl Drop for Platform {
             let _ = h.join();
         }
     }
+}
+
+/// The body every SimNet job runs: simulate with the job's cancellation
+/// probe wired to the aggregation boundaries, and translate a cancelled
+/// run into the error `JobState::finish` maps to `JobStatus::Cancelled`
+/// (the partial rounds stay readable in the job's tracker).
+fn run_sim_job(cfg: &Config, ctx: &JobCtx) -> Result<SimReport> {
+    let mut net = SimNet::with_tracker(cfg, ctx.tracker())?;
+    let sim = net.run_cancellable(&|| ctx.cancelled())?;
+    if sim.cancelled {
+        return Err(Error::Runtime(format!(
+            "sim job cancelled at round {}/{}",
+            sim.rounds, cfg.rounds
+        )));
+    }
+    Ok(sim)
 }
 
 /// The body `Platform::submit` queues: a full session run with per-round
@@ -683,8 +702,7 @@ impl SimSweep {
                 rounds,
                 tracker,
                 Box::new(move |ctx| {
-                    let mut net = SimNet::with_tracker(&cfg, ctx.tracker())?;
-                    let sim = net.run()?;
+                    let sim = run_sim_job(&cfg, ctx)?;
                     let report = sim.to_report();
                     *slot_w.lock().unwrap() = Some(sim);
                     Ok(report)
@@ -1026,6 +1044,29 @@ mod tests {
         assert_eq!(report.rounds, 5);
         assert!(report.final_accuracy > 0.0);
         assert!(report.avg_round_ms > 0.0);
+    }
+
+    #[test]
+    fn sim_jobs_cancel_at_round_boundaries() {
+        let platform = Platform::new(1);
+        let mut cfg = small_sim_config();
+        // Big enough that cancellation lands mid-run on any machine, yet
+        // bounded: a broken probe fails the assertions, not the suite.
+        cfg.rounds = 200_000;
+        cfg.num_clients = 2_000;
+        let h = platform.submit_sim(cfg).unwrap();
+        assert_eq!(h.wait_running(), JobStatus::Running);
+        // Let a few rounds land so the partial tracker is observable.
+        while h.tracker().num_rounds() < 5 && !h.status().is_terminal() {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        h.cancel();
+        assert_eq!(h.wait(), JobStatus::Cancelled);
+        let done = h.tracker().num_rounds();
+        assert!(done >= 5, "partial rounds stay in the tracker");
+        assert!(done < 200_000, "cancel must interrupt the run");
+        let err = h.join().unwrap_err().to_string();
+        assert!(err.contains("cancelled"), "{err}");
     }
 
     #[test]

@@ -30,6 +30,7 @@
 use std::collections::BTreeMap;
 use std::sync::{Arc, OnceLock, RwLock};
 
+use crate::aggregate::{AggContext, Aggregator, AggregatorBuilder};
 use crate::config::{Config, Partition};
 use crate::coordinator::ClientFlowFactory;
 use crate::data::registry::DataSource;
@@ -80,6 +81,7 @@ pub struct ComponentRegistry {
     server_flows: BTreeMap<String, ServerFlowBuilder>,
     availability: BTreeMap<String, AvailabilityBuilder>,
     cost_models: BTreeMap<String, CostModelBuilder>,
+    aggregators: BTreeMap<String, AggregatorBuilder>,
 }
 
 fn unknown(kind: &str, name: &str, have: Vec<&String>) -> Error {
@@ -98,6 +100,7 @@ impl ComponentRegistry {
     /// A registry pre-populated with every built-in component.
     pub fn with_builtins() -> Self {
         let mut reg = Self::new();
+        crate::aggregate::register_builtins(&mut reg);
         crate::algorithms::register_builtins(&mut reg);
         crate::data::register_builtins(&mut reg);
         crate::flow::register_builtins(&mut reg);
@@ -139,6 +142,12 @@ impl ComponentRegistry {
     /// Register (or replace) a SimNet cost model under `name`.
     pub fn register_cost_model(&mut self, name: &str, b: CostModelBuilder) {
         self.cost_models.insert(name.to_string(), b);
+    }
+
+    /// Register (or replace) a streaming aggregator under `name`
+    /// (selected via [`crate::flow::ServerFlow::aggregator_name`]).
+    pub fn register_aggregator(&mut self, name: &str, b: AggregatorBuilder) {
+        self.aggregators.insert(name.to_string(), b);
     }
 
     // ------------------------------------------------------------ lookup
@@ -237,6 +246,28 @@ impl ComponentRegistry {
                 self.cost_models.keys().collect(),
             )),
         }
+    }
+
+    /// Instantiate a registered aggregator by name for one round's
+    /// reduction context.
+    pub fn aggregator(
+        &self,
+        name: &str,
+        ctx: &AggContext,
+    ) -> Result<Box<dyn Aggregator>> {
+        match self.aggregators.get(name) {
+            Some(b) => b(ctx),
+            None => Err(unknown(
+                "aggregator",
+                name,
+                self.aggregators.keys().collect(),
+            )),
+        }
+    }
+
+    /// Registered aggregator names.
+    pub fn aggregator_names(&self) -> Vec<String> {
+        self.aggregators.keys().cloned().collect()
     }
 
     /// Registered names per component kind:
@@ -348,6 +379,24 @@ mod tests {
         );
         let got = reg.dataset("tiny", &Config::default()).unwrap();
         assert_eq!(got.num_clients(), 4);
+    }
+
+    #[test]
+    fn builtin_aggregators_resolve_by_name() {
+        use crate::model::ParamVec;
+        let reg = ComponentRegistry::with_builtins();
+        let names = reg.aggregator_names();
+        for a in ["mean", "backbone"] {
+            assert!(names.iter().any(|n| n == a), "missing aggregator {a}");
+        }
+        let ctx = AggContext::new(Arc::new(ParamVec::zeros(4)));
+        assert_eq!(reg.aggregator("mean", &ctx).unwrap().name(), "mean");
+        assert_eq!(
+            reg.aggregator("backbone", &ctx).unwrap().name(),
+            "backbone"
+        );
+        let err = reg.aggregator("median", &ctx).unwrap_err().to_string();
+        assert!(err.contains("mean"), "{err} should list registered names");
     }
 
     #[test]

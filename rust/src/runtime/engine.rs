@@ -274,7 +274,31 @@ impl Engine {
         Ok((Self::scalar1(&outs[0])?, Self::scalar1(&outs[1])?))
     }
 
-    /// Weighted aggregation via the L1 Pallas kernel.
+    /// Streaming accumulator entry point: a registered
+    /// [`crate::aggregate::Aggregator`] (`"mean"`, `"backbone"`, or any
+    /// custom registration) validated against the model's parameter
+    /// count. Updates fold in one at a time — O(threads·P) memory —
+    /// where [`Engine::aggregate`] needs every dense vector materialized
+    /// up front.
+    pub fn accumulator(
+        &self,
+        model: &str,
+        name: &str,
+        ctx: &crate::aggregate::AggContext,
+    ) -> Result<Box<dyn crate::aggregate::Aggregator>> {
+        let meta = self.meta(model)?;
+        if ctx.global.len() != meta.param_count {
+            return Err(Error::Runtime(format!(
+                "accumulator: global of len {} != P {}",
+                ctx.global.len(),
+                meta.param_count
+            )));
+        }
+        crate::registry::with_global(|r| r.aggregator(name, ctx))
+    }
+
+    /// Weighted aggregation via the L1 Pallas kernel (legacy batch path;
+    /// prefer [`Engine::accumulator`] for large cohorts).
     ///
     /// Handles any cohort size: ≤K in one call (zero-padded), larger
     /// cohorts in chunks whose partial sums are combined with weight 1.

@@ -19,6 +19,7 @@
 
 use std::sync::Arc;
 
+use crate::aggregate::FedBuffBuffer;
 use crate::config::{Config, SimMode};
 use crate::coordinator::Server;
 use crate::data::partition::build_clients;
@@ -73,6 +74,10 @@ pub struct SimReport {
     /// True when every configured round actually aggregated; false for
     /// truncated runs (e.g. a starved async engine broke out early).
     pub converged: bool,
+    /// True when a cancellation probe stopped the run at a round
+    /// boundary (see [`SimNet::run_cancellable`]); the report covers the
+    /// rounds that completed before the cancel.
+    pub cancelled: bool,
 }
 
 impl SimReport {
@@ -145,6 +150,8 @@ pub struct SimNet {
     total_dropped: u64,
     staleness_sum: f64,
     staleness_n: u64,
+    /// Set when a cancellation probe fired at a round boundary.
+    cancelled: bool,
 }
 
 impl SimNet {
@@ -229,6 +236,7 @@ impl SimNet {
             total_dropped: 0,
             staleness_sum: 0.0,
             staleness_n: 0,
+            cancelled: false,
             cfg: cfg.clone(),
         })
     }
@@ -253,9 +261,21 @@ impl SimNet {
 
     /// Run the configured engine to completion.
     pub fn run(&mut self) -> Result<SimReport> {
+        self.run_cancellable(&|| false)
+    }
+
+    /// Run, polling `cancel` at every aggregation boundary. A triggered
+    /// probe stops the simulation, releases every client, and returns a
+    /// partial report with [`SimReport::cancelled`] set — this is what
+    /// [`crate::platform::Platform::submit_sim`] jobs poll
+    /// `JobCtx::cancelled` through.
+    pub fn run_cancellable(
+        &mut self,
+        cancel: &dyn Fn() -> bool,
+    ) -> Result<SimReport> {
         match self.cfg.sim.mode {
-            SimMode::Sync => self.run_sync(),
-            SimMode::Async => self.run_async(),
+            SimMode::Sync => self.run_sync(cancel),
+            SimMode::Async => self.run_async(cancel),
         }
     }
 
@@ -382,7 +402,7 @@ impl SimNet {
 
     // ------------------------------------------------------ sync engine
 
-    fn run_sync(&mut self) -> Result<SimReport> {
+    fn run_sync(&mut self, cancel: &dyn Fn() -> bool) -> Result<SimReport> {
         let sw = Stopwatch::start();
         let rounds = self.cfg.rounds;
         let k_target = self.cfg.clients_per_round;
@@ -510,6 +530,10 @@ impl SimNet {
                 rounds_done += 1;
                 makespan = now;
                 if rounds_done < rounds {
+                    if cancel() {
+                        self.cancelled = true;
+                        break;
+                    }
                     self.queue
                         .push(now, EventKind::RoundStart { round: round + 1 });
                 }
@@ -521,7 +545,7 @@ impl SimNet {
 
     // ----------------------------------------------------- async engine
 
-    fn run_async(&mut self) -> Result<SimReport> {
+    fn run_async(&mut self, cancel: &dyn Fn() -> bool) -> Result<SimReport> {
         let sw = Stopwatch::start();
         let rounds = self.cfg.rounds;
         let k_target = self.cfg.clients_per_round.max(1);
@@ -535,12 +559,13 @@ impl SimNet {
         } else {
             2 * k_target
         };
-        let alpha = self.cfg.sim.staleness_alpha;
         self.init_population();
 
         let mut active = 0usize;
-        let mut buffer: Vec<f64> = Vec::new();
-        let mut agg_staleness = 0.0f64;
+        // FedBuff window from the aggregation plane: staleness discounts
+        // become aggregator weights. Surrogate mode keeps the weight
+        // ledger only; plugging a real Aggregator streams updates too.
+        let mut buffer = FedBuffBuffer::surrogate(self.cfg.sim.staleness_alpha);
         let mut agg_dropped = 0usize;
         let mut t_last = 0.0f64;
         let mut makespan = 0.0f64;
@@ -571,8 +596,7 @@ impl SimNet {
                     self.release(client);
                     active -= 1;
                     self.total_reported += 1;
-                    buffer.push((1.0 + staleness).powf(-alpha));
-                    agg_staleness += staleness;
+                    buffer.push(staleness, None)?;
                     self.staleness_sum += staleness;
                     self.staleness_n += 1;
                     if buffer.len() >= buffer_target {
@@ -581,28 +605,29 @@ impl SimNet {
                         // so sync/async progress is comparable.
                         let round = self.version;
                         self.version += 1;
-                        let sum_w: f64 = buffer.iter().sum();
-                        self.progress += sum_w / k_target as f64;
+                        self.progress += buffer.total_weight() / k_target as f64;
                         let (train_loss, acc) = self.backend_metrics(round)?;
-                        let avg_staleness = agg_staleness / buffer.len() as f64;
+                        let window = buffer.flush()?;
                         // Async "selected" = selections *resolved* in
                         // this window (reports + drops), so the
                         // reported ≤ selected invariant holds per round.
                         self.record_round(
                             round,
                             t - t_last,
-                            buffer.len() + agg_dropped,
-                            buffer.len(),
+                            window.arrivals + agg_dropped,
+                            window.arrivals,
                             agg_dropped,
-                            avg_staleness,
+                            window.avg_staleness,
                             train_loss,
                             acc,
                         );
-                        buffer.clear();
-                        agg_staleness = 0.0;
                         agg_dropped = 0;
                         t_last = t;
                         makespan = t;
+                        if self.version < rounds && cancel() {
+                            self.cancelled = true;
+                            break;
+                        }
                     }
                 }
                 EventKind::Dropout { client, epoch } => {
@@ -725,6 +750,7 @@ impl SimNet {
             wall_ms,
             converged: self.tracker.num_rounds() == self.cfg.rounds
                 && self.tracker.num_rounds() > 0,
+            cancelled: self.cancelled,
         }
     }
 }
@@ -830,6 +856,39 @@ mod tests {
             greedy < slowest,
             "greedyada {greedy} should beat slowest {slowest}"
         );
+    }
+
+    #[test]
+    fn cancellation_probe_stops_at_round_boundaries() {
+        for mode in [SimMode::Sync, SimMode::Async] {
+            let cfg = sim_cfg(mode);
+            let mut net = SimNet::from_config(&cfg).unwrap();
+            let tracker = net.tracker();
+            let report = net
+                .run_cancellable(&|| tracker.num_rounds() >= 3)
+                .unwrap();
+            assert!(report.cancelled, "{mode:?} run must report the cancel");
+            assert!(!report.converged);
+            assert_eq!(report.rounds, 3, "{mode:?} stops at the boundary");
+            // Teardown still ran: nobody is stuck mid-round.
+            for c in 0..net.num_clients() {
+                let phase = net.client_phase(c);
+                assert!(
+                    matches!(phase, ClientPhase::Available | ClientPhase::Offline),
+                    "client {c} stuck in {phase:?} after cancelled {mode:?} run"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn uncancelled_runs_report_cancelled_false() {
+        let report = SimNet::from_config(&sim_cfg(SimMode::Sync))
+            .unwrap()
+            .run()
+            .unwrap();
+        assert!(!report.cancelled);
+        assert!(report.converged);
     }
 
     #[test]

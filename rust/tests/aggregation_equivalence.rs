@@ -1,0 +1,314 @@
+//! Aggregation-plane equivalence: the streaming [`Aggregator`] must
+//! reproduce the legacy batch reduction — what `ServerFlow::aggregate`
+//! computed through the L1 kernel over fully materialized dense vectors
+//! — within 1e-6, for every built-in algorithm's update shape and at
+//! cohort sizes on both sides of the chunk-parallel threshold.
+//!
+//! The batch oracle is [`easyfl::aggregate::batch_weighted_mean`]
+//! (normalize weights → one weighted sum); an artifact-gated case checks
+//! the kernel itself agrees when the PJRT runtime is available.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use easyfl::aggregate::{
+    batch_weighted_mean, AggContext, Aggregator, MeanAggregator,
+};
+use easyfl::algorithms::stc_compress;
+use easyfl::flow::{DefaultServerFlow, ServerFlow, Update};
+use easyfl::model::ParamVec;
+use easyfl::registry;
+use easyfl::runtime::Engine;
+use easyfl::util::prop;
+use easyfl::util::rng::Rng;
+
+fn artifacts_ready() -> bool {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts/manifest.json")
+        .exists()
+}
+
+/// Cohort sizes straddling the chunk-parallel threshold used below (8).
+const COHORTS: [usize; 5] = [1, 3, 7, 33, 120];
+const PARALLEL_THRESHOLD: usize = 8;
+/// Large enough that the chunk-parallel path actually engages
+/// (vectors under `MIN_PARALLEL_LEN` always reduce sequentially).
+const P_LARGE: usize = 5000;
+
+fn random_params(rng: &mut Rng, p: usize) -> ParamVec {
+    ParamVec((0..p).map(|_| (rng.uniform() as f32) * 2.0 - 1.0).collect())
+}
+
+/// A streaming aggregator configured so cohorts ≥ 8 go chunk-parallel.
+fn streaming(global: Arc<ParamVec>, expect: usize) -> Box<dyn Aggregator> {
+    let mut ctx = AggContext::new(global);
+    ctx.expect_updates = expect;
+    ctx.parallel_threshold = PARALLEL_THRESHOLD;
+    ctx.threads = 4;
+    Box::new(MeanAggregator::from_ctx(&ctx))
+}
+
+fn assert_close(stream: &ParamVec, batch: &ParamVec, what: &str) -> Result<(), String> {
+    if stream.len() != batch.len() {
+        return Err(format!("{what}: length mismatch"));
+    }
+    for (i, (s, b)) in stream.iter().zip(batch.iter()).enumerate() {
+        if (s - b).abs() > 1e-6 {
+            return Err(format!(
+                "{what}: coordinate {i} diverges: streaming {s} vs batch {b}"
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_dense_streaming_matches_batch_aggregate() {
+    // FedAvg / FedProx shape: dense uploads, sample-count weights.
+    prop::check("dense-equivalence", 0xA66, 6, |rng| {
+        for &k in &COHORTS {
+            let p = if k >= PARALLEL_THRESHOLD { P_LARGE } else { 64 };
+            let global = Arc::new(random_params(rng, p));
+            let cohort: Vec<(ParamVec, f64)> = (0..k)
+                .map(|_| (random_params(rng, p), 1.0 + rng.below(100) as f64))
+                .collect();
+
+            let mut agg = streaming(global, k);
+            for (u, w) in &cohort {
+                agg.add(&Update::Dense(u.clone()), *w)
+                    .map_err(|e| e.to_string())?;
+            }
+            let stream = agg.finish().map_err(|e| e.to_string())?;
+
+            let refs: Vec<(&[f32], f64)> =
+                cohort.iter().map(|(u, w)| (&u.0[..], *w)).collect();
+            let batch = batch_weighted_mean(&refs).map_err(|e| e.to_string())?;
+            assert_close(&stream, &batch, &format!("dense cohort {k}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sparse_ternary_streaming_matches_batch_aggregate() {
+    // STC shape: sparse ternary uploads, applied index-wise by the
+    // streaming plane vs fully materialized through `to_dense` for the
+    // batch oracle.
+    prop::check("stc-equivalence", 0x57C, 6, |rng| {
+        for &k in &[1usize, 5, 40] {
+            let p = if k >= PARALLEL_THRESHOLD { P_LARGE } else { 100 };
+            let global = Arc::new(random_params(rng, p));
+            let updates: Vec<(Update, f64)> = (0..k)
+                .map(|_| {
+                    let local = random_params(rng, p);
+                    let sparsity = 0.01 + rng.uniform() * 0.2;
+                    (
+                        stc_compress(&local, &global, sparsity),
+                        1.0 + rng.below(50) as f64,
+                    )
+                })
+                .collect();
+
+            let mut agg = streaming(global.clone(), k);
+            for (u, w) in &updates {
+                agg.add(u, *w).map_err(|e| e.to_string())?;
+            }
+            let stream = agg.finish().map_err(|e| e.to_string())?;
+
+            let dense: Vec<(ParamVec, f64)> = updates
+                .iter()
+                .map(|(u, w)| Ok((u.to_dense(&global)?, *w)))
+                .collect::<easyfl::Result<_>>()
+                .map_err(|e| e.to_string())?;
+            let refs: Vec<(&[f32], f64)> =
+                dense.iter().map(|(u, w)| (&u.0[..], *w)).collect();
+            let batch = batch_weighted_mean(&refs).map_err(|e| e.to_string())?;
+            assert_close(&stream, &batch, &format!("stc cohort {k}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mixed_dense_and_sparse_cohorts_match() {
+    prop::check("mixed-equivalence", 0x313D, 6, |rng| {
+        let p = 200;
+        let global = Arc::new(random_params(rng, p));
+        let k = 24;
+        let updates: Vec<(Update, f64)> = (0..k)
+            .map(|i| {
+                let local = random_params(rng, p);
+                let w = 1.0 + rng.below(20) as f64;
+                if i % 3 == 0 {
+                    (stc_compress(&local, &global, 0.1), w)
+                } else {
+                    (Update::Dense(local), w)
+                }
+            })
+            .collect();
+
+        let mut agg = streaming(global.clone(), k);
+        for (u, w) in &updates {
+            agg.add(u, *w).map_err(|e| e.to_string())?;
+        }
+        let stream = agg.finish().map_err(|e| e.to_string())?;
+
+        let dense: Vec<(ParamVec, f64)> = updates
+            .iter()
+            .map(|(u, w)| Ok((u.to_dense(&global)?, *w)))
+            .collect::<easyfl::Result<_>>()
+            .map_err(|e| e.to_string())?;
+        let refs: Vec<(&[f32], f64)> =
+            dense.iter().map(|(u, w)| (&u.0[..], *w)).collect();
+        let batch = batch_weighted_mean(&refs).map_err(|e| e.to_string())?;
+        assert_close(&stream, &batch, "mixed cohort")
+    });
+}
+
+#[test]
+fn prop_fedreid_backbone_matches_batch_on_the_federated_slice() {
+    // FedReID shape: the backbone slice must match the batch mean; the
+    // protected head tail carries the global's own head (the documented
+    // migration from the old average-then-ignore behavior).
+    prop::check("fedreid-equivalence", 0xF00D, 6, |rng| {
+        for &k in &[2usize, 9, 40] {
+            let p = 150;
+            let head = 10;
+            let split = p - head;
+            let global = Arc::new(random_params(rng, p));
+            let ctx = AggContext::new(global.clone()).protected_tail(head);
+            let mut agg = registry::with_global(|r| r.aggregator("backbone", &ctx))
+                .map_err(|e| e.to_string())?;
+            let cohort: Vec<(ParamVec, f64)> = (0..k)
+                .map(|_| (random_params(rng, p), 1.0 + rng.below(30) as f64))
+                .collect();
+            for (u, w) in &cohort {
+                agg.add(&Update::Dense(u.clone()), *w)
+                    .map_err(|e| e.to_string())?;
+            }
+            let stream = agg.finish().map_err(|e| e.to_string())?;
+
+            let refs: Vec<(&[f32], f64)> =
+                cohort.iter().map(|(u, w)| (&u.0[..], *w)).collect();
+            let batch = batch_weighted_mean(&refs).map_err(|e| e.to_string())?;
+            assert_close(
+                &ParamVec(stream[..split].to_vec()),
+                &ParamVec(batch[..split].to_vec()),
+                &format!("fedreid backbone, cohort {k}"),
+            )?;
+            if stream[split..] != global[split..] {
+                return Err("protected head must equal the global head".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+#[allow(deprecated)]
+fn deprecated_batch_shim_matches_the_streaming_plane() {
+    let mut rng = Rng::new(0xDE9);
+    let engine = Engine::new(std::path::Path::new("/nonexistent")).unwrap();
+    let p = 80;
+    let global = Arc::new(random_params(&mut rng, p));
+    let cohort: Vec<(ParamVec, f64)> = (0..17)
+        .map(|_| (random_params(&mut rng, p), 1.0 + rng.below(10) as f64))
+        .collect();
+
+    let mut flow = DefaultServerFlow;
+    let legacy = flow.aggregate(&engine, "mlp", &cohort).unwrap();
+
+    let ctx = AggContext::new(global).expect_updates(cohort.len());
+    let mut agg = flow.make_aggregator(&engine, "mlp", ctx).unwrap();
+    for (u, w) in &cohort {
+        agg.add(&Update::Dense(u.clone()), *w).unwrap();
+    }
+    let stream = agg.finish().unwrap();
+    assert_close(&stream, &legacy, "deprecated shim").unwrap();
+}
+
+#[test]
+fn engine_accumulator_validates_against_model_metadata() {
+    if !artifacts_ready() {
+        return;
+    }
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let engine = Engine::new(&dir).unwrap();
+    let meta = engine.meta("mlp").unwrap();
+    let p = meta.param_count;
+
+    // Wrong length is rejected up front.
+    let bad = AggContext::new(Arc::new(ParamVec::zeros(p + 1)));
+    assert!(engine.accumulator("mlp", "mean", &bad).is_err());
+
+    // The kernel and the streaming plane agree on a small cohort.
+    let mut rng = Rng::new(7);
+    let cohort: Vec<(ParamVec, f64)> = (0..5)
+        .map(|_| (random_params(&mut rng, p), 1.0 + rng.below(10) as f64))
+        .collect();
+    let ctx = AggContext::new(Arc::new(ParamVec::zeros(p)))
+        .expect_updates(cohort.len());
+    let mut agg = engine.accumulator("mlp", "mean", &ctx).unwrap();
+    for (u, w) in &cohort {
+        agg.add(&Update::Dense(u.clone()), *w).unwrap();
+    }
+    let stream = agg.finish().unwrap();
+
+    let total: f64 = cohort.iter().map(|(_, w)| w).sum();
+    let vectors: Vec<&[f32]> = cohort.iter().map(|(u, _)| &u.0[..]).collect();
+    let weights: Vec<f32> =
+        cohort.iter().map(|(_, w)| (w / total) as f32).collect();
+    let kernel = engine.aggregate("mlp", &vectors, &weights).unwrap();
+    assert_close(&stream, &kernel, "kernel vs streaming").unwrap();
+}
+
+#[test]
+fn aggregator_registry_supports_custom_reductions() {
+    // A custom aggregator registers like any other component: here, an
+    // unweighted coordinate-wise max (a debugging reduction).
+    struct MaxAggregator {
+        acc: Vec<f32>,
+        count: usize,
+    }
+    impl Aggregator for MaxAggregator {
+        fn name(&self) -> &'static str {
+            "max"
+        }
+        fn add(&mut self, update: &Update, _weight: f64) -> easyfl::Result<()> {
+            if let Update::Dense(p) = update {
+                for (a, v) in self.acc.iter_mut().zip(p.iter()) {
+                    *a = a.max(*v);
+                }
+                self.count += 1;
+                Ok(())
+            } else {
+                Err(easyfl::Error::Runtime("max: dense only".into()))
+            }
+        }
+        fn count(&self) -> usize {
+            self.count
+        }
+        fn total_weight(&self) -> f64 {
+            self.count as f64
+        }
+        fn finish(&mut self) -> easyfl::Result<ParamVec> {
+            Ok(ParamVec(std::mem::take(&mut self.acc)))
+        }
+    }
+    registry::register(|r| {
+        r.register_aggregator(
+            "max",
+            Arc::new(|ctx| {
+                Ok(Box::new(MaxAggregator {
+                    acc: vec![f32::NEG_INFINITY; ctx.global.len()],
+                    count: 0,
+                }) as Box<dyn Aggregator>)
+            }),
+        )
+    });
+    let ctx = AggContext::new(Arc::new(ParamVec::zeros(2)));
+    let mut agg = registry::with_global(|r| r.aggregator("max", &ctx)).unwrap();
+    agg.add(&Update::Dense(ParamVec(vec![1.0, 5.0])), 1.0).unwrap();
+    agg.add(&Update::Dense(ParamVec(vec![3.0, 2.0])), 1.0).unwrap();
+    assert_eq!(agg.finish().unwrap().0, vec![3.0, 5.0]);
+}
