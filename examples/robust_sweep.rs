@@ -1,0 +1,142 @@
+//! robust_sweep — Byzantine resilience grid at toy scale.
+//!
+//! Sweeps the registered robust aggregators against a configurable
+//! adversary over a SimNet federation and prints the resilience table
+//! (final accuracy, honest-envelope deviation, makespan per cell). CI
+//! runs this as the robust-grid smoke test and *asserts* the headline
+//! result: under sign-flip adversaries the trimmed mean must beat the
+//! plain mean on final surrogate accuracy.
+//!
+//! ```text
+//! cargo run --release --example robust_sweep -- \
+//!     --clients 300 --rounds 12 --adversary sign-flip \
+//!     --adv-fracs 0,0.3 --budget-ms 30000
+//! ```
+
+use easyfl::config::{Config, DatasetKind, Partition};
+use easyfl::platform::{Platform, RobustSweep};
+use easyfl::util::args::{usage, Args, Opt};
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn opts() -> Vec<Opt> {
+    vec![
+        Opt { name: "clients", help: "federation population", default: Some("300"), is_flag: false },
+        Opt { name: "rounds", help: "rounds to simulate per cell", default: Some("12"), is_flag: false },
+        Opt { name: "clients-per-round", help: "aggregation target K", default: Some("20"), is_flag: false },
+        Opt { name: "adversary", help: "sign-flip | scaled-noise(factor) | zero-update", default: Some("sign-flip"), is_flag: false },
+        Opt { name: "aggs", help: "comma list of aggregators", default: Some("mean,trimmed_mean,median,norm_clip"), is_flag: false },
+        Opt { name: "adv-fracs", help: "comma list of Byzantine fractions", default: Some("0,0.3"), is_flag: false },
+        Opt { name: "trim-frac", help: "trimmed_mean per-end trim fraction", default: Some("0.35"), is_flag: false },
+        Opt { name: "clip-norm", help: "norm_clip L2 threshold", default: Some("6"), is_flag: false },
+        Opt { name: "workers", help: "concurrent platform workers", default: Some("4"), is_flag: false },
+        Opt { name: "seed", help: "RNG seed", default: Some("42"), is_flag: false },
+        Opt { name: "budget-ms", help: "fail if wall time exceeds this (0 = off)", default: Some("0"), is_flag: false },
+        Opt { name: "help", help: "show help", default: None, is_flag: true },
+    ]
+}
+
+fn run() -> easyfl::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let opts = opts();
+    let a = Args::parse(&argv, &opts)?;
+    if a.has_flag("help") {
+        println!(
+            "{}",
+            usage("robust_sweep", "Byzantine resilience grid on SimNet.", &opts)
+        );
+        return Ok(());
+    }
+
+    let mut cfg = Config::for_dataset(DatasetKind::Cifar10);
+    cfg.num_clients = a.get_usize("clients")?;
+    cfg.rounds = a.get_usize("rounds")?;
+    cfg.clients_per_round = a.get_usize("clients-per-round")?;
+    cfg.partition = Partition::Dirichlet(0.5);
+    cfg.seed = a.get_usize("seed")? as u64;
+    cfg.sim.adversary = a.get("adversary").unwrap_or("sign-flip").into();
+    cfg.agg_trim_frac = a.get_f64("trim-frac")?;
+    cfg.agg_clip_norm = a.get_f64("clip-norm")?;
+    cfg.validate()?;
+
+    let aggs: Vec<String> = a
+        .get("aggs")
+        .unwrap_or("mean,trimmed_mean,median,norm_clip")
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    let agg_refs: Vec<&str> = aggs.iter().map(String::as_str).collect();
+    let fracs = a
+        .get("adv-fracs")
+        .unwrap_or("0,0.3")
+        .split(',')
+        .map(|s| {
+            s.trim().parse::<f64>().map_err(|_| {
+                easyfl::Error::Config(format!("bad adversary fraction {s:?}"))
+            })
+        })
+        .collect::<easyfl::Result<Vec<f64>>>()?;
+
+    println!(
+        "robust sweep: {} × {:?} on {} clients × {} rounds ({})...\n",
+        aggs.join(","),
+        fracs,
+        cfg.num_clients,
+        cfg.rounds,
+        cfg.sim.adversary
+    );
+    let sw = std::time::Instant::now();
+    let platform = Platform::new(a.get_usize("workers")?);
+    let report = RobustSweep::new(cfg)
+        .aggregators(&agg_refs)
+        .fractions(&fracs)
+        .run(&platform)?;
+    let wall_ms = sw.elapsed().as_secs_f64() * 1000.0;
+    print!("{}", report.to_table());
+    println!("\n{} cells in {wall_ms:.0} ms", report.rows.len());
+
+    // The smoke assertion: robustness must be visible in the grid.
+    let attacked = fracs.iter().copied().find(|f| *f > 0.0);
+    if let (Some(frac), true, true) = (
+        attacked,
+        agg_refs.contains(&"mean"),
+        agg_refs.contains(&"trimmed_mean"),
+    ) {
+        let mean = report.accuracy_of("mean", frac).ok_or_else(|| {
+            easyfl::Error::Runtime("mean cell missing from sweep".into())
+        })?;
+        let trimmed =
+            report.accuracy_of("trimmed_mean", frac).ok_or_else(|| {
+                easyfl::Error::Runtime(
+                    "trimmed_mean cell missing from sweep".into(),
+                )
+            })?;
+        if trimmed <= mean {
+            return Err(easyfl::Error::Runtime(format!(
+                "robustness regression: trimmed_mean acc {trimmed:.4} !> \
+                 mean acc {mean:.4} at adversary fraction {frac}"
+            )));
+        }
+        println!(
+            "ok: trimmed_mean {:.2}% > mean {:.2}% at {:.0}% {} adversaries",
+            trimmed * 100.0,
+            mean * 100.0,
+            frac * 100.0,
+            report.rows[0].adversary
+        );
+    }
+
+    let budget_ms = a.get_f64("budget-ms")?;
+    if budget_ms > 0.0 && wall_ms > budget_ms {
+        return Err(easyfl::Error::Runtime(format!(
+            "sweep took {wall_ms:.0} ms, over the {budget_ms:.0} ms budget"
+        )));
+    }
+    Ok(())
+}

@@ -17,17 +17,25 @@
 //! * [`FedBuffBuffer`] — FedBuff's staleness discount expressed as
 //!   aggregator weights, shared by SimNet's async engine and any
 //!   buffered-asynchronous server flow.
+//! * [`robust`] — Byzantine-robust reductions (`"trimmed_mean"`,
+//!   `"median"`, `"norm_clip"`), selectable per config via `Config.agg`
+//!   so any algorithm hardens against hostile uploads without a new flow.
 //!
 //! Aggregators are registry-backed: algorithms pick theirs by name
 //! (`"mean"`, `"backbone"`, or any custom registration) through
 //! [`crate::flow::ServerFlow::make_aggregator`]. Peak memory is
-//! O(threads · P) instead of O(cohort · P).
+//! O(threads · P) instead of O(cohort · P) — except the rank-based
+//! robust reductions, which intrinsically buffer the cohort.
 
 pub mod masked;
 pub mod mean;
+pub mod robust;
 
 pub use masked::SliceMaskedAggregator;
 pub use mean::MeanAggregator;
+pub use robust::{
+    CoordinateMedianAggregator, NormClipAggregator, TrimmedMeanAggregator,
+};
 
 use std::sync::Arc;
 
@@ -76,6 +84,15 @@ pub struct AggContext {
     /// Trailing coordinates excluded from aggregation (FedReID's
     /// personal head). 0 for full-vector aggregators.
     pub protected_tail: usize,
+    /// Registered-aggregator name override (`Config.agg`): when set, the
+    /// default [`crate::flow::ServerFlow::make_aggregator`] resolves this
+    /// name instead of the flow's own `aggregator_name` — the pure-config
+    /// path to Byzantine-robust reductions.
+    pub agg_override: Option<String>,
+    /// Per-end trim fraction for `"trimmed_mean"`, in [0, 0.5).
+    pub trim_frac: f64,
+    /// L2 delta-norm threshold for `"norm_clip"` (> 0, finite).
+    pub clip_norm: f64,
 }
 
 impl AggContext {
@@ -86,6 +103,9 @@ impl AggContext {
             parallel_threshold: 64,
             threads: 0,
             protected_tail: 0,
+            agg_override: None,
+            trim_frac: 0.1,
+            clip_norm: 10.0,
         }
     }
 
@@ -94,6 +114,9 @@ impl AggContext {
         let mut ctx = AggContext::new(global);
         ctx.parallel_threshold = cfg.agg_parallel_threshold;
         ctx.threads = cfg.agg_threads;
+        ctx.agg_override = cfg.agg.clone();
+        ctx.trim_frac = cfg.agg_trim_frac;
+        ctx.clip_norm = cfg.agg_clip_norm;
         ctx
     }
 
@@ -154,6 +177,27 @@ pub(crate) fn register_builtins(reg: &mut crate::registry::ComponentRegistry) {
         "backbone",
         Arc::new(|ctx| {
             Ok(Box::new(SliceMaskedAggregator::from_ctx(ctx))
+                as Box<dyn Aggregator>)
+        }),
+    );
+    reg.register_aggregator(
+        "trimmed_mean",
+        Arc::new(|ctx| {
+            Ok(Box::new(TrimmedMeanAggregator::from_ctx(ctx)?)
+                as Box<dyn Aggregator>)
+        }),
+    );
+    reg.register_aggregator(
+        "median",
+        Arc::new(|ctx| {
+            Ok(Box::new(CoordinateMedianAggregator::from_ctx(ctx))
+                as Box<dyn Aggregator>)
+        }),
+    );
+    reg.register_aggregator(
+        "norm_clip",
+        Arc::new(|ctx| {
+            Ok(Box::new(NormClipAggregator::from_ctx(ctx)?)
                 as Box<dyn Aggregator>)
         }),
     );

@@ -1,0 +1,576 @@
+//! Byzantine-robust aggregation (the `"trimmed_mean"`, `"median"` and
+//! `"norm_clip"` registry entries).
+//!
+//! The weighted mean is a single-point-of-failure reduction: one hostile
+//! client shifting its update by `n·Δ` moves the aggregate by `Δ`. The
+//! three accumulators here bound that influence:
+//!
+//! * [`TrimmedMeanAggregator`] — per coordinate, drop the `⌊f·n⌋` lowest
+//!   and highest values before the weighted mean. Tolerates up to `⌊f·n⌋`
+//!   arbitrarily corrupted updates per coordinate; `f = 0` degenerates to
+//!   the plain weighted mean bit-for-bit on dense cohorts.
+//! * [`CoordinateMedianAggregator`] — per coordinate, the weighted lower
+//!   median. As long as corrupted weight stays below half the total, the
+//!   output is pinned inside the honest clients' per-coordinate envelope.
+//! * [`NormClipAggregator`] — rescale each update's delta from the global
+//!   model to L2 norm ≤ `clip_norm`, then reduce with the streaming mean.
+//!   Updates already under the threshold pass through *unchanged* (the
+//!   reduction is bit-identical to `"mean"`), so clipping costs honest
+//!   clients nothing while capping any single client's pull at
+//!   `clip_norm / Σw`.
+//!
+//! Order statistics need the whole cohort, so the trimmed mean and the
+//! median buffer decoded updates — O(cohort·P) memory, the intrinsic
+//! price of rank-based robustness (norm-clip stays O(P) streaming). Both
+//! reduce chunk-parallel over coordinate ranges for large vectors,
+//! element-wise independent and therefore bit-identical to the
+//! sequential path.
+//!
+//! All three are selectable per config: `cfg.agg = "trimmed_mean"` (with
+//! `cfg.agg_trim_frac` / `cfg.agg_clip_norm`) makes any algorithm
+//! Byzantine-robust without touching its flow.
+
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+use crate::flow::Update;
+use crate::model::ParamVec;
+
+use super::mean::{check_weight, MeanAggregator, MIN_PARALLEL_LEN};
+use super::{AggContext, Aggregator};
+
+/// Decoded-cohort buffer shared by the rank-based aggregators: every
+/// update is validated and materialized dense against the global model.
+struct UpdateBuffer {
+    global: Arc<ParamVec>,
+    /// (decoded dense update, raw weight), in arrival order.
+    rows: Vec<(Vec<f32>, f64)>,
+    total_weight: f64,
+    threads: usize,
+}
+
+impl UpdateBuffer {
+    fn from_ctx(ctx: &AggContext) -> UpdateBuffer {
+        let len = ctx.global.len();
+        let threads =
+            if ctx.use_parallel(len) { ctx.effective_threads() } else { 1 };
+        UpdateBuffer {
+            global: ctx.global.clone(),
+            rows: Vec::with_capacity(ctx.expect_updates),
+            total_weight: 0.0,
+            threads,
+        }
+    }
+
+    fn add(&mut self, update: &Update, weight: f64) -> Result<()> {
+        check_weight(weight)?;
+        let p = self.global.len();
+        let dense = match update {
+            Update::Dense(x) => {
+                if x.len() != p {
+                    return Err(Error::Runtime(format!(
+                        "aggregate: vector of len {} != P {p}",
+                        x.len()
+                    )));
+                }
+                x.0.clone()
+            }
+            Update::SparseTernary { .. } => update.to_dense(&self.global)?.0,
+            Update::Masked { .. } => {
+                return Err(Error::Runtime(
+                    "aggregate: masked update reached the aggregator; a \
+                     server plugin with a decryption stage must unmask \
+                     uploads first"
+                        .into(),
+                ))
+            }
+        };
+        self.rows.push((dense, weight));
+        self.total_weight += weight;
+        Ok(())
+    }
+
+    fn check_finish(&self) -> Result<()> {
+        if self.rows.is_empty() {
+            return Err(Error::Runtime("aggregate: empty cohort".into()));
+        }
+        if self.total_weight <= 0.0 {
+            return Err(Error::Runtime("aggregate: zero total weight".into()));
+        }
+        Ok(())
+    }
+
+    /// Run `reduce(offset, dst)` over the P coordinates, chunk-parallel
+    /// for large vectors. `reduce` must be element-wise independent so
+    /// the thread count never changes the result.
+    fn for_each_chunk(&self, out: &mut [f32], reduce: &(dyn Fn(usize, &mut [f32]) + Sync)) {
+        if self.threads <= 1 || out.len() < MIN_PARALLEL_LEN {
+            reduce(0, out);
+            return;
+        }
+        let chunk = out.len().div_ceil(self.threads);
+        std::thread::scope(|s| {
+            for (ci, dst) in out.chunks_mut(chunk).enumerate() {
+                s.spawn(move || reduce(ci * chunk, dst));
+            }
+        });
+    }
+
+    fn reset(&mut self) {
+        self.rows.clear();
+        self.total_weight = 0.0;
+    }
+}
+
+// ------------------------------------------------------- trimmed mean
+
+/// Per-coordinate trimmed weighted mean (the `"trimmed_mean"` entry).
+pub struct TrimmedMeanAggregator {
+    buf: UpdateBuffer,
+    /// Fraction trimmed from *each* end, in [0, 0.5).
+    trim_frac: f64,
+}
+
+impl TrimmedMeanAggregator {
+    /// Build from a construction context; `ctx.trim_frac` must be in
+    /// [0, 0.5) — trimming half the cohort from both ends leaves nothing.
+    pub fn from_ctx(ctx: &AggContext) -> Result<TrimmedMeanAggregator> {
+        if !(0.0..0.5).contains(&ctx.trim_frac) {
+            return Err(Error::Config(format!(
+                "trimmed_mean: trim_frac must be in [0, 0.5), got {}",
+                ctx.trim_frac
+            )));
+        }
+        Ok(TrimmedMeanAggregator {
+            buf: UpdateBuffer::from_ctx(ctx),
+            trim_frac: ctx.trim_frac,
+        })
+    }
+}
+
+impl Aggregator for TrimmedMeanAggregator {
+    fn name(&self) -> &'static str {
+        "trimmed_mean"
+    }
+
+    fn add(&mut self, update: &Update, weight: f64) -> Result<()> {
+        self.buf.add(update, weight)
+    }
+
+    fn count(&self) -> usize {
+        self.buf.rows.len()
+    }
+
+    fn total_weight(&self) -> f64 {
+        self.buf.total_weight
+    }
+
+    fn finish(&mut self) -> Result<ParamVec> {
+        self.buf.check_finish()?;
+        let n = self.buf.rows.len();
+        let k = (self.trim_frac * n as f64).floor() as usize;
+        // trim_frac < 0.5 guarantees 2k < n; keep the guard for direct
+        // construction with a hostile fraction.
+        if 2 * k >= n {
+            return Err(Error::Runtime(format!(
+                "trimmed_mean: trimming {k} from each end empties the \
+                 cohort of {n}"
+            )));
+        }
+        let rows = &self.buf.rows;
+        let total = self.buf.total_weight;
+        let mut out = vec![0.0f32; self.buf.global.len()];
+        let reduce = |offset: usize, dst: &mut [f32]| {
+            // k == 0: sum in arrival order, exactly like the streaming
+            // mean — bit-identical on dense cohorts.
+            if k == 0 {
+                for (i, o) in dst.iter_mut().enumerate() {
+                    let mut acc = 0.0f64;
+                    for (row, w) in rows {
+                        acc += w * row[offset + i] as f64;
+                    }
+                    *o = (acc / total) as f32;
+                }
+                return;
+            }
+            let mut col: Vec<(f32, f64)> = Vec::with_capacity(n);
+            for (i, o) in dst.iter_mut().enumerate() {
+                col.clear();
+                col.extend(rows.iter().map(|(row, w)| (row[offset + i], *w)));
+                col.sort_by(|a, b| a.0.total_cmp(&b.0));
+                let kept = &col[k..n - k];
+                let mut acc = 0.0f64;
+                let mut wsum = 0.0f64;
+                for (v, w) in kept {
+                    acc += w * *v as f64;
+                    wsum += w;
+                }
+                *o = if wsum > 0.0 {
+                    (acc / wsum) as f32
+                } else {
+                    // Every surviving weight is zero: fall back to the
+                    // unweighted mean of the kept values.
+                    (kept.iter().map(|(v, _)| *v as f64).sum::<f64>()
+                        / kept.len() as f64) as f32
+                };
+            }
+        };
+        self.buf.for_each_chunk(&mut out, &reduce);
+        self.buf.reset();
+        Ok(ParamVec(out))
+    }
+}
+
+// ------------------------------------------------------------- median
+
+/// Per-coordinate weighted lower median (the `"median"` entry).
+pub struct CoordinateMedianAggregator {
+    buf: UpdateBuffer,
+}
+
+impl CoordinateMedianAggregator {
+    pub fn from_ctx(ctx: &AggContext) -> CoordinateMedianAggregator {
+        CoordinateMedianAggregator { buf: UpdateBuffer::from_ctx(ctx) }
+    }
+}
+
+impl Aggregator for CoordinateMedianAggregator {
+    fn name(&self) -> &'static str {
+        "median"
+    }
+
+    fn add(&mut self, update: &Update, weight: f64) -> Result<()> {
+        self.buf.add(update, weight)
+    }
+
+    fn count(&self) -> usize {
+        self.buf.rows.len()
+    }
+
+    fn total_weight(&self) -> f64 {
+        self.buf.total_weight
+    }
+
+    fn finish(&mut self) -> Result<ParamVec> {
+        self.buf.check_finish()?;
+        let n = self.buf.rows.len();
+        let rows = &self.buf.rows;
+        let half = self.buf.total_weight / 2.0;
+        let mut out = vec![0.0f32; self.buf.global.len()];
+        let reduce = |offset: usize, dst: &mut [f32]| {
+            let mut col: Vec<(f32, f64)> = Vec::with_capacity(n);
+            for (i, o) in dst.iter_mut().enumerate() {
+                col.clear();
+                col.extend(rows.iter().map(|(row, w)| (row[offset + i], *w)));
+                col.sort_by(|a, b| a.0.total_cmp(&b.0));
+                // Weighted lower median: the smallest value whose
+                // cumulative weight reaches half the total. The output
+                // is always one of the input values, so with honest
+                // weight > half it cannot leave the honest envelope.
+                let mut cum = 0.0f64;
+                let mut pick = col[n - 1].0;
+                for (v, w) in &col {
+                    cum += w;
+                    if cum >= half {
+                        pick = *v;
+                        break;
+                    }
+                }
+                *o = pick;
+            }
+        };
+        self.buf.for_each_chunk(&mut out, &reduce);
+        self.buf.reset();
+        Ok(ParamVec(out))
+    }
+}
+
+// ---------------------------------------------------------- norm clip
+
+/// L2 norm clipping in front of the streaming mean (the `"norm_clip"`
+/// entry): each update's delta from the global model is rescaled to norm
+/// ≤ `clip_norm` before it folds in. Below-threshold updates are
+/// forwarded verbatim, so the un-attacked reduction is bit-identical to
+/// `"mean"` — and memory stays O(P), fully streaming.
+pub struct NormClipAggregator {
+    inner: MeanAggregator,
+    global: Arc<ParamVec>,
+    clip_norm: f64,
+}
+
+impl NormClipAggregator {
+    /// Build from a construction context; `ctx.clip_norm` must be a
+    /// positive finite threshold.
+    pub fn from_ctx(ctx: &AggContext) -> Result<NormClipAggregator> {
+        if !(ctx.clip_norm > 0.0 && ctx.clip_norm.is_finite()) {
+            return Err(Error::Config(format!(
+                "norm_clip: clip_norm must be positive and finite, got {}",
+                ctx.clip_norm
+            )));
+        }
+        Ok(NormClipAggregator {
+            inner: MeanAggregator::from_ctx(ctx),
+            global: ctx.global.clone(),
+            clip_norm: ctx.clip_norm,
+        })
+    }
+}
+
+impl Aggregator for NormClipAggregator {
+    fn name(&self) -> &'static str {
+        "norm_clip"
+    }
+
+    fn add(&mut self, update: &Update, weight: f64) -> Result<()> {
+        match update {
+            Update::Dense(x) => {
+                if x.len() != self.global.len() {
+                    // Let the inner mean produce the canonical error.
+                    return self.inner.add(update, weight);
+                }
+                let norm2: f64 = x
+                    .iter()
+                    .zip(self.global.iter())
+                    .map(|(v, g)| {
+                        let d = (*v - *g) as f64;
+                        d * d
+                    })
+                    .sum();
+                let norm = norm2.sqrt();
+                if !norm.is_finite() {
+                    return Err(Error::Runtime(
+                        "norm_clip: update delta has non-finite norm \
+                         (NaN/Inf poisoning rejected)"
+                            .into(),
+                    ));
+                }
+                if norm <= self.clip_norm {
+                    return self.inner.add(update, weight);
+                }
+                let scale = (self.clip_norm / norm) as f32;
+                let clipped: Vec<f32> = x
+                    .iter()
+                    .zip(self.global.iter())
+                    .map(|(v, g)| g + scale * (v - g))
+                    .collect();
+                self.inner.add(&Update::Dense(ParamVec(clipped)), weight)
+            }
+            Update::SparseTernary { len, indices, signs, magnitude } => {
+                if !magnitude.is_finite() {
+                    return Err(Error::Runtime(
+                        "norm_clip: update delta has non-finite norm \
+                         (NaN/Inf poisoning rejected)"
+                            .into(),
+                    ));
+                }
+                // A ternary delta is ±magnitude at each index, so its
+                // L2 norm is |magnitude|·√k; uniform rescaling keeps it
+                // ternary with a shrunk magnitude.
+                let norm =
+                    (*magnitude as f64).abs() * (indices.len() as f64).sqrt();
+                if norm <= self.clip_norm {
+                    return self.inner.add(update, weight);
+                }
+                let clipped = Update::SparseTernary {
+                    len: *len,
+                    indices: indices.clone(),
+                    signs: signs.clone(),
+                    magnitude: magnitude * (self.clip_norm / norm) as f32,
+                };
+                self.inner.add(&clipped, weight)
+            }
+            Update::Masked { .. } => self.inner.add(update, weight),
+        }
+    }
+
+    fn count(&self) -> usize {
+        self.inner.count()
+    }
+
+    fn total_weight(&self) -> f64 {
+        self.inner.total_weight()
+    }
+
+    fn finish(&mut self) -> Result<ParamVec> {
+        self.inner.finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx(global: Vec<f32>) -> AggContext {
+        AggContext::new(Arc::new(ParamVec(global)))
+    }
+
+    fn dense(v: Vec<f32>) -> Update {
+        Update::Dense(ParamVec(v))
+    }
+
+    #[test]
+    fn trimmed_mean_drops_outliers_per_coordinate() {
+        let mut c = ctx(vec![0.0; 2]);
+        c.trim_frac = 0.25; // n = 5 ⇒ trim 1 from each end
+        let mut agg = TrimmedMeanAggregator::from_ctx(&c).unwrap();
+        for v in [
+            vec![1.0, 10.0],
+            vec![2.0, 20.0],
+            vec![3.0, 30.0],
+            vec![1e9, -1e9], // hostile
+            vec![-1e9, 1e9], // hostile
+        ] {
+            agg.add(&dense(v), 1.0).unwrap();
+        }
+        let out = agg.finish().unwrap();
+        assert!((out[0] - 2.0).abs() < 1e-6, "{}", out[0]);
+        assert!((out[1] - 20.0).abs() < 1e-5, "{}", out[1]);
+    }
+
+    #[test]
+    fn trimmed_mean_zero_trim_is_the_weighted_mean() {
+        let c = ctx(vec![0.0; 2]);
+        let mut agg = TrimmedMeanAggregator::from_ctx(&c).unwrap();
+        agg.add(&dense(vec![1.0, 2.0]), 1.0).unwrap();
+        agg.add(&dense(vec![3.0, 6.0]), 3.0).unwrap();
+        let out = agg.finish().unwrap();
+        assert!((out[0] - 2.5).abs() < 1e-12);
+        assert!((out[1] - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn trimmed_mean_rejects_bad_fractions() {
+        for f in [0.5, 0.9, -0.1, f64::NAN] {
+            let mut c = ctx(vec![0.0; 2]);
+            c.trim_frac = f;
+            assert!(TrimmedMeanAggregator::from_ctx(&c).is_err(), "{f}");
+        }
+    }
+
+    #[test]
+    fn median_is_the_middle_value_and_resets() {
+        let c = ctx(vec![0.0; 2]);
+        let mut agg = CoordinateMedianAggregator::from_ctx(&c);
+        agg.add(&dense(vec![1.0, -5.0]), 1.0).unwrap();
+        agg.add(&dense(vec![100.0, 0.0]), 1.0).unwrap();
+        agg.add(&dense(vec![2.0, 5.0]), 1.0).unwrap();
+        let out = agg.finish().unwrap();
+        assert_eq!(out.0, vec![2.0, 0.0]);
+        assert_eq!(agg.count(), 0);
+        // Weighted: a heavy client pulls the crossing point.
+        agg.add(&dense(vec![1.0, 1.0]), 3.0).unwrap();
+        agg.add(&dense(vec![9.0, 9.0]), 1.0).unwrap();
+        assert_eq!(agg.finish().unwrap().0, vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn median_decodes_sparse_against_the_global() {
+        let c = ctx(vec![1.0; 3]);
+        let mut agg = CoordinateMedianAggregator::from_ctx(&c);
+        let sparse = Update::SparseTernary {
+            len: 3,
+            indices: vec![0],
+            signs: vec![true],
+            magnitude: 0.5,
+        };
+        agg.add(&sparse, 1.0).unwrap();
+        agg.add(&dense(vec![2.0, 2.0, 2.0]), 1.0).unwrap();
+        agg.add(&dense(vec![0.0, 0.0, 0.0]), 1.0).unwrap();
+        // Columns: [1.5, 2, 0] → 1.5; [1, 2, 0] → 1; [1, 2, 0] → 1.
+        let out = agg.finish().unwrap();
+        assert_eq!(out.0, vec![1.5, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn rank_aggregators_reject_malformed_updates() {
+        let c = ctx(vec![0.0; 4]);
+        let mut agg = TrimmedMeanAggregator::from_ctx(&c).unwrap();
+        assert!(agg.add(&dense(vec![0.0; 3]), 1.0).is_err());
+        assert!(agg.add(&dense(vec![0.0; 4]), -1.0).is_err());
+        let masked = Update::Masked {
+            xor_key: 7,
+            inner: Box::new(dense(vec![0.0; 4])),
+        };
+        let err = agg.add(&masked, 1.0).unwrap_err().to_string();
+        assert!(err.contains("decryption"), "{err}");
+        let oob = Update::SparseTernary {
+            len: 4,
+            indices: vec![9],
+            signs: vec![true],
+            magnitude: 1.0,
+        };
+        assert!(agg.add(&oob, 1.0).is_err());
+        assert!(agg.finish().is_err(), "only failed adds ⇒ empty cohort");
+    }
+
+    #[test]
+    fn norm_clip_passes_small_updates_and_caps_large_ones() {
+        let mut c = ctx(vec![0.0; 4]);
+        c.clip_norm = 2.0;
+        let mut agg = NormClipAggregator::from_ctx(&c).unwrap();
+        // ‖[1,0,0,0]‖ = 1 ≤ 2: identity.
+        agg.add(&dense(vec![1.0, 0.0, 0.0, 0.0]), 1.0).unwrap();
+        assert_eq!(agg.finish().unwrap().0, vec![1.0, 0.0, 0.0, 0.0]);
+        // ‖[8,6,0,0]‖ = 10 > 2: rescaled to norm 2.
+        agg.add(&dense(vec![8.0, 6.0, 0.0, 0.0]), 1.0).unwrap();
+        let out = agg.finish().unwrap();
+        assert!((out[0] - 1.6).abs() < 1e-6);
+        assert!((out[1] - 1.2).abs() < 1e-6);
+    }
+
+    #[test]
+    fn norm_clip_scales_sparse_magnitude() {
+        let mut c = ctx(vec![0.0; 4]);
+        c.clip_norm = 1.0;
+        let mut agg = NormClipAggregator::from_ctx(&c).unwrap();
+        // Delta norm = 3·√4 = 6 > 1 ⇒ magnitude shrinks to 3/6 = 0.5.
+        let u = Update::SparseTernary {
+            len: 4,
+            indices: vec![0, 1, 2, 3],
+            signs: vec![true, true, false, false],
+            magnitude: 3.0,
+        };
+        agg.add(&u, 1.0).unwrap();
+        let out = agg.finish().unwrap();
+        assert!((out[0] - 0.5).abs() < 1e-6);
+        assert!((out[3] + 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn norm_clip_rejects_nan_poisoning() {
+        let c = ctx(vec![0.0; 2]);
+        let mut agg = NormClipAggregator::from_ctx(&c).unwrap();
+        let err = agg
+            .add(&dense(vec![f32::NAN, 1.0]), 1.0)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("non-finite"), "{err}");
+        let sparse = Update::SparseTernary {
+            len: 2,
+            indices: vec![0],
+            signs: vec![true],
+            magnitude: f32::INFINITY,
+        };
+        assert!(agg.add(&sparse, 1.0).is_err());
+        // Bad thresholds are rejected at construction.
+        for clip in [0.0, -1.0, f64::INFINITY] {
+            let mut c = ctx(vec![0.0; 2]);
+            c.clip_norm = clip;
+            assert!(NormClipAggregator::from_ctx(&c).is_err(), "{clip}");
+        }
+    }
+
+    #[test]
+    fn buffered_aggregators_reset_between_rounds() {
+        let mut c = ctx(vec![0.0; 2]);
+        c.trim_frac = 0.0;
+        let mut agg = TrimmedMeanAggregator::from_ctx(&c).unwrap();
+        agg.add(&dense(vec![4.0, 4.0]), 2.0).unwrap();
+        assert_eq!(agg.count(), 1);
+        assert_eq!(agg.finish().unwrap().0, vec![4.0, 4.0]);
+        assert_eq!(agg.count(), 0);
+        assert_eq!(agg.total_weight(), 0.0);
+        agg.add(&dense(vec![2.0, 2.0]), 1.0).unwrap();
+        assert_eq!(agg.finish().unwrap().0, vec![2.0, 2.0]);
+    }
+}

@@ -182,6 +182,14 @@ pub struct SimConfig {
     /// Train real models through the Engine instead of the surrogate
     /// curves (small cohorts only; needs AOT artifacts).
     pub real_training: bool,
+    /// Registered adversary model spec corrupting Byzantine clients'
+    /// updates: "sign-flip" | "scaled-noise(factor)" | "zero-update" |
+    /// any registered name (active only when `adversary_frac > 0`).
+    pub adversary: String,
+    /// Fraction of the population behaving Byzantine, in [0, 1).
+    /// 0 disables the adversary plane entirely (no RNG draws, trace
+    /// digests match pre-adversary baselines bit-for-bit).
+    pub adversary_frac: f64,
 }
 
 impl Default for SimConfig {
@@ -199,6 +207,8 @@ impl Default for SimConfig {
             model_bytes: 0,
             base_compute_ms: 0.0,
             real_training: false,
+            adversary: "sign-flip".into(),
+            adversary_frac: 0.0,
         }
     }
 }
@@ -242,6 +252,12 @@ impl SimConfig {
         if let Some(b) = v.get("real_training").as_bool() {
             self.real_training = b;
         }
+        if let Some(s) = v.get("adversary").as_str() {
+            self.adversary = s.to_string();
+        }
+        if let Some(x) = v.get("adversary_frac").as_f64() {
+            self.adversary_frac = x;
+        }
         Ok(())
     }
 
@@ -263,6 +279,14 @@ impl SimConfig {
             return Err(Error::Config(
                 "sim.availability / sim.cost_model must be non-empty".into(),
             ));
+        }
+        if !(0.0..1.0).contains(&self.adversary_frac) {
+            return Err(Error::Config(
+                "sim.adversary_frac must be in [0,1)".into(),
+            ));
+        }
+        if self.adversary.trim().is_empty() {
+            return Err(Error::Config("sim.adversary must be non-empty".into()));
         }
         Ok(())
     }
@@ -345,6 +369,20 @@ pub struct Config {
     /// vectors (the per-add thread spawn must amortize); an explicit
     /// value opts smaller vectors in.
     pub agg_threads: usize,
+    /// Registered aggregator overriding the server flow's default
+    /// reduction ("mean" | "trimmed_mean" | "median" | "norm_clip" | any
+    /// registered name). `None` keeps each flow's own choice. This is
+    /// the pure-config path to Byzantine robustness: `cfg.agg =
+    /// Some("trimmed_mean".into())` hardens any algorithm.
+    pub agg: Option<String>,
+    /// Per-end trim fraction for the "trimmed_mean" aggregator, in
+    /// [0, 0.5): ⌊frac·cohort⌋ lowest and highest values are dropped per
+    /// coordinate. Tolerates that many Byzantine updates.
+    pub agg_trim_frac: f64,
+    /// L2 delta-norm threshold for the "norm_clip" aggregator (> 0):
+    /// updates farther than this from the global model are rescaled onto
+    /// the threshold sphere before aggregation.
+    pub agg_clip_norm: f64,
     /// Discrete-event simulator knobs (the `simulate` subcommand and
     /// [`crate::simnet`] jobs read these; training runs ignore them).
     pub sim: SimConfig,
@@ -383,6 +421,9 @@ impl Default for Config {
             test_samples: 512,
             agg_parallel_threshold: 64,
             agg_threads: 0,
+            agg: None,
+            agg_trim_frac: 0.1,
+            agg_clip_norm: 10.0,
             sim: SimConfig::default(),
         }
     }
@@ -513,6 +554,15 @@ impl Config {
         if let Some(n) = v.get("agg_threads").as_usize() {
             c.agg_threads = n;
         }
+        if let Some(s) = v.get("agg").as_str() {
+            c.agg = Some(s.to_string());
+        }
+        if let Some(x) = v.get("agg_trim_frac").as_f64() {
+            c.agg_trim_frac = x;
+        }
+        if let Some(x) = v.get("agg_clip_norm").as_f64() {
+            c.agg_clip_norm = x;
+        }
         let sim = v.get("sim");
         if sim.as_obj().is_some() {
             c.sim.apply_json(sim)?;
@@ -561,6 +611,24 @@ impl Config {
         }
         if self.fedprox_mu < 0.0 {
             return Err(Error::Config("fedprox_mu must be ≥ 0".into()));
+        }
+        if let Some(agg) = &self.agg {
+            if agg.trim().is_empty() {
+                return Err(Error::Config(
+                    "agg must name a registered aggregator (or be absent)"
+                        .into(),
+                ));
+            }
+        }
+        if !(0.0..0.5).contains(&self.agg_trim_frac) {
+            return Err(Error::Config(
+                "agg_trim_frac must be in [0, 0.5)".into(),
+            ));
+        }
+        if !(self.agg_clip_norm > 0.0 && self.agg_clip_norm.is_finite()) {
+            return Err(Error::Config(
+                "agg_clip_norm must be positive and finite".into(),
+            ));
         }
         self.sim.validate()?;
         Ok(())
@@ -643,6 +711,29 @@ mod tests {
     }
 
     #[test]
+    fn robust_aggregation_knobs_parse_and_default() {
+        let c = Config::default();
+        assert!(c.agg.is_none());
+        assert_eq!(c.agg_trim_frac, 0.1);
+        assert_eq!(c.agg_clip_norm, 10.0);
+        assert_eq!(c.sim.adversary, "sign-flip");
+        assert_eq!(c.sim.adversary_frac, 0.0);
+        let j = Json::parse(
+            r#"{"agg": "trimmed_mean", "agg_trim_frac": 0.3,
+                "agg_clip_norm": 2.5,
+                "sim": {"adversary": "scaled-noise(20)",
+                        "adversary_frac": 0.25}}"#,
+        )
+        .unwrap();
+        let c = Config::from_json(&j).unwrap();
+        assert_eq!(c.agg.as_deref(), Some("trimmed_mean"));
+        assert_eq!(c.agg_trim_frac, 0.3);
+        assert_eq!(c.agg_clip_norm, 2.5);
+        assert_eq!(c.sim.adversary, "scaled-noise(20)");
+        assert_eq!(c.sim.adversary_frac, 0.25);
+    }
+
+    #[test]
     fn invalid_configs_rejected() {
         let cases = [
             r#"{"clients_per_round": 0}"#,
@@ -662,6 +753,13 @@ mod tests {
             r#"{"sim": {"over_select": 0.5}}"#,
             r#"{"sim": {"staleness_alpha": -1}}"#,
             r#"{"sim": {"mode": "eventually"}}"#,
+            r#"{"agg": " "}"#,
+            r#"{"agg_trim_frac": 0.5}"#,
+            r#"{"agg_trim_frac": -0.1}"#,
+            r#"{"agg_clip_norm": 0}"#,
+            r#"{"sim": {"adversary_frac": 1.0}}"#,
+            r#"{"sim": {"adversary_frac": -0.2}}"#,
+            r#"{"sim": {"adversary": " "}}"#,
         ];
         for src in cases {
             let j = Json::parse(src).unwrap();

@@ -74,9 +74,15 @@ pub trait ServerFlow: Send {
     }
 
     /// Aggregation stage, streaming: build the round's accumulator. The
-    /// default resolves [`ServerFlow::aggregator_name`] through the
-    /// component registry; flows needing model metadata (e.g. FedReID's
-    /// head boundary) override this and enrich `ctx` from `engine`.
+    /// default resolves the config's `agg` override when one is carried
+    /// in `ctx` ([`AggContext::agg_override`]) — the pure-config path to
+    /// a Byzantine-robust reduction — and otherwise the flow's own
+    /// [`ServerFlow::aggregator_name`], both through the component
+    /// registry. An unknown name is a typed [`Error`] listing every
+    /// registered aggregator, never a panic. Flows needing model
+    /// metadata (e.g. FedReID's head boundary) override this and enrich
+    /// `ctx` from `engine`; such flows pin their reduction and ignore
+    /// the config override.
     fn make_aggregator(
         &mut self,
         engine: &Engine,
@@ -84,7 +90,10 @@ pub trait ServerFlow: Send {
         ctx: AggContext,
     ) -> Result<Box<dyn Aggregator>> {
         let _ = (engine, model);
-        let name = self.aggregator_name().to_string();
+        let name = match &ctx.agg_override {
+            Some(name) => name.clone(),
+            None => self.aggregator_name().to_string(),
+        };
         crate::registry::with_global(|r| r.aggregator(&name, &ctx))
     }
 
@@ -232,6 +241,33 @@ mod tests {
         assert_eq!(agg.name(), "mean");
         agg.add(&Update::Dense(ParamVec(vec![2.0; 4])), 1.0).unwrap();
         assert_eq!(agg.finish().unwrap().0, vec![2.0; 4]);
+    }
+
+    #[test]
+    fn config_agg_override_selects_the_registered_reduction() {
+        let mut f = DefaultServerFlow;
+        let engine = Engine::new(std::path::Path::new("/nonexistent")).unwrap();
+        let mut ctx = AggContext::new(Arc::new(ParamVec::zeros(4)));
+        ctx.agg_override = Some("median".into());
+        let agg = f.make_aggregator(&engine, "mlp", ctx).unwrap();
+        assert_eq!(agg.name(), "median");
+    }
+
+    #[test]
+    fn unknown_aggregator_name_is_a_typed_error_listing_registrations() {
+        let mut f = DefaultServerFlow;
+        let engine = Engine::new(std::path::Path::new("/nonexistent")).unwrap();
+        let mut ctx = AggContext::new(Arc::new(ParamVec::zeros(4)));
+        ctx.agg_override = Some("zorp".into());
+        let err = f.make_aggregator(&engine, "mlp", ctx).unwrap_err();
+        assert!(matches!(err, crate::error::Error::Config(_)), "{err:?}");
+        let msg = err.to_string();
+        assert!(msg.contains("unknown aggregator"), "{msg}");
+        assert!(msg.contains("\"zorp\""), "{msg}");
+        for name in ["mean", "backbone", "trimmed_mean", "median", "norm_clip"]
+        {
+            assert!(msg.contains(name), "{msg} should list {name}");
+        }
     }
 
     #[test]

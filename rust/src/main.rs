@@ -17,7 +17,7 @@ use std::time::Duration;
 use easyfl::comm::{ClientService, RemoteCoordinator, Registry};
 use easyfl::config::{Allocation, Config, DatasetKind, Partition, SimMode};
 use easyfl::deployment::Deployment;
-use easyfl::platform::{Platform, SimSweep, Sweep};
+use easyfl::platform::{Platform, RobustSweep, SimSweep, Sweep};
 use easyfl::tracking::Tracker;
 use easyfl::util::args::{usage, Args, Opt};
 
@@ -80,6 +80,9 @@ fn common_opts() -> Vec<Opt> {
         Opt { name: "algorithm", help: "registered algorithm name (fedavg | fedprox | stc | fedreid | ...)", default: Some("fedavg"), is_flag: false },
         Opt { name: "fedprox-mu", help: "FedProx μ", default: Some("0.01"), is_flag: false },
         Opt { name: "stc-sparsity", help: "STC kept fraction", default: Some("0.01"), is_flag: false },
+        Opt { name: "agg", help: "aggregator override (mean | trimmed_mean | median | norm_clip | ...)", default: None, is_flag: false },
+        Opt { name: "agg-trim-frac", help: "trimmed_mean: fraction trimmed per end", default: Some("0.1"), is_flag: false },
+        Opt { name: "agg-clip-norm", help: "norm_clip: L2 delta threshold", default: Some("10"), is_flag: false },
         Opt { name: "tracking-dir", help: "persist metrics JSON here", default: None, is_flag: false },
         Opt { name: "config", help: "JSON config file (flags override it)", default: None, is_flag: false },
         Opt { name: "help", help: "show help", default: None, is_flag: true },
@@ -122,6 +125,11 @@ fn parse_config(a: &Args) -> easyfl::Result<Config> {
     cfg.algorithm = a.get("algorithm").unwrap_or("fedavg").to_string();
     cfg.fedprox_mu = a.get_f64("fedprox-mu")?;
     cfg.stc_sparsity = a.get_f64("stc-sparsity")?;
+    if let Some(agg) = a.get("agg") {
+        cfg.agg = Some(agg.to_string());
+    }
+    cfg.agg_trim_frac = a.get_f64("agg-trim-frac")?;
+    cfg.agg_clip_norm = a.get_f64("agg-clip-norm")?;
     if let Some(dir) = a.get("tracking-dir") {
         cfg.tracking_dir = Some(dir.into());
     }
@@ -174,6 +182,11 @@ fn cmd_simulate(argv: &[String]) -> easyfl::Result<()> {
         Opt { name: "model-bytes", help: "update size in bytes (0 = cost model)", default: Some("0"), is_flag: false },
         Opt { name: "base-compute-ms", help: "fastest-tier round compute (0 = cost model)", default: Some("0"), is_flag: false },
         Opt { name: "sim-sweep", help: "run {sync,async} × {greedyada,random} grid", default: None, is_flag: true },
+        Opt { name: "adversary", help: "sign-flip | scaled-noise(factor) | zero-update", default: Some("sign-flip"), is_flag: false },
+        Opt { name: "adversary-frac", help: "Byzantine population fraction in [0,1)", default: Some("0"), is_flag: false },
+        Opt { name: "robust-sweep", help: "run aggregator × adversary-fraction resilience grid", default: None, is_flag: true },
+        Opt { name: "robust-aggs", help: "comma list of aggregators for --robust-sweep", default: Some("mean,trimmed_mean,median,norm_clip"), is_flag: false },
+        Opt { name: "adv-fracs", help: "comma list of fractions for --robust-sweep", default: Some("0,0.1,0.3"), is_flag: false },
         Opt { name: "bench-out", help: "write events/sec benchmark JSON here", default: None, is_flag: false },
     ]);
     let a = Args::parse(argv, &opts)?;
@@ -201,7 +214,29 @@ fn cmd_simulate(argv: &[String]) -> easyfl::Result<()> {
     cfg.sim.staleness_alpha = a.get_f64("staleness-alpha")?;
     cfg.sim.model_bytes = a.get_usize("model-bytes")?;
     cfg.sim.base_compute_ms = a.get_f64("base-compute-ms")?;
+    cfg.sim.adversary = a.get("adversary").unwrap_or("sign-flip").into();
+    cfg.sim.adversary_frac = a.get_f64("adversary-frac")?;
     cfg.validate()?;
+
+    if a.has_flag("robust-sweep") {
+        let aggs = list_opt(&a, "robust-aggs", "mean,trimmed_mean,median,norm_clip");
+        let agg_refs: Vec<&str> = aggs.iter().map(String::as_str).collect();
+        let fracs = list_opt(&a, "adv-fracs", "0,0.1,0.3")
+            .iter()
+            .map(|s| {
+                s.parse::<f64>().map_err(|_| {
+                    easyfl::Error::Config(format!("bad adversary fraction {s:?}"))
+                })
+            })
+            .collect::<easyfl::Result<Vec<f64>>>()?;
+        let platform = Platform::new(4);
+        let report = RobustSweep::new(cfg)
+            .aggregators(&agg_refs)
+            .fractions(&fracs)
+            .run(&platform)?;
+        print!("{}", report.to_table());
+        return Ok(());
+    }
 
     if a.has_flag("sim-sweep") {
         let platform = Platform::new(4);
@@ -238,6 +273,15 @@ fn cmd_simulate(argv: &[String]) -> easyfl::Result<()> {
         report.avg_staleness,
         report.comm_bytes as f64 / (1024.0 * 1024.0)
     );
+    if report.adversary_frac > 0.0 {
+        println!(
+            "  byzantine {} @ {:.0}% | aggregator {} | envelope dev {:.4}",
+            report.adversary,
+            report.adversary_frac * 100.0,
+            report.aggregator,
+            report.envelope_deviation
+        );
+    }
     println!("  trace digest {:#018x} (same seed ⇒ same digest)", report.trace_digest);
 
     if let Some(path) = a.get("bench-out") {
@@ -542,7 +586,7 @@ fn cmd_info(argv: &[String]) -> easyfl::Result<()> {
     }
     let (algos, datasets, partitions, flows) =
         easyfl::registry::with_global(|r| r.names());
-    let (availability, cost_models) =
+    let (availability, cost_models, adversaries) =
         easyfl::registry::with_global(|r| r.sim_names());
     let aggregators =
         easyfl::registry::with_global(|r| r.aggregator_names());
@@ -554,5 +598,6 @@ fn cmd_info(argv: &[String]) -> easyfl::Result<()> {
     println!("  aggregators:  {}", aggregators.join(", "));
     println!("  availability: {}", availability.join(", "));
     println!("  cost models:  {}", cost_models.join(", "));
+    println!("  adversaries:  {}", adversaries.join(", "));
     Ok(())
 }

@@ -343,6 +343,16 @@ impl Platform {
         registry::with_global(|r| {
             r.availability(&cfg.sim.availability)?;
             r.cost_model(&cfg.sim.cost_model, &cfg)?;
+            r.adversary(&cfg.sim.adversary)?;
+            if let Some(agg) = &cfg.agg {
+                // Probe-build so unknown names and bad trim/clip knobs
+                // fail here, not inside a queued worker.
+                let probe = crate::aggregate::AggContext::from_config(
+                    Arc::new(crate::model::ParamVec::zeros(1)),
+                    &cfg,
+                );
+                r.aggregator(agg, &probe)?;
+            }
             Ok(())
         })?;
         let id = self.next_id.fetch_add(1, Ordering::SeqCst);
@@ -792,6 +802,180 @@ impl SimSweepReport {
     }
 }
 
+// ---------------------------------------------------------- robust sweep
+
+/// Grid expansion over robust aggregators × Byzantine adversary
+/// fractions, executed on a [`Platform`] as SimNet jobs and summarized
+/// as one resilience table: final accuracy, honest-envelope deviation
+/// and makespan per cell. This is the three-line answer to "which
+/// reduction survives this attack?":
+///
+/// ```no_run
+/// let platform = easyfl::Platform::new(4);
+/// let report = easyfl::platform::RobustSweep::new(easyfl::Config::default())
+///     .aggregators(&["mean", "trimmed_mean", "median", "norm_clip"])
+///     .fractions(&[0.0, 0.1, 0.3])
+///     .run(&platform)
+///     .unwrap();
+/// println!("{}", report.to_table());
+/// ```
+pub struct RobustSweep {
+    base: Config,
+    aggregators: Vec<String>,
+    fractions: Vec<f64>,
+}
+
+impl RobustSweep {
+    /// A sweep whose axes default to the base config's single values.
+    pub fn new(base: Config) -> RobustSweep {
+        RobustSweep {
+            aggregators: vec![base
+                .agg
+                .clone()
+                .unwrap_or_else(|| "mean".to_string())],
+            fractions: vec![base.sim.adversary_frac],
+            base,
+        }
+    }
+
+    pub fn aggregators(mut self, aggs: &[&str]) -> RobustSweep {
+        self.aggregators = aggs.iter().map(|s| s.to_string()).collect();
+        self
+    }
+
+    pub fn fractions(mut self, fracs: &[f64]) -> RobustSweep {
+        self.fractions = fracs.to_vec();
+        self
+    }
+
+    /// Expand the grid (aggregator-major, like the report table).
+    pub fn configs(&self) -> Vec<Config> {
+        let mut out = Vec::new();
+        for agg in &self.aggregators {
+            for &frac in &self.fractions {
+                let mut cfg = self.base.clone();
+                cfg.agg = Some(agg.clone());
+                cfg.sim.adversary_frac = frac;
+                out.push(cfg);
+            }
+        }
+        out
+    }
+
+    /// Submit every cell as a SimNet job and join them into a report.
+    /// Each cell is validated up front, so an out-of-range fraction (or
+    /// unknown aggregator) fails the whole sweep fast instead of
+    /// surfacing as per-cell error rows.
+    pub fn run(self, platform: &Platform) -> Result<RobustSweepReport> {
+        let mut handles = Vec::new();
+        for cfg in self.configs() {
+            cfg.validate()?;
+            let aggregator =
+                cfg.agg.clone().unwrap_or_else(|| "mean".to_string());
+            let adversary = cfg.sim.adversary.clone();
+            let frac = cfg.sim.adversary_frac;
+            let slot: Arc<Mutex<Option<SimReport>>> = Arc::new(Mutex::new(None));
+            let slot_w = slot.clone();
+            let label = format!("robust-{aggregator}-{adversary}-{frac}");
+            let tracker = Arc::new(Tracker::new(&label));
+            let rounds = cfg.rounds;
+            let handle = platform.spawn_job(
+                &label,
+                rounds,
+                tracker,
+                Box::new(move |ctx| {
+                    let sim = run_sim_job(&cfg, ctx)?;
+                    let report = sim.to_report();
+                    *slot_w.lock().unwrap() = Some(sim);
+                    Ok(report)
+                }),
+            )?;
+            handles.push((aggregator, adversary, frac, slot, handle));
+        }
+        let rows = handles
+            .into_iter()
+            .map(|(aggregator, adversary, frac, slot, handle)| {
+                let outcome = match handle.join() {
+                    Ok(_) => slot.lock().unwrap().take().ok_or_else(|| {
+                        Error::Runtime("sim job finished without a report".into())
+                    }),
+                    Err(e) => Err(e),
+                };
+                RobustSweepRow { aggregator, adversary, frac, outcome }
+            })
+            .collect();
+        Ok(RobustSweepReport { rows })
+    }
+}
+
+/// One robust-sweep cell's identity and outcome.
+pub struct RobustSweepRow {
+    pub aggregator: String,
+    pub adversary: String,
+    /// Byzantine population fraction of the cell.
+    pub frac: f64,
+    pub outcome: Result<SimReport>,
+}
+
+/// Results of a [`RobustSweep`], renderable as an aligned text table.
+pub struct RobustSweepReport {
+    pub rows: Vec<RobustSweepRow>,
+}
+
+impl RobustSweepReport {
+    /// Successful cells only.
+    pub fn ok_rows(&self) -> impl Iterator<Item = (&RobustSweepRow, &SimReport)> {
+        self.rows
+            .iter()
+            .filter_map(|r| r.outcome.as_ref().ok().map(|rep| (r, rep)))
+    }
+
+    /// Final accuracy of the (aggregator, fraction) cell, if it ran.
+    pub fn accuracy_of(&self, aggregator: &str, frac: f64) -> Option<f64> {
+        self.ok_rows()
+            .find(|(row, _)| {
+                row.aggregator == aggregator && (row.frac - frac).abs() < 1e-12
+            })
+            .map(|(_, rep)| rep.final_accuracy)
+    }
+
+    /// Render the resilience table the `simulate --robust-sweep`
+    /// subcommand prints: accuracy under attack, honest-envelope
+    /// deviation and makespan are the headline columns.
+    pub fn to_table(&self) -> String {
+        let mut out = String::new();
+        let header = format!(
+            "{:<14} {:<18} {:>7} {:>7} {:>8} {:>10} {:>12}  {}\n",
+            "aggregator", "adversary", "adv %", "rounds", "acc%",
+            "env. dev", "makespan s", "status"
+        );
+        out.push_str(&header);
+        out.push_str(&"-".repeat(header.len().saturating_sub(1)));
+        out.push('\n');
+        for row in &self.rows {
+            match &row.outcome {
+                Ok(rep) => out.push_str(&format!(
+                    "{:<14} {:<18} {:>7.1} {:>7} {:>8.2} {:>10.4} {:>12.1}  {}\n",
+                    row.aggregator,
+                    row.adversary,
+                    row.frac * 100.0,
+                    rep.rounds,
+                    rep.final_accuracy * 100.0,
+                    rep.envelope_deviation,
+                    rep.makespan_ms / 1000.0,
+                    if rep.converged { "ok" } else { "partial" },
+                )),
+                Err(e) => out.push_str(&format!(
+                    "{:<14} {:<18} {:>7.1} {:>7} {:>8} {:>10} {:>12}  error: {e}\n",
+                    row.aggregator, row.adversary, row.frac * 100.0, "-", "-",
+                    "-", "-",
+                )),
+            }
+        }
+        out
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1081,6 +1265,66 @@ mod tests {
         cfg.sim.cost_model = "free-lunch".into();
         let err = platform.submit_sim(cfg).unwrap_err().to_string();
         assert!(err.contains("free-lunch"), "{err}");
+    }
+
+    #[test]
+    fn submit_sim_rejects_unknown_aggregator_and_adversary_before_queueing() {
+        let platform = Platform::new(1);
+        let mut cfg = small_sim_config();
+        cfg.agg = Some("krum".into());
+        let err = platform.submit_sim(cfg).unwrap_err().to_string();
+        assert!(err.contains("krum"), "{err}");
+        assert!(err.contains("trimmed_mean"), "{err}");
+        let mut cfg = small_sim_config();
+        cfg.sim.adversary = "gaslight".into();
+        let err = platform.submit_sim(cfg).unwrap_err().to_string();
+        assert!(err.contains("gaslight"), "{err}");
+        assert!(err.contains("sign-flip"), "{err}");
+        // Bad trim knobs fail the probe build too.
+        let mut cfg = small_sim_config();
+        cfg.agg = Some("trimmed_mean".into());
+        cfg.agg_trim_frac = 0.2;
+        assert!(platform.submit_sim(cfg).is_ok());
+    }
+
+    #[test]
+    fn robust_sweep_rejects_out_of_range_fractions_up_front() {
+        let platform = Platform::new(1);
+        let err = RobustSweep::new(small_sim_config())
+            .fractions(&[1.5])
+            .run(&platform)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("adversary_frac"), "{err}");
+        let err = RobustSweep::new(small_sim_config())
+            .fractions(&[-0.2])
+            .run(&platform)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("adversary_frac"), "{err}");
+    }
+
+    #[test]
+    fn robust_sweep_expands_aggregator_by_fraction_grid() {
+        let mut base = small_sim_config();
+        base.sim.adversary = "sign-flip".into();
+        let sweep = RobustSweep::new(base)
+            .aggregators(&["mean", "trimmed_mean"])
+            .fractions(&[0.0, 0.3]);
+        let cells = sweep.configs();
+        assert_eq!(cells.len(), 4);
+        assert!(cells
+            .iter()
+            .any(|c| c.agg.as_deref() == Some("trimmed_mean")
+                && c.sim.adversary_frac == 0.3));
+        let platform = Platform::new(4);
+        let report = sweep.run(&platform).unwrap();
+        assert_eq!(report.ok_rows().count(), 4);
+        let table = report.to_table();
+        assert!(table.contains("env. dev"), "{table}");
+        assert!(table.contains("trimmed_mean"), "{table}");
+        assert!(report.accuracy_of("mean", 0.0).is_some());
+        assert!(report.accuracy_of("krum", 0.0).is_none());
     }
 
     #[test]

@@ -36,7 +36,7 @@ use crate::coordinator::ClientFlowFactory;
 use crate::data::registry::DataSource;
 use crate::error::{Error, Result};
 use crate::flow::ServerFlow;
-use crate::simnet::{AvailabilityModel, CostModel};
+use crate::simnet::{AdversaryModel, AvailabilityModel, CostModel};
 
 /// Everything an algorithm contributes to a session: the server half and
 /// a per-device factory for the client half of the training flow.
@@ -72,6 +72,12 @@ pub type AvailabilityBuilder =
 pub type CostModelBuilder =
     Arc<dyn Fn(&Config) -> Result<CostModel> + Send + Sync>;
 
+/// Parser closure for a SimNet adversary spec (receives the full spec
+/// string, e.g. `"scaled-noise(20)"` for the registered name
+/// `"scaled-noise"`).
+pub type AdversaryBuilder =
+    Arc<dyn Fn(&str) -> Result<AdversaryModel> + Send + Sync>;
+
 /// Name → constructor tables for every pluggable component kind.
 #[derive(Default)]
 pub struct ComponentRegistry {
@@ -82,6 +88,7 @@ pub struct ComponentRegistry {
     availability: BTreeMap<String, AvailabilityBuilder>,
     cost_models: BTreeMap<String, CostModelBuilder>,
     aggregators: BTreeMap<String, AggregatorBuilder>,
+    adversaries: BTreeMap<String, AdversaryBuilder>,
 }
 
 fn unknown(kind: &str, name: &str, have: Vec<&String>) -> Error {
@@ -90,6 +97,17 @@ fn unknown(kind: &str, name: &str, have: Vec<&String>) -> Error {
         "unknown {kind} {name:?} (registered: {})",
         names.join(", ")
     ))
+}
+
+/// Normalized head of a parameterized component spec: `"dir(0.5)"` →
+/// `"dir"`, `"scaled-noise(20)"` → `"scaled-noise"`. Shared by every
+/// spec-keyed lookup and parser so name resolution cannot diverge.
+pub(crate) fn spec_head(spec: &str) -> String {
+    spec.split('(')
+        .next()
+        .unwrap_or(spec)
+        .trim()
+        .to_ascii_lowercase()
 }
 
 impl ComponentRegistry {
@@ -150,6 +168,13 @@ impl ComponentRegistry {
         self.aggregators.insert(name.to_string(), b);
     }
 
+    /// Register (or replace) a SimNet adversary model. `name` is the
+    /// spec head: `"scaled-noise(20)"` resolves the parser registered
+    /// as `"scaled-noise"`.
+    pub fn register_adversary(&mut self, name: &str, b: AdversaryBuilder) {
+        self.adversaries.insert(name.to_string(), b);
+    }
+
     // ------------------------------------------------------------ lookup
 
     /// Instantiate the algorithm a config selects.
@@ -189,12 +214,7 @@ impl ComponentRegistry {
     /// Parse a partition spec (`"iid"`, `"dir(0.5)"`, any registered name).
     /// The name lookup is case-insensitive, like the built-in parsers.
     pub fn partition(&self, spec: &str) -> Result<Partition> {
-        let head = spec
-            .split('(')
-            .next()
-            .unwrap_or(spec)
-            .trim()
-            .to_ascii_lowercase();
+        let head = spec_head(spec);
         match self.partitions.get(head.as_str()) {
             Some(p) => p(spec),
             None => Err(unknown(
@@ -220,12 +240,7 @@ impl ComponentRegistry {
     /// Parse a SimNet availability spec (`"always-on"`, `"diurnal(0.4)"`,
     /// any registered name). Lookup mirrors [`ComponentRegistry::partition`].
     pub fn availability(&self, spec: &str) -> Result<AvailabilityModel> {
-        let head = spec
-            .split('(')
-            .next()
-            .unwrap_or(spec)
-            .trim()
-            .to_ascii_lowercase();
+        let head = spec_head(spec);
         match self.availability.get(head.as_str()) {
             Some(b) => b(spec),
             None => Err(unknown(
@@ -270,6 +285,21 @@ impl ComponentRegistry {
         self.aggregators.keys().cloned().collect()
     }
 
+    /// Parse a SimNet adversary spec (`"sign-flip"`,
+    /// `"scaled-noise(20)"`, any registered name). Lookup mirrors
+    /// [`ComponentRegistry::partition`].
+    pub fn adversary(&self, spec: &str) -> Result<AdversaryModel> {
+        let head = spec_head(spec);
+        match self.adversaries.get(head.as_str()) {
+            Some(b) => b(spec),
+            None => Err(unknown(
+                "adversary model",
+                spec,
+                self.adversaries.keys().collect(),
+            )),
+        }
+    }
+
     /// Registered names per component kind:
     /// `(algorithms, datasets, partitions, server flows)`.
     pub fn names(&self) -> (Vec<String>, Vec<String>, Vec<String>, Vec<String>) {
@@ -281,11 +311,13 @@ impl ComponentRegistry {
         )
     }
 
-    /// Registered SimNet model names: `(availability, cost models)`.
-    pub fn sim_names(&self) -> (Vec<String>, Vec<String>) {
+    /// Registered SimNet model names:
+    /// `(availability, cost models, adversaries)`.
+    pub fn sim_names(&self) -> (Vec<String>, Vec<String>, Vec<String>) {
         (
             self.availability.keys().cloned().collect(),
             self.cost_models.keys().cloned().collect(),
+            self.adversaries.keys().cloned().collect(),
         )
     }
 }
@@ -386,17 +418,38 @@ mod tests {
         use crate::model::ParamVec;
         let reg = ComponentRegistry::with_builtins();
         let names = reg.aggregator_names();
-        for a in ["mean", "backbone"] {
+        for a in ["mean", "backbone", "trimmed_mean", "median", "norm_clip"] {
             assert!(names.iter().any(|n| n == a), "missing aggregator {a}");
         }
         let ctx = AggContext::new(Arc::new(ParamVec::zeros(4)));
-        assert_eq!(reg.aggregator("mean", &ctx).unwrap().name(), "mean");
-        assert_eq!(
-            reg.aggregator("backbone", &ctx).unwrap().name(),
-            "backbone"
-        );
-        let err = reg.aggregator("median", &ctx).unwrap_err().to_string();
+        for a in ["mean", "backbone", "trimmed_mean", "median", "norm_clip"] {
+            assert_eq!(reg.aggregator(a, &ctx).unwrap().name(), a);
+        }
+        let err = reg.aggregator("krum", &ctx).unwrap_err().to_string();
         assert!(err.contains("mean"), "{err} should list registered names");
+        assert!(err.contains("trimmed_mean"), "{err}");
+    }
+
+    #[test]
+    fn builtin_adversaries_resolve_by_name() {
+        let reg = ComponentRegistry::with_builtins();
+        let (_, _, adversaries) = reg.sim_names();
+        for a in ["sign-flip", "scaled-noise", "zero-update"] {
+            assert!(
+                adversaries.iter().any(|n| n == a),
+                "missing adversary {a}"
+            );
+        }
+        assert_eq!(
+            reg.adversary("sign-flip").unwrap(),
+            AdversaryModel::SignFlip
+        );
+        assert!(matches!(
+            reg.adversary("scaled-noise(25)").unwrap(),
+            AdversaryModel::ScaledNoise { .. }
+        ));
+        let err = reg.adversary("gaslight").unwrap_err().to_string();
+        assert!(err.contains("sign-flip"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,168 @@
+//! Byzantine adversary models for simulated federations.
+//!
+//! A fraction of the population (`Config.sim.adversary_frac`, chosen
+//! deterministically per seed) behaves Byzantine: instead of its honest
+//! surrogate delta, each corrupted client reports what its
+//! [`AdversaryModel`] fabricates. The three built-ins cover the classic
+//! attack families the robust-aggregation literature benchmarks against:
+//!
+//! * `"sign-flip"` — report the negated honest delta (gradient-reversal
+//!   / label-flip proxy). Same norm as an honest update, so norm
+//!   clipping cannot catch it — only rank statistics do.
+//! * `"scaled-noise(factor)"` — replace the delta with `factor`-scaled
+//!   Gaussian noise (model-poisoning / garbage uploads). Huge norm, so
+//!   `"norm_clip"` neutralizes it cheaply.
+//! * `"zero-update"` — report a zero delta (free-riding). Dilutes rather
+//!   than reverses progress; robust means shrug it off.
+//!
+//! Adversaries are registry-backed like availability and cost models:
+//! configs select them by spec string, and custom attacks register under
+//! new names via `ComponentRegistry::register_adversary`.
+
+use crate::error::{Error, Result};
+use crate::util::rng::Rng;
+
+/// Named, seeded update-corruption strategies.
+#[derive(Debug, Clone, PartialEq)]
+pub enum AdversaryModel {
+    /// Negate the honest delta.
+    SignFlip,
+    /// Replace the delta with `factor`-scaled Gaussian noise.
+    ScaledNoise { factor: f64 },
+    /// Report a zero delta (free-rider).
+    ZeroUpdate,
+}
+
+impl AdversaryModel {
+    /// Parse a spec string (head selects the model, args tune it). The
+    /// accepted heads are exactly the registered names — the registry
+    /// resolves the head before calling this, so an alias accepted only
+    /// here would be unreachable from any config path.
+    pub fn parse(spec: &str) -> Result<AdversaryModel> {
+        let head = crate::registry::spec_head(spec);
+        match head.as_str() {
+            "sign-flip" => Ok(AdversaryModel::SignFlip),
+            "scaled-noise" => {
+                let factor = match spec
+                    .find('(')
+                    .map(|i| &spec[i + 1..])
+                    .and_then(|r| r.strip_suffix(')'))
+                {
+                    Some(inner) => inner.trim().parse::<f64>().map_err(|_| {
+                        Error::Config(format!(
+                            "bad scaled-noise factor in {spec:?}"
+                        ))
+                    })?,
+                    None => 10.0,
+                };
+                if !(factor > 0.0 && factor.is_finite()) {
+                    return Err(Error::Config(format!(
+                        "scaled-noise needs a positive finite factor, got \
+                         {spec:?}"
+                    )));
+                }
+                Ok(AdversaryModel::ScaledNoise { factor })
+            }
+            "zero-update" => Ok(AdversaryModel::ZeroUpdate),
+            other => Err(Error::Config(format!(
+                "unknown adversary model {other:?} (sign-flip | \
+                 scaled-noise(factor) | zero-update)"
+            ))),
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            AdversaryModel::SignFlip => "sign-flip".into(),
+            AdversaryModel::ScaledNoise { factor } => {
+                format!("scaled-noise({factor})")
+            }
+            AdversaryModel::ZeroUpdate => "zero-update".into(),
+        }
+    }
+
+    /// Corrupt one honest delta in place. Draws (if any) come from the
+    /// caller's dedicated adversary RNG, so attacks are reproducible per
+    /// seed and never perturb the simulation's main stream.
+    pub fn corrupt(&self, delta: &mut [f32], rng: &mut Rng) {
+        match self {
+            AdversaryModel::SignFlip => {
+                for v in delta.iter_mut() {
+                    *v = -*v;
+                }
+            }
+            AdversaryModel::ScaledNoise { factor } => {
+                for v in delta.iter_mut() {
+                    *v = (factor * rng.normal()) as f32;
+                }
+            }
+            AdversaryModel::ZeroUpdate => {
+                delta.iter_mut().for_each(|v| *v = 0.0);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adversary_specs_parse() {
+        assert_eq!(
+            AdversaryModel::parse("sign-flip").unwrap(),
+            AdversaryModel::SignFlip
+        );
+        assert_eq!(
+            AdversaryModel::parse("zero-update").unwrap(),
+            AdversaryModel::ZeroUpdate
+        );
+        match AdversaryModel::parse("scaled-noise(25)").unwrap() {
+            AdversaryModel::ScaledNoise { factor } => {
+                assert_eq!(factor, 25.0)
+            }
+            other => panic!("{other:?}"),
+        }
+        // Bare name gets the default factor.
+        assert_eq!(
+            AdversaryModel::parse("scaled-noise").unwrap(),
+            AdversaryModel::ScaledNoise { factor: 10.0 }
+        );
+        assert!(AdversaryModel::parse("scaled-noise(-3)").is_err());
+        assert!(AdversaryModel::parse("scaled-noise(lots)").is_err());
+        assert!(AdversaryModel::parse("charm-offensive").is_err());
+        // Only the registered heads parse — no unreachable aliases.
+        assert!(AdversaryModel::parse("flip").is_err());
+        assert!(AdversaryModel::parse("zero").is_err());
+    }
+
+    #[test]
+    fn corruption_shapes_match_the_attack() {
+        let mut rng = Rng::new(9);
+        let mut d = vec![1.0f32, -2.0, 3.0];
+        AdversaryModel::SignFlip.corrupt(&mut d, &mut rng);
+        assert_eq!(d, vec![-1.0, 2.0, -3.0]);
+
+        let mut d = vec![1.0f32; 3];
+        AdversaryModel::ZeroUpdate.corrupt(&mut d, &mut rng);
+        assert_eq!(d, vec![0.0; 3]);
+
+        let mut d = vec![1.0f32; 64];
+        AdversaryModel::ScaledNoise { factor: 50.0 }.corrupt(&mut d, &mut rng);
+        let norm: f64 =
+            d.iter().map(|v| (*v as f64).powi(2)).sum::<f64>().sqrt();
+        assert!(norm > 100.0, "noise must dwarf an honest delta: {norm}");
+    }
+
+    #[test]
+    fn corruption_is_deterministic_per_seed() {
+        let run = || {
+            let mut rng = Rng::new(1234);
+            let mut d = vec![0.5f32; 16];
+            AdversaryModel::ScaledNoise { factor: 10.0 }
+                .corrupt(&mut d, &mut rng);
+            d
+        };
+        assert_eq!(run(), run());
+    }
+}

@@ -178,7 +178,7 @@ fn parse_args(spec: &str) -> Result<Vec<f64>> {
 impl AvailabilityModel {
     /// Parse a spec string (head selects the model, args tune it).
     pub fn parse(spec: &str) -> Result<AvailabilityModel> {
-        let head = spec.split('(').next().unwrap_or(spec).trim().to_ascii_lowercase();
+        let head = crate::registry::spec_head(spec);
         let args = parse_args(spec)?;
         match head.as_str() {
             "always-on" | "always" | "on" => Ok(AvailabilityModel::AlwaysOn),

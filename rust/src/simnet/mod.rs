@@ -15,6 +15,10 @@
 //!   uplink bandwidth (`upload = model_bytes / bandwidth`);
 //! * [`surrogate`] — trace-driven loss/accuracy curves keyed by
 //!   partition label skew, so training costs nothing;
+//! * [`adversary`] — Byzantine client models (sign-flip, scaled-noise,
+//!   zero-update) corrupting a configurable, seed-deterministic fraction
+//!   of the population's surrogate deltas, reduced through the *real*
+//!   registered aggregators so robustness is measured, not assumed;
 //! * [`rounds`] — the two engines: synchronous deadline rounds with
 //!   over-selection, and async FedBuff with staleness-discounted
 //!   aggregation. Both reuse the scheduler [`crate::scheduler::Strategy`]
@@ -34,12 +38,14 @@
 //!          report.makespan_ms / 3.6e6, report.participation * 100.0);
 //! ```
 
+pub mod adversary;
 pub mod client_state;
 pub mod cost;
 pub mod events;
 pub mod rounds;
 pub mod surrogate;
 
+pub use adversary::AdversaryModel;
 pub use client_state::{AvailabilityModel, ClientPhase, ClientState, Pool};
 pub use cost::CostModel;
 pub use events::{Event, EventKind, EventQueue};
@@ -72,6 +78,9 @@ pub(crate) fn register_builtins(reg: &mut ComponentRegistry) {
         "datacenter",
         Arc::new(|cfg| Ok(CostModel::datacenter().tuned(cfg))),
     );
+    for name in ["sign-flip", "scaled-noise", "zero-update"] {
+        reg.register_adversary(name, Arc::new(AdversaryModel::parse));
+    }
 }
 
 #[cfg(test)]

@@ -19,18 +19,21 @@
 
 use std::sync::Arc;
 
-use crate::aggregate::FedBuffBuffer;
+use crate::aggregate::{AggContext, FedBuffBuffer};
 use crate::config::{Config, SimMode};
 use crate::coordinator::Server;
 use crate::data::partition::build_clients;
 use crate::data::synth;
 use crate::error::Result;
+use crate::flow::Update;
+use crate::model::ParamVec;
 use crate::registry;
 use crate::scheduler::{make_strategy, Strategy};
 use crate::tracking::{RoundMetrics, Tracker};
 use crate::util::clock::Stopwatch;
 use crate::util::rng::Rng;
 
+use super::adversary::AdversaryModel;
 use super::client_state::{AvailabilityModel, ClientPhase, ClientState, Pool};
 use super::cost::CostModel;
 use super::events::{EventKind, EventQueue};
@@ -39,6 +42,12 @@ use super::surrogate::SurrogateModel;
 /// Skew is a population statistic; estimating it from a bounded sample
 /// keeps million-client federations cheap to set up.
 const SKEW_SAMPLE_CLIENTS: usize = 10_000;
+
+/// Parameter length of the surrogate update plane the adversary path
+/// reduces through the real registered aggregators: wide enough for
+/// per-coordinate rank statistics to be meaningful, small enough that a
+/// reduction per aggregation costs nothing.
+const SURROGATE_P: usize = 32;
 
 /// Outcome of one SimNet run — the numbers the `simulate` CLI prints
 /// and [`crate::platform::SimSweep`] tabulates.
@@ -78,6 +87,18 @@ pub struct SimReport {
     /// boundary (see [`SimNet::run_cancellable`]); the report covers the
     /// rounds that completed before the cancel.
     pub cancelled: bool,
+    /// Registered aggregator the run reduced with ("mean" unless
+    /// `Config.agg` overrode it).
+    pub aggregator: String,
+    /// Adversary model configured for the run (inert at fraction 0).
+    pub adversary: String,
+    /// Fraction of the population behaving Byzantine.
+    pub adversary_frac: f64,
+    /// Mean per-coordinate distance of the aggregate outside the honest
+    /// reporters' envelope, averaged over aggregations — 0 both when the
+    /// aggregator contained every attack and when the adversary plane
+    /// was off.
+    pub envelope_deviation: f64,
 }
 
 impl SimReport {
@@ -152,6 +173,18 @@ pub struct SimNet {
     staleness_n: u64,
     /// Set when a cancellation probe fired at a round boundary.
     cancelled: bool,
+    /// Registered aggregator the adversary plane (and report) names.
+    agg_name: String,
+    /// Attack corrupting Byzantine clients' surrogate deltas.
+    adversary: AdversaryModel,
+    /// Per-client Byzantine flag, fixed at setup (seed-deterministic).
+    adversarial: Vec<bool>,
+    /// Dedicated adversary RNG: forked off the seed, never off the main
+    /// stream, so `adversary_frac = 0` burns nothing and the event trace
+    /// is identical with the plane on or off.
+    adv_rng: Rng,
+    env_dev_sum: f64,
+    env_dev_n: u64,
 }
 
 impl SimNet {
@@ -179,7 +212,22 @@ impl SimNet {
             registry::with_global(|r| r.availability(&cfg.sim.availability))?;
         let cost =
             registry::with_global(|r| r.cost_model(&cfg.sim.cost_model, cfg))?;
+        let adversary =
+            registry::with_global(|r| r.adversary(&cfg.sim.adversary))?;
+        let agg_name = cfg.agg.clone().unwrap_or_else(|| "mean".to_string());
+        if cfg.agg.is_some() || cfg.sim.adversary_frac > 0.0 {
+            // Fail fast on an unknown or misconfigured aggregator before
+            // the run starts (the probe also validates trim/clip knobs).
+            let probe =
+                AggContext::from_config(Arc::new(ParamVec::zeros(1)), cfg);
+            registry::with_global(|r| r.aggregator(&agg_name, &probe))?;
+        }
         let mut rng = Rng::new(cfg.seed ^ 0x5349_4D4E_4554); // "SIMNET"
+
+        // The adversary stream is seeded independently of the main RNG:
+        // flipping `adversary_frac` must never shift selection,
+        // scheduling or availability draws (trace digests stay equal).
+        let mut adv_rng = Rng::new(cfg.seed ^ 0x4144_5645_5253); // "ADVERS"
 
         // Partition skew drives the surrogate curves; estimate it from a
         // bounded client sample so huge populations stay cheap.
@@ -208,11 +256,29 @@ impl SimNet {
             None
         };
 
+        // Seed-deterministic Byzantine cohort: exactly ⌊frac·n⌉ clients,
+        // drawn from the dedicated adversary stream.
+        let mut adversarial = vec![false; num_clients];
+        if cfg.sim.adversary_frac > 0.0 {
+            let k = ((cfg.sim.adversary_frac * num_clients as f64).round()
+                as usize)
+                .min(num_clients.saturating_sub(1));
+            for c in adv_rng.choose_indices(num_clients, k) {
+                adversarial[c] = true;
+            }
+        }
+
         tracker.set_config("sim_mode", cfg.sim.mode.name().to_string());
         tracker.set_config("availability", availability.name());
         tracker.set_config("cost_model", cost.name.clone());
         tracker.set_config("allocation", cfg.allocation.name().to_string());
         tracker.set_config("num_clients", num_clients.to_string());
+        tracker.set_config("aggregator", agg_name.clone());
+        if cfg.sim.adversary_frac > 0.0 {
+            tracker.set_config("adversary", adversary.name());
+            tracker
+                .set_config("adversary_frac", cfg.sim.adversary_frac.to_string());
+        }
 
         Ok(SimNet {
             strategy: make_strategy(
@@ -237,6 +303,12 @@ impl SimNet {
             staleness_sum: 0.0,
             staleness_n: 0,
             cancelled: false,
+            agg_name,
+            adversary,
+            adversarial,
+            adv_rng,
+            env_dev_sum: 0.0,
+            env_dev_n: 0,
             cfg: cfg.clone(),
         })
     }
@@ -400,6 +472,74 @@ impl SimNet {
         })
     }
 
+    // -------------------------------------------------- adversary plane
+
+    /// True when reports must pass through the surrogate-update
+    /// aggregation (Byzantine clients are present).
+    fn adversary_active(&self) -> bool {
+        self.cfg.sim.adversary_frac > 0.0
+    }
+
+    /// Reduce one aggregation window's surrogate updates through the
+    /// *real* registered aggregator and score the result.
+    ///
+    /// Every reporter contributes a surrogate delta on a small
+    /// [`SURROGATE_P`]-dimensional plane: honest clients a unit descent
+    /// step with per-client jitter, Byzantine clients whatever their
+    /// [`AdversaryModel`] fabricates. The reduced delta is scored as
+    /// `1 − RMS(aggregate − honest step)`, clamped to [-1, 1]: the
+    /// fraction of a full descent step this aggregation actually
+    /// achieved, with *any* deviation — a reversed direction (sign
+    /// flips), a diluted step (free-riders) or injected variance
+    /// (scaled noise) — eating into it deterministically. That factor
+    /// scales the surrogate progress increment. Alongside, the
+    /// per-coordinate distance of the aggregate outside the honest
+    /// envelope is accumulated into the run's `envelope_deviation`
+    /// (the robustness headline the [`crate::platform::RobustSweep`]
+    /// table reports).
+    fn robust_aggregate(&mut self, reporters: &[(usize, f64)]) -> Result<f64> {
+        let global = Arc::new(ParamVec::zeros(SURROGATE_P));
+        let ctx = AggContext::from_config(global, &self.cfg)
+            .expect_updates(reporters.len());
+        let mut agg =
+            registry::with_global(|r| r.aggregator(&self.agg_name, &ctx))?;
+        let mut honest_lo = [f32::INFINITY; SURROGATE_P];
+        let mut honest_hi = [f32::NEG_INFINITY; SURROGATE_P];
+        let mut honest = 0usize;
+        for &(client, weight) in reporters {
+            let mut delta: Vec<f32> = (0..SURROGATE_P)
+                .map(|_| (1.0 + 0.1 * (self.adv_rng.uniform() - 0.5)) as f32)
+                .collect();
+            if self.adversarial[client] {
+                self.adversary.corrupt(&mut delta, &mut self.adv_rng);
+            } else {
+                honest += 1;
+                for (i, v) in delta.iter().enumerate() {
+                    honest_lo[i] = honest_lo[i].min(*v);
+                    honest_hi[i] = honest_hi[i].max(*v);
+                }
+            }
+            agg.add(&Update::Dense(ParamVec(delta)), weight)?;
+        }
+        let out = agg.finish()?;
+        if honest > 0 {
+            let mut dev = 0.0f64;
+            for (i, v) in out.iter().enumerate() {
+                let v = *v as f64;
+                dev += (honest_lo[i] as f64 - v).max(0.0)
+                    + (v - honest_hi[i] as f64).max(0.0);
+            }
+            self.env_dev_sum += dev / SURROGATE_P as f64;
+            self.env_dev_n += 1;
+        }
+        let mse = out
+            .iter()
+            .map(|v| (*v as f64 - 1.0).powi(2))
+            .sum::<f64>()
+            / SURROGATE_P as f64;
+        Ok((1.0 - mse.sqrt()).clamp(-1.0, 1.0))
+    }
+
     // ------------------------------------------------------ sync engine
 
     fn run_sync(&mut self, cancel: &dyn Fn() -> bool) -> Result<SimReport> {
@@ -509,11 +649,22 @@ impl SimNet {
                     }
                 }
                 self.strategy.observe(&measured);
-                self.progress += if k_target > 0 {
+                let part = if k_target > 0 {
                     (reported as f64 / k_target as f64).min(1.0)
                 } else {
                     0.0
                 };
+                // With Byzantine clients present, the round's effective
+                // progress is scaled by how well the configured
+                // aggregator preserved the honest descent direction.
+                let inc = if self.adversary_active() && !measured.is_empty() {
+                    let reporters: Vec<(usize, f64)> =
+                        measured.iter().map(|&(c, _)| (c, 1.0)).collect();
+                    part * self.robust_aggregate(&reporters)?
+                } else {
+                    part
+                };
+                self.progress = (self.progress + inc).max(0.0);
                 let (train_loss, acc) = self.backend_metrics(round)?;
                 self.record_round(
                     round,
@@ -566,6 +717,9 @@ impl SimNet {
         // become aggregator weights. Surrogate mode keeps the weight
         // ledger only; plugging a real Aggregator streams updates too.
         let mut buffer = FedBuffBuffer::surrogate(self.cfg.sim.staleness_alpha);
+        // (client, discounted weight) per window arrival, for the
+        // adversary plane's surrogate-update reduction.
+        let mut window_members: Vec<(usize, f64)> = Vec::new();
         let mut agg_dropped = 0usize;
         let mut t_last = 0.0f64;
         let mut makespan = 0.0f64;
@@ -596,7 +750,8 @@ impl SimNet {
                     self.release(client);
                     active -= 1;
                     self.total_reported += 1;
-                    buffer.push(staleness, None)?;
+                    let weight = buffer.push(staleness, None)?;
+                    window_members.push((client, weight));
                     self.staleness_sum += staleness;
                     self.staleness_n += 1;
                     if buffer.len() >= buffer_target {
@@ -605,7 +760,14 @@ impl SimNet {
                         // so sync/async progress is comparable.
                         let round = self.version;
                         self.version += 1;
-                        self.progress += buffer.total_weight() / k_target as f64;
+                        let base = buffer.total_weight() / k_target as f64;
+                        let inc = if self.adversary_active() {
+                            base * self.robust_aggregate(&window_members)?
+                        } else {
+                            base
+                        };
+                        window_members.clear();
+                        self.progress = (self.progress + inc).max(0.0);
                         let (train_loss, acc) = self.backend_metrics(round)?;
                         let window = buffer.flush()?;
                         // Async "selected" = selections *resolved* in
@@ -751,6 +913,14 @@ impl SimNet {
             converged: self.tracker.num_rounds() == self.cfg.rounds
                 && self.tracker.num_rounds() > 0,
             cancelled: self.cancelled,
+            aggregator: self.agg_name.clone(),
+            adversary: self.adversary.name(),
+            adversary_frac: self.cfg.sim.adversary_frac,
+            envelope_deviation: if self.env_dev_n > 0 {
+                self.env_dev_sum / self.env_dev_n as f64
+            } else {
+                0.0
+            },
         }
     }
 }
@@ -889,6 +1059,60 @@ mod tests {
             .unwrap();
         assert!(!report.cancelled);
         assert!(report.converged);
+    }
+
+    #[test]
+    fn sign_flip_adversaries_slow_the_mean_but_not_the_trimmed_mean() {
+        let run = |agg: Option<&str>, frac: f64| {
+            let mut cfg = sim_cfg(SimMode::Sync);
+            cfg.sim.dropout = 0.0;
+            cfg.sim.adversary = "sign-flip".into();
+            cfg.sim.adversary_frac = frac;
+            cfg.agg = agg.map(|s| s.to_string());
+            cfg.agg_trim_frac = 0.35;
+            SimNet::from_config(&cfg).unwrap().run().unwrap()
+        };
+        let clean = run(None, 0.0);
+        let attacked_mean = run(None, 0.3);
+        let attacked_trim = run(Some("trimmed_mean"), 0.3);
+        assert_eq!(clean.envelope_deviation, 0.0, "plane off ⇒ no deviation");
+        assert_eq!(attacked_mean.aggregator, "mean");
+        assert_eq!(attacked_trim.aggregator, "trimmed_mean");
+        assert_eq!(attacked_mean.adversary, "sign-flip");
+        assert!(
+            attacked_mean.final_accuracy < clean.final_accuracy,
+            "attack must hurt the plain mean: {} !< {}",
+            attacked_mean.final_accuracy,
+            clean.final_accuracy
+        );
+        assert!(
+            attacked_trim.final_accuracy > attacked_mean.final_accuracy,
+            "trimmed mean must recover: {} !> {}",
+            attacked_trim.final_accuracy,
+            attacked_mean.final_accuracy
+        );
+        assert!(
+            attacked_mean.envelope_deviation
+                > attacked_trim.envelope_deviation,
+            "mean strays outside the honest envelope: {} !> {}",
+            attacked_mean.envelope_deviation,
+            attacked_trim.envelope_deviation
+        );
+    }
+
+    #[test]
+    fn unknown_aggregator_or_adversary_fails_fast_at_construction() {
+        let mut cfg = sim_cfg(SimMode::Sync);
+        cfg.agg = Some("krum".into());
+        let err = SimNet::from_config(&cfg).unwrap_err().to_string();
+        assert!(err.contains("krum"), "{err}");
+        assert!(err.contains("trimmed_mean"), "{err}");
+
+        let mut cfg = sim_cfg(SimMode::Sync);
+        cfg.sim.adversary = "gaslight".into();
+        let err = SimNet::from_config(&cfg).unwrap_err().to_string();
+        assert!(err.contains("gaslight"), "{err}");
+        assert!(err.contains("sign-flip"), "{err}");
     }
 
     #[test]

@@ -8,9 +8,12 @@
 //! (normalize weights → one weighted sum); an artifact-gated case checks
 //! the kernel itself agrees when the PJRT runtime is available.
 
+mod common;
+
 use std::path::PathBuf;
 use std::sync::Arc;
 
+use common::{artifacts_ready, parallel_ctx, random_params};
 use easyfl::aggregate::{
     batch_weighted_mean, AggContext, Aggregator, MeanAggregator,
 };
@@ -22,12 +25,6 @@ use easyfl::runtime::Engine;
 use easyfl::util::prop;
 use easyfl::util::rng::Rng;
 
-fn artifacts_ready() -> bool {
-    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
-        .join("artifacts/manifest.json")
-        .exists()
-}
-
 /// Cohort sizes straddling the chunk-parallel threshold used below (8).
 const COHORTS: [usize; 5] = [1, 3, 7, 33, 120];
 const PARALLEL_THRESHOLD: usize = 8;
@@ -35,31 +32,14 @@ const PARALLEL_THRESHOLD: usize = 8;
 /// (vectors under `MIN_PARALLEL_LEN` always reduce sequentially).
 const P_LARGE: usize = 5000;
 
-fn random_params(rng: &mut Rng, p: usize) -> ParamVec {
-    ParamVec((0..p).map(|_| (rng.uniform() as f32) * 2.0 - 1.0).collect())
-}
-
 /// A streaming aggregator configured so cohorts ≥ 8 go chunk-parallel.
 fn streaming(global: Arc<ParamVec>, expect: usize) -> Box<dyn Aggregator> {
-    let mut ctx = AggContext::new(global);
-    ctx.expect_updates = expect;
-    ctx.parallel_threshold = PARALLEL_THRESHOLD;
-    ctx.threads = 4;
+    let ctx = parallel_ctx(global, expect, PARALLEL_THRESHOLD);
     Box::new(MeanAggregator::from_ctx(&ctx))
 }
 
 fn assert_close(stream: &ParamVec, batch: &ParamVec, what: &str) -> Result<(), String> {
-    if stream.len() != batch.len() {
-        return Err(format!("{what}: length mismatch"));
-    }
-    for (i, (s, b)) in stream.iter().zip(batch.iter()).enumerate() {
-        if (s - b).abs() > 1e-6 {
-            return Err(format!(
-                "{what}: coordinate {i} diverges: streaming {s} vs batch {b}"
-            ));
-        }
-    }
-    Ok(())
+    common::assert_close(stream, batch, 1e-6, what)
 }
 
 #[test]

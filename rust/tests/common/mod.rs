@@ -1,0 +1,102 @@
+//! Shared integration-test fixtures.
+//!
+//! Each test binary compiles this module independently (`mod common;`),
+//! so helpers unused by one binary are expected — hence the blanket
+//! `dead_code` allow. Keep everything here deterministic: fixtures feed
+//! property tests and digest-reproducibility checks.
+#![allow(dead_code)]
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use easyfl::aggregate::AggContext;
+use easyfl::config::{Config, DatasetKind, Partition};
+use easyfl::model::ParamVec;
+use easyfl::util::rng::Rng;
+
+/// True when the AOT artifact bundle is present (artifact-gated e2e
+/// tests skip without it).
+pub fn artifacts_ready() -> bool {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts/manifest.json")
+        .exists()
+}
+
+/// A uniform random parameter vector in [-1, 1).
+pub fn random_params(rng: &mut Rng, p: usize) -> ParamVec {
+    ParamVec((0..p).map(|_| (rng.uniform() as f32) * 2.0 - 1.0).collect())
+}
+
+/// A cohort of `k` random dense updates with integer sample-count-style
+/// weights in [1, 100].
+pub fn dense_cohort(rng: &mut Rng, k: usize, p: usize) -> Vec<(ParamVec, f64)> {
+    (0..k)
+        .map(|_| (random_params(rng, p), 1.0 + rng.below(100) as f64))
+        .collect()
+}
+
+/// Coordinate-wise closeness check with a caller-chosen tolerance.
+pub fn assert_close(
+    got: &ParamVec,
+    want: &ParamVec,
+    tol: f64,
+    what: &str,
+) -> Result<(), String> {
+    if got.len() != want.len() {
+        return Err(format!("{what}: length mismatch"));
+    }
+    for (i, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+        if ((g - w) as f64).abs() > tol {
+            return Err(format!(
+                "{what}: coordinate {i} diverges: got {g} vs want {w}"
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// An aggregation context tuned so cohorts of ≥ `threshold` updates
+/// engage the chunk-parallel reduce with 4 worker threads (vectors must
+/// still clear `MIN_PARALLEL_LEN` for the threads to actually spawn).
+pub fn parallel_ctx(
+    global: Arc<ParamVec>,
+    expect: usize,
+    threshold: usize,
+) -> AggContext {
+    let mut ctx = AggContext::new(global);
+    ctx.expect_updates = expect;
+    ctx.parallel_threshold = threshold;
+    ctx.threads = 4;
+    ctx
+}
+
+/// The tiny synthetic training config the flow-stage integration tests
+/// run end-to-end (artifact-gated).
+pub fn quick_cfg() -> Config {
+    Config {
+        dataset: DatasetKind::Femnist,
+        partition: Partition::ByClass(3),
+        num_clients: 8,
+        clients_per_round: 4,
+        rounds: 2,
+        local_epochs: 1,
+        max_samples: 48,
+        test_samples: 96,
+        ..Config::default()
+    }
+}
+
+/// The mid-size SimNet scenario the determinism and robustness suites
+/// share: 300 clients, 20-client cohorts, dropout, over-selection.
+pub fn sim_base_cfg() -> Config {
+    let mut cfg = Config::for_dataset(DatasetKind::Cifar10);
+    cfg.num_clients = 300;
+    cfg.clients_per_round = 20;
+    cfg.rounds = 10;
+    cfg.partition = Partition::Dirichlet(0.5);
+    cfg.num_devices = 4;
+    cfg.sim.dropout = 0.15;
+    cfg.sim.deadline_ms = 90_000.0;
+    cfg.sim.over_select = 1.4;
+    cfg
+}

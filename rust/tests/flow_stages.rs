@@ -5,37 +5,19 @@
 //! via `Config::algorithm` — while the FedReID head inspection and the
 //! custom selection stage use `SessionBuilder` component overrides.
 
+mod common;
+
 use std::collections::HashMap;
-use std::path::PathBuf;
 use std::sync::{Arc, Mutex};
 
+use common::{artifacts_ready, quick_cfg};
 use easyfl::algorithms::{
     fedprox_client_factory, fedreid_client_factory, stc_client_factory,
     FedReidServerFlow, STCServerFlow, SharedHeads,
 };
 use easyfl::flow::{ServerFlow, Update};
 use easyfl::model::ParamVec;
-use easyfl::{Config, DatasetKind, Partition, SessionBuilder};
-
-fn artifacts_ready() -> bool {
-    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
-        .join("artifacts/manifest.json")
-        .exists()
-}
-
-fn quick_cfg() -> Config {
-    Config {
-        dataset: DatasetKind::Femnist,
-        partition: Partition::ByClass(3),
-        num_clients: 8,
-        clients_per_round: 4,
-        rounds: 2,
-        local_epochs: 1,
-        max_samples: 48,
-        test_samples: 96,
-        ..Config::default()
-    }
-}
+use easyfl::SessionBuilder;
 
 #[test]
 fn plugin_names_reflect_substituted_stages() {

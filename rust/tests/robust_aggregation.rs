@@ -1,0 +1,361 @@
+//! Byzantine-robust aggregation properties + the resilience sweep.
+//!
+//! Property tests pin down the contracts the robust aggregators
+//! advertise, on both the sequential and the chunk-parallel reduce:
+//!
+//! * `trimmed_mean` with `trim_frac = 0` ≡ the streaming `mean` within
+//!   1e-12 (it is computed in the same f64 arrival order, so dense
+//!   cohorts agree bit-for-bit);
+//! * `median` stays inside the honest clients' per-coordinate envelope
+//!   for any ≤ f corrupted updates (f < n/2), no matter what the
+//!   corrupted values are;
+//! * `norm_clip` is the identity on updates below the threshold (the
+//!   whole reduction is then bit-identical to `mean`) and caps the
+//!   aggregate's displacement at the threshold otherwise.
+//!
+//! On top, the acceptance end-to-end: a SimNet sync federation with 30%
+//! sign-flip adversaries, swept over aggregators through
+//! [`easyfl::platform::RobustSweep`] — the trimmed mean must beat the
+//! plain mean on final surrogate accuracy.
+
+mod common;
+
+use std::sync::Arc;
+
+use common::{assert_close, dense_cohort, parallel_ctx, random_params, sim_base_cfg};
+use easyfl::aggregate::{AggContext, Aggregator};
+use easyfl::flow::Update;
+use easyfl::model::ParamVec;
+use easyfl::platform::{Platform, RobustSweep};
+use easyfl::registry;
+use easyfl::util::prop;
+use easyfl::util::rng::Rng;
+
+/// Cohort threshold for the chunk-parallel path in these tests.
+const PARALLEL_THRESHOLD: usize = 8;
+/// Vector length clearing `MIN_PARALLEL_LEN` so threads actually spawn.
+const P_LARGE: usize = 5000;
+
+/// Build a registered aggregator for a cohort of `expect` updates.
+/// `threads > 1` engages the chunk-parallel reduce (for cohorts ≥ 8 and
+/// vectors ≥ `MIN_PARALLEL_LEN`).
+fn registered(
+    name: &str,
+    global: Arc<ParamVec>,
+    expect: usize,
+    threads: usize,
+    trim_frac: f64,
+    clip_norm: f64,
+) -> Box<dyn Aggregator> {
+    let mut ctx = parallel_ctx(global, expect, PARALLEL_THRESHOLD);
+    ctx.threads = threads;
+    ctx.trim_frac = trim_frac;
+    ctx.clip_norm = clip_norm;
+    registry::with_global(|r| r.aggregator(name, &ctx)).unwrap()
+}
+
+fn reduce(
+    agg: &mut dyn Aggregator,
+    cohort: &[(ParamVec, f64)],
+) -> Result<ParamVec, String> {
+    for (u, w) in cohort {
+        agg.add(&Update::Dense(u.clone()), *w)
+            .map_err(|e| e.to_string())?;
+    }
+    agg.finish().map_err(|e| e.to_string())
+}
+
+#[test]
+fn prop_trimmed_mean_with_zero_trim_equals_the_mean_within_1e12() {
+    prop::check("trim0-equivalence", 0x7213, 6, |rng| {
+        for &(k, p, threads) in
+            &[(3usize, 64usize, 1usize), (9, 64, 1), (20, P_LARGE, 1), (20, P_LARGE, 4)]
+        {
+            let global = Arc::new(random_params(rng, p));
+            let cohort = dense_cohort(rng, k, p);
+            let mut trimmed =
+                registered("trimmed_mean", global.clone(), k, threads, 0.0, 10.0);
+            let mut mean = registered("mean", global, k, threads, 0.0, 10.0);
+            let a = reduce(trimmed.as_mut(), &cohort)?;
+            let b = reduce(mean.as_mut(), &cohort)?;
+            assert_close(
+                &a,
+                &b,
+                1e-12,
+                &format!("trim=0 cohort {k} P {p} threads {threads}"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_trimmed_mean_survives_up_to_trim_frac_corruption() {
+    // With ⌊f·n⌋ ≥ the corrupted count, every hostile value is trimmed
+    // per coordinate, so the output lands inside the honest envelope.
+    prop::check("trimmed-survives", 0x7214, 6, |rng| {
+        for &(n, p, threads) in &[(10usize, 40usize, 1usize), (20, P_LARGE, 4)] {
+            let f = n / 4; // corrupted count; trim_frac 0.3 ⇒ ⌊0.3·n⌋ ≥ f
+            let global = Arc::new(ParamVec::zeros(p));
+            let honest = dense_cohort(rng, n - f, p);
+            let mut cohort = honest.clone();
+            for _ in 0..f {
+                let hostile: Vec<f32> = (0..p)
+                    .map(|_| ((rng.uniform() - 0.5) * 2e9) as f32)
+                    .collect();
+                cohort.push((ParamVec(hostile), 1.0 + rng.below(100) as f64));
+            }
+            let mut agg =
+                registered("trimmed_mean", global, n, threads, 0.3, 10.0);
+            let out = reduce(agg.as_mut(), &cohort)?;
+            for i in 0..p {
+                let lo = honest
+                    .iter()
+                    .map(|(u, _)| u[i])
+                    .fold(f32::INFINITY, f32::min);
+                let hi = honest
+                    .iter()
+                    .map(|(u, _)| u[i])
+                    .fold(f32::NEG_INFINITY, f32::max);
+                easyfl::prop_assert!(
+                    out[i] >= lo - 1e-6 && out[i] <= hi + 1e-6,
+                    "coordinate {i}: {} outside honest [{lo}, {hi}]",
+                    out[i]
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_median_stays_inside_the_honest_envelope() {
+    // For any ≤ f corrupted updates with f < n/2 (honest weight above
+    // half), the weighted lower median is pinned inside the honest
+    // per-coordinate envelope — the corrupted values are arbitrary.
+    prop::check("median-envelope", 0x3ED1, 8, |rng| {
+        for &(n, p, threads) in
+            &[(5usize, 30usize, 1usize), (9, 30, 1), (21, P_LARGE, 4)]
+        {
+            let f = (n - 1) / 2;
+            let global = Arc::new(random_params(rng, p));
+            let honest = dense_cohort(rng, n - f, p);
+            let mut cohort = honest.clone();
+            for _ in 0..f {
+                // Corruption spans sign flips, huge spikes and NaN-free
+                // garbage — anything a hostile client could upload.
+                let hostile: Vec<f32> = (0..p)
+                    .map(|_| ((rng.uniform() - 0.5) * 2e8) as f32)
+                    .collect();
+                cohort.push((ParamVec(hostile), 1.0));
+            }
+            // Equal weights: honest weight (n−f) strictly exceeds half.
+            let cohort: Vec<(ParamVec, f64)> =
+                cohort.into_iter().map(|(u, _)| (u, 1.0)).collect();
+            let honest: Vec<&ParamVec> =
+                cohort[..n - f].iter().map(|(u, _)| u).collect();
+            let mut agg = registered("median", global, n, threads, 0.1, 10.0);
+            let out = reduce(agg.as_mut(), &cohort)?;
+            for i in 0..p {
+                let lo =
+                    honest.iter().map(|u| u[i]).fold(f32::INFINITY, f32::min);
+                let hi = honest
+                    .iter()
+                    .map(|u| u[i])
+                    .fold(f32::NEG_INFINITY, f32::max);
+                easyfl::prop_assert!(
+                    out[i] >= lo && out[i] <= hi,
+                    "coordinate {i}: median {} outside honest [{lo}, {hi}] \
+                     (n {n}, f {f}, threads {threads})",
+                    out[i]
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_norm_clip_is_the_identity_below_the_threshold() {
+    prop::check("clip-identity", 0xC11F, 6, |rng| {
+        let clip = 3.0f64;
+        for &(k, p, threads) in &[(5usize, 64usize, 1usize), (12, P_LARGE, 4)] {
+            let global = Arc::new(random_params(rng, p));
+            // Updates whose delta norms sit strictly under the
+            // threshold: global + delta with ‖delta‖ ≤ 0.9·clip.
+            let cohort: Vec<(ParamVec, f64)> = (0..k)
+                .map(|_| {
+                    let raw = random_params(rng, p);
+                    let norm: f64 = raw
+                        .iter()
+                        .map(|v| (*v as f64).powi(2))
+                        .sum::<f64>()
+                        .sqrt()
+                        .max(1e-9);
+                    let scale = (0.9 * clip * rng.uniform() / norm) as f32;
+                    let update: Vec<f32> = global
+                        .iter()
+                        .zip(raw.iter())
+                        .map(|(g, d)| g + scale * d)
+                        .collect();
+                    (ParamVec(update), 1.0 + rng.below(50) as f64)
+                })
+                .collect();
+            let mut clipped =
+                registered("norm_clip", global.clone(), k, threads, 0.1, clip);
+            let mut mean = registered("mean", global, k, threads, 0.1, clip);
+            let a = reduce(clipped.as_mut(), &cohort)?;
+            let b = reduce(mean.as_mut(), &cohort)?;
+            // Below the threshold every update passes through verbatim,
+            // so the reduction is *bit-identical* to the plain mean.
+            easyfl::prop_assert!(
+                a.0 == b.0,
+                "norm_clip must be the identity below the threshold \
+                 (cohort {k}, threads {threads})"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn norm_clip_caps_the_aggregate_displacement() {
+    let mut rng = Rng::new(0xC1A9);
+    let p = 128;
+    let clip = 2.0f64;
+    let global = Arc::new(random_params(&mut rng, p));
+    // One honest small update, one hostile update 1e6 away.
+    let honest: Vec<f32> = global.iter().map(|g| g + 0.001).collect();
+    let hostile: Vec<f32> = global.iter().map(|g| g + 1e6).collect();
+    let mut agg = registered("norm_clip", global.clone(), 2, 1, 0.1, clip);
+    agg.add(&Update::Dense(ParamVec(honest)), 1.0).unwrap();
+    agg.add(&Update::Dense(ParamVec(hostile)), 1.0).unwrap();
+    let out = agg.finish().unwrap();
+    let displacement: f64 = out
+        .iter()
+        .zip(global.iter())
+        .map(|(o, g)| ((o - g) as f64).powi(2))
+        .sum::<f64>()
+        .sqrt();
+    // Mean of deltas each of norm ≤ clip is itself of norm ≤ clip.
+    assert!(
+        displacement <= clip + 1e-3,
+        "hostile update moved the aggregate {displacement} > clip {clip}"
+    );
+}
+
+#[test]
+fn robust_aggregators_select_through_config_and_sparse_updates() {
+    // The pure-config path: Config.agg routes sparse STC-style cohorts
+    // through a robust reduction with no flow changes.
+    let global = Arc::new(ParamVec(vec![1.0; 6]));
+    let mut ctx = AggContext::new(global);
+    ctx.trim_frac = 0.2;
+    let mut agg =
+        registry::with_global(|r| r.aggregator("trimmed_mean", &ctx)).unwrap();
+    let sparse = Update::SparseTernary {
+        len: 6,
+        indices: vec![0, 5],
+        signs: vec![true, false],
+        magnitude: 0.5,
+    };
+    agg.add(&sparse, 2.0).unwrap();
+    agg.add(&Update::Dense(ParamVec(vec![2.0; 6])), 1.0).unwrap();
+    let out = agg.finish().unwrap();
+    // n = 2, trim ⌊0.2·2⌋ = 0 ⇒ weighted mean of decoded rows.
+    assert!((out[0] - (2.0 * 1.5 + 2.0) / 3.0).abs() < 1e-6, "{}", out[0]);
+    assert!((out[5] - (2.0 * 0.5 + 2.0) / 3.0).abs() < 1e-6, "{}", out[5]);
+}
+
+// ------------------------------------------------------ acceptance e2e
+
+#[test]
+fn robust_sweep_trimmed_mean_beats_mean_under_30pct_sign_flip() {
+    let mut base = sim_base_cfg();
+    base.rounds = 15;
+    base.sim.dropout = 0.0;
+    base.sim.adversary = "sign-flip".into();
+    base.agg_trim_frac = 0.35;
+    let platform = Platform::new(4);
+    let report = RobustSweep::new(base)
+        .aggregators(&["mean", "trimmed_mean", "median"])
+        .fractions(&[0.0, 0.3])
+        .run(&platform)
+        .unwrap();
+    assert_eq!(report.ok_rows().count(), 6);
+    let acc = |agg: &str, frac: f64| report.accuracy_of(agg, frac).unwrap();
+
+    // The acceptance criterion: at 30% sign-flip adversaries the
+    // trimmed mean beats the plain mean on final surrogate accuracy.
+    assert!(
+        acc("trimmed_mean", 0.3) > acc("mean", 0.3),
+        "trimmed_mean {} !> mean {}",
+        acc("trimmed_mean", 0.3),
+        acc("mean", 0.3)
+    );
+    // The median resists the attack too.
+    assert!(acc("median", 0.3) > acc("mean", 0.3));
+    // The attack actually bites the non-robust baseline.
+    assert!(acc("mean", 0.3) < acc("mean", 0.0));
+    // Un-attacked, the robust reductions cost (almost) nothing.
+    assert!((acc("trimmed_mean", 0.0) - acc("mean", 0.0)).abs() < 0.05);
+
+    // Envelope deviation tells the same story from the inside: the mean
+    // is dragged outside the honest envelope, the robust pair is not.
+    let dev = |agg: &str| {
+        report
+            .ok_rows()
+            .find(|(row, _)| row.aggregator == agg && row.frac == 0.3)
+            .map(|(_, rep)| rep.envelope_deviation)
+            .unwrap()
+    };
+    assert!(dev("mean") > dev("trimmed_mean"));
+    assert!(dev("mean") > dev("median"));
+
+    let table = report.to_table();
+    assert!(table.contains("trimmed_mean"), "{table}");
+    assert!(table.contains("sign-flip"), "{table}");
+    assert!(table.contains("env. dev"), "{table}");
+}
+
+#[test]
+fn norm_clip_neutralizes_scaled_noise_but_not_sign_flip() {
+    let mut base = sim_base_cfg();
+    base.rounds = 12;
+    base.sim.dropout = 0.0;
+    base.agg_clip_norm = 6.0; // honest surrogate delta norm ≈ √32 ≈ 5.7
+    let platform = Platform::new(4);
+
+    // Scaled-noise blows up the update norm, so clipping restores most
+    // of the honest progress.
+    base.sim.adversary = "scaled-noise(25)".into();
+    let noise = RobustSweep::new(base.clone())
+        .aggregators(&["mean", "norm_clip"])
+        .fractions(&[0.25])
+        .run(&platform)
+        .unwrap();
+    let acc = |rep: &easyfl::platform::RobustSweepReport, agg: &str| {
+        rep.accuracy_of(agg, 0.25).unwrap()
+    };
+    assert!(
+        acc(&noise, "norm_clip") > acc(&noise, "mean"),
+        "norm_clip {} !> mean {} under scaled noise",
+        acc(&noise, "norm_clip"),
+        acc(&noise, "mean")
+    );
+
+    // Sign-flip preserves the norm, so clipping never engages and the
+    // two runs are bit-identical — norm bounds alone cannot catch a
+    // norm-preserving attack.
+    base.sim.adversary = "sign-flip".into();
+    let flip = RobustSweep::new(base)
+        .aggregators(&["mean", "norm_clip"])
+        .fractions(&[0.25])
+        .run(&platform)
+        .unwrap();
+    assert_eq!(
+        acc(&flip, "norm_clip").to_bits(),
+        acc(&flip, "mean").to_bits(),
+        "sign-flip keeps norms, so norm_clip must reduce exactly like mean"
+    );
+}

@@ -7,22 +7,12 @@
 //! every client — reported or dropped — is released back to the
 //! available pool (or offline) by the end of a run.
 
-use easyfl::config::{Allocation, Config, DatasetKind, Partition, SimMode};
+mod common;
+
+use common::sim_base_cfg as base_cfg;
+use easyfl::config::{Allocation, SimMode};
 use easyfl::simnet::{ClientPhase, SimNet};
 use easyfl::util::prop;
-
-fn base_cfg() -> Config {
-    let mut cfg = Config::for_dataset(DatasetKind::Cifar10);
-    cfg.num_clients = 300;
-    cfg.clients_per_round = 20;
-    cfg.rounds = 10;
-    cfg.partition = Partition::Dirichlet(0.5);
-    cfg.num_devices = 4;
-    cfg.sim.dropout = 0.15;
-    cfg.sim.deadline_ms = 90_000.0;
-    cfg.sim.over_select = 1.4;
-    cfg
-}
 
 #[test]
 fn same_seed_reproduces_trace_counts_and_report() {
@@ -177,6 +167,67 @@ fn prop_async_conservation_and_release() {
         }
         Ok(())
     });
+}
+
+#[test]
+fn adversary_runs_reproduce_and_never_burn_the_main_rng() {
+    for mode in [SimMode::Sync, SimMode::Async] {
+        // Baseline: the plain config, adversary plane off.
+        let mut clean_cfg = base_cfg();
+        clean_cfg.sim.mode = mode;
+        clean_cfg.seed = 4242;
+        let clean = SimNet::from_config(&clean_cfg).unwrap().run().unwrap();
+
+        // Same seed + same adversary fraction ⇒ identical runs.
+        let mut adv_cfg = clean_cfg.clone();
+        adv_cfg.sim.adversary = "sign-flip".into();
+        adv_cfg.sim.adversary_frac = 0.3;
+        let a = SimNet::from_config(&adv_cfg).unwrap().run().unwrap();
+        let b = SimNet::from_config(&adv_cfg).unwrap().run().unwrap();
+        assert_eq!(a.trace_digest, b.trace_digest, "{mode:?} adversary trace");
+        assert_eq!(
+            a.final_accuracy.to_bits(),
+            b.final_accuracy.to_bits(),
+            "{mode:?} adversary accuracy must be bit-identical"
+        );
+        assert_eq!(
+            a.envelope_deviation.to_bits(),
+            b.envelope_deviation.to_bits(),
+            "{mode:?} envelope deviation must be bit-identical"
+        );
+
+        // The adversary stream is separate from the simulation stream:
+        // attacks corrupt update *contents*, never event timing, so the
+        // trace digest matches the adversary-off baseline bit-for-bit.
+        assert_eq!(
+            a.trace_digest, clean.trace_digest,
+            "{mode:?} adversaries must not perturb the event trace"
+        );
+        assert_eq!(a.events, clean.events, "{mode:?} event count");
+        // ...while the training outcome genuinely degrades.
+        assert!(
+            a.final_accuracy < clean.final_accuracy,
+            "{mode:?} sign-flip must hurt: {} !< {}",
+            a.final_accuracy,
+            clean.final_accuracy
+        );
+        assert!(a.envelope_deviation > 0.0, "{mode:?} mean leaves envelope");
+
+        // Adversary off (fraction 0) is exactly the pre-adversary
+        // baseline, even with adversary/aggregator knobs configured:
+        // the plane is disabled, no RNG is drawn, nothing shifts.
+        let mut off_cfg = clean_cfg.clone();
+        off_cfg.sim.adversary = "scaled-noise(25)".into();
+        off_cfg.sim.adversary_frac = 0.0;
+        let off = SimNet::from_config(&off_cfg).unwrap().run().unwrap();
+        assert_eq!(off.trace_digest, clean.trace_digest, "{mode:?} off-digest");
+        assert_eq!(
+            off.final_accuracy.to_bits(),
+            clean.final_accuracy.to_bits(),
+            "{mode:?} fraction 0 must reproduce the baseline exactly"
+        );
+        assert_eq!(off.envelope_deviation, 0.0);
+    }
 }
 
 #[test]
