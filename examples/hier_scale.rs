@@ -1,0 +1,145 @@
+//! hier_scale — edge hierarchy fan-in at 10k clients.
+//!
+//! Runs the same SimNet scenario twice on one seed — once flat, once
+//! behind an `edges(n)` tier — and compares the cloud's fan-in: a flat
+//! round ships every reporter's update to the cloud, a hierarchical one
+//! ships one dense partial per active edge. CI runs the 10k-client
+//! variant as a smoke test, asserts bytes-to-cloud shrinks ≥ 5x, and
+//! records both runs to `BENCH_hier.json`:
+//!
+//! ```text
+//! cargo run --release --example hier_scale -- \
+//!     --clients 10000 --rounds 30 --budget-ms 30000 \
+//!     --bench-out BENCH_hier.json
+//! ```
+
+use easyfl::config::{Config, DatasetKind};
+use easyfl::util::args::{usage, Args, Opt};
+use easyfl::SimReport;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn opts() -> Vec<Opt> {
+    vec![
+        Opt { name: "clients", help: "federation population", default: Some("10000"), is_flag: false },
+        Opt { name: "rounds", help: "rounds to simulate", default: Some("30"), is_flag: false },
+        Opt { name: "clients-per-round", help: "aggregation target K", default: Some("100"), is_flag: false },
+        Opt { name: "edges", help: "edge aggregators in the hierarchical run", default: Some("16"), is_flag: false },
+        Opt { name: "edge-agg", help: "edge-tier aggregator", default: Some("mean"), is_flag: false },
+        Opt { name: "min-ratio", help: "fail unless flat/hier bytes-to-cloud ≥ this", default: Some("5"), is_flag: false },
+        Opt { name: "seed", help: "RNG seed", default: Some("42"), is_flag: false },
+        Opt { name: "budget-ms", help: "fail if wall time exceeds this (0 = off)", default: Some("0"), is_flag: false },
+        Opt { name: "bench-out", help: "write fan-in JSON here", default: None, is_flag: false },
+        Opt { name: "help", help: "show help", default: None, is_flag: true },
+    ]
+}
+
+fn base_config(a: &Args) -> easyfl::Result<Config> {
+    let mut cfg = Config::for_dataset(DatasetKind::Femnist);
+    cfg.num_clients = a.get_usize("clients")?;
+    cfg.clients_per_round = a.get_usize("clients-per-round")?;
+    cfg.rounds = a.get_usize("rounds")?;
+    cfg.seed = a.get_usize("seed")? as u64;
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn describe(tag: &str, rep: &SimReport) {
+    println!(
+        "{tag:<10} {:>9.2} MiB to cloud | makespan {:>8.1} s | acc {:.2}% \
+         | {} rounds",
+        rep.bytes_to_cloud as f64 / (1024.0 * 1024.0),
+        rep.makespan_ms / 1000.0,
+        rep.final_accuracy * 100.0,
+        rep.rounds
+    );
+}
+
+fn run() -> easyfl::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let opts = opts();
+    let a = Args::parse(&argv, &opts)?;
+    if a.has_flag("help") {
+        println!(
+            "{}",
+            usage(
+                "hier_scale",
+                "Flat vs edges(n) cloud fan-in comparison.",
+                &opts
+            )
+        );
+        return Ok(());
+    }
+    let edges = a.get_usize("edges")?;
+    let sw = std::time::Instant::now();
+
+    let flat_cfg = base_config(&a)?;
+    println!(
+        "simulating {} clients × {} rounds, flat vs edges({edges})...",
+        flat_cfg.num_clients, flat_cfg.rounds
+    );
+    let flat = easyfl::simnet::simulate(&flat_cfg)?;
+    describe("flat", &flat);
+
+    let mut hier_cfg = base_config(&a)?;
+    hier_cfg.topology = format!("edges({edges})");
+    if let Some(agg) = a.get("edge-agg") {
+        if agg != "mean" {
+            hier_cfg.edge_agg = Some(agg.to_string());
+        }
+    }
+    let hier = easyfl::simnet::simulate(&hier_cfg)?;
+    describe(&hier.topology, &hier);
+
+    let wall_ms = sw.elapsed().as_secs_f64() * 1000.0;
+    let ratio = if hier.bytes_to_cloud > 0 {
+        flat.bytes_to_cloud as f64 / hier.bytes_to_cloud as f64
+    } else {
+        0.0
+    };
+    println!(
+        "fan-in reduction: {ratio:.1}x fewer bytes to the cloud \
+         ({:.1} s wall for both runs)",
+        wall_ms / 1000.0
+    );
+
+    if let Some(path) = a.get("bench-out") {
+        let json = format!(
+            "{{\n  \"clients\": {},\n  \"rounds\": {},\n  \
+             \"edges\": {edges},\n  \
+             \"flat_bytes_to_cloud\": {},\n  \
+             \"hier_bytes_to_cloud\": {},\n  \
+             \"bytes_ratio\": {ratio:.2},\n  \
+             \"flat_makespan_ms\": {:.1},\n  \
+             \"hier_makespan_ms\": {:.1},\n  \"wall_ms\": {wall_ms:.1}\n}}\n",
+            flat_cfg.num_clients,
+            flat_cfg.rounds,
+            flat.bytes_to_cloud,
+            hier.bytes_to_cloud,
+            flat.makespan_ms,
+            hier.makespan_ms,
+        );
+        std::fs::write(path, json)?;
+        println!("benchmark written to {path}");
+    }
+
+    let min_ratio = a.get_f64("min-ratio")?;
+    if ratio < min_ratio {
+        return Err(easyfl::Error::Runtime(format!(
+            "bytes-to-cloud only shrank {ratio:.1}x (< {min_ratio}x): the \
+             edge tier is not absorbing the fan-in"
+        )));
+    }
+    let budget_ms = a.get_f64("budget-ms")?;
+    if budget_ms > 0.0 && wall_ms > budget_ms {
+        return Err(easyfl::Error::Runtime(format!(
+            "wall time {wall_ms:.0} ms exceeded the {budget_ms:.0} ms budget"
+        )));
+    }
+    Ok(())
+}

@@ -89,9 +89,15 @@ pub struct AggContext {
     /// name instead of the flow's own `aggregator_name` — the pure-config
     /// path to Byzantine-robust reductions.
     pub agg_override: Option<String>,
+    /// Registered-aggregator name for the *edge* tier of a hierarchical
+    /// topology (`Config.edge_agg`); [`crate::hierarchy::HierPlane`]
+    /// resolves it per edge, falling back to `agg_override` then the
+    /// flow default. Flat reductions ignore it.
+    pub edge_agg: Option<String>,
     /// Per-end trim fraction for `"trimmed_mean"`, in [0, 0.5).
     pub trim_frac: f64,
-    /// L2 delta-norm threshold for `"norm_clip"` (> 0, finite).
+    /// L2 delta-norm threshold for `"norm_clip"` (> 0 and finite, or 0
+    /// for the adaptive running-quantile threshold).
     pub clip_norm: f64,
 }
 
@@ -104,6 +110,7 @@ impl AggContext {
             threads: 0,
             protected_tail: 0,
             agg_override: None,
+            edge_agg: None,
             trim_frac: 0.1,
             clip_norm: 10.0,
         }
@@ -115,6 +122,7 @@ impl AggContext {
         ctx.parallel_threshold = cfg.agg_parallel_threshold;
         ctx.threads = cfg.agg_threads;
         ctx.agg_override = cfg.agg.clone();
+        ctx.edge_agg = cfg.edge_agg.clone();
         ctx.trim_frac = cfg.agg_trim_frac;
         ctx.clip_norm = cfg.agg_clip_norm;
         ctx

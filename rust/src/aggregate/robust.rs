@@ -17,7 +17,11 @@
 //!   Updates already under the threshold pass through *unchanged* (the
 //!   reduction is bit-identical to `"mean"`), so clipping costs honest
 //!   clients nothing while capping any single client's pull at
-//!   `clip_norm / Σw`.
+//!   `clip_norm / Σw`. With `clip_norm = 0` the threshold is *adaptive*:
+//!   a DP-FedAvg-style geometric update tracks the
+//!   [`ADAPTIVE_CLIP_QUANTILE`] of observed honest norms, so no tuning
+//!   is needed — the threshold converges onto the stationary norm
+//!   distribution and outliers beyond it are clipped.
 //!
 //! Order statistics need the whole cohort, so the trimmed mean and the
 //! median buffer decoded updates — O(cohort·P) memory, the intrinsic
@@ -287,32 +291,113 @@ impl Aggregator for CoordinateMedianAggregator {
 
 // ---------------------------------------------------------- norm clip
 
+/// Adaptive clipping targets this quantile of observed update norms
+/// (DP-FedAvg uses the median; a high quantile leaves honest stragglers
+/// untouched while still capping outliers).
+pub const ADAPTIVE_CLIP_QUANTILE: f64 = 0.95;
+
+/// Geometric step size of the adaptive threshold update: each observed
+/// norm nudges the threshold by `exp(±η)`-ish factors, so the estimate
+/// tracks slow drift without chasing single outliers.
+pub const ADAPTIVE_CLIP_ETA: f64 = 0.05;
+
+/// Initial adaptive threshold, before any norm has been observed.
+/// Deliberately conservative: over-clipping early honest updates only
+/// shrinks their magnitude (direction is preserved) and the geometric
+/// update recovers the true scale within tens of observations — whereas
+/// seeding from the first *observed* norm would let a Byzantine client
+/// that reports first disable clipping for its whole window.
+pub const ADAPTIVE_CLIP_INIT: f64 = 1.0;
+
+/// Running-quantile threshold tracker (DP-FedAvg-style adaptive
+/// clipping): `C ← C · exp(−η (b − γ))` where `b` indicates the norm
+/// fell at/under the current threshold and `γ` is the target quantile.
+/// The fixed point satisfies `P(norm ≤ C) = γ`, i.e. `C` converges onto
+/// the `γ`-quantile of a stationary norm distribution from the
+/// conservative [`ADAPTIVE_CLIP_INIT`] start.
+struct AdaptiveClip {
+    threshold: f64,
+}
+
+impl AdaptiveClip {
+    fn new() -> AdaptiveClip {
+        AdaptiveClip { threshold: ADAPTIVE_CLIP_INIT }
+    }
+
+    /// Observe one norm and return the threshold to clip it against
+    /// (the pre-update estimate — no single observation, however large,
+    /// can raise the threshold applied to itself).
+    fn observe(&mut self, norm: f64) -> f64 {
+        let c = self.threshold;
+        let below = if norm <= c { 1.0 } else { 0.0 };
+        self.threshold = (c
+            * (-ADAPTIVE_CLIP_ETA * (below - ADAPTIVE_CLIP_QUANTILE)).exp())
+        .max(f64::MIN_POSITIVE);
+        c
+    }
+}
+
+enum ClipMode {
+    /// Fixed threshold from `agg_clip_norm`.
+    Static(f64),
+    /// Running-quantile threshold (selected by `agg_clip_norm = 0`).
+    Adaptive(AdaptiveClip),
+}
+
+impl ClipMode {
+    /// The threshold this norm is clipped against (adaptive mode also
+    /// folds the observation into the running estimate).
+    fn threshold_for(&mut self, norm: f64) -> f64 {
+        match self {
+            ClipMode::Static(c) => *c,
+            ClipMode::Adaptive(a) => a.observe(norm),
+        }
+    }
+}
+
 /// L2 norm clipping in front of the streaming mean (the `"norm_clip"`
 /// entry): each update's delta from the global model is rescaled to norm
 /// ≤ `clip_norm` before it folds in. Below-threshold updates are
 /// forwarded verbatim, so the un-attacked reduction is bit-identical to
-/// `"mean"` — and memory stays O(P), fully streaming.
+/// `"mean"` — and memory stays O(P), fully streaming. `clip_norm = 0`
+/// selects the adaptive running-quantile threshold; the tracker state
+/// survives `finish`, so a long-lived aggregator keeps refining its
+/// estimate across rounds.
 pub struct NormClipAggregator {
     inner: MeanAggregator,
     global: Arc<ParamVec>,
-    clip_norm: f64,
+    clip: ClipMode,
 }
 
 impl NormClipAggregator {
     /// Build from a construction context; `ctx.clip_norm` must be a
-    /// positive finite threshold.
+    /// positive finite threshold, or exactly 0 for adaptive clipping.
     pub fn from_ctx(ctx: &AggContext) -> Result<NormClipAggregator> {
-        if !(ctx.clip_norm > 0.0 && ctx.clip_norm.is_finite()) {
+        let clip = if ctx.clip_norm == 0.0 {
+            ClipMode::Adaptive(AdaptiveClip::new())
+        } else if ctx.clip_norm > 0.0 && ctx.clip_norm.is_finite() {
+            ClipMode::Static(ctx.clip_norm)
+        } else {
             return Err(Error::Config(format!(
-                "norm_clip: clip_norm must be positive and finite, got {}",
+                "norm_clip: clip_norm must be finite and ≥ 0 (0 = \
+                 adaptive), got {}",
                 ctx.clip_norm
             )));
-        }
+        };
         Ok(NormClipAggregator {
             inner: MeanAggregator::from_ctx(ctx),
             global: ctx.global.clone(),
-            clip_norm: ctx.clip_norm,
+            clip,
         })
+    }
+
+    /// The current clipping threshold (the running estimate in adaptive
+    /// mode, starting from [`ADAPTIVE_CLIP_INIT`]).
+    pub fn clip_threshold(&self) -> f64 {
+        match &self.clip {
+            ClipMode::Static(c) => *c,
+            ClipMode::Adaptive(a) => a.threshold,
+        }
     }
 }
 
@@ -344,10 +429,11 @@ impl Aggregator for NormClipAggregator {
                             .into(),
                     ));
                 }
-                if norm <= self.clip_norm {
+                let clip = self.clip.threshold_for(norm);
+                if norm <= clip {
                     return self.inner.add(update, weight);
                 }
-                let scale = (self.clip_norm / norm) as f32;
+                let scale = (clip / norm) as f32;
                 let clipped: Vec<f32> = x
                     .iter()
                     .zip(self.global.iter())
@@ -368,14 +454,15 @@ impl Aggregator for NormClipAggregator {
                 // ternary with a shrunk magnitude.
                 let norm =
                     (*magnitude as f64).abs() * (indices.len() as f64).sqrt();
-                if norm <= self.clip_norm {
+                let clip = self.clip.threshold_for(norm);
+                if norm <= clip {
                     return self.inner.add(update, weight);
                 }
                 let clipped = Update::SparseTernary {
                     len: *len,
                     indices: indices.clone(),
                     signs: signs.clone(),
-                    magnitude: magnitude * (self.clip_norm / norm) as f32,
+                    magnitude: magnitude * (clip / norm) as f32,
                 };
                 self.inner.add(&clipped, weight)
             }
@@ -552,12 +639,83 @@ mod tests {
             magnitude: f32::INFINITY,
         };
         assert!(agg.add(&sparse, 1.0).is_err());
-        // Bad thresholds are rejected at construction.
-        for clip in [0.0, -1.0, f64::INFINITY] {
+        // Bad thresholds are rejected at construction (0 is the
+        // adaptive sentinel, so only negatives and non-finites fail).
+        for clip in [-1.0, f64::INFINITY, f64::NAN] {
             let mut c = ctx(vec![0.0; 2]);
             c.clip_norm = clip;
             assert!(NormClipAggregator::from_ctx(&c).is_err(), "{clip}");
         }
+    }
+
+    #[test]
+    fn adaptive_threshold_converges_onto_a_stationary_quantile() {
+        use crate::util::rng::Rng;
+        let mut c = ctx(vec![0.0; 8]);
+        c.clip_norm = 0.0; // adaptive
+        let mut agg = NormClipAggregator::from_ctx(&c).unwrap();
+        assert_eq!(agg.clip_threshold(), ADAPTIVE_CLIP_INIT);
+        let mut rng = Rng::new(9);
+        // Stationary honest-norm distribution: uniform in [1, 3], whose
+        // 0.95-quantile is 2.9. The threshold survives `finish`, so the
+        // estimate keeps refining across simulated rounds.
+        for _round in 0..200 {
+            for _ in 0..10 {
+                let norm = 1.0 + 2.0 * rng.uniform();
+                let mut v = vec![0.0f32; 8];
+                v[0] = norm as f32;
+                agg.add(&dense(v), 1.0).unwrap();
+            }
+            agg.finish().unwrap();
+        }
+        let t = agg.clip_threshold();
+        assert!(
+            (2.4..=3.4).contains(&t),
+            "threshold {t} should converge near the 0.95-quantile 2.9"
+        );
+    }
+
+    #[test]
+    fn adaptive_clipping_caps_outliers_after_warmup() {
+        let mut c = ctx(vec![0.0; 2]);
+        c.clip_norm = 0.0;
+        let mut agg = NormClipAggregator::from_ctx(&c).unwrap();
+        // Warm the tracker on unit-norm honest updates.
+        for _ in 0..50 {
+            agg.add(&dense(vec![1.0, 0.0]), 1.0).unwrap();
+        }
+        agg.finish().unwrap();
+        let t = agg.clip_threshold();
+        assert!(t > 0.5 && t < 2.0, "warmed threshold {t} tracks norm 1");
+        // A 1e6-norm poisoning attempt is rescaled onto ~the threshold.
+        agg.add(&dense(vec![1e6, 0.0]), 1.0).unwrap();
+        let out = agg.finish().unwrap();
+        assert!(
+            (out[0] as f64) < 3.0,
+            "outlier must be clipped to the learned threshold, got {}",
+            out[0]
+        );
+    }
+
+    #[test]
+    fn adaptive_clipping_caps_a_byzantine_first_reporter() {
+        // The first update of a window must NOT get to choose the
+        // threshold it is clipped against: a 1e9-norm opener is capped
+        // at the conservative init, not waved through.
+        let mut c = ctx(vec![0.0; 2]);
+        c.clip_norm = 0.0;
+        let mut agg = NormClipAggregator::from_ctx(&c).unwrap();
+        agg.add(&dense(vec![1e9, 0.0]), 1.0).unwrap();
+        for _ in 0..9 {
+            agg.add(&dense(vec![1.0, 0.0]), 1.0).unwrap();
+        }
+        let out = agg.finish().unwrap();
+        // (1·ADAPTIVE_CLIP_INIT + 9·1) / 10 ≈ 1, nowhere near 1e8.
+        assert!(
+            (out[0] as f64) < 2.0,
+            "first-reporter attack must be capped, got {}",
+            out[0]
+        );
     }
 
     #[test]

@@ -19,6 +19,7 @@ use crate::data::registry::DataSource;
 use crate::data::FedDataset;
 use crate::error::{Error, Result};
 use crate::flow::{run_client_round, ModelPayload, ServerFlow, TrainTask};
+use crate::hierarchy::{HierPlane, Topology};
 use crate::model::ParamVec;
 use crate::runtime::Engine;
 use crate::tracking::{ClientMetrics, RoundMetrics, Tracker};
@@ -187,6 +188,10 @@ pub struct RemoteCoordinator {
     rng: Rng,
     /// (client_index, addr) discovered from the registry.
     clients: Vec<(usize, String)>,
+    /// Aggregation-tree shape: non-flat deployments shard the ingest by
+    /// edge — each reply is tagged with its cluster id and reduced on
+    /// that edge's aggregator before the cloud fold.
+    topology: Topology,
     test_batches: Vec<crate::runtime::Batch>,
 }
 
@@ -201,6 +206,8 @@ impl RemoteCoordinator {
         cfg.validate()?;
         let engine = Engine::new(&cfg.artifacts_dir)?;
         let params = Arc::new(engine.init_params(&cfg.model)?);
+        let topology =
+            crate::registry::with_global(|r| r.topology(&cfg.topology))?;
         let data = FedDataset::from_config(&cfg)?;
         let test_batches = data.materialize_test(cfg.test_samples).batches(cfg.batch_size);
         let rng = Rng::new(cfg.seed ^ 0x5E17_EC70);
@@ -212,6 +219,7 @@ impl RemoteCoordinator {
             params,
             rng,
             clients: Vec::new(),
+            topology,
             test_batches,
         })
     }
@@ -315,8 +323,15 @@ impl RemoteCoordinator {
         drop(tx);
         let ctx = AggContext::from_config(self.params.clone(), &self.cfg)
             .expect_updates(cohort.len());
-        let mut agg =
-            self.flow.make_aggregator(&self.engine, &self.cfg.model, ctx)?;
+        let cohort_ids: Vec<usize> = cohort.iter().map(|(i, _)| *i).collect();
+        let mut plane = HierPlane::from_flow(
+            self.flow.as_mut(),
+            &self.engine,
+            &self.cfg.model,
+            &self.topology,
+            ctx,
+            &cohort_ids,
+        )?;
         let mut uplink = 0usize;
         let mut clients_m = Vec::new();
         let mut total_loss = 0.0;
@@ -337,10 +352,17 @@ impl RemoteCoordinator {
                 } => {
                     uplink += update.wire_bytes();
                     let decoded = self.flow.decode_update(&update)?;
-                    agg.add(decoded.as_ref(), n as f64)?;
+                    plane.add(idx, decoded.as_ref(), n as f64)?;
                     total_loss += sum_loss;
                     total_correct += correct;
                     total_n += n as f64;
+                    // Hierarchical deployments tag each reply with its
+                    // shard: the edge it was reduced on.
+                    let device = if self.topology.is_flat() {
+                        "remote".to_string()
+                    } else {
+                        format!("edge-{}", self.topology.cluster_of(idx))
+                    };
                     clients_m.push(ClientMetrics {
                         client: idx,
                         num_samples: n as usize,
@@ -350,7 +372,7 @@ impl RemoteCoordinator {
                         wait_ms: 0.0,
                         round_ms: compute_ms,
                         upload_bytes: 0,
-                        device: "remote".into(),
+                        device,
                     });
                 }
                 Message::Err { msg } => {
@@ -366,7 +388,7 @@ impl RemoteCoordinator {
         }
         let round_ms = sw_round.elapsed_ms();
 
-        let new_params = agg.finish()?;
+        let (new_params, hier) = plane.finish()?;
         if !new_params.is_finite() {
             return Err(Error::Runtime("remote round diverged".into()));
         }
@@ -390,6 +412,11 @@ impl RemoteCoordinator {
             round_ms,
             distribution_ms,
             comm_bytes: downlink + uplink,
+            bytes_to_cloud: if hier.tiered {
+                hier.bytes_to_cloud
+            } else {
+                uplink
+            },
             // Remote rounds wait for every reply: full participation.
             selected: clients_m.len(),
             reported: clients_m.len(),

@@ -182,6 +182,9 @@ pub struct SimConfig {
     /// Train real models through the Engine instead of the surrogate
     /// curves (small cohorts only; needs AOT artifacts).
     pub real_training: bool,
+    /// Edge→cloud backhaul bandwidth in bytes/ms for hierarchical
+    /// topologies (0 ⇒ cost model default). Flat runs never read it.
+    pub edge_bandwidth: f64,
     /// Registered adversary model spec corrupting Byzantine clients'
     /// updates: "sign-flip" | "scaled-noise(factor)" | "zero-update" |
     /// any registered name (active only when `adversary_frac > 0`).
@@ -207,6 +210,7 @@ impl Default for SimConfig {
             model_bytes: 0,
             base_compute_ms: 0.0,
             real_training: false,
+            edge_bandwidth: 0.0,
             adversary: "sign-flip".into(),
             adversary_frac: 0.0,
         }
@@ -252,6 +256,9 @@ impl SimConfig {
         if let Some(b) = v.get("real_training").as_bool() {
             self.real_training = b;
         }
+        if let Some(x) = v.get("edge_bandwidth").as_f64() {
+            self.edge_bandwidth = x;
+        }
         if let Some(s) = v.get("adversary").as_str() {
             self.adversary = s.to_string();
         }
@@ -278,6 +285,12 @@ impl SimConfig {
         {
             return Err(Error::Config(
                 "sim.availability / sim.cost_model must be non-empty".into(),
+            ));
+        }
+        if !(self.edge_bandwidth >= 0.0) {
+            return Err(Error::Config(
+                "sim.edge_bandwidth must be ≥ 0 (0 = cost model default)"
+                    .into(),
             ));
         }
         if !(0.0..1.0).contains(&self.adversary_frac) {
@@ -379,10 +392,23 @@ pub struct Config {
     /// [0, 0.5): ⌊frac·cohort⌋ lowest and highest values are dropped per
     /// coordinate. Tolerates that many Byzantine updates.
     pub agg_trim_frac: f64,
-    /// L2 delta-norm threshold for the "norm_clip" aggregator (> 0):
-    /// updates farther than this from the global model are rescaled onto
-    /// the threshold sphere before aggregation.
+    /// L2 delta-norm threshold for the "norm_clip" aggregator: updates
+    /// farther than this from the global model are rescaled onto the
+    /// threshold sphere before aggregation. 0 ⇒ *adaptive* clipping:
+    /// the aggregator tracks a running quantile of observed update
+    /// norms (DP-FedAvg style) so the threshold needs no tuning.
     pub agg_clip_norm: f64,
+    /// Federation topology spec resolved through the component registry:
+    /// "flat" | "edges(n)" | "clusters(file)" | any registered name.
+    /// Anything non-flat interposes an edge aggregator tier between the
+    /// clients and the cloud (see [`crate::hierarchy`]).
+    pub topology: String,
+    /// Registered aggregator for the *edge* tier of a hierarchical
+    /// topology. `None` falls back to `agg` (then the flow default), so
+    /// `edge_agg = Some("median")` with `agg = Some("trimmed_mean")`
+    /// selects per-tier robustness purely from config. Flat runs ignore
+    /// it.
+    pub edge_agg: Option<String>,
     /// Discrete-event simulator knobs (the `simulate` subcommand and
     /// [`crate::simnet`] jobs read these; training runs ignore them).
     pub sim: SimConfig,
@@ -424,6 +450,8 @@ impl Default for Config {
             agg: None,
             agg_trim_frac: 0.1,
             agg_clip_norm: 10.0,
+            topology: "flat".into(),
+            edge_agg: None,
             sim: SimConfig::default(),
         }
     }
@@ -563,6 +591,12 @@ impl Config {
         if let Some(x) = v.get("agg_clip_norm").as_f64() {
             c.agg_clip_norm = x;
         }
+        if let Some(s) = v.get("topology").as_str() {
+            c.topology = s.to_string();
+        }
+        if let Some(s) = v.get("edge_agg").as_str() {
+            c.edge_agg = Some(s.to_string());
+        }
         let sim = v.get("sim");
         if sim.as_obj().is_some() {
             c.sim.apply_json(sim)?;
@@ -625,10 +659,26 @@ impl Config {
                 "agg_trim_frac must be in [0, 0.5)".into(),
             ));
         }
-        if !(self.agg_clip_norm > 0.0 && self.agg_clip_norm.is_finite()) {
+        if !(self.agg_clip_norm >= 0.0 && self.agg_clip_norm.is_finite()) {
             return Err(Error::Config(
-                "agg_clip_norm must be positive and finite".into(),
+                "agg_clip_norm must be finite and ≥ 0 (0 = adaptive)".into(),
             ));
+        }
+        if self.topology.trim().is_empty() {
+            return Err(Error::Config(
+                "topology must name a registered topology (e.g. \"flat\", \
+                 \"edges(16)\")"
+                    .into(),
+            ));
+        }
+        if let Some(edge_agg) = &self.edge_agg {
+            if edge_agg.trim().is_empty() {
+                return Err(Error::Config(
+                    "edge_agg must name a registered aggregator (or be \
+                     absent)"
+                        .into(),
+                ));
+            }
         }
         self.sim.validate()?;
         Ok(())
@@ -734,6 +784,33 @@ mod tests {
     }
 
     #[test]
+    fn hierarchy_knobs_parse_and_default() {
+        let c = Config::default();
+        assert_eq!(c.topology, "flat");
+        assert!(c.edge_agg.is_none());
+        assert_eq!(c.sim.edge_bandwidth, 0.0);
+        let j = Json::parse(
+            r#"{"topology": "edges(16)", "edge_agg": "median",
+                "agg": "trimmed_mean",
+                "sim": {"edge_bandwidth": 125000}}"#,
+        )
+        .unwrap();
+        let c = Config::from_json(&j).unwrap();
+        assert_eq!(c.topology, "edges(16)");
+        assert_eq!(c.edge_agg.as_deref(), Some("median"));
+        assert_eq!(c.agg.as_deref(), Some("trimmed_mean"));
+        assert_eq!(c.sim.edge_bandwidth, 125_000.0);
+    }
+
+    #[test]
+    fn zero_clip_norm_selects_adaptive_clipping() {
+        let j = Json::parse(r#"{"agg": "norm_clip", "agg_clip_norm": 0}"#)
+            .unwrap();
+        let c = Config::from_json(&j).unwrap();
+        assert_eq!(c.agg_clip_norm, 0.0, "0 is the adaptive sentinel");
+    }
+
+    #[test]
     fn invalid_configs_rejected() {
         let cases = [
             r#"{"clients_per_round": 0}"#,
@@ -756,7 +833,10 @@ mod tests {
             r#"{"agg": " "}"#,
             r#"{"agg_trim_frac": 0.5}"#,
             r#"{"agg_trim_frac": -0.1}"#,
-            r#"{"agg_clip_norm": 0}"#,
+            r#"{"agg_clip_norm": -1}"#,
+            r#"{"topology": " "}"#,
+            r#"{"edge_agg": " "}"#,
+            r#"{"sim": {"edge_bandwidth": -5}}"#,
             r#"{"sim": {"adversary_frac": 1.0}}"#,
             r#"{"sim": {"adversary_frac": -0.2}}"#,
             r#"{"sim": {"adversary": " "}}"#,

@@ -5,6 +5,12 @@
 //! clients allocated to a device train sequentially, devices in parallel —
 //! exactly the paper's distributed-training model under resource
 //! constraints. Engines compile once and live for the pool's lifetime.
+//!
+//! Outcomes *stream*: workers push each [`ClientOutcome`] through the
+//! reply channel the moment its client finishes, so the server's
+//! aggregator (or an edge tier of the [`crate::hierarchy`] plane)
+//! consumes updates incrementally instead of buffering the cohort —
+//! the same shape the remote ingest path already has.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
@@ -22,7 +28,9 @@ pub type ClientFlowFactory = Arc<dyn Fn() -> Box<dyn ClientFlow> + Send + Sync>;
 
 struct DeviceJob {
     jobs: Vec<ClientJob>,
-    reply: Sender<(usize, Result<Vec<ClientOutcome>>)>,
+    /// Per-outcome reply stream: one message per finished client, or a
+    /// single error that aborts the device's batch.
+    reply: Sender<(usize, Result<ClientOutcome>)>,
 }
 
 /// A pool of M simulated devices.
@@ -57,25 +65,38 @@ impl DevicePool {
                     let engine = Engine::new(&dir);
                     let mut flow = factory();
                     while let Ok(DeviceJob { jobs, reply }) = rx.recv() {
-                        let result = match &engine {
-                            Err(e) => Err(Error::Runtime(format!(
-                                "device {device}: engine init failed: {e}"
-                            ))),
-                            Ok(engine) => jobs
-                                .iter()
-                                .map(|job| {
-                                    execute_client_round(
+                        match &engine {
+                            Err(e) => {
+                                // Receiver may have given up; ignore
+                                // send errors throughout.
+                                let _ = reply.send((
+                                    device,
+                                    Err(Error::Runtime(format!(
+                                        "device {device}: engine init \
+                                         failed: {e}"
+                                    ))),
+                                ));
+                            }
+                            Ok(engine) => {
+                                for job in &jobs {
+                                    let out = execute_client_round(
                                         flow.as_mut(),
                                         engine,
                                         data.as_ref(),
                                         clock.as_ref(),
                                         job,
-                                    )
-                                })
-                                .collect(),
-                        };
-                        // Receiver may have given up; ignore send errors.
-                        let _ = reply.send((device, result));
+                                    );
+                                    let failed = out.is_err();
+                                    if reply.send((device, out)).is_err()
+                                        || failed
+                                    {
+                                        // Fail-fast per batch, exactly
+                                        // like the old collect() path.
+                                        break;
+                                    }
+                                }
+                            }
+                        }
                     }
                 })
                 .map_err(|e| Error::Runtime(format!("spawn device: {e}")))?;
@@ -89,13 +110,22 @@ impl DevicePool {
         self.senders.len()
     }
 
-    /// Run one round: `groups[d]` trains sequentially on device `d`.
+    /// Run one round, streaming: `groups[d]` trains sequentially on
+    /// device `d`, and `on_outcome(device, outcome)` is invoked on the
+    /// caller's thread for each client the moment it finishes — in
+    /// completion order across devices. The first error (from a worker
+    /// or from the callback) aborts the drain and is returned; remaining
+    /// in-flight work is dropped on the floor like before.
     ///
-    /// Returns per-device outcome lists (same indexing as `groups`).
-    pub fn run_round(
+    /// Returns the number of outcomes delivered.
+    pub fn run_round_with<F>(
         &self,
         groups: Vec<Vec<ClientJob>>,
-    ) -> Result<Vec<Vec<ClientOutcome>>> {
+        mut on_outcome: F,
+    ) -> Result<usize>
+    where
+        F: FnMut(usize, ClientOutcome) -> Result<()>,
+    {
         if groups.len() > self.senders.len() {
             return Err(Error::Runtime(format!(
                 "{} groups for {} devices",
@@ -104,25 +134,42 @@ impl DevicePool {
             )));
         }
         let (reply_tx, reply_rx) = channel();
-        let mut expected = 0;
+        let mut expected = 0usize;
         for (device, jobs) in groups.into_iter().enumerate() {
             if jobs.is_empty() {
                 continue;
             }
-            expected += 1;
+            expected += jobs.len();
             self.senders[device]
                 .send(DeviceJob { jobs, reply: reply_tx.clone() })
                 .map_err(|_| Error::Runtime(format!("device {device} died")))?;
         }
         drop(reply_tx);
-        let mut per_device: Vec<Vec<ClientOutcome>> =
-            (0..self.senders.len()).map(|_| Vec::new()).collect();
-        for _ in 0..expected {
+        let mut delivered = 0usize;
+        while delivered < expected {
             let (device, result) = reply_rx
                 .recv()
                 .map_err(|_| Error::Runtime("device pool hung up".into()))?;
-            per_device[device] = result?;
+            on_outcome(device, result?)?;
+            delivered += 1;
         }
+        Ok(delivered)
+    }
+
+    /// Run one round and collect every outcome, per device (same
+    /// indexing as `groups`). Buffered convenience wrapper over
+    /// [`DevicePool::run_round_with`] for callers that genuinely need
+    /// the whole cohort at once.
+    pub fn run_round(
+        &self,
+        groups: Vec<Vec<ClientJob>>,
+    ) -> Result<Vec<Vec<ClientOutcome>>> {
+        let mut per_device: Vec<Vec<ClientOutcome>> =
+            (0..self.senders.len()).map(|_| Vec::new()).collect();
+        self.run_round_with(groups, |device, outcome| {
+            per_device[device].push(outcome);
+            Ok(())
+        })?;
         Ok(per_device)
     }
 }

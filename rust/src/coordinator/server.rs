@@ -9,6 +9,7 @@ use crate::coordinator::pool::{ClientFlowFactory, DevicePool};
 use crate::data::registry::DataSource;
 use crate::error::{Error, Result};
 use crate::flow::ServerFlow;
+use crate::hierarchy::{HierPlane, Topology};
 use crate::model::ParamVec;
 use crate::runtime::{Batch, Engine};
 use crate::scheduler::{self, Strategy};
@@ -31,6 +32,9 @@ pub struct Server {
     standalone_flow: Option<Box<dyn crate::flow::ClientFlow>>,
     strategy: Box<dyn Strategy>,
     flow: Box<dyn ServerFlow>,
+    /// Aggregation-tree shape (client→edge→cloud when not flat); every
+    /// round reduces through a [`HierPlane`] built from it.
+    topology: Topology,
     plan: HeterogeneityPlan,
     tracker: Arc<Tracker>,
     clock: Arc<dyn Clock>,
@@ -60,6 +64,14 @@ impl Server {
         } else {
             Arc::new(RealClock::new(cfg.time_scale))
         };
+        let topology =
+            crate::registry::with_global(|r| r.topology(&cfg.topology))?;
+        if let Some(edge_agg) = &cfg.edge_agg {
+            // Fail fast on an unknown edge-tier aggregator before any
+            // round streams into it.
+            let probe = AggContext::from_config(params.clone(), &cfg);
+            crate::registry::with_global(|r| r.aggregator(edge_agg, &probe))?;
+        }
         let plan = HeterogeneityPlan::from_config(&cfg, data.num_clients());
         let strategy = scheduler::make_strategy(
             cfg.allocation,
@@ -92,6 +104,7 @@ impl Server {
         tracker.set_config("num_devices", cfg.num_devices.to_string());
         tracker.set_config("clients_per_round", cfg.clients_per_round.to_string());
         tracker.set_config("server_flow", flow.name().to_string());
+        tracker.set_config("topology", topology.name());
 
         Ok(Server {
             cfg,
@@ -101,6 +114,7 @@ impl Server {
             standalone_flow,
             strategy,
             flow,
+            topology,
             plan,
             tracker,
             clock,
@@ -169,64 +183,102 @@ impl Server {
                     .collect()
             })
             .collect();
-        let per_device = match &self.pool {
-            Some(pool) => pool.run_round(jobs)?,
-            None => {
-                // Standalone: inline on the server engine (single compile).
-                let flow = self.standalone_flow.as_mut().expect("standalone flow");
-                let mut out = Vec::with_capacity(jobs.len());
-                for group in jobs {
-                    let mut outs = Vec::with_capacity(group.len());
-                    for job in &group {
-                        outs.push(execute_client_round(
-                            flow.as_mut(),
-                            &self.engine,
-                            self.data.as_ref(),
-                            self.clock.as_ref(),
-                            job,
-                        )?);
-                    }
-                    out.push(outs);
+        // The round's aggregation tree (flat: the plain streaming
+        // aggregator; hierarchical: one edge per active cluster + the
+        // cloud fold) is built *before* training so each outcome streams
+        // straight in the moment its device finishes — no cohort buffer.
+        let ctx = AggContext::from_config(self.params.clone(), &self.cfg)
+            .expect_updates(cohort.len());
+        let mut plane = HierPlane::from_flow(
+            self.flow.as_mut(),
+            &self.engine,
+            &self.cfg.model,
+            &self.topology,
+            ctx,
+            &cohort,
+        )?;
+
+        let mut uplink_bytes = 0usize;
+        let mut clients_m: Vec<ClientMetrics> = Vec::new();
+        let mut measured: Vec<(usize, f64)> = Vec::new();
+        let mut device_ms = vec![0.0f64; num_devices];
+        let mut sum_loss = 0.0f64;
+        let mut sum_correct = 0.0f64;
+        let mut total_samples = 0.0f64;
+        let mut stream_agg_ms = 0.0f64;
+        {
+            let flow = self.flow.as_mut();
+            let mut on_outcome = |device: usize,
+                                  o: ClientOutcome|
+             -> Result<()> {
+                device_ms[device] += o.round_ms;
+                measured.push((o.client, o.round_ms));
+                uplink_bytes += o.upload_bytes;
+                let sw = Stopwatch::start();
+                let decoded = flow.decode_update(&o.update)?;
+                plane.add(
+                    o.client,
+                    decoded.as_ref(),
+                    o.stats.num_samples as f64,
+                )?;
+                stream_agg_ms += sw.elapsed_ms();
+                sum_loss += o.stats.sum_loss;
+                sum_correct += o.stats.correct;
+                total_samples += o.stats.num_samples as f64;
+                clients_m.push(ClientMetrics {
+                    client: o.client,
+                    num_samples: o.stats.num_samples,
+                    train_loss: o.stats.avg_loss(),
+                    train_accuracy: o.stats.accuracy(),
+                    compute_ms: o.compute_ms,
+                    wait_ms: o.wait_ms,
+                    round_ms: o.round_ms,
+                    upload_bytes: o.upload_bytes,
+                    device: o.device_name.clone(),
+                });
+                Ok(())
+            };
+            match &self.pool {
+                Some(pool) => {
+                    pool.run_round_with(jobs, &mut on_outcome)?;
                 }
-                out
+                None => {
+                    // Standalone: inline on the server engine (single
+                    // compile), still streaming through the same hook.
+                    let standalone =
+                        self.standalone_flow.as_mut().expect("standalone flow");
+                    for (device, group) in jobs.into_iter().enumerate() {
+                        for job in &group {
+                            let o = execute_client_round(
+                                standalone.as_mut(),
+                                &self.engine,
+                                self.data.as_ref(),
+                                self.clock.as_ref(),
+                                job,
+                            )?;
+                            on_outcome(device, o)?;
+                        }
+                    }
+                }
             }
-        };
+        }
         let distribution_ms = sw_dist.elapsed_ms();
+        if clients_m.is_empty() {
+            return Err(Error::Runtime("round produced no outcomes".into()));
+        }
 
         // Adaptive profiling feedback (Algorithm 1 line 14).
-        let measured: Vec<(usize, f64)> = per_device
-            .iter()
-            .flatten()
-            .map(|o| (o.client, o.round_ms))
-            .collect();
         self.strategy.observe(&measured);
 
         // Simulated round time = makespan over devices (+ real server work
         // below). With a real clock the wall time matches this; with a
         // virtual clock waits were free, so the makespan is authoritative.
-        let makespan_ms = per_device
-            .iter()
-            .map(|outs| outs.iter().map(|o| o.round_ms).sum::<f64>())
-            .fold(0.0, f64::max);
+        let makespan_ms = device_ms.iter().copied().fold(0.0, f64::max);
 
-        // Streaming aggregation: decode each outcome and feed it straight
-        // into the round's accumulator — no per-client dense vectors.
+        // Close the tree: edges flush their partials, the cloud folds
+        // them weighted by edge cohort mass.
         let sw_agg = Stopwatch::start();
-        let outcomes: Vec<&ClientOutcome> = per_device.iter().flatten().collect();
-        if outcomes.is_empty() {
-            return Err(Error::Runtime("round produced no outcomes".into()));
-        }
-        let ctx = AggContext::from_config(self.params.clone(), &self.cfg)
-            .expect_updates(outcomes.len());
-        let mut agg =
-            self.flow.make_aggregator(&self.engine, &self.cfg.model, ctx)?;
-        let mut uplink_bytes = 0usize;
-        for o in &outcomes {
-            uplink_bytes += o.upload_bytes;
-            let decoded = self.flow.decode_update(&o.update)?;
-            agg.add(decoded.as_ref(), o.stats.num_samples as f64)?;
-        }
-        let new_params = agg.finish()?;
+        let (new_params, hier) = plane.finish()?;
         if !new_params.is_finite() {
             return Err(Error::Runtime(format!(
                 "round {round}: aggregated parameters diverged (NaN/Inf); \
@@ -234,7 +286,7 @@ impl Server {
             )));
         }
         self.params = Arc::new(new_params);
-        let agg_ms = sw_agg.elapsed_ms();
+        let agg_ms = sw_agg.elapsed_ms() + stream_agg_ms;
 
         // Evaluation.
         let (test_loss, test_accuracy) = if self.cfg.eval_every > 0
@@ -247,46 +299,27 @@ impl Server {
         };
 
         // Tracking (three-level hierarchy).
-        let clients: Vec<ClientMetrics> = outcomes
-            .iter()
-            .map(|o| ClientMetrics {
-                client: o.client,
-                num_samples: o.stats.num_samples,
-                train_loss: o.stats.avg_loss(),
-                train_accuracy: o.stats.accuracy(),
-                compute_ms: o.compute_ms,
-                wait_ms: o.wait_ms,
-                round_ms: o.round_ms,
-                upload_bytes: o.upload_bytes,
-                device: o.device_name.clone(),
-            })
-            .collect();
-        let total_samples: f64 =
-            outcomes.iter().map(|o| o.stats.num_samples as f64).sum();
-        let train_loss = outcomes
-            .iter()
-            .map(|o| o.stats.sum_loss)
-            .sum::<f64>()
-            / total_samples.max(1.0);
-        let train_accuracy = outcomes
-            .iter()
-            .map(|o| o.stats.correct)
-            .sum::<f64>()
-            / total_samples.max(1.0);
         let metrics = RoundMetrics {
             round,
-            train_loss,
-            train_accuracy,
+            train_loss: sum_loss / total_samples.max(1.0),
+            train_accuracy: sum_correct / total_samples.max(1.0),
             test_loss,
             test_accuracy,
             round_ms: makespan_ms + agg_ms,
             distribution_ms,
             comm_bytes: downlink_bytes + uplink_bytes,
+            // Flat rounds ship every uplink to the cloud; hierarchical
+            // rounds ship one dense partial per active edge.
+            bytes_to_cloud: if hier.tiered {
+                hier.bytes_to_cloud
+            } else {
+                uplink_bytes
+            },
             // In-process training has full participation: everyone
             // selected reports, nobody drops, updates are never stale.
-            selected: clients.len(),
-            reported: clients.len(),
-            clients,
+            selected: clients_m.len(),
+            reported: clients_m.len(),
+            clients: clients_m,
             ..RoundMetrics::default()
         };
         self.tracker.record_round(metrics.clone());

@@ -1,0 +1,695 @@
+//! The two-tier reduction plane: edge aggregators + cloud reducer.
+//!
+//! Every consumer (server rounds, remote ingest, SimNet's adversary
+//! plane) reduces a round through one [`HierPlane`]:
+//!
+//! ```text
+//!   clients ──add──▶ EdgeAggregator (per cluster, streaming Aggregator)
+//!                        │ finish → EdgePartial {params, cohort mass}
+//!                        ▼
+//!                   CloudReducer (folds partials weighted by mass)
+//!                        │ finish → new global parameters
+//! ```
+//!
+//! For a flat topology the plane *is* the round's single aggregator —
+//! behavior, errors and bit patterns are exactly the pre-hierarchy path.
+//!
+//! **Mean/mean exactness.** When every tier reduces with the plain
+//! `"mean"`, the plane switches to a raw-moment fast path: each edge
+//! keeps the f64 weighted sum `Σ wᵢxᵢ` (the same fused math as
+//! [`crate::aggregate::MeanAggregator`], never normalized per edge), and
+//! the cloud sums the raw moments and divides once by the global weight.
+//! The only difference from the flat reduction is f64 addition grouping,
+//! so a single-edge hierarchy is bit-identical to flat and multi-edge
+//! trees agree to f64 rounding (≪ 1e-12 relative) before the final f32
+//! cast. Robust tiers (`median` at the edge, `trimmed_mean` at the
+//! cloud, any registered name) take the generic path: each edge finishes
+//! to dense parameters that fold into the cloud aggregator weighted by
+//! the edge's cohort mass.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::Arc;
+
+use crate::aggregate::mean::{axpy_into, check_weight, fold_ternary};
+use crate::aggregate::{AggContext, Aggregator};
+use crate::error::{Error, Result};
+use crate::flow::{ServerFlow, Update};
+use crate::model::ParamVec;
+use crate::registry;
+use crate::runtime::Engine;
+
+use super::Topology;
+
+// ------------------------------------------------------- exact partial
+
+/// Un-normalized weighted-sum accumulator: the raw f64 moment a `"mean"`
+/// edge ships to the cloud. Mirrors [`crate::aggregate::MeanAggregator`]
+/// operation-for-operation (fused axpy for dense adds, index-wise folds
+/// for sparse ternary with the `w·global` base applied once at finish),
+/// so a single-edge hierarchy reproduces the flat mean bit-for-bit.
+struct MeanPartial {
+    acc: Vec<f64>,
+    sparse_weight: f64,
+    weight: f64,
+    count: usize,
+    global: Arc<ParamVec>,
+    /// Chunk-parallel worker count for dense folds (1 = sequential);
+    /// the axpy is element-wise, so the count never changes the bits.
+    threads: usize,
+}
+
+impl MeanPartial {
+    fn new(global: Arc<ParamVec>, threads: usize) -> MeanPartial {
+        MeanPartial {
+            acc: vec![0.0; global.len()],
+            sparse_weight: 0.0,
+            weight: 0.0,
+            count: 0,
+            global,
+            threads,
+        }
+    }
+
+    fn add(&mut self, update: &Update, weight: f64) -> Result<()> {
+        check_weight(weight)?;
+        let p = self.acc.len();
+        match update {
+            Update::Dense(x) => {
+                if x.len() != p {
+                    return Err(Error::Runtime(format!(
+                        "aggregate: vector of len {} != P {p}",
+                        x.len()
+                    )));
+                }
+                axpy_into(&mut self.acc, x, weight, self.threads);
+            }
+            Update::SparseTernary { len, indices, signs, magnitude } => {
+                fold_ternary(
+                    &mut self.acc,
+                    p,
+                    *len,
+                    indices,
+                    signs,
+                    *magnitude,
+                    weight,
+                    p,
+                )?;
+                self.sparse_weight += weight;
+            }
+            Update::Masked { .. } => {
+                return Err(Error::Runtime(
+                    "aggregate: masked update reached the aggregator; a \
+                     server plugin with a decryption stage must unmask \
+                     uploads first"
+                        .into(),
+                ))
+            }
+        }
+        self.count += 1;
+        self.weight += weight;
+        Ok(())
+    }
+
+    /// Take the raw moment `Σ wᵢxᵢ` (sparse base folded in, exactly like
+    /// the mean's `finish`) and the cohort mass, resetting for reuse.
+    fn finish_raw(&mut self) -> (Vec<f64>, f64) {
+        let mut s = std::mem::take(&mut self.acc);
+        if self.sparse_weight != 0.0 {
+            for (v, g) in s.iter_mut().zip(self.global.iter()) {
+                *v += self.sparse_weight * *g as f64;
+            }
+        }
+        let w = self.weight;
+        self.acc = vec![0.0; self.global.len()];
+        self.sparse_weight = 0.0;
+        self.weight = 0.0;
+        self.count = 0;
+        (s, w)
+    }
+}
+
+// ------------------------------------------------------- edge partial
+
+/// What one edge ships up to the cloud when its window closes.
+pub struct EdgePartial {
+    /// Cluster id of the producing edge.
+    pub cluster: usize,
+    /// Clients the edge reduced this window.
+    pub clients: usize,
+    /// Edge cohort mass: Σ raw client weights — the weight the cloud
+    /// fold gives this partial.
+    pub weight: f64,
+    /// Dense-partial wire size (one P-vector of f32, regardless of how
+    /// compressed the device uplinks were) — the bytes-to-cloud unit.
+    pub wire_bytes: usize,
+    payload: Payload,
+}
+
+enum Payload {
+    /// Raw f64 moment from the exact mean path (pre-division).
+    Raw(Vec<f64>),
+    /// Reduced parameters from a generic (robust) edge aggregator.
+    Dense(ParamVec),
+}
+
+// ---------------------------------------------------- edge aggregator
+
+/// One edge of the hierarchy: consumes its cluster's client outcomes
+/// through the streaming [`Aggregator`] machinery and emits an
+/// [`EdgePartial`] when the round closes.
+pub struct EdgeAggregator {
+    cluster: usize,
+    inner: EdgeInner,
+}
+
+enum EdgeInner {
+    Exact(MeanPartial),
+    Boxed(Box<dyn Aggregator>),
+}
+
+impl EdgeAggregator {
+    /// Exact mean edge (raw-moment fast path).
+    fn exact(cluster: usize, global: Arc<ParamVec>, threads: usize) -> EdgeAggregator {
+        EdgeAggregator {
+            cluster,
+            inner: EdgeInner::Exact(MeanPartial::new(global, threads)),
+        }
+    }
+
+    /// Generic edge around any registered aggregator.
+    fn boxed(cluster: usize, agg: Box<dyn Aggregator>) -> EdgeAggregator {
+        EdgeAggregator { cluster, inner: EdgeInner::Boxed(agg) }
+    }
+
+    pub fn cluster(&self) -> usize {
+        self.cluster
+    }
+
+    /// Updates folded in since the last finish.
+    pub fn count(&self) -> usize {
+        match &self.inner {
+            EdgeInner::Exact(m) => m.count,
+            EdgeInner::Boxed(a) => a.count(),
+        }
+    }
+
+    /// Fold one client update in with its raw weight.
+    pub fn add(&mut self, update: &Update, weight: f64) -> Result<()> {
+        match &mut self.inner {
+            EdgeInner::Exact(m) => m.add(update, weight),
+            EdgeInner::Boxed(a) => a.add(update, weight),
+        }
+    }
+
+    /// Close the edge's window into a partial for the cloud fold.
+    pub fn finish(&mut self) -> Result<EdgePartial> {
+        let cluster = self.cluster;
+        match &mut self.inner {
+            EdgeInner::Exact(m) => {
+                let clients = m.count;
+                let wire_bytes = m.global.len() * 4;
+                let (raw, weight) = m.finish_raw();
+                Ok(EdgePartial {
+                    cluster,
+                    clients,
+                    weight,
+                    wire_bytes,
+                    payload: Payload::Raw(raw),
+                })
+            }
+            EdgeInner::Boxed(a) => {
+                let clients = a.count();
+                let weight = a.total_weight();
+                let params = a.finish()?;
+                Ok(EdgePartial {
+                    cluster,
+                    clients,
+                    weight,
+                    wire_bytes: params.len() * 4,
+                    payload: Payload::Dense(params),
+                })
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------ cloud reducer
+
+/// The top of the tree: folds [`EdgePartial`]s weighted by edge cohort
+/// mass into the round's new global parameters.
+pub struct CloudReducer {
+    inner: CloudInner,
+}
+
+enum CloudInner {
+    /// Exact path: sum of raw edge moments, one division at the end.
+    Exact { acc: Vec<f64>, weight: f64, folded: usize },
+    /// Generic path: any registered aggregator over dense partials.
+    Boxed(Box<dyn Aggregator>),
+}
+
+impl CloudReducer {
+    fn exact(p: usize) -> CloudReducer {
+        CloudReducer {
+            inner: CloudInner::Exact { acc: vec![0.0; p], weight: 0.0, folded: 0 },
+        }
+    }
+
+    fn boxed(agg: Box<dyn Aggregator>) -> CloudReducer {
+        CloudReducer { inner: CloudInner::Boxed(agg) }
+    }
+
+    /// Fold one edge partial in, weighted by its cohort mass.
+    pub fn fold(&mut self, partial: EdgePartial) -> Result<()> {
+        match (&mut self.inner, partial.payload) {
+            (CloudInner::Exact { acc, weight, folded }, Payload::Raw(s)) => {
+                if s.len() != acc.len() {
+                    return Err(Error::Runtime(format!(
+                        "hierarchy: edge partial of len {} != P {}",
+                        s.len(),
+                        acc.len()
+                    )));
+                }
+                for (a, v) in acc.iter_mut().zip(s.iter()) {
+                    *a += v;
+                }
+                *weight += partial.weight;
+                *folded += 1;
+                Ok(())
+            }
+            (CloudInner::Boxed(agg), Payload::Dense(p)) => {
+                agg.add(&Update::Dense(p), partial.weight)
+            }
+            _ => Err(Error::Runtime(
+                "hierarchy: mixed exact/generic edge partials in one cloud \
+                 fold"
+                    .into(),
+            )),
+        }
+    }
+
+    /// Complete the reduction: the round's new global parameters.
+    pub fn finish(&mut self) -> Result<ParamVec> {
+        match &mut self.inner {
+            CloudInner::Exact { acc, weight, folded } => {
+                if *folded == 0 {
+                    return Err(Error::Runtime("aggregate: empty cohort".into()));
+                }
+                if *weight <= 0.0 {
+                    return Err(Error::Runtime(
+                        "aggregate: zero total weight".into(),
+                    ));
+                }
+                let w = *weight;
+                let out: Vec<f32> =
+                    acc.iter().map(|v| (*v / w) as f32).collect();
+                acc.iter_mut().for_each(|v| *v = 0.0);
+                *weight = 0.0;
+                *folded = 0;
+                Ok(ParamVec(out))
+            }
+            CloudInner::Boxed(agg) => agg.finish(),
+        }
+    }
+}
+
+// -------------------------------------------------------- hier plane
+
+/// Per-round fan-in numbers the callers surface (bytes-to-cloud is the
+/// headline the `hier_scale` benchmark and [`crate::platform::HierSweep`]
+/// report).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct HierStats {
+    /// False for a flat plane (single tier, pre-hierarchy behavior).
+    pub tiered: bool,
+    /// Edges that actually reduced ≥ 1 client this round.
+    pub active_edges: usize,
+    /// Bytes crossing the edge→cloud backhaul: one dense partial per
+    /// active edge. 0 for flat planes, whose device uplinks terminate at
+    /// the cloud directly (the caller's uplink sum is the fan-in there).
+    pub bytes_to_cloud: usize,
+}
+
+/// The round's whole aggregation tree behind one streaming interface:
+/// `add` routes a client update to its cluster's edge, `finish` closes
+/// every edge and folds the partials at the cloud.
+pub struct HierPlane {
+    mode: PlaneMode,
+}
+
+enum PlaneMode {
+    Flat(Box<dyn Aggregator>),
+    Tiered {
+        topology: Topology,
+        edges: BTreeMap<usize, EdgeAggregator>,
+        cloud: CloudReducer,
+    },
+}
+
+impl HierPlane {
+    /// Build the plane through a [`ServerFlow`]'s `make_aggregator`
+    /// (server rounds, remote ingest) — flow-pinned reductions like
+    /// FedReID's backbone apply at every tier. `cohort` is the round's
+    /// selected clients; only their clusters get edge aggregators.
+    pub fn from_flow(
+        flow: &mut dyn ServerFlow,
+        engine: &Engine,
+        model: &str,
+        topology: &Topology,
+        ctx: AggContext,
+        cohort: &[usize],
+    ) -> Result<HierPlane> {
+        if topology.is_flat() {
+            let agg = flow.make_aggregator(engine, model, ctx)?;
+            return Ok(HierPlane { mode: PlaneMode::Flat(agg) });
+        }
+        Self::tiered(topology, ctx, cohort, &mut |c| {
+            flow.make_aggregator(engine, model, c)
+        })
+    }
+
+    /// Build the plane straight from the component registry (SimNet's
+    /// adversary plane, tests): tier names resolve like the default
+    /// flow's `make_aggregator` — `ctx.edge_agg` (falling back to
+    /// `ctx.agg_override`, then `"mean"`) at the edges, `ctx.agg_override`
+    /// (then `"mean"`) at the cloud.
+    pub fn from_registry(
+        topology: &Topology,
+        ctx: AggContext,
+        cohort: &[usize],
+    ) -> Result<HierPlane> {
+        let mut build = |c: AggContext| -> Result<Box<dyn Aggregator>> {
+            let name =
+                c.agg_override.clone().unwrap_or_else(|| "mean".to_string());
+            registry::with_global(|r| r.aggregator(&name, &c))
+        };
+        if topology.is_flat() {
+            let agg = build(ctx)?;
+            return Ok(HierPlane { mode: PlaneMode::Flat(agg) });
+        }
+        Self::tiered(topology, ctx, cohort, &mut build)
+    }
+
+    fn tiered(
+        topology: &Topology,
+        ctx: AggContext,
+        cohort: &[usize],
+        build: &mut dyn FnMut(AggContext) -> Result<Box<dyn Aggregator>>,
+    ) -> Result<HierPlane> {
+        let clusters: BTreeSet<usize> =
+            cohort.iter().map(|&c| topology.cluster_of(c)).collect();
+        if clusters.is_empty() {
+            return Err(Error::Runtime("hierarchy: empty cohort".into()));
+        }
+        let mut edge_ctx = ctx.clone();
+        edge_ctx.agg_override =
+            ctx.edge_agg.clone().or_else(|| ctx.agg_override.clone());
+        edge_ctx.expect_updates =
+            ctx.expect_updates.div_ceil(clusters.len());
+        let mut cloud_ctx = ctx.clone();
+        cloud_ctx.expect_updates = clusters.len();
+
+        // Probe one edge + the cloud: if both tiers reduce with the plain
+        // mean (and no slice masking is in play), switch to the exact
+        // raw-moment path; otherwise keep the probes and build the rest.
+        let mut probe_edge = Some(build(edge_ctx.clone())?);
+        let probe_cloud = build(cloud_ctx)?;
+        let exact = probe_edge.as_ref().map(|a| a.name()) == Some("mean")
+            && probe_cloud.name() == "mean"
+            && ctx.protected_tail == 0;
+
+        let mut edges = BTreeMap::new();
+        let cloud = if exact {
+            // Same chunk-parallel gate the flat MeanAggregator honors,
+            // judged on the per-edge expected cohort.
+            let threads = if edge_ctx.use_parallel(ctx.global.len()) {
+                edge_ctx.effective_threads()
+            } else {
+                1
+            };
+            for &c in &clusters {
+                edges.insert(
+                    c,
+                    EdgeAggregator::exact(c, ctx.global.clone(), threads),
+                );
+            }
+            CloudReducer::exact(ctx.global.len())
+        } else {
+            for &c in &clusters {
+                let agg = match probe_edge.take() {
+                    Some(agg) => agg,
+                    None => build(edge_ctx.clone())?,
+                };
+                edges.insert(c, EdgeAggregator::boxed(c, agg));
+            }
+            CloudReducer::boxed(probe_cloud)
+        };
+        Ok(HierPlane {
+            mode: PlaneMode::Tiered { topology: topology.clone(), edges, cloud },
+        })
+    }
+
+    /// True when an edge tier sits between the clients and the cloud.
+    pub fn is_tiered(&self) -> bool {
+        matches!(self.mode, PlaneMode::Tiered { .. })
+    }
+
+    /// Edge aggregators built for this round (0 for flat planes).
+    pub fn num_edges(&self) -> usize {
+        match &self.mode {
+            PlaneMode::Flat(_) => 0,
+            PlaneMode::Tiered { edges, .. } => edges.len(),
+        }
+    }
+
+    /// Route one client's decoded update to its tier.
+    pub fn add(&mut self, client: usize, update: &Update, weight: f64) -> Result<()> {
+        match &mut self.mode {
+            PlaneMode::Flat(agg) => agg.add(update, weight),
+            PlaneMode::Tiered { topology, edges, .. } => {
+                let cluster = topology.cluster_of(client);
+                let edge = edges.get_mut(&cluster).ok_or_else(|| {
+                    Error::Runtime(format!(
+                        "hierarchy: client {client} (edge {cluster}) was not \
+                         in the round's cohort"
+                    ))
+                })?;
+                edge.add(update, weight)
+            }
+        }
+    }
+
+    /// Close every edge, fold the partials at the cloud, and return the
+    /// new global parameters with the round's fan-in stats.
+    pub fn finish(&mut self) -> Result<(ParamVec, HierStats)> {
+        match &mut self.mode {
+            PlaneMode::Flat(agg) => {
+                Ok((agg.finish()?, HierStats::default()))
+            }
+            PlaneMode::Tiered { edges, cloud, .. } => {
+                let mut stats = HierStats { tiered: true, ..HierStats::default() };
+                for edge in edges.values_mut() {
+                    if edge.count() == 0 {
+                        continue;
+                    }
+                    let partial = edge.finish()?;
+                    stats.active_edges += 1;
+                    stats.bytes_to_cloud += partial.wire_bytes;
+                    cloud.fold(partial)?;
+                }
+                if stats.active_edges == 0 {
+                    return Err(Error::Runtime("aggregate: empty cohort".into()));
+                }
+                Ok((cloud.finish()?, stats))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aggregate::MeanAggregator;
+    use crate::util::rng::Rng;
+
+    fn dense(v: Vec<f32>) -> Update {
+        Update::Dense(ParamVec(v))
+    }
+
+    fn ctx_for(global: Arc<ParamVec>, expect: usize) -> AggContext {
+        AggContext::new(global).expect_updates(expect)
+    }
+
+    /// Random cohort of dense updates + integer weights.
+    fn cohort(rng: &mut Rng, k: usize, p: usize) -> Vec<(usize, Update, f64)> {
+        (0..k)
+            .map(|c| {
+                let v: Vec<f32> =
+                    (0..p).map(|_| (rng.uniform() as f32) * 2.0 - 1.0).collect();
+                (c, dense(v), 1.0 + rng.below(50) as f64)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn flat_plane_is_the_plain_aggregator() {
+        let global = Arc::new(ParamVec::zeros(4));
+        let mut plane = HierPlane::from_registry(
+            &Topology::Flat,
+            ctx_for(global.clone(), 2),
+            &[0, 1],
+        )
+        .unwrap();
+        assert!(!plane.is_tiered());
+        plane.add(0, &dense(vec![2.0; 4]), 1.0).unwrap();
+        plane.add(1, &dense(vec![4.0; 4]), 1.0).unwrap();
+        let (out, stats) = plane.finish().unwrap();
+        assert_eq!(out.0, vec![3.0; 4]);
+        assert!(!stats.tiered);
+        assert_eq!(stats.bytes_to_cloud, 0);
+    }
+
+    #[test]
+    fn single_edge_hierarchy_is_bit_identical_to_flat_mean() {
+        let p = 64;
+        let mut rng = Rng::new(11);
+        let global = Arc::new(ParamVec::zeros(p));
+        let updates = cohort(&mut rng, 12, p);
+
+        let mut flat = MeanAggregator::from_ctx(&ctx_for(global.clone(), 12));
+        let mut plane = HierPlane::from_registry(
+            &Topology::Edges { n: 1 },
+            ctx_for(global.clone(), 12),
+            &updates.iter().map(|(c, _, _)| *c).collect::<Vec<_>>(),
+        )
+        .unwrap();
+        assert!(plane.is_tiered());
+        for (c, u, w) in &updates {
+            flat.add(u, *w).unwrap();
+            plane.add(*c, u, *w).unwrap();
+        }
+        let want = flat.finish().unwrap();
+        let (got, stats) = plane.finish().unwrap();
+        assert_eq!(stats.active_edges, 1);
+        assert_eq!(stats.bytes_to_cloud, p * 4);
+        for (g, w) in got.iter().zip(want.iter()) {
+            assert_eq!(g.to_bits(), w.to_bits(), "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn multi_edge_mean_matches_flat_mean() {
+        let p = 128;
+        let mut rng = Rng::new(23);
+        let global = Arc::new(ParamVec::zeros(p));
+        let updates = cohort(&mut rng, 30, p);
+        let clients: Vec<usize> = updates.iter().map(|(c, _, _)| *c).collect();
+
+        let mut flat = MeanAggregator::from_ctx(&ctx_for(global.clone(), 30));
+        let mut plane = HierPlane::from_registry(
+            &Topology::Edges { n: 5 },
+            ctx_for(global.clone(), 30),
+            &clients,
+        )
+        .unwrap();
+        for (c, u, w) in &updates {
+            flat.add(u, *w).unwrap();
+            plane.add(*c, u, *w).unwrap();
+        }
+        let want = flat.finish().unwrap();
+        let (got, stats) = plane.finish().unwrap();
+        assert_eq!(stats.active_edges, 5);
+        for (i, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+            assert!(
+                ((g - w) as f64).abs() < 1e-6,
+                "coordinate {i}: {g} vs {w}"
+            );
+        }
+    }
+
+    #[test]
+    fn robust_edges_take_the_generic_path() {
+        let global = Arc::new(ParamVec::zeros(2));
+        let mut ctx = ctx_for(global, 6);
+        ctx.edge_agg = Some("median".into());
+        let mut plane = HierPlane::from_registry(
+            &Topology::Edges { n: 2 },
+            ctx,
+            &[0, 1, 2, 3, 4, 5],
+        )
+        .unwrap();
+        // Edge 0 (clients 0,2,4): one hostile outlier — the median holds.
+        plane.add(0, &dense(vec![1.0, 1.0]), 1.0).unwrap();
+        plane.add(2, &dense(vec![1e9, -1e9]), 1.0).unwrap();
+        plane.add(4, &dense(vec![1.0, 1.0]), 1.0).unwrap();
+        // Edge 1 (clients 1,3,5): clean.
+        plane.add(1, &dense(vec![3.0, 3.0]), 1.0).unwrap();
+        plane.add(3, &dense(vec![3.0, 3.0]), 1.0).unwrap();
+        plane.add(5, &dense(vec![3.0, 3.0]), 1.0).unwrap();
+        let (out, stats) = plane.finish().unwrap();
+        assert_eq!(stats.active_edges, 2);
+        // Cloud mean of the two edge medians (equal masses): (1+3)/2.
+        for v in out.iter() {
+            assert!((v - 2.0).abs() < 1e-6, "{v}");
+        }
+    }
+
+    #[test]
+    fn clients_outside_the_cohort_are_rejected() {
+        let global = Arc::new(ParamVec::zeros(2));
+        let mut plane = HierPlane::from_registry(
+            &Topology::Edges { n: 8 },
+            ctx_for(global, 2),
+            &[0, 1],
+        )
+        .unwrap();
+        // Client 2 maps to edge 2, which was never built.
+        let err = plane
+            .add(2, &dense(vec![1.0, 1.0]), 1.0)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("cohort"), "{err}");
+    }
+
+    #[test]
+    fn empty_plane_finish_is_an_error() {
+        let global = Arc::new(ParamVec::zeros(2));
+        let mut plane = HierPlane::from_registry(
+            &Topology::Edges { n: 2 },
+            ctx_for(global, 4),
+            &[0, 1, 2, 3],
+        )
+        .unwrap();
+        let err = plane.finish().unwrap_err().to_string();
+        assert!(err.contains("empty cohort"), "{err}");
+    }
+
+    #[test]
+    fn sparse_updates_fold_through_the_exact_path() {
+        let global = Arc::new(ParamVec(vec![1.0; 4]));
+        let sparse = Update::SparseTernary {
+            len: 4,
+            indices: vec![0, 2],
+            signs: vec![true, false],
+            magnitude: 0.5,
+        };
+        let mut flat = MeanAggregator::from_ctx(&ctx_for(global.clone(), 2));
+        let mut plane = HierPlane::from_registry(
+            &Topology::Edges { n: 2 },
+            ctx_for(global.clone(), 2),
+            &[0, 1],
+        )
+        .unwrap();
+        for (c, u, w) in
+            [(0usize, sparse.clone(), 2.0), (1usize, dense(vec![2.0; 4]), 1.0)]
+        {
+            flat.add(&u, w).unwrap();
+            plane.add(c, &u, w).unwrap();
+        }
+        let want = flat.finish().unwrap();
+        let (got, _) = plane.finish().unwrap();
+        for (g, w) in got.iter().zip(want.iter()) {
+            assert!(((g - w) as f64).abs() < 1e-7, "{g} vs {w}");
+        }
+    }
+}

@@ -1,0 +1,206 @@
+//! Federation topology: how clients map onto aggregation tiers.
+//!
+//! A [`Topology`] describes the shape of the federation's aggregation
+//! tree. `flat` is the classic server⇄clients star every prior layer
+//! assumed; `edges(n)` interposes `n` edge aggregators between the
+//! devices and the cloud (clients are assigned round-robin by id, so the
+//! mapping is deterministic and balanced without any state); and
+//! `clusters(file)` loads an explicit client→edge map from a JSON array
+//! for deployments whose grouping follows real geography.
+//!
+//! Topologies are registered under spec heads in the component registry
+//! (`register_topology`), exactly like partitions and availability
+//! models, so a config selects one by string:
+//!
+//! ```no_run
+//! let mut cfg = easyfl::Config::default();
+//! cfg.topology = "edges(16)".into();
+//! cfg.edge_agg = Some("median".into()); // robust reduce at the edge tier
+//! let report = easyfl::simnet::simulate(&cfg).unwrap();
+//! # let _ = report;
+//! ```
+
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+/// Shape of the aggregation tree.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Topology {
+    /// Single-tier server⇄clients star (the pre-hierarchy default).
+    Flat,
+    /// Two-tier tree with `n` edge aggregators; client `c` reports to
+    /// edge `c % n`.
+    Edges { n: usize },
+    /// Explicit client→edge map (client `c` uses `map[c % map.len()]`).
+    Clusters {
+        /// Source path, kept for `name()` round-tripping.
+        path: String,
+        /// Per-client edge assignment.
+        map: Arc<Vec<usize>>,
+        /// Number of edges (`max(map) + 1`).
+        edges: usize,
+    },
+}
+
+impl Topology {
+    /// Parse a topology spec: `"flat"`, `"edges(16)"`, `"clusters(path)"`.
+    pub fn parse(spec: &str) -> Result<Topology> {
+        let head = crate::registry::spec_head(spec);
+        let inner = crate::registry::spec_inner(spec);
+        match head.as_str() {
+            "flat" | "star" => Ok(Topology::Flat),
+            "edges" => {
+                let n: usize = inner
+                    .unwrap_or("")
+                    .parse()
+                    .map_err(|_| {
+                        Error::Config(format!(
+                            "edges(n) needs an edge count, got {spec:?}"
+                        ))
+                    })?;
+                if n == 0 {
+                    return Err(Error::Config(
+                        "edges(n) needs n ≥ 1 (use \"flat\" for no edge \
+                         tier)"
+                            .into(),
+                    ));
+                }
+                Ok(Topology::Edges { n })
+            }
+            "clusters" => {
+                let path = inner.filter(|p| !p.is_empty()).ok_or_else(|| {
+                    Error::Config(format!(
+                        "clusters(file) needs a JSON map path, got {spec:?}"
+                    ))
+                })?;
+                Self::load_clusters(path)
+            }
+            other => Err(Error::Config(format!(
+                "unknown topology {other:?} (flat | edges(n) | clusters(file))"
+            ))),
+        }
+    }
+
+    /// Load an explicit cluster map: a JSON array of edge ids, one per
+    /// client (`[0, 0, 1, 2, 1, ...]`).
+    pub fn load_clusters(path: &str) -> Result<Topology> {
+        let text = std::fs::read_to_string(path).map_err(|e| {
+            Error::Config(format!("clusters({path}): {e}"))
+        })?;
+        let v = Json::parse(&text)?;
+        let arr = v.as_arr().ok_or_else(|| {
+            Error::Config(format!(
+                "clusters({path}): expected a JSON array of edge ids"
+            ))
+        })?;
+        let mut map = Vec::with_capacity(arr.len());
+        for (i, e) in arr.iter().enumerate() {
+            let id = e.as_usize().ok_or_else(|| {
+                Error::Config(format!(
+                    "clusters({path}): entry {i} is not an edge id"
+                ))
+            })?;
+            map.push(id);
+        }
+        if map.is_empty() {
+            return Err(Error::Config(format!(
+                "clusters({path}): empty cluster map"
+            )));
+        }
+        let edges = map.iter().copied().max().unwrap_or(0) + 1;
+        Ok(Topology::Clusters { path: path.to_string(), map: Arc::new(map), edges })
+    }
+
+    /// Canonical spec string (parse ∘ name is the identity).
+    pub fn name(&self) -> String {
+        match self {
+            Topology::Flat => "flat".into(),
+            Topology::Edges { n } => format!("edges({n})"),
+            Topology::Clusters { path, .. } => format!("clusters({path})"),
+        }
+    }
+
+    /// True for the single-tier star — the hierarchy plane degrades to
+    /// the plain streaming aggregator and every pre-hierarchy timeline
+    /// stays bit-identical.
+    pub fn is_flat(&self) -> bool {
+        matches!(self, Topology::Flat)
+    }
+
+    /// Number of edge aggregators (1 for flat: the cloud itself).
+    pub fn num_edges(&self) -> usize {
+        match self {
+            Topology::Flat => 1,
+            Topology::Edges { n } => *n,
+            Topology::Clusters { edges, .. } => *edges,
+        }
+    }
+
+    /// Edge a client reports to. Deterministic — cluster assignment is
+    /// part of the experiment definition, not of its random state.
+    pub fn cluster_of(&self, client: usize) -> usize {
+        match self {
+            Topology::Flat => 0,
+            Topology::Edges { n } => client % n,
+            Topology::Clusters { map, .. } => map[client % map.len()],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn specs_parse_and_round_trip() {
+        assert_eq!(Topology::parse("flat").unwrap(), Topology::Flat);
+        assert_eq!(Topology::parse("FLAT").unwrap(), Topology::Flat);
+        assert_eq!(
+            Topology::parse("edges(16)").unwrap(),
+            Topology::Edges { n: 16 }
+        );
+        assert_eq!(Topology::parse("edges(16)").unwrap().name(), "edges(16)");
+        assert!(Topology::parse("edges(0)").is_err());
+        assert!(Topology::parse("edges").is_err());
+        assert!(Topology::parse("ring(4)").is_err());
+        assert!(Topology::parse("clusters()").is_err());
+        assert!(Topology::parse("clusters(/no/such/file.json)").is_err());
+    }
+
+    #[test]
+    fn edges_assign_round_robin_and_balanced() {
+        let t = Topology::parse("edges(4)").unwrap();
+        assert_eq!(t.num_edges(), 4);
+        assert!(!t.is_flat());
+        let mut counts = [0usize; 4];
+        for c in 0..100 {
+            counts[t.cluster_of(c)] += 1;
+        }
+        assert_eq!(counts, [25, 25, 25, 25]);
+    }
+
+    #[test]
+    fn cluster_maps_load_from_json() {
+        let dir = std::env::temp_dir();
+        let path = dir.join("easyfl_test_clusters.json");
+        std::fs::write(&path, "[0, 0, 1, 2, 1]").unwrap();
+        let t = Topology::load_clusters(path.to_str().unwrap()).unwrap();
+        assert_eq!(t.num_edges(), 3);
+        assert_eq!(t.cluster_of(2), 1);
+        assert_eq!(t.cluster_of(3), 2);
+        // Clients beyond the map wrap around.
+        assert_eq!(t.cluster_of(5), 0);
+        assert_eq!(t.cluster_of(7), 1);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn flat_is_one_trivial_cluster() {
+        let t = Topology::Flat;
+        assert!(t.is_flat());
+        assert_eq!(t.num_edges(), 1);
+        assert_eq!(t.cluster_of(12345), 0);
+    }
+}

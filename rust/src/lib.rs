@@ -65,6 +65,14 @@
 //! seconds, bit-for-bit reproducible per seed. [`SimSweep`] compares
 //! {sync, async} × allocation strategies in one report table.
 //!
+//! ## Hierarchical federation
+//!
+//! [`hierarchy`] makes the aggregation tree a config axis: `topology =
+//! "edges(16)"` interposes edge aggregators between the devices and the
+//! cloud, cutting cloud fan-in from O(cohort) to O(edges), with per-tier
+//! robust reductions (`edge_agg` / `agg`) and a [`HierSweep`] grid over
+//! topology × aggregator.
+//!
 //! See `examples/` for heterogeneity simulation, distributed-training
 //! optimization (GreedyAda), remote training, the application plugins
 //! (FedProx, STC, FedReID), and `simnet_scale` for a million-client
@@ -81,6 +89,7 @@ pub mod data;
 pub mod deployment;
 pub mod error;
 pub mod flow;
+pub mod hierarchy;
 pub mod model;
 pub mod platform;
 pub mod registry;
@@ -95,7 +104,9 @@ pub use aggregate::{AggContext, Aggregator};
 pub use api::{init, Report, Session, SessionBuilder};
 pub use config::{Allocation, Config, DatasetKind, Partition, SimMode};
 pub use error::{Error, Result};
+pub use hierarchy::{HierPlane, Topology};
 pub use platform::{
-    JobHandle, JobStatus, Platform, SimSweep, SimSweepReport, Sweep, SweepReport,
+    HierSweep, HierSweepReport, JobHandle, JobStatus, Platform, SimSweep,
+    SimSweepReport, Sweep, SweepReport,
 };
 pub use simnet::{SimNet, SimReport};

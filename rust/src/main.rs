@@ -17,7 +17,7 @@ use std::time::Duration;
 use easyfl::comm::{ClientService, RemoteCoordinator, Registry};
 use easyfl::config::{Allocation, Config, DatasetKind, Partition, SimMode};
 use easyfl::deployment::Deployment;
-use easyfl::platform::{Platform, RobustSweep, SimSweep, Sweep};
+use easyfl::platform::{HierSweep, Platform, RobustSweep, SimSweep, Sweep};
 use easyfl::tracking::Tracker;
 use easyfl::util::args::{usage, Args, Opt};
 
@@ -82,7 +82,9 @@ fn common_opts() -> Vec<Opt> {
         Opt { name: "stc-sparsity", help: "STC kept fraction", default: Some("0.01"), is_flag: false },
         Opt { name: "agg", help: "aggregator override (mean | trimmed_mean | median | norm_clip | ...)", default: None, is_flag: false },
         Opt { name: "agg-trim-frac", help: "trimmed_mean: fraction trimmed per end", default: Some("0.1"), is_flag: false },
-        Opt { name: "agg-clip-norm", help: "norm_clip: L2 delta threshold", default: Some("10"), is_flag: false },
+        Opt { name: "agg-clip-norm", help: "norm_clip: L2 delta threshold (0 = adaptive quantile)", default: Some("10"), is_flag: false },
+        Opt { name: "topology", help: "flat | edges(n) | clusters(file)", default: None, is_flag: false },
+        Opt { name: "edge-agg", help: "edge-tier aggregator for hierarchical topologies", default: None, is_flag: false },
         Opt { name: "tracking-dir", help: "persist metrics JSON here", default: None, is_flag: false },
         Opt { name: "config", help: "JSON config file (flags override it)", default: None, is_flag: false },
         Opt { name: "help", help: "show help", default: None, is_flag: true },
@@ -130,6 +132,14 @@ fn parse_config(a: &Args) -> easyfl::Result<Config> {
     }
     cfg.agg_trim_frac = a.get_f64("agg-trim-frac")?;
     cfg.agg_clip_norm = a.get_f64("agg-clip-norm")?;
+    // No baked-in defaults for the hierarchy knobs: absent flags must
+    // not clobber a topology/edge_agg selected in a --config file.
+    if let Some(topology) = a.get("topology") {
+        cfg.topology = topology.to_string();
+    }
+    if let Some(edge_agg) = a.get("edge-agg") {
+        cfg.edge_agg = Some(edge_agg.to_string());
+    }
     if let Some(dir) = a.get("tracking-dir") {
         cfg.tracking_dir = Some(dir.into());
     }
@@ -187,6 +197,10 @@ fn cmd_simulate(argv: &[String]) -> easyfl::Result<()> {
         Opt { name: "robust-sweep", help: "run aggregator × adversary-fraction resilience grid", default: None, is_flag: true },
         Opt { name: "robust-aggs", help: "comma list of aggregators for --robust-sweep", default: Some("mean,trimmed_mean,median,norm_clip"), is_flag: false },
         Opt { name: "adv-fracs", help: "comma list of fractions for --robust-sweep", default: Some("0,0.1,0.3"), is_flag: false },
+        Opt { name: "edge-bandwidth", help: "edge→cloud backhaul bytes/ms (0 = cost model)", default: None, is_flag: false },
+        Opt { name: "hier-sweep", help: "run topology × tier-aggregator fan-in grid", default: None, is_flag: true },
+        Opt { name: "topologies", help: "comma list of topologies for --hier-sweep", default: Some("flat,edges(4),edges(16)"), is_flag: false },
+        Opt { name: "hier-aggs", help: "comma list of tier aggregators for --hier-sweep", default: Some("mean"), is_flag: false },
         Opt { name: "bench-out", help: "write events/sec benchmark JSON here", default: None, is_flag: false },
     ]);
     let a = Args::parse(argv, &opts)?;
@@ -216,7 +230,25 @@ fn cmd_simulate(argv: &[String]) -> easyfl::Result<()> {
     cfg.sim.base_compute_ms = a.get_f64("base-compute-ms")?;
     cfg.sim.adversary = a.get("adversary").unwrap_or("sign-flip").into();
     cfg.sim.adversary_frac = a.get_f64("adversary-frac")?;
+    if a.get("edge-bandwidth").is_some() {
+        cfg.sim.edge_bandwidth = a.get_f64("edge-bandwidth")?;
+    }
     cfg.validate()?;
+
+    if a.has_flag("hier-sweep") {
+        let topologies = list_opt(&a, "topologies", "flat,edges(4),edges(16)");
+        let topo_refs: Vec<&str> =
+            topologies.iter().map(String::as_str).collect();
+        let aggs = list_opt(&a, "hier-aggs", "mean");
+        let agg_refs: Vec<&str> = aggs.iter().map(String::as_str).collect();
+        let platform = Platform::new(4);
+        let report = HierSweep::new(cfg)
+            .topologies(&topo_refs)
+            .aggregators(&agg_refs)
+            .run(&platform)?;
+        print!("{}", report.to_table());
+        return Ok(());
+    }
 
     if a.has_flag("robust-sweep") {
         let aggs = list_opt(&a, "robust-aggs", "mean,trimmed_mean,median,norm_clip");
@@ -273,6 +305,14 @@ fn cmd_simulate(argv: &[String]) -> easyfl::Result<()> {
         report.avg_staleness,
         report.comm_bytes as f64 / (1024.0 * 1024.0)
     );
+    if report.topology != "flat" {
+        println!(
+            "  hierarchy {} | bytes to cloud {:.1} MiB (uplinks stop at \
+             the edge tier)",
+            report.topology,
+            report.bytes_to_cloud as f64 / (1024.0 * 1024.0)
+        );
+    }
     if report.adversary_frac > 0.0 {
         println!(
             "  byzantine {} @ {:.0}% | aggregator {} | envelope dev {:.4}",
@@ -590,12 +630,15 @@ fn cmd_info(argv: &[String]) -> easyfl::Result<()> {
         easyfl::registry::with_global(|r| r.sim_names());
     let aggregators =
         easyfl::registry::with_global(|r| r.aggregator_names());
+    let topologies =
+        easyfl::registry::with_global(|r| r.topology_names());
     println!("\nregistered components:");
     println!("  algorithms:   {}", algos.join(", "));
     println!("  data sources: {}", datasets.join(", "));
     println!("  partitions:   {}", partitions.join(", "));
     println!("  server flows: {}", flows.join(", "));
     println!("  aggregators:  {}", aggregators.join(", "));
+    println!("  topologies:   {}", topologies.join(", "));
     println!("  availability: {}", availability.join(", "));
     println!("  cost models:  {}", cost_models.join(", "));
     println!("  adversaries:  {}", adversaries.join(", "));

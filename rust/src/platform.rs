@@ -344,7 +344,8 @@ impl Platform {
             r.availability(&cfg.sim.availability)?;
             r.cost_model(&cfg.sim.cost_model, &cfg)?;
             r.adversary(&cfg.sim.adversary)?;
-            if let Some(agg) = &cfg.agg {
+            r.topology(&cfg.topology)?;
+            for agg in cfg.agg.iter().chain(cfg.edge_agg.iter()) {
                 // Probe-build so unknown names and bad trim/clip knobs
                 // fail here, not inside a queued worker.
                 let probe = crate::aggregate::AggContext::from_config(
@@ -976,6 +977,202 @@ impl RobustSweepReport {
     }
 }
 
+// ----------------------------------------------------------- hier sweep
+
+/// Grid expansion over federation topologies × tier aggregators,
+/// executed on a [`Platform`] as SimNet jobs and summarized as one
+/// fan-in table: accuracy, makespan and bytes-to-cloud per cell. This is
+/// the three-line answer to "how many edges, with which reduction?":
+///
+/// ```no_run
+/// let platform = easyfl::Platform::new(4);
+/// let report = easyfl::platform::HierSweep::new(easyfl::Config::default())
+///     .topologies(&["flat", "edges(4)", "edges(16)"])
+///     .aggregators(&["mean", "median"])
+///     .run(&platform)
+///     .unwrap();
+/// println!("{}", report.to_table());
+/// ```
+pub struct HierSweep {
+    base: Config,
+    topologies: Vec<String>,
+    aggregators: Vec<String>,
+}
+
+impl HierSweep {
+    /// A sweep whose axes default to the base config's single values.
+    pub fn new(base: Config) -> HierSweep {
+        HierSweep {
+            topologies: vec![base.topology.clone()],
+            aggregators: vec![base
+                .edge_agg
+                .clone()
+                .or_else(|| base.agg.clone())
+                .unwrap_or_else(|| "mean".to_string())],
+            base,
+        }
+    }
+
+    pub fn topologies(mut self, topologies: &[&str]) -> HierSweep {
+        self.topologies = topologies.iter().map(|s| s.to_string()).collect();
+        self
+    }
+
+    pub fn aggregators(mut self, aggs: &[&str]) -> HierSweep {
+        self.aggregators = aggs.iter().map(|s| s.to_string()).collect();
+        self
+    }
+
+    /// Expand the grid (topology-major, like the report table). The
+    /// aggregator axis lands on the tier it applies to: the edge tier
+    /// (`edge_agg`) for hierarchical cells, the cloud (`agg`) for flat
+    /// ones.
+    pub fn configs(&self) -> Vec<Config> {
+        let mut out = Vec::new();
+        for topology in &self.topologies {
+            for agg in &self.aggregators {
+                let mut cfg = self.base.clone();
+                cfg.topology = topology.clone();
+                if crate::registry::spec_head(topology) == "flat" {
+                    cfg.agg = Some(agg.clone());
+                    cfg.edge_agg = None;
+                } else {
+                    cfg.edge_agg = Some(agg.clone());
+                }
+                out.push(cfg);
+            }
+        }
+        out
+    }
+
+    /// Submit every cell as a SimNet job and join them into a report.
+    /// Cells are validated up front, so an unknown topology or
+    /// aggregator fails the whole sweep fast.
+    pub fn run(self, platform: &Platform) -> Result<HierSweepReport> {
+        let mut handles = Vec::new();
+        for cfg in self.configs() {
+            cfg.validate()?;
+            registry::with_global(|r| {
+                r.topology(&cfg.topology)?;
+                let probe = crate::aggregate::AggContext::from_config(
+                    Arc::new(crate::model::ParamVec::zeros(1)),
+                    &cfg,
+                );
+                for agg in cfg.agg.iter().chain(cfg.edge_agg.iter()) {
+                    r.aggregator(agg, &probe)?;
+                }
+                Ok(())
+            })?;
+            let topology = cfg.topology.clone();
+            let aggregator = cfg
+                .edge_agg
+                .clone()
+                .or_else(|| cfg.agg.clone())
+                .unwrap_or_else(|| "mean".to_string());
+            let slot: Arc<Mutex<Option<SimReport>>> = Arc::new(Mutex::new(None));
+            let slot_w = slot.clone();
+            let label = format!("hier-{topology}-{aggregator}");
+            let tracker = Arc::new(Tracker::new(&label));
+            let rounds = cfg.rounds;
+            let handle = platform.spawn_job(
+                &label,
+                rounds,
+                tracker,
+                Box::new(move |ctx| {
+                    let sim = run_sim_job(&cfg, ctx)?;
+                    let report = sim.to_report();
+                    *slot_w.lock().unwrap() = Some(sim);
+                    Ok(report)
+                }),
+            )?;
+            handles.push((topology, aggregator, slot, handle));
+        }
+        let rows = handles
+            .into_iter()
+            .map(|(topology, aggregator, slot, handle)| {
+                let outcome = match handle.join() {
+                    Ok(_) => slot.lock().unwrap().take().ok_or_else(|| {
+                        Error::Runtime("sim job finished without a report".into())
+                    }),
+                    Err(e) => Err(e),
+                };
+                HierSweepRow { topology, aggregator, outcome }
+            })
+            .collect();
+        Ok(HierSweepReport { rows })
+    }
+}
+
+/// One hierarchy-sweep cell's identity and outcome.
+pub struct HierSweepRow {
+    pub topology: String,
+    /// Tier aggregator of the cell (edge tier when hierarchical, cloud
+    /// when flat).
+    pub aggregator: String,
+    pub outcome: Result<SimReport>,
+}
+
+/// Results of a [`HierSweep`], renderable as an aligned text table.
+pub struct HierSweepReport {
+    pub rows: Vec<HierSweepRow>,
+}
+
+impl HierSweepReport {
+    /// Successful cells only.
+    pub fn ok_rows(&self) -> impl Iterator<Item = (&HierSweepRow, &SimReport)> {
+        self.rows
+            .iter()
+            .filter_map(|r| r.outcome.as_ref().ok().map(|rep| (r, rep)))
+    }
+
+    /// Bytes-to-cloud of the (topology, aggregator) cell, if it ran.
+    pub fn bytes_to_cloud_of(
+        &self,
+        topology: &str,
+        aggregator: &str,
+    ) -> Option<usize> {
+        self.ok_rows()
+            .find(|(row, _)| {
+                row.topology == topology && row.aggregator == aggregator
+            })
+            .map(|(_, rep)| rep.bytes_to_cloud)
+    }
+
+    /// Render the fan-in table the `simulate --hier-sweep` subcommand
+    /// prints: accuracy, makespan and bytes-to-cloud are the headline
+    /// columns.
+    pub fn to_table(&self) -> String {
+        let mut out = String::new();
+        let header = format!(
+            "{:<12} {:<12} {:>7} {:>8} {:>12} {:>14}  {}\n",
+            "topology", "agg", "rounds", "acc%", "makespan s", "MB to cloud",
+            "status"
+        );
+        out.push_str(&header);
+        out.push_str(&"-".repeat(header.len().saturating_sub(1)));
+        out.push('\n');
+        for row in &self.rows {
+            match &row.outcome {
+                Ok(rep) => out.push_str(&format!(
+                    "{:<12} {:<12} {:>7} {:>8.2} {:>12.1} {:>14.2}  {}\n",
+                    row.topology,
+                    row.aggregator,
+                    rep.rounds,
+                    rep.final_accuracy * 100.0,
+                    rep.makespan_ms / 1000.0,
+                    rep.bytes_to_cloud as f64 / (1024.0 * 1024.0),
+                    if rep.converged { "ok" } else { "partial" },
+                )),
+                Err(e) => out.push_str(&format!(
+                    "{:<12} {:<12} {:>7} {:>8} {:>12} {:>14}  error: {e}\n",
+                    row.topology, row.aggregator, "-", "-", "-", "-",
+                )),
+            }
+        }
+        out
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1325,6 +1522,66 @@ mod tests {
         assert!(table.contains("trimmed_mean"), "{table}");
         assert!(report.accuracy_of("mean", 0.0).is_some());
         assert!(report.accuracy_of("krum", 0.0).is_none());
+    }
+
+    #[test]
+    fn submit_sim_rejects_unknown_topology_and_edge_agg_before_queueing() {
+        let platform = Platform::new(1);
+        let mut cfg = small_sim_config();
+        cfg.topology = "torus(3)".into();
+        let err = platform.submit_sim(cfg).unwrap_err().to_string();
+        assert!(err.contains("torus"), "{err}");
+        assert!(err.contains("edges"), "{err}");
+        let mut cfg = small_sim_config();
+        cfg.edge_agg = Some("krum".into());
+        let err = platform.submit_sim(cfg).unwrap_err().to_string();
+        assert!(err.contains("krum"), "{err}");
+        assert!(err.contains("trimmed_mean"), "{err}");
+        let mut cfg = small_sim_config();
+        cfg.topology = "edges(8)".into();
+        cfg.edge_agg = Some("median".into());
+        assert!(platform.submit_sim(cfg).is_ok());
+    }
+
+    #[test]
+    fn hier_sweep_expands_topology_by_aggregator_grid() {
+        let sweep = HierSweep::new(small_sim_config())
+            .topologies(&["flat", "edges(4)"])
+            .aggregators(&["mean", "median"]);
+        let cells = sweep.configs();
+        assert_eq!(cells.len(), 4);
+        // Flat cells land the aggregator on the cloud tier, hierarchical
+        // cells on the edge tier.
+        assert!(cells.iter().any(|c| c.topology == "flat"
+            && c.agg.as_deref() == Some("median")
+            && c.edge_agg.is_none()));
+        assert!(cells.iter().any(|c| c.topology == "edges(4)"
+            && c.edge_agg.as_deref() == Some("median")));
+        let platform = Platform::new(4);
+        let report = sweep.run(&platform).unwrap();
+        assert_eq!(report.ok_rows().count(), 4);
+        let table = report.to_table();
+        assert!(table.contains("MB to cloud"), "{table}");
+        assert!(table.contains("edges(4)"), "{table}");
+        // Fan-in: the edge tier ships 4 partials instead of ~10 uplinks.
+        let flat = report.bytes_to_cloud_of("flat", "mean").unwrap();
+        let hier = report.bytes_to_cloud_of("edges(4)", "mean").unwrap();
+        assert!(
+            hier < flat,
+            "edges(4) must cut bytes-to-cloud: {hier} !< {flat}"
+        );
+        assert!(report.bytes_to_cloud_of("edges(16)", "mean").is_none());
+    }
+
+    #[test]
+    fn hier_sweep_rejects_unknown_topologies_up_front() {
+        let platform = Platform::new(1);
+        let err = HierSweep::new(small_sim_config())
+            .topologies(&["ring(3)"])
+            .run(&platform)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("ring"), "{err}");
     }
 
     #[test]

@@ -36,6 +36,7 @@ use crate::coordinator::ClientFlowFactory;
 use crate::data::registry::DataSource;
 use crate::error::{Error, Result};
 use crate::flow::ServerFlow;
+use crate::hierarchy::Topology;
 use crate::simnet::{AdversaryModel, AvailabilityModel, CostModel};
 
 /// Everything an algorithm contributes to a session: the server half and
@@ -78,6 +79,11 @@ pub type CostModelBuilder =
 pub type AdversaryBuilder =
     Arc<dyn Fn(&str) -> Result<AdversaryModel> + Send + Sync>;
 
+/// Parser closure for a federation topology spec (receives the full
+/// spec string, e.g. `"edges(16)"` for the registered name `"edges"`).
+pub type TopologyBuilder =
+    Arc<dyn Fn(&str) -> Result<Topology> + Send + Sync>;
+
 /// Name → constructor tables for every pluggable component kind.
 #[derive(Default)]
 pub struct ComponentRegistry {
@@ -89,6 +95,7 @@ pub struct ComponentRegistry {
     cost_models: BTreeMap<String, CostModelBuilder>,
     aggregators: BTreeMap<String, AggregatorBuilder>,
     adversaries: BTreeMap<String, AdversaryBuilder>,
+    topologies: BTreeMap<String, TopologyBuilder>,
 }
 
 fn unknown(kind: &str, name: &str, have: Vec<&String>) -> Error {
@@ -110,6 +117,17 @@ pub(crate) fn spec_head(spec: &str) -> String {
         .to_ascii_lowercase()
 }
 
+/// Paren-wrapped argument of a parameterized spec: `"edges(16)"` →
+/// `Some("16")`, `"trace(dev.json)"` → `Some("dev.json")`, `"flat"` →
+/// `None`. Shared by spec parsers whose argument is not numeric (file
+/// paths) so extraction cannot diverge from [`spec_head`].
+pub(crate) fn spec_inner(spec: &str) -> Option<&str> {
+    spec.find('(')
+        .map(|i| &spec[i + 1..])
+        .and_then(|r| r.strip_suffix(')'))
+        .map(str::trim)
+}
+
 impl ComponentRegistry {
     pub fn new() -> Self {
         Self::default()
@@ -122,6 +140,7 @@ impl ComponentRegistry {
         crate::algorithms::register_builtins(&mut reg);
         crate::data::register_builtins(&mut reg);
         crate::flow::register_builtins(&mut reg);
+        crate::hierarchy::register_builtins(&mut reg);
         crate::simnet::register_builtins(&mut reg);
         reg
     }
@@ -173,6 +192,13 @@ impl ComponentRegistry {
     /// as `"scaled-noise"`.
     pub fn register_adversary(&mut self, name: &str, b: AdversaryBuilder) {
         self.adversaries.insert(name.to_string(), b);
+    }
+
+    /// Register (or replace) a federation topology. `name` is the spec
+    /// head: `"edges(16)"` resolves the parser registered as `"edges"`
+    /// (selected via `Config.topology`).
+    pub fn register_topology(&mut self, name: &str, b: TopologyBuilder) {
+        self.topologies.insert(name.to_string(), b);
     }
 
     // ------------------------------------------------------------ lookup
@@ -309,6 +335,26 @@ impl ComponentRegistry {
             self.partitions.keys().cloned().collect(),
             self.server_flows.keys().cloned().collect(),
         )
+    }
+
+    /// Parse a federation topology spec (`"flat"`, `"edges(16)"`,
+    /// `"clusters(file)"`, any registered name). Lookup mirrors
+    /// [`ComponentRegistry::partition`].
+    pub fn topology(&self, spec: &str) -> Result<Topology> {
+        let head = spec_head(spec);
+        match self.topologies.get(head.as_str()) {
+            Some(b) => b(spec),
+            None => Err(unknown(
+                "topology",
+                spec,
+                self.topologies.keys().collect(),
+            )),
+        }
+    }
+
+    /// Registered topology names.
+    pub fn topology_names(&self) -> Vec<String> {
+        self.topologies.keys().cloned().collect()
     }
 
     /// Registered SimNet model names:

@@ -13,7 +13,10 @@
 //! the available pool (or offline, if their availability trace flipped
 //! while they were busy) — no client is ever leaked mid-round.
 
+use std::sync::Arc;
+
 use crate::error::{Error, Result};
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 
 /// Lifecycle phase of one simulated client.
@@ -143,7 +146,8 @@ impl ClientState {
 
 /// Named, seeded availability trace generators. Resolved through the
 /// component registry so configs select them by string name:
-/// `"always-on"`, `"diurnal"`, `"diurnal(0.6)"`, `"flaky(1800000,600000)"`.
+/// `"always-on"`, `"diurnal"`, `"diurnal(0.6)"`, `"flaky(1800000,600000)"`,
+/// `"trace(devices.json)"`.
 #[derive(Debug, Clone, PartialEq)]
 pub enum AvailabilityModel {
     /// Every client is always online (the 100k-in-seconds default).
@@ -152,6 +156,21 @@ pub enum AvailabilityModel {
     Diurnal { period_ms: f64, duty: f64 },
     /// Memoryless on/off churn with exponential dwell times.
     Flaky { mean_on_ms: f64, mean_off_ms: f64 },
+    /// Replay of real per-device on/off intervals loaded from a JSON
+    /// trace file (`"trace(path)"`). Each simulated client draws one
+    /// trace row at population setup — a seed-deterministic *random*
+    /// draw rather than `client % rows`, so device availability stays
+    /// decorrelated from anything else derived from the client id (like
+    /// `edges(n)` cluster assignment) — and replays that row's
+    /// on-intervals cyclically with period `period_ms`.
+    Trace {
+        /// Source path, kept for `name()` round-tripping.
+        path: String,
+        /// Per-row sorted, merged on-intervals `(start_ms, end_ms)`
+        /// within `[0, period_ms]`.
+        rows: Arc<Vec<Vec<(f64, f64)>>>,
+        period_ms: f64,
+    },
 }
 
 /// One simulated day, the default diurnal period.
@@ -179,6 +198,19 @@ impl AvailabilityModel {
     /// Parse a spec string (head selects the model, args tune it).
     pub fn parse(spec: &str) -> Result<AvailabilityModel> {
         let head = crate::registry::spec_head(spec);
+        if head == "trace" {
+            // The trace argument is a file path, not a number — handle
+            // it before the numeric arg parser sees the spec.
+            let path = crate::registry::spec_inner(spec)
+                .filter(|p| !p.is_empty())
+                .ok_or_else(|| {
+                    Error::Config(format!(
+                        "trace(file) needs a JSON device-trace path, got \
+                         {spec:?}"
+                    ))
+                })?;
+            return Self::load_trace(path);
+        }
         let args = parse_args(spec)?;
         match head.as_str() {
             "always-on" | "always" | "on" => Ok(AvailabilityModel::AlwaysOn),
@@ -207,9 +239,112 @@ impl AvailabilityModel {
                 Ok(AvailabilityModel::Flaky { mean_on_ms, mean_off_ms })
             }
             other => Err(Error::Config(format!(
-                "unknown availability model {other:?} (always-on | diurnal | flaky)"
+                "unknown availability model {other:?} \
+                 (always-on | diurnal | flaky | trace(file))"
             ))),
         }
+    }
+
+    /// Load a device trace: a JSON object with a `"clients"` array of
+    /// per-device on-interval lists (`[[start_ms, end_ms], ...]`) and an
+    /// optional `"period_ms"` replay cycle (default: the latest interval
+    /// end). Intervals are validated, sorted and merged per row; a trace
+    /// whose on-window wraps the period boundary is rejected (start the
+    /// cycle inside an off window instead).
+    pub fn load_trace(path: &str) -> Result<AvailabilityModel> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Config(format!("trace({path}): {e}")))?;
+        let v = Json::parse(&text)?;
+        let clients = v.get("clients").as_arr().ok_or_else(|| {
+            Error::Config(format!(
+                "trace({path}): expected a \"clients\" array of interval \
+                 lists"
+            ))
+        })?;
+        if clients.is_empty() {
+            return Err(Error::Config(format!(
+                "trace({path}): empty \"clients\" array"
+            )));
+        }
+        let mut rows: Vec<Vec<(f64, f64)>> = Vec::with_capacity(clients.len());
+        let mut max_end = 0.0f64;
+        for (c, row) in clients.iter().enumerate() {
+            let intervals = row.as_arr().ok_or_else(|| {
+                Error::Config(format!(
+                    "trace({path}): client {c} is not an interval list"
+                ))
+            })?;
+            let mut parsed: Vec<(f64, f64)> = Vec::with_capacity(intervals.len());
+            for iv in intervals {
+                let pair = iv.as_arr().filter(|p| p.len() == 2);
+                let (s, e) = match pair.map(|p| (p[0].as_f64(), p[1].as_f64()))
+                {
+                    Some((Some(s), Some(e))) => (s, e),
+                    _ => {
+                        return Err(Error::Config(format!(
+                            "trace({path}): client {c} has a malformed \
+                             interval (want [start_ms, end_ms])"
+                        )))
+                    }
+                };
+                if !(s >= 0.0 && e > s && e.is_finite()) {
+                    return Err(Error::Config(format!(
+                        "trace({path}): client {c} interval [{s}, {e}] must \
+                         satisfy 0 ≤ start < end"
+                    )));
+                }
+                parsed.push((s, e));
+            }
+            parsed.sort_by(|a, b| a.0.total_cmp(&b.0));
+            // Merge touching/overlapping intervals so boundaries are
+            // genuine toggles.
+            let mut merged: Vec<(f64, f64)> = Vec::with_capacity(parsed.len());
+            for (s, e) in parsed {
+                match merged.last_mut() {
+                    Some(last) if s <= last.1 => last.1 = last.1.max(e),
+                    _ => merged.push((s, e)),
+                }
+            }
+            if let Some(&(_, e)) = merged.last() {
+                max_end = max_end.max(e);
+            }
+            rows.push(merged);
+        }
+        let period_ms = match v.get("period_ms").as_f64() {
+            Some(p) => p,
+            None => max_end,
+        };
+        if !(period_ms > 0.0 && period_ms.is_finite()) {
+            return Err(Error::Config(format!(
+                "trace({path}): needs a positive period_ms (or at least \
+                 one on-interval to infer it from)"
+            )));
+        }
+        for (c, row) in rows.iter().enumerate() {
+            if let Some(&(_, e)) = row.last() {
+                if e > period_ms {
+                    return Err(Error::Config(format!(
+                        "trace({path}): client {c} interval ends at {e} > \
+                         period_ms {period_ms}"
+                    )));
+                }
+            }
+            if let (Some(&(s0, _)), Some(&(_, e1))) = (row.first(), row.last())
+            {
+                if s0 == 0.0 && e1 == period_ms {
+                    return Err(Error::Config(format!(
+                        "trace({path}): client {c}'s on-window wraps the \
+                         period boundary; start the replay cycle inside an \
+                         off window"
+                    )));
+                }
+            }
+        }
+        Ok(AvailabilityModel::Trace {
+            path: path.to_string(),
+            rows: Arc::new(rows),
+            period_ms,
+        })
     }
 
     pub fn name(&self) -> String {
@@ -221,14 +356,19 @@ impl AvailabilityModel {
             AvailabilityModel::Flaky { mean_on_ms, mean_off_ms } => {
                 format!("flaky({mean_on_ms},{mean_off_ms})")
             }
+            AvailabilityModel::Trace { path, .. } => format!("trace({path})"),
         }
     }
 
-    /// Per-client phase offset (only diurnal traces use it).
+    /// Per-client phase offset (diurnal traces), or the assigned trace
+    /// row index (device-trace replay).
     pub fn sample_phase_ms(&self, rng: &mut Rng) -> f64 {
         match self {
             AvailabilityModel::Diurnal { period_ms, .. } => {
                 rng.uniform() * period_ms
+            }
+            AvailabilityModel::Trace { rows, .. } => {
+                rng.below(rows.len() as u64) as f64
             }
             _ => 0.0,
         }
@@ -236,7 +376,7 @@ impl AvailabilityModel {
 
     /// Is the client online at t = 0?
     pub fn initial_online(&self, phase_ms: f64, rng: &mut Rng) -> bool {
-        match *self {
+        match self {
             AvailabilityModel::AlwaysOn => true,
             AvailabilityModel::Diurnal { period_ms, duty } => {
                 (phase_ms % period_ms) < duty * period_ms
@@ -244,6 +384,11 @@ impl AvailabilityModel {
             AvailabilityModel::Flaky { mean_on_ms, mean_off_ms } => {
                 // Stationary distribution of the on/off chain.
                 rng.uniform() < mean_on_ms / (mean_on_ms + mean_off_ms)
+            }
+            AvailabilityModel::Trace { rows, .. } => {
+                trace_row(rows, phase_ms)
+                    .first()
+                    .is_some_and(|&(s, _)| s == 0.0)
             }
         }
     }
@@ -257,9 +402,10 @@ impl AvailabilityModel {
         now_ms: f64,
         rng: &mut Rng,
     ) -> f64 {
-        match *self {
+        match self {
             AvailabilityModel::AlwaysOn => f64::INFINITY,
             AvailabilityModel::Diurnal { period_ms, duty } => {
+                let (period_ms, duty) = (*period_ms, *duty);
                 let on_ms = duty * period_ms;
                 let local = (now_ms + phase_ms) % period_ms;
                 if online {
@@ -272,12 +418,43 @@ impl AvailabilityModel {
                 }
             }
             AvailabilityModel::Flaky { mean_on_ms, mean_off_ms } => {
-                let mean = if online { mean_on_ms } else { mean_off_ms };
+                let mean = if online { *mean_on_ms } else { *mean_off_ms };
                 let u = (1.0 - rng.uniform()).max(f64::MIN_POSITIVE);
                 now_ms + (-u.ln()) * mean
             }
+            AvailabilityModel::Trace { rows, period_ms, .. } => {
+                let period = *period_ms;
+                let row = trace_row(rows, phase_ms);
+                if row.is_empty() {
+                    // A device that never reported online stays offline.
+                    return f64::INFINITY;
+                }
+                let local = now_ms.rem_euclid(period);
+                let cycle_base = now_ms - local;
+                if online {
+                    // Next end boundary strictly after `local` (wrap to
+                    // the next cycle's first end if none remains).
+                    match row.iter().map(|&(_, e)| e).find(|&e| e > local) {
+                        Some(e) => cycle_base + e,
+                        None => cycle_base + period + row[0].1,
+                    }
+                } else {
+                    // Next start boundary strictly after `local`.
+                    match row.iter().map(|&(s, _)| s).find(|&s| s > local) {
+                        Some(s) => cycle_base + s,
+                        None => cycle_base + period + row[0].0,
+                    }
+                }
+            }
         }
     }
+}
+
+/// The trace row a client's phase encodes (clamped defensively; phases
+/// are produced by [`AvailabilityModel::sample_phase_ms`]).
+fn trace_row(rows: &[Vec<(f64, f64)>], phase_ms: f64) -> &[(f64, f64)] {
+    let i = (phase_ms.max(0.0) as usize).min(rows.len().saturating_sub(1));
+    &rows[i]
 }
 
 // --------------------------------------------------------------- pool
@@ -436,6 +613,86 @@ mod tests {
         let online = (0..n).filter(|_| m.initial_online(0.0, &mut rng)).count();
         let frac = online as f64 / n as f64;
         assert!((frac - 500.0 / 550.0).abs() < 0.05, "{frac}");
+    }
+
+    #[test]
+    fn trace_model_replays_intervals_cyclically() {
+        let path = std::env::temp_dir().join("easyfl_test_trace.json");
+        std::fs::write(
+            &path,
+            r#"{"period_ms": 1000,
+                "clients": [[[0, 300], [500, 800]], [[200, 400]], []]}"#,
+        )
+        .unwrap();
+        let m = AvailabilityModel::load_trace(path.to_str().unwrap()).unwrap();
+        let mut rng = Rng::new(1);
+        // Row 0 starts online at t = 0 and toggles at its boundaries.
+        assert!(m.initial_online(0.0, &mut rng));
+        assert_eq!(m.next_toggle_ms(true, 0.0, 0.0, &mut rng), 300.0);
+        assert_eq!(m.next_toggle_ms(false, 0.0, 300.0, &mut rng), 500.0);
+        assert_eq!(m.next_toggle_ms(true, 0.0, 500.0, &mut rng), 800.0);
+        // After the last interval the replay wraps into the next cycle.
+        assert_eq!(m.next_toggle_ms(false, 0.0, 800.0, &mut rng), 1000.0);
+        assert_eq!(m.next_toggle_ms(true, 0.0, 1000.0, &mut rng), 1300.0);
+        // Row 1 starts offline; row 2 (no intervals) never comes online.
+        assert!(!m.initial_online(1.0, &mut rng));
+        assert_eq!(m.next_toggle_ms(false, 1.0, 0.0, &mut rng), 200.0);
+        assert!(!m.initial_online(2.0, &mut rng));
+        assert!(m.next_toggle_ms(false, 2.0, 0.0, &mut rng).is_infinite());
+        // Phases are row indices within the trace.
+        for _ in 0..50 {
+            let p = m.sample_phase_ms(&mut rng);
+            assert!((0.0..3.0).contains(&p), "{p}");
+        }
+        assert!(m.name().starts_with("trace("), "{}", m.name());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn trace_parsing_rejects_malformed_files() {
+        let dir = std::env::temp_dir();
+        let bad = [
+            ("easyfl_bad_trace1.json", r#"{"clients": []}"#),
+            ("easyfl_bad_trace2.json", r#"{"clients": [[[300, 200]]]}"#),
+            (
+                "easyfl_bad_trace3.json",
+                r#"{"period_ms": 100, "clients": [[[0, 200]]]}"#,
+            ),
+            // On-window wrapping the period boundary is ambiguous.
+            (
+                "easyfl_bad_trace4.json",
+                r#"{"period_ms": 400, "clients": [[[0, 400]]]}"#,
+            ),
+            // No interval anywhere ⇒ no period to infer.
+            ("easyfl_bad_trace5.json", r#"{"clients": [[]]}"#),
+        ];
+        for (name, content) in bad {
+            let p = dir.join(name);
+            std::fs::write(&p, content).unwrap();
+            assert!(
+                AvailabilityModel::load_trace(p.to_str().unwrap()).is_err(),
+                "{content}"
+            );
+            let _ = std::fs::remove_file(&p);
+        }
+        assert!(AvailabilityModel::parse("trace(/no/such/trace.json)").is_err());
+        assert!(AvailabilityModel::parse("trace()").is_err());
+    }
+
+    #[test]
+    fn trace_merges_overlapping_intervals() {
+        let path = std::env::temp_dir().join("easyfl_test_trace_merge.json");
+        std::fs::write(
+            &path,
+            r#"{"period_ms": 1000, "clients": [[[100, 300], [250, 500], [500, 600]]]}"#,
+        )
+        .unwrap();
+        let m = AvailabilityModel::load_trace(path.to_str().unwrap()).unwrap();
+        let mut rng = Rng::new(2);
+        // [100,300] ∪ [250,500] ∪ [500,600] merge to one [100,600] window.
+        assert_eq!(m.next_toggle_ms(false, 0.0, 0.0, &mut rng), 100.0);
+        assert_eq!(m.next_toggle_ms(true, 0.0, 100.0, &mut rng), 600.0);
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -34,6 +34,11 @@ pub struct CostModel {
     /// client. `INFINITY` ⇒ uploads cost only latency.
     pub bandwidth_lo: f64,
     pub bandwidth_hi: f64,
+    /// Edge→cloud backhaul bandwidth in bytes/ms for hierarchical
+    /// topologies (`INFINITY` ⇒ the partial hop costs only latency).
+    /// Flat timelines never read it, so pre-hierarchy trace digests are
+    /// untouched.
+    pub edge_bandwidth: f64,
 }
 
 impl CostModel {
@@ -49,6 +54,7 @@ impl CostModel {
             model_bytes: 1_600_000,
             bandwidth_lo: 250.0,     // 2 Mbit/s
             bandwidth_hi: 12_500.0,  // 100 Mbit/s
+            edge_bandwidth: 125_000.0, // 1 Gbit/s metro backhaul
         }
     }
 
@@ -63,6 +69,7 @@ impl CostModel {
             model_bytes: 1_600_000,
             bandwidth_lo: f64::INFINITY,
             bandwidth_hi: f64::INFINITY,
+            edge_bandwidth: f64::INFINITY,
         }
     }
 
@@ -85,6 +92,7 @@ impl CostModel {
             model_bytes: 1_600_000,
             bandwidth_lo: 1_250_000.0,
             bandwidth_hi: 1_250_000.0,
+            edge_bandwidth: 1_250_000.0, // 10 Gbit rack uplink
         }
     }
 
@@ -96,6 +104,9 @@ impl CostModel {
         }
         if cfg.sim.model_bytes > 0 {
             self.model_bytes = cfg.sim.model_bytes;
+        }
+        if cfg.sim.edge_bandwidth > 0.0 {
+            self.edge_bandwidth = cfg.sim.edge_bandwidth;
         }
         self
     }
@@ -131,6 +142,21 @@ impl CostModel {
     pub fn upload_ms(&self, bandwidth: f64, rng: &mut Rng) -> f64 {
         self.network
             .delay_with_bandwidth_ms(self.model_bytes, bandwidth, rng)
+    }
+
+    /// Virtual time for the edge tier to push its dense partial to the
+    /// cloud (hierarchical topologies only): half an RTT plus the
+    /// partial's transfer over the backhaul. Edges push in parallel, so
+    /// one hop is added per aggregation regardless of edge count.
+    /// Deterministic — no RNG draw, so flat trace digests are invariant
+    /// to every hierarchy knob.
+    pub fn edge_hop_ms(&self) -> f64 {
+        let transfer = if self.edge_bandwidth.is_finite() {
+            self.model_bytes as f64 / self.edge_bandwidth
+        } else {
+            0.0
+        };
+        self.network.rtt_ms / 2.0 + transfer
     }
 }
 
@@ -180,6 +206,20 @@ mod tests {
                 "{bw}"
             );
         }
+    }
+
+    #[test]
+    fn edge_hop_composes_backhaul_transfer_and_latency() {
+        // 1.6 MB over the 1 Gbit backhaul = 12.8 ms, plus rtt/2.
+        let hop = CostModel::mobile_wan().edge_hop_ms();
+        assert!(hop > 12.8 && hop < 60.0, "{hop}");
+        // Tuning the backhaul down makes the hop dominate.
+        let mut cfg = Config::default();
+        cfg.sim.edge_bandwidth = 1_600.0;
+        let tuned = CostModel::mobile_wan().tuned(&cfg);
+        assert!(tuned.edge_hop_ms() > 1_000.0, "{}", tuned.edge_hop_ms());
+        // An infinite backhaul costs only latency (0 for ideal).
+        assert_eq!(CostModel::ideal().edge_hop_ms(), 0.0);
     }
 
     #[test]

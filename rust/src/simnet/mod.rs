@@ -66,7 +66,7 @@ pub fn simulate(cfg: &Config) -> Result<SimReport> {
 /// Install the built-in availability and cost models into a registry
 /// (called by [`ComponentRegistry::with_builtins`]).
 pub(crate) fn register_builtins(reg: &mut ComponentRegistry) {
-    for name in ["always-on", "diurnal", "flaky"] {
+    for name in ["always-on", "diurnal", "flaky", "trace"] {
         reg.register_availability(name, Arc::new(AvailabilityModel::parse));
     }
     reg.register_cost_model(

@@ -17,6 +17,7 @@
 //! rounds); setting `sim.real_training` plugs the real [`Server`] /
 //! Engine in for small cohorts.
 
+use std::collections::BTreeSet;
 use std::sync::Arc;
 
 use crate::aggregate::{AggContext, FedBuffBuffer};
@@ -26,6 +27,7 @@ use crate::data::partition::build_clients;
 use crate::data::synth;
 use crate::error::Result;
 use crate::flow::Update;
+use crate::hierarchy::{HierPlane, Topology};
 use crate::model::ParamVec;
 use crate::registry;
 use crate::scheduler::{make_strategy, Strategy};
@@ -90,6 +92,13 @@ pub struct SimReport {
     /// Registered aggregator the run reduced with ("mean" unless
     /// `Config.agg` overrode it).
     pub aggregator: String,
+    /// Federation topology the run simulated ("flat" | "edges(n)" | ...).
+    pub topology: String,
+    /// Bytes that crossed into the cloud aggregator: every reporter's
+    /// update for a flat topology, one dense partial per active edge per
+    /// aggregation for a hierarchical one — the fan-in headline
+    /// `examples/hier_scale.rs` benchmarks.
+    pub bytes_to_cloud: usize,
     /// Adversary model configured for the run (inert at fraction 0).
     pub adversary: String,
     /// Fraction of the population behaving Byzantine.
@@ -175,6 +184,14 @@ pub struct SimNet {
     cancelled: bool,
     /// Registered aggregator the adversary plane (and report) names.
     agg_name: String,
+    /// Aggregation-tree shape; non-flat runs reduce per edge, ship one
+    /// partial per active edge to the cloud, and pay an edge hop per
+    /// aggregation. Flat runs are bit-identical to the pre-hierarchy
+    /// timeline.
+    topology: Topology,
+    /// Cloud fan-in accumulated over the run (see
+    /// [`SimReport::bytes_to_cloud`]).
+    bytes_to_cloud: usize,
     /// Attack corrupting Byzantine clients' surrogate deltas.
     adversary: AdversaryModel,
     /// Per-client Byzantine flag, fixed at setup (seed-deterministic).
@@ -214,6 +231,7 @@ impl SimNet {
             registry::with_global(|r| r.cost_model(&cfg.sim.cost_model, cfg))?;
         let adversary =
             registry::with_global(|r| r.adversary(&cfg.sim.adversary))?;
+        let topology = registry::with_global(|r| r.topology(&cfg.topology))?;
         let agg_name = cfg.agg.clone().unwrap_or_else(|| "mean".to_string());
         if cfg.agg.is_some() || cfg.sim.adversary_frac > 0.0 {
             // Fail fast on an unknown or misconfigured aggregator before
@@ -221,6 +239,11 @@ impl SimNet {
             let probe =
                 AggContext::from_config(Arc::new(ParamVec::zeros(1)), cfg);
             registry::with_global(|r| r.aggregator(&agg_name, &probe))?;
+        }
+        if let Some(edge_agg) = &cfg.edge_agg {
+            let probe =
+                AggContext::from_config(Arc::new(ParamVec::zeros(1)), cfg);
+            registry::with_global(|r| r.aggregator(edge_agg, &probe))?;
         }
         let mut rng = Rng::new(cfg.seed ^ 0x5349_4D4E_4554); // "SIMNET"
 
@@ -274,6 +297,7 @@ impl SimNet {
         tracker.set_config("allocation", cfg.allocation.name().to_string());
         tracker.set_config("num_clients", num_clients.to_string());
         tracker.set_config("aggregator", agg_name.clone());
+        tracker.set_config("topology", topology.name());
         if cfg.sim.adversary_frac > 0.0 {
             tracker.set_config("adversary", adversary.name());
             tracker
@@ -304,6 +328,8 @@ impl SimNet {
             staleness_n: 0,
             cancelled: false,
             agg_name,
+            topology,
+            bytes_to_cloud: 0,
             adversary,
             adversarial,
             adv_rng,
@@ -501,8 +527,14 @@ impl SimNet {
         let global = Arc::new(ParamVec::zeros(SURROGATE_P));
         let ctx = AggContext::from_config(global, &self.cfg)
             .expect_updates(reporters.len());
-        let mut agg =
-            registry::with_global(|r| r.aggregator(&self.agg_name, &ctx))?;
+        // The surrogate plane reduces through the same hierarchy the
+        // real rounds would: per-edge tier aggregators (cfg.edge_agg,
+        // falling back to cfg.agg) under the cloud fold — so per-tier
+        // robustness is measured, not assumed. Flat topologies degrade
+        // to exactly the single registered aggregator as before.
+        let clients: Vec<usize> = reporters.iter().map(|&(c, _)| c).collect();
+        let mut plane =
+            HierPlane::from_registry(&self.topology, ctx, &clients)?;
         let mut honest_lo = [f32::INFINITY; SURROGATE_P];
         let mut honest_hi = [f32::NEG_INFINITY; SURROGATE_P];
         let mut honest = 0usize;
@@ -519,9 +551,9 @@ impl SimNet {
                     honest_hi[i] = honest_hi[i].max(*v);
                 }
             }
-            agg.add(&Update::Dense(ParamVec(delta)), weight)?;
+            plane.add(client, &Update::Dense(ParamVec(delta)), weight)?;
         }
-        let out = agg.finish()?;
+        let (out, _) = plane.finish()?;
         if honest > 0 {
             let mut dev = 0.0f64;
             for (i, v) in out.iter().enumerate() {
@@ -538,6 +570,31 @@ impl SimNet {
             .sum::<f64>()
             / SURROGATE_P as f64;
         Ok((1.0 - mse.sqrt()).clamp(-1.0, 1.0))
+    }
+
+    /// Close one aggregation window's cloud fan-in: returns the bytes
+    /// that crossed into the cloud (every reporter's update when flat,
+    /// one dense partial per active edge otherwise) and the extra
+    /// virtual time the edge tier adds. Flat windows add exactly 0 ms
+    /// and draw no RNG, so pre-hierarchy trace digests are bit-for-bit
+    /// unchanged regardless of any hierarchy knob.
+    fn close_fanin<I: Iterator<Item = usize>>(
+        &mut self,
+        reporters: I,
+        reported: usize,
+    ) -> (usize, f64) {
+        if reported == 0 {
+            return (0, 0.0);
+        }
+        let (bytes, hop_ms) = if self.topology.is_flat() {
+            (reported * self.cost.model_bytes, 0.0)
+        } else {
+            let clusters: BTreeSet<usize> =
+                reporters.map(|c| self.topology.cluster_of(c)).collect();
+            (clusters.len() * self.cost.model_bytes, self.cost.edge_hop_ms())
+        };
+        self.bytes_to_cloud += bytes;
+        (bytes, hop_ms)
     }
 
     // ------------------------------------------------------ sync engine
@@ -665,28 +722,35 @@ impl SimNet {
                     part
                 };
                 self.progress = (self.progress + inc).max(0.0);
+                // Hierarchy fan-in: bytes-to-cloud for the window plus
+                // the edge-partial hop (flat rounds close at `now`
+                // exactly, as before).
+                let (round_bytes, hop_ms) = self
+                    .close_fanin(measured.iter().map(|&(c, _)| c), reported);
+                let close = now + hop_ms;
                 let (train_loss, acc) = self.backend_metrics(round)?;
                 self.record_round(
                     round,
-                    now - t0,
+                    close - t0,
                     cohort.len(),
                     reported,
                     round_dropped,
                     0.0,
+                    round_bytes,
                     train_loss,
                     acc,
                 );
                 self.version += 1;
                 awaiting = false;
                 rounds_done += 1;
-                makespan = now;
+                makespan = close;
                 if rounds_done < rounds {
                     if cancel() {
                         self.cancelled = true;
                         break;
                     }
                     self.queue
-                        .push(now, EventKind::RoundStart { round: round + 1 });
+                        .push(close, EventKind::RoundStart { round: round + 1 });
                 }
             }
         }
@@ -766,6 +830,13 @@ impl SimNet {
                         } else {
                             base
                         };
+                        // Window fan-in before the member list resets
+                        // (flat windows close at `t` exactly, as before).
+                        let (window_bytes, hop_ms) = self.close_fanin(
+                            window_members.iter().map(|&(c, _)| c),
+                            window_members.len(),
+                        );
+                        let close = t + hop_ms;
                         window_members.clear();
                         self.progress = (self.progress + inc).max(0.0);
                         let (train_loss, acc) = self.backend_metrics(round)?;
@@ -775,17 +846,18 @@ impl SimNet {
                         // reported ≤ selected invariant holds per round.
                         self.record_round(
                             round,
-                            t - t_last,
+                            close - t_last,
                             window.arrivals + agg_dropped,
                             window.arrivals,
                             agg_dropped,
                             window.avg_staleness,
+                            window_bytes,
                             train_loss,
                             acc,
                         );
                         agg_dropped = 0;
-                        t_last = t;
-                        makespan = t;
+                        t_last = close;
+                        makespan = close;
                         if self.version < rounds && cancel() {
                             self.cancelled = true;
                             break;
@@ -837,6 +909,7 @@ impl SimNet {
         reported: usize,
         dropped: usize,
         avg_staleness: f64,
+        bytes_to_cloud: usize,
         train_loss: f64,
         accuracy: f64,
     ) {
@@ -851,6 +924,7 @@ impl SimNet {
             round_ms,
             distribution_ms: 0.0,
             comm_bytes: (selected + reported) * self.cost.model_bytes,
+            bytes_to_cloud,
             clients: Vec::new(),
             selected,
             reported,
@@ -914,6 +988,8 @@ impl SimNet {
                 && self.tracker.num_rounds() > 0,
             cancelled: self.cancelled,
             aggregator: self.agg_name.clone(),
+            topology: self.topology.name(),
+            bytes_to_cloud: self.bytes_to_cloud,
             adversary: self.adversary.name(),
             adversary_frac: self.cfg.sim.adversary_frac,
             envelope_deviation: if self.env_dev_n > 0 {

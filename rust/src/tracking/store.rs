@@ -39,6 +39,10 @@ pub struct RoundMetrics {
     /// Server→client distribution latency.
     pub distribution_ms: f64,
     pub comm_bytes: usize,
+    /// Bytes that crossed into the cloud aggregator this round: every
+    /// client uplink for a flat topology, one dense partial per active
+    /// edge for a hierarchical one (see [`crate::hierarchy`]).
+    pub bytes_to_cloud: usize,
     pub clients: Vec<ClientMetrics>,
     /// Selections accounted to this round: the sync cohort size (incl.
     /// over-selection), or the selections resolved in an async window —
@@ -153,6 +157,18 @@ impl Tracker {
         self.task.lock().unwrap().rounds.iter().map(|r| r.comm_bytes).sum()
     }
 
+    /// Total cloud fan-in over the task (see
+    /// [`RoundMetrics::bytes_to_cloud`]).
+    pub fn total_bytes_to_cloud(&self) -> usize {
+        self.task
+            .lock()
+            .unwrap()
+            .rounds
+            .iter()
+            .map(|r| r.bytes_to_cloud)
+            .sum()
+    }
+
     /// (round, train_loss, test_accuracy) series for loss curves.
     pub fn loss_curve(&self) -> Vec<(usize, f64, Option<f64>)> {
         self.task
@@ -217,6 +233,7 @@ impl Tracker {
                     ("round_ms", Json::Num(r.round_ms)),
                     ("distribution_ms", Json::Num(r.distribution_ms)),
                     ("comm_bytes", Json::Num(r.comm_bytes as f64)),
+                    ("bytes_to_cloud", Json::Num(r.bytes_to_cloud as f64)),
                     ("clients", Json::Arr(clients)),
                     ("selected", Json::Num(r.selected as f64)),
                     ("reported", Json::Num(r.reported as f64)),
@@ -291,6 +308,8 @@ impl Tracker {
                 round_ms: r.req_f64("round_ms")?,
                 distribution_ms: r.req_f64("distribution_ms")?,
                 comm_bytes: r.req_usize("comm_bytes")?,
+                // Absent in pre-hierarchy recordings: default 0.
+                bytes_to_cloud: r.get("bytes_to_cloud").as_usize().unwrap_or(0),
                 clients,
                 // Participation fields default for pre-SimNet task JSON.
                 selected: r.get("selected").as_usize().unwrap_or(0),
@@ -330,6 +349,7 @@ mod tests {
             round_ms: 100.0 + n as f64,
             distribution_ms: 5.0,
             comm_bytes: 1000,
+            bytes_to_cloud: 600,
             selected: 12,
             reported: 10,
             dropped: 2,
@@ -360,6 +380,7 @@ mod tests {
         assert_eq!(t.best_accuracy(), Some(0.60));
         assert!((t.avg_round_ms() - 101.0).abs() < 1e-9);
         assert_eq!(t.total_comm_bytes(), 3000);
+        assert_eq!(t.total_bytes_to_cloud(), 1800);
         assert_eq!(t.client_round_times(1), vec![100.0]);
         assert_eq!(t.loss_curve().len(), 3);
     }

@@ -1,0 +1,390 @@
+//! Topology-equivalence and hierarchy-plane property tests.
+//!
+//! The contracts under test (ISSUE 5 acceptance):
+//! * flat ≡ single-edge hierarchy bit-for-bit under `mean`;
+//! * multi-edge `mean`/`mean` trees reproduce the flat mean exactly on
+//!   dyadic cohorts (every intermediate sum exact ⇒ grouping-invariant)
+//!   and to f32 tolerance on random ones;
+//! * `median` at the edges contains a 30% sign-flip minority per
+//!   cluster that the flat mean does not;
+//! * SimNet trace digests are bit-for-bit invariant to every hierarchy
+//!   knob while `topology = "flat"` (regression guard), and hierarchical
+//!   runs are seed-reproducible with strictly smaller cloud fan-in;
+//! * per-tier robustness is selectable purely from config
+//!   (`topology`/`edge_agg`), and the `trace(file)` availability model
+//!   drives a full simulation from the checked-in fixture.
+
+mod common;
+
+use std::sync::Arc;
+
+use easyfl::aggregate::AggContext;
+use easyfl::config::SimMode;
+use easyfl::flow::Update;
+use easyfl::hierarchy::{HierPlane, Topology};
+use easyfl::model::ParamVec;
+use easyfl::util::rng::Rng;
+use easyfl::{Config, SimNet};
+
+use common::sim_base_cfg;
+
+fn dense(v: Vec<f32>) -> Update {
+    Update::Dense(ParamVec(v))
+}
+
+fn ctx_for(global: Arc<ParamVec>, expect: usize) -> AggContext {
+    AggContext::new(global).expect_updates(expect)
+}
+
+/// Dyadic cohort: every value is k/256 with |k| ≤ 1024 and every weight
+/// a small integer, so all f64 accumulation is exact and any summation
+/// grouping yields bit-identical results.
+fn dyadic_cohort(rng: &mut Rng, k: usize, p: usize) -> Vec<(usize, Update, f64)> {
+    (0..k)
+        .map(|c| {
+            let v: Vec<f32> = (0..p)
+                .map(|_| (rng.below(2049) as f32 - 1024.0) / 256.0)
+                .collect();
+            (c, dense(v), 1.0 + rng.below(100) as f64)
+        })
+        .collect()
+}
+
+fn reduce_flat(
+    global: Arc<ParamVec>,
+    updates: &[(usize, Update, f64)],
+) -> ParamVec {
+    let mut plane = HierPlane::from_registry(
+        &Topology::Flat,
+        ctx_for(global, updates.len()),
+        &updates.iter().map(|(c, _, _)| *c).collect::<Vec<_>>(),
+    )
+    .unwrap();
+    for (c, u, w) in updates {
+        plane.add(*c, u, *w).unwrap();
+    }
+    plane.finish().unwrap().0
+}
+
+fn reduce_tiered(
+    global: Arc<ParamVec>,
+    topology: &Topology,
+    edge_agg: Option<&str>,
+    updates: &[(usize, Update, f64)],
+) -> (ParamVec, usize) {
+    let mut ctx = ctx_for(global, updates.len());
+    ctx.edge_agg = edge_agg.map(|s| s.to_string());
+    let mut plane = HierPlane::from_registry(
+        topology,
+        ctx,
+        &updates.iter().map(|(c, _, _)| *c).collect::<Vec<_>>(),
+    )
+    .unwrap();
+    for (c, u, w) in updates {
+        plane.add(*c, u, *w).unwrap();
+    }
+    let (out, stats) = plane.finish().unwrap();
+    (out, stats.active_edges)
+}
+
+#[test]
+fn single_edge_hierarchy_is_bit_identical_to_flat_for_mixed_updates() {
+    let p = 96;
+    let mut rng = Rng::new(71);
+    let global = Arc::new(ParamVec(
+        (0..p).map(|_| rng.uniform() as f32).collect(),
+    ));
+    // Mixed cohort: dense + sparse ternary updates.
+    let mut updates = dyadic_cohort(&mut rng, 10, p);
+    for c in 10..14 {
+        let k = 8;
+        updates.push((
+            c,
+            Update::SparseTernary {
+                len: p,
+                indices: (0..k).map(|i| (i * 7) as u32).collect(),
+                signs: (0..k).map(|i| i % 2 == 0).collect(),
+                magnitude: 0.25,
+            },
+            2.0 + (c - 10) as f64,
+        ));
+    }
+    let want = reduce_flat(global.clone(), &updates);
+    let (got, edges) =
+        reduce_tiered(global, &Topology::Edges { n: 1 }, None, &updates);
+    assert_eq!(edges, 1);
+    for (i, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+        assert_eq!(
+            g.to_bits(),
+            w.to_bits(),
+            "coordinate {i}: {g} != {w} (single-edge must be bit-identical)"
+        );
+    }
+}
+
+#[test]
+fn multi_edge_mean_is_exact_on_dyadic_cohorts() {
+    let p = 64;
+    for (seed, n_edges) in [(1u64, 2usize), (2, 5), (3, 16)] {
+        let mut rng = Rng::new(seed);
+        let global = Arc::new(ParamVec::zeros(p));
+        let updates = dyadic_cohort(&mut rng, 40, p);
+        let want = reduce_flat(global.clone(), &updates);
+        let (got, edges) = reduce_tiered(
+            global,
+            &Topology::Edges { n: n_edges },
+            None,
+            &updates,
+        );
+        assert_eq!(edges, n_edges.min(40));
+        for (i, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+            assert_eq!(
+                g.to_bits(),
+                w.to_bits(),
+                "edges({n_edges}) coordinate {i}: {g} != {w}"
+            );
+        }
+    }
+}
+
+#[test]
+fn multi_edge_mean_matches_flat_on_random_cohorts() {
+    let p = 256;
+    let mut rng = Rng::new(5);
+    let global = Arc::new(ParamVec::zeros(p));
+    let updates: Vec<(usize, Update, f64)> = (0..50)
+        .map(|c| {
+            let v: Vec<f32> = (0..p)
+                .map(|_| (rng.uniform() as f32) * 2.0 - 1.0)
+                .collect();
+            (c, dense(v), 1.0 + rng.below(50) as f64)
+        })
+        .collect();
+    let want = reduce_flat(global.clone(), &updates);
+    let (got, _) =
+        reduce_tiered(global, &Topology::Edges { n: 8 }, None, &updates);
+    for (i, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+        assert!(
+            ((g - w) as f64).abs() < 1e-6,
+            "coordinate {i}: {g} vs {w}"
+        );
+    }
+}
+
+#[test]
+fn edge_median_contains_a_sign_flip_minority_the_flat_mean_does_not() {
+    let p = 16;
+    let global = Arc::new(ParamVec::zeros(p));
+    let topology = Topology::Edges { n: 4 };
+    // 40 clients, 10 per edge; the first 3 members of every cluster are
+    // Byzantine (30% overall, a minority on every edge) and upload a
+    // scaled sign flip.
+    let updates: Vec<(usize, Update, f64)> = (0..40)
+        .map(|c| {
+            let byz = (c / 4) < 3; // clients 0..12 spread 3 per cluster
+            let v = if byz { vec![-15.0f32; p] } else { vec![1.0f32; p] };
+            (c, dense(v), 1.0)
+        })
+        .collect();
+    // Sanity: the Byzantine set really is 3 per cluster.
+    for edge in 0..4 {
+        let byz_in_edge = updates
+            .iter()
+            .filter(|(c, _, _)| c % 4 == edge && (c / 4) < 3)
+            .count();
+        assert_eq!(byz_in_edge, 3);
+    }
+
+    let flat = reduce_flat(global.clone(), &updates);
+    // (28·1 + 12·(−15)) / 40 = −3.8: far outside the honest envelope.
+    for v in flat.iter() {
+        assert!(
+            (*v as f64) < 0.0,
+            "flat mean must be dragged outside the honest envelope, got {v}"
+        );
+    }
+    let (hier, edges) =
+        reduce_tiered(global, &topology, Some("median"), &updates);
+    assert_eq!(edges, 4);
+    // Per-edge median pins to the honest value; the cloud mean of four
+    // honest partials stays inside [1, 1].
+    for v in hier.iter() {
+        assert!(
+            ((*v - 1.0) as f64).abs() < 1e-6,
+            "edge median must hold the honest value, got {v}"
+        );
+    }
+}
+
+// -------------------------------------------------------------- SimNet
+
+#[test]
+fn flat_trace_digest_is_invariant_to_hierarchy_knobs() {
+    // Regression guard: while topology = "flat", no hierarchy knob may
+    // perturb the event timeline — the pre-hierarchy digest is the
+    // contract.
+    let base = sim_base_cfg();
+    let baseline = SimNet::from_config(&base).unwrap().run().unwrap();
+
+    let mut knobs = sim_base_cfg();
+    knobs.topology = "flat".into();
+    knobs.edge_agg = Some("median".into());
+    knobs.sim.edge_bandwidth = 7.0;
+    let guarded = SimNet::from_config(&knobs).unwrap().run().unwrap();
+
+    assert_eq!(baseline.trace_digest, guarded.trace_digest);
+    assert_eq!(baseline.rounds, guarded.rounds);
+    assert_eq!(baseline.makespan_ms, guarded.makespan_ms);
+    assert_eq!(baseline.topology, "flat");
+    // Flat fan-in = every reporter's update.
+    assert_eq!(
+        baseline.bytes_to_cloud as u64,
+        baseline.reported * 1_600_000
+    );
+}
+
+#[test]
+fn hierarchical_runs_are_reproducible_and_cut_cloud_fanin() {
+    let mut cfg = sim_base_cfg();
+    cfg.topology = "edges(4)".into();
+    let a = SimNet::from_config(&cfg).unwrap().run().unwrap();
+    let b = SimNet::from_config(&cfg).unwrap().run().unwrap();
+    assert_eq!(a.trace_digest, b.trace_digest, "same seed ⇒ same digest");
+    assert_eq!(a.bytes_to_cloud, b.bytes_to_cloud);
+    assert_eq!(a.topology, "edges(4)");
+
+    let flat = SimNet::from_config(&sim_base_cfg()).unwrap().run().unwrap();
+    assert!(
+        a.bytes_to_cloud < flat.bytes_to_cloud,
+        "edges(4) fan-in {} must be below flat {}",
+        a.bytes_to_cloud,
+        flat.bytes_to_cloud
+    );
+    // ≤ 4 partials per round vs up-to-20 reporter uploads.
+    assert!(
+        a.bytes_to_cloud * 3 < flat.bytes_to_cloud,
+        "expected ≥ 3x reduction: {} vs {}",
+        a.bytes_to_cloud,
+        flat.bytes_to_cloud
+    );
+    // The edge hop costs virtual time, never saves it.
+    assert!(a.makespan_ms >= flat.makespan_ms);
+}
+
+#[test]
+fn per_tier_robustness_is_pure_config() {
+    // 30% sign-flip population; the run's only defenses are config
+    // strings: topology = edges(4), edge_agg = median.
+    let run = |topology: &str, edge_agg: Option<&str>| {
+        let mut cfg = sim_base_cfg();
+        cfg.rounds = 12;
+        cfg.sim.dropout = 0.0;
+        cfg.sim.adversary = "sign-flip".into();
+        cfg.sim.adversary_frac = 0.3;
+        cfg.topology = topology.into();
+        cfg.edge_agg = edge_agg.map(|s| s.to_string());
+        SimNet::from_config(&cfg).unwrap().run().unwrap()
+    };
+    let flat_mean = run("flat", None);
+    let edge_median = run("edges(4)", Some("median"));
+    assert_eq!(edge_median.topology, "edges(4)");
+    assert!(
+        edge_median.final_accuracy > flat_mean.final_accuracy,
+        "median edges must absorb the sign-flip minority: {} !> {}",
+        edge_median.final_accuracy,
+        flat_mean.final_accuracy
+    );
+    assert!(
+        edge_median.envelope_deviation < flat_mean.envelope_deviation,
+        "edge-robust aggregate must stay nearer the honest envelope: \
+         {} !< {}",
+        edge_median.envelope_deviation,
+        flat_mean.envelope_deviation
+    );
+}
+
+#[test]
+fn trace_availability_drives_a_full_simulation() {
+    let fixture = format!(
+        "{}/tests/fixtures/device_trace.json",
+        env!("CARGO_MANIFEST_DIR")
+    );
+    let mut cfg = sim_base_cfg();
+    cfg.sim.availability = format!("trace({fixture})");
+    cfg.sim.deadline_ms = 120_000.0;
+    let a = SimNet::from_config(&cfg).unwrap().run().unwrap();
+    assert_eq!(a.rounds, cfg.rounds, "trace replay must sustain rounds");
+    assert!(a.reported > 0);
+    assert!(a.availability.starts_with("trace("), "{}", a.availability);
+    // Replays are seed-reproducible like every other model.
+    let b = SimNet::from_config(&cfg).unwrap().run().unwrap();
+    assert_eq!(a.trace_digest, b.trace_digest);
+    // The trace limits the pool: with only ~half the devices online at
+    // any instant, selection is strictly below the always-on run's.
+    let always = SimNet::from_config(&sim_base_cfg()).unwrap().run().unwrap();
+    assert!(a.selected <= always.selected);
+}
+
+#[test]
+fn hierarchical_async_engine_accounts_fanin_per_window() {
+    let mut cfg = sim_base_cfg();
+    cfg.sim.mode = SimMode::Async;
+    cfg.sim.async_buffer = 10;
+    cfg.sim.async_concurrency = 60;
+    cfg.topology = "edges(8)".into();
+    let rep = SimNet::from_config(&cfg).unwrap().run().unwrap();
+    assert_eq!(rep.rounds, cfg.rounds);
+    // Each 10-arrival window ships at most 8 partials.
+    let max_bytes = rep.rounds * 8 * 1_600_000;
+    assert!(
+        rep.bytes_to_cloud <= max_bytes,
+        "{} > {max_bytes}",
+        rep.bytes_to_cloud
+    );
+    assert!(rep.bytes_to_cloud > 0);
+}
+
+#[test]
+fn cluster_map_topologies_run_end_to_end() {
+    let path = std::env::temp_dir().join("easyfl_hier_test_map.json");
+    // 300 clients wrap over a 6-entry map onto 3 edges.
+    std::fs::write(&path, "[0, 0, 1, 1, 2, 2]").unwrap();
+    let mut cfg = sim_base_cfg();
+    cfg.topology = format!("clusters({})", path.display());
+    let rep = SimNet::from_config(&cfg).unwrap().run().unwrap();
+    assert_eq!(rep.rounds, cfg.rounds);
+    // At most 3 partials per round cross into the cloud.
+    assert!(rep.bytes_to_cloud <= rep.rounds * 3 * 1_600_000);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn unknown_topology_fails_fast_at_simnet_construction() {
+    let mut cfg = sim_base_cfg();
+    cfg.topology = "torus(3)".into();
+    let err = SimNet::from_config(&cfg).unwrap_err().to_string();
+    assert!(err.contains("torus"), "{err}");
+    assert!(err.contains("edges"), "{err}");
+
+    let mut cfg = sim_base_cfg();
+    cfg.edge_agg = Some("krum".into());
+    let err = SimNet::from_config(&cfg).unwrap_err().to_string();
+    assert!(err.contains("krum"), "{err}");
+    assert!(err.contains("median"), "{err}");
+}
+
+#[test]
+fn config_json_selects_the_whole_hierarchy() {
+    // The low-code promise: a 2-tier robust federation is a JSON object.
+    let j = easyfl::util::json::Json::parse(
+        r#"{"topology": "edges(16)", "edge_agg": "median",
+            "agg": "trimmed_mean", "num_clients": 400,
+            "clients_per_round": 20, "rounds": 3,
+            "sim": {"edge_bandwidth": 125000}}"#,
+    )
+    .unwrap();
+    let cfg = Config::from_json(&j).unwrap();
+    let rep = SimNet::from_config(&cfg).unwrap().run().unwrap();
+    assert_eq!(rep.topology, "edges(16)");
+    assert_eq!(rep.rounds, 3);
+}
