@@ -1,0 +1,169 @@
+//! codec_bench — compressed-uplink transport at 10k clients.
+//!
+//! Runs the same SimNet scenario twice on one seed — once with dense
+//! (identity) uploads, once through a compressing codec — and compares
+//! the uplink bytes each round actually ships. CI runs the 10k-client
+//! variant as a smoke test, asserts the codec cuts uplink bytes per
+//! round ≥ 10x while costing ≤ 1 accuracy point on the surrogate, and
+//! records both runs to `BENCH_codec.json`:
+//!
+//! ```text
+//! cargo run --release --example codec_bench -- \
+//!     --clients 10000 --rounds 30 --budget-ms 60000 \
+//!     --bench-out BENCH_codec.json
+//! ```
+
+use easyfl::config::{Config, DatasetKind};
+use easyfl::util::args::{usage, Args, Opt};
+use easyfl::SimReport;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn opts() -> Vec<Opt> {
+    vec![
+        Opt { name: "clients", help: "federation population", default: Some("10000"), is_flag: false },
+        Opt { name: "rounds", help: "rounds to simulate", default: Some("30"), is_flag: false },
+        Opt { name: "clients-per-round", help: "aggregation target K", default: Some("100"), is_flag: false },
+        Opt { name: "codec", help: "compressing codec to benchmark", default: Some("top_k_i8(0.05)"), is_flag: false },
+        Opt { name: "model-bytes", help: "dense update wire size in bytes", default: Some("1600000"), is_flag: false },
+        Opt { name: "min-ratio", help: "fail unless dense/codec uplink bytes ≥ this", default: Some("10"), is_flag: false },
+        Opt { name: "max-acc-drop", help: "fail if the codec costs more accuracy points", default: Some("1.0"), is_flag: false },
+        Opt { name: "seed", help: "RNG seed", default: Some("42"), is_flag: false },
+        Opt { name: "budget-ms", help: "fail if wall time exceeds this (0 = off)", default: Some("0"), is_flag: false },
+        Opt { name: "bench-out", help: "write transport JSON here", default: None, is_flag: false },
+        Opt { name: "help", help: "show help", default: None, is_flag: true },
+    ]
+}
+
+fn base_config(a: &Args) -> easyfl::Result<Config> {
+    let mut cfg = Config::for_dataset(DatasetKind::Femnist);
+    cfg.num_clients = a.get_usize("clients")?;
+    cfg.clients_per_round = a.get_usize("clients-per-round")?;
+    cfg.rounds = a.get_usize("rounds")?;
+    cfg.seed = a.get_usize("seed")? as u64;
+    // Pin the dense wire size so uplink bytes can be derived from the
+    // report below without reaching into the cost-model presets.
+    cfg.sim.model_bytes = a.get_usize("model-bytes")?;
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+/// Uplink bytes shipped per completed round. `comm_bytes` counts the
+/// dense downlink (`selected × model_bytes`) plus every reporter's
+/// encoded upload; subtracting the former isolates what the codec
+/// actually compresses.
+fn uplink_per_round(rep: &SimReport, model_bytes: usize) -> f64 {
+    let downlink = rep.selected as f64 * model_bytes as f64;
+    (rep.comm_bytes as f64 - downlink) / rep.rounds.max(1) as f64
+}
+
+fn describe(tag: &str, rep: &SimReport, model_bytes: usize) {
+    println!(
+        "{tag:<16} {:>9.3} MiB uplink/round | makespan {:>8.1} s | \
+         acc {:.2}% | {} rounds",
+        uplink_per_round(rep, model_bytes) / (1024.0 * 1024.0),
+        rep.makespan_ms / 1000.0,
+        rep.final_accuracy * 100.0,
+        rep.rounds
+    );
+}
+
+fn run() -> easyfl::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let opts = opts();
+    let a = Args::parse(&argv, &opts)?;
+    if a.has_flag("help") {
+        println!(
+            "{}",
+            usage(
+                "codec_bench",
+                "Dense vs compressed-codec uplink comparison.",
+                &opts
+            )
+        );
+        return Ok(());
+    }
+    let codec = a.get("codec").unwrap_or("top_k_i8(0.05)").to_string();
+    let model_bytes = a.get_usize("model-bytes")?;
+    let sw = std::time::Instant::now();
+
+    let dense_cfg = base_config(&a)?;
+    println!(
+        "simulating {} clients × {} rounds, dense vs {codec}...",
+        dense_cfg.num_clients, dense_cfg.rounds
+    );
+    let dense = easyfl::simnet::simulate(&dense_cfg)?;
+    describe("dense", &dense, model_bytes);
+
+    let mut codec_cfg = base_config(&a)?;
+    codec_cfg.codec = Some(codec.clone());
+    codec_cfg.validate()?;
+    let packed = easyfl::simnet::simulate(&codec_cfg)?;
+    describe(&codec, &packed, model_bytes);
+
+    let wall_ms = sw.elapsed().as_secs_f64() * 1000.0;
+    let dense_uplink = uplink_per_round(&dense, model_bytes);
+    let packed_uplink = uplink_per_round(&packed, model_bytes);
+    let ratio = if packed_uplink > 0.0 {
+        dense_uplink / packed_uplink
+    } else {
+        0.0
+    };
+    let acc_drop_pts =
+        (dense.final_accuracy - packed.final_accuracy) * 100.0;
+    println!(
+        "transport reduction: {ratio:.1}x fewer uplink bytes per round at \
+         {acc_drop_pts:+.2} accuracy points ({:.1} s wall for both runs)",
+        wall_ms / 1000.0
+    );
+
+    if let Some(path) = a.get("bench-out") {
+        let json = format!(
+            "{{\n  \"clients\": {},\n  \"rounds\": {},\n  \
+             \"codec\": \"{codec}\",\n  \
+             \"model_bytes\": {model_bytes},\n  \
+             \"dense_uplink_bytes_per_round\": {dense_uplink:.1},\n  \
+             \"codec_uplink_bytes_per_round\": {packed_uplink:.1},\n  \
+             \"bytes_ratio\": {ratio:.2},\n  \
+             \"dense_acc\": {:.4},\n  \"codec_acc\": {:.4},\n  \
+             \"acc_drop_pts\": {acc_drop_pts:.3},\n  \
+             \"dense_makespan_ms\": {:.1},\n  \
+             \"codec_makespan_ms\": {:.1},\n  \"wall_ms\": {wall_ms:.1}\n}}\n",
+            dense_cfg.num_clients,
+            dense_cfg.rounds,
+            dense.final_accuracy,
+            packed.final_accuracy,
+            dense.makespan_ms,
+            packed.makespan_ms,
+        );
+        std::fs::write(path, json)?;
+        println!("benchmark written to {path}");
+    }
+
+    let min_ratio = a.get_f64("min-ratio")?;
+    if ratio < min_ratio {
+        return Err(easyfl::Error::Runtime(format!(
+            "uplink bytes per round only shrank {ratio:.1}x (< {min_ratio}x): \
+             the codec is not compressing the transport"
+        )));
+    }
+    let max_drop = a.get_f64("max-acc-drop")?;
+    if acc_drop_pts > max_drop {
+        return Err(easyfl::Error::Runtime(format!(
+            "codec cost {acc_drop_pts:.2} accuracy points \
+             (> {max_drop} allowed)"
+        )));
+    }
+    let budget_ms = a.get_f64("budget-ms")?;
+    if budget_ms > 0.0 && wall_ms > budget_ms {
+        return Err(easyfl::Error::Runtime(format!(
+            "wall time {wall_ms:.0} ms exceeded the {budget_ms:.0} ms budget"
+        )));
+    }
+    Ok(())
+}

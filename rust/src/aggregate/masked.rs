@@ -15,7 +15,7 @@ use crate::error::{Error, Result};
 use crate::flow::Update;
 use crate::model::ParamVec;
 
-use super::mean::{axpy_into, check_weight, finish_into, fold_ternary};
+use super::mean::{axpy_into, check_weight, finish_into};
 use super::{AggContext, Aggregator};
 
 /// Weighted mean over the leading `P − protected_tail` coordinates; the
@@ -73,28 +73,20 @@ impl Aggregator for SliceMaskedAggregator {
                 }
                 axpy_into(&mut self.acc, &x[..self.split], weight, self.threads);
             }
-            Update::SparseTernary { len, indices, signs, magnitude } => {
-                // Head coordinates are protected: deltas there are
-                // dropped, exactly as a backbone-only upload would be.
-                fold_ternary(
+            // Delta-encoded (sparse ternary / codec-encoded) updates go
+            // through the shared fold with the backbone split as the
+            // active limit: head coordinates are protected, so deltas
+            // there are dropped exactly as a backbone-only upload would
+            // be. Masked errors inside the shared fold.
+            _ => {
+                super::fold_delta_update(
                     &mut self.acc,
                     p,
-                    *len,
-                    indices,
-                    signs,
-                    *magnitude,
+                    update,
                     weight,
                     self.split,
                 )?;
                 self.sparse_weight += weight;
-            }
-            Update::Masked { .. } => {
-                return Err(Error::Runtime(
-                    "aggregate: masked update reached the aggregator; a \
-                     server plugin with a decryption stage must unmask \
-                     uploads first"
-                        .into(),
-                ))
             }
         }
         self.count += 1;

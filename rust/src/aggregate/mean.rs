@@ -133,14 +133,9 @@ impl MeanAggregator {
         Ok(())
     }
 
-    fn add_ternary(
-        &mut self,
-        len: usize,
-        indices: &[u32],
-        signs: &[bool],
-        magnitude: f32,
-        weight: f64,
-    ) -> Result<()> {
+    /// Fold a delta-encoded update (sparse ternary or codec-encoded)
+    /// through the shared [`super::fold_delta_update`] path.
+    fn add_delta(&mut self, update: &Update, weight: f64) -> Result<()> {
         check_weight(weight)?;
         if self.global.is_none() {
             return Err(Error::Runtime(
@@ -150,7 +145,8 @@ impl MeanAggregator {
             ));
         }
         let p = self.acc.len();
-        fold_ternary(&mut self.acc, p, len, indices, signs, magnitude, weight, p)?;
+        let folded = super::fold_delta_update(&mut self.acc, p, update, weight, p)?;
+        debug_assert!(folded, "add_delta only sees delta-encoded variants");
         self.count += 1;
         self.total_weight += weight;
         self.sparse_weight += weight;
@@ -218,14 +214,9 @@ impl Aggregator for MeanAggregator {
     fn add(&mut self, update: &Update, weight: f64) -> Result<()> {
         match update {
             Update::Dense(p) => self.add_dense(p, weight),
-            Update::SparseTernary { len, indices, signs, magnitude } => {
-                self.add_ternary(*len, indices, signs, *magnitude, weight)
-            }
-            Update::Masked { .. } => Err(Error::Runtime(
-                "aggregate: masked update reached the aggregator; a server \
-                 plugin with a decryption stage must unmask uploads first"
-                    .into(),
-            )),
+            // SparseTernary / Encoded fold through the shared delta
+            // path; Masked errors there with the canonical message.
+            _ => self.add_delta(update, weight),
         }
     }
 

@@ -168,6 +168,52 @@ impl AggContext {
     }
 }
 
+/// Fold one *delta-encoded* update into an f64 accumulator, index-wise.
+///
+/// This is the single shared fold for every streaming consumer — the
+/// weighted mean, the slice-masked backbone merge, and the hierarchy's
+/// edge partials all route their non-dense arms here, so a new wire
+/// format (like [`crate::codec`]'s [`Update::Encoded`]) folds in exactly
+/// one place:
+///
+/// * `SparseTernary` — `acc[idx] += weight · ±magnitude` below
+///   `active_limit`.
+/// * `Encoded` — integrity-verified, then `acc[idx] += weight · value`
+///   below `active_limit` (values dequantized on the fly).
+/// * `Masked` — the canonical "needs a decryption stage" error.
+/// * `Dense` — **not** folded: returns `Ok(false)` so the caller runs
+///   its own (possibly chunk-parallel) axpy path.
+///
+/// Returns `Ok(true)` when the update was a delta against the global
+/// model — the caller must then count its weight toward the base-model
+/// fold at `finish` (the `sparse_weight` ledger).
+pub(crate) fn fold_delta_update(
+    acc: &mut [f64],
+    p: usize,
+    update: &Update,
+    weight: f64,
+    active_limit: usize,
+) -> Result<bool> {
+    match update {
+        Update::Dense(_) => Ok(false),
+        Update::SparseTernary { len, indices, signs, magnitude } => {
+            mean::fold_ternary(
+                acc, p, *len, indices, signs, *magnitude, weight, active_limit,
+            )?;
+            Ok(true)
+        }
+        Update::Encoded(e) => {
+            e.fold_into(acc, p, weight, active_limit)?;
+            Ok(true)
+        }
+        Update::Masked { .. } => Err(Error::Runtime(
+            "aggregate: masked update reached the aggregator; a server \
+             plugin with a decryption stage must unmask uploads first"
+                .into(),
+        )),
+    }
+}
+
 /// Constructor closure for a registered aggregator.
 pub type AggregatorBuilder =
     Arc<dyn Fn(&AggContext) -> Result<Box<dyn Aggregator>> + Send + Sync>;

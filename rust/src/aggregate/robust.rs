@@ -79,7 +79,13 @@ impl UpdateBuffer {
                 }
                 x.0.clone()
             }
-            Update::SparseTernary { .. } => update.to_dense(&self.global)?.0,
+            // Rank statistics intrinsically need the dense column view,
+            // so delta-encoded updates (sparse ternary / codec-encoded)
+            // materialize here; `to_dense` runs the integrity check on
+            // encoded payloads.
+            Update::SparseTernary { .. } | Update::Encoded(_) => {
+                update.to_dense(&self.global)?.0
+            }
             Update::Masked { .. } => {
                 return Err(Error::Runtime(
                     "aggregate: masked update reached the aggregator; a \
@@ -466,6 +472,33 @@ impl Aggregator for NormClipAggregator {
                 };
                 self.inner.add(&clipped, weight)
             }
+            Update::Encoded(e) => {
+                // Integrity-verified sparse norm — no dense
+                // materialization unless the update actually clips.
+                let norm = e.delta_l2(self.global.len())?;
+                if !norm.is_finite() {
+                    return Err(Error::Runtime(
+                        "norm_clip: update delta has non-finite norm \
+                         (NaN/Inf poisoning rejected)"
+                            .into(),
+                    ));
+                }
+                let clip = self.clip.threshold_for(norm);
+                if norm <= clip {
+                    return self.inner.add(update, weight);
+                }
+                // Clipping de-quantizes: decode, rescale the delta, and
+                // fold the dense result (rare path — only over-threshold
+                // updates pay it).
+                let dense = update.to_dense(&self.global)?;
+                let scale = (clip / norm) as f32;
+                let clipped: Vec<f32> = dense
+                    .iter()
+                    .zip(self.global.iter())
+                    .map(|(v, g)| g + scale * (v - g))
+                    .collect();
+                self.inner.add(&Update::Dense(ParamVec(clipped)), weight)
+            }
             Update::Masked { .. } => self.inner.add(update, weight),
         }
     }
@@ -621,6 +654,56 @@ mod tests {
         let out = agg.finish().unwrap();
         assert!((out[0] - 0.5).abs() < 1e-6);
         assert!((out[3] + 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn norm_clip_screens_encoded_updates_by_sparse_norm() {
+        let mut c = ctx(vec![0.0; 4]);
+        c.clip_norm = 2.0;
+        let mut agg = NormClipAggregator::from_ctx(&c).unwrap();
+        let codec = crate::codec::parse("top_k(1.0)").unwrap();
+        // ‖[1,0,0,0]‖ = 1 ≤ 2: forwarded verbatim (streams index-wise).
+        let small = codec
+            .encode(ParamVec(vec![1.0, 0.0, 0.0, 0.0]), &c.global)
+            .unwrap();
+        agg.add(&small, 1.0).unwrap();
+        let out = agg.finish().unwrap();
+        assert!((out[0] - 1.0).abs() < 1e-6);
+        // ‖[8,6,0,0]‖ = 10 > 2: decoded and rescaled to norm 2.
+        let big = codec
+            .encode(ParamVec(vec![8.0, 6.0, 0.0, 0.0]), &c.global)
+            .unwrap();
+        agg.add(&big, 1.0).unwrap();
+        let out = agg.finish().unwrap();
+        assert!((out[0] - 1.6).abs() < 1e-6);
+        assert!((out[1] - 1.2).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rank_aggregators_decode_encoded_updates() {
+        let c = ctx(vec![1.0; 3]);
+        let mut agg = CoordinateMedianAggregator::from_ctx(&c);
+        let codec = crate::codec::parse("top_k(1.0)").unwrap();
+        let enc = codec
+            .encode(ParamVec(vec![1.5, 1.0, 1.0]), &c.global)
+            .unwrap();
+        agg.add(&enc, 1.0).unwrap();
+        agg.add(&dense(vec![2.0, 2.0, 2.0]), 1.0).unwrap();
+        agg.add(&dense(vec![0.0, 0.0, 0.0]), 1.0).unwrap();
+        // Columns: [1.5, 2, 0] → 1.5; [1, 2, 0] → 1; [1, 2, 0] → 1.
+        let out = agg.finish().unwrap();
+        assert_eq!(out.0, vec![1.5, 1.0, 1.0]);
+        // A tampered payload is a typed integrity error, not a panic.
+        let mut bad = match codec
+            .encode(ParamVec(vec![1.5, 1.0, 1.0]), &c.global)
+            .unwrap()
+        {
+            Update::Encoded(e) => e,
+            other => panic!("expected encoded update, got {other:?}"),
+        };
+        bad.content_hash ^= 1;
+        let err = agg.add(&Update::Encoded(bad), 1.0).unwrap_err();
+        assert!(matches!(err, Error::Integrity(_)), "{err}");
     }
 
     #[test]

@@ -1,0 +1,872 @@
+//! Compressed update transport: registry-selectable wire codecs.
+//!
+//! At federation scale the wire format is the scaling bottleneck: a dense
+//! f32 upload ships `P·4` bytes per reporter per round. This module makes
+//! compression a swappable stage, the same low-code way aggregators and
+//! topologies are selected — `cfg.codec = Some("top_k_i8(0.05)".into())`
+//! turns every client upload into a quantized sparse delta:
+//!
+//! | codec              | payload per kept coordinate | typical ratio |
+//! |--------------------|-----------------------------|---------------|
+//! | `identity`         | — (dense passthrough)       | 1×            |
+//! | `top_k(frac)`      | u32 index + f32 value       | ~P/(2k)       |
+//! | `top_k_f16(frac)`  | u32 index + f16 value       | ~P/(1.5k)     |
+//! | `top_k_i8(frac)`   | u32 index + i8 value (+ one f32 scale per 256-value chunk) | ~P/(1.25k) |
+//!
+//! A codec encodes the *delta* against the distributed global parameters
+//! (the same contract as [`Update::SparseTernary`]), keeping the
+//! `k = ⌈frac·P⌉` largest-magnitude coordinates, and stamps a FNV-1a
+//! content hash over the full payload so receivers can verify integrity
+//! — a tampered payload surfaces as a typed [`Error::Integrity`], never
+//! as silent divergence. The streaming aggregation plane folds encoded
+//! updates index-wise without dense materialization (see
+//! [`crate::aggregate::fold_delta_update`]), and SimNet charges the
+//! encoded byte size for uplink delay and communication accounting.
+
+use std::sync::Arc;
+
+use crate::coordinator::ClientFlowFactory;
+use crate::error::{Error, Result};
+use crate::flow::{ClientFlow, ModelPayload, TrainStats, TrainTask, Update};
+use crate::model::ParamVec;
+use crate::registry::{spec_head, spec_inner, ComponentRegistry};
+use crate::runtime::Engine;
+
+/// Kept values per i8 quantization chunk: one f32 scale amortized over
+/// this many quantized values (1.5% size overhead, per-chunk dynamic
+/// range instead of one global scale).
+const I8_CHUNK: usize = 256;
+
+/// Fixed per-update framing: dense length (u32) + kept count (u32) +
+/// content hash (u64).
+const HEADER_BYTES: usize = 16;
+
+/// Default kept-coordinate fraction when a spec carries no argument
+/// (matches the STC default sparsity).
+const DEFAULT_FRAC: f64 = 0.01;
+
+// ------------------------------------------------------------ hashing
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Minimal FNV-1a 64-bit hasher (dependency-free, stable across
+/// platforms — the hash is a wire artifact, not an in-process one).
+struct Fnv64(u64);
+
+impl Fnv64 {
+    fn new() -> Fnv64 {
+        Fnv64(FNV_OFFSET)
+    }
+
+    fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(FNV_PRIME);
+        }
+    }
+
+    fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+// ----------------------------------------------------- f16 conversion
+
+/// f32 → IEEE 754 binary16 bits, round-to-nearest-even (no `half` crate;
+/// the offline registry ships no dependencies).
+pub(crate) fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let mant = bits & 0x007f_ffff;
+    if exp == 255 {
+        // Inf / NaN (keep a NaN payload bit so NaN stays NaN).
+        return sign | 0x7c00 | if mant != 0 { 0x0200 } else { 0 };
+    }
+    let e16 = exp - 112; // rebias 127 → 15
+    if e16 >= 31 {
+        return sign | 0x7c00; // overflow → ±inf
+    }
+    if e16 <= 0 {
+        if e16 < -10 {
+            return sign; // underflow → ±0
+        }
+        // Subnormal: restore the implicit bit, shift out with
+        // round-to-nearest-even.
+        let m = mant | 0x0080_0000;
+        let shift = (14 - e16) as u32;
+        let rem = m & ((1 << shift) - 1);
+        let half = 1u32 << (shift - 1);
+        let mut out = m >> shift;
+        if rem > half || (rem == half && out & 1 == 1) {
+            out += 1;
+        }
+        return sign | out as u16;
+    }
+    // Normal: drop 13 mantissa bits with round-to-nearest-even.
+    let mut e16 = e16 as u32;
+    let mut m16 = mant >> 13;
+    let rem = mant & 0x1fff;
+    if rem > 0x1000 || (rem == 0x1000 && m16 & 1 == 1) {
+        m16 += 1;
+        if m16 == 0x400 {
+            m16 = 0;
+            e16 += 1;
+            if e16 >= 31 {
+                return sign | 0x7c00;
+            }
+        }
+    }
+    sign | ((e16 as u16) << 10) | m16 as u16
+}
+
+/// IEEE 754 binary16 bits → f32 (exact; every f16 is representable).
+pub(crate) fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h as u32) & 0x8000) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let mant = (h & 0x3ff) as u32;
+    let bits = if exp == 0 {
+        if mant == 0 {
+            sign
+        } else {
+            // Subnormal: renormalize into the f32 exponent range.
+            let mut e = 113u32;
+            let mut m = mant;
+            while m & 0x400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            sign | (e << 23) | ((m & 0x3ff) << 13)
+        }
+    } else if exp == 31 {
+        sign | 0x7f80_0000 | (mant << 13)
+    } else {
+        sign | ((exp + 112) << 23) | (mant << 13)
+    };
+    f32::from_bits(bits)
+}
+
+// ------------------------------------------------------ encoded update
+
+/// Which wire codec produced an [`EncodedUpdate`] (hashed into the
+/// content hash so a payload cannot be reinterpreted under another
+/// codec).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CodecKind {
+    /// Dense passthrough — never appears inside an `EncodedUpdate`
+    /// (identity encodes straight to [`Update::Dense`]).
+    Identity,
+    /// Top-k sparse delta, full f32 values.
+    TopK,
+    /// Top-k sparse delta, f16-quantized values.
+    TopKF16,
+    /// Top-k sparse delta, i8-quantized values with per-chunk f32 scale.
+    TopKI8,
+}
+
+impl CodecKind {
+    fn tag(self) -> u8 {
+        match self {
+            CodecKind::Identity => 0,
+            CodecKind::TopK => 1,
+            CodecKind::TopKF16 => 2,
+            CodecKind::TopKI8 => 3,
+        }
+    }
+
+    fn head(self) -> &'static str {
+        match self {
+            CodecKind::Identity => "identity",
+            CodecKind::TopK => "top_k",
+            CodecKind::TopKF16 => "top_k_f16",
+            CodecKind::TopKI8 => "top_k_i8",
+        }
+    }
+
+    /// Payload bytes per kept coordinate (index + value), excluding
+    /// chunk scales and framing.
+    fn bytes_per_coord(self) -> usize {
+        match self {
+            CodecKind::Identity => 4,
+            CodecKind::TopK => 8,
+            CodecKind::TopKF16 => 6,
+            CodecKind::TopKI8 => 5,
+        }
+    }
+}
+
+/// Quantized kept values of an encoded update, one entry per index.
+#[derive(Debug, Clone, PartialEq)]
+pub enum QuantizedValues {
+    /// Full-precision values (`top_k`).
+    F32(Vec<f32>),
+    /// binary16 bit patterns (`top_k_f16`).
+    F16(Vec<u16>),
+    /// i8 quanta with one f32 scale per [`I8_CHUNK`] values
+    /// (`top_k_i8`): `value = quanta · scale`.
+    I8 { quanta: Vec<i8>, scales: Vec<f32> },
+}
+
+impl QuantizedValues {
+    fn len(&self) -> usize {
+        match self {
+            QuantizedValues::F32(v) => v.len(),
+            QuantizedValues::F16(v) => v.len(),
+            QuantizedValues::I8 { quanta, .. } => quanta.len(),
+        }
+    }
+
+    /// Dequantized value at ordinal `i` (caller guarantees `i < len`).
+    fn get(&self, i: usize) -> f32 {
+        match self {
+            QuantizedValues::F32(v) => v[i],
+            QuantizedValues::F16(v) => f16_bits_to_f32(v[i]),
+            QuantizedValues::I8 { quanta, scales } => {
+                quanta[i] as f32 * scales[i / I8_CHUNK]
+            }
+        }
+    }
+}
+
+/// One codec-compressed client upload: a sparse delta against the
+/// distributed global parameters, integrity-stamped with a FNV-1a
+/// content hash over the full payload.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EncodedUpdate {
+    /// Codec that produced the payload.
+    pub kind: CodecKind,
+    /// Dense parameter count P the delta applies to.
+    pub len: usize,
+    /// Kept coordinate indices, strictly ascending.
+    pub indices: Vec<u32>,
+    /// Quantized delta values, one per index.
+    pub values: QuantizedValues,
+    /// Exact serialized wire size in bytes (framing + indices + values
+    /// + chunk scales) — what SimNet charges and `comm_bytes` counts.
+    pub encoded_len: usize,
+    /// FNV-1a 64 hash over (kind, len, indices, values, scales).
+    pub content_hash: u64,
+}
+
+impl EncodedUpdate {
+    /// Recompute the content hash from the payload.
+    fn compute_hash(&self) -> u64 {
+        let mut h = Fnv64::new();
+        h.write(&[self.kind.tag()]);
+        h.write(&(self.len as u64).to_le_bytes());
+        h.write(&(self.indices.len() as u64).to_le_bytes());
+        for &i in &self.indices {
+            h.write(&i.to_le_bytes());
+        }
+        match &self.values {
+            QuantizedValues::F32(v) => {
+                for x in v {
+                    h.write(&x.to_le_bytes());
+                }
+            }
+            QuantizedValues::F16(v) => {
+                for x in v {
+                    h.write(&x.to_le_bytes());
+                }
+            }
+            QuantizedValues::I8 { quanta, scales } => {
+                for &q in quanta {
+                    h.write(&(q as u8).to_le_bytes());
+                }
+                for s in scales {
+                    h.write(&s.to_le_bytes());
+                }
+            }
+        }
+        h.finish()
+    }
+
+    /// Verify the stamped content hash against the payload: the
+    /// integrity gate every receiver runs before folding. A mismatch is
+    /// the typed [`Error::Integrity`] — a tampered or corrupted upload
+    /// must never silently enter the reduction.
+    pub fn verify(&self) -> Result<()> {
+        let got = self.compute_hash();
+        if got != self.content_hash {
+            return Err(Error::Integrity(format!(
+                "codec {}: content hash mismatch (stamped {:#018x}, \
+                 computed {got:#018x})",
+                self.kind.head(),
+                self.content_hash
+            )));
+        }
+        Ok(())
+    }
+
+    /// Structural validation against a P-length model (arity, index
+    /// range, chunk-scale count) — the same malformed-not-panicking
+    /// contract as the sparse-ternary path.
+    fn validate(&self, p: usize) -> Result<()> {
+        if self.len != p {
+            return Err(Error::Runtime(format!(
+                "encoded update of len {} != P {p}",
+                self.len
+            )));
+        }
+        if self.values.len() != self.indices.len() {
+            return Err(Error::Runtime(format!(
+                "encoded update has {} values for {} indices",
+                self.values.len(),
+                self.indices.len()
+            )));
+        }
+        if let QuantizedValues::I8 { quanta, scales } = &self.values {
+            if scales.len() != quanta.len().div_ceil(I8_CHUNK) {
+                return Err(Error::Runtime(format!(
+                    "encoded update has {} chunk scales for {} quanta",
+                    scales.len(),
+                    quanta.len()
+                )));
+            }
+        }
+        for &idx in &self.indices {
+            if idx as usize >= p {
+                return Err(Error::Runtime(format!(
+                    "encoded index {idx} out of range (P = {p})"
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Verify + validate, then fold `weight · delta` into the f64
+    /// accumulator index-wise — the streaming decode. Indices at or past
+    /// `active_limit` are skipped (slice-masked aggregation folds only
+    /// the backbone prefix), mirroring the sparse-ternary fold. The
+    /// caller accounts the `weight · global` base at finish, exactly as
+    /// for [`Update::SparseTernary`].
+    pub(crate) fn fold_into(
+        &self,
+        acc: &mut [f64],
+        p: usize,
+        weight: f64,
+        active_limit: usize,
+    ) -> Result<()> {
+        self.verify()?;
+        self.validate(p)?;
+        for (i, &idx) in self.indices.iter().enumerate() {
+            let idx = idx as usize;
+            if idx < active_limit {
+                acc[idx] += weight * self.values.get(i) as f64;
+            }
+        }
+        Ok(())
+    }
+
+    /// Verify + validate, then reconstruct the dense parameter vector
+    /// `global + delta` (rank-based aggregators and tests; the streaming
+    /// path uses [`EncodedUpdate::fold_into`] instead).
+    pub fn to_dense(&self, global: &ParamVec) -> Result<ParamVec> {
+        self.verify()?;
+        self.validate(global.len())?;
+        let mut out = global.clone();
+        for (i, &idx) in self.indices.iter().enumerate() {
+            out[idx as usize] += self.values.get(i);
+        }
+        Ok(out)
+    }
+
+    /// Verify + validate, then the delta's L2 norm (norm-clip screening
+    /// without dense materialization).
+    pub fn delta_l2(&self, p: usize) -> Result<f64> {
+        self.verify()?;
+        self.validate(p)?;
+        let mut sum = 0.0f64;
+        for i in 0..self.indices.len() {
+            let v = self.values.get(i) as f64;
+            sum += v * v;
+        }
+        Ok(sum.sqrt())
+    }
+}
+
+// ------------------------------------------------------------- codecs
+
+/// The compression stage as a pluggable component: encodes a client's
+/// new parameters into a wire [`Update`] (a delta against the
+/// distributed global), and predicts its encoded wire size for SimNet's
+/// deterministic cost accounting.
+pub trait UpdateCodec: Send + Sync {
+    /// Registered head name (`"top_k_i8"`).
+    fn name(&self) -> &'static str;
+
+    /// Full spec including parameters (`"top_k_i8(0.05)"`).
+    fn spec(&self) -> String;
+
+    /// Encode `new_params` as a wire update: the delta vs `global`,
+    /// compressed and integrity-stamped. Identity returns
+    /// [`Update::Dense`] unchanged.
+    fn encode(&self, new_params: ParamVec, global: &ParamVec) -> Result<Update>;
+
+    /// Deterministic encoded wire size for a model whose dense upload is
+    /// `dense_bytes` — what SimNet charges per uplink without flowing
+    /// real updates. Must agree with `encode`'s `encoded_len` when
+    /// `dense_bytes = P·4`; identity returns `dense_bytes` exactly, so
+    /// codec-unset and identity runs cost the same bytes bit-for-bit.
+    fn wire_bytes_for(&self, dense_bytes: usize) -> usize;
+}
+
+/// The built-in codec family: identity passthrough or top-k sparse
+/// delta with optional value quantization.
+#[derive(Debug, Clone, Copy)]
+pub struct SparseCodec {
+    kind: CodecKind,
+    /// Kept-coordinate fraction in (0, 1].
+    frac: f64,
+}
+
+impl SparseCodec {
+    /// Kept coordinates for a P-parameter model: `⌈frac·P⌉`, at least 1.
+    fn k_for(&self, p: usize) -> usize {
+        ((p as f64 * self.frac).ceil() as usize).clamp(1, p.max(1))
+    }
+}
+
+impl UpdateCodec for SparseCodec {
+    fn name(&self) -> &'static str {
+        self.kind.head()
+    }
+
+    fn spec(&self) -> String {
+        match self.kind {
+            CodecKind::Identity => "identity".into(),
+            _ => format!("{}({})", self.kind.head(), self.frac),
+        }
+    }
+
+    fn encode(&self, new_params: ParamVec, global: &ParamVec) -> Result<Update> {
+        if self.kind == CodecKind::Identity {
+            return Ok(Update::Dense(new_params));
+        }
+        let p = global.len();
+        if new_params.len() != p {
+            return Err(Error::Runtime(format!(
+                "codec {}: params of len {} != P {p}",
+                self.kind.head(),
+                new_params.len()
+            )));
+        }
+        // Delta vs the distributed global, largest magnitudes kept —
+        // the same selection STC performs, but value-preserving.
+        let mut deltas: Vec<(u32, f32)> = new_params
+            .iter()
+            .zip(global.iter())
+            .enumerate()
+            .map(|(i, (n, g))| (i as u32, n - g))
+            .collect();
+        if deltas.iter().any(|(_, d)| !d.is_finite()) {
+            return Err(Error::Runtime(format!(
+                "codec {}: non-finite delta refused (diverged update?)",
+                self.kind.head()
+            )));
+        }
+        let k = self.k_for(p);
+        if k < p {
+            deltas.select_nth_unstable_by(k - 1, |a, b| {
+                b.1.abs().partial_cmp(&a.1.abs()).unwrap()
+            });
+            deltas.truncate(k);
+        }
+        // Ascending indices: cache-friendly folds, deterministic hash.
+        deltas.sort_unstable_by_key(|(i, _)| *i);
+        let indices: Vec<u32> = deltas.iter().map(|(i, _)| *i).collect();
+        let values = match self.kind {
+            CodecKind::TopK => {
+                QuantizedValues::F32(deltas.iter().map(|(_, d)| *d).collect())
+            }
+            CodecKind::TopKF16 => QuantizedValues::F16(
+                deltas.iter().map(|(_, d)| f32_to_f16_bits(*d)).collect(),
+            ),
+            CodecKind::TopKI8 => {
+                let mut quanta = Vec::with_capacity(k);
+                let mut scales = Vec::with_capacity(k.div_ceil(I8_CHUNK));
+                for chunk in deltas.chunks(I8_CHUNK) {
+                    let max_abs = chunk
+                        .iter()
+                        .map(|(_, d)| d.abs())
+                        .fold(0.0f32, f32::max);
+                    let scale = if max_abs > 0.0 { max_abs / 127.0 } else { 0.0 };
+                    scales.push(scale);
+                    for (_, d) in chunk {
+                        let q = if scale > 0.0 {
+                            (d / scale).round().clamp(-127.0, 127.0) as i8
+                        } else {
+                            0
+                        };
+                        quanta.push(q);
+                    }
+                }
+                QuantizedValues::I8 { quanta, scales }
+            }
+            CodecKind::Identity => unreachable!("identity returned above"),
+        };
+        let encoded_len = HEADER_BYTES
+            + k * self.kind.bytes_per_coord()
+            + match self.kind {
+                CodecKind::TopKI8 => k.div_ceil(I8_CHUNK) * 4,
+                _ => 0,
+            };
+        let mut enc = EncodedUpdate {
+            kind: self.kind,
+            len: p,
+            indices,
+            values,
+            encoded_len,
+            content_hash: 0,
+        };
+        enc.content_hash = enc.compute_hash();
+        Ok(Update::Encoded(enc))
+    }
+
+    fn wire_bytes_for(&self, dense_bytes: usize) -> usize {
+        if self.kind == CodecKind::Identity {
+            return dense_bytes;
+        }
+        let p = (dense_bytes / 4).max(1);
+        let k = self.k_for(p);
+        HEADER_BYTES
+            + k * self.kind.bytes_per_coord()
+            + match self.kind {
+                CodecKind::TopKI8 => k.div_ceil(I8_CHUNK) * 4,
+                _ => 0,
+            }
+    }
+}
+
+/// Parse a codec spec (`"identity"`, `"top_k(0.05)"`, `"top_k_i8"`)
+/// into a live codec. Fraction defaults to 0.01 when absent; must be in
+/// (0, 1].
+pub fn parse(spec: &str) -> Result<Arc<dyn UpdateCodec>> {
+    let head = spec_head(spec);
+    let kind = match head.as_str() {
+        "identity" => CodecKind::Identity,
+        "top_k" => CodecKind::TopK,
+        "top_k_f16" => CodecKind::TopKF16,
+        "top_k_i8" => CodecKind::TopKI8,
+        other => {
+            return Err(Error::Config(format!("unknown codec {other:?}")));
+        }
+    };
+    if kind == CodecKind::Identity {
+        if spec_inner(spec).is_some() {
+            return Err(Error::Config(
+                "codec \"identity\" takes no argument".into(),
+            ));
+        }
+        return Ok(Arc::new(SparseCodec { kind, frac: 1.0 }));
+    }
+    let frac = match spec_inner(spec) {
+        Some(arg) => arg.parse::<f64>().map_err(|_| {
+            Error::Config(format!("bad codec fraction {arg:?} in {spec:?}"))
+        })?,
+        None => DEFAULT_FRAC,
+    };
+    if !(frac > 0.0 && frac <= 1.0) {
+        return Err(Error::Config(format!(
+            "codec fraction must be in (0,1], got {frac}"
+        )));
+    }
+    Ok(Arc::new(SparseCodec { kind, frac }))
+}
+
+/// Install the built-in codecs into a registry (called by
+/// [`ComponentRegistry::with_builtins`]).
+pub(crate) fn register_builtins(reg: &mut ComponentRegistry) {
+    for name in ["identity", "top_k", "top_k_f16", "top_k_i8"] {
+        reg.register_codec(name, Arc::new(parse));
+    }
+}
+
+// ------------------------------------------------- client-flow wiring
+
+/// Wraps any algorithm's client flow, replacing its compression stage
+/// with a registered codec — `Config.codec` composes with every
+/// algorithm without per-algorithm wiring. Train, decompress and
+/// encrypt stages pass through to the inner flow untouched.
+pub struct CodecClientFlow {
+    inner: Box<dyn ClientFlow>,
+    codec: Arc<dyn UpdateCodec>,
+}
+
+impl ClientFlow for CodecClientFlow {
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    fn decompress(&mut self, payload: &ModelPayload) -> Result<ParamVec> {
+        self.inner.decompress(payload)
+    }
+
+    fn train(
+        &mut self,
+        engine: &Engine,
+        task: &TrainTask,
+        params: ParamVec,
+    ) -> Result<(ParamVec, TrainStats)> {
+        self.inner.train(engine, task, params)
+    }
+
+    fn compress(
+        &mut self,
+        new_params: ParamVec,
+        global: &ParamVec,
+    ) -> Result<Update> {
+        self.codec.encode(new_params, global)
+    }
+
+    fn encrypt(&mut self, update: Update) -> Result<Update> {
+        self.inner.encrypt(update)
+    }
+}
+
+/// Wrap a client-flow factory so every produced flow compresses through
+/// `codec` (used by the registry when `Config.codec` is set).
+pub fn wrap_client_factory(
+    inner: ClientFlowFactory,
+    codec: Arc<dyn UpdateCodec>,
+) -> ClientFlowFactory {
+    Arc::new(move || {
+        Box::new(CodecClientFlow { inner: inner(), codec: codec.clone() })
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aggregate::{AggContext, Aggregator, MeanAggregator};
+    use crate::util::rng::Rng;
+
+    fn random_vecs(seed: u64, p: usize) -> (ParamVec, ParamVec) {
+        let mut rng = Rng::new(seed);
+        let global =
+            ParamVec((0..p).map(|_| rng.uniform() as f32 - 0.5).collect());
+        let new = ParamVec(
+            global
+                .iter()
+                .map(|g| g + (rng.uniform() as f32 - 0.5) * 0.2)
+                .collect(),
+        );
+        (new, global)
+    }
+
+    fn encoded(u: &Update) -> &EncodedUpdate {
+        match u {
+            Update::Encoded(e) => e,
+            other => panic!("expected Encoded, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn f16_conversion_roundtrips_representable_values() {
+        for v in [0.0f32, -0.0, 1.0, -1.0, 0.5, 65504.0, -65504.0, 6.1e-5] {
+            let back = f16_bits_to_f32(f32_to_f16_bits(v));
+            assert_eq!(back, v, "{v}");
+        }
+        // Subnormal f16 range survives the round trip too.
+        let tiny = 2.0f32.powi(-15);
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(tiny)), tiny);
+        // Overflow saturates to inf, NaN stays NaN.
+        assert!(f16_bits_to_f32(f32_to_f16_bits(1e6)).is_infinite());
+        assert!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)).is_nan());
+        // Relative error of lossy conversions is bounded by 2^-11.
+        let mut rng = Rng::new(5);
+        for _ in 0..1000 {
+            let v = (rng.uniform() as f32 - 0.5) * 10.0;
+            let back = f16_bits_to_f32(f32_to_f16_bits(v));
+            assert!(
+                (back - v).abs() <= v.abs() * 4.9e-4 + 1e-7,
+                "{v} -> {back}"
+            );
+        }
+    }
+
+    #[test]
+    fn round_trip_error_bound_per_codec() {
+        let p = 512;
+        let (new, global) = random_vecs(7, p);
+        let max_abs = new
+            .iter()
+            .zip(global.iter())
+            .map(|(n, g)| (n - g).abs())
+            .fold(0.0f32, f32::max);
+
+        // identity and top_k(1.0) reconstruct exactly.
+        let u = parse("identity").unwrap().encode(new.clone(), &global).unwrap();
+        assert_eq!(u.to_dense(&global).unwrap().0, new.0);
+        let u = parse("top_k(1.0)").unwrap().encode(new.clone(), &global).unwrap();
+        for (got, want) in u.to_dense(&global).unwrap().iter().zip(new.iter()) {
+            assert!((got - want).abs() < 1e-6, "{got} vs {want}");
+        }
+        // f16 keeps ~11 bits of mantissa.
+        let u =
+            parse("top_k_f16(1.0)").unwrap().encode(new.clone(), &global).unwrap();
+        for (got, want) in u.to_dense(&global).unwrap().iter().zip(new.iter()) {
+            assert!(
+                (got - want).abs() <= want.abs() * 1e-3 + 1e-4,
+                "{got} vs {want}"
+            );
+        }
+        // i8 error is bounded by half a quantization step per chunk.
+        let u =
+            parse("top_k_i8(1.0)").unwrap().encode(new.clone(), &global).unwrap();
+        let step = max_abs / 127.0;
+        for (got, want) in u.to_dense(&global).unwrap().iter().zip(new.iter()) {
+            assert!((got - want).abs() <= step, "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn top_k_selects_largest_magnitude_coordinates() {
+        let p = 100;
+        let global = ParamVec::zeros(p);
+        let mut new = ParamVec::zeros(p);
+        // Magnitudes 3.0 > 2.5 > 2.0 at known spots, noise elsewhere.
+        new[17] = -3.0;
+        new[42] = 2.5;
+        new[77] = -2.0;
+        for i in 0..p {
+            if new[i] == 0.0 {
+                new[i] = 0.01 * ((i % 7) as f32 - 3.0);
+            }
+        }
+        let u = parse("top_k(0.03)").unwrap().encode(new, &global).unwrap();
+        let e = encoded(&u);
+        assert_eq!(e.indices, vec![17, 42, 77]);
+        assert_eq!(e.len, p);
+        // Values preserved exactly in f32 mode, ascending index order.
+        match &e.values {
+            QuantizedValues::F32(v) => assert_eq!(v, &vec![-3.0, 2.5, -2.0]),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn content_hash_is_stable_across_encode_and_decode() {
+        let (new, global) = random_vecs(11, 256);
+        let codec = parse("top_k_i8(0.1)").unwrap();
+        let a = codec.encode(new.clone(), &global).unwrap();
+        let b = codec.encode(new, &global).unwrap();
+        let (ea, eb) = (encoded(&a), encoded(&b));
+        // Same input ⇒ same payload ⇒ same hash.
+        assert_eq!(ea.content_hash, eb.content_hash);
+        // Decoding (and re-verifying after) never perturbs the stamp.
+        ea.verify().unwrap();
+        let _ = ea.to_dense(&global).unwrap();
+        ea.verify().unwrap();
+        assert_eq!(ea.content_hash, ea.compute_hash());
+    }
+
+    #[test]
+    fn tampered_payload_is_a_typed_integrity_error() {
+        let (new, global) = random_vecs(13, 128);
+        let u = parse("top_k(0.2)").unwrap().encode(new, &global).unwrap();
+        let mut e = encoded(&u).clone();
+        match &mut e.values {
+            QuantizedValues::F32(v) => v[0] += 1.0,
+            other => panic!("unexpected {other:?}"),
+        }
+        let err = e.verify().unwrap_err();
+        assert!(matches!(err, Error::Integrity(_)), "{err}");
+        assert!(err.to_string().starts_with("integrity error:"), "{err}");
+        // A tampered index trips it too, through every decode path.
+        let mut e2 = encoded(&u).clone();
+        e2.indices[0] ^= 1;
+        assert!(matches!(
+            e2.to_dense(&global).unwrap_err(),
+            Error::Integrity(_)
+        ));
+        let mut acc = vec![0.0f64; 128];
+        assert!(matches!(
+            e2.fold_into(&mut acc, 128, 1.0, 128).unwrap_err(),
+            Error::Integrity(_)
+        ));
+    }
+
+    #[test]
+    fn wire_size_prediction_matches_actual_encoding() {
+        for spec in
+            ["top_k(0.05)", "top_k_f16(0.05)", "top_k_i8(0.05)", "top_k_i8(1.0)"]
+        {
+            let codec = parse(spec).unwrap();
+            for p in [64usize, 1000, 4096] {
+                let (new, global) = random_vecs(p as u64, p);
+                let u = codec.encode(new, &global).unwrap();
+                assert_eq!(
+                    encoded(&u).encoded_len,
+                    codec.wire_bytes_for(p * 4),
+                    "{spec} at P={p}"
+                );
+                assert_eq!(u.wire_bytes(), encoded(&u).encoded_len);
+            }
+        }
+        // Identity costs exactly the dense bytes — the digest guard.
+        assert_eq!(parse("identity").unwrap().wire_bytes_for(1_600_000), 1_600_000);
+    }
+
+    #[test]
+    fn streaming_fold_matches_decode_then_mean() {
+        for threads in [0usize, 4] {
+            let p = 8192;
+            let global = Arc::new(random_vecs(17, p).1);
+            let codec = parse("top_k_i8(0.3)").unwrap();
+            let mut ctx = AggContext::new(global.clone()).expect_updates(6);
+            ctx.threads = threads;
+            ctx.parallel_threshold = 2;
+            let mut streaming = MeanAggregator::from_ctx(&ctx);
+            let mut reference = MeanAggregator::from_ctx(&ctx);
+            for c in 0..6u64 {
+                let (new, _) = random_vecs(100 + c, p);
+                let w = 1.0 + c as f64;
+                let u = codec.encode(new, &global).unwrap();
+                reference.add(&Update::Dense(u.to_dense(&global).unwrap()), w)
+                    .unwrap();
+                streaming.add(&u, w).unwrap();
+            }
+            let want = reference.finish().unwrap();
+            let got = streaming.finish().unwrap();
+            for (i, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+                assert!(
+                    ((g - w) as f64).abs() < 1e-6,
+                    "threads={threads} coord {i}: {g} vs {w}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn codec_specs_parse_and_reject_bad_fractions() {
+        assert_eq!(parse("identity").unwrap().spec(), "identity");
+        assert_eq!(parse("top_k").unwrap().spec(), "top_k(0.01)");
+        assert_eq!(parse("top_k_i8(0.05)").unwrap().spec(), "top_k_i8(0.05)");
+        for bad in
+            ["top_k(0)", "top_k(1.5)", "top_k(-0.1)", "top_k(x)", "identity(2)", "gzip"]
+        {
+            assert!(parse(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn codec_client_flow_replaces_the_compress_stage() {
+        let (new, global) = random_vecs(19, 64);
+        let mut flow = CodecClientFlow {
+            inner: Box::new(crate::flow::DefaultClientFlow),
+            codec: parse("top_k(0.1)").unwrap(),
+        };
+        let u = flow.compress(new.clone(), &global).unwrap();
+        assert!(matches!(u, Update::Encoded(_)));
+        assert!(u.wire_bytes() < 64 * 4);
+        // Identity wraps to a plain dense upload, byte-for-byte.
+        let mut flow = CodecClientFlow {
+            inner: Box::new(crate::flow::DefaultClientFlow),
+            codec: parse("identity").unwrap(),
+        };
+        let u = flow.compress(new.clone(), &global).unwrap();
+        assert_eq!(u, Update::Dense(new));
+    }
+}

@@ -193,6 +193,12 @@ pub struct SimConfig {
     /// 0 disables the adversary plane entirely (no RNG draws, trace
     /// digests match pre-adversary baselines bit-for-bit).
     pub adversary_frac: f64,
+    /// Cloud ingest rate in bytes/ms for hierarchical fan-in: the cloud
+    /// deserializes each round's edge partials at this rate before the
+    /// reduction lands (0 ⇒ cost model default, infinite on every
+    /// built-in, so flat and pre-existing hierarchical digests are
+    /// untouched until a finite rate is configured).
+    pub cloud_ingest_bytes_per_ms: f64,
 }
 
 impl Default for SimConfig {
@@ -213,6 +219,7 @@ impl Default for SimConfig {
             edge_bandwidth: 0.0,
             adversary: "sign-flip".into(),
             adversary_frac: 0.0,
+            cloud_ingest_bytes_per_ms: 0.0,
         }
     }
 }
@@ -265,6 +272,9 @@ impl SimConfig {
         if let Some(x) = v.get("adversary_frac").as_f64() {
             self.adversary_frac = x;
         }
+        if let Some(x) = v.get("cloud_ingest_bytes_per_ms").as_f64() {
+            self.cloud_ingest_bytes_per_ms = x;
+        }
         Ok(())
     }
 
@@ -300,6 +310,13 @@ impl SimConfig {
         }
         if self.adversary.trim().is_empty() {
             return Err(Error::Config("sim.adversary must be non-empty".into()));
+        }
+        if !(self.cloud_ingest_bytes_per_ms >= 0.0) {
+            return Err(Error::Config(
+                "sim.cloud_ingest_bytes_per_ms must be ≥ 0 (0 = cost \
+                 model default)"
+                    .into(),
+            ));
         }
         Ok(())
     }
@@ -409,6 +426,13 @@ pub struct Config {
     /// selects per-tier robustness purely from config. Flat runs ignore
     /// it.
     pub edge_agg: Option<String>,
+    /// Registered update codec compressing every client upload
+    /// ("identity" | "top_k(frac)" | "top_k_f16(frac)" |
+    /// "top_k_i8(frac)" | any registered name, see [`crate::codec`]).
+    /// When set, the codec stage replaces the algorithm's own compress
+    /// stage and SimNet charges encoded bytes per uplink. `None` keeps
+    /// each algorithm's flow (and all trace digests) untouched.
+    pub codec: Option<String>,
     /// Discrete-event simulator knobs (the `simulate` subcommand and
     /// [`crate::simnet`] jobs read these; training runs ignore them).
     pub sim: SimConfig,
@@ -452,6 +476,7 @@ impl Default for Config {
             agg_clip_norm: 10.0,
             topology: "flat".into(),
             edge_agg: None,
+            codec: None,
             sim: SimConfig::default(),
         }
     }
@@ -597,6 +622,9 @@ impl Config {
         if let Some(s) = v.get("edge_agg").as_str() {
             c.edge_agg = Some(s.to_string());
         }
+        if let Some(s) = v.get("codec").as_str() {
+            c.codec = Some(s.to_string());
+        }
         let sim = v.get("sim");
         if sim.as_obj().is_some() {
             c.sim.apply_json(sim)?;
@@ -676,6 +704,14 @@ impl Config {
                 return Err(Error::Config(
                     "edge_agg must name a registered aggregator (or be \
                      absent)"
+                        .into(),
+                ));
+            }
+        }
+        if let Some(codec) = &self.codec {
+            if codec.trim().is_empty() {
+                return Err(Error::Config(
+                    "codec must name a registered codec (or be absent)"
                         .into(),
                 ));
             }
@@ -803,6 +839,21 @@ mod tests {
     }
 
     #[test]
+    fn codec_knobs_parse_and_default() {
+        let c = Config::default();
+        assert!(c.codec.is_none());
+        assert_eq!(c.sim.cloud_ingest_bytes_per_ms, 0.0);
+        let j = Json::parse(
+            r#"{"codec": "top_k_i8(0.05)",
+                "sim": {"cloud_ingest_bytes_per_ms": 500000}}"#,
+        )
+        .unwrap();
+        let c = Config::from_json(&j).unwrap();
+        assert_eq!(c.codec.as_deref(), Some("top_k_i8(0.05)"));
+        assert_eq!(c.sim.cloud_ingest_bytes_per_ms, 500_000.0);
+    }
+
+    #[test]
     fn zero_clip_norm_selects_adaptive_clipping() {
         let j = Json::parse(r#"{"agg": "norm_clip", "agg_clip_norm": 0}"#)
             .unwrap();
@@ -840,6 +891,8 @@ mod tests {
             r#"{"sim": {"adversary_frac": 1.0}}"#,
             r#"{"sim": {"adversary_frac": -0.2}}"#,
             r#"{"sim": {"adversary": " "}}"#,
+            r#"{"codec": " "}"#,
+            r#"{"sim": {"cloud_ingest_bytes_per_ms": -1}}"#,
         ];
         for src in cases {
             let j = Json::parse(src).unwrap();

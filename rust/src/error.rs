@@ -32,6 +32,10 @@ pub enum Error {
     /// JSON parse/serialize failure.
     Json(String),
 
+    /// A wire payload failed its integrity check (content-hash
+    /// mismatch on a codec-encoded update).
+    Integrity(String),
+
     Io(std::io::Error),
 }
 
@@ -46,6 +50,7 @@ impl fmt::Display for Error {
             Error::Deploy(m) => write!(f, "deploy error: {m}"),
             Error::Tracking(m) => write!(f, "tracking error: {m}"),
             Error::Json(m) => write!(f, "json error: {m}"),
+            Error::Integrity(m) => write!(f, "integrity error: {m}"),
             // Transparent: IO errors read best undecorated.
             Error::Io(e) => write!(f, "{e}"),
         }
@@ -84,6 +89,10 @@ mod tests {
     fn display_prefixes_match_variants() {
         assert_eq!(Error::Config("x".into()).to_string(), "config error: x");
         assert_eq!(Error::Registry("y".into()).to_string(), "registry error: y");
+        assert_eq!(
+            Error::Integrity("z".into()).to_string(),
+            "integrity error: z"
+        );
         let io = Error::from(std::io::Error::new(
             std::io::ErrorKind::NotFound,
             "gone",

@@ -43,6 +43,10 @@ pub enum Update {
     /// Opaque encrypted payload wrapping another update (encryption
     /// stage demo); the server must de-obfuscate before decompression.
     Masked { xor_key: u64, inner: Box<Update> },
+    /// Codec-compressed sparse delta with an integrity content hash
+    /// (see [`crate::codec`]): `new = global + delta` at the kept
+    /// indices, values possibly quantized.
+    Encoded(crate::codec::EncodedUpdate),
 }
 
 impl Update {
@@ -55,7 +59,17 @@ impl Update {
                 indices.len() * 4 + signs.len().div_ceil(8) + 4 + 8
             }
             Update::Masked { inner, .. } => 8 + inner.wire_bytes(),
+            // Codec-encoded payloads carry their exact serialized size.
+            Update::Encoded(e) => e.encoded_len,
         }
+    }
+
+    /// Bytes actually shipped on the uplink — the per-variant size the
+    /// simulator charges for upload delay and `comm_bytes` accounting
+    /// (alias of [`Update::wire_bytes`], named for the costing call
+    /// sites).
+    pub fn encoded_len(&self) -> usize {
+        self.wire_bytes()
     }
 
     /// Reconstruct the dense parameter vector this update encodes.
@@ -105,6 +119,10 @@ impl Update {
                  register a server plugin with a decryption stage"
                     .into(),
             )),
+            // Integrity-verified sparse decode (hash mismatch is a
+            // typed Error::Integrity, malformed payloads error like the
+            // sparse-ternary arms above).
+            Update::Encoded(e) => e.to_dense(global),
         }
     }
 }
@@ -159,6 +177,20 @@ mod tests {
             magnitude: 1.0,
         };
         assert!(u.to_dense(&g).is_err());
+    }
+
+    #[test]
+    fn encoded_len_is_the_per_variant_wire_size() {
+        let dense = Update::Dense(ParamVec(vec![0.0; 10]));
+        assert_eq!(dense.encoded_len(), 40);
+        let sparse = Update::SparseTernary {
+            len: 10,
+            indices: vec![1, 2],
+            signs: vec![true, false],
+            magnitude: 0.5,
+        };
+        assert_eq!(sparse.encoded_len(), sparse.wire_bytes());
+        assert!(sparse.encoded_len() < dense.encoded_len());
     }
 
     #[test]

@@ -30,7 +30,7 @@
 use std::collections::{BTreeMap, BTreeSet};
 use std::sync::Arc;
 
-use crate::aggregate::mean::{axpy_into, check_weight, fold_ternary};
+use crate::aggregate::mean::{axpy_into, check_weight};
 use crate::aggregate::{AggContext, Aggregator};
 use crate::error::{Error, Result};
 use crate::flow::{ServerFlow, Update};
@@ -83,26 +83,18 @@ impl MeanPartial {
                 }
                 axpy_into(&mut self.acc, x, weight, self.threads);
             }
-            Update::SparseTernary { len, indices, signs, magnitude } => {
-                fold_ternary(
+            // Delta-encoded updates (sparse ternary / codec-encoded)
+            // fold through the shared delta path; Masked errors there
+            // with the canonical message.
+            _ => {
+                crate::aggregate::fold_delta_update(
                     &mut self.acc,
                     p,
-                    *len,
-                    indices,
-                    signs,
-                    *magnitude,
+                    update,
                     weight,
                     p,
                 )?;
                 self.sparse_weight += weight;
-            }
-            Update::Masked { .. } => {
-                return Err(Error::Runtime(
-                    "aggregate: masked update reached the aggregator; a \
-                     server plugin with a decryption stage must unmask \
-                     uploads first"
-                        .into(),
-                ))
             }
         }
         self.count += 1;
@@ -682,6 +674,35 @@ mod tests {
         .unwrap();
         for (c, u, w) in
             [(0usize, sparse.clone(), 2.0), (1usize, dense(vec![2.0; 4]), 1.0)]
+        {
+            flat.add(&u, w).unwrap();
+            plane.add(c, &u, w).unwrap();
+        }
+        let want = flat.finish().unwrap();
+        let (got, _) = plane.finish().unwrap();
+        for (g, w) in got.iter().zip(want.iter()) {
+            assert!(((g - w) as f64).abs() < 1e-7, "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn encoded_updates_fold_through_the_exact_path() {
+        // A codec-compressed upload reduces identically through the
+        // tiered plane and the flat mean — the shared delta fold is the
+        // single implementation both sides call.
+        let global = Arc::new(ParamVec(vec![1.0; 8]));
+        let codec = crate::codec::parse("top_k(0.5)").unwrap();
+        let new = ParamVec(vec![1.5, 1.0, 0.25, 1.0, 1.0, 3.0, 1.0, 0.0]);
+        let encoded = codec.encode(new, &global).unwrap();
+        let mut flat = MeanAggregator::from_ctx(&ctx_for(global.clone(), 2));
+        let mut plane = HierPlane::from_registry(
+            &Topology::Edges { n: 2 },
+            ctx_for(global.clone(), 2),
+            &[0, 1],
+        )
+        .unwrap();
+        for (c, u, w) in
+            [(0usize, encoded, 2.0), (1usize, dense(vec![2.0; 8]), 1.0)]
         {
             flat.add(&u, w).unwrap();
             plane.add(c, &u, w).unwrap();

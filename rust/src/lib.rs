@@ -57,6 +57,16 @@
 //! index-wise, chunk-parallel for big cohorts. Memory is O(threads·P)
 //! instead of O(cohort·P); `examples/agg_bench.rs` measures the win.
 //!
+//! ## Compressed transport
+//!
+//! [`codec`] makes the wire format a config axis: `codec =
+//! "top_k_i8(0.05)"` compresses every uplink to the 5% largest-magnitude
+//! delta coordinates, i8-quantized with per-chunk scales and a FNV-1a
+//! integrity hash. Encoded updates fold into the streaming aggregators
+//! index-wise (no dense materialization), SimNet charges the encoded
+//! byte size per uplink, and [`CodecSweep`] grids codec × fraction into
+//! accuracy / makespan / MB-per-round tables.
+//!
 //! ## Simulating at scale
 //!
 //! [`simnet`] is a discrete-event federation simulator on a virtual
@@ -82,6 +92,7 @@ pub mod aggregate;
 pub mod algorithms;
 pub mod api;
 pub mod client;
+pub mod codec;
 pub mod comm;
 pub mod config;
 pub mod coordinator;
@@ -102,11 +113,12 @@ pub mod util;
 
 pub use aggregate::{AggContext, Aggregator};
 pub use api::{init, Report, Session, SessionBuilder};
+pub use codec::{EncodedUpdate, UpdateCodec};
 pub use config::{Allocation, Config, DatasetKind, Partition, SimMode};
 pub use error::{Error, Result};
 pub use hierarchy::{HierPlane, Topology};
 pub use platform::{
-    HierSweep, HierSweepReport, JobHandle, JobStatus, Platform, SimSweep,
-    SimSweepReport, Sweep, SweepReport,
+    CodecSweep, CodecSweepReport, HierSweep, HierSweepReport, JobHandle,
+    JobStatus, Platform, SimSweep, SimSweepReport, Sweep, SweepReport,
 };
 pub use simnet::{SimNet, SimReport};

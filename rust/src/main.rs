@@ -17,7 +17,7 @@ use std::time::Duration;
 use easyfl::comm::{ClientService, RemoteCoordinator, Registry};
 use easyfl::config::{Allocation, Config, DatasetKind, Partition, SimMode};
 use easyfl::deployment::Deployment;
-use easyfl::platform::{HierSweep, Platform, RobustSweep, SimSweep, Sweep};
+use easyfl::platform::{CodecSweep, HierSweep, Platform, RobustSweep, SimSweep, Sweep};
 use easyfl::tracking::Tracker;
 use easyfl::util::args::{usage, Args, Opt};
 
@@ -85,6 +85,7 @@ fn common_opts() -> Vec<Opt> {
         Opt { name: "agg-clip-norm", help: "norm_clip: L2 delta threshold (0 = adaptive quantile)", default: Some("10"), is_flag: false },
         Opt { name: "topology", help: "flat | edges(n) | clusters(file)", default: None, is_flag: false },
         Opt { name: "edge-agg", help: "edge-tier aggregator for hierarchical topologies", default: None, is_flag: false },
+        Opt { name: "codec", help: "update codec: identity | top_k(f) | top_k_f16(f) | top_k_i8(f)", default: None, is_flag: false },
         Opt { name: "tracking-dir", help: "persist metrics JSON here", default: None, is_flag: false },
         Opt { name: "config", help: "JSON config file (flags override it)", default: None, is_flag: false },
         Opt { name: "help", help: "show help", default: None, is_flag: true },
@@ -139,6 +140,11 @@ fn parse_config(a: &Args) -> easyfl::Result<Config> {
     }
     if let Some(edge_agg) = a.get("edge-agg") {
         cfg.edge_agg = Some(edge_agg.to_string());
+    }
+    // Same contract for the codec: an absent flag keeps a --config file's
+    // choice; an explicit flag wins.
+    if let Some(codec) = a.get("codec") {
+        cfg.codec = Some(codec.to_string());
     }
     if let Some(dir) = a.get("tracking-dir") {
         cfg.tracking_dir = Some(dir.into());
@@ -201,6 +207,9 @@ fn cmd_simulate(argv: &[String]) -> easyfl::Result<()> {
         Opt { name: "hier-sweep", help: "run topology × tier-aggregator fan-in grid", default: None, is_flag: true },
         Opt { name: "topologies", help: "comma list of topologies for --hier-sweep", default: Some("flat,edges(4),edges(16)"), is_flag: false },
         Opt { name: "hier-aggs", help: "comma list of tier aggregators for --hier-sweep", default: Some("mean"), is_flag: false },
+        Opt { name: "codec-sweep", help: "run codec × fraction transport grid", default: None, is_flag: true },
+        Opt { name: "codecs", help: "comma list of codecs for --codec-sweep", default: Some("identity,top_k,top_k_f16,top_k_i8"), is_flag: false },
+        Opt { name: "codec-fracs", help: "comma list of kept fractions for --codec-sweep", default: Some("0.05,0.2"), is_flag: false },
         Opt { name: "bench-out", help: "write events/sec benchmark JSON here", default: None, is_flag: false },
     ]);
     let a = Args::parse(argv, &opts)?;
@@ -245,6 +254,26 @@ fn cmd_simulate(argv: &[String]) -> easyfl::Result<()> {
         let report = HierSweep::new(cfg)
             .topologies(&topo_refs)
             .aggregators(&agg_refs)
+            .run(&platform)?;
+        print!("{}", report.to_table());
+        return Ok(());
+    }
+
+    if a.has_flag("codec-sweep") {
+        let codecs = list_opt(&a, "codecs", "identity,top_k,top_k_f16,top_k_i8");
+        let codec_refs: Vec<&str> = codecs.iter().map(String::as_str).collect();
+        let fracs = list_opt(&a, "codec-fracs", "0.05,0.2")
+            .iter()
+            .map(|s| {
+                s.parse::<f64>().map_err(|_| {
+                    easyfl::Error::Config(format!("bad codec fraction {s:?}"))
+                })
+            })
+            .collect::<easyfl::Result<Vec<f64>>>()?;
+        let platform = Platform::new(4);
+        let report = CodecSweep::new(cfg)
+            .codecs(&codec_refs)
+            .fractions(&fracs)
             .run(&platform)?;
         print!("{}", report.to_table());
         return Ok(());
@@ -632,6 +661,7 @@ fn cmd_info(argv: &[String]) -> easyfl::Result<()> {
         easyfl::registry::with_global(|r| r.aggregator_names());
     let topologies =
         easyfl::registry::with_global(|r| r.topology_names());
+    let codecs = easyfl::registry::with_global(|r| r.codec_names());
     println!("\nregistered components:");
     println!("  algorithms:   {}", algos.join(", "));
     println!("  data sources: {}", datasets.join(", "));
@@ -639,6 +669,7 @@ fn cmd_info(argv: &[String]) -> easyfl::Result<()> {
     println!("  server flows: {}", flows.join(", "));
     println!("  aggregators:  {}", aggregators.join(", "));
     println!("  topologies:   {}", topologies.join(", "));
+    println!("  codecs:       {}", codecs.join(", "));
     println!("  availability: {}", availability.join(", "));
     println!("  cost models:  {}", cost_models.join(", "));
     println!("  adversaries:  {}", adversaries.join(", "));

@@ -345,6 +345,9 @@ impl Platform {
             r.cost_model(&cfg.sim.cost_model, &cfg)?;
             r.adversary(&cfg.sim.adversary)?;
             r.topology(&cfg.topology)?;
+            if let Some(spec) = &cfg.codec {
+                r.codec(spec)?;
+            }
             for agg in cfg.agg.iter().chain(cfg.edge_agg.iter()) {
                 // Probe-build so unknown names and bad trim/clip knobs
                 // fail here, not inside a queued worker.
@@ -1173,6 +1176,188 @@ impl HierSweepReport {
     }
 }
 
+// ---------------------------------------------------------- codec sweep
+
+/// Grid expansion over update codecs × compression fractions, executed
+/// on a [`Platform`] as SimNet jobs and summarized as one transport
+/// table: accuracy, makespan and uplink megabytes per round per cell.
+/// This is the three-line answer to "how hard can I compress before the
+/// model notices?":
+///
+/// ```no_run
+/// let platform = easyfl::Platform::new(4);
+/// let report = easyfl::platform::CodecSweep::new(easyfl::Config::default())
+///     .codecs(&["identity", "top_k", "top_k_i8"])
+///     .fractions(&[0.05, 0.2])
+///     .run(&platform)
+///     .unwrap();
+/// println!("{}", report.to_table());
+/// ```
+pub struct CodecSweep {
+    base: Config,
+    codecs: Vec<String>,
+    fractions: Vec<f64>,
+}
+
+impl CodecSweep {
+    /// A sweep whose axes default to the base config's single values
+    /// (`identity` when the base sets no codec).
+    pub fn new(base: Config) -> CodecSweep {
+        CodecSweep {
+            codecs: vec![base
+                .codec
+                .clone()
+                .unwrap_or_else(|| "identity".to_string())],
+            fractions: Vec::new(),
+            base,
+        }
+    }
+
+    pub fn codecs(mut self, codecs: &[&str]) -> CodecSweep {
+        self.codecs = codecs.iter().map(|s| s.to_string()).collect();
+        self
+    }
+
+    pub fn fractions(mut self, fracs: &[f64]) -> CodecSweep {
+        self.fractions = fracs.to_vec();
+        self
+    }
+
+    /// Expand the grid (codec-major, like the report table). A bare
+    /// codec head (`"top_k"`) is crossed with every fraction as
+    /// `top_k(frac)`; `identity` and already-parameterized specs
+    /// (`"top_k(0.1)"`) have no fraction axis and emit one cell.
+    pub fn configs(&self) -> Vec<Config> {
+        let mut out = Vec::new();
+        for codec in &self.codecs {
+            let takes_fraction = crate::registry::spec_head(codec)
+                != "identity"
+                && crate::registry::spec_inner(codec).is_none()
+                && !self.fractions.is_empty();
+            let specs: Vec<String> = if takes_fraction {
+                self.fractions.iter().map(|f| format!("{codec}({f})")).collect()
+            } else {
+                vec![codec.clone()]
+            };
+            for spec in specs {
+                let mut cfg = self.base.clone();
+                cfg.codec = Some(spec);
+                out.push(cfg);
+            }
+        }
+        out
+    }
+
+    /// Submit every cell as a SimNet job and join them into a report.
+    /// Cells are validated and codec specs probed up front, so an
+    /// unknown codec or out-of-range fraction fails the whole sweep
+    /// fast instead of surfacing as per-cell error rows.
+    pub fn run(self, platform: &Platform) -> Result<CodecSweepReport> {
+        let mut handles = Vec::new();
+        for cfg in self.configs() {
+            cfg.validate()?;
+            let spec =
+                cfg.codec.clone().unwrap_or_else(|| "identity".to_string());
+            registry::with_global(|r| r.codec(&spec).map(|_| ()))?;
+            let slot: Arc<Mutex<Option<SimReport>>> = Arc::new(Mutex::new(None));
+            let slot_w = slot.clone();
+            let label = format!("codec-{spec}");
+            let tracker = Arc::new(Tracker::new(&label));
+            let rounds = cfg.rounds;
+            let handle = platform.spawn_job(
+                &label,
+                rounds,
+                tracker,
+                Box::new(move |ctx| {
+                    let sim = run_sim_job(&cfg, ctx)?;
+                    let report = sim.to_report();
+                    *slot_w.lock().unwrap() = Some(sim);
+                    Ok(report)
+                }),
+            )?;
+            handles.push((spec, slot, handle));
+        }
+        let rows = handles
+            .into_iter()
+            .map(|(codec, slot, handle)| {
+                let outcome = match handle.join() {
+                    Ok(_) => slot.lock().unwrap().take().ok_or_else(|| {
+                        Error::Runtime("sim job finished without a report".into())
+                    }),
+                    Err(e) => Err(e),
+                };
+                CodecSweepRow { codec, outcome }
+            })
+            .collect();
+        Ok(CodecSweepReport { rows })
+    }
+}
+
+/// One codec-sweep cell's identity and outcome.
+pub struct CodecSweepRow {
+    /// Full codec spec of the cell (e.g. `"top_k_i8(0.05)"`).
+    pub codec: String,
+    pub outcome: Result<SimReport>,
+}
+
+/// Results of a [`CodecSweep`], renderable as an aligned text table.
+pub struct CodecSweepReport {
+    pub rows: Vec<CodecSweepRow>,
+}
+
+impl CodecSweepReport {
+    /// Successful cells only.
+    pub fn ok_rows(&self) -> impl Iterator<Item = (&CodecSweepRow, &SimReport)> {
+        self.rows
+            .iter()
+            .filter_map(|r| r.outcome.as_ref().ok().map(|rep| (r, rep)))
+    }
+
+    /// Total communicated megabytes per completed round for the given
+    /// codec spec, if that cell ran.
+    pub fn mb_per_round_of(&self, codec: &str) -> Option<f64> {
+        self.ok_rows()
+            .find(|(row, _)| row.codec == codec)
+            .map(|(_, rep)| Self::mb_per_round(rep))
+    }
+
+    fn mb_per_round(rep: &SimReport) -> f64 {
+        rep.comm_bytes as f64 / (1024.0 * 1024.0 * rep.rounds.max(1) as f64)
+    }
+
+    /// Render the transport table the `simulate --codec-sweep`
+    /// subcommand prints: accuracy, makespan and MB/round are the
+    /// headline columns.
+    pub fn to_table(&self) -> String {
+        let mut out = String::new();
+        let header = format!(
+            "{:<18} {:>7} {:>8} {:>12} {:>10}  {}\n",
+            "codec", "rounds", "acc%", "makespan s", "MB/round", "status"
+        );
+        out.push_str(&header);
+        out.push_str(&"-".repeat(header.len().saturating_sub(1)));
+        out.push('\n');
+        for row in &self.rows {
+            match &row.outcome {
+                Ok(rep) => out.push_str(&format!(
+                    "{:<18} {:>7} {:>8.2} {:>12.1} {:>10.2}  {}\n",
+                    row.codec,
+                    rep.rounds,
+                    rep.final_accuracy * 100.0,
+                    rep.makespan_ms / 1000.0,
+                    Self::mb_per_round(rep),
+                    if rep.converged { "ok" } else { "partial" },
+                )),
+                Err(e) => out.push_str(&format!(
+                    "{:<18} {:>7} {:>8} {:>12} {:>10}  error: {e}\n",
+                    row.codec, "-", "-", "-", "-",
+                )),
+            }
+        }
+        out
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1582,6 +1767,74 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("ring"), "{err}");
+    }
+
+    #[test]
+    fn submit_sim_rejects_unknown_codecs_before_queueing() {
+        let platform = Platform::new(1);
+        let mut cfg = small_sim_config();
+        cfg.codec = Some("middle_out(2.5)".into());
+        let err = platform.submit_sim(cfg).unwrap_err().to_string();
+        assert!(err.contains("middle_out"), "{err}");
+        assert!(err.contains("top_k"), "{err}");
+        let mut cfg = small_sim_config();
+        cfg.codec = Some("top_k_i8(0.1)".into());
+        assert!(platform.submit_sim(cfg).is_ok());
+    }
+
+    #[test]
+    fn codec_sweep_expands_codec_by_fraction_grid() {
+        let sweep = CodecSweep::new(small_sim_config())
+            .codecs(&["identity", "top_k", "top_k_i8(0.1)"])
+            .fractions(&[0.05, 0.2]);
+        let cells = sweep.configs();
+        // identity and the pre-parameterized spec collapse the fraction
+        // axis; the bare head crosses with both fractions.
+        assert_eq!(cells.len(), 4);
+        assert!(cells
+            .iter()
+            .any(|c| c.codec.as_deref() == Some("identity")));
+        assert!(cells
+            .iter()
+            .any(|c| c.codec.as_deref() == Some("top_k(0.05)")));
+        assert!(cells
+            .iter()
+            .any(|c| c.codec.as_deref() == Some("top_k(0.2)")));
+        assert!(cells
+            .iter()
+            .any(|c| c.codec.as_deref() == Some("top_k_i8(0.1)")));
+    }
+
+    #[test]
+    fn codec_sweep_reports_transport_savings() {
+        let report = CodecSweep::new(small_sim_config())
+            .codecs(&["identity", "top_k_i8"])
+            .fractions(&[0.05])
+            .run(&Platform::new(2))
+            .unwrap();
+        assert_eq!(report.ok_rows().count(), 2);
+        let table = report.to_table();
+        assert!(table.contains("MB/round"), "{table}");
+        assert!(table.contains("top_k_i8(0.05)"), "{table}");
+        let dense = report.mb_per_round_of("identity").unwrap();
+        let packed = report.mb_per_round_of("top_k_i8(0.05)").unwrap();
+        assert!(
+            packed < dense,
+            "top_k_i8(0.05) must cut MB/round: {packed} !< {dense}"
+        );
+        assert!(report.mb_per_round_of("top_k(0.5)").is_none());
+    }
+
+    #[test]
+    fn codec_sweep_rejects_unknown_codecs_up_front() {
+        let platform = Platform::new(1);
+        let err = CodecSweep::new(small_sim_config())
+            .codecs(&["middle_out"])
+            .fractions(&[0.05])
+            .run(&platform)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("middle_out"), "{err}");
     }
 
     #[test]

@@ -31,6 +31,7 @@ use std::collections::BTreeMap;
 use std::sync::{Arc, OnceLock, RwLock};
 
 use crate::aggregate::{AggContext, Aggregator, AggregatorBuilder};
+use crate::codec::UpdateCodec;
 use crate::config::{Config, Partition};
 use crate::coordinator::ClientFlowFactory;
 use crate::data::registry::DataSource;
@@ -84,6 +85,12 @@ pub type AdversaryBuilder =
 pub type TopologyBuilder =
     Arc<dyn Fn(&str) -> Result<Topology> + Send + Sync>;
 
+/// Parser closure for an update-codec spec (receives the full spec
+/// string, e.g. `"top_k_i8(0.05)"` for the registered name
+/// `"top_k_i8"`).
+pub type CodecBuilder =
+    Arc<dyn Fn(&str) -> Result<Arc<dyn UpdateCodec>> + Send + Sync>;
+
 /// Name → constructor tables for every pluggable component kind.
 #[derive(Default)]
 pub struct ComponentRegistry {
@@ -96,6 +103,7 @@ pub struct ComponentRegistry {
     aggregators: BTreeMap<String, AggregatorBuilder>,
     adversaries: BTreeMap<String, AdversaryBuilder>,
     topologies: BTreeMap<String, TopologyBuilder>,
+    codecs: BTreeMap<String, CodecBuilder>,
 }
 
 fn unknown(kind: &str, name: &str, have: Vec<&String>) -> Error {
@@ -138,6 +146,7 @@ impl ComponentRegistry {
         let mut reg = Self::new();
         crate::aggregate::register_builtins(&mut reg);
         crate::algorithms::register_builtins(&mut reg);
+        crate::codec::register_builtins(&mut reg);
         crate::data::register_builtins(&mut reg);
         crate::flow::register_builtins(&mut reg);
         crate::hierarchy::register_builtins(&mut reg);
@@ -201,18 +210,37 @@ impl ComponentRegistry {
         self.topologies.insert(name.to_string(), b);
     }
 
+    /// Register (or replace) an update codec. `name` is the spec head:
+    /// `"top_k_i8(0.05)"` resolves the parser registered as
+    /// `"top_k_i8"` (selected via `Config.codec`).
+    pub fn register_codec(&mut self, name: &str, b: CodecBuilder) {
+        self.codecs.insert(name.to_string(), b);
+    }
+
     // ------------------------------------------------------------ lookup
 
-    /// Instantiate the algorithm a config selects.
+    /// Instantiate the algorithm a config selects. When `cfg.codec` is
+    /// set, the client factory is wrapped so every flow compresses
+    /// through the selected codec (the codec stage replaces the
+    /// algorithm's own `compress`); unset keeps the algorithm's flow
+    /// untouched, bit-for-bit.
     pub fn algorithm(&self, cfg: &Config) -> Result<AlgorithmParts> {
-        match self.algorithms.get(cfg.algorithm.as_str()) {
-            Some(b) => b(cfg),
-            None => Err(unknown(
-                "algorithm",
-                &cfg.algorithm,
-                self.algorithms.keys().collect(),
-            )),
+        let mut parts = match self.algorithms.get(cfg.algorithm.as_str()) {
+            Some(b) => b(cfg)?,
+            None => {
+                return Err(unknown(
+                    "algorithm",
+                    &cfg.algorithm,
+                    self.algorithms.keys().collect(),
+                ))
+            }
+        };
+        if let Some(spec) = &cfg.codec {
+            let codec = self.codec(spec)?;
+            parts.client_factory =
+                crate::codec::wrap_client_factory(parts.client_factory, codec);
         }
+        Ok(parts)
     }
 
     /// True when an algorithm name is registered (cheap pre-flight check).
@@ -357,6 +385,22 @@ impl ComponentRegistry {
         self.topologies.keys().cloned().collect()
     }
 
+    /// Parse an update-codec spec (`"identity"`, `"top_k(0.05)"`,
+    /// `"top_k_i8(0.05)"`, any registered name). Lookup mirrors
+    /// [`ComponentRegistry::partition`].
+    pub fn codec(&self, spec: &str) -> Result<Arc<dyn UpdateCodec>> {
+        let head = spec_head(spec);
+        match self.codecs.get(head.as_str()) {
+            Some(b) => b(spec),
+            None => Err(unknown("codec", spec, self.codecs.keys().collect())),
+        }
+    }
+
+    /// Registered codec names.
+    pub fn codec_names(&self) -> Vec<String> {
+        self.codecs.keys().cloned().collect()
+    }
+
     /// Registered SimNet model names:
     /// `(availability, cost models, adversaries)`.
     pub fn sim_names(&self) -> (Vec<String>, Vec<String>, Vec<String>) {
@@ -496,6 +540,46 @@ mod tests {
         ));
         let err = reg.adversary("gaslight").unwrap_err().to_string();
         assert!(err.contains("sign-flip"), "{err}");
+    }
+
+    #[test]
+    fn builtin_codecs_resolve_by_spec() {
+        let reg = ComponentRegistry::with_builtins();
+        let names = reg.codec_names();
+        for c in ["identity", "top_k", "top_k_f16", "top_k_i8"] {
+            assert!(names.iter().any(|n| n == c), "missing codec {c}");
+        }
+        assert_eq!(reg.codec("identity").unwrap().spec(), "identity");
+        assert_eq!(
+            reg.codec("top_k_i8(0.05)").unwrap().spec(),
+            "top_k_i8(0.05)"
+        );
+        let err = reg.codec("gzip").unwrap_err().to_string();
+        assert!(err.contains("top_k"), "{err} should list registered names");
+    }
+
+    #[test]
+    fn config_codec_wraps_the_client_compress_stage() {
+        use crate::flow::Update;
+        use crate::model::ParamVec;
+        let reg = ComponentRegistry::with_builtins();
+        let mut cfg = Config::default();
+        cfg.codec = Some("top_k(0.1)".into());
+        let parts = reg.algorithm(&cfg).unwrap();
+        let mut flow = (parts.client_factory)();
+        let global = ParamVec::zeros(50);
+        let new = ParamVec(vec![0.25; 50]);
+        let u = flow.compress(new, &global).unwrap();
+        assert!(matches!(u, Update::Encoded(_)), "{u:?}");
+        // Unset codec keeps the algorithm's own dense compress stage.
+        let parts = reg.algorithm(&Config::default()).unwrap();
+        let mut flow = (parts.client_factory)();
+        let u = flow.compress(ParamVec(vec![0.25; 50]), &global).unwrap();
+        assert!(matches!(u, Update::Dense(_)), "{u:?}");
+        // A bad codec spec fails fast at resolution time.
+        let mut cfg = Config::default();
+        cfg.codec = Some("gzip".into());
+        assert!(reg.algorithm(&cfg).is_err());
     }
 
     #[test]

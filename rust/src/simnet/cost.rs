@@ -39,6 +39,11 @@ pub struct CostModel {
     /// Flat timelines never read it, so pre-hierarchy trace digests are
     /// untouched.
     pub edge_bandwidth: f64,
+    /// Cloud-side ingest rate in bytes/ms for hierarchical fan-in: the
+    /// serialization cost of absorbing the edges' partials at the cloud.
+    /// `INFINITY` (every built-in preset) ⇒ free, so existing trace
+    /// digests are untouched; tune via `sim.cloud_ingest_bytes_per_ms`.
+    pub cloud_ingest_bytes_per_ms: f64,
 }
 
 impl CostModel {
@@ -55,6 +60,7 @@ impl CostModel {
             bandwidth_lo: 250.0,     // 2 Mbit/s
             bandwidth_hi: 12_500.0,  // 100 Mbit/s
             edge_bandwidth: 125_000.0, // 1 Gbit/s metro backhaul
+            cloud_ingest_bytes_per_ms: f64::INFINITY,
         }
     }
 
@@ -70,6 +76,7 @@ impl CostModel {
             bandwidth_lo: f64::INFINITY,
             bandwidth_hi: f64::INFINITY,
             edge_bandwidth: f64::INFINITY,
+            cloud_ingest_bytes_per_ms: f64::INFINITY,
         }
     }
 
@@ -93,6 +100,7 @@ impl CostModel {
             bandwidth_lo: 1_250_000.0,
             bandwidth_hi: 1_250_000.0,
             edge_bandwidth: 1_250_000.0, // 10 Gbit rack uplink
+            cloud_ingest_bytes_per_ms: f64::INFINITY,
         }
     }
 
@@ -107,6 +115,9 @@ impl CostModel {
         }
         if cfg.sim.edge_bandwidth > 0.0 {
             self.edge_bandwidth = cfg.sim.edge_bandwidth;
+        }
+        if cfg.sim.cloud_ingest_bytes_per_ms > 0.0 {
+            self.cloud_ingest_bytes_per_ms = cfg.sim.cloud_ingest_bytes_per_ms;
         }
         self
     }
@@ -140,8 +151,32 @@ impl CostModel {
 
     /// Virtual upload time of one model update over `bandwidth` bytes/ms.
     pub fn upload_ms(&self, bandwidth: f64, rng: &mut Rng) -> f64 {
-        self.network
-            .delay_with_bandwidth_ms(self.model_bytes, bandwidth, rng)
+        self.upload_bytes_ms(self.model_bytes, bandwidth, rng)
+    }
+
+    /// Virtual upload time of `bytes` over `bandwidth` bytes/ms — the
+    /// costing primitive for codec-compressed uplinks, whose wire size
+    /// differs from the dense `model_bytes`. Exactly one RNG draw,
+    /// identical to [`CostModel::upload_ms`] when `bytes ==
+    /// model_bytes`, so unencoded trace digests are untouched.
+    pub fn upload_bytes_ms(
+        &self,
+        bytes: usize,
+        bandwidth: f64,
+        rng: &mut Rng,
+    ) -> f64 {
+        self.network.delay_with_bandwidth_ms(bytes, bandwidth, rng)
+    }
+
+    /// Deterministic cloud-side serialization time for absorbing `bytes`
+    /// of fan-in (no RNG draw; 0 with the built-in presets' infinite
+    /// ingest rate, keeping existing digests bit-identical).
+    pub fn cloud_ingest_ms(&self, bytes: usize) -> f64 {
+        if self.cloud_ingest_bytes_per_ms.is_finite() {
+            bytes as f64 / self.cloud_ingest_bytes_per_ms
+        } else {
+            0.0
+        }
     }
 
     /// Virtual time for the edge tier to push its dense partial to the
@@ -220,6 +255,36 @@ mod tests {
         assert!(tuned.edge_hop_ms() > 1_000.0, "{}", tuned.edge_hop_ms());
         // An infinite backhaul costs only latency (0 for ideal).
         assert_eq!(CostModel::ideal().edge_hop_ms(), 0.0);
+    }
+
+    #[test]
+    fn upload_bytes_scales_with_the_encoded_size() {
+        let cm = CostModel::datacenter(); // tight jitter
+        let mut r1 = Rng::new(11);
+        let mut r2 = Rng::new(11);
+        // bytes == model_bytes reproduces upload_ms draw-for-draw.
+        let a = cm.upload_ms(1_250_000.0, &mut r1);
+        let b = cm.upload_bytes_ms(cm.model_bytes, 1_250_000.0, &mut r2);
+        assert_eq!(a, b);
+        // A 16x smaller payload transfers ~16x faster (minus latency).
+        let mut r3 = Rng::new(11);
+        let small = cm.upload_bytes_ms(cm.model_bytes / 16, 1_250.0, &mut r3);
+        let mut r4 = Rng::new(11);
+        let full = cm.upload_bytes_ms(cm.model_bytes, 1_250.0, &mut r4);
+        assert!(small < full / 8.0, "{small} vs {full}");
+    }
+
+    #[test]
+    fn cloud_ingest_defaults_free_and_tunes_finite() {
+        let cm = CostModel::mobile_wan();
+        assert_eq!(cm.cloud_ingest_ms(1_600_000), 0.0, "presets are free");
+        let mut cfg = Config::default();
+        cfg.sim.cloud_ingest_bytes_per_ms = 1_000.0;
+        let tuned = CostModel::mobile_wan().tuned(&cfg);
+        assert_eq!(tuned.cloud_ingest_ms(5_000), 5.0);
+        // Zero keeps the preset default (infinite ⇒ free).
+        let kept = CostModel::mobile_wan().tuned(&Config::default());
+        assert!(kept.cloud_ingest_bytes_per_ms.is_infinite());
     }
 
     #[test]

@@ -192,6 +192,11 @@ pub struct SimNet {
     /// Cloud fan-in accumulated over the run (see
     /// [`SimReport::bytes_to_cloud`]).
     bytes_to_cloud: usize,
+    /// Wire size of one client upload: `model_bytes` when no codec is
+    /// configured, the codec's predicted encoded size otherwise. Every
+    /// uplink costing site (upload delay, `comm_bytes`, flat
+    /// `bytes_to_cloud`) charges this instead of the flat dense size.
+    uplink_bytes: usize,
     /// Attack corrupting Byzantine clients' surrogate deltas.
     adversary: AdversaryModel,
     /// Per-client Byzantine flag, fixed at setup (seed-deterministic).
@@ -245,6 +250,20 @@ impl SimNet {
                 AggContext::from_config(Arc::new(ParamVec::zeros(1)), cfg);
             registry::with_global(|r| r.aggregator(edge_agg, &probe))?;
         }
+        // Codec-compressed uplinks change the wire size every costing
+        // site charges. The surrogate plane carries no real updates, so
+        // the encoded size is a deterministic per-run constant: the
+        // codec's predicted wire size for a dense `model_bytes` update.
+        // No codec — or `"identity"` — yields `model_bytes` exactly, and
+        // the probe draws no RNG, so unencoded trace digests stay
+        // bit-identical.
+        let uplink_bytes = match &cfg.codec {
+            Some(spec) => {
+                let codec = registry::with_global(|r| r.codec(spec))?;
+                codec.wire_bytes_for(cost.model_bytes)
+            }
+            None => cost.model_bytes,
+        };
         let mut rng = Rng::new(cfg.seed ^ 0x5349_4D4E_4554); // "SIMNET"
 
         // The adversary stream is seeded independently of the main RNG:
@@ -298,6 +317,9 @@ impl SimNet {
         tracker.set_config("num_clients", num_clients.to_string());
         tracker.set_config("aggregator", agg_name.clone());
         tracker.set_config("topology", topology.name());
+        if let Some(codec) = &cfg.codec {
+            tracker.set_config("codec", codec.clone());
+        }
         if cfg.sim.adversary_frac > 0.0 {
             tracker.set_config("adversary", adversary.name());
             tracker
@@ -330,6 +352,7 @@ impl SimNet {
             agg_name,
             topology,
             bytes_to_cloud: 0,
+            uplink_bytes,
             adversary,
             adversarial,
             adv_rng,
@@ -452,7 +475,11 @@ impl SimNet {
         let device = self.clients[client].device_class;
         let bandwidth = self.clients[client].bandwidth_bytes_per_ms;
         let compute = self.cost.compute_ms(device, &mut self.rng);
-        let upload = self.cost.upload_ms(bandwidth, &mut self.rng);
+        // Charge the actual wire size (codec-encoded when configured);
+        // one RNG draw either way, so unencoded digests are untouched.
+        let upload =
+            self.cost
+                .upload_bytes_ms(self.uplink_bytes, bandwidth, &mut self.rng);
         let total = compute + upload;
         self.clients[client].service_ms = total;
         let epoch = self.clients[client].epoch;
@@ -587,11 +614,20 @@ impl SimNet {
             return (0, 0.0);
         }
         let (bytes, hop_ms) = if self.topology.is_flat() {
-            (reported * self.cost.model_bytes, 0.0)
+            // Flat fan-in ships each reporter's update as-is: the
+            // per-variant encoded size, not a flat dense charge.
+            (reported * self.uplink_bytes, 0.0)
         } else {
+            // Edges decode client uploads and ship *dense* partials, so
+            // the backhaul still carries model_bytes per active edge.
+            // The cloud additionally pays its (deterministic) ingest
+            // serialization — 0 with the presets' infinite rate.
             let clusters: BTreeSet<usize> =
                 reporters.map(|c| self.topology.cluster_of(c)).collect();
-            (clusters.len() * self.cost.model_bytes, self.cost.edge_hop_ms())
+            let bytes = clusters.len() * self.cost.model_bytes;
+            let hop =
+                self.cost.edge_hop_ms() + self.cost.cloud_ingest_ms(bytes);
+            (bytes, hop)
         };
         self.bytes_to_cloud += bytes;
         (bytes, hop_ms)
@@ -923,7 +959,12 @@ impl SimNet {
             test_accuracy: if eval { Some(accuracy) } else { None },
             round_ms,
             distribution_ms: 0.0,
-            comm_bytes: (selected + reported) * self.cost.model_bytes,
+            // Downlink distributes the dense model to every selected
+            // client; the uplink charges each report's actual wire size
+            // (equal to model_bytes when no codec is configured, so the
+            // legacy (selected + reported) · model_bytes is preserved).
+            comm_bytes: selected * self.cost.model_bytes
+                + reported * self.uplink_bytes,
             bytes_to_cloud,
             clients: Vec::new(),
             selected,
@@ -1189,6 +1230,84 @@ mod tests {
         let err = SimNet::from_config(&cfg).unwrap_err().to_string();
         assert!(err.contains("gaslight"), "{err}");
         assert!(err.contains("sign-flip"), "{err}");
+    }
+
+    #[test]
+    fn identity_codec_keeps_trace_digests_bit_identical() {
+        // The regression guard for the codec subsystem: an unset codec
+        // and the explicit "identity" codec must produce the same event
+        // trace, makespan and byte accounting as each other — across
+        // sync, async and hierarchical timelines.
+        for (mode, topo) in [
+            (SimMode::Sync, "flat"),
+            (SimMode::Async, "flat"),
+            (SimMode::Sync, "edges(4)"),
+        ] {
+            let mut base = sim_cfg(mode);
+            base.topology = topo.to_string();
+            if matches!(mode, SimMode::Async) {
+                base.sim.async_buffer = 10;
+                base.sim.async_concurrency = 60;
+            }
+            let baseline = SimNet::from_config(&base).unwrap().run().unwrap();
+            let mut coded = base.clone();
+            coded.codec = Some("identity".into());
+            let identity = SimNet::from_config(&coded).unwrap().run().unwrap();
+            assert_eq!(
+                baseline.trace_digest, identity.trace_digest,
+                "{mode:?}/{topo}: identity codec shifted the event trace"
+            );
+            assert_eq!(baseline.makespan_ms, identity.makespan_ms);
+            assert_eq!(baseline.comm_bytes, identity.comm_bytes);
+            assert_eq!(baseline.bytes_to_cloud, identity.bytes_to_cloud);
+            assert_eq!(baseline.rounds, identity.rounds);
+        }
+    }
+
+    #[test]
+    fn codec_compression_cuts_comm_bytes_and_makespan() {
+        let base = sim_cfg(SimMode::Sync);
+        let dense = SimNet::from_config(&base).unwrap().run().unwrap();
+        let mut cfg = base.clone();
+        cfg.codec = Some("top_k_i8(0.05)".into());
+        let coded = SimNet::from_config(&cfg).unwrap().run().unwrap();
+        assert_eq!(coded.rounds, dense.rounds);
+        // Uplinks shrink ~16x; downlinks stay dense, so total comm drops
+        // but not by the full codec ratio.
+        assert!(
+            coded.comm_bytes < dense.comm_bytes,
+            "coded {} !< dense {}",
+            coded.comm_bytes,
+            dense.comm_bytes
+        );
+        // Smaller uploads ⇒ every report lands earlier ⇒ rounds close
+        // sooner over mobile-WAN links.
+        assert!(
+            coded.makespan_ms < dense.makespan_ms,
+            "coded {} !< dense {}",
+            coded.makespan_ms,
+            dense.makespan_ms
+        );
+        // Flat fan-in also charges encoded bytes at the cloud.
+        assert!(coded.bytes_to_cloud < dense.bytes_to_cloud);
+    }
+
+    #[test]
+    fn finite_cloud_ingest_charges_hierarchical_fanin() {
+        let mut cfg = sim_cfg(SimMode::Sync);
+        cfg.topology = "edges(4)".to_string();
+        let free = SimNet::from_config(&cfg).unwrap().run().unwrap();
+        let mut slow = cfg.clone();
+        // 1.6 MB per edge partial at 1000 B/ms = 1.6 s extra per window.
+        slow.sim.cloud_ingest_bytes_per_ms = 1_000.0;
+        let charged = SimNet::from_config(&slow).unwrap().run().unwrap();
+        assert_eq!(free.rounds, charged.rounds);
+        assert!(
+            charged.makespan_ms > free.makespan_ms,
+            "finite ingest must lengthen the run: {} !> {}",
+            charged.makespan_ms,
+            free.makespan_ms
+        );
     }
 
     #[test]
