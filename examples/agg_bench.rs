@@ -32,7 +32,9 @@ use easyfl::algorithms::stc_compress;
 use easyfl::flow::Update;
 use easyfl::model::ParamVec;
 use easyfl::util::args::{usage, Args, Opt};
+use easyfl::util::bench::write_bench;
 use easyfl::util::clock::Stopwatch;
+use easyfl::util::json::{obj, Json};
 use easyfl::util::rng::Rng;
 
 fn main() {
@@ -91,12 +93,13 @@ struct PhaseStats {
 }
 
 impl PhaseStats {
-    fn json(&self) -> String {
-        format!(
-            "{{\"wall_ms\": {:.1}, \"updates_per_sec\": {:.0}, \
-             \"buffered_bytes\": {}, \"peak_rss_kb\": {}}}",
-            self.wall_ms, self.updates_per_sec, self.buffered_bytes, self.peak_rss_kb
-        )
+    fn json(&self) -> Json {
+        obj([
+            ("wall_ms", Json::Num(self.wall_ms)),
+            ("updates_per_sec", Json::Num(self.updates_per_sec)),
+            ("buffered_bytes", Json::Num(self.buffered_bytes as f64)),
+            ("peak_rss_kb", Json::Num(self.peak_rss_kb as f64)),
+        ])
     }
 }
 
@@ -206,17 +209,21 @@ fn run() -> easyfl::Result<()> {
     );
 
     if let Some(path) = a.get("bench-out") {
-        let json = format!(
-            "{{\n  \"param_count\": {p},\n  \"cohort\": {k},\n  \
-             \"sparse_frac\": {sparse_frac},\n  \
-             \"mem_reduction\": {reduction:.1},\n  \
-             \"mem_reduction_measured\": {measured_reduction:.1},\n  \
-             \"max_abs_diff\": {max_diff:.3e},\n  \
-             \"streaming\": {},\n  \"legacy\": {}\n}}\n",
-            streaming.json(),
-            legacy.json()
-        );
-        std::fs::write(path, json)?;
+        write_bench(
+            path,
+            "agg_bench",
+            None,
+            obj([
+                ("param_count", Json::Num(p as f64)),
+                ("cohort", Json::Num(k as f64)),
+                ("sparse_frac", Json::Num(sparse_frac)),
+                ("mem_reduction", Json::Num(reduction)),
+                ("mem_reduction_measured", Json::Num(measured_reduction)),
+                ("max_abs_diff", Json::Num(max_diff as f64)),
+                ("streaming", streaming.json()),
+                ("legacy", legacy.json()),
+            ]),
+        )?;
         println!("benchmark written to {path}");
     }
 

@@ -15,6 +15,8 @@
 
 use easyfl::config::{Config, DatasetKind};
 use easyfl::util::args::{usage, Args, Opt};
+use easyfl::util::bench::write_bench;
+use easyfl::util::json::{obj, Json};
 use easyfl::SimReport;
 
 fn main() {
@@ -123,25 +125,24 @@ fn run() -> easyfl::Result<()> {
     );
 
     if let Some(path) = a.get("bench-out") {
-        let json = format!(
-            "{{\n  \"clients\": {},\n  \"rounds\": {},\n  \
-             \"codec\": \"{codec}\",\n  \
-             \"model_bytes\": {model_bytes},\n  \
-             \"dense_uplink_bytes_per_round\": {dense_uplink:.1},\n  \
-             \"codec_uplink_bytes_per_round\": {packed_uplink:.1},\n  \
-             \"bytes_ratio\": {ratio:.2},\n  \
-             \"dense_acc\": {:.4},\n  \"codec_acc\": {:.4},\n  \
-             \"acc_drop_pts\": {acc_drop_pts:.3},\n  \
-             \"dense_makespan_ms\": {:.1},\n  \
-             \"codec_makespan_ms\": {:.1},\n  \"wall_ms\": {wall_ms:.1}\n}}\n",
-            dense_cfg.num_clients,
-            dense_cfg.rounds,
-            dense.final_accuracy,
-            packed.final_accuracy,
-            dense.makespan_ms,
-            packed.makespan_ms,
-        );
-        std::fs::write(path, json)?;
+        write_bench(
+            path,
+            "codec_bench",
+            Some(&dense_cfg),
+            obj([
+                ("codec", Json::Str(codec.clone())),
+                ("model_bytes", Json::Num(model_bytes as f64)),
+                ("dense_uplink_bytes_per_round", Json::Num(dense_uplink)),
+                ("codec_uplink_bytes_per_round", Json::Num(packed_uplink)),
+                ("bytes_ratio", Json::Num(ratio)),
+                ("dense_acc", Json::Num(dense.final_accuracy)),
+                ("codec_acc", Json::Num(packed.final_accuracy)),
+                ("acc_drop_pts", Json::Num(acc_drop_pts)),
+                ("dense_makespan_ms", Json::Num(dense.makespan_ms)),
+                ("codec_makespan_ms", Json::Num(packed.makespan_ms)),
+                ("wall_ms", Json::Num(wall_ms)),
+            ]),
+        )?;
         println!("benchmark written to {path}");
     }
 

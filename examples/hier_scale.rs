@@ -15,6 +15,8 @@
 
 use easyfl::config::{Config, DatasetKind};
 use easyfl::util::args::{usage, Args, Opt};
+use easyfl::util::bench::write_bench;
+use easyfl::util::json::{obj, Json};
 use easyfl::SimReport;
 
 fn main() {
@@ -109,22 +111,20 @@ fn run() -> easyfl::Result<()> {
     );
 
     if let Some(path) = a.get("bench-out") {
-        let json = format!(
-            "{{\n  \"clients\": {},\n  \"rounds\": {},\n  \
-             \"edges\": {edges},\n  \
-             \"flat_bytes_to_cloud\": {},\n  \
-             \"hier_bytes_to_cloud\": {},\n  \
-             \"bytes_ratio\": {ratio:.2},\n  \
-             \"flat_makespan_ms\": {:.1},\n  \
-             \"hier_makespan_ms\": {:.1},\n  \"wall_ms\": {wall_ms:.1}\n}}\n",
-            flat_cfg.num_clients,
-            flat_cfg.rounds,
-            flat.bytes_to_cloud,
-            hier.bytes_to_cloud,
-            flat.makespan_ms,
-            hier.makespan_ms,
-        );
-        std::fs::write(path, json)?;
+        write_bench(
+            path,
+            "hier_scale",
+            Some(&flat_cfg),
+            obj([
+                ("edges", Json::Num(edges as f64)),
+                ("flat_bytes_to_cloud", Json::Num(flat.bytes_to_cloud as f64)),
+                ("hier_bytes_to_cloud", Json::Num(hier.bytes_to_cloud as f64)),
+                ("bytes_ratio", Json::Num(ratio)),
+                ("flat_makespan_ms", Json::Num(flat.makespan_ms)),
+                ("hier_makespan_ms", Json::Num(hier.makespan_ms)),
+                ("wall_ms", Json::Num(wall_ms)),
+            ]),
+        )?;
         println!("benchmark written to {path}");
     }
 

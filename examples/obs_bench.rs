@@ -1,0 +1,206 @@
+//! obs_bench — telemetry overhead at 10k clients.
+//!
+//! Runs the same SimNet scenario twice on one seed — once with the
+//! telemetry plane off, once with full span tracing streamed to a
+//! Chrome trace-event file — and compares wall time. The traced run
+//! must be behaviourally invisible: identical trace digest, makespan
+//! and comm bytes, with wall-clock overhead inside the budget
+//! (default ≤ 5% plus a fixed 250 ms slack so sub-second baselines
+//! don't gate on scheduler noise). Each variant runs `--reps` times
+//! and the fastest rep is compared, which filters cold-cache outliers.
+//! CI runs the 10k-client × 20-round variant as a smoke test and
+//! records the numbers to `BENCH_obs.json`:
+//!
+//! ```text
+//! cargo run --release --example obs_bench -- \
+//!     --clients 10000 --rounds 20 --budget-ms 60000 \
+//!     --bench-out BENCH_obs.json
+//! ```
+
+use std::path::PathBuf;
+
+use easyfl::config::{Config, DatasetKind};
+use easyfl::util::args::{usage, Args, Opt};
+use easyfl::util::bench::write_bench;
+use easyfl::util::json::{obj, Json};
+use easyfl::SimReport;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn opts() -> Vec<Opt> {
+    vec![
+        Opt { name: "clients", help: "federation population", default: Some("10000"), is_flag: false },
+        Opt { name: "rounds", help: "rounds to simulate", default: Some("20"), is_flag: false },
+        Opt { name: "clients-per-round", help: "aggregation target K", default: Some("100"), is_flag: false },
+        Opt { name: "reps", help: "repetitions per variant (fastest wins)", default: Some("2"), is_flag: false },
+        Opt { name: "max-overhead-pct", help: "fail if tracing costs more wall time than this (%)", default: Some("5"), is_flag: false },
+        Opt { name: "seed", help: "RNG seed", default: Some("42"), is_flag: false },
+        Opt { name: "budget-ms", help: "fail if total wall time exceeds this (0 = off)", default: Some("0"), is_flag: false },
+        Opt { name: "trace-out", help: "Chrome trace path for the traced run", default: None, is_flag: false },
+        Opt { name: "bench-out", help: "write overhead JSON here", default: None, is_flag: false },
+        Opt { name: "help", help: "show help", default: None, is_flag: true },
+    ]
+}
+
+fn base_config(a: &Args) -> easyfl::Result<Config> {
+    let mut cfg = Config::for_dataset(DatasetKind::Femnist);
+    cfg.num_clients = a.get_usize("clients")?;
+    cfg.clients_per_round = a.get_usize("clients-per-round")?;
+    cfg.rounds = a.get_usize("rounds")?;
+    cfg.seed = a.get_usize("seed")? as u64;
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+/// Fastest of `reps` identical runs, plus the report of that run.
+/// Every rep of one variant must reproduce the same trace digest —
+/// the simulation is deterministic per seed, so a mismatch here means
+/// the engine itself is broken, not the telemetry.
+fn fastest(cfg: &Config, reps: usize) -> easyfl::Result<SimReport> {
+    let mut best: Option<SimReport> = None;
+    for _ in 0..reps.max(1) {
+        let rep = easyfl::simnet::simulate(cfg)?;
+        if let Some(prev) = &best {
+            if prev.trace_digest != rep.trace_digest {
+                return Err(easyfl::Error::Runtime(format!(
+                    "non-deterministic run: digest {:#018x} != {:#018x}",
+                    prev.trace_digest, rep.trace_digest
+                )));
+            }
+        }
+        match &best {
+            Some(b) if b.wall_ms <= rep.wall_ms => {}
+            _ => best = Some(rep),
+        }
+    }
+    Ok(best.expect("reps >= 1"))
+}
+
+fn run() -> easyfl::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let opts = opts();
+    let a = Args::parse(&argv, &opts)?;
+    if a.has_flag("help") {
+        println!(
+            "{}",
+            usage("obs_bench", "Telemetry-plane overhead benchmark.", &opts)
+        );
+        return Ok(());
+    }
+    let reps = a.get_usize("reps")?;
+    let trace_path: PathBuf = match a.get("trace-out") {
+        Some(p) => PathBuf::from(p),
+        None => std::env::temp_dir().join("obs_bench_trace.jsonl"),
+    };
+    let sw = std::time::Instant::now();
+
+    let base_cfg = base_config(&a)?;
+    println!(
+        "simulating {} clients × {} rounds, telemetry off vs full tracing...",
+        base_cfg.num_clients, base_cfg.rounds
+    );
+    let base = fastest(&base_cfg, reps)?;
+    println!(
+        "off      {:>8.1} ms wall | digest {:#018x}",
+        base.wall_ms, base.trace_digest
+    );
+
+    let mut traced_cfg = base_config(&a)?;
+    traced_cfg.telemetry = true;
+    traced_cfg.trace_out = Some(trace_path.clone());
+    let traced = fastest(&traced_cfg, reps)?;
+    println!(
+        "traced   {:>8.1} ms wall | digest {:#018x}",
+        traced.wall_ms, traced.trace_digest
+    );
+
+    // The telemetry plane must not perturb the simulation: same event
+    // order (digest), same virtual timeline, same transport totals.
+    if traced.trace_digest != base.trace_digest {
+        return Err(easyfl::Error::Runtime(format!(
+            "tracing changed the simulation: digest {:#018x} != {:#018x}",
+            traced.trace_digest, base.trace_digest
+        )));
+    }
+    if traced.makespan_ms != base.makespan_ms || traced.comm_bytes != base.comm_bytes {
+        return Err(easyfl::Error::Runtime(format!(
+            "tracing changed the virtual timeline: makespan {} vs {} ms, \
+             comm {} vs {} bytes",
+            traced.makespan_ms, base.makespan_ms, traced.comm_bytes, base.comm_bytes
+        )));
+    }
+    let trace_events = std::fs::read_to_string(&trace_path)
+        .map(|s| s.lines().filter(|l| !l.trim().is_empty()).count())
+        .unwrap_or(0);
+    if trace_events == 0 {
+        return Err(easyfl::Error::Runtime(format!(
+            "traced run produced no trace events at {}",
+            trace_path.display()
+        )));
+    }
+
+    let overhead_pct = if base.wall_ms > 0.0 {
+        (traced.wall_ms - base.wall_ms) / base.wall_ms * 100.0
+    } else {
+        0.0
+    };
+    println!(
+        "overhead {overhead_pct:+.1}% wall ({} trace events) | \
+         client ms p50/p95/p99 = {:.0}/{:.0}/{:.0} | \
+         fold ms p50/p95/p99 = {:.2}/{:.2}/{:.2}",
+        trace_events,
+        traced.client_ms_p50,
+        traced.client_ms_p95,
+        traced.client_ms_p99,
+        traced.fold_ms_p50,
+        traced.fold_ms_p95,
+        traced.fold_ms_p99,
+    );
+    let wall_ms = sw.elapsed().as_secs_f64() * 1000.0;
+
+    if let Some(path) = a.get("bench-out") {
+        write_bench(
+            path,
+            "obs_bench",
+            Some(&base_cfg),
+            obj([
+                ("base_wall_ms", Json::Num(base.wall_ms)),
+                ("traced_wall_ms", Json::Num(traced.wall_ms)),
+                ("overhead_pct", Json::Num(overhead_pct)),
+                ("trace_events", Json::Num(trace_events as f64)),
+                ("makespan_ms", Json::Num(traced.makespan_ms)),
+                ("client_ms_p50", Json::Num(traced.client_ms_p50)),
+                ("client_ms_p95", Json::Num(traced.client_ms_p95)),
+                ("client_ms_p99", Json::Num(traced.client_ms_p99)),
+                ("fold_ms_p50", Json::Num(traced.fold_ms_p50)),
+                ("fold_ms_p95", Json::Num(traced.fold_ms_p95)),
+                ("fold_ms_p99", Json::Num(traced.fold_ms_p99)),
+                ("wall_ms", Json::Num(wall_ms)),
+            ]),
+        )?;
+        println!("benchmark written to {path}");
+    }
+
+    // Fixed 250 ms slack: at CI's 10k-client scale a baseline rep runs
+    // well under a second, where one scheduler hiccup is already "5%".
+    let max_pct = a.get_f64("max-overhead-pct")?;
+    if traced.wall_ms > base.wall_ms * (1.0 + max_pct / 100.0) + 250.0 {
+        return Err(easyfl::Error::Runtime(format!(
+            "tracing overhead {overhead_pct:.1}% exceeds the {max_pct}% budget \
+             ({:.1} ms traced vs {:.1} ms off)",
+            traced.wall_ms, base.wall_ms
+        )));
+    }
+    let budget_ms = a.get_f64("budget-ms")?;
+    if budget_ms > 0.0 && wall_ms > budget_ms {
+        return Err(easyfl::Error::Runtime(format!(
+            "benchmark took {wall_ms:.0} ms, over the {budget_ms:.0} ms budget"
+        )));
+    }
+    Ok(())
+}

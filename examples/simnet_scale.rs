@@ -15,6 +15,7 @@
 
 use easyfl::config::{Config, DatasetKind, SimMode};
 use easyfl::util::args::{usage, Args, Opt};
+use easyfl::util::bench::write_bench;
 
 fn main() {
     if let Err(e) = run() {
@@ -92,7 +93,7 @@ fn run() -> easyfl::Result<()> {
     println!("trace digest {:#018x}", report.trace_digest);
 
     if let Some(path) = a.get("bench-out") {
-        std::fs::write(path, report.bench_json())?;
+        write_bench(path, "simnet_scale", Some(&cfg), report.bench_fields())?;
         println!("benchmark written to {path}");
     }
 

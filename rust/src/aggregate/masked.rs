@@ -14,6 +14,7 @@ use std::sync::Arc;
 use crate::error::{Error, Result};
 use crate::flow::Update;
 use crate::model::ParamVec;
+use crate::obs::Telemetry;
 
 use super::mean::{axpy_into, check_weight, finish_into};
 use super::{AggContext, Aggregator};
@@ -30,6 +31,7 @@ pub struct SliceMaskedAggregator {
     /// Backbone length = P − protected_tail.
     split: usize,
     threads: usize,
+    tel: Telemetry,
 }
 
 impl SliceMaskedAggregator {
@@ -46,6 +48,7 @@ impl SliceMaskedAggregator {
             global: ctx.global.clone(),
             split,
             threads,
+            tel: ctx.tel.clone(),
         }
     }
 
@@ -115,6 +118,7 @@ impl Aggregator for SliceMaskedAggregator {
             self.sparse_weight,
             self.total_weight,
             self.threads,
+            &self.tel,
         );
         // Protected tail: the global model's own head, untouched.
         out.extend_from_slice(&self.global[self.split..]);

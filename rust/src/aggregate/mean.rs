@@ -5,6 +5,7 @@ use std::sync::Arc;
 use crate::error::{Error, Result};
 use crate::flow::Update;
 use crate::model::ParamVec;
+use crate::obs::Telemetry;
 
 use super::{AggContext, Aggregator};
 
@@ -43,12 +44,15 @@ pub(crate) fn axpy_into(acc: &mut [f64], x: &[f32], w: f64, threads: usize) {
 
 /// `out[i] = (acc[i] + base_w · g[i]) / total` as f32, chunk-parallel for
 /// large vectors. `g` may be empty when `base_w == 0` (pure-dense round).
+/// Each chunk-parallel worker runs under an `"agg.worker"` span (one per
+/// round, not per add, so the probe never lands on the axpy hot path).
 pub(crate) fn finish_into(
     acc: &[f64],
     g: &[f32],
     base_w: f64,
     total: f64,
     threads: usize,
+    tel: &Telemetry,
 ) -> Vec<f32> {
     let mut out = vec![0.0f32; acc.len()];
     let body = |offset: usize, dst: &mut [f32]| {
@@ -65,7 +69,10 @@ pub(crate) fn finish_into(
     std::thread::scope(|s| {
         for (ci, dst) in out.chunks_mut(chunk).enumerate() {
             let body = &body;
-            s.spawn(move || body(ci * chunk, dst));
+            s.spawn(move || {
+                let _span = tel.span("agg.worker");
+                body(ci * chunk, dst);
+            });
         }
     });
     out
@@ -87,6 +94,7 @@ pub struct MeanAggregator {
     /// Required for sparse updates; `None` for the dense-only legacy shim.
     global: Option<Arc<ParamVec>>,
     threads: usize,
+    tel: Telemetry,
 }
 
 impl MeanAggregator {
@@ -101,6 +109,7 @@ impl MeanAggregator {
             count: 0,
             global: Some(ctx.global.clone()),
             threads,
+            tel: ctx.tel.clone(),
         }
     }
 
@@ -114,6 +123,7 @@ impl MeanAggregator {
             count: 0,
             global: None,
             threads: 1,
+            tel: Telemetry::off(),
         }
     }
 
@@ -245,6 +255,7 @@ impl Aggregator for MeanAggregator {
             self.sparse_weight,
             self.total_weight,
             self.threads,
+            &self.tel,
         );
         // Reset for the next round.
         self.acc.iter_mut().for_each(|v| *v = 0.0);

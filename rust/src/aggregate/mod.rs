@@ -43,6 +43,7 @@ use crate::config::Config;
 use crate::error::{Error, Result};
 use crate::flow::Update;
 use crate::model::ParamVec;
+use crate::obs::Telemetry;
 
 /// Streaming reduction over client updates: `add` folds one update in,
 /// `finish` yields the reduced model and resets the accumulator so the
@@ -99,6 +100,11 @@ pub struct AggContext {
     /// L2 delta-norm threshold for `"norm_clip"` (> 0 and finite, or 0
     /// for the adaptive running-quantile threshold).
     pub clip_norm: f64,
+    /// Telemetry probe handle: chunk-parallel reduces emit per-worker
+    /// spans through it, hierarchical planes time per-edge folds. Off by
+    /// default (one branch per probe); owners that hold a live handle
+    /// pass it down via [`AggContext::telemetry`].
+    pub tel: Telemetry,
 }
 
 impl AggContext {
@@ -113,6 +119,7 @@ impl AggContext {
             edge_agg: None,
             trim_frac: 0.1,
             clip_norm: 10.0,
+            tel: Telemetry::off(),
         }
     }
 
@@ -135,6 +142,13 @@ impl AggContext {
 
     pub fn protected_tail(mut self, n: usize) -> AggContext {
         self.protected_tail = n;
+        self
+    }
+
+    /// Attach a live telemetry handle (builders clone it into their
+    /// aggregators).
+    pub fn telemetry(mut self, tel: Telemetry) -> AggContext {
+        self.tel = tel;
         self
     }
 

@@ -21,9 +21,10 @@ use crate::error::{Error, Result};
 use crate::flow::{run_client_round, ModelPayload, ServerFlow, TrainTask};
 use crate::hierarchy::{HierPlane, Topology};
 use crate::model::ParamVec;
+use crate::obs::{Histogram, Telemetry};
 use crate::runtime::Engine;
 use crate::tracking::{ClientMetrics, RoundMetrics, Tracker};
-use crate::util::clock::Stopwatch;
+use crate::util::clock::{RealClock, Stopwatch};
 use crate::util::rng::Rng;
 
 // ---------------------------------------------------------------- client
@@ -193,6 +194,9 @@ pub struct RemoteCoordinator {
     /// that edge's aggregator before the cloud fold.
     topology: Topology,
     test_batches: Vec<crate::runtime::Batch>,
+    /// Ingest observability: per-reply arrival latency is the histogram
+    /// the paper's Fig 8 deadline analysis wants, not the round average.
+    tel: Telemetry,
 }
 
 impl RemoteCoordinator {
@@ -211,6 +215,8 @@ impl RemoteCoordinator {
         let data = FedDataset::from_config(&cfg)?;
         let test_batches = data.materialize_test(cfg.test_samples).batches(cfg.batch_size);
         let rng = Rng::new(cfg.seed ^ 0x5E17_EC70);
+        let tel = Telemetry::from_config(&cfg, Arc::new(RealClock::default()))?;
+        tracker.set_telemetry(tel.clone());
         Ok(RemoteCoordinator {
             cfg,
             engine,
@@ -221,6 +227,7 @@ impl RemoteCoordinator {
             clients: Vec::new(),
             topology,
             test_batches,
+            tel,
         })
     }
 
@@ -264,11 +271,17 @@ impl RemoteCoordinator {
             .iter()
             .map(|&i| self.clients[i].clone())
             .collect();
+        let _round_span = self
+            .tel
+            .span_with("remote.round", || vec![("round", round.to_string())]);
 
         // Scatter (distribution stage): connect + send to every client,
         // multi-threaded exactly as the paper's §VIII-E measurement
         // ("the distribution latency increases almost linearly using
         // multi-threading").
+        let scatter_span = self
+            .tel
+            .span_with("remote.scatter", || vec![("cohort", cohort.len().to_string())]);
         let sw_dist = Stopwatch::start();
         let (ctx, crx) = channel();
         let mut scatter = Vec::new();
@@ -305,11 +318,14 @@ impl RemoteCoordinator {
             let _ = t.join();
         }
         let distribution_ms = sw_dist.elapsed_ms();
+        self.tel.observe_ms("remote.distribution_ms", distribution_ms);
+        drop(scatter_span);
         let downlink = self.params.len() * 4 * cohort.len();
 
         // Gather: parallel receive threads (clients compute concurrently).
         // Each reply streams into the round's accumulator the moment it
         // arrives — the server never buffers the cohort's updates.
+        let gather_span = self.tel.span("remote.gather");
         let sw_round = Stopwatch::start();
         let (tx, rx) = channel();
         let mut threads = Vec::new();
@@ -322,7 +338,8 @@ impl RemoteCoordinator {
         }
         drop(tx);
         let ctx = AggContext::from_config(self.params.clone(), &self.cfg)
-            .expect_updates(cohort.len());
+            .expect_updates(cohort.len())
+            .telemetry(self.tel.clone());
         let cohort_ids: Vec<usize> = cohort.iter().map(|(i, _)| *i).collect();
         let mut plane = HierPlane::from_flow(
             self.flow.as_mut(),
@@ -337,10 +354,16 @@ impl RemoteCoordinator {
         let mut total_loss = 0.0;
         let mut total_correct = 0.0;
         let mut total_n = 0.0;
+        // Always-on arrival histogram: the p99 is what the §VIII-E
+        // deadline discussion actually needs, and it is too cheap to gate.
+        let mut arrivals = Histogram::default();
         for _ in 0..cohort.len() {
             let (idx, reply) = rx
                 .recv()
                 .map_err(|_| Error::Comm("gather channel closed".into()))?;
+            let arrival_ms = sw_round.elapsed_ms();
+            arrivals.record_ms(arrival_ms);
+            self.tel.observe_ms("remote.ingest_ms", arrival_ms);
             match reply? {
                 Message::TrainReply {
                     num_samples: n,
@@ -351,7 +374,9 @@ impl RemoteCoordinator {
                     ..
                 } => {
                     uplink += update.wire_bytes();
+                    let sw_decode = Stopwatch::start();
                     let decoded = self.flow.decode_update(&update)?;
+                    self.tel.observe_ms("codec.decode_ms", sw_decode.elapsed_ms());
                     plane.add(idx, decoded.as_ref(), n as f64)?;
                     total_loss += sum_loss;
                     total_correct += correct;
@@ -387,8 +412,13 @@ impl RemoteCoordinator {
             let _ = t.join();
         }
         let round_ms = sw_round.elapsed_ms();
+        drop(gather_span);
 
+        let agg_span = self.tel.span("remote.aggregate");
+        let sw_agg = Stopwatch::start();
         let (new_params, hier) = plane.finish()?;
+        self.tel.observe_ms("remote.aggregate_ms", sw_agg.elapsed_ms());
+        drop(agg_span);
         if !new_params.is_finite() {
             return Err(Error::Runtime("remote round diverged".into()));
         }
@@ -403,6 +433,7 @@ impl RemoteCoordinator {
             (None, None)
         };
 
+        let (client_ms_p50, client_ms_p95, client_ms_p99) = arrivals.quantiles_ms();
         let metrics = RoundMetrics {
             round,
             train_loss: total_loss / total_n.max(1.0),
@@ -421,6 +452,9 @@ impl RemoteCoordinator {
             selected: clients_m.len(),
             reported: clients_m.len(),
             clients: clients_m,
+            client_ms_p50,
+            client_ms_p95,
+            client_ms_p99,
             ..RoundMetrics::default()
         };
         self.tracker.record_round(metrics.clone());
@@ -432,6 +466,7 @@ impl RemoteCoordinator {
         for round in 0..self.cfg.rounds {
             self.run_round(round)?;
         }
+        self.tel.flush()?;
         Ok(())
     }
 

@@ -433,6 +433,17 @@ pub struct Config {
     /// stage and SimNet charges encoded bytes per uplink. `None` keeps
     /// each algorithm's flow (and all trace digests) untouched.
     pub codec: Option<String>,
+    /// Enable the telemetry plane (spans + latency histograms, see
+    /// [`crate::obs`]) even without an output file. Implied by
+    /// `trace_out` / `metrics_out`. Off by default: disabled runs pay a
+    /// single branch per probe and keep trace digests bit-identical.
+    pub telemetry: bool,
+    /// Stream spans as Chrome trace-event JSONL to this path (loadable
+    /// in Perfetto / `chrome://tracing`). Implies `telemetry`.
+    pub trace_out: Option<PathBuf>,
+    /// Write the final counter/histogram snapshot as JSON to this path
+    /// at the end of the run. Implies `telemetry`.
+    pub metrics_out: Option<PathBuf>,
     /// Discrete-event simulator knobs (the `simulate` subcommand and
     /// [`crate::simnet`] jobs read these; training runs ignore them).
     pub sim: SimConfig,
@@ -477,6 +488,9 @@ impl Default for Config {
             topology: "flat".into(),
             edge_agg: None,
             codec: None,
+            telemetry: false,
+            trace_out: None,
+            metrics_out: None,
             sim: SimConfig::default(),
         }
     }
@@ -490,6 +504,12 @@ impl Config {
         } else {
             self.model.clone()
         }
+    }
+
+    /// True when any telemetry output (or the bare switch) is on.
+    /// Probes compile to a single branch when this is false.
+    pub fn telemetry_enabled(&self) -> bool {
+        self.telemetry || self.trace_out.is_some() || self.metrics_out.is_some()
     }
 
     /// Paper-style quick constructor: dataset plus defaults.
@@ -625,6 +645,15 @@ impl Config {
         if let Some(s) = v.get("codec").as_str() {
             c.codec = Some(s.to_string());
         }
+        if let Some(b) = v.get("telemetry").as_bool() {
+            c.telemetry = b;
+        }
+        if let Some(s) = v.get("trace_out").as_str() {
+            c.trace_out = Some(PathBuf::from(s));
+        }
+        if let Some(s) = v.get("metrics_out").as_str() {
+            c.metrics_out = Some(PathBuf::from(s));
+        }
         let sim = v.get("sim");
         if sim.as_obj().is_some() {
             c.sim.apply_json(sim)?;
@@ -712,6 +741,16 @@ impl Config {
             if codec.trim().is_empty() {
                 return Err(Error::Config(
                     "codec must name a registered codec (or be absent)"
+                        .into(),
+                ));
+            }
+        }
+        if let (Some(trace), Some(metrics)) =
+            (&self.trace_out, &self.metrics_out)
+        {
+            if trace == metrics {
+                return Err(Error::Config(
+                    "trace_out and metrics_out must be different paths"
                         .into(),
                 ));
             }
@@ -854,6 +893,30 @@ mod tests {
     }
 
     #[test]
+    fn telemetry_knobs_parse_and_default() {
+        let c = Config::default();
+        assert!(!c.telemetry);
+        assert!(c.trace_out.is_none());
+        assert!(c.metrics_out.is_none());
+        assert!(!c.telemetry_enabled());
+        let j = Json::parse(
+            r#"{"telemetry": true, "trace_out": "trace.jsonl",
+                "metrics_out": "metrics.json"}"#,
+        )
+        .unwrap();
+        let c = Config::from_json(&j).unwrap();
+        assert!(c.telemetry);
+        assert_eq!(c.trace_out.as_deref(), Some(Path::new("trace.jsonl")));
+        assert_eq!(c.metrics_out.as_deref(), Some(Path::new("metrics.json")));
+        assert!(c.telemetry_enabled());
+        // Either output path alone implies the switch.
+        let j = Json::parse(r#"{"trace_out": "t.jsonl"}"#).unwrap();
+        assert!(Config::from_json(&j).unwrap().telemetry_enabled());
+        let j = Json::parse(r#"{"metrics_out": "m.json"}"#).unwrap();
+        assert!(Config::from_json(&j).unwrap().telemetry_enabled());
+    }
+
+    #[test]
     fn zero_clip_norm_selects_adaptive_clipping() {
         let j = Json::parse(r#"{"agg": "norm_clip", "agg_clip_norm": 0}"#)
             .unwrap();
@@ -893,6 +956,7 @@ mod tests {
             r#"{"sim": {"adversary": " "}}"#,
             r#"{"codec": " "}"#,
             r#"{"sim": {"cloud_ingest_bytes_per_ms": -1}}"#,
+            r#"{"trace_out": "same.json", "metrics_out": "same.json"}"#,
         ];
         for src in cases {
             let j = Json::parse(src).unwrap();

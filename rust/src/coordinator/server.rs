@@ -11,6 +11,7 @@ use crate::error::{Error, Result};
 use crate::flow::ServerFlow;
 use crate::hierarchy::{HierPlane, Topology};
 use crate::model::ParamVec;
+use crate::obs::{Histogram, Telemetry};
 use crate::runtime::{Batch, Engine};
 use crate::scheduler::{self, Strategy};
 use crate::simulation::HeterogeneityPlan;
@@ -38,6 +39,9 @@ pub struct Server {
     plan: HeterogeneityPlan,
     tracker: Arc<Tracker>,
     clock: Arc<dyn Clock>,
+    /// Telemetry plane (off unless configured): round-stage spans, client
+    /// round-time histograms, aggregation latency.
+    tel: Telemetry,
     /// The global model, shared by reference: distribution hands clients
     /// an `Arc` clone instead of copying P floats per round.
     params: Arc<ParamVec>,
@@ -64,6 +68,10 @@ impl Server {
         } else {
             Arc::new(RealClock::new(cfg.time_scale))
         };
+        // Spans carry this server's clock: wall time normally, virtual
+        // time under virtual_clock, so traces line up with round_ms.
+        let tel = Telemetry::from_config(&cfg, clock.clone())?;
+        tracker.set_telemetry(tel.clone());
         let topology =
             crate::registry::with_global(|r| r.topology(&cfg.topology))?;
         if let Some(edge_agg) = &cfg.edge_agg {
@@ -118,6 +126,7 @@ impl Server {
             plan,
             tracker,
             clock,
+            tel,
             params,
             rng,
             test_batches,
@@ -126,6 +135,11 @@ impl Server {
 
     pub fn tracker(&self) -> Arc<Tracker> {
         self.tracker.clone()
+    }
+
+    /// The server's telemetry handle (off unless configured).
+    pub fn telemetry(&self) -> Telemetry {
+        self.tel.clone()
     }
 
     pub fn params(&self) -> &ParamVec {
@@ -142,12 +156,16 @@ impl Server {
         for round in 0..self.cfg.rounds {
             self.run_round(round)?;
         }
+        self.tel.flush()?;
         Ok(())
     }
 
     /// One FL round: select → allocate → distribute → train → aggregate →
     /// evaluate → track.
     pub fn run_round(&mut self, round: usize) -> Result<RoundMetrics> {
+        let _round_span = self
+            .tel
+            .span_with("server.round", || vec![("round", round.to_string())]);
         let k = self.cfg.clients_per_round;
         let cohort =
             self.flow
@@ -160,6 +178,9 @@ impl Server {
         let payload = self.flow.compress_model(self.params.clone(), round);
         let downlink_bytes = payload.wire_bytes * cohort.len();
         let sw_dist = Stopwatch::start();
+        let dist_span = self.tel.span_with("server.distribute", || {
+            vec![("cohort", cohort.len().to_string())]
+        });
         let jobs: Vec<Vec<ClientJob>> = groups
             .iter()
             .map(|group| {
@@ -188,7 +209,8 @@ impl Server {
         // cloud fold) is built *before* training so each outcome streams
         // straight in the moment its device finishes — no cohort buffer.
         let ctx = AggContext::from_config(self.params.clone(), &self.cfg)
-            .expect_updates(cohort.len());
+            .expect_updates(cohort.len())
+            .telemetry(self.tel.clone());
         let mut plane = HierPlane::from_flow(
             self.flow.as_mut(),
             &self.engine,
@@ -197,6 +219,7 @@ impl Server {
             ctx,
             &cohort,
         )?;
+        drop(dist_span);
 
         let mut uplink_bytes = 0usize;
         let mut clients_m: Vec<ClientMetrics> = Vec::new();
@@ -206,13 +229,16 @@ impl Server {
         let mut sum_correct = 0.0f64;
         let mut total_samples = 0.0f64;
         let mut stream_agg_ms = 0.0f64;
+        let train_span = self.tel.span("server.train");
         {
             let flow = self.flow.as_mut();
+            let tel = &self.tel;
             let mut on_outcome = |device: usize,
                                   o: ClientOutcome|
              -> Result<()> {
                 device_ms[device] += o.round_ms;
                 measured.push((o.client, o.round_ms));
+                tel.observe_ms("server.client_round_ms", o.round_ms);
                 uplink_bytes += o.upload_bytes;
                 let sw = Stopwatch::start();
                 let decoded = flow.decode_update(&o.update)?;
@@ -262,6 +288,7 @@ impl Server {
                 }
             }
         }
+        drop(train_span);
         let distribution_ms = sw_dist.elapsed_ms();
         if clients_m.is_empty() {
             return Err(Error::Runtime("round produced no outcomes".into()));
@@ -278,6 +305,7 @@ impl Server {
         // Close the tree: edges flush their partials, the cloud folds
         // them weighted by edge cohort mass.
         let sw_agg = Stopwatch::start();
+        let agg_span = self.tel.span("server.aggregate");
         let (new_params, hier) = plane.finish()?;
         if !new_params.is_finite() {
             return Err(Error::Runtime(format!(
@@ -286,17 +314,30 @@ impl Server {
             )));
         }
         self.params = Arc::new(new_params);
+        drop(agg_span);
         let agg_ms = sw_agg.elapsed_ms() + stream_agg_ms;
+        self.tel.observe_ms("server.aggregate_ms", agg_ms);
 
         // Evaluation.
         let (test_loss, test_accuracy) = if self.cfg.eval_every > 0
             && (round + 1) % self.cfg.eval_every == 0
         {
+            let _eval_span = self.tel.span("server.evaluate");
             let (l, a) = self.evaluate()?;
             (Some(l), Some(a))
         } else {
             (None, None)
         };
+
+        // Per-client round-time quantiles: always computed (deterministic
+        // — no telemetry dependency), so RoundMetrics exposes the
+        // straggler tail the mean hides.
+        let mut client_hist = Histogram::default();
+        for (_, ms) in &measured {
+            client_hist.record_ms(*ms);
+        }
+        let (client_ms_p50, client_ms_p95, client_ms_p99) =
+            client_hist.quantiles_ms();
 
         // Tracking (three-level hierarchy).
         let metrics = RoundMetrics {
@@ -320,6 +361,9 @@ impl Server {
             selected: clients_m.len(),
             reported: clients_m.len(),
             clients: clients_m,
+            client_ms_p50,
+            client_ms_p95,
+            client_ms_p99,
             ..RoundMetrics::default()
         };
         self.tracker.record_round(metrics.clone());

@@ -35,8 +35,10 @@ use crate::aggregate::{AggContext, Aggregator};
 use crate::error::{Error, Result};
 use crate::flow::{ServerFlow, Update};
 use crate::model::ParamVec;
+use crate::obs::Telemetry;
 use crate::registry;
 use crate::runtime::Engine;
+use crate::util::clock::Stopwatch;
 
 use super::Topology;
 
@@ -327,6 +329,11 @@ pub struct HierStats {
 /// every edge and folds the partials at the cloud.
 pub struct HierPlane {
     mode: PlaneMode,
+    /// Probe handle inherited from the construction context: per-edge
+    /// reduces and the cloud fold emit spans + latency histograms
+    /// through it. Off (one branch per probe) unless the owner attached
+    /// a live handle via [`AggContext::telemetry`].
+    tel: Telemetry,
 }
 
 enum PlaneMode {
@@ -352,8 +359,9 @@ impl HierPlane {
         cohort: &[usize],
     ) -> Result<HierPlane> {
         if topology.is_flat() {
+            let tel = ctx.tel.clone();
             let agg = flow.make_aggregator(engine, model, ctx)?;
-            return Ok(HierPlane { mode: PlaneMode::Flat(agg) });
+            return Ok(HierPlane { mode: PlaneMode::Flat(agg), tel });
         }
         Self::tiered(topology, ctx, cohort, &mut |c| {
             flow.make_aggregator(engine, model, c)
@@ -376,8 +384,9 @@ impl HierPlane {
             registry::with_global(|r| r.aggregator(&name, &c))
         };
         if topology.is_flat() {
+            let tel = ctx.tel.clone();
             let agg = build(ctx)?;
-            return Ok(HierPlane { mode: PlaneMode::Flat(agg) });
+            return Ok(HierPlane { mode: PlaneMode::Flat(agg), tel });
         }
         Self::tiered(topology, ctx, cohort, &mut build)
     }
@@ -438,6 +447,7 @@ impl HierPlane {
         };
         Ok(HierPlane {
             mode: PlaneMode::Tiered { topology: topology.clone(), edges, cloud },
+            tel: ctx.tel.clone(),
         })
     }
 
@@ -484,15 +494,34 @@ impl HierPlane {
                     if edge.count() == 0 {
                         continue;
                     }
+                    let cluster = edge.cluster();
+                    let clients = edge.count();
+                    let span = self.tel.span_with("hier.edge_reduce", || {
+                        vec![
+                            ("edge", cluster.to_string()),
+                            ("clients", clients.to_string()),
+                        ]
+                    });
+                    let sw = Stopwatch::start();
                     let partial = edge.finish()?;
                     stats.active_edges += 1;
                     stats.bytes_to_cloud += partial.wire_bytes;
                     cloud.fold(partial)?;
+                    self.tel.observe_ms("hier.edge_reduce_ms", sw.elapsed_ms());
+                    drop(span);
                 }
                 if stats.active_edges == 0 {
                     return Err(Error::Runtime("aggregate: empty cohort".into()));
                 }
-                Ok((cloud.finish()?, stats))
+                let _span = self.tel.span("hier.cloud_finish");
+                let sw = Stopwatch::start();
+                let out = cloud.finish()?;
+                self.tel.observe_ms("hier.cloud_finish_ms", sw.elapsed_ms());
+                self.tel.counter(
+                    "hier.bytes_to_cloud",
+                    stats.bytes_to_cloud as u64,
+                );
+                Ok((out, stats))
             }
         }
     }

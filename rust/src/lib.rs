@@ -102,6 +102,7 @@ pub mod error;
 pub mod flow;
 pub mod hierarchy;
 pub mod model;
+pub mod obs;
 pub mod platform;
 pub mod registry;
 pub mod runtime;
@@ -113,10 +114,14 @@ pub mod util;
 
 pub use aggregate::{AggContext, Aggregator};
 pub use api::{init, Report, Session, SessionBuilder};
-pub use codec::{EncodedUpdate, UpdateCodec};
+pub use codec::{EncodedUpdate, TimedCodec, UpdateCodec};
 pub use config::{Allocation, Config, DatasetKind, Partition, SimMode};
 pub use error::{Error, Result};
 pub use hierarchy::{HierPlane, Topology};
+pub use obs::{
+    ChromeTraceSink, Histogram, MetricsRegistry, NullSink, Span, Telemetry,
+    TelemetrySink,
+};
 pub use platform::{
     CodecSweep, CodecSweepReport, HierSweep, HierSweepReport, JobHandle,
     JobStatus, Platform, SimSweep, SimSweepReport, Sweep, SweepReport,

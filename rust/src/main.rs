@@ -87,6 +87,9 @@ fn common_opts() -> Vec<Opt> {
         Opt { name: "edge-agg", help: "edge-tier aggregator for hierarchical topologies", default: None, is_flag: false },
         Opt { name: "codec", help: "update codec: identity | top_k(f) | top_k_f16(f) | top_k_i8(f)", default: None, is_flag: false },
         Opt { name: "tracking-dir", help: "persist metrics JSON here", default: None, is_flag: false },
+        Opt { name: "telemetry", help: "enable span/histogram telemetry (metrics only)", default: None, is_flag: true },
+        Opt { name: "trace-out", help: "write Chrome trace-event JSONL here (implies --telemetry)", default: None, is_flag: false },
+        Opt { name: "metrics-out", help: "write counter/histogram snapshot JSON here (implies --telemetry)", default: None, is_flag: false },
         Opt { name: "config", help: "JSON config file (flags override it)", default: None, is_flag: false },
         Opt { name: "help", help: "show help", default: None, is_flag: true },
     ]
@@ -148,6 +151,17 @@ fn parse_config(a: &Args) -> easyfl::Result<Config> {
     }
     if let Some(dir) = a.get("tracking-dir") {
         cfg.tracking_dir = Some(dir.into());
+    }
+    // Telemetry: flags only ever turn it on, so a --config file's
+    // trace/metrics outputs survive an absent flag.
+    if a.has_flag("telemetry") {
+        cfg.telemetry = true;
+    }
+    if let Some(path) = a.get("trace-out") {
+        cfg.trace_out = Some(path.into());
+    }
+    if let Some(path) = a.get("metrics-out") {
+        cfg.metrics_out = Some(path.into());
     }
     cfg.validate()?;
     Ok(cfg)

@@ -1,0 +1,237 @@
+//! Chrome trace-event sink: spans as JSONL, loadable in Perfetto.
+//!
+//! Each span begin/end becomes one trace-event object per line
+//! (`{"name":…,"ph":"B"/"E","ts":µs,"pid":0,"tid":n,…}`), streamed to
+//! the writer as it happens — a crashed run still leaves a readable
+//! prefix. `ui.perfetto.dev` and `chrome://tracing` both accept the
+//! JSONL form directly.
+//!
+//! Thread ids are resolved internally: the first OS thread to emit gets
+//! tid 0, the next tid 1, … — small stable integers instead of opaque
+//! `ThreadId` debug strings, so the Perfetto track list stays readable.
+//! Because timestamps are read before the writer lock is taken, global
+//! line order can interleave under concurrency, but events are always
+//! in non-decreasing timestamp order *per tid* and B/E pairs nest — the
+//! CI trace validator asserts exactly that.
+
+use std::collections::HashMap;
+use std::fmt::Write as _;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::sync::Mutex;
+use std::thread::ThreadId;
+
+use crate::error::{Error, Result};
+
+use super::TelemetrySink;
+
+/// Streams telemetry spans as Chrome trace-event JSONL.
+pub struct ChromeTraceSink {
+    state: Mutex<SinkState>,
+}
+
+struct SinkState {
+    out: Box<dyn Write + Send>,
+    tids: HashMap<ThreadId, u64>,
+}
+
+impl ChromeTraceSink {
+    /// Create (truncate) `path` and stream events into it.
+    pub fn create(path: &Path) -> Result<ChromeTraceSink> {
+        let file = std::fs::File::create(path).map_err(|e| {
+            Error::Runtime(format!(
+                "telemetry: cannot create trace file {}: {e}",
+                path.display()
+            ))
+        })?;
+        Ok(Self::to_writer(Box::new(BufWriter::new(file))))
+    }
+
+    /// Stream events into any writer (tests capture an in-memory buffer).
+    pub fn to_writer(out: Box<dyn Write + Send>) -> ChromeTraceSink {
+        ChromeTraceSink {
+            state: Mutex::new(SinkState { out, tids: HashMap::new() }),
+        }
+    }
+
+    fn emit(&self, ph: char, name: &str, ts_us: u64, args: &[(&str, String)]) {
+        let mut line = String::with_capacity(96);
+        line.push_str("{\"name\":");
+        escape_into(&mut line, name);
+        let _ = write!(line, ",\"ph\":\"{ph}\",\"ts\":{ts_us},\"pid\":0");
+        let mut state = self.state.lock().unwrap();
+        let next = state.tids.len() as u64;
+        let tid =
+            *state.tids.entry(std::thread::current().id()).or_insert(next);
+        let _ = write!(line, ",\"tid\":{tid}");
+        if !args.is_empty() {
+            line.push_str(",\"args\":{");
+            for (i, (k, v)) in args.iter().enumerate() {
+                if i > 0 {
+                    line.push(',');
+                }
+                escape_into(&mut line, k);
+                line.push(':');
+                escape_into(&mut line, v);
+            }
+            line.push('}');
+        }
+        line.push_str("}\n");
+        // Telemetry must never take the run down: drop on write error.
+        let _ = state.out.write_all(line.as_bytes());
+    }
+}
+
+impl TelemetrySink for ChromeTraceSink {
+    fn span_begin(&self, name: &str, ts_us: u64, args: &[(&str, String)]) {
+        self.emit('B', name, ts_us, args);
+    }
+
+    fn span_end(&self, name: &str, ts_us: u64) {
+        self.emit('E', name, ts_us, &[]);
+    }
+
+    fn instant(&self, name: &str, ts_us: u64, args: &[(&str, String)]) {
+        self.emit('i', name, ts_us, args);
+    }
+
+    fn flush(&self) -> Result<()> {
+        self.state
+            .lock()
+            .unwrap()
+            .out
+            .flush()
+            .map_err(|e| Error::Runtime(format!("telemetry: trace flush: {e}")))
+    }
+}
+
+/// JSON string escaping (mirrors `util::json`, writing in place).
+fn escape_into(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::{Arc, Mutex};
+
+    use super::*;
+    use crate::obs::Telemetry;
+    use crate::util::clock::{Clock, VirtualClock};
+    use crate::util::json::Json;
+
+    /// A writer the test can read back after the sink is done with it.
+    #[derive(Clone, Default)]
+    struct SharedBuf(Arc<Mutex<Vec<u8>>>);
+
+    impl Write for SharedBuf {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            self.0.lock().unwrap().extend_from_slice(buf);
+            Ok(buf.len())
+        }
+
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    fn parse_events(buf: &SharedBuf) -> Vec<Json> {
+        let raw = String::from_utf8(buf.0.lock().unwrap().clone()).unwrap();
+        raw.lines()
+            .filter(|l| !l.trim().is_empty())
+            .map(|l| Json::parse(l).expect("each line is a JSON object"))
+            .collect()
+    }
+
+    #[test]
+    fn spans_nest_and_are_time_ordered() {
+        let buf = SharedBuf::default();
+        let clock = Arc::new(VirtualClock::new());
+        let sink = Arc::new(ChromeTraceSink::to_writer(Box::new(buf.clone())));
+        let tel = Telemetry::new(clock.clone(), sink, None);
+
+        {
+            let _round = tel.span_with("round", || {
+                vec![("round", "0".to_string())]
+            });
+            clock.wait_ms(5.0);
+            {
+                let _agg = tel.span("aggregate");
+                clock.wait_ms(2.0);
+            }
+            clock.wait_ms(1.0);
+        }
+        tel.flush().unwrap();
+
+        let events = parse_events(&buf);
+        assert_eq!(events.len(), 4, "B round, B agg, E agg, E round");
+        let phases: Vec<&str> =
+            events.iter().map(|e| e.get("ph").as_str().unwrap()).collect();
+        assert_eq!(phases, ["B", "B", "E", "E"], "proper nesting");
+        let names: Vec<&str> =
+            events.iter().map(|e| e.get("name").as_str().unwrap()).collect();
+        assert_eq!(names, ["round", "aggregate", "aggregate", "round"]);
+        let ts: Vec<f64> =
+            events.iter().map(|e| e.get("ts").as_f64().unwrap()).collect();
+        assert!(ts.windows(2).all(|w| w[0] <= w[1]), "ordered: {ts:?}");
+        assert_eq!(ts, [0.0, 5000.0, 7000.0, 8000.0], "virtual µs");
+        // Span args survive as a Chrome args object.
+        assert_eq!(events[0].get("args").get("round").as_str(), Some("0"));
+        // Single-threaded test: everything on tid 0.
+        assert!(events.iter().all(|e| e.get("tid").as_usize() == Some(0)));
+    }
+
+    #[test]
+    fn instants_and_escaping() {
+        let buf = SharedBuf::default();
+        let sink = ChromeTraceSink::to_writer(Box::new(buf.clone()));
+        sink.instant(
+            "warning",
+            42,
+            &[("message", "a \"quoted\"\nline".to_string())],
+        );
+        sink.flush().unwrap();
+        let events = parse_events(&buf);
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].get("ph").as_str(), Some("i"));
+        assert_eq!(
+            events[0].get("args").get("message").as_str(),
+            Some("a \"quoted\"\nline")
+        );
+    }
+
+    #[test]
+    fn threads_get_stable_small_tids() {
+        let buf = SharedBuf::default();
+        let sink = Arc::new(ChromeTraceSink::to_writer(Box::new(buf.clone())));
+        sink.span_begin("main", 0, &[]);
+        let s2 = sink.clone();
+        std::thread::spawn(move || {
+            s2.span_begin("worker", 1, &[]);
+            s2.span_end("worker", 2);
+        })
+        .join()
+        .unwrap();
+        sink.span_end("main", 3);
+        sink.flush().unwrap();
+        let events = parse_events(&buf);
+        let tids: Vec<usize> = events
+            .iter()
+            .map(|e| e.get("tid").as_usize().unwrap())
+            .collect();
+        assert_eq!(tids, [0, 1, 1, 0]);
+    }
+}

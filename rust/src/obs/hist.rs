@@ -1,0 +1,314 @@
+//! Latency histograms + the named-metric registry.
+//!
+//! A [`Histogram`] is 64 log₂ buckets over integer microseconds: bucket
+//! `i` counts observations in `[2^i, 2^{i+1})` µs (bucket 0 additionally
+//! holds 0). Recording is two integer ops and never allocates, so the
+//! hot paths (per-reply ingest, per-client round times at 100k clients)
+//! can observe unconditionally. Quantile estimates interpolate linearly
+//! inside the containing bucket, so they land in the same log₂ bucket as
+//! the exact order statistic — within 2x, which is the resolution the
+//! p50/p95/p99 columns need (property-tested in this module).
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use crate::util::json::{obj, Json};
+
+/// Number of log₂ buckets: covers [1 µs, 2^63 µs ≈ 292k years).
+const BUCKETS: usize = 64;
+
+/// A fixed-size log₂-bucketed latency histogram over microseconds.
+#[derive(Clone)]
+pub struct Histogram {
+    buckets: [u64; BUCKETS],
+    count: u64,
+    sum_us: u64,
+    max_us: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram { buckets: [0; BUCKETS], count: 0, sum_us: 0, max_us: 0 }
+    }
+
+    /// Bucket index for an observation: `⌊log₂ us⌋`, with 0 and 1 µs
+    /// sharing bucket 0.
+    pub fn bucket_of(us: u64) -> usize {
+        if us <= 1 {
+            0
+        } else {
+            63 - us.leading_zeros() as usize
+        }
+    }
+
+    pub fn record_us(&mut self, us: u64) {
+        self.buckets[Self::bucket_of(us)] += 1;
+        self.count += 1;
+        self.sum_us = self.sum_us.saturating_add(us);
+        self.max_us = self.max_us.max(us);
+    }
+
+    pub fn record_ms(&mut self, ms: f64) {
+        self.record_us((ms.max(0.0) * 1000.0) as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_us as f64 / self.count as f64 / 1000.0
+        }
+    }
+
+    pub fn max_ms(&self) -> f64 {
+        self.max_us as f64 / 1000.0
+    }
+
+    /// Fold another histogram in (per-round → per-task rollups).
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_us = self.sum_us.saturating_add(other.sum_us);
+        self.max_us = self.max_us.max(other.max_us);
+    }
+
+    /// Estimated `q`-quantile (`0 < q ≤ 1`) in milliseconds: the rank's
+    /// containing bucket, linearly interpolated, clamped to the observed
+    /// maximum. 0 when empty.
+    pub fn quantile_ms(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (i, &n) in self.buckets.iter().enumerate() {
+            if n == 0 {
+                continue;
+            }
+            if seen + n >= rank {
+                let lo = if i == 0 { 0u64 } else { 1u64 << i };
+                let hi = 1u64.checked_shl(i as u32 + 1).unwrap_or(u64::MAX);
+                let frac = (rank - seen) as f64 / n as f64;
+                let est = lo as f64 + (hi - lo) as f64 * frac;
+                return est.min(self.max_us as f64) / 1000.0;
+            }
+            seen += n;
+        }
+        self.max_us as f64 / 1000.0
+    }
+
+    /// The (p50, p95, p99) triple every report column wants.
+    pub fn quantiles_ms(&self) -> (f64, f64, f64) {
+        (self.quantile_ms(0.50), self.quantile_ms(0.95), self.quantile_ms(0.99))
+    }
+
+    /// Snapshot as JSON: count/mean/max plus the quantile estimates.
+    pub fn to_json(&self) -> Json {
+        let (p50, p95, p99) = self.quantiles_ms();
+        obj([
+            ("count", Json::Num(self.count as f64)),
+            ("mean_ms", Json::Num(self.mean_ms())),
+            ("max_ms", Json::Num(self.max_ms())),
+            ("p50_ms", Json::Num(p50)),
+            ("p95_ms", Json::Num(p95)),
+            ("p99_ms", Json::Num(p99)),
+        ])
+    }
+}
+
+// --------------------------------------------------------------- registry
+
+/// Named counters + histograms behind one mutex. Lock scope is a map
+/// lookup and two integer ops; every probe site goes through
+/// [`crate::obs::Telemetry`], which skips the lock entirely when
+/// telemetry is off.
+#[derive(Default)]
+pub struct MetricsRegistry {
+    inner: Mutex<Metrics>,
+}
+
+#[derive(Default)]
+struct Metrics {
+    counters: BTreeMap<String, u64>,
+    hists: BTreeMap<String, Histogram>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    pub fn counter(&self, name: &str, delta: u64) {
+        let mut m = self.inner.lock().unwrap();
+        match m.counters.get_mut(name) {
+            Some(v) => *v += delta,
+            None => {
+                m.counters.insert(name.to_string(), delta);
+            }
+        }
+    }
+
+    pub fn observe_ms(&self, name: &str, ms: f64) {
+        let mut m = self.inner.lock().unwrap();
+        match m.hists.get_mut(name) {
+            Some(h) => h.record_ms(ms),
+            None => {
+                let mut h = Histogram::new();
+                h.record_ms(ms);
+                m.hists.insert(name.to_string(), h);
+            }
+        }
+    }
+
+    pub fn counter_value(&self, name: &str) -> u64 {
+        self.inner.lock().unwrap().counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// (p50, p95, p99) ms of a named histogram, if it has observations.
+    pub fn quantiles_ms(&self, name: &str) -> Option<(f64, f64, f64)> {
+        self.inner
+            .lock()
+            .unwrap()
+            .hists
+            .get(name)
+            .filter(|h| h.count() > 0)
+            .map(|h| h.quantiles_ms())
+    }
+
+    /// Full snapshot: `{"counters": {...}, "histograms": {name: {...}}}`.
+    pub fn snapshot(&self) -> Json {
+        let m = self.inner.lock().unwrap();
+        let counters = Json::Obj(
+            m.counters
+                .iter()
+                .map(|(k, v)| (k.clone(), Json::Num(*v as f64)))
+                .collect(),
+        );
+        let hists = Json::Obj(
+            m.hists.iter().map(|(k, h)| (k.clone(), h.to_json())).collect(),
+        );
+        obj([("counters", counters), ("histograms", hists)])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    #[test]
+    fn buckets_are_log2() {
+        assert_eq!(Histogram::bucket_of(0), 0);
+        assert_eq!(Histogram::bucket_of(1), 0);
+        assert_eq!(Histogram::bucket_of(2), 1);
+        assert_eq!(Histogram::bucket_of(3), 1);
+        assert_eq!(Histogram::bucket_of(4), 2);
+        assert_eq!(Histogram::bucket_of(1023), 9);
+        assert_eq!(Histogram::bucket_of(1024), 10);
+        assert_eq!(Histogram::bucket_of(u64::MAX), 63);
+    }
+
+    #[test]
+    fn empty_histogram_is_all_zeros() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile_ms(0.99), 0.0);
+        assert_eq!(h.mean_ms(), 0.0);
+    }
+
+    #[test]
+    fn single_observation_quantiles_are_the_observation_bucket() {
+        let mut h = Histogram::new();
+        h.record_ms(10.0); // 10_000 µs
+        let (p50, p95, p99) = h.quantiles_ms();
+        // Clamped to the observed max: every quantile is exactly it.
+        assert_eq!(p50, 10.0);
+        assert_eq!(p95, 10.0);
+        assert_eq!(p99, 10.0);
+    }
+
+    /// Satellite property test: over random samples the p99 estimate
+    /// lands within one log₂ bucket of the exact order statistic.
+    #[test]
+    fn quantile_estimates_stay_within_one_log2_bucket_of_exact() {
+        check("hist_quantile_bucket", 0xB0C4, 60, |rng| {
+            let n = 1 + rng.below(500) as usize;
+            let mut h = Histogram::new();
+            let mut exact: Vec<u64> = (0..n)
+                .map(|_| {
+                    // Spread across ~6 decades: 1 µs .. 1e6 µs.
+                    let mag = rng.below(7);
+                    let base = 10u64.pow(mag as u32);
+                    base + rng.below(base.max(1)) // [base, 2·base)
+                })
+                .collect();
+            for &us in &exact {
+                h.record_us(us);
+            }
+            exact.sort_unstable();
+            for q in [0.5, 0.95, 0.99] {
+                let rank = ((q * n as f64).ceil() as usize).clamp(1, n);
+                let want = exact[rank - 1];
+                let got_us = (h.quantile_ms(q) * 1000.0).round() as u64;
+                let (bw, bg) =
+                    (Histogram::bucket_of(want), Histogram::bucket_of(got_us));
+                crate::prop_assert!(
+                    bw.abs_diff(bg) <= 1,
+                    "q={q}: exact {want}µs (bucket {bw}) vs est {got_us}µs \
+                     (bucket {bg}) over {n} samples"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn merge_matches_recording_into_one() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        let mut all = Histogram::new();
+        for (i, ms) in [1.0, 2.0, 4.0, 100.0, 3000.0].iter().enumerate() {
+            if i % 2 == 0 {
+                a.record_ms(*ms);
+            } else {
+                b.record_ms(*ms);
+            }
+            all.record_ms(*ms);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), all.count());
+        assert_eq!(a.quantiles_ms(), all.quantiles_ms());
+        assert_eq!(a.mean_ms(), all.mean_ms());
+    }
+
+    #[test]
+    fn registry_counts_and_snapshots() {
+        let reg = MetricsRegistry::new();
+        reg.counter("bytes", 10);
+        reg.counter("bytes", 5);
+        reg.observe_ms("lat", 2.0);
+        reg.observe_ms("lat", 8.0);
+        assert_eq!(reg.counter_value("bytes"), 15);
+        let (p50, _, p99) = reg.quantiles_ms("lat").unwrap();
+        assert!(p50 > 0.0 && p99 >= p50);
+        let snap = reg.snapshot();
+        assert_eq!(snap.get("counters").get("bytes").as_usize(), Some(15));
+        assert_eq!(
+            snap.get("histograms").get("lat").get("count").as_usize(),
+            Some(2)
+        );
+        assert!(reg.quantiles_ms("missing").is_none());
+    }
+}

@@ -1,0 +1,316 @@
+//! Telemetry plane: structured spans, latency histograms, counters.
+//!
+//! The paper's "comprehensive tracking" pillar (§V-C) records round
+//! *averages* after the fact; this module adds the phase-level substrate
+//! underneath it — every layer (platform jobs, server round stages,
+//! remote ingest, the SimNet event loop, hierarchical edge reduces,
+//! codec encodes, chunk-parallel aggregation workers) emits into one
+//! [`Telemetry`] handle:
+//!
+//! - **Spans** — RAII [`Span`] guards with key=value attributes, streamed
+//!   by a [`TelemetrySink`]. The shipped [`ChromeTraceSink`] writes Chrome
+//!   trace-event JSONL that loads directly in Perfetto; [`NullSink`]
+//!   discards events when only metrics are wanted.
+//! - **Metrics** — a [`MetricsRegistry`] of named counters and
+//!   log₂-bucketed latency [`Histogram`]s with p50/p95/p99 estimation.
+//!
+//! **Zero cost when off.** [`Telemetry::off`] carries no inner state:
+//! every probe is one `Option` check — no clock read, no lock, no
+//! allocation, and (crucially for SimNet) no RNG draw and no event-queue
+//! traffic, so disabled runs keep bit-identical trace digests. Probe
+//! sites that need attribute strings build them inside the
+//! [`Telemetry::span_with`] closure, which never runs when telemetry is
+//! off.
+//!
+//! **Honest timestamps.** Spans read the injected
+//! [`crate::util::clock::Clock`]: server/remote spans carry wall time
+//! while SimNet hands its virtual clock in, so a 100k-client simulated
+//! round renders as a timeline of virtual milliseconds — select →
+//! distribute → train → fold → aggregate per tier — not of host wall
+//! time.
+
+pub mod chrome;
+pub mod hist;
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+pub use chrome::ChromeTraceSink;
+pub use hist::{Histogram, MetricsRegistry};
+
+use crate::config::Config;
+use crate::error::{Error, Result};
+use crate::util::clock::Clock;
+use crate::util::json::Json;
+
+/// Receives span begin/end and instant events. Implementations resolve
+/// the emitting OS thread themselves (see [`ChromeTraceSink`]); callers
+/// only supply the clock-derived timestamp in microseconds.
+pub trait TelemetrySink: Send + Sync {
+    fn span_begin(&self, name: &str, ts_us: u64, args: &[(&str, String)]);
+    fn span_end(&self, name: &str, ts_us: u64);
+    fn instant(&self, name: &str, ts_us: u64, args: &[(&str, String)]);
+
+    /// Persist anything buffered. Called at job/run boundaries.
+    fn flush(&self) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// Discards every event: the sink behind metrics-only telemetry.
+pub struct NullSink;
+
+impl TelemetrySink for NullSink {
+    fn span_begin(&self, _name: &str, _ts_us: u64, _args: &[(&str, String)]) {}
+    fn span_end(&self, _name: &str, _ts_us: u64) {}
+    fn instant(&self, _name: &str, _ts_us: u64, _args: &[(&str, String)]) {}
+}
+
+struct TelemetryInner {
+    clock: Arc<dyn Clock>,
+    sink: Arc<dyn TelemetrySink>,
+    metrics: MetricsRegistry,
+    metrics_out: Option<PathBuf>,
+}
+
+/// The probe handle every instrumented layer holds. Cheap to clone
+/// (one `Option<Arc>`); [`Telemetry::off`] (also `Default`) disables
+/// every probe at the cost of a single branch.
+#[derive(Clone, Default)]
+pub struct Telemetry {
+    inner: Option<Arc<TelemetryInner>>,
+}
+
+impl Telemetry {
+    /// Disabled telemetry: every probe is a no-op.
+    pub fn off() -> Telemetry {
+        Telemetry { inner: None }
+    }
+
+    /// Live telemetry over an explicit clock and sink.
+    pub fn new(
+        clock: Arc<dyn Clock>,
+        sink: Arc<dyn TelemetrySink>,
+        metrics_out: Option<PathBuf>,
+    ) -> Telemetry {
+        Telemetry {
+            inner: Some(Arc::new(TelemetryInner {
+                clock,
+                sink,
+                metrics: MetricsRegistry::new(),
+                metrics_out,
+            })),
+        }
+    }
+
+    /// Build from config: off unless [`Config::telemetry_enabled`];
+    /// `trace_out` selects a [`ChromeTraceSink`], otherwise spans are
+    /// discarded ([`NullSink`]) and only metrics accumulate. `clock` is
+    /// the caller's time source (wall for server/remote, virtual for
+    /// SimNet).
+    pub fn from_config(cfg: &Config, clock: Arc<dyn Clock>) -> Result<Telemetry> {
+        if !cfg.telemetry_enabled() {
+            return Ok(Telemetry::off());
+        }
+        let sink: Arc<dyn TelemetrySink> = match &cfg.trace_out {
+            Some(path) => Arc::new(ChromeTraceSink::create(path)?),
+            None => Arc::new(NullSink),
+        };
+        Ok(Telemetry::new(clock, sink, cfg.metrics_out.clone()))
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    fn now_us(inner: &TelemetryInner) -> u64 {
+        (inner.clock.now_ms() * 1000.0) as u64
+    }
+
+    /// Open an attribute-free span; closed (and timed) when the returned
+    /// guard drops.
+    pub fn span(&self, name: &'static str) -> Span {
+        match &self.inner {
+            None => Span { inner: None },
+            Some(i) => {
+                i.sink.span_begin(name, Self::now_us(i), &[]);
+                Span { inner: Some((i.clone(), name)) }
+            }
+        }
+    }
+
+    /// Open a span with key=value attributes. The closure builds the
+    /// attribute strings and only runs when telemetry is on, so disabled
+    /// probe sites never allocate.
+    pub fn span_with<F>(&self, name: &'static str, args: F) -> Span
+    where
+        F: FnOnce() -> Vec<(&'static str, String)>,
+    {
+        match &self.inner {
+            None => Span { inner: None },
+            Some(i) => {
+                i.sink.span_begin(name, Self::now_us(i), &args());
+                Span { inner: Some((i.clone(), name)) }
+            }
+        }
+    }
+
+    /// Emit a zero-duration instant event (used for warnings).
+    pub fn instant<F>(&self, name: &'static str, args: F)
+    where
+        F: FnOnce() -> Vec<(&'static str, String)>,
+    {
+        if let Some(i) = &self.inner {
+            i.sink.instant(name, Self::now_us(i), &args());
+        }
+    }
+
+    /// Bump a named counter.
+    pub fn counter(&self, name: &str, delta: u64) {
+        if let Some(i) = &self.inner {
+            i.metrics.counter(name, delta);
+        }
+    }
+
+    /// Record one latency observation into a named histogram.
+    pub fn observe_ms(&self, name: &str, ms: f64) {
+        if let Some(i) = &self.inner {
+            i.metrics.observe_ms(name, ms);
+        }
+    }
+
+    /// Route a warning through telemetry: counted and emitted as an
+    /// instant event. Returns false when off so the caller can fall back
+    /// to stderr.
+    pub fn warn(&self, msg: &str) -> bool {
+        match &self.inner {
+            None => false,
+            Some(i) => {
+                i.metrics.counter("warnings", 1);
+                i.sink.instant(
+                    "warning",
+                    Self::now_us(i),
+                    &[("message", msg.to_string())],
+                );
+                true
+            }
+        }
+    }
+
+    /// Current value of a named counter (0 when off or never bumped).
+    pub fn counter_value(&self, name: &str) -> u64 {
+        match &self.inner {
+            None => 0,
+            Some(i) => i.metrics.counter_value(name),
+        }
+    }
+
+    /// (p50, p95, p99) ms of a named histogram, if populated.
+    pub fn quantiles_ms(&self, name: &str) -> Option<(f64, f64, f64)> {
+        self.inner.as_ref().and_then(|i| i.metrics.quantiles_ms(name))
+    }
+
+    /// Snapshot of every counter and histogram (`Json::Null` when off).
+    pub fn metrics_snapshot(&self) -> Json {
+        match &self.inner {
+            None => Json::Null,
+            Some(i) => i.metrics.snapshot(),
+        }
+    }
+
+    /// Flush the sink and, if configured, write the metrics snapshot to
+    /// `metrics_out`.
+    pub fn flush(&self) -> Result<()> {
+        let Some(i) = &self.inner else { return Ok(()) };
+        i.sink.flush()?;
+        if let Some(path) = &i.metrics_out {
+            let mut doc = i.metrics.snapshot().to_pretty();
+            doc.push('\n');
+            std::fs::write(path, doc).map_err(|e| {
+                Error::Runtime(format!(
+                    "telemetry: cannot write metrics to {}: {e}",
+                    path.display()
+                ))
+            })?;
+        }
+        Ok(())
+    }
+}
+
+/// RAII span guard: the span closes (with an end timestamp from the same
+/// clock) when this drops. Begin and end are emitted from the same OS
+/// thread, so sink-resolved thread ids always pair up.
+pub struct Span {
+    inner: Option<(Arc<TelemetryInner>, &'static str)>,
+}
+
+impl Span {
+    /// A span that never was (the disabled arm of conditional probes).
+    pub fn noop() -> Span {
+        Span { inner: None }
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if let Some((i, name)) = self.inner.take() {
+            i.sink.span_end(name, Telemetry::now_us(&i));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::clock::VirtualClock;
+
+    #[test]
+    fn off_telemetry_is_inert() {
+        let tel = Telemetry::off();
+        assert!(!tel.enabled());
+        {
+            let _s = tel.span("nothing");
+            let _s2 = tel.span_with("nothing", || {
+                panic!("attribute closure must not run when telemetry is off")
+            });
+        }
+        tel.counter("c", 1);
+        tel.observe_ms("h", 1.0);
+        assert!(!tel.warn("dropped"));
+        assert_eq!(tel.counter_value("c"), 0);
+        assert!(tel.quantiles_ms("h").is_none());
+        assert_eq!(tel.metrics_snapshot(), Json::Null);
+        tel.flush().unwrap();
+    }
+
+    #[test]
+    fn metrics_accumulate_without_a_trace_file() {
+        let clock = Arc::new(VirtualClock::new());
+        let tel = Telemetry::new(clock, Arc::new(NullSink), None);
+        assert!(tel.enabled());
+        tel.counter("bytes", 7);
+        tel.counter("bytes", 3);
+        for ms in [1.0, 2.0, 50.0] {
+            tel.observe_ms("fold_ms", ms);
+        }
+        assert!(tel.warn("watch out"));
+        assert_eq!(tel.counter_value("bytes"), 10);
+        assert_eq!(tel.counter_value("warnings"), 1);
+        let (p50, p95, p99) = tel.quantiles_ms("fold_ms").unwrap();
+        assert!(p50 > 0.0 && p50 <= p95 && p95 <= p99);
+        let snap = tel.metrics_snapshot();
+        assert_eq!(snap.get("counters").get("bytes").as_usize(), Some(10));
+    }
+
+    #[test]
+    fn from_config_respects_the_switch() {
+        let clock: Arc<dyn crate::util::clock::Clock> =
+            Arc::new(VirtualClock::new());
+        let cfg = Config::default();
+        assert!(!Telemetry::from_config(&cfg, clock.clone())
+            .unwrap()
+            .enabled());
+        let on = Config { telemetry: true, ..Config::default() };
+        assert!(Telemetry::from_config(&on, clock).unwrap().enabled());
+    }
+}

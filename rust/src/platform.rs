@@ -31,6 +31,7 @@ use std::time::{Duration, Instant};
 use crate::api::{report_from_tracker, Report, SessionBuilder};
 use crate::config::{Allocation, Config, DatasetKind, Partition, SimMode};
 use crate::error::{Error, Result};
+use crate::obs::Telemetry;
 use crate::registry;
 use crate::simnet::{SimNet, SimReport};
 use crate::tracking::Tracker;
@@ -215,6 +216,9 @@ struct QueuedJob {
 struct Queue {
     jobs: Mutex<(VecDeque<QueuedJob>, bool)>,
     ready: Condvar,
+    /// Platform-level telemetry: every job body runs under a
+    /// `platform.job` span on its worker thread.
+    tel: Telemetry,
 }
 
 impl Queue {
@@ -254,10 +258,19 @@ pub struct Platform {
 impl Platform {
     /// Spawn a platform with `workers` concurrent job slots.
     pub fn new(workers: usize) -> Platform {
+        Platform::with_telemetry(workers, Telemetry::off())
+    }
+
+    /// Spawn a platform whose job lifecycle emits through `tel`: each
+    /// body runs under a `platform.job` span (attributed with the job
+    /// label) on its worker thread, and completed jobs bump the
+    /// `platform.jobs` counter.
+    pub fn with_telemetry(workers: usize, tel: Telemetry) -> Platform {
         let workers = workers.max(1);
         let queue = Arc::new(Queue {
             jobs: Mutex::new((VecDeque::new(), false)),
             ready: Condvar::new(),
+            tel,
         });
         let handles = (0..workers)
             .map(|i| {
@@ -266,7 +279,7 @@ impl Platform {
                     .name(format!("easyfl-platform-{i}"))
                     .spawn(move || {
                         while let Some(job) = queue.pop() {
-                            Self::run_job(job);
+                            Self::run_job(&queue, job);
                         }
                     })
                     .expect("spawn platform worker")
@@ -280,16 +293,26 @@ impl Platform {
         }
     }
 
-    fn run_job(job: QueuedJob) {
+    fn run_job(queue: &Queue, job: QueuedJob) {
         let QueuedJob { state, body } = job;
         if state.cancel.load(Ordering::SeqCst) {
             state.finish(Err(Error::Runtime("job cancelled while queued".into())));
             return;
         }
         state.set_status(JobStatus::Running);
+        let _span = queue
+            .tel
+            .span_with("platform.job", || vec![("label", state.label.clone())]);
         let ctx = JobCtx { state: state.clone() };
         let result = body(&ctx);
+        queue.tel.counter("platform.jobs", 1);
         state.finish(result);
+    }
+
+    /// The platform's telemetry handle (off unless constructed with
+    /// [`Platform::with_telemetry`]).
+    pub fn telemetry(&self) -> Telemetry {
+        self.queue.tel.clone()
     }
 
     /// Submit a training job described entirely by its config. Unknown
@@ -766,9 +789,9 @@ impl SimSweepReport {
     pub fn to_table(&self) -> String {
         let mut out = String::new();
         let header = format!(
-            "{:<6} {:<10} {:<10} {:>7} {:>12} {:>8} {:>8} {:>7} {:>7}  {}\n",
-            "mode", "alloc", "partition", "rounds", "makespan s", "part %",
-            "drop %", "stale", "acc%", "status"
+            "{:<6} {:<10} {:<10} {:>7} {:>12} {:>9} {:>8} {:>8} {:>7} {:>7}  {}\n",
+            "mode", "alloc", "partition", "rounds", "makespan s", "p95 cl s",
+            "part %", "drop %", "stale", "acc%", "status"
         );
         out.push_str(&header);
         out.push_str(&"-".repeat(header.len().saturating_sub(1)));
@@ -782,12 +805,13 @@ impl SimSweepReport {
                         0.0
                     };
                     out.push_str(&format!(
-                        "{:<6} {:<10} {:<10} {:>7} {:>12.1} {:>8.1} {:>8.1} {:>7.2} {:>7.2}  {}\n",
+                        "{:<6} {:<10} {:<10} {:>7} {:>12.1} {:>9.1} {:>8.1} {:>8.1} {:>7.2} {:>7.2}  {}\n",
                         row.mode,
                         row.allocation,
                         row.partition,
                         rep.rounds,
                         rep.makespan_ms / 1000.0,
+                        rep.client_ms_p95 / 1000.0,
                         rep.participation * 100.0,
                         drop_pct,
                         rep.avg_staleness,
@@ -796,9 +820,9 @@ impl SimSweepReport {
                     ));
                 }
                 Err(e) => out.push_str(&format!(
-                    "{:<6} {:<10} {:<10} {:>7} {:>12} {:>8} {:>8} {:>7} {:>7}  error: {e}\n",
+                    "{:<6} {:<10} {:<10} {:>7} {:>12} {:>9} {:>8} {:>8} {:>7} {:>7}  error: {e}\n",
                     row.mode, row.allocation, row.partition, "-", "-", "-", "-",
-                    "-", "-",
+                    "-", "-", "-",
                 )),
             }
         }

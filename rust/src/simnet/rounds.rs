@@ -29,10 +29,12 @@ use crate::error::Result;
 use crate::flow::Update;
 use crate::hierarchy::{HierPlane, Topology};
 use crate::model::ParamVec;
+use crate::obs::{Histogram, Span, Telemetry};
 use crate::registry;
 use crate::scheduler::{make_strategy, Strategy};
 use crate::tracking::{RoundMetrics, Tracker};
-use crate::util::clock::Stopwatch;
+use crate::util::clock::{Stopwatch, VirtualClock};
+use crate::util::json::{obj, Json};
 use crate::util::rng::Rng;
 
 use super::adversary::AdversaryModel;
@@ -108,6 +110,16 @@ pub struct SimReport {
     /// aggregator contained every attack and when the adversary plane
     /// was off.
     pub envelope_deviation: f64,
+    /// p50 of per-report client service time (compute + upload, virtual
+    /// ms) over the whole run — the tail the deadline actually fights.
+    pub client_ms_p50: f64,
+    pub client_ms_p95: f64,
+    pub client_ms_p99: f64,
+    /// p50 of the *wall-clock* time each aggregation-window fold took on
+    /// the host (straggler sweep + robust reduce + fan-in + metrics).
+    pub fold_ms_p50: f64,
+    pub fold_ms_p95: f64,
+    pub fold_ms_p99: f64,
 }
 
 impl SimReport {
@@ -121,21 +133,32 @@ impl SimReport {
         self.rounds as f64 / (self.wall_ms / 1000.0).max(1e-9)
     }
 
+    /// Throughput fields as a JSON object — merged into `BENCH_*.json`
+    /// artifacts by [`crate::util::bench::write_bench`].
+    pub fn bench_fields(&self) -> Json {
+        obj([
+            ("clients", Json::Num(self.num_clients as f64)),
+            ("rounds", Json::Num(self.rounds as f64)),
+            ("events", Json::Num(self.events as f64)),
+            ("wall_ms", Json::Num(self.wall_ms)),
+            ("events_per_sec", Json::Num(self.events_per_sec())),
+            ("rounds_per_sec", Json::Num(self.rounds_per_sec())),
+            ("makespan_ms", Json::Num(self.makespan_ms)),
+            ("client_ms_p50", Json::Num(self.client_ms_p50)),
+            ("client_ms_p95", Json::Num(self.client_ms_p95)),
+            ("client_ms_p99", Json::Num(self.client_ms_p99)),
+            ("fold_ms_p50", Json::Num(self.fold_ms_p50)),
+            ("fold_ms_p95", Json::Num(self.fold_ms_p95)),
+            ("fold_ms_p99", Json::Num(self.fold_ms_p99)),
+        ])
+    }
+
     /// Throughput benchmark JSON (the `BENCH_simnet.json` CI artifact);
     /// shared by the `simulate --bench-out` flag and `simnet_scale`.
     pub fn bench_json(&self) -> String {
-        format!(
-            "{{\n  \"clients\": {},\n  \"rounds\": {},\n  \"events\": {},\n  \
-             \"wall_ms\": {:.1},\n  \"events_per_sec\": {:.0},\n  \
-             \"rounds_per_sec\": {:.1},\n  \"makespan_ms\": {:.1}\n}}\n",
-            self.num_clients,
-            self.rounds,
-            self.events,
-            self.wall_ms,
-            self.events_per_sec(),
-            self.rounds_per_sec(),
-            self.makespan_ms
-        )
+        let mut text = self.bench_fields().to_pretty();
+        text.push('\n');
+        text
     }
 
     /// Project onto the training [`crate::api::Report`] shape so SimNet
@@ -207,6 +230,16 @@ pub struct SimNet {
     adv_rng: Rng,
     env_dev_sum: f64,
     env_dev_n: u64,
+    /// Telemetry plane. Spans carry *virtual* time: `vclock` mirrors the
+    /// event queue's clock, written only when telemetry is on. Probes
+    /// draw no RNG and push no events, so `telemetry = off` timelines
+    /// are bit-identical (regression-tested below).
+    tel: Telemetry,
+    vclock: Arc<VirtualClock>,
+    /// Per-report client service times (virtual ms), whole run.
+    client_hist: Histogram,
+    /// Wall-clock latency of each aggregation-window fold.
+    fold_hist: Histogram,
 }
 
 impl SimNet {
@@ -292,7 +325,14 @@ impl SimNet {
         }
 
         let server = if cfg.sim.real_training {
-            let mut builder = crate::api::SessionBuilder::new(cfg.clone());
+            // SimNet owns the run's trace/metrics output files; the
+            // backing real-training server keeps its own (wall-clock)
+            // telemetry off so the two never write the same paths.
+            let mut inner = cfg.clone();
+            inner.telemetry = false;
+            inner.trace_out = None;
+            inner.metrics_out = None;
+            let mut builder = crate::api::SessionBuilder::new(inner);
             Some(builder.build()?.build_server()?)
         } else {
             None
@@ -326,6 +366,10 @@ impl SimNet {
                 .set_config("adversary_frac", cfg.sim.adversary_frac.to_string());
         }
 
+        let vclock = Arc::new(VirtualClock::new());
+        let tel = Telemetry::from_config(cfg, vclock.clone())?;
+        tracker.set_telemetry(tel.clone());
+
         Ok(SimNet {
             strategy: make_strategy(
                 cfg.allocation,
@@ -358,12 +402,21 @@ impl SimNet {
             adv_rng,
             env_dev_sum: 0.0,
             env_dev_n: 0,
+            tel,
+            vclock,
+            client_hist: Histogram::new(),
+            fold_hist: Histogram::new(),
             cfg: cfg.clone(),
         })
     }
 
     pub fn tracker(&self) -> Arc<Tracker> {
         self.tracker.clone()
+    }
+
+    /// The run's telemetry handle (off unless the config enabled it).
+    pub fn telemetry(&self) -> Telemetry {
+        self.tel.clone()
     }
 
     pub fn num_clients(&self) -> usize {
@@ -481,6 +534,11 @@ impl SimNet {
             self.cost
                 .upload_bytes_ms(self.uplink_bytes, bandwidth, &mut self.rng);
         let total = compute + upload;
+        // Wire accounting for the codec dashboards: what this upload
+        // costs on the wire vs what a dense one would have. Counters are
+        // no-ops when telemetry is off and draw no RNG either way.
+        self.tel.counter("codec.encoded_bytes", self.uplink_bytes as u64);
+        self.tel.counter("codec.dense_bytes", self.cost.model_bytes as u64);
         self.clients[client].service_ms = total;
         let epoch = self.clients[client].epoch;
         let dropout = self.cfg.sim.dropout;
@@ -654,6 +712,7 @@ impl SimNet {
         let mut awaiting = false;
         let mut rounds_done = 0usize;
         let mut makespan = 0.0f64;
+        let mut round_span = Span::noop();
 
         self.queue.push(0.0, EventKind::RoundStart { round: 0 });
         while rounds_done < rounds {
@@ -663,6 +722,9 @@ impl SimNet {
                 break;
             };
             let t = ev.time_ms;
+            if self.tel.enabled() {
+                self.vclock.set_ms(t);
+            }
             let mut finish_now = false;
             match ev.kind {
                 EventKind::Online { client } => self.handle_toggle(client, true, t),
@@ -678,6 +740,12 @@ impl SimNet {
                     cohort = self.select_cohort(k_select);
                     target = k_target.min(cohort.len());
                     awaiting = true;
+                    round_span = self.tel.span_with("sim.round", || {
+                        vec![
+                            ("round", r.to_string()),
+                            ("cohort", cohort.len().to_string()),
+                        ]
+                    });
                     // Over-selected cohort queues per device; clients on
                     // one device run back-to-back (the makespan model
                     // the scheduler optimizes).
@@ -729,6 +797,7 @@ impl SimNet {
                 }
             }
             if awaiting && finish_now {
+                let sw_fold = Stopwatch::start();
                 let now = self.queue.now_ms();
                 // Anything still running missed the aggregation: drop it
                 // back into the pool.
@@ -765,6 +834,10 @@ impl SimNet {
                     .close_fanin(measured.iter().map(|&(c, _)| c), reported);
                 let close = now + hop_ms;
                 let (train_loss, acc) = self.backend_metrics(round)?;
+                let mut service = Histogram::new();
+                for &(_, ms) in &measured {
+                    service.record_ms(ms);
+                }
                 self.record_round(
                     round,
                     close - t0,
@@ -775,7 +848,15 @@ impl SimNet {
                     round_bytes,
                     train_loss,
                     acc,
+                    &service,
                 );
+                let fold_ms = sw_fold.elapsed_ms();
+                self.fold_hist.record_ms(fold_ms);
+                self.tel.observe_ms("sim.fold_ms", fold_ms);
+                if self.tel.enabled() {
+                    self.vclock.set_ms(close);
+                }
+                round_span = Span::noop();
                 self.version += 1;
                 awaiting = false;
                 rounds_done += 1;
@@ -790,7 +871,9 @@ impl SimNet {
                 }
             }
         }
+        drop(round_span);
         self.teardown();
+        self.finish_telemetry()?;
         Ok(self.build_report("sync", makespan, sw.elapsed_ms()))
     }
 
@@ -823,6 +906,8 @@ impl SimNet {
         let mut agg_dropped = 0usize;
         let mut t_last = 0.0f64;
         let mut makespan = 0.0f64;
+        let mut window_span = Span::noop();
+        let mut window_service = Histogram::new();
 
         self.refill_async(&mut active, concurrency, 0.0);
         while self.version < rounds {
@@ -834,6 +919,9 @@ impl SimNet {
                 break;
             };
             let t = ev.time_ms;
+            if self.tel.enabled() {
+                self.vclock.set_ms(t);
+            }
             match ev.kind {
                 EventKind::Online { client } => self.handle_toggle(client, true, t),
                 EventKind::Offline { client } => {
@@ -847,9 +935,15 @@ impl SimNet {
                         (self.version - self.clients[client].start_version) as f64;
                     self.clients[client].begin_upload();
                     self.clients[client].report();
+                    window_service.record_ms(self.clients[client].service_ms);
                     self.release(client);
                     active -= 1;
                     self.total_reported += 1;
+                    if window_members.is_empty() {
+                        window_span = self.tel.span_with("sim.window", || {
+                            vec![("round", self.version.to_string())]
+                        });
+                    }
                     let weight = buffer.push(staleness, None)?;
                     window_members.push((client, weight));
                     self.staleness_sum += staleness;
@@ -858,6 +952,7 @@ impl SimNet {
                         // FedBuff aggregation: staleness-discounted
                         // weights, normalized against the sync target K
                         // so sync/async progress is comparable.
+                        let sw_fold = Stopwatch::start();
                         let round = self.version;
                         self.version += 1;
                         let base = buffer.total_weight() / k_target as f64;
@@ -890,7 +985,16 @@ impl SimNet {
                             window_bytes,
                             train_loss,
                             acc,
+                            &window_service,
                         );
+                        window_service = Histogram::new();
+                        let fold_ms = sw_fold.elapsed_ms();
+                        self.fold_hist.record_ms(fold_ms);
+                        self.tel.observe_ms("sim.fold_ms", fold_ms);
+                        if self.tel.enabled() {
+                            self.vclock.set_ms(close);
+                        }
+                        window_span = Span::noop();
                         agg_dropped = 0;
                         t_last = close;
                         makespan = close;
@@ -917,7 +1021,9 @@ impl SimNet {
                 self.refill_async(&mut active, concurrency, now);
             }
         }
+        drop(window_span);
         self.teardown();
+        self.finish_telemetry()?;
         Ok(self.build_report("async", makespan, sw.elapsed_ms()))
     }
 
@@ -948,7 +1054,11 @@ impl SimNet {
         bytes_to_cloud: usize,
         train_loss: f64,
         accuracy: f64,
+        service: &Histogram,
     ) {
+        self.client_hist.merge(service);
+        let (client_ms_p50, client_ms_p95, client_ms_p99) =
+            service.quantiles_ms();
         let eval = self.cfg.eval_every > 0
             && (round + 1) % self.cfg.eval_every == 0;
         self.tracker.record_round(RoundMetrics {
@@ -971,7 +1081,17 @@ impl SimNet {
             reported,
             dropped,
             avg_staleness,
+            client_ms_p50,
+            client_ms_p95,
+            client_ms_p99,
         });
+    }
+
+    /// Final event-count stamp and sink flush (no-op when telemetry is
+    /// off).
+    fn finish_telemetry(&self) -> Result<()> {
+        self.tel.counter("sim.events", self.queue.processed());
+        self.tel.flush()
     }
 
     /// Release every client back to Available/Offline so no one is left
@@ -999,6 +1119,10 @@ impl SimNet {
             .last()
             .map(|(_, loss, _)| *loss)
             .unwrap_or_else(|| self.surrogate.loss(self.progress));
+        let (client_ms_p50, client_ms_p95, client_ms_p99) =
+            self.client_hist.quantiles_ms();
+        let (fold_ms_p50, fold_ms_p95, fold_ms_p99) =
+            self.fold_hist.quantiles_ms();
         SimReport {
             mode: mode.to_string(),
             allocation: self.cfg.allocation.name().to_string(),
@@ -1038,6 +1162,12 @@ impl SimNet {
             } else {
                 0.0
             },
+            client_ms_p50,
+            client_ms_p95,
+            client_ms_p99,
+            fold_ms_p50,
+            fold_ms_p95,
+            fold_ms_p99,
         }
     }
 }
@@ -1077,6 +1207,10 @@ mod tests {
         assert!(report.final_accuracy > 0.0);
         assert!(report.converged, "all configured rounds aggregated");
         assert_eq!(report.avg_staleness, 0.0, "sync rounds are never stale");
+        // The always-on quantiles populate without any telemetry config.
+        assert!(report.client_ms_p50 > 0.0);
+        assert!(report.client_ms_p50 <= report.client_ms_p95);
+        assert!(report.client_ms_p95 <= report.client_ms_p99);
         // Every round's reporters fit under the over-selected cohort.
         let t = net.tracker();
         let json = t.to_json();
@@ -1085,6 +1219,10 @@ mod tests {
             let reported = r.req_usize("reported").unwrap();
             assert!(reported <= selected, "reported {reported} > selected {selected}");
             assert!(reported <= cfg.clients_per_round);
+            // Per-round client-time quantiles ride the tracker JSON.
+            let p50 = r.get("client_ms_p50").as_f64().unwrap();
+            let p99 = r.get("client_ms_p99").as_f64().unwrap();
+            assert!(p50 > 0.0 && p50 <= p99, "p50 {p50} vs p99 {p99}");
         }
     }
 
@@ -1261,6 +1399,45 @@ mod tests {
             assert_eq!(baseline.comm_bytes, identity.comm_bytes);
             assert_eq!(baseline.bytes_to_cloud, identity.bytes_to_cloud);
             assert_eq!(baseline.rounds, identity.rounds);
+        }
+    }
+
+    #[test]
+    fn telemetry_off_runs_are_bit_identical_to_metrics_only_runs() {
+        // The observability regression guard: metrics-only telemetry
+        // (NullSink, in-memory registry) must not shift a single event —
+        // no extra RNG draws, no queue traffic — across the sync, async
+        // and hierarchical timelines.
+        for (mode, topo) in [
+            (SimMode::Sync, "flat"),
+            (SimMode::Async, "flat"),
+            (SimMode::Sync, "edges(4)"),
+        ] {
+            let mut base = sim_cfg(mode);
+            base.topology = topo.to_string();
+            if matches!(mode, SimMode::Async) {
+                base.sim.async_buffer = 10;
+                base.sim.async_concurrency = 60;
+            }
+            let off = SimNet::from_config(&base).unwrap().run().unwrap();
+            let mut on_cfg = base.clone();
+            on_cfg.telemetry = true;
+            let mut traced_net = SimNet::from_config(&on_cfg).unwrap();
+            let traced = traced_net.run().unwrap();
+            assert_eq!(
+                off.trace_digest, traced.trace_digest,
+                "{mode:?}/{topo}: telemetry shifted the event trace"
+            );
+            assert_eq!(off.makespan_ms, traced.makespan_ms);
+            assert_eq!(off.comm_bytes, traced.comm_bytes);
+            assert_eq!(off.bytes_to_cloud, traced.bytes_to_cloud);
+            assert_eq!(off.rounds, traced.rounds);
+            // Identical timelines ⇒ identical virtual-time quantiles.
+            assert_eq!(off.client_ms_p99, traced.client_ms_p99);
+            // The traced run accumulated the metrics the off run skipped.
+            let tel = traced_net.telemetry();
+            assert_eq!(tel.counter_value("sim.events"), traced.events);
+            assert!(tel.quantiles_ms("sim.fold_ms").is_some());
         }
     }
 

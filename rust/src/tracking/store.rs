@@ -1,10 +1,12 @@
 //! The hierarchical metric store.
 
+use std::collections::btree_map::Entry;
 use std::collections::BTreeMap;
 use std::path::PathBuf;
 use std::sync::Mutex;
 
 use crate::error::{Error, Result};
+use crate::obs::Telemetry;
 use crate::util::json::{obj, Json};
 
 /// Client-level metrics for one round (paper: "client metrics of a round").
@@ -54,6 +56,14 @@ pub struct RoundMetrics {
     pub dropped: usize,
     /// Mean staleness of aggregated updates (async engines; 0 for sync).
     pub avg_staleness: f64,
+    /// Median per-client round time this round (ms). Averages hide the
+    /// straggler tail the deadline actually fights; the quantile triple
+    /// shows it. 0 when no per-client times were measured.
+    pub client_ms_p50: f64,
+    /// 95th-percentile per-client round time (ms).
+    pub client_ms_p95: f64,
+    /// 99th-percentile per-client round time (ms).
+    pub client_ms_p99: f64,
 }
 
 /// Task-level metrics (paper: "metrics of the whole training").
@@ -72,6 +82,12 @@ pub struct TaskMetrics {
 pub struct Tracker {
     task: Mutex<TaskMetrics>,
     dir: Option<PathBuf>,
+    /// Warning dedupe ledger: message → (index in `warnings`, count).
+    warn_counts: Mutex<BTreeMap<String, (usize, usize)>>,
+    /// Probe handle warnings are emitted through (instant event +
+    /// counter). Off by default: the stderr fallback keeps interactive
+    /// runs informed.
+    tel: Mutex<Telemetry>,
 }
 
 impl Tracker {
@@ -83,6 +99,8 @@ impl Tracker {
                 ..TaskMetrics::default()
             }),
             dir: None,
+            warn_counts: Mutex::new(BTreeMap::new()),
+            tel: Mutex::new(Telemetry::off()),
         }
     }
 
@@ -103,13 +121,46 @@ impl Tracker {
         self.task.lock().unwrap().rounds.push(round);
     }
 
-    /// Record a non-fatal anomaly with the task (and echo it to stderr so
-    /// interactive runs see it immediately).
+    /// Attach a live telemetry handle: warnings then surface as instant
+    /// trace events + a `warnings` counter instead of stderr.
+    pub fn set_telemetry(&self, tel: Telemetry) {
+        *self.tel.lock().unwrap() = tel;
+    }
+
+    /// Record a non-fatal anomaly with the task. Identical repeats are
+    /// deduplicated in place with a count (`"msg (xN)"`), and all I/O —
+    /// the telemetry sink, or the stderr fallback when telemetry is off —
+    /// happens *after* the task mutex is released, so a slow terminal
+    /// never serializes the workers that hit the same anomaly.
     pub fn warn(&self, msg: impl Into<String>) {
         let msg = msg.into();
-        let mut t = self.task.lock().unwrap();
-        eprintln!("[easyfl:{}] warning: {msg}", t.task_id);
-        t.warnings.push(msg);
+        let (first, task_id) = {
+            let mut t = self.task.lock().unwrap();
+            let mut counts = self.warn_counts.lock().unwrap();
+            let first = match counts.entry(msg.clone()) {
+                Entry::Vacant(e) => {
+                    e.insert((t.warnings.len(), 1));
+                    t.warnings.push(msg.clone());
+                    true
+                }
+                Entry::Occupied(mut e) => {
+                    let (idx, n) = e.get_mut();
+                    *n += 1;
+                    t.warnings[*idx] = format!("{msg} (x{n})");
+                    false
+                }
+            };
+            (first, t.task_id.clone())
+        };
+        let tel = self.tel.lock().unwrap().clone();
+        if first {
+            if !tel.warn(&msg) {
+                eprintln!("[easyfl:{task_id}] warning: {msg}");
+            }
+        } else {
+            // Repeats only bump the counter; the trace stays readable.
+            tel.counter("warnings", 1);
+        }
     }
 
     /// Warnings recorded so far.
@@ -239,6 +290,9 @@ impl Tracker {
                     ("reported", Json::Num(r.reported as f64)),
                     ("dropped", Json::Num(r.dropped as f64)),
                     ("avg_staleness", Json::Num(r.avg_staleness)),
+                    ("client_ms_p50", Json::Num(r.client_ms_p50)),
+                    ("client_ms_p95", Json::Num(r.client_ms_p95)),
+                    ("client_ms_p99", Json::Num(r.client_ms_p99)),
                 ])
             })
             .collect();
@@ -316,6 +370,10 @@ impl Tracker {
                 reported: r.get("reported").as_usize().unwrap_or(0),
                 dropped: r.get("dropped").as_usize().unwrap_or(0),
                 avg_staleness: r.get("avg_staleness").as_f64().unwrap_or(0.0),
+                // Quantiles default 0 for pre-telemetry recordings.
+                client_ms_p50: r.get("client_ms_p50").as_f64().unwrap_or(0.0),
+                client_ms_p95: r.get("client_ms_p95").as_f64().unwrap_or(0.0),
+                client_ms_p99: r.get("client_ms_p99").as_f64().unwrap_or(0.0),
             });
         }
         Ok(tracker)
@@ -354,6 +412,9 @@ mod tests {
             reported: 10,
             dropped: 2,
             avg_staleness: 0.5,
+            client_ms_p50: 95.0,
+            client_ms_p95: 180.0,
+            client_ms_p99: 240.0,
             clients: vec![ClientMetrics {
                 client: 7,
                 num_samples: 50,
@@ -426,5 +487,91 @@ mod tests {
         assert_eq!(t.final_accuracy(), None);
         assert_eq!(t.avg_round_ms(), 0.0);
         assert!(t.client_round_times(0).is_empty());
+    }
+
+    #[test]
+    fn repeated_warnings_dedupe_with_a_count() {
+        let t = Tracker::new("task-dd");
+        t.warn("deadline missed");
+        t.warn("deadline missed");
+        t.warn("deadline missed");
+        t.warn("other anomaly");
+        assert_eq!(
+            t.warnings(),
+            vec!["deadline missed (x3)", "other anomaly"]
+        );
+    }
+
+    #[test]
+    fn warnings_route_through_telemetry_when_attached() {
+        use crate::obs::NullSink;
+        use crate::util::clock::VirtualClock;
+        use std::sync::Arc;
+
+        let t = Tracker::new("task-tel");
+        let tel = Telemetry::new(
+            Arc::new(VirtualClock::new()),
+            Arc::new(NullSink),
+            None,
+        );
+        t.set_telemetry(tel.clone());
+        t.warn("slow edge");
+        t.warn("slow edge");
+        // First emission + one deduped repeat both count.
+        assert_eq!(tel.counter_value("warnings"), 2);
+        assert_eq!(t.warnings(), vec!["slow edge (x2)"]);
+    }
+
+    #[test]
+    fn client_quantiles_roundtrip_and_default_for_old_json() {
+        let t = Tracker::new("task-q");
+        t.record_round(round(0, 0.5));
+        let j = t.to_json();
+        let back = Tracker::from_json(&j).unwrap();
+        assert_eq!(back.to_json(), j);
+        // Pre-telemetry task JSON (no quantile keys) still parses.
+        let old = Json::parse(
+            r#"{"task_id": "legacy", "rounds": [{
+                "round": 0, "train_loss": 1.0, "train_accuracy": 0.5,
+                "round_ms": 100.0, "distribution_ms": 5.0,
+                "comm_bytes": 10}]}"#,
+        )
+        .unwrap();
+        let legacy = Tracker::from_json(&old).unwrap();
+        let j = legacy.to_json();
+        let r = &j.get("rounds").as_arr().unwrap()[0];
+        assert_eq!(r.get("client_ms_p50").as_f64(), Some(0.0));
+        assert_eq!(r.get("client_ms_p99").as_f64(), Some(0.0));
+    }
+
+    #[test]
+    fn malformed_rounds_are_rejected() {
+        // Missing required round fields must error, not default.
+        let cases = [
+            // No task_id at all.
+            r#"{"rounds": []}"#,
+            // Round missing round_ms.
+            r#"{"task_id": "x", "rounds": [{
+                "round": 0, "train_loss": 1.0, "train_accuracy": 0.5,
+                "distribution_ms": 5.0, "comm_bytes": 10}]}"#,
+            // Round missing the round index.
+            r#"{"task_id": "x", "rounds": [{
+                "train_loss": 1.0, "train_accuracy": 0.5,
+                "round_ms": 100.0, "distribution_ms": 5.0,
+                "comm_bytes": 10}]}"#,
+            // Client entry missing num_samples.
+            r#"{"task_id": "x", "rounds": [{
+                "round": 0, "train_loss": 1.0, "train_accuracy": 0.5,
+                "round_ms": 100.0, "distribution_ms": 5.0,
+                "comm_bytes": 10,
+                "clients": [{"client": 1, "train_loss": 1.0,
+                             "train_accuracy": 0.5, "compute_ms": 1.0,
+                             "wait_ms": 0.0, "round_ms": 1.0,
+                             "upload_bytes": 5}]}]}"#,
+        ];
+        for src in cases {
+            let j = Json::parse(src).unwrap();
+            assert!(Tracker::from_json(&j).is_err(), "{src}");
+        }
     }
 }

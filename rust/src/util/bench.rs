@@ -1,0 +1,110 @@
+//! Shared `BENCH_*.json` writer for the CI perf smokes.
+//!
+//! Every benchmark example (`simnet_scale`, `agg_bench`, `codec_bench`,
+//! `hier_scale`, `obs_bench`) used to hand-roll its own `format!` JSON;
+//! this helper writes one canonical document instead, stamped with the
+//! bench name, `git describe` provenance and a summary of the driving
+//! config, so artifacts from different CI runs are comparable at a
+//! glance.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::config::Config;
+use crate::error::{Error, Result};
+use crate::util::json::{obj, Json};
+
+/// `git describe --always --dirty`, or `"unknown"` outside a checkout.
+pub fn git_describe() -> String {
+    std::process::Command::new("git")
+        .args(["describe", "--always", "--dirty"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+/// Summary of the config fields every bench artifact should record.
+pub fn config_summary(cfg: &Config) -> Json {
+    obj([
+        ("dataset", Json::Str(cfg.dataset.name().to_string())),
+        ("algorithm", Json::Str(cfg.algorithm.clone())),
+        ("num_clients", Json::Num(cfg.num_clients as f64)),
+        ("clients_per_round", Json::Num(cfg.clients_per_round as f64)),
+        ("rounds", Json::Num(cfg.rounds as f64)),
+        ("seed", Json::Num(cfg.seed as f64)),
+    ])
+}
+
+/// Write a benchmark artifact: `fields` (a JSON object) merged into the
+/// top level next to the `bench` name, `git` provenance stamp and the
+/// optional `config` summary.
+pub fn write_bench(
+    path: impl AsRef<Path>,
+    name: &str,
+    cfg: Option<&Config>,
+    fields: Json,
+) -> Result<()> {
+    let mut doc: BTreeMap<String, Json> = BTreeMap::new();
+    doc.insert("bench".to_string(), Json::Str(name.to_string()));
+    doc.insert("git".to_string(), Json::Str(git_describe()));
+    if let Some(cfg) = cfg {
+        doc.insert("config".to_string(), config_summary(cfg));
+    }
+    match fields {
+        Json::Obj(map) => doc.extend(map),
+        other => {
+            doc.insert("result".to_string(), other);
+        }
+    }
+    let mut text = Json::Obj(doc).to_pretty();
+    text.push('\n');
+    std::fs::write(path.as_ref(), text).map_err(|e| {
+        Error::Runtime(format!(
+            "bench: cannot write {}: {e}",
+            path.as_ref().display()
+        ))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_a_parseable_stamped_document() {
+        let path = std::env::temp_dir()
+            .join(format!("easyfl_bench_test_{}.json", std::process::id()));
+        let cfg = Config::default();
+        write_bench(
+            &path,
+            "unit",
+            Some(&cfg),
+            obj([("events_per_sec", Json::Num(123.5))]),
+        )
+        .unwrap();
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(doc.get("bench").as_str(), Some("unit"));
+        assert!(doc.get("git").as_str().is_some());
+        assert_eq!(doc.get("events_per_sec").as_f64(), Some(123.5));
+        assert_eq!(
+            doc.get("config").get("rounds").as_usize(),
+            Some(cfg.rounds)
+        );
+    }
+
+    #[test]
+    fn non_object_fields_land_under_result() {
+        let path = std::env::temp_dir()
+            .join(format!("easyfl_bench_scalar_{}.json", std::process::id()));
+        write_bench(&path, "scalar", None, Json::Num(1.0)).unwrap();
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(doc.get("result").as_usize(), Some(1));
+        assert_eq!(doc.get("config"), &Json::Null);
+    }
+}

@@ -71,6 +71,14 @@ impl VirtualClock {
     pub fn new() -> Self {
         Self::default()
     }
+
+    /// Jump the clock to an absolute time. Drivers that own their own
+    /// timeline (SimNet's event queue) sync the shared clock to event
+    /// time before emitting telemetry, so spans carry virtual
+    /// timestamps.
+    pub fn set_ms(&self, ms: f64) {
+        self.now_us.store((ms * 1000.0) as u64, Ordering::Relaxed);
+    }
 }
 
 impl Clock for VirtualClock {
@@ -132,5 +140,14 @@ mod tests {
         assert!(sw.elapsed_ms() < 50.0);
         assert!((c.now_ms() - 1_000_000.0).abs() < 1.0);
         assert!(!c.is_real());
+    }
+
+    #[test]
+    fn virtual_clock_jumps_to_absolute_time() {
+        let c = VirtualClock::new();
+        c.set_ms(123.5);
+        assert!((c.now_ms() - 123.5).abs() < 1e-9);
+        c.set_ms(50.0); // backwards jumps are allowed (new sim timeline)
+        assert!((c.now_ms() - 50.0).abs() < 1e-9);
     }
 }

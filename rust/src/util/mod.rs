@@ -5,6 +5,7 @@
 //! clap / proptest — see DESIGN.md "Substitutions" #7.
 
 pub mod args;
+pub mod bench;
 pub mod bytes;
 pub mod clock;
 pub mod json;
