@@ -1,0 +1,340 @@
+//! ingest_bench — reactor worker pool vs thread-per-connection ingest.
+//!
+//! Simulates `--uploaders` clients finishing a round at once: each
+//! uploader is a pre-encoded `TrainReply` frame (length prefix + body,
+//! the exact wire layout the RPC layer reassembles). Both ingest modes
+//! decode every frame and push the result through the same bounded
+//! backpressure queue ([`easyfl::comm::reactor::bounded`]) into one
+//! consumer that drains it like the aggregator does:
+//!
+//! * `threads` — the legacy shape: one short-lived OS thread per
+//!   uploader (10k spawns, 10k stacks, 10k scheduler entries).
+//! * `reactor` — the fixed pool: `--workers` threads shard the same
+//!   frames, mirroring the poll-loop sharding in `gather_reactor`.
+//!
+//! Frames live in memory rather than on real sockets so the bench can
+//! hold ≥10k *concurrent* uploaders under CI file-descriptor limits
+//! (~1024 fds); the work measured — per-upload thread lifecycle vs
+//! fixed-pool reuse, frame decode, bounded handoff — is the part the
+//! reactor changed. Per-arrival gaps land in the same
+//! `remote.ingest_ms` histogram the live coordinator publishes, so the
+//! p99 reported here is the metric `/metrics` serves in production.
+//!
+//! CI runs the 10k-uploader configuration as a perf smoke and records
+//! the numbers to `BENCH_ingest.json`:
+//!
+//! ```text
+//! cargo run --release --example ingest_bench -- \
+//!     --uploaders 10000 --params 1024 --budget-ms 120000 \
+//!     --bench-out BENCH_ingest.json
+//! ```
+//!
+//! The run fails unless the reactor sustains ≥1.5x the baseline
+//! throughput, every upload is ingested (the queue never drops), and
+//! the queue depth never exceeds its bound.
+
+use std::sync::Arc;
+
+use easyfl::comm::protocol::Message;
+use easyfl::comm::reactor;
+use easyfl::flow::Update;
+use easyfl::model::ParamVec;
+use easyfl::obs::{NullSink, Telemetry};
+use easyfl::util::args::{usage, Args, Opt};
+use easyfl::util::bench::write_bench;
+use easyfl::util::clock::{RealClock, Stopwatch};
+use easyfl::util::json::{obj, Json};
+use easyfl::util::rng::Rng;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn opts() -> Vec<Opt> {
+    vec![
+        Opt { name: "uploaders", help: "concurrent simulated uploaders", default: Some("10000"), is_flag: false },
+        Opt { name: "params", help: "parameter-vector length P per upload", default: Some("1024"), is_flag: false },
+        Opt { name: "workers", help: "reactor pool size (0 = auto)", default: Some("0"), is_flag: false },
+        Opt { name: "queue-cap", help: "bounded ingest queue capacity", default: Some("512"), is_flag: false },
+        Opt { name: "seed", help: "RNG seed", default: Some("42"), is_flag: false },
+        Opt { name: "budget-ms", help: "fail if total wall time exceeds this (0 = off)", default: Some("0"), is_flag: false },
+        Opt { name: "bench-out", help: "write benchmark JSON here", default: None, is_flag: false },
+        Opt { name: "help", help: "show help", default: None, is_flag: true },
+    ]
+}
+
+/// One pre-encoded upload per client: `u32 LE length ‖ message body`,
+/// the frame layout `rpc::read_frame` / the reactor's `PendingConn`
+/// reassemble off the wire.
+fn gen_frames(n: usize, p: usize, seed: u64) -> Vec<Vec<u8>> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|i| {
+            let dense = ParamVec(
+                (0..p).map(|_| (rng.uniform() as f32) * 2.0 - 1.0).collect(),
+            );
+            let body = Message::TrainReply {
+                round: 0,
+                client_index: i as u32,
+                num_samples: 1 + rng.below(64) as u32,
+                sum_loss: rng.uniform(),
+                correct: rng.below(64) as f64,
+                compute_ms: rng.uniform() * 10.0,
+                update: Update::Dense(dense),
+            }
+            .encode();
+            let mut frame = Vec::with_capacity(4 + body.len());
+            frame.extend_from_slice(&(body.len() as u32).to_le_bytes());
+            frame.extend_from_slice(&body);
+            frame
+        })
+        .collect()
+}
+
+/// The per-upload ingest work both modes share: strip the length
+/// prefix, decode the message. Bench frames are self-generated, so a
+/// decode failure is a bug in the bench, not a gate.
+fn decode_frame(frame: &[u8]) -> Message {
+    let len = u32::from_le_bytes(frame[..4].try_into().unwrap()) as usize;
+    assert_eq!(len, frame.len() - 4, "bench frame length prefix");
+    Message::decode(&frame[4..]).expect("bench frame decodes")
+}
+
+/// Process peak RSS in kB from /proc/self/status (Linux); 0 elsewhere.
+fn peak_rss_kb() -> u64 {
+    std::fs::read_to_string("/proc/self/status")
+        .ok()
+        .and_then(|s| {
+            s.lines()
+                .find(|l| l.starts_with("VmHWM:"))
+                .and_then(|l| l.split_whitespace().nth(1))
+                .and_then(|v| v.parse().ok())
+        })
+        .unwrap_or(0)
+}
+
+struct PhaseStats {
+    wall_ms: f64,
+    updates_per_sec: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+    max_queue_depth: usize,
+    peak_rss_kb: u64,
+}
+
+impl PhaseStats {
+    fn json(&self) -> Json {
+        obj([
+            ("wall_ms", Json::Num(self.wall_ms)),
+            ("updates_per_sec", Json::Num(self.updates_per_sec)),
+            ("ingest_p50_ms", Json::Num(self.p50_ms)),
+            ("ingest_p99_ms", Json::Num(self.p99_ms)),
+            ("max_queue_depth", Json::Num(self.max_queue_depth as f64)),
+            ("peak_rss_kb", Json::Num(self.peak_rss_kb as f64)),
+        ])
+    }
+}
+
+/// Run one ingest mode end to end: producers decode frames and push
+/// into the bounded queue, the consumer drains it and times every
+/// arrival gap into `remote.ingest_ms` — the same histogram the remote
+/// coordinator's gather loop feeds.
+fn run_phase(
+    mode: &str,
+    frames: &[Vec<u8>],
+    queue_cap: usize,
+    workers: usize,
+) -> easyfl::Result<PhaseStats> {
+    let n = frames.len();
+    let tel = Telemetry::new(Arc::new(RealClock::default()), Arc::new(NullSink), None);
+    let sw_total = Stopwatch::start();
+    let (tx, rx) = reactor::bounded::<(usize, Message)>(queue_cap);
+
+    let (ingested, max_depth) = std::thread::scope(
+        |s| -> easyfl::Result<(usize, usize)> {
+            let consumer = s.spawn({
+                let tel = tel.clone();
+                move || {
+                    let mut count = 0usize;
+                    let mut sw = Stopwatch::start();
+                    while rx.recv().is_some() {
+                        tel.observe_ms("remote.ingest_ms", sw.elapsed_ms());
+                        sw = Stopwatch::start();
+                        count += 1;
+                    }
+                    (count, rx.max_depth())
+                }
+            });
+
+            match mode {
+                // Legacy shape: every uploader gets its own OS thread
+                // for the lifetime of its one upload. Small explicit
+                // stacks keep 10k concurrent spawns honest about the
+                // scheduling cost without charging for untouched
+                // default stack reservations.
+                "threads" => {
+                    let mut handles = Vec::with_capacity(n);
+                    for (idx, frame) in frames.iter().enumerate() {
+                        let tx = tx.clone();
+                        let h = std::thread::Builder::new()
+                            .stack_size(64 * 1024)
+                            .spawn_scoped(s, move || {
+                                let _ = tx.send((idx, decode_frame(frame)));
+                            })
+                            .map_err(|e| {
+                                easyfl::Error::Runtime(format!(
+                                    "spawn uploader thread {idx}: {e}"
+                                ))
+                            })?;
+                        handles.push(h);
+                    }
+                    drop(tx);
+                    for h in handles {
+                        h.join().expect("uploader thread panicked");
+                    }
+                }
+                // Reactor shape: a fixed pool shards the same uploads,
+                // exactly how `gather_reactor` splits its connections
+                // across poll loops.
+                _ => {
+                    let workers = workers.max(1).min(n.max(1));
+                    for w in 0..workers {
+                        let tx = tx.clone();
+                        s.spawn(move || {
+                            for idx in (w..n).step_by(workers) {
+                                if tx.send((idx, decode_frame(&frames[idx]))).is_err() {
+                                    return;
+                                }
+                            }
+                        });
+                    }
+                    drop(tx);
+                }
+            }
+
+            Ok(consumer.join().expect("consumer thread panicked"))
+        },
+    )?;
+
+    let wall_ms = sw_total.elapsed_ms();
+    if ingested != n {
+        return Err(easyfl::Error::Runtime(format!(
+            "{mode}: ingested {ingested} of {n} uploads — the bounded queue must never drop"
+        )));
+    }
+    if max_depth > queue_cap {
+        return Err(easyfl::Error::Runtime(format!(
+            "{mode}: queue depth reached {max_depth}, over the {queue_cap} bound"
+        )));
+    }
+    let (p50, _p95, p99) =
+        tel.quantiles_ms("remote.ingest_ms").unwrap_or((0.0, 0.0, 0.0));
+    Ok(PhaseStats {
+        wall_ms,
+        updates_per_sec: n as f64 / (wall_ms / 1000.0).max(1e-9),
+        p50_ms: p50,
+        p99_ms: p99,
+        max_queue_depth: max_depth,
+        peak_rss_kb: peak_rss_kb(),
+    })
+}
+
+fn run() -> easyfl::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let opts = opts();
+    let a = Args::parse(&argv, &opts)?;
+    if a.has_flag("help") {
+        println!(
+            "{}",
+            usage(
+                "ingest_bench",
+                "Reactor vs thread-per-connection ingest benchmark.",
+                &opts
+            )
+        );
+        return Ok(());
+    }
+    let n = a.get_usize("uploaders")?;
+    let p = a.get_usize("params")?;
+    let queue_cap = a.get_usize("queue-cap")?;
+    let seed = a.get_usize("seed")? as u64;
+    let mut workers = a.get_usize("workers")?;
+    if workers == 0 {
+        workers = reactor::default_workers();
+    }
+
+    println!(
+        "ingesting {n} uploads of P={p} through a {queue_cap}-deep bounded queue..."
+    );
+    let frames = gen_frames(n, p, seed);
+    let frame_bytes: usize = frames.iter().map(Vec::len).sum();
+    let baseline_rss_kb = peak_rss_kb();
+
+    // Reactor first: its RSS high-water mark must not inherit the 10k
+    // thread stacks of the baseline.
+    let reactor_stats = run_phase("reactor", &frames, queue_cap, workers)?;
+    println!(
+        "  reactor ({workers} workers): {:>8.1} ms  {:>10.0} updates/s  p99 {:.3} ms  depth ≤ {}",
+        reactor_stats.wall_ms,
+        reactor_stats.updates_per_sec,
+        reactor_stats.p99_ms,
+        reactor_stats.max_queue_depth
+    );
+    let threads_stats = run_phase("threads", &frames, queue_cap, workers)?;
+    println!(
+        "  threads ({n} spawns):     {:>8.1} ms  {:>10.0} updates/s  p99 {:.3} ms  depth ≤ {}",
+        threads_stats.wall_ms,
+        threads_stats.updates_per_sec,
+        threads_stats.p99_ms,
+        threads_stats.max_queue_depth
+    );
+
+    let speedup = reactor_stats.updates_per_sec
+        / threads_stats.updates_per_sec.max(1e-9);
+    let reactor_delta_kb =
+        reactor_stats.peak_rss_kb.saturating_sub(baseline_rss_kb);
+    let threads_delta_kb =
+        threads_stats.peak_rss_kb.saturating_sub(reactor_stats.peak_rss_kb);
+    println!(
+        "  speedup: {speedup:.2}x  (RSS +{reactor_delta_kb} kB reactor vs \
+         +{threads_delta_kb} kB thread-per-upload)"
+    );
+
+    if let Some(path) = a.get("bench-out") {
+        write_bench(
+            path,
+            "ingest_bench",
+            None,
+            obj([
+                ("uploaders", Json::Num(n as f64)),
+                ("param_count", Json::Num(p as f64)),
+                ("queue_cap", Json::Num(queue_cap as f64)),
+                ("workers", Json::Num(workers as f64)),
+                ("frame_bytes", Json::Num(frame_bytes as f64)),
+                ("speedup", Json::Num(speedup)),
+                ("reactor", reactor_stats.json()),
+                ("threads", threads_stats.json()),
+            ]),
+        )?;
+        println!("benchmark written to {path}");
+    }
+
+    if speedup < 1.5 {
+        return Err(easyfl::Error::Runtime(format!(
+            "reactor speedup {speedup:.2}x is under the required 1.5x \
+             ({:.0} vs {:.0} updates/s)",
+            reactor_stats.updates_per_sec, threads_stats.updates_per_sec
+        )));
+    }
+    let budget_ms = a.get_f64("budget-ms")?;
+    let total_ms = reactor_stats.wall_ms + threads_stats.wall_ms;
+    if budget_ms > 0.0 && total_ms > budget_ms {
+        return Err(easyfl::Error::Runtime(format!(
+            "benchmark took {total_ms:.0} ms, over the {budget_ms:.0} ms budget"
+        )));
+    }
+    Ok(())
+}

@@ -25,17 +25,24 @@
 //! (`"mean"`, `"backbone"`, or any custom registration) through
 //! [`crate::flow::ServerFlow::make_aggregator`]. Peak memory is
 //! O(threads · P) instead of O(cohort · P) — except the rank-based
-//! robust reductions, which intrinsically buffer the cohort.
+//! robust reductions, which intrinsically buffer the cohort. For
+//! cohorts where even that buffer is too large, `Config.agg_sketch`
+//! swaps the `"trimmed_mean"` / `"median"` registrations for the
+//! [`sketch`] variants: mergeable per-coordinate quantile sketches
+//! with O(P · cap) memory, bit-identical to the exact path for small
+//! cohorts and within a bounded quantile error above the cap.
 
 pub mod masked;
 pub mod mean;
 pub mod robust;
+pub mod sketch;
 
 pub use masked::SliceMaskedAggregator;
 pub use mean::MeanAggregator;
 pub use robust::{
     CoordinateMedianAggregator, NormClipAggregator, TrimmedMeanAggregator,
 };
+pub use sketch::{SketchMedian, SketchTrimmedMean};
 
 use std::sync::Arc;
 
@@ -95,6 +102,10 @@ pub struct AggContext {
     /// resolves it per edge, falling back to `agg_override` then the
     /// flow default. Flat reductions ignore it.
     pub edge_agg: Option<String>,
+    /// Use the streaming quantile-sketch variants of the rank-based
+    /// robust aggregators (`Config.agg_sketch`): same registry names,
+    /// O(P · cap) memory instead of O(cohort · P).
+    pub agg_sketch: bool,
     /// Per-end trim fraction for `"trimmed_mean"`, in [0, 0.5).
     pub trim_frac: f64,
     /// L2 delta-norm threshold for `"norm_clip"` (> 0 and finite, or 0
@@ -117,6 +128,7 @@ impl AggContext {
             protected_tail: 0,
             agg_override: None,
             edge_agg: None,
+            agg_sketch: false,
             trim_frac: 0.1,
             clip_norm: 10.0,
             tel: Telemetry::off(),
@@ -130,6 +142,7 @@ impl AggContext {
         ctx.threads = cfg.agg_threads;
         ctx.agg_override = cfg.agg.clone();
         ctx.edge_agg = cfg.edge_agg.clone();
+        ctx.agg_sketch = cfg.agg_sketch;
         ctx.trim_frac = cfg.agg_trim_frac;
         ctx.clip_norm = cfg.agg_clip_norm;
         ctx
@@ -251,15 +264,29 @@ pub(crate) fn register_builtins(reg: &mut crate::registry::ComponentRegistry) {
     reg.register_aggregator(
         "trimmed_mean",
         Arc::new(|ctx| {
-            Ok(Box::new(TrimmedMeanAggregator::from_ctx(ctx)?)
-                as Box<dyn Aggregator>)
+            // `agg_sketch` swaps in the streaming quantile-sketch
+            // variant under the same name, so every consumer (server
+            // flow, remote ingest, hierarchy tiers, SimNet) switches
+            // purely from config.
+            if ctx.agg_sketch {
+                Ok(Box::new(SketchTrimmedMean::from_ctx(ctx)?)
+                    as Box<dyn Aggregator>)
+            } else {
+                Ok(Box::new(TrimmedMeanAggregator::from_ctx(ctx)?)
+                    as Box<dyn Aggregator>)
+            }
         }),
     );
     reg.register_aggregator(
         "median",
         Arc::new(|ctx| {
-            Ok(Box::new(CoordinateMedianAggregator::from_ctx(ctx))
-                as Box<dyn Aggregator>)
+            if ctx.agg_sketch {
+                Ok(Box::new(SketchMedian::from_ctx(ctx))
+                    as Box<dyn Aggregator>)
+            } else {
+                Ok(Box::new(CoordinateMedianAggregator::from_ctx(ctx))
+                    as Box<dyn Aggregator>)
+            }
         }),
     );
     reg.register_aggregator(

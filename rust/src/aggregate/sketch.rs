@@ -1,0 +1,731 @@
+//! Streaming per-coordinate quantile sketches: rank-based robust
+//! aggregation without the O(cohort·P) buffer.
+//!
+//! The exact `"trimmed_mean"` / `"median"` aggregators materialize every
+//! decoded update ([`super::robust::UpdateBuffer`]-style rows) because
+//! order statistics need the whole column. At a 1M-client cohort that
+//! buffer is the box's memory ceiling. This module holds the cohort's
+//! *distribution* instead: one mergeable quantile sketch per coordinate
+//! (a uniform-resolution cousin of the t-digest), capped at
+//! [`SKETCH_CAP`] centroids, so memory is O(P · SKETCH_CAP) no matter
+//! how many clients stream in.
+//!
+//! **Exact below the cap, approximate above it.** While at most
+//! [`SKETCH_CAP`] updates have arrived, every centroid is one original
+//! value with its original weight and the reductions replicate the
+//! buffered path *bit-for-bit* — the exact aggregators stay the
+//! equivalence oracle, and SimNet digests are untouched for its small
+//! surrogate cohorts. Past the cap, centroids merge pairwise
+//! (value-adjacent, weighted means) and the trim/median queries run on
+//! cumulative centroid weight. Each compression halves the centroid
+//! count, so a centroid never absorbs more than `cohort / (SKETCH_CAP/2)`
+//! rows of *adjacent order statistics* — the quantile error is bounded
+//! by that mass fraction (≈3% of the cohort at the default cap), which
+//! the tolerance tests pin down against the exact path.
+//!
+//! **Deterministic everywhere.** Compression is sort + pairwise merge —
+//! no RNG, no clocks — and coordinates are independent, so the
+//! chunk-parallel layout (coordinate blocks on scoped threads, wired
+//! through the same [`AggContext`] knobs as the rest of the plane) is
+//! bit-identical to the sequential reduce at any thread count.
+//!
+//! Selected by `Config.agg_sketch = true`: the registry then builds
+//! [`SketchTrimmedMean`] / [`SketchMedian`] under the *same*
+//! `"trimmed_mean"` / `"median"` names, so every consumer — server flow,
+//! remote ingest, SimNet, [`crate::runtime::Engine::accumulator`] — gets
+//! the streaming variant purely from config.
+
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+use crate::flow::Update;
+use crate::model::ParamVec;
+
+use super::mean::{check_weight, MIN_PARALLEL_LEN};
+use super::{AggContext, Aggregator};
+
+/// Centroids kept per coordinate before a pairwise-merge compression.
+/// 64 keeps small cohorts (every SimNet surrogate reduction) in the
+/// exact regime while bounding memory at `P · 64 · 12` bytes.
+pub const SKETCH_CAP: usize = 64;
+
+/// One contiguous coordinate range of the sketch. Blocks are the unit
+/// of parallelism: disjoint `&mut` regions, independently compressible.
+/// Layout is slot-major inside the block (`means[s·width + j]`), so an
+/// incoming row appends with one `extend_from_slice` per block.
+struct Block {
+    width: usize,
+    /// Centroid means; slot s, local coordinate j at `s·width + j`.
+    means: Vec<f32>,
+    /// Matching centroid weights. Per-coordinate (not per-slot): after
+    /// a compression the value-adjacent pairing differs per coordinate.
+    weights: Vec<f64>,
+}
+
+impl Block {
+    /// Pairwise-merge the `len` occupied slots down to `⌈len/2⌉`:
+    /// per coordinate, sort centroids by mean and merge neighbours into
+    /// their weighted mean. Element-wise independent and fully
+    /// deterministic.
+    fn compress(&mut self, len: usize) {
+        let w = self.width;
+        let new_len = len.div_ceil(2);
+        let mut new_means = vec![0.0f32; new_len * w];
+        let mut new_weights = vec![0.0f64; new_len * w];
+        let mut col: Vec<(f32, f64)> = Vec::with_capacity(len);
+        for j in 0..w {
+            col.clear();
+            for s in 0..len {
+                col.push((self.means[s * w + j], self.weights[s * w + j]));
+            }
+            col.sort_by(|a, b| a.0.total_cmp(&b.0));
+            for (t, pair) in col.chunks(2).enumerate() {
+                let (m, wt) = match pair {
+                    [a, b] => {
+                        let wsum = a.1 + b.1;
+                        let m = if wsum > 0.0 {
+                            ((a.0 as f64 * a.1 + b.0 as f64 * b.1) / wsum)
+                                as f32
+                        } else {
+                            // Two zero-weight centroids: keep midpoint.
+                            ((a.0 as f64 + b.0 as f64) / 2.0) as f32
+                        };
+                        (m, wsum)
+                    }
+                    [a] => (a.0, a.1),
+                    _ => unreachable!("chunks(2)"),
+                };
+                new_means[t * w + j] = m;
+                new_weights[t * w + j] = wt;
+            }
+        }
+        self.means = new_means;
+        self.weights = new_weights;
+    }
+}
+
+/// P independent per-coordinate quantile sketches sharing one slot
+/// count (every added row contributes exactly one centroid to every
+/// coordinate, and compression halves all coordinates together).
+pub(crate) struct CoordSketches {
+    p: usize,
+    /// Coordinates per block (last block may be narrower).
+    block_width: usize,
+    blocks: Vec<Block>,
+    /// Occupied slots, uniform across blocks and coordinates.
+    len: usize,
+    /// Rows folded in since construction / the last reset.
+    count: usize,
+    /// Sum of raw row weights, accumulated in arrival order (the same
+    /// f64 order as the exact buffered path).
+    total_weight: f64,
+    /// Whether any lossy pairwise merge has happened: while false, the
+    /// queries replicate the exact buffered reductions bit-for-bit.
+    compressed: bool,
+}
+
+impl CoordSketches {
+    fn from_ctx(ctx: &AggContext) -> CoordSketches {
+        let p = ctx.global.len();
+        let threads =
+            if ctx.use_parallel(p) { ctx.effective_threads() } else { 1 };
+        let nblocks = if threads > 1 && p >= MIN_PARALLEL_LEN {
+            threads.min(p)
+        } else {
+            1
+        };
+        let block_width = p.div_ceil(nblocks.max(1)).max(1);
+        let mut blocks = Vec::new();
+        let mut start = 0;
+        while start < p {
+            let width = block_width.min(p - start);
+            blocks.push(Block {
+                width,
+                means: Vec::new(),
+                weights: Vec::new(),
+            });
+            start += width;
+        }
+        if blocks.is_empty() {
+            blocks.push(Block { width: 0, means: Vec::new(), weights: Vec::new() });
+        }
+        CoordSketches {
+            p,
+            block_width,
+            blocks,
+            len: 0,
+            count: 0,
+            total_weight: 0.0,
+            compressed: false,
+        }
+    }
+
+    /// Fold one dense row in. `row.len()` must equal P (callers
+    /// validate).
+    fn add_row(&mut self, row: &[f32], weight: f64) {
+        debug_assert_eq!(row.len(), self.p);
+        if self.len == SKETCH_CAP {
+            self.compress_all();
+        }
+        let mut start = 0;
+        for block in &mut self.blocks {
+            let end = start + block.width;
+            block.means.extend_from_slice(&row[start..end]);
+            let new_len = block.weights.len() + block.width;
+            block.weights.resize(new_len, weight);
+            start = end;
+        }
+        self.len += 1;
+        self.count += 1;
+        self.total_weight += weight;
+    }
+
+    fn compress_all(&mut self) {
+        let len = self.len;
+        if self.blocks.len() == 1 {
+            self.blocks[0].compress(len);
+        } else {
+            std::thread::scope(|s| {
+                for block in self.blocks.iter_mut() {
+                    s.spawn(move || block.compress(len));
+                }
+            });
+        }
+        self.len = len.div_ceil(2);
+        self.compressed = true;
+    }
+
+    /// Run `reduce(block, slots, dst)` over every block, chunk-parallel
+    /// when the sketch was built with multiple blocks. `reduce` must be
+    /// coordinate-wise independent (it is: every query below reads one
+    /// column at a time), so the block layout never changes the result.
+    fn for_each_block(
+        &self,
+        out: &mut [f32],
+        reduce: &(dyn Fn(&Block, usize, &mut [f32]) + Sync),
+    ) {
+        let len = self.len;
+        if self.blocks.len() == 1 {
+            reduce(&self.blocks[0], len, out);
+            return;
+        }
+        std::thread::scope(|s| {
+            for (block, dst) in
+                self.blocks.iter().zip(out.chunks_mut(self.block_width))
+            {
+                s.spawn(move || reduce(block, len, dst));
+            }
+        });
+    }
+
+    fn check_finish(&self) -> Result<()> {
+        if self.count == 0 {
+            return Err(Error::Runtime("aggregate: empty cohort".into()));
+        }
+        if self.total_weight <= 0.0 {
+            return Err(Error::Runtime("aggregate: zero total weight".into()));
+        }
+        Ok(())
+    }
+
+    fn reset(&mut self) {
+        for block in &mut self.blocks {
+            block.means = Vec::new();
+            block.weights = Vec::new();
+        }
+        self.len = 0;
+        self.count = 0;
+        self.total_weight = 0.0;
+        self.compressed = false;
+    }
+
+    /// Bytes held by the centroid arrays right now — the number the
+    /// memory-win tests and `ingest_bench` account (the exact path's
+    /// equivalent is `cohort · P · 4` for its rows alone).
+    pub(crate) fn approx_bytes(&self) -> usize {
+        self.blocks
+            .iter()
+            .map(|b| b.means.len() * 4 + b.weights.len() * 8)
+            .sum()
+    }
+}
+
+/// Shared `add` for the sketch aggregators: validate, densify
+/// delta-encoded updates transiently (O(P), dropped after the fold —
+/// never retained per-client), and feed the sketch.
+fn add_update(
+    sk: &mut CoordSketches,
+    global: &ParamVec,
+    update: &Update,
+    weight: f64,
+) -> Result<()> {
+    check_weight(weight)?;
+    match update {
+        Update::Dense(x) => {
+            if x.len() != global.len() {
+                return Err(Error::Runtime(format!(
+                    "aggregate: vector of len {} != P {}",
+                    x.len(),
+                    global.len()
+                )));
+            }
+            sk.add_row(&x.0, weight);
+        }
+        Update::SparseTernary { .. } | Update::Encoded(_) => {
+            let dense = update.to_dense(global)?;
+            sk.add_row(&dense.0, weight);
+        }
+        Update::Masked { .. } => {
+            return Err(Error::Runtime(
+                "aggregate: masked update reached the aggregator; a \
+                 server plugin with a decryption stage must unmask \
+                 uploads first"
+                    .into(),
+            ))
+        }
+    }
+    Ok(())
+}
+
+// ------------------------------------------------------- trimmed mean
+
+/// Sketch-backed per-coordinate trimmed weighted mean: the
+/// `"trimmed_mean"` entry when `Config.agg_sketch` is on.
+pub struct SketchTrimmedMean {
+    sk: CoordSketches,
+    global: Arc<ParamVec>,
+    trim_frac: f64,
+}
+
+impl SketchTrimmedMean {
+    /// Build from a construction context; same `trim_frac` validation
+    /// as the exact aggregator.
+    pub fn from_ctx(ctx: &AggContext) -> Result<SketchTrimmedMean> {
+        if !(0.0..0.5).contains(&ctx.trim_frac) {
+            return Err(Error::Config(format!(
+                "trimmed_mean: trim_frac must be in [0, 0.5), got {}",
+                ctx.trim_frac
+            )));
+        }
+        Ok(SketchTrimmedMean {
+            sk: CoordSketches::from_ctx(ctx),
+            global: ctx.global.clone(),
+            trim_frac: ctx.trim_frac,
+        })
+    }
+
+    /// Live centroid-array footprint in bytes (see
+    /// [`CoordSketches::approx_bytes`]).
+    pub fn sketch_bytes(&self) -> usize {
+        self.sk.approx_bytes()
+    }
+}
+
+impl Aggregator for SketchTrimmedMean {
+    fn name(&self) -> &'static str {
+        "trimmed_mean"
+    }
+
+    fn add(&mut self, update: &Update, weight: f64) -> Result<()> {
+        add_update(&mut self.sk, &self.global, update, weight)
+    }
+
+    fn count(&self) -> usize {
+        self.sk.count
+    }
+
+    fn total_weight(&self) -> f64 {
+        self.sk.total_weight
+    }
+
+    fn finish(&mut self) -> Result<ParamVec> {
+        self.sk.check_finish()?;
+        let n = self.sk.count;
+        let k = (self.trim_frac * n as f64).floor() as usize;
+        if 2 * k >= n {
+            return Err(Error::Runtime(format!(
+                "trimmed_mean: trimming {k} from each end empties the \
+                 cohort of {n}"
+            )));
+        }
+        let total = self.sk.total_weight;
+        let compressed = self.sk.compressed;
+        let trim_frac = self.trim_frac;
+        let mut out = vec![0.0f32; self.global.len()];
+        let reduce = |block: &Block, len: usize, dst: &mut [f32]| {
+            let w = block.width;
+            // Exact regime: centroids ARE the original rows (arrival
+            // order preserved) — replicate the buffered reduction
+            // bit-for-bit.
+            if !compressed && k == 0 {
+                for (j, o) in dst.iter_mut().enumerate() {
+                    let mut acc = 0.0f64;
+                    for s in 0..len {
+                        acc += block.weights[s * w + j]
+                            * block.means[s * w + j] as f64;
+                    }
+                    *o = (acc / total) as f32;
+                }
+                return;
+            }
+            let mut col: Vec<(f32, f64)> = Vec::with_capacity(len);
+            for (j, o) in dst.iter_mut().enumerate() {
+                col.clear();
+                for s in 0..len {
+                    col.push((
+                        block.means[s * w + j],
+                        block.weights[s * w + j],
+                    ));
+                }
+                col.sort_by(|a, b| a.0.total_cmp(&b.0));
+                if !compressed {
+                    // Item-count trimming, identical to the exact path.
+                    let kept = &col[k..len - k];
+                    let mut acc = 0.0f64;
+                    let mut wsum = 0.0f64;
+                    for (v, wt) in kept {
+                        acc += wt * *v as f64;
+                        wsum += wt;
+                    }
+                    *o = if wsum > 0.0 {
+                        (acc / wsum) as f32
+                    } else {
+                        (kept.iter().map(|(v, _)| *v as f64).sum::<f64>()
+                            / kept.len() as f64) as f32
+                    };
+                } else {
+                    // Compressed regime: trim by cumulative weight
+                    // *mass* (the weighted generalization of per-end
+                    // item trimming), with boundary centroids counted
+                    // fractionally.
+                    let cut = trim_frac * total;
+                    let lo = cut;
+                    let hi = total - cut;
+                    let mut acc = 0.0f64;
+                    let mut wsum = 0.0f64;
+                    let mut c0 = 0.0f64;
+                    for (v, wt) in &col {
+                        let c1 = c0 + wt;
+                        let overlap = (c1.min(hi) - c0.max(lo)).max(0.0);
+                        if overlap > 0.0 {
+                            acc += *v as f64 * overlap;
+                            wsum += overlap;
+                        }
+                        c0 = c1;
+                    }
+                    *o = if wsum > 0.0 {
+                        (acc / wsum) as f32
+                    } else {
+                        // Degenerate mass distribution: fall back to the
+                        // unweighted centroid mean.
+                        (col.iter().map(|(v, _)| *v as f64).sum::<f64>()
+                            / col.len() as f64) as f32
+                    };
+                }
+            }
+        };
+        self.sk.for_each_block(&mut out, &reduce);
+        self.sk.reset();
+        Ok(ParamVec(out))
+    }
+}
+
+// ------------------------------------------------------------- median
+
+/// Sketch-backed per-coordinate weighted lower median: the `"median"`
+/// entry when `Config.agg_sketch` is on.
+pub struct SketchMedian {
+    sk: CoordSketches,
+    global: Arc<ParamVec>,
+}
+
+impl SketchMedian {
+    pub fn from_ctx(ctx: &AggContext) -> SketchMedian {
+        SketchMedian {
+            sk: CoordSketches::from_ctx(ctx),
+            global: ctx.global.clone(),
+        }
+    }
+
+    /// Live centroid-array footprint in bytes.
+    pub fn sketch_bytes(&self) -> usize {
+        self.sk.approx_bytes()
+    }
+}
+
+impl Aggregator for SketchMedian {
+    fn name(&self) -> &'static str {
+        "median"
+    }
+
+    fn add(&mut self, update: &Update, weight: f64) -> Result<()> {
+        add_update(&mut self.sk, &self.global, update, weight)
+    }
+
+    fn count(&self) -> usize {
+        self.sk.count
+    }
+
+    fn total_weight(&self) -> f64 {
+        self.sk.total_weight
+    }
+
+    fn finish(&mut self) -> Result<ParamVec> {
+        self.sk.check_finish()?;
+        let half = self.sk.total_weight / 2.0;
+        let mut out = vec![0.0f32; self.global.len()];
+        let reduce = |block: &Block, len: usize, dst: &mut [f32]| {
+            let w = block.width;
+            let mut col: Vec<(f32, f64)> = Vec::with_capacity(len);
+            for (j, o) in dst.iter_mut().enumerate() {
+                col.clear();
+                for s in 0..len {
+                    col.push((
+                        block.means[s * w + j],
+                        block.weights[s * w + j],
+                    ));
+                }
+                col.sort_by(|a, b| a.0.total_cmp(&b.0));
+                // Weighted lower median over centroids. In the exact
+                // regime this is precisely the buffered reduction; once
+                // compressed it returns a centroid mean within the
+                // merged neighbourhood of the true median.
+                let mut cum = 0.0f64;
+                let mut pick = col[len - 1].0;
+                for (v, wt) in &col {
+                    cum += wt;
+                    if cum >= half {
+                        pick = *v;
+                        break;
+                    }
+                }
+                *o = pick;
+            }
+        };
+        self.sk.for_each_block(&mut out, &reduce);
+        self.sk.reset();
+        Ok(ParamVec(out))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::robust::{
+        CoordinateMedianAggregator, TrimmedMeanAggregator,
+    };
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn ctx(p: usize) -> AggContext {
+        AggContext::new(Arc::new(ParamVec::zeros(p)))
+    }
+
+    fn random_cohort(
+        seed: u64,
+        n: usize,
+        p: usize,
+    ) -> Vec<(Update, f64)> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| {
+                let row =
+                    (0..p).map(|_| rng.normal() as f32).collect::<Vec<_>>();
+                let weight = 1.0 + rng.below(3) as f64;
+                (Update::Dense(ParamVec(row)), weight)
+            })
+            .collect()
+    }
+
+    fn reduce(
+        agg: &mut dyn Aggregator,
+        cohort: &[(Update, f64)],
+    ) -> ParamVec {
+        for (u, w) in cohort {
+            agg.add(u, *w).unwrap();
+        }
+        agg.finish().unwrap()
+    }
+
+    #[test]
+    fn uncompressed_sketch_is_bit_identical_to_the_exact_path() {
+        // Cohort under SKETCH_CAP: the sketch must replicate the
+        // buffered aggregators exactly, bit for bit.
+        let p = 37;
+        let cohort = random_cohort(11, SKETCH_CAP - 3, p);
+        for trim_frac in [0.0, 0.1, 0.3] {
+            let mut c = ctx(p);
+            c.trim_frac = trim_frac;
+            let exact = reduce(
+                &mut TrimmedMeanAggregator::from_ctx(&c).unwrap(),
+                &cohort,
+            );
+            let sketch =
+                reduce(&mut SketchTrimmedMean::from_ctx(&c).unwrap(), &cohort);
+            for (a, b) in exact.iter().zip(sketch.iter()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "trim {trim_frac}");
+            }
+        }
+        let c = ctx(p);
+        let exact =
+            reduce(&mut CoordinateMedianAggregator::from_ctx(&c), &cohort);
+        let sketch = reduce(&mut SketchMedian::from_ctx(&c), &cohort);
+        for (a, b) in exact.iter().zip(sketch.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn compressed_sketch_tracks_the_exact_path_within_tolerance() {
+        // Cohort far over the cap: lossy regime. Each centroid absorbs
+        // ≤ n/(SKETCH_CAP/2) value-adjacent rows, so the quantile error
+        // is a small mass fraction; for N(0,1) data the reduced values
+        // must stay near the exact ones.
+        let p = 29;
+        let n = 8 * SKETCH_CAP;
+        let cohort = random_cohort(23, n, p);
+        let mut c = ctx(p);
+        c.trim_frac = 0.2;
+        let exact = reduce(
+            &mut TrimmedMeanAggregator::from_ctx(&c).unwrap(),
+            &cohort,
+        );
+        let sketch =
+            reduce(&mut SketchTrimmedMean::from_ctx(&c).unwrap(), &cohort);
+        for (a, b) in exact.iter().zip(sketch.iter()) {
+            assert!(
+                (a - b).abs() < 0.1,
+                "trimmed mean drifted: exact {a}, sketch {b}"
+            );
+        }
+        let exact =
+            reduce(&mut CoordinateMedianAggregator::from_ctx(&c), &cohort);
+        let sketch = reduce(&mut SketchMedian::from_ctx(&c), &cohort);
+        for (a, b) in exact.iter().zip(sketch.iter()) {
+            assert!(
+                (a - b).abs() < 0.2,
+                "median drifted: exact {a}, sketch {b}"
+            );
+        }
+    }
+
+    #[test]
+    fn sketch_results_are_thread_count_invariant() {
+        // Chunk-parallel (multi-block) and sequential layouts must
+        // produce bit-identical results in the compressed regime too.
+        let p = MIN_PARALLEL_LEN;
+        let n = 2 * SKETCH_CAP + 5;
+        let cohort = random_cohort(7, n, p);
+        let mut seq = ctx(p);
+        seq.trim_frac = 0.25;
+        let mut par = seq.clone();
+        par.threads = 4;
+        par.parallel_threshold = 0;
+        par.expect_updates = n;
+        let a =
+            reduce(&mut SketchTrimmedMean::from_ctx(&seq).unwrap(), &cohort);
+        let b =
+            reduce(&mut SketchTrimmedMean::from_ctx(&par).unwrap(), &cohort);
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        let a = reduce(&mut SketchMedian::from_ctx(&seq), &cohort);
+        let b = reduce(&mut SketchMedian::from_ctx(&par), &cohort);
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn sketch_memory_stays_bounded_by_the_cap() {
+        let p = 256;
+        let n = 4096; // 64× the cap
+        let mut agg = SketchMedian::from_ctx(&ctx(p));
+        let mut rng = Rng::new(3);
+        let mut peak = 0usize;
+        for _ in 0..n {
+            let row: Vec<f32> = (0..p).map(|_| rng.normal() as f32).collect();
+            agg.add(&Update::Dense(ParamVec(row)), 1.0).unwrap();
+            peak = peak.max(agg.sketch_bytes());
+        }
+        // Centroid arrays: ≤ SKETCH_CAP slots × (4 + 8) bytes per
+        // coordinate, regardless of cohort size.
+        assert!(peak <= SKETCH_CAP * p * 12, "peak {peak}");
+        // The exact path would hold cohort·P·4 bytes of rows — the
+        // sketch must be an order of magnitude under that here, and the
+        // gap widens linearly with cohort size.
+        assert!(peak * 10 < n * p * 4, "no win over buffering: {peak}");
+        agg.finish().unwrap();
+        assert_eq!(agg.sketch_bytes(), 0, "finish releases the arrays");
+    }
+
+    #[test]
+    fn sketch_aggregators_reset_for_reuse_and_validate_inputs() {
+        let c = ctx(8);
+        let mut agg = SketchTrimmedMean::from_ctx(&c).unwrap();
+        assert!(agg.finish().is_err(), "empty cohort");
+        let cohort = random_cohort(5, 10, 8);
+        let first = reduce(&mut agg, &cohort);
+        // Same instance, same cohort again: identical result.
+        let second = reduce(&mut agg, &cohort);
+        for (a, b) in first.iter().zip(second.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // Wrong length and masked updates are typed errors.
+        assert!(agg
+            .add(&Update::Dense(ParamVec(vec![0.0; 3])), 1.0)
+            .is_err());
+        let masked = Update::Masked {
+            xor_key: 1,
+            inner: Box::new(Update::Dense(ParamVec(vec![0.0; 8]))),
+        };
+        let err = agg.add(&masked, 1.0).unwrap_err().to_string();
+        assert!(err.contains("decryption stage"), "{err}");
+        // Hostile trim fractions are rejected at construction.
+        let mut bad = ctx(8);
+        bad.trim_frac = 0.5;
+        assert!(SketchTrimmedMean::from_ctx(&bad).is_err());
+    }
+
+    #[test]
+    fn sketch_folds_sparse_and_encoded_updates_like_the_exact_path() {
+        let p = 16;
+        let global = Arc::new(ParamVec(
+            (0..p).map(|i| i as f32 * 0.1).collect::<Vec<_>>(),
+        ));
+        let mut c = AggContext::new(global.clone());
+        c.trim_frac = 0.0;
+        let mut rng = Rng::new(17);
+        let mut cohort: Vec<(Update, f64)> = Vec::new();
+        for _ in 0..12 {
+            let new = ParamVec(
+                global
+                    .iter()
+                    .map(|g| g + rng.normal() as f32 * 0.05)
+                    .collect::<Vec<_>>(),
+            );
+            let update = crate::codec::parse("top_k(0.5)")
+                .unwrap()
+                .encode(new, &global)
+                .unwrap();
+            cohort.push((update, 1.0 + rng.below(2) as f64));
+        }
+        cohort.push((
+            Update::SparseTernary {
+                len: p,
+                indices: vec![0, 5],
+                signs: vec![true, false],
+                magnitude: 0.25,
+            },
+            2.0,
+        ));
+        let exact = reduce(
+            &mut TrimmedMeanAggregator::from_ctx(&c).unwrap(),
+            &cohort,
+        );
+        let sketch =
+            reduce(&mut SketchTrimmedMean::from_ctx(&c).unwrap(), &cohort);
+        for (a, b) in exact.iter().zip(sketch.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+}

@@ -166,12 +166,24 @@ pub enum CodecKind {
 }
 
 impl CodecKind {
-    fn tag(self) -> u8 {
+    pub(crate) fn tag(self) -> u8 {
         match self {
             CodecKind::Identity => 0,
             CodecKind::TopK => 1,
             CodecKind::TopKF16 => 2,
             CodecKind::TopKI8 => 3,
+        }
+    }
+
+    /// Inverse of [`CodecKind::tag`] for wire decoding
+    /// ([`crate::comm::protocol`] ships encoded updates by tag).
+    pub(crate) fn from_tag(tag: u8) -> Option<CodecKind> {
+        match tag {
+            0 => Some(CodecKind::Identity),
+            1 => Some(CodecKind::TopK),
+            2 => Some(CodecKind::TopKF16),
+            3 => Some(CodecKind::TopKI8),
+            _ => None,
         }
     }
 
@@ -589,9 +601,34 @@ pub(crate) fn register_builtins(reg: &mut ComponentRegistry) {
 /// with a registered codec — `Config.codec` composes with every
 /// algorithm without per-algorithm wiring. Train, decompress and
 /// encrypt stages pass through to the inner flow untouched.
+///
+/// With `Config.codec_error_feedback` on, the flow additionally keeps a
+/// per-client residual accumulator (EF-SGD style): the coordinates a
+/// lossy `top_k*` encode dropped or quantized away are carried over and
+/// added back into the *next* round's delta before encoding, so no
+/// gradient signal is permanently lost — it is only delayed. Costs one
+/// O(P) `f32` buffer per live client flow; off by default, and when off
+/// the encode path is byte-identical to the residual-free wrapper.
 pub struct CodecClientFlow {
     inner: Box<dyn ClientFlow>,
     codec: Arc<dyn UpdateCodec>,
+    /// `Some` when error feedback is enabled; the vec is empty until the
+    /// first lossy encode populates it.
+    feedback: Option<Vec<f32>>,
+}
+
+impl CodecClientFlow {
+    pub fn new(
+        inner: Box<dyn ClientFlow>,
+        codec: Arc<dyn UpdateCodec>,
+        error_feedback: bool,
+    ) -> CodecClientFlow {
+        CodecClientFlow {
+            inner,
+            codec,
+            feedback: if error_feedback { Some(Vec::new()) } else { None },
+        }
+    }
 }
 
 impl ClientFlow for CodecClientFlow {
@@ -614,10 +651,35 @@ impl ClientFlow for CodecClientFlow {
 
     fn compress(
         &mut self,
-        new_params: ParamVec,
+        mut new_params: ParamVec,
         global: &ParamVec,
     ) -> Result<Update> {
-        self.codec.encode(new_params, global)
+        let Some(residual) = self.feedback.as_mut() else {
+            // Error feedback off: the exact residual-free encode.
+            return self.codec.encode(new_params, global);
+        };
+        // Fold the carried-over encoding error into this round's
+        // parameters before the lossy encode sees them.
+        if residual.len() == new_params.len() {
+            for (p, r) in new_params.iter_mut().zip(residual.iter()) {
+                *p += r;
+            }
+        } else if !residual.is_empty() {
+            // Model size changed under us (new task/flow reuse): the old
+            // residual is meaningless, drop it.
+            residual.clear();
+        }
+        let update = self.codec.encode(new_params.clone(), global)?;
+        // New residual = what we wanted to send minus what the server
+        // will actually reconstruct from the encoded upload.
+        let decoded = update.to_dense(global)?;
+        residual.resize(new_params.len(), 0.0);
+        for ((r, want), got) in
+            residual.iter_mut().zip(new_params.iter()).zip(decoded.iter())
+        {
+            *r = want - got;
+        }
+        Ok(update)
     }
 
     fn encrypt(&mut self, update: Update) -> Result<Update> {
@@ -626,13 +688,16 @@ impl ClientFlow for CodecClientFlow {
 }
 
 /// Wrap a client-flow factory so every produced flow compresses through
-/// `codec` (used by the registry when `Config.codec` is set).
+/// `codec` (used by the registry when `Config.codec` is set);
+/// `error_feedback` (`Config.codec_error_feedback`) threads the
+/// per-client residual accumulator through.
 pub fn wrap_client_factory(
     inner: ClientFlowFactory,
     codec: Arc<dyn UpdateCodec>,
+    error_feedback: bool,
 ) -> ClientFlowFactory {
     Arc::new(move || {
-        Box::new(CodecClientFlow { inner: inner(), codec: codec.clone() })
+        Box::new(CodecClientFlow::new(inner(), codec.clone(), error_feedback))
     })
 }
 
@@ -901,20 +966,93 @@ mod tests {
     #[test]
     fn codec_client_flow_replaces_the_compress_stage() {
         let (new, global) = random_vecs(19, 64);
-        let mut flow = CodecClientFlow {
-            inner: Box::new(crate::flow::DefaultClientFlow),
-            codec: parse("top_k(0.1)").unwrap(),
-        };
+        let mut flow = CodecClientFlow::new(
+            Box::new(crate::flow::DefaultClientFlow),
+            parse("top_k(0.1)").unwrap(),
+            false,
+        );
         let u = flow.compress(new.clone(), &global).unwrap();
         assert!(matches!(u, Update::Encoded(_)));
         assert!(u.wire_bytes() < 64 * 4);
         // Identity wraps to a plain dense upload, byte-for-byte.
-        let mut flow = CodecClientFlow {
-            inner: Box::new(crate::flow::DefaultClientFlow),
-            codec: parse("identity").unwrap(),
-        };
+        let mut flow = CodecClientFlow::new(
+            Box::new(crate::flow::DefaultClientFlow),
+            parse("identity").unwrap(),
+            false,
+        );
         let u = flow.compress(new.clone(), &global).unwrap();
         assert_eq!(u, Update::Dense(new));
+    }
+
+    #[test]
+    fn error_feedback_off_matches_the_plain_codec_byte_for_byte() {
+        let (new, global) = random_vecs(43, 128);
+        let codec = parse("top_k_i8(0.1)").unwrap();
+        let mut flow = CodecClientFlow::new(
+            Box::new(crate::flow::DefaultClientFlow),
+            codec.clone(),
+            false,
+        );
+        // Two consecutive rounds: with feedback disabled the wrapper
+        // must be stateless and identical to calling the codec directly.
+        for _ in 0..2 {
+            let via_flow = flow.compress(new.clone(), &global).unwrap();
+            let direct = codec.encode(new.clone(), &global).unwrap();
+            assert_eq!(via_flow, direct);
+        }
+    }
+
+    #[test]
+    fn error_feedback_recovers_dropped_coordinates_on_the_next_round() {
+        let global = ParamVec::zeros(4);
+        let new = ParamVec(vec![1.0, 0.9, 0.0, 0.0]);
+        // top_k(0.25) over P=4 keeps exactly one coordinate: round one
+        // sends coord 0 (|1.0| > |0.9|) and drops coord 1.
+        let make = |ef: bool| {
+            CodecClientFlow::new(
+                Box::new(crate::flow::DefaultClientFlow),
+                parse("top_k(0.25)").unwrap(),
+                ef,
+            )
+        };
+        let mut with_ef = make(true);
+        let mut without = make(false);
+        for flow in [&mut with_ef, &mut without] {
+            let first = flow.compress(new.clone(), &global).unwrap();
+            let decoded = first.to_dense(&global).unwrap();
+            assert!(decoded[0] != 0.0 && decoded[1] == 0.0);
+        }
+        // Round two, same training outcome. Without feedback coord 0
+        // wins forever and coord 1's signal is lost; with feedback the
+        // carried residual (0.9) doubles coord 1's effective delta to
+        // 1.8, which now outranks coord 0 and ships.
+        let second = without.compress(new.clone(), &global).unwrap();
+        let decoded = second.to_dense(&global).unwrap();
+        assert!(decoded[0] != 0.0 && decoded[1] == 0.0);
+        let second = with_ef.compress(new.clone(), &global).unwrap();
+        let decoded = second.to_dense(&global).unwrap();
+        assert_eq!(decoded[0], 0.0, "satisfied coord 0 yields its slot");
+        assert!(
+            (decoded[1] - 1.8).abs() < 1e-6,
+            "residual-corrected coord 1 ships: {}",
+            decoded[1]
+        );
+    }
+
+    #[test]
+    fn error_feedback_is_inert_under_a_lossless_codec() {
+        let (new, global) = random_vecs(7, 32);
+        let mut flow = CodecClientFlow::new(
+            Box::new(crate::flow::DefaultClientFlow),
+            parse("identity").unwrap(),
+            true,
+        );
+        for _ in 0..3 {
+            // Identity reconstructs exactly, so the residual stays zero
+            // and every round uploads the plain dense params.
+            let u = flow.compress(new.clone(), &global).unwrap();
+            assert_eq!(u, Update::Dense(new.clone()));
+        }
     }
 
     #[test]

@@ -2,17 +2,21 @@
 //! Protocol / RPC / Handler stack that supports the production phase.
 //!
 //! gRPC + protobuf are substituted by a hand-rolled length-prefixed binary
-//! protocol over TCP with thread-per-connection servers (DESIGN.md
-//! substitution #4) — same architecture, zero external dependencies.
-//! Training flow and communication are decoupled exactly as in §V-B: the
-//! remote path reuses [`crate::client::execute_client_round`] verbatim.
+//! protocol over TCP (DESIGN.md substitution #4) — same architecture,
+//! zero external dependencies. Service processes stay
+//! thread-per-connection; the coordinator's high-fan-in ingest runs on
+//! the nonblocking [`reactor`] with bounded backpressure. Training flow
+//! and communication are decoupled exactly as in §V-B: the remote path
+//! reuses [`crate::client::execute_client_round`] verbatim.
 
 pub mod protocol;
+pub mod reactor;
 pub mod registry;
 pub mod remote;
 pub mod rpc;
 
 pub use protocol::Message;
+pub use reactor::MetricsServer;
 pub use registry::{Registor, Registry};
 pub use remote::{ClientService, RemoteCoordinator};
 pub use rpc::{call, RpcServer};

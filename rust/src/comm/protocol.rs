@@ -5,6 +5,7 @@
 //! f32 blocks — a 242k-param model is one ~1 MB memcpy, no per-element
 //! overhead.
 
+use crate::codec::{CodecKind, EncodedUpdate, QuantizedValues};
 use crate::error::{Error, Result};
 use crate::flow::Update;
 use crate::model::ParamVec;
@@ -63,6 +64,13 @@ pub enum Message {
     /// query the tracking service for a task's JSON.
     TrackQuery { task_id: String },
     TrackDump { json: String },
+
+    // ---- live observability (see [`crate::comm::reactor::MetricsServer`])
+    /// any → coordinator metrics endpoint: request the live
+    /// counter/histogram snapshot.
+    MetricsRequest,
+    /// metrics endpoint → caller: the snapshot as JSON text.
+    MetricsReply { json: String },
 }
 
 const T_OK: u8 = 0;
@@ -80,10 +88,17 @@ const T_EVALREP: u8 = 23;
 const T_TRACKROUND: u8 = 30;
 const T_TRACKQUERY: u8 = 31;
 const T_TRACKDUMP: u8 = 32;
+const T_METRICSREQ: u8 = 40;
+const T_METRICSREP: u8 = 41;
 
 const U_DENSE: u8 = 0;
 const U_SPARSE: u8 = 1;
 const U_MASKED: u8 = 2;
+const U_ENCODED: u8 = 3;
+
+const V_F32: u8 = 0;
+const V_F16: u8 = 1;
+const V_I8: u8 = 2;
 
 fn write_update(w: &mut Writer, u: &Update) {
     match u {
@@ -113,6 +128,38 @@ fn write_update(w: &mut Writer, u: &Update) {
             w.u64(*xor_key);
             write_update(w, inner);
         }
+        Update::Encoded(e) => {
+            w.u8(U_ENCODED);
+            w.u8(e.kind.tag());
+            w.u32(e.len as u32);
+            w.u32(e.indices.len() as u32);
+            for i in &e.indices {
+                w.u32(*i);
+            }
+            match &e.values {
+                QuantizedValues::F32(v) => {
+                    w.u8(V_F32);
+                    w.f32s(v);
+                }
+                QuantizedValues::F16(v) => {
+                    w.u8(V_F16);
+                    let mut raw = Vec::with_capacity(v.len() * 2);
+                    for x in v {
+                        raw.extend_from_slice(&x.to_le_bytes());
+                    }
+                    w.bytes(&raw);
+                }
+                QuantizedValues::I8 { quanta, scales } => {
+                    w.u8(V_I8);
+                    let raw: Vec<u8> =
+                        quanta.iter().map(|q| *q as u8).collect();
+                    w.bytes(&raw);
+                    w.f32s(scales);
+                }
+            }
+            w.u32(e.encoded_len as u32);
+            w.u64(e.content_hash);
+        }
     }
 }
 
@@ -137,6 +184,60 @@ fn read_update(r: &mut Reader) -> Result<Update> {
             let xor_key = r.u64()?;
             let inner = Box::new(read_update(r)?);
             Ok(Update::Masked { xor_key, inner })
+        }
+        U_ENCODED => {
+            let kind = r.u8()?;
+            let kind = CodecKind::from_tag(kind).ok_or_else(|| {
+                Error::Comm(format!("unknown codec kind tag {kind}"))
+            })?;
+            let len = r.u32()? as usize;
+            let k = r.u32()? as usize;
+            let mut indices = Vec::with_capacity(k);
+            for _ in 0..k {
+                indices.push(r.u32()?);
+            }
+            let values = match r.u8()? {
+                V_F32 => QuantizedValues::F32(r.f32s()?),
+                V_F16 => {
+                    let raw = r.bytes()?;
+                    if raw.len() % 2 != 0 {
+                        return Err(Error::Comm(
+                            "odd f16 payload length".into(),
+                        ));
+                    }
+                    QuantizedValues::F16(
+                        raw.chunks_exact(2)
+                            .map(|c| u16::from_le_bytes([c[0], c[1]]))
+                            .collect(),
+                    )
+                }
+                V_I8 => {
+                    let raw = r.bytes()?;
+                    QuantizedValues::I8 {
+                        quanta: raw.iter().map(|b| *b as i8).collect(),
+                        scales: r.f32s()?,
+                    }
+                }
+                t => {
+                    return Err(Error::Comm(format!(
+                        "unknown quantized-values tag {t}"
+                    )))
+                }
+            };
+            let encoded_len = r.u32()? as usize;
+            let content_hash = r.u64()?;
+            let e = EncodedUpdate {
+                kind,
+                len,
+                indices,
+                values,
+                encoded_len,
+                content_hash,
+            };
+            // Integrity-check straight off the wire: a flipped bit in
+            // transit surfaces here, not deep inside the aggregator.
+            e.verify()?;
+            Ok(Update::Encoded(e))
         }
         t => Err(Error::Comm(format!("unknown update tag {t}"))),
     }
@@ -236,6 +337,11 @@ impl Message {
                 w.u8(T_TRACKDUMP);
                 w.str(json);
             }
+            Message::MetricsRequest => w.u8(T_METRICSREQ),
+            Message::MetricsReply { json } => {
+                w.u8(T_METRICSREP);
+                w.str(json);
+            }
         }
         w.finish()
     }
@@ -294,6 +400,8 @@ impl Message {
             },
             T_TRACKQUERY => Message::TrackQuery { task_id: r.str()? },
             T_TRACKDUMP => Message::TrackDump { json: r.str()? },
+            T_METRICSREQ => Message::MetricsRequest,
+            T_METRICSREP => Message::MetricsReply { json: r.str()? },
             t => return Err(Error::Comm(format!("unknown message tag {t}"))),
         };
         if r.remaining() != 0 {
@@ -386,6 +494,72 @@ mod tests {
                 xor_key: 42,
                 inner: Box::new(Update::Dense(ParamVec(vec![7.0]))),
             },
+        });
+    }
+
+    #[test]
+    fn encoded_updates_roundtrip_for_every_codec_kind() {
+        // Build genuine codec outputs (hash and quantization included)
+        // rather than hand-rolled structs, so the wire arms are tested
+        // against exactly what clients upload.
+        let mut rng = Rng::new(61);
+        let global = ParamVec(
+            (0..96).map(|_| rng.normal() as f32).collect::<Vec<_>>(),
+        );
+        let new = ParamVec(
+            global
+                .iter()
+                .map(|g| g + rng.normal() as f32 * 0.1)
+                .collect::<Vec<_>>(),
+        );
+        for spec in ["top_k(0.2)", "top_k_f16(0.2)", "top_k_i8(0.2)"] {
+            let update = crate::codec::parse(spec)
+                .unwrap()
+                .encode(new.clone(), &global)
+                .unwrap();
+            assert!(matches!(update, Update::Encoded(_)), "{spec}");
+            roundtrip(&Message::TrainReply {
+                round: 9,
+                client_index: 4,
+                num_samples: 64,
+                sum_loss: 3.5,
+                correct: 41.0,
+                compute_ms: 17.25,
+                update,
+            });
+        }
+    }
+
+    #[test]
+    fn decode_rejects_a_corrupted_encoded_payload() {
+        // Flip one value byte inside an encoded frame: the integrity
+        // hash must catch it at decode time, before the aggregator.
+        let global = ParamVec::zeros(8);
+        let new = ParamVec(vec![1.0, 0.0, 2.0, 0.0, 3.0, 0.0, 4.0, 0.0]);
+        let update = crate::codec::parse("top_k(0.5)")
+            .unwrap()
+            .encode(new, &global)
+            .unwrap();
+        let msg = Message::TrainReply {
+            round: 0,
+            client_index: 0,
+            num_samples: 1,
+            sum_loss: 0.0,
+            correct: 0.0,
+            compute_ms: 0.0,
+            update,
+        };
+        let mut enc = msg.encode();
+        let n = enc.len();
+        enc[n - 16] ^= 0x40; // inside the f32 values, ahead of the hash
+        assert!(Message::decode(&enc).is_err());
+    }
+
+    #[test]
+    fn metrics_messages_roundtrip() {
+        roundtrip(&Message::MetricsRequest);
+        roundtrip(&Message::MetricsReply {
+            json: "{\"counters\":{\"rounds\":3}}".into(),
         });
     }
 

@@ -1,0 +1,786 @@
+//! Nonblocking ingest reactor: the coordinator's high-throughput path.
+//!
+//! The original remote round spawned one OS thread per client for
+//! scatter *and* gather — at 10k concurrent uploaders that is 10k
+//! stacks, 10k scheduler entries, and an unbounded pile of decoded
+//! replies waiting for the aggregator. This module replaces both halves
+//! with fixed-size machinery:
+//!
+//! * [`scatter`] — a worker pool (not per-client threads) connects and
+//!   pushes the round's `TrainRequest`s out.
+//! * [`gather_reactor`] — every reply socket is set nonblocking and
+//!   multiplexed on a fixed pool of poll loops
+//!   (`TcpStream::set_nonblocking` + incremental frame reassembly — no
+//!   tokio, no epoll binding, nothing outside std). Completed frames are
+//!   decoded and handed to the consumer through a **bounded** MPSC
+//!   queue.
+//! * [`bounded`] — the backpressure primitive: when the queue is full,
+//!   senders *park* (condvar wait) instead of dropping or buffering
+//!   without bound, so a slow aggregator throttles ingest all the way
+//!   back into the kernel's TCP windows.
+//! * [`gather_threads`] — the legacy thread-per-connection baseline,
+//!   kept behind `Config.ingest = "threads"` as the equivalence oracle
+//!   and the benchmark baseline (`examples/ingest_bench.rs`).
+//! * [`MetricsServer`] — a live `/metrics` endpoint: the same poll loop,
+//!   one thread, serving [`crate::obs::Telemetry::metrics_snapshot`] as
+//!   JSON to any [`Message::MetricsRequest`].
+
+use std::collections::VecDeque;
+use std::io::{self, Read};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::error::{Error, Result};
+use crate::obs::Telemetry;
+use crate::util::json::Json;
+
+use super::protocol::Message;
+use super::rpc::{write_frame, Connection, MAX_FRAME};
+
+/// Sleep between poll sweeps that made no progress (same cadence as the
+/// RPC accept loop).
+const POLL_IDLE: Duration = Duration::from_millis(1);
+
+// ------------------------------------------------------ bounded queue
+
+struct QueueState<T> {
+    items: VecDeque<T>,
+    senders: usize,
+    receiver_alive: bool,
+    /// High-water mark of `items.len()`, read by the backpressure tests:
+    /// the bound is enforced under the same lock, so this can never
+    /// exceed the capacity.
+    max_depth: usize,
+}
+
+struct QueueShared<T> {
+    state: Mutex<QueueState<T>>,
+    cap: usize,
+    not_full: Condvar,
+    not_empty: Condvar,
+}
+
+/// Producer half of a [`bounded`] channel. Cloneable; `send` parks while
+/// the queue is at capacity.
+pub struct BoundedSender<T> {
+    shared: Arc<QueueShared<T>>,
+}
+
+/// Consumer half of a [`bounded`] channel.
+pub struct BoundedReceiver<T> {
+    shared: Arc<QueueShared<T>>,
+}
+
+/// A bounded MPSC channel whose senders block (park on a condvar) when
+/// the queue holds `cap` items — backpressure, never drops. `cap` is
+/// clamped to at least 1.
+pub fn bounded<T>(cap: usize) -> (BoundedSender<T>, BoundedReceiver<T>) {
+    let shared = Arc::new(QueueShared {
+        state: Mutex::new(QueueState {
+            items: VecDeque::new(),
+            senders: 1,
+            receiver_alive: true,
+            max_depth: 0,
+        }),
+        cap: cap.max(1),
+        not_full: Condvar::new(),
+        not_empty: Condvar::new(),
+    });
+    (
+        BoundedSender { shared: shared.clone() },
+        BoundedReceiver { shared },
+    )
+}
+
+impl<T> BoundedSender<T> {
+    /// Enqueue one item, parking until space frees up. Returns the item
+    /// back if the receiver is gone.
+    pub fn send(&self, item: T) -> std::result::Result<(), T> {
+        let mut state = self.shared.state.lock().unwrap();
+        while state.receiver_alive && state.items.len() >= self.shared.cap {
+            state = self.shared.not_full.wait(state).unwrap();
+        }
+        if !state.receiver_alive {
+            return Err(item);
+        }
+        state.items.push_back(item);
+        state.max_depth = state.max_depth.max(state.items.len());
+        drop(state);
+        self.shared.not_empty.notify_one();
+        Ok(())
+    }
+}
+
+impl<T> Clone for BoundedSender<T> {
+    fn clone(&self) -> Self {
+        self.shared.state.lock().unwrap().senders += 1;
+        BoundedSender { shared: self.shared.clone() }
+    }
+}
+
+impl<T> Drop for BoundedSender<T> {
+    fn drop(&mut self) {
+        let mut state = self.shared.state.lock().unwrap();
+        state.senders -= 1;
+        let last = state.senders == 0;
+        drop(state);
+        if last {
+            // Wake a receiver blocked on an empty queue so it can see EOF.
+            self.shared.not_empty.notify_all();
+        }
+    }
+}
+
+impl<T> BoundedReceiver<T> {
+    /// Dequeue the next item, blocking while the queue is empty and any
+    /// sender is alive. `None` once every sender is gone and the queue
+    /// has drained.
+    pub fn recv(&self) -> Option<T> {
+        let mut state = self.shared.state.lock().unwrap();
+        loop {
+            if let Some(item) = state.items.pop_front() {
+                drop(state);
+                self.shared.not_full.notify_one();
+                return Some(item);
+            }
+            if state.senders == 0 {
+                return None;
+            }
+            state = self.shared.not_empty.wait(state).unwrap();
+        }
+    }
+
+    /// Deepest the queue has ever been (≤ the construction capacity —
+    /// the property the backpressure tests pin down).
+    pub fn max_depth(&self) -> usize {
+        self.shared.state.lock().unwrap().max_depth
+    }
+}
+
+impl<T> Drop for BoundedReceiver<T> {
+    fn drop(&mut self) {
+        self.shared.state.lock().unwrap().receiver_alive = false;
+        // Parked senders must fail out, not wait forever.
+        self.shared.not_full.notify_all();
+    }
+}
+
+// -------------------------------------------------------- scatter pool
+
+/// Default worker count for scatter/gather pools: the machine's
+/// parallelism, capped at 8 (same policy as the aggregation plane).
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(8)
+}
+
+/// Connect to every `(client_index, addr)` and push its message, on a
+/// fixed pool of `workers` threads instead of one thread per client.
+/// Results come back per client (arbitrary order); the open connections
+/// are what the gather half reads the replies from.
+pub fn scatter(
+    tasks: Vec<(usize, String, Message)>,
+    workers: usize,
+) -> Vec<(usize, Result<Connection>)> {
+    let workers = workers.max(1).min(tasks.len().max(1));
+    let mut shards: Vec<Vec<(usize, String, Message)>> =
+        (0..workers).map(|_| Vec::new()).collect();
+    for (i, task) in tasks.into_iter().enumerate() {
+        shards[i % workers].push(task);
+    }
+    std::thread::scope(|s| {
+        let handles: Vec<_> = shards
+            .into_iter()
+            .map(|shard| {
+                s.spawn(move || {
+                    shard
+                        .into_iter()
+                        .map(|(idx, addr, msg)| {
+                            let res = Connection::connect(&addr)
+                                .and_then(|mut c| c.send(&msg).map(|()| c));
+                            (idx, res)
+                        })
+                        .collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().expect("scatter worker panicked"))
+            .collect()
+    })
+}
+
+// ---------------------------------------------------- frame reassembly
+
+/// Per-connection incremental frame parser: survives `WouldBlock` at any
+/// byte boundary, so one poll-loop thread can interleave thousands of
+/// partially-arrived frames.
+struct PendingConn {
+    idx: usize,
+    stream: TcpStream,
+    len_buf: [u8; 4],
+    len_read: usize,
+    body: Vec<u8>,
+    body_read: usize,
+}
+
+enum Poll {
+    /// Frame incomplete; `progress` reports whether any bytes landed.
+    Pending { progress: bool },
+    /// One full frame (or a terminal error) — the connection is done.
+    Ready(Box<Result<Message>>),
+}
+
+impl PendingConn {
+    fn new(idx: usize, stream: TcpStream) -> PendingConn {
+        PendingConn {
+            idx,
+            stream,
+            len_buf: [0; 4],
+            len_read: 0,
+            body: Vec::new(),
+            body_read: 0,
+        }
+    }
+
+    /// Reset to await another frame on the same socket (the metrics
+    /// endpoint serves many requests per connection).
+    fn reset(&mut self) {
+        self.len_read = 0;
+        self.body = Vec::new();
+        self.body_read = 0;
+    }
+
+    fn poll(&mut self) -> Poll {
+        let mut progress = false;
+        loop {
+            if self.len_read < 4 {
+                match self.stream.read(&mut self.len_buf[self.len_read..]) {
+                    Ok(0) => {
+                        return Poll::Ready(Box::new(Err(Error::Comm(
+                            format!(
+                                "client {}: connection closed mid-frame",
+                                self.idx
+                            ),
+                        ))))
+                    }
+                    Ok(n) => {
+                        self.len_read += n;
+                        progress = true;
+                        if self.len_read == 4 {
+                            let len = u32::from_le_bytes(self.len_buf);
+                            if len > MAX_FRAME {
+                                return Poll::Ready(Box::new(Err(
+                                    Error::Comm(format!(
+                                        "oversized frame: {len}"
+                                    )),
+                                )));
+                            }
+                            self.body = vec![0u8; len as usize];
+                            self.body_read = 0;
+                        }
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                        return Poll::Pending { progress }
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::Interrupted => {
+                        continue
+                    }
+                    Err(e) => return Poll::Ready(Box::new(Err(e.into()))),
+                }
+            } else if self.body_read < self.body.len() {
+                match self.stream.read(&mut self.body[self.body_read..]) {
+                    Ok(0) => {
+                        return Poll::Ready(Box::new(Err(Error::Comm(
+                            format!(
+                                "client {}: connection closed mid-frame",
+                                self.idx
+                            ),
+                        ))))
+                    }
+                    Ok(n) => {
+                        self.body_read += n;
+                        progress = true;
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                        return Poll::Pending { progress }
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::Interrupted => {
+                        continue
+                    }
+                    Err(e) => return Poll::Ready(Box::new(Err(e.into()))),
+                }
+            } else {
+                return Poll::Ready(Box::new(Message::decode(&self.body)));
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------- gather plane
+
+/// A running gather: replies stream out of [`Ingest::recv`] as
+/// `(client_index, decoded message)`. Reader threads are joined on drop.
+pub struct Ingest {
+    rx: BoundedReceiver<(usize, Result<Message>)>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl Ingest {
+    /// Next reply, in arrival order. `None` when every connection has
+    /// delivered (or failed).
+    pub fn recv(&self) -> Option<(usize, Result<Message>)> {
+        self.rx.recv()
+    }
+
+    /// High-water mark of the backpressure queue.
+    pub fn max_depth(&self) -> usize {
+        self.rx.max_depth()
+    }
+}
+
+impl Drop for Ingest {
+    fn drop(&mut self) {
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Gather one reply per connection on a fixed pool of nonblocking poll
+/// loops. Connections are sharded round-robin across `workers` threads;
+/// each thread sweeps its shard, reassembling frames incrementally, and
+/// pushes completed replies into a queue of capacity `queue_cap`. When
+/// the consumer stalls, reader threads park in `send` — backpressure,
+/// not drops — and unread bytes stay in the kernel TCP windows.
+pub fn gather_reactor(
+    conns: Vec<(usize, Connection)>,
+    workers: usize,
+    queue_cap: usize,
+) -> Ingest {
+    let workers = workers.max(1).min(conns.len().max(1));
+    let (tx, rx) = bounded(queue_cap);
+    let mut shards: Vec<Vec<PendingConn>> =
+        (0..workers).map(|_| Vec::new()).collect();
+    for (i, (idx, conn)) in conns.into_iter().enumerate() {
+        shards[i % workers].push(PendingConn::new(idx, conn.into_stream()));
+    }
+    let handles = shards
+        .into_iter()
+        .filter(|shard| !shard.is_empty())
+        .enumerate()
+        .map(|(w, shard)| {
+            let tx = tx.clone();
+            std::thread::Builder::new()
+                .name(format!("easyfl-reactor-{w}"))
+                .spawn(move || reactor_worker(shard, tx))
+                .expect("spawn reactor worker")
+        })
+        .collect();
+    drop(tx);
+    Ingest { rx, handles }
+}
+
+fn reactor_worker(
+    mut shard: Vec<PendingConn>,
+    tx: BoundedSender<(usize, Result<Message>)>,
+) {
+    for conn in &shard {
+        conn.stream.set_nonblocking(true).ok();
+    }
+    while !shard.is_empty() {
+        let mut progress = false;
+        let mut i = 0;
+        while i < shard.len() {
+            match shard[i].poll() {
+                Poll::Pending { progress: p } => {
+                    progress |= p;
+                    i += 1;
+                }
+                Poll::Ready(res) => {
+                    progress = true;
+                    let conn = shard.swap_remove(i);
+                    if tx.send((conn.idx, *res)).is_err() {
+                        return; // consumer gone: abandon the round
+                    }
+                }
+            }
+        }
+        if !progress {
+            std::thread::sleep(POLL_IDLE);
+        }
+    }
+}
+
+/// The legacy gather: one blocking reader thread per connection, feeding
+/// the same bounded queue. Selected by `Config.ingest = "threads"`; the
+/// benchmark baseline the reactor is gated against.
+pub fn gather_threads(
+    conns: Vec<(usize, Connection)>,
+    queue_cap: usize,
+) -> Ingest {
+    let (tx, rx) = bounded(queue_cap);
+    let handles = conns
+        .into_iter()
+        .map(|(idx, mut conn)| {
+            let tx = tx.clone();
+            std::thread::Builder::new()
+                .name("easyfl-gather".into())
+                .spawn(move || {
+                    let res = conn.recv();
+                    let _ = tx.send((idx, res));
+                })
+                .expect("spawn gather thread")
+        })
+        .collect();
+    drop(tx);
+    Ingest { rx, handles }
+}
+
+// ---------------------------------------------------- metrics endpoint
+
+/// Live `/metrics` endpoint: one reactor-style poll thread accepting
+/// connections and answering [`Message::MetricsRequest`] with the
+/// current [`Telemetry::metrics_snapshot`] as JSON. The end-of-run
+/// `metrics_out` file is unchanged — this serves the *same* registry
+/// mid-run, so an operator can watch `remote.ingest_ms` move while a
+/// round is still gathering.
+pub struct MetricsServer {
+    addr: String,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl MetricsServer {
+    /// Bind `addr` (port 0 for ephemeral) and serve `tel`'s snapshot.
+    pub fn serve(addr: &str, tel: Telemetry) -> Result<MetricsServer> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| Error::Comm(format!("bind {addr}: {e}")))?;
+        listener.set_nonblocking(true)?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let handle = std::thread::Builder::new()
+            .name(format!("easyfl-metrics-{}", local.port()))
+            .spawn(move || metrics_loop(listener, tel, stop2))
+            .map_err(|e| Error::Comm(format!("spawn metrics loop: {e}")))?;
+        Ok(MetricsServer {
+            addr: local.to_string(),
+            stop,
+            handle: Some(handle),
+        })
+    }
+
+    /// The bound address (resolves ephemeral ports).
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Request shutdown (also done on drop).
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::Relaxed);
+    }
+}
+
+impl Drop for MetricsServer {
+    fn drop(&mut self) {
+        self.shutdown();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn metrics_loop(listener: TcpListener, tel: Telemetry, stop: Arc<AtomicBool>) {
+    let mut conns: Vec<PendingConn> = Vec::new();
+    while !stop.load(Ordering::Relaxed) {
+        let mut progress = false;
+        loop {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    stream.set_nonblocking(true).ok();
+                    stream.set_nodelay(true).ok();
+                    conns.push(PendingConn::new(conns.len(), stream));
+                    progress = true;
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(_) => return,
+            }
+        }
+        let mut i = 0;
+        while i < conns.len() {
+            match conns[i].poll() {
+                Poll::Pending { progress: p } => {
+                    progress |= p;
+                    i += 1;
+                }
+                Poll::Ready(res) => {
+                    progress = true;
+                    match *res {
+                        Ok(msg) => {
+                            let reply = match msg {
+                                Message::MetricsRequest => {
+                                    Message::MetricsReply {
+                                        json: tel
+                                            .metrics_snapshot()
+                                            .to_string(),
+                                    }
+                                }
+                                Message::Ping => Message::Pong,
+                                _ => Message::Err {
+                                    msg: "metrics endpoint: only \
+                                          MetricsRequest/Ping served"
+                                        .into(),
+                                },
+                            };
+                            // Replies are small; write blocking so a
+                            // slow reader cannot corrupt frame state.
+                            let conn = &mut conns[i];
+                            conn.stream.set_nonblocking(false).ok();
+                            let ok =
+                                write_frame(&mut conn.stream, &reply).is_ok();
+                            conn.stream.set_nonblocking(true).ok();
+                            if ok {
+                                conn.reset();
+                                i += 1;
+                            } else {
+                                conns.swap_remove(i);
+                            }
+                        }
+                        Err(_) => {
+                            conns.swap_remove(i); // peer closed or junk
+                        }
+                    }
+                }
+            }
+        }
+        if !progress {
+            std::thread::sleep(POLL_IDLE);
+        }
+    }
+}
+
+/// Fetch and parse a [`MetricsServer`]'s snapshot (the client half the
+/// CLI and tests use).
+pub fn fetch_metrics(addr: &str) -> Result<Json> {
+    match super::rpc::call(addr, &Message::MetricsRequest)? {
+        Message::MetricsReply { json } => Json::parse(&json),
+        Message::Err { msg } => Err(Error::Comm(msg)),
+        other => {
+            Err(Error::Comm(format!("unexpected metrics reply: {other:?}")))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::rpc::RpcServer;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn bounded_queue_is_fifo_and_reports_eof() {
+        let (tx, rx) = bounded(4);
+        for i in 0..3 {
+            tx.send(i).unwrap();
+        }
+        drop(tx);
+        assert_eq!(rx.recv(), Some(0));
+        assert_eq!(rx.recv(), Some(1));
+        assert_eq!(rx.recv(), Some(2));
+        assert_eq!(rx.recv(), None);
+    }
+
+    #[test]
+    fn send_fails_once_the_receiver_is_gone() {
+        let (tx, rx) = bounded(2);
+        tx.send(1).unwrap();
+        drop(rx);
+        assert_eq!(tx.send(2), Err(2));
+    }
+
+    #[test]
+    fn prop_queue_depth_never_exceeds_the_bound() {
+        const CAP: usize = 7;
+        const SENDERS: usize = 8;
+        const PER_SENDER: usize = 200;
+        let (tx, rx) = bounded::<usize>(CAP);
+        let producers: Vec<_> = (0..SENDERS)
+            .map(|s| {
+                let tx = tx.clone();
+                std::thread::spawn(move || {
+                    for i in 0..PER_SENDER {
+                        tx.send(s * PER_SENDER + i).unwrap();
+                    }
+                })
+            })
+            .collect();
+        drop(tx);
+        let mut got = Vec::new();
+        while let Some(v) = rx.recv() {
+            // An occasionally-slow consumer keeps the queue saturated.
+            if got.len() % 64 == 0 {
+                std::thread::yield_now();
+            }
+            got.push(v);
+        }
+        for p in producers {
+            p.join().unwrap();
+        }
+        assert_eq!(got.len(), SENDERS * PER_SENDER, "no drops");
+        got.sort_unstable();
+        assert!(got.iter().enumerate().all(|(i, &v)| i == v), "no dupes");
+        assert!(
+            rx.max_depth() <= CAP,
+            "depth {} exceeded bound {CAP}",
+            rx.max_depth()
+        );
+    }
+
+    #[test]
+    fn stalled_consumer_parks_senders_instead_of_dropping() {
+        let (tx, rx) = bounded(1);
+        let sent = Arc::new(AtomicUsize::new(0));
+        let sent2 = sent.clone();
+        let producer = std::thread::spawn(move || {
+            for i in 0..3 {
+                tx.send(i).unwrap();
+                sent2.fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        // With capacity 1 and nothing consumed, the producer lands the
+        // first item and parks in the second send.
+        std::thread::sleep(Duration::from_millis(60));
+        assert_eq!(sent.load(Ordering::SeqCst), 1, "producer not parked");
+        let mut got = Vec::new();
+        while let Some(v) = rx.recv() {
+            got.push(v);
+        }
+        producer.join().unwrap();
+        assert_eq!(got, vec![0, 1, 2], "every parked item arrived in order");
+        assert_eq!(rx.max_depth(), 1);
+    }
+
+    /// Open `n` echo connections with a distinct pending reply on each.
+    fn pending_replies(addr: &str, n: usize) -> Vec<(usize, Connection)> {
+        (0..n)
+            .map(|i| {
+                let mut conn = Connection::connect(addr).unwrap();
+                conn.send(&Message::Err { msg: format!("reply-{i}") })
+                    .unwrap();
+                (i, conn)
+            })
+            .collect()
+    }
+
+    fn drain_sorted(ingest: Ingest) -> Vec<(usize, Vec<u8>)> {
+        let mut out = Vec::new();
+        while let Some((idx, res)) = ingest.recv() {
+            out.push((idx, res.unwrap().encode()));
+        }
+        out.sort_by_key(|(idx, _)| *idx);
+        out
+    }
+
+    #[test]
+    fn reactor_gather_is_byte_identical_to_thread_per_connection() {
+        let server =
+            RpcServer::serve("127.0.0.1:0", Arc::new(|msg: Message| msg))
+                .unwrap();
+        let addr = server.addr().to_string();
+        const N: usize = 32;
+        let via_reactor =
+            drain_sorted(gather_reactor(pending_replies(&addr, N), 3, 8));
+        let via_threads =
+            drain_sorted(gather_threads(pending_replies(&addr, N), 8));
+        assert_eq!(via_reactor.len(), N);
+        assert_eq!(via_reactor, via_threads);
+        for (i, (idx, bytes)) in via_reactor.iter().enumerate() {
+            assert_eq!(*idx, i);
+            assert_eq!(
+                Message::decode(bytes).unwrap(),
+                Message::Err { msg: format!("reply-{i}") }
+            );
+        }
+    }
+
+    #[test]
+    fn reactor_backpressure_bounds_the_queue_under_a_slow_consumer() {
+        let server =
+            RpcServer::serve("127.0.0.1:0", Arc::new(|msg: Message| msg))
+                .unwrap();
+        let addr = server.addr().to_string();
+        const N: usize = 24;
+        const CAP: usize = 2;
+        let ingest = gather_reactor(pending_replies(&addr, N), 4, CAP);
+        let mut seen = 0;
+        while let Some((_, res)) = ingest.recv() {
+            res.unwrap();
+            seen += 1;
+            std::thread::sleep(Duration::from_millis(2)); // stall
+        }
+        assert_eq!(seen, N, "backpressure must not drop replies");
+        assert!(ingest.max_depth() <= CAP);
+    }
+
+    #[test]
+    fn reactor_surfaces_connection_errors_per_client() {
+        let server =
+            RpcServer::serve("127.0.0.1:0", Arc::new(|msg: Message| msg))
+                .unwrap();
+        let addr = server.addr().to_string();
+        drop(server); // replies will never come; sockets close
+        std::thread::sleep(Duration::from_millis(30));
+        let conns: Vec<(usize, Connection)> =
+            match Connection::connect(&addr) {
+                Ok(conn) => vec![(7, conn)],
+                Err(_) => return, // connect refused outright: fine too
+            };
+        let ingest = gather_reactor(conns, 1, 4);
+        if let Some((idx, res)) = ingest.recv() {
+            assert_eq!(idx, 7);
+            assert!(res.is_err());
+        }
+        assert!(ingest.recv().is_none());
+    }
+
+    #[test]
+    fn metrics_endpoint_serves_the_live_snapshot() {
+        let clock = Arc::new(crate::util::clock::VirtualClock::new());
+        let tel =
+            Telemetry::new(clock, Arc::new(crate::obs::NullSink), None);
+        tel.counter("remote.rounds", 3);
+        tel.observe_ms("remote.ingest_ms", 12.0);
+        let server = MetricsServer::serve("127.0.0.1:0", tel.clone()).unwrap();
+        let snap = fetch_metrics(server.addr()).unwrap();
+        assert_eq!(
+            snap.get("counters").get("remote.rounds").as_usize(),
+            Some(3)
+        );
+        // The endpoint is live: a later bump shows in the next fetch,
+        // over a fresh connection against the same poll loop.
+        tel.counter("remote.rounds", 2);
+        let snap = fetch_metrics(server.addr()).unwrap();
+        assert_eq!(
+            snap.get("counters").get("remote.rounds").as_usize(),
+            Some(5)
+        );
+        // Non-metrics requests get a typed refusal, and Ping pongs.
+        let reply = crate::comm::rpc::call(
+            server.addr(),
+            &Message::TrackQuery { task_id: "t".into() },
+        )
+        .unwrap();
+        assert!(matches!(reply, Message::Err { .. }));
+        assert_eq!(
+            crate::comm::rpc::call(server.addr(), &Message::Ping).unwrap(),
+            Message::Pong
+        );
+    }
+}

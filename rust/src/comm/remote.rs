@@ -11,8 +11,9 @@ use std::time::Duration;
 
 use crate::aggregate::AggContext;
 use crate::comm::protocol::Message;
+use crate::comm::reactor::{self, MetricsServer};
 use crate::comm::registry::Registor;
-use crate::comm::rpc::{Connection, Handler, RpcServer};
+use crate::comm::rpc::{Handler, RpcServer};
 use crate::config::Config;
 use crate::coordinator::ClientFlowFactory;
 use crate::data::registry::DataSource;
@@ -178,6 +179,12 @@ fn handle_client_msg(
 
 // ---------------------------------------------------------------- server
 
+/// Bound on the gather queue between the ingest (reactor or receiver
+/// threads) and the aggregating consumer. Deep enough to ride out decode
+/// hiccups, small enough that a stalled aggregator parks the ingest
+/// within a few hundred frames instead of buffering the cohort.
+const INGEST_QUEUE_CAP: usize = 512;
+
 /// The production-phase coordinator: discovers clients via the registry
 /// and drives scatter/gather rounds over RPC.
 pub struct RemoteCoordinator {
@@ -197,6 +204,8 @@ pub struct RemoteCoordinator {
     /// Ingest observability: per-reply arrival latency is the histogram
     /// the paper's Fig 8 deadline analysis wants, not the round average.
     tel: Telemetry,
+    /// Live `/metrics` endpoint (see [`RemoteCoordinator::serve_metrics`]).
+    metrics_server: Option<MetricsServer>,
 }
 
 impl RemoteCoordinator {
@@ -228,7 +237,21 @@ impl RemoteCoordinator {
             topology,
             test_batches,
             tel,
+            metrics_server: None,
         })
+    }
+
+    /// Serve the live metrics snapshot at `bind` (port 0 allowed):
+    /// a [`Message::MetricsRequest`] over the framed RPC protocol gets
+    /// the current [`crate::obs::MetricsRegistry`] snapshot as JSON —
+    /// mid-run visibility, complementing the end-of-run `metrics_out`
+    /// file. With telemetry off the endpoint serves `null`. Returns the
+    /// bound address; the endpoint lives until the coordinator drops.
+    pub fn serve_metrics(&mut self, bind: &str) -> Result<String> {
+        let server = MetricsServer::serve(bind, self.tel.clone())?;
+        let addr = server.addr().to_string();
+        self.metrics_server = Some(server);
+        Ok(addr)
     }
 
     /// Query the registry; returns the number of live clients.
@@ -275,68 +298,62 @@ impl RemoteCoordinator {
             .tel
             .span_with("remote.round", || vec![("round", round.to_string())]);
 
-        // Scatter (distribution stage): connect + send to every client,
-        // multi-threaded exactly as the paper's §VIII-E measurement
-        // ("the distribution latency increases almost linearly using
-        // multi-threading").
+        // Scatter (distribution stage): connect + send to every client on
+        // a fixed worker pool — the paper's §VIII-E multi-threaded
+        // distribution without a thread per client.
         let scatter_span = self
             .tel
             .span_with("remote.scatter", || vec![("cohort", cohort.len().to_string())]);
         let sw_dist = Stopwatch::start();
-        let (ctx, crx) = channel();
-        let mut scatter = Vec::new();
-        for (client_index, addr) in cohort.clone() {
-            let ctx = ctx.clone();
-            let msg = Message::TrainRequest {
-                round: round as u32,
-                client_index: client_index as u32,
-                model: self.cfg.model.clone(),
-                lr: self.cfg.lr as f32,
-                local_epochs: self.cfg.local_epochs as u32,
-                batch_size: self.cfg.batch_size as u32,
-                data_amount: self.cfg.data_amount as f32,
-                seed: self.cfg.seed ^ ((round as u64) << 32) ^ client_index as u64,
-                // The wire needs an owned copy per connection; the shared
-                // Arc is untouched.
-                params: (*self.params).clone(),
-            };
-            scatter.push(std::thread::spawn(move || {
-                let result = Connection::connect(&addr)
-                    .and_then(|mut conn| conn.send(&msg).map(|()| conn));
-                let _ = ctx.send((client_index, result));
-            }));
-        }
-        drop(ctx);
+        let tasks: Vec<(usize, String, Message)> = cohort
+            .iter()
+            .map(|(client_index, addr)| {
+                let msg = Message::TrainRequest {
+                    round: round as u32,
+                    client_index: *client_index as u32,
+                    model: self.cfg.model.clone(),
+                    lr: self.cfg.lr as f32,
+                    local_epochs: self.cfg.local_epochs as u32,
+                    batch_size: self.cfg.batch_size as u32,
+                    data_amount: self.cfg.data_amount as f32,
+                    seed: self.cfg.seed
+                        ^ ((round as u64) << 32)
+                        ^ *client_index as u64,
+                    // The wire needs an owned copy per connection; the
+                    // shared Arc is untouched.
+                    params: (*self.params).clone(),
+                };
+                (*client_index, addr.clone(), msg)
+            })
+            .collect();
         let mut conns = Vec::with_capacity(cohort.len());
-        for _ in 0..cohort.len() {
-            let (client_index, result) = crx
-                .recv()
-                .map_err(|_| Error::Comm("scatter channel closed".into()))?;
+        for (client_index, result) in
+            reactor::scatter(tasks, reactor::default_workers())
+        {
             conns.push((client_index, result?));
-        }
-        for t in scatter {
-            let _ = t.join();
         }
         let distribution_ms = sw_dist.elapsed_ms();
         self.tel.observe_ms("remote.distribution_ms", distribution_ms);
         drop(scatter_span);
         let downlink = self.params.len() * 4 * cohort.len();
 
-        // Gather: parallel receive threads (clients compute concurrently).
-        // Each reply streams into the round's accumulator the moment it
-        // arrives — the server never buffers the cohort's updates.
+        // Gather: all pending replies multiplexed on the nonblocking
+        // reactor (`Config.ingest = "reactor"`, the default) or on the
+        // legacy thread-per-connection pool (`"threads"`, kept as the
+        // equivalence baseline). Either way each reply streams through a
+        // *bounded* queue into the round's accumulator the moment it
+        // arrives — the server never buffers the cohort's updates, and a
+        // stalled aggregator parks the ingest instead of growing a queue.
         let gather_span = self.tel.span("remote.gather");
         let sw_round = Stopwatch::start();
-        let (tx, rx) = channel();
-        let mut threads = Vec::new();
-        for (client_index, mut conn) in conns {
-            let tx = tx.clone();
-            threads.push(std::thread::spawn(move || {
-                let reply = conn.recv();
-                let _ = tx.send((client_index, reply));
-            }));
-        }
-        drop(tx);
+        let ingest = match self.cfg.ingest.as_str() {
+            "threads" => reactor::gather_threads(conns, INGEST_QUEUE_CAP),
+            _ => reactor::gather_reactor(
+                conns,
+                reactor::default_workers(),
+                INGEST_QUEUE_CAP,
+            ),
+        };
         let ctx = AggContext::from_config(self.params.clone(), &self.cfg)
             .expect_updates(cohort.len())
             .telemetry(self.tel.clone());
@@ -358,12 +375,20 @@ impl RemoteCoordinator {
         // deadline discussion actually needs, and it is too cheap to gate.
         let mut arrivals = Histogram::default();
         for _ in 0..cohort.len() {
-            let (idx, reply) = rx
+            let (idx, reply) = ingest
                 .recv()
-                .map_err(|_| Error::Comm("gather channel closed".into()))?;
+                .ok_or_else(|| Error::Comm("ingest queue closed".into()))?;
             let arrival_ms = sw_round.elapsed_ms();
             arrivals.record_ms(arrival_ms);
             self.tel.observe_ms("remote.ingest_ms", arrival_ms);
+            // Per-client span, thinned by `Config.trace_sample` (keyed on
+            // the client id — a pure hash, so sampling never perturbs
+            // run determinism). Metrics above stay unconditional.
+            let _client_span = self
+                .tel
+                .span_sampled_with("remote.ingest_client", idx as u64, || {
+                    vec![("client", idx.to_string())]
+                });
             match reply? {
                 Message::TrainReply {
                     num_samples: n,
@@ -408,9 +433,10 @@ impl RemoteCoordinator {
                 }
             }
         }
-        for t in threads {
-            let _ = t.join();
-        }
+        // The queue bound held for the whole round; surface the high
+        // water mark so operators can size `INGEST_QUEUE_CAP` pressure.
+        self.tel.counter("remote.ingest_queue_hwm", ingest.max_depth() as u64);
+        drop(ingest); // joins the reactor / receiver threads
         let round_ms = sw_round.elapsed_ms();
         drop(gather_span);
 

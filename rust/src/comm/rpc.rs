@@ -16,7 +16,7 @@ use crate::error::{Error, Result};
 use super::protocol::Message;
 
 /// Maximum frame size (guards against corrupt length prefixes): 256 MiB.
-const MAX_FRAME: u32 = 256 << 20;
+pub(crate) const MAX_FRAME: u32 = 256 << 20;
 
 /// Write one length-prefixed frame.
 pub fn write_frame(stream: &mut TcpStream, msg: &Message) -> Result<()> {
@@ -175,6 +175,12 @@ impl Connection {
     /// Receive the pending response (gather phase).
     pub fn recv(&mut self) -> Result<Message> {
         read_frame(&mut self.stream)
+    }
+
+    /// Surrender the underlying socket (the nonblocking reactor in
+    /// [`crate::comm::reactor`] multiplexes raw streams).
+    pub(crate) fn into_stream(self) -> TcpStream {
+        self.stream
     }
 }
 

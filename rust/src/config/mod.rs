@@ -415,6 +415,14 @@ pub struct Config {
     /// the aggregator tracks a running quantile of observed update
     /// norms (DP-FedAvg style) so the threshold needs no tuning.
     pub agg_clip_norm: f64,
+    /// Run the rank-based robust aggregators ("trimmed_mean", "median")
+    /// on mergeable streaming quantile sketches instead of buffering the
+    /// decoded cohort: O(threads·P + sketch) memory instead of
+    /// O(cohort·P) (see [`crate::aggregate::sketch`]). Off by default —
+    /// the exact buffered path stays the equivalence oracle, and small
+    /// cohorts (≤ the sketch's per-coordinate capacity) are bit-identical
+    /// either way.
+    pub agg_sketch: bool,
     /// Federation topology spec resolved through the component registry:
     /// "flat" | "edges(n)" | "clusters(file)" | any registered name.
     /// Anything non-flat interposes an edge aggregator tier between the
@@ -433,6 +441,18 @@ pub struct Config {
     /// stage and SimNet charges encoded bytes per uplink. `None` keeps
     /// each algorithm's flow (and all trace digests) untouched.
     pub codec: Option<String>,
+    /// Client-side error feedback for lossy codecs: each client keeps
+    /// the residual its codec dropped (coordinates cut by top-k,
+    /// quantization error) and adds it back into the next round's delta
+    /// before encoding, so compression error accumulates toward zero
+    /// instead of being lost. Off by default and digest-neutral when
+    /// off; ignored by lossless codecs ("identity").
+    pub codec_error_feedback: bool,
+    /// Remote coordinator ingest engine: "reactor" (nonblocking poll
+    /// loop multiplexing every client connection on a fixed worker pool
+    /// with bounded backpressure, see [`crate::comm::reactor`]) or
+    /// "threads" (the legacy thread-per-connection baseline).
+    pub ingest: String,
     /// Enable the telemetry plane (spans + latency histograms, see
     /// [`crate::obs`]) even without an output file. Implied by
     /// `trace_out` / `metrics_out`. Off by default: disabled runs pay a
@@ -441,6 +461,14 @@ pub struct Config {
     /// Stream spans as Chrome trace-event JSONL to this path (loadable
     /// in Perfetto / `chrome://tracing`). Implies `telemetry`.
     pub trace_out: Option<PathBuf>,
+    /// Fraction of *sampled* spans actually emitted, in (0, 1]. Applies
+    /// only to high-frequency per-entity spans (per-client ingest,
+    /// per-edge reduces) routed through
+    /// [`crate::obs::Telemetry::span_sampled`]; round-level spans,
+    /// counters and histograms are always recorded. The keep/drop
+    /// decision hashes the entity id (FNV-1a) — no RNG stream is
+    /// touched, so sampled runs keep bit-identical trace digests.
+    pub trace_sample: f64,
     /// Write the final counter/histogram snapshot as JSON to this path
     /// at the end of the run. Implies `telemetry`.
     pub metrics_out: Option<PathBuf>,
@@ -485,11 +513,15 @@ impl Default for Config {
             agg: None,
             agg_trim_frac: 0.1,
             agg_clip_norm: 10.0,
+            agg_sketch: false,
             topology: "flat".into(),
             edge_agg: None,
             codec: None,
+            codec_error_feedback: false,
+            ingest: "reactor".into(),
             telemetry: false,
             trace_out: None,
+            trace_sample: 1.0,
             metrics_out: None,
             sim: SimConfig::default(),
         }
@@ -636,6 +668,9 @@ impl Config {
         if let Some(x) = v.get("agg_clip_norm").as_f64() {
             c.agg_clip_norm = x;
         }
+        if let Some(b) = v.get("agg_sketch").as_bool() {
+            c.agg_sketch = b;
+        }
         if let Some(s) = v.get("topology").as_str() {
             c.topology = s.to_string();
         }
@@ -645,11 +680,20 @@ impl Config {
         if let Some(s) = v.get("codec").as_str() {
             c.codec = Some(s.to_string());
         }
+        if let Some(b) = v.get("codec_error_feedback").as_bool() {
+            c.codec_error_feedback = b;
+        }
+        if let Some(s) = v.get("ingest").as_str() {
+            c.ingest = s.to_string();
+        }
         if let Some(b) = v.get("telemetry").as_bool() {
             c.telemetry = b;
         }
         if let Some(s) = v.get("trace_out").as_str() {
             c.trace_out = Some(PathBuf::from(s));
+        }
+        if let Some(x) = v.get("trace_sample").as_f64() {
+            c.trace_sample = x;
         }
         if let Some(s) = v.get("metrics_out").as_str() {
             c.metrics_out = Some(PathBuf::from(s));
@@ -744,6 +788,19 @@ impl Config {
                         .into(),
                 ));
             }
+        }
+        match self.ingest.as_str() {
+            "reactor" | "threads" => {}
+            other => {
+                return Err(Error::Config(format!(
+                    "ingest must be \"reactor\" or \"threads\", got {other:?}"
+                )));
+            }
+        }
+        if !(self.trace_sample > 0.0 && self.trace_sample <= 1.0) {
+            return Err(Error::Config(
+                "trace_sample must be in (0, 1]".into(),
+            ));
         }
         if let (Some(trace), Some(metrics)) =
             (&self.trace_out, &self.metrics_out)
@@ -917,6 +974,25 @@ mod tests {
     }
 
     #[test]
+    fn ingest_and_sketch_knobs_parse_and_default() {
+        let c = Config::default();
+        assert_eq!(c.ingest, "reactor");
+        assert!(!c.agg_sketch);
+        assert!(!c.codec_error_feedback);
+        assert_eq!(c.trace_sample, 1.0);
+        let j = Json::parse(
+            r#"{"ingest": "threads", "agg_sketch": true,
+                "codec_error_feedback": true, "trace_sample": 0.01}"#,
+        )
+        .unwrap();
+        let c = Config::from_json(&j).unwrap();
+        assert_eq!(c.ingest, "threads");
+        assert!(c.agg_sketch);
+        assert!(c.codec_error_feedback);
+        assert_eq!(c.trace_sample, 0.01);
+    }
+
+    #[test]
     fn zero_clip_norm_selects_adaptive_clipping() {
         let j = Json::parse(r#"{"agg": "norm_clip", "agg_clip_norm": 0}"#)
             .unwrap();
@@ -957,6 +1033,9 @@ mod tests {
             r#"{"codec": " "}"#,
             r#"{"sim": {"cloud_ingest_bytes_per_ms": -1}}"#,
             r#"{"trace_out": "same.json", "metrics_out": "same.json"}"#,
+            r#"{"ingest": "epoll"}"#,
+            r#"{"trace_sample": 0}"#,
+            r#"{"trace_sample": 1.5}"#,
         ];
         for src in cases {
             let j = Json::parse(src).unwrap();

@@ -83,11 +83,15 @@ fn common_opts() -> Vec<Opt> {
         Opt { name: "agg", help: "aggregator override (mean | trimmed_mean | median | norm_clip | ...)", default: None, is_flag: false },
         Opt { name: "agg-trim-frac", help: "trimmed_mean: fraction trimmed per end", default: Some("0.1"), is_flag: false },
         Opt { name: "agg-clip-norm", help: "norm_clip: L2 delta threshold (0 = adaptive quantile)", default: Some("10"), is_flag: false },
+        Opt { name: "agg-sketch", help: "streaming quantile sketches for trimmed_mean/median (O(P) memory)", default: None, is_flag: true },
         Opt { name: "topology", help: "flat | edges(n) | clusters(file)", default: None, is_flag: false },
         Opt { name: "edge-agg", help: "edge-tier aggregator for hierarchical topologies", default: None, is_flag: false },
         Opt { name: "codec", help: "update codec: identity | top_k(f) | top_k_f16(f) | top_k_i8(f)", default: None, is_flag: false },
+        Opt { name: "codec-error-feedback", help: "carry dropped top_k* coordinates into the next round", default: None, is_flag: true },
+        Opt { name: "ingest", help: "gather transport: reactor | threads", default: None, is_flag: false },
         Opt { name: "tracking-dir", help: "persist metrics JSON here", default: None, is_flag: false },
         Opt { name: "telemetry", help: "enable span/histogram telemetry (metrics only)", default: None, is_flag: true },
+        Opt { name: "trace-sample", help: "keep-fraction for per-item spans in (0, 1]", default: None, is_flag: false },
         Opt { name: "trace-out", help: "write Chrome trace-event JSONL here (implies --telemetry)", default: None, is_flag: false },
         Opt { name: "metrics-out", help: "write counter/histogram snapshot JSON here (implies --telemetry)", default: None, is_flag: false },
         Opt { name: "config", help: "JSON config file (flags override it)", default: None, is_flag: false },
@@ -136,6 +140,17 @@ fn parse_config(a: &Args) -> easyfl::Result<Config> {
     }
     cfg.agg_trim_frac = a.get_f64("agg-trim-frac")?;
     cfg.agg_clip_norm = a.get_f64("agg-clip-norm")?;
+    // Flags only ever turn the sketch / error-feedback paths on, so a
+    // --config file's choice survives an absent flag.
+    if a.has_flag("agg-sketch") {
+        cfg.agg_sketch = true;
+    }
+    if a.has_flag("codec-error-feedback") {
+        cfg.codec_error_feedback = true;
+    }
+    if let Some(ingest) = a.get("ingest") {
+        cfg.ingest = ingest.to_string();
+    }
     // No baked-in defaults for the hierarchy knobs: absent flags must
     // not clobber a topology/edge_agg selected in a --config file.
     if let Some(topology) = a.get("topology") {
@@ -162,6 +177,11 @@ fn parse_config(a: &Args) -> easyfl::Result<Config> {
     }
     if let Some(path) = a.get("metrics-out") {
         cfg.metrics_out = Some(path.into());
+    }
+    if let Some(sample) = a.get("trace-sample") {
+        cfg.trace_sample = sample.parse().map_err(|_| {
+            easyfl::Error::Config(format!("bad --trace-sample {sample:?}"))
+        })?;
     }
     cfg.validate()?;
     Ok(cfg)
@@ -547,6 +567,7 @@ fn cmd_server(argv: &[String]) -> easyfl::Result<()> {
         Opt { name: "registry", help: "registry address for discovery", default: Some("127.0.0.1:7400"), is_flag: false },
         Opt { name: "min-clients", help: "wait for at least this many", default: Some("1"), is_flag: false },
         Opt { name: "wait-secs", help: "discovery timeout", default: Some("30"), is_flag: false },
+        Opt { name: "metrics-bind", help: "serve the live metrics snapshot at this address", default: None, is_flag: false },
     ]);
     let a = Args::parse(argv, &opts)?;
     if a.has_flag("help") {
@@ -558,6 +579,10 @@ fn cmd_server(argv: &[String]) -> easyfl::Result<()> {
     let parts = easyfl::registry::with_global(|r| r.algorithm(&cfg))?;
     let tracker = Arc::new(Tracker::new("remote-task"));
     let mut coord = RemoteCoordinator::new(cfg, parts.server_flow, tracker.clone())?;
+    if let Some(bind) = a.get("metrics-bind") {
+        let addr = coord.serve_metrics(bind)?;
+        println!("metrics endpoint on {addr}");
+    }
     let registry = a.get("registry").unwrap().to_string();
     let min_clients = a.get_usize("min-clients")?;
     let deadline = std::time::Instant::now()

@@ -69,8 +69,27 @@ impl TelemetrySink for NullSink {
 struct TelemetryInner {
     clock: Arc<dyn Clock>,
     sink: Arc<dyn TelemetrySink>,
-    metrics: MetricsRegistry,
+    metrics: Arc<MetricsRegistry>,
     metrics_out: Option<PathBuf>,
+    /// Keep-fraction for *sampled* span sites in (0, 1]; 1 = keep all.
+    /// Only [`Telemetry::span_sampled`]/[`Telemetry::span_sampled_with`]
+    /// consult it — unconditional spans and all metrics ignore sampling.
+    sample: f64,
+}
+
+/// FNV-1a 64 over a span name and caller-supplied key: the deterministic
+/// hash behind span sampling. Pure function of its inputs — no RNG state
+/// is touched, so sampling can never perturb SimNet's simulation streams
+/// or trace digests.
+fn sample_hash(name: &str, key: u64) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = OFFSET;
+    for b in name.bytes().chain(key.to_le_bytes()) {
+        h ^= b as u64;
+        h = h.wrapping_mul(PRIME);
+    }
+    h
 }
 
 /// The probe handle every instrumented layer holds. Cheap to clone
@@ -87,7 +106,9 @@ impl Telemetry {
         Telemetry { inner: None }
     }
 
-    /// Live telemetry over an explicit clock and sink.
+    /// Live telemetry over an explicit clock and sink. Sampled span
+    /// sites keep everything; use [`Telemetry::with_sample`] to thin
+    /// them.
     pub fn new(
         clock: Arc<dyn Clock>,
         sink: Arc<dyn TelemetrySink>,
@@ -97,9 +118,29 @@ impl Telemetry {
             inner: Some(Arc::new(TelemetryInner {
                 clock,
                 sink,
-                metrics: MetricsRegistry::new(),
+                metrics: Arc::new(MetricsRegistry::new()),
                 metrics_out,
+                sample: 1.0,
             })),
+        }
+    }
+
+    /// Same handle with the sampled-span keep-fraction set (clamped into
+    /// (0, 1]; [`Config::validate`] rejects out-of-range values earlier
+    /// on the config path). The metrics registry is *shared* with the
+    /// original handle — sampling thins span events, never metrics.
+    pub fn with_sample(self, sample: f64) -> Telemetry {
+        match self.inner {
+            None => Telemetry { inner: None },
+            Some(i) => Telemetry {
+                inner: Some(Arc::new(TelemetryInner {
+                    clock: i.clock.clone(),
+                    sink: i.sink.clone(),
+                    metrics: i.metrics.clone(),
+                    metrics_out: i.metrics_out.clone(),
+                    sample: if sample > 0.0 { sample.min(1.0) } else { 1.0 },
+                })),
+            },
         }
     }
 
@@ -116,7 +157,8 @@ impl Telemetry {
             Some(path) => Arc::new(ChromeTraceSink::create(path)?),
             None => Arc::new(NullSink),
         };
-        Ok(Telemetry::new(clock, sink, cfg.metrics_out.clone()))
+        Ok(Telemetry::new(clock, sink, cfg.metrics_out.clone())
+            .with_sample(cfg.trace_sample))
     }
 
     pub fn enabled(&self) -> bool {
@@ -152,6 +194,50 @@ impl Telemetry {
                 i.sink.span_begin(name, Self::now_us(i), &args());
                 Span { inner: Some((i.clone(), name)) }
             }
+        }
+    }
+
+    /// Whether a sampled span site with this `key` fires under the
+    /// handle's keep-fraction. Deterministic (FNV over name+key): the
+    /// same site/key pair decides the same way every run, and no RNG
+    /// stream is consumed — SimNet digests cannot move.
+    fn sampled(i: &TelemetryInner, name: &str, key: u64) -> bool {
+        if i.sample >= 1.0 {
+            return true;
+        }
+        // Map the hash to [0, 1) and keep the low fraction.
+        let unit = (sample_hash(name, key) >> 11) as f64
+            / (1u64 << 53) as f64;
+        unit < i.sample
+    }
+
+    /// Open an attribute-free span *subject to sampling*: per-item probe
+    /// sites (per-client ingest, per-edge folds) pass a stable `key`
+    /// (client id, cluster index) and only the sampled fraction of keys
+    /// emit events. Metrics at the same site should stay unconditional —
+    /// sampling is for event volume, not measurement.
+    pub fn span_sampled(&self, name: &'static str, key: u64) -> Span {
+        match &self.inner {
+            None => Span { inner: None },
+            Some(i) if !Self::sampled(i, name, key) => Span { inner: None },
+            Some(_) => self.span(name),
+        }
+    }
+
+    /// [`Telemetry::span_sampled`] with lazily-built attributes.
+    pub fn span_sampled_with<F>(
+        &self,
+        name: &'static str,
+        key: u64,
+        args: F,
+    ) -> Span
+    where
+        F: FnOnce() -> Vec<(&'static str, String)>,
+    {
+        match &self.inner {
+            None => Span { inner: None },
+            Some(i) if !Self::sampled(i, name, key) => Span { inner: None },
+            Some(_) => self.span_with(name, args),
         }
     }
 
@@ -300,6 +386,67 @@ mod tests {
         assert!(p50 > 0.0 && p50 <= p95 && p95 <= p99);
         let snap = tel.metrics_snapshot();
         assert_eq!(snap.get("counters").get("bytes").as_usize(), Some(10));
+    }
+
+    struct CountingSink {
+        begins: std::sync::atomic::AtomicUsize,
+    }
+
+    impl TelemetrySink for CountingSink {
+        fn span_begin(
+            &self,
+            _name: &str,
+            _ts_us: u64,
+            _args: &[(&str, String)],
+        ) {
+            self.begins
+                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        }
+        fn span_end(&self, _name: &str, _ts_us: u64) {}
+        fn instant(&self, _name: &str, _ts_us: u64, _args: &[(&str, String)]) {}
+    }
+
+    #[test]
+    fn span_sampling_thins_events_deterministically() {
+        let clock = Arc::new(VirtualClock::new());
+        let sink = Arc::new(CountingSink {
+            begins: std::sync::atomic::AtomicUsize::new(0),
+        });
+        let tel = Telemetry::new(clock, sink.clone(), None).with_sample(0.25);
+        let fire = |tel: &Telemetry| {
+            for key in 0..1000u64 {
+                let _s = tel.span_sampled("remote.ingest_client", key);
+            }
+        };
+        fire(&tel);
+        let first = sink.begins.load(std::sync::atomic::Ordering::Relaxed);
+        // Roughly a quarter of the keys survive a 0.25 keep-fraction.
+        assert!(
+            (150..=350).contains(&first),
+            "kept {first} of 1000 at sample 0.25"
+        );
+        // Same site, same keys: the identical subset fires again — the
+        // decision is a pure hash, not a random draw.
+        fire(&tel);
+        let second = sink.begins.load(std::sync::atomic::Ordering::Relaxed);
+        assert_eq!(second, 2 * first);
+        // Metrics never sample.
+        tel.counter("ingested", 1000);
+        assert_eq!(tel.counter_value("ingested"), 1000);
+    }
+
+    #[test]
+    fn with_sample_shares_the_metrics_registry() {
+        let clock = Arc::new(VirtualClock::new());
+        let tel = Telemetry::new(clock, Arc::new(NullSink), None);
+        let thinned = tel.clone().with_sample(0.01);
+        thinned.counter("bytes", 5);
+        assert_eq!(tel.counter_value("bytes"), 5);
+        // Keep-all handles bypass the hash entirely.
+        let all = tel.clone().with_sample(1.0);
+        let _s = all.span_sampled("x", 42);
+        // Off telemetry stays off through the builder.
+        assert!(!Telemetry::off().with_sample(0.5).enabled());
     }
 
     #[test]

@@ -237,8 +237,11 @@ impl ComponentRegistry {
         };
         if let Some(spec) = &cfg.codec {
             let codec = self.codec(spec)?;
-            parts.client_factory =
-                crate::codec::wrap_client_factory(parts.client_factory, codec);
+            parts.client_factory = crate::codec::wrap_client_factory(
+                parts.client_factory,
+                codec,
+                cfg.codec_error_feedback,
+            );
         }
         Ok(parts)
     }

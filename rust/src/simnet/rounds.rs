@@ -1442,6 +1442,65 @@ mod tests {
     }
 
     #[test]
+    fn sketch_sampling_and_feedback_knobs_keep_digests_bit_identical() {
+        // Regression guard for the ingest/sketch PR's knobs, across the
+        // sync, async and hierarchical timelines with an active
+        // adversary so the robust surrogate reduction actually runs:
+        //
+        // * `agg_sketch` — SimNet cohorts sit under the sketch cap, so
+        //   the sketch aggregators are in their exact regime and draw no
+        //   RNG: every reduced value (and hence the trace) is identical.
+        // * `trace_sample` — sampling decisions are pure hashes, so even
+        //   a heavily thinned traced run cannot shift the simulation.
+        // * `codec_error_feedback` — a client-flow concern; the
+        //   simulator's surrogate timeline must not notice the knob.
+        for (mode, topo) in [
+            (SimMode::Sync, "flat"),
+            (SimMode::Async, "flat"),
+            (SimMode::Sync, "edges(4)"),
+        ] {
+            let mut base = sim_cfg(mode);
+            base.topology = topo.to_string();
+            if matches!(mode, SimMode::Async) {
+                base.sim.async_buffer = 10;
+                base.sim.async_concurrency = 60;
+            }
+            base.agg = Some("trimmed_mean".into());
+            base.sim.adversary = "sign-flip".into();
+            base.sim.adversary_frac = 0.2;
+            let exact = SimNet::from_config(&base).unwrap().run().unwrap();
+
+            let mut sk_cfg = base.clone();
+            sk_cfg.agg_sketch = true;
+            let sketch = SimNet::from_config(&sk_cfg).unwrap().run().unwrap();
+            assert_eq!(
+                exact.trace_digest, sketch.trace_digest,
+                "{mode:?}/{topo}: agg_sketch shifted the event trace"
+            );
+            assert_eq!(exact.makespan_ms, sketch.makespan_ms);
+            assert_eq!(exact.final_accuracy, sketch.final_accuracy);
+
+            let mut ts_cfg = base.clone();
+            ts_cfg.telemetry = true;
+            ts_cfg.trace_sample = 0.25;
+            let sampled = SimNet::from_config(&ts_cfg).unwrap().run().unwrap();
+            assert_eq!(
+                exact.trace_digest, sampled.trace_digest,
+                "{mode:?}/{topo}: trace_sample shifted the event trace"
+            );
+
+            let mut ef_cfg = base.clone();
+            ef_cfg.codec = Some("identity".into());
+            ef_cfg.codec_error_feedback = true;
+            let fed = SimNet::from_config(&ef_cfg).unwrap().run().unwrap();
+            assert_eq!(
+                exact.trace_digest, fed.trace_digest,
+                "{mode:?}/{topo}: codec_error_feedback leaked into the sim"
+            );
+        }
+    }
+
+    #[test]
     fn codec_compression_cuts_comm_bytes_and_makespan() {
         let base = sim_cfg(SimMode::Sync);
         let dense = SimNet::from_config(&base).unwrap().run().unwrap();

@@ -105,6 +105,93 @@ fn remote_matches_local_training_shape() {
 }
 
 #[test]
+fn reactor_rounds_match_thread_per_connection_rounds_byte_for_byte() {
+    if !artifacts_ready() {
+        return;
+    }
+    // Same federation, two transports. Client work is deterministic in
+    // (seed, round, client), and the weighted median is invariant to
+    // arrival order — so the reduced global model must be bit-identical
+    // whether replies arrive through the nonblocking reactor or the
+    // legacy thread-per-connection pool.
+    let mut cfg = quick_cfg();
+    cfg.agg = Some("median".into());
+    let registry = Registry::serve("127.0.0.1:0", Duration::from_secs(10)).unwrap();
+    let _services: Vec<ClientService> = (0..3)
+        .map(|i| {
+            ClientService::start(
+                &cfg,
+                i,
+                "127.0.0.1:0",
+                Some(registry.addr()),
+                fedavg_client_factory(),
+            )
+            .unwrap()
+        })
+        .collect();
+    let run = |ingest: &str| {
+        let mut cfg = cfg.clone();
+        cfg.ingest = ingest.to_string();
+        let tracker = Arc::new(Tracker::new("transport"));
+        let mut coord =
+            RemoteCoordinator::new(cfg, Box::new(DefaultServerFlow), tracker)
+                .unwrap();
+        assert_eq!(coord.discover(registry.addr()).unwrap(), 3);
+        coord.run_round(0).unwrap();
+        coord.params().iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+    };
+    let reactor = run("reactor");
+    let threads = run("threads");
+    assert_eq!(reactor.len(), threads.len());
+    assert_eq!(reactor, threads, "transports diverged");
+}
+
+#[test]
+fn live_metrics_endpoint_serves_ingest_histograms_mid_run() {
+    if !artifacts_ready() {
+        return;
+    }
+    let mut cfg = quick_cfg();
+    cfg.telemetry = true;
+    let registry = Registry::serve("127.0.0.1:0", Duration::from_secs(10)).unwrap();
+    let _services: Vec<ClientService> = (0..3)
+        .map(|i| {
+            ClientService::start(
+                &cfg,
+                i,
+                "127.0.0.1:0",
+                Some(registry.addr()),
+                fedavg_client_factory(),
+            )
+            .unwrap()
+        })
+        .collect();
+    let tracker = Arc::new(Tracker::new("metrics"));
+    let mut coord =
+        RemoteCoordinator::new(cfg, Box::new(DefaultServerFlow), tracker)
+            .unwrap();
+    let addr = coord.serve_metrics("127.0.0.1:0").unwrap();
+    coord.discover(registry.addr()).unwrap();
+
+    // Before any round: live endpoint answers, no ingest observed yet.
+    let snap = easyfl::comm::reactor::fetch_metrics(&addr).unwrap();
+    assert_eq!(
+        *snap.get("histograms").get("remote.ingest_ms"),
+        easyfl::util::json::Json::Null
+    );
+
+    coord.run_round(0).unwrap();
+    // After a round the same endpoint (same coordinator process, no
+    // flush) serves the updated registry: ingest latency histogram and
+    // queue high-water mark included.
+    let snap = easyfl::comm::reactor::fetch_metrics(&addr).unwrap();
+    let ingest = snap.get("histograms").get("remote.ingest_ms");
+    assert_eq!(ingest.get("count").as_usize(), Some(3));
+    assert!(snap.get("counters").get("remote.ingest_queue_hwm").as_usize()
+        >= Some(1));
+}
+
+#[test]
 fn coordinator_fails_cleanly_without_clients() {
     if !artifacts_ready() {
         return;
