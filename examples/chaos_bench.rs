@@ -1,0 +1,180 @@
+//! chaos_bench — crash/recovery smoke at 10k clients.
+//!
+//! Runs the same SimNet scenario three times on one seed: once clean
+//! (the reference trace), once with a `kill_server_at_round(r)` chaos
+//! fault hard-stopping it mid-job, and once resumed from the checkpoint
+//! the kill boundary forced. CI runs the 10k-client variant, asserts
+//! the resumed run reproduces the clean run's trace digest bit-for-bit
+//! (plus makespan and comm-byte equality), and records recovery wall
+//! time to `BENCH_chaos.json`:
+//!
+//! ```text
+//! cargo run --release --example chaos_bench -- \
+//!     --clients 10000 --rounds 20 --kill-at 10 --budget-ms 60000 \
+//!     --bench-out BENCH_chaos.json
+//! ```
+
+use easyfl::config::{Config, DatasetKind};
+use easyfl::runtime::checkpoint;
+use easyfl::util::args::{usage, Args, Opt};
+use easyfl::util::bench::write_bench;
+use easyfl::util::json::{obj, Json};
+use easyfl::SimReport;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn opts() -> Vec<Opt> {
+    vec![
+        Opt { name: "clients", help: "federation population", default: Some("10000"), is_flag: false },
+        Opt { name: "rounds", help: "rounds to simulate", default: Some("20"), is_flag: false },
+        Opt { name: "clients-per-round", help: "aggregation target K", default: Some("100"), is_flag: false },
+        Opt { name: "kill-at", help: "chaos-kill the server after this round", default: Some("10"), is_flag: false },
+        Opt { name: "seed", help: "RNG seed", default: Some("42"), is_flag: false },
+        Opt { name: "budget-ms", help: "fail if recovery wall time exceeds this (0 = off)", default: Some("0"), is_flag: false },
+        Opt { name: "bench-out", help: "write recovery JSON here", default: None, is_flag: false },
+        Opt { name: "help", help: "show help", default: None, is_flag: true },
+    ]
+}
+
+fn base_config(a: &Args) -> easyfl::Result<Config> {
+    let mut cfg = Config::for_dataset(DatasetKind::Femnist);
+    cfg.num_clients = a.get_usize("clients")?;
+    cfg.clients_per_round = a.get_usize("clients-per-round")?;
+    cfg.rounds = a.get_usize("rounds")?;
+    cfg.seed = a.get_usize("seed")? as u64;
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn describe(tag: &str, rep: &SimReport) {
+    println!(
+        "{tag:<9} {:>2} rounds | makespan {:>8.1} s | digest {:016x}{}",
+        rep.rounds,
+        rep.makespan_ms / 1000.0,
+        rep.trace_digest,
+        if rep.cancelled { " | KILLED" } else { "" }
+    );
+}
+
+fn run() -> easyfl::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let opts = opts();
+    let a = Args::parse(&argv, &opts)?;
+    if a.has_flag("help") {
+        println!(
+            "{}",
+            usage(
+                "chaos_bench",
+                "Kill a run mid-job, resume from its checkpoint, assert \
+                 the trace is bit-identical to an uninterrupted run.",
+                &opts
+            )
+        );
+        return Ok(());
+    }
+    let kill_at = a.get_usize("kill-at")?;
+    let ckpt_dir = std::env::temp_dir()
+        .join(format!("easyfl_chaos_bench_{}", std::process::id()));
+
+    let clean_cfg = base_config(&a)?;
+    if kill_at == 0 || kill_at >= clean_cfg.rounds {
+        return Err(easyfl::Error::Config(format!(
+            "--kill-at {kill_at} must be inside (0, rounds)"
+        )));
+    }
+    println!(
+        "simulating {} clients × {} rounds: clean, killed at round \
+         {kill_at}, resumed...",
+        clean_cfg.num_clients, clean_cfg.rounds
+    );
+    let clean = easyfl::simnet::simulate(&clean_cfg)?;
+    describe("clean", &clean);
+
+    // The kill boundary always forces a checkpoint, so the killed run is
+    // resumable even with no periodic cadence configured.
+    let mut killed_cfg = base_config(&a)?;
+    killed_cfg.checkpoint_dir = Some(ckpt_dir.clone());
+    killed_cfg.chaos = vec![format!("kill_server_at_round({kill_at})")];
+    let killed = easyfl::simnet::simulate(&killed_cfg)?;
+    describe("killed", &killed);
+    if !killed.cancelled || killed.rounds != kill_at {
+        return Err(easyfl::Error::Runtime(format!(
+            "the chaos kill did not stop the run at round {kill_at} \
+             (rounds={}, cancelled={})",
+            killed.rounds, killed.cancelled
+        )));
+    }
+
+    let sw = std::time::Instant::now();
+    let mut resume_cfg = base_config(&a)?;
+    resume_cfg.resume_from =
+        Some(checkpoint::checkpoint_path(&ckpt_dir, kill_at));
+    let resumed = easyfl::simnet::simulate(&resume_cfg)?;
+    let recovery_wall_ms = sw.elapsed().as_secs_f64() * 1000.0;
+    describe("resumed", &resumed);
+    std::fs::remove_dir_all(&ckpt_dir).ok();
+
+    if resumed.trace_digest != clean.trace_digest {
+        return Err(easyfl::Error::Runtime(format!(
+            "resumed trace digest {:016x} != uninterrupted {:016x}: \
+             recovery is not exact",
+            resumed.trace_digest, clean.trace_digest
+        )));
+    }
+    if resumed.makespan_ms != clean.makespan_ms
+        || resumed.comm_bytes != clean.comm_bytes
+        || resumed.rounds != clean.rounds
+    {
+        return Err(easyfl::Error::Runtime(format!(
+            "resumed run diverged: makespan {} vs {}, comm {} vs {}, \
+             rounds {} vs {}",
+            resumed.makespan_ms,
+            clean.makespan_ms,
+            resumed.comm_bytes,
+            clean.comm_bytes,
+            resumed.rounds,
+            clean.rounds
+        )));
+    }
+    println!(
+        "recovery exact: digest {:016x} reproduced, {} rounds replayed in \
+         {:.1} s wall",
+        resumed.trace_digest,
+        resumed.rounds - kill_at,
+        recovery_wall_ms / 1000.0
+    );
+
+    if let Some(path) = a.get("bench-out") {
+        write_bench(
+            path,
+            "chaos_bench",
+            Some(&clean_cfg),
+            obj([
+                ("kill_at", Json::Num(kill_at as f64)),
+                ("clean_digest", Json::Str(format!("{:016x}", clean.trace_digest))),
+                ("resumed_digest", Json::Str(format!("{:016x}", resumed.trace_digest))),
+                ("digest_match", Json::Bool(true)),
+                ("faults_injected", Json::Num(killed.faults_injected as f64)),
+                ("clean_wall_ms", Json::Num(clean.wall_ms)),
+                ("killed_wall_ms", Json::Num(killed.wall_ms)),
+                ("recovery_wall_ms", Json::Num(recovery_wall_ms)),
+                ("makespan_ms", Json::Num(clean.makespan_ms)),
+            ]),
+        )?;
+        println!("benchmark written to {path}");
+    }
+
+    let budget_ms = a.get_f64("budget-ms")?;
+    if budget_ms > 0.0 && recovery_wall_ms > budget_ms {
+        return Err(easyfl::Error::Runtime(format!(
+            "recovery wall time {recovery_wall_ms:.0} ms exceeded the \
+             {budget_ms:.0} ms budget"
+        )));
+    }
+    Ok(())
+}

@@ -199,6 +199,11 @@ pub struct SimConfig {
     /// built-in, so flat and pre-existing hierarchical digests are
     /// untouched until a finite rate is configured).
     pub cloud_ingest_bytes_per_ms: f64,
+    /// Registered elastic-membership (churn) model spec applied between
+    /// rounds: "none" | "grow(n)" | "shrink(n)" | "flux(j,l)" | any
+    /// registered name. "none" burns zero RNG and leaves every
+    /// pre-existing trace digest bit-identical.
+    pub churn: String,
 }
 
 impl Default for SimConfig {
@@ -220,6 +225,7 @@ impl Default for SimConfig {
             adversary: "sign-flip".into(),
             adversary_frac: 0.0,
             cloud_ingest_bytes_per_ms: 0.0,
+            churn: "none".into(),
         }
     }
 }
@@ -275,6 +281,9 @@ impl SimConfig {
         if let Some(x) = v.get("cloud_ingest_bytes_per_ms").as_f64() {
             self.cloud_ingest_bytes_per_ms = x;
         }
+        if let Some(s) = v.get("churn").as_str() {
+            self.churn = s.to_string();
+        }
         Ok(())
     }
 
@@ -315,6 +324,13 @@ impl SimConfig {
             return Err(Error::Config(
                 "sim.cloud_ingest_bytes_per_ms must be ≥ 0 (0 = cost \
                  model default)"
+                    .into(),
+            ));
+        }
+        if self.churn.trim().is_empty() {
+            return Err(Error::Config(
+                "sim.churn must name a registered churn model (\"none\" \
+                 disables elastic membership)"
                     .into(),
             ));
         }
@@ -472,6 +488,23 @@ pub struct Config {
     /// Write the final counter/histogram snapshot as JSON to this path
     /// at the end of the run. Implies `telemetry`.
     pub metrics_out: Option<PathBuf>,
+    /// Write a crash-safe round checkpoint every N aggregation
+    /// boundaries (0 = off, the default). Requires `checkpoint_dir`.
+    /// Checkpoint writing draws no RNG and pushes no events, so trace
+    /// digests are bit-identical with checkpointing on or off.
+    pub checkpoint_every: usize,
+    /// Directory receiving `ckpt_round_{n}.bin` files (see
+    /// [`crate::runtime::checkpoint`]). Created on first write.
+    pub checkpoint_dir: Option<PathBuf>,
+    /// Resume a simulation from this checkpoint file instead of round 0.
+    /// The resumed run reproduces the uninterrupted run's trace digest
+    /// bit-for-bit; a tampered or truncated file is an integrity error.
+    pub resume_from: Option<PathBuf>,
+    /// Chaos plane: registered fault specs injected into the run, e.g.
+    /// `kill_server_at_round(10)`, `partition_edge(2)`,
+    /// `drop_frames(0.05)`, `corrupt_checkpoint`. Empty (the default)
+    /// burns zero RNG and leaves every trace digest untouched.
+    pub chaos: Vec<String>,
     /// Discrete-event simulator knobs (the `simulate` subcommand and
     /// [`crate::simnet`] jobs read these; training runs ignore them).
     pub sim: SimConfig,
@@ -523,6 +556,10 @@ impl Default for Config {
             trace_out: None,
             trace_sample: 1.0,
             metrics_out: None,
+            checkpoint_every: 0,
+            checkpoint_dir: None,
+            resume_from: None,
+            chaos: Vec::new(),
             sim: SimConfig::default(),
         }
     }
@@ -698,6 +735,29 @@ impl Config {
         if let Some(s) = v.get("metrics_out").as_str() {
             c.metrics_out = Some(PathBuf::from(s));
         }
+        if let Some(n) = v.get("checkpoint_every").as_usize() {
+            c.checkpoint_every = n;
+        }
+        if let Some(s) = v.get("checkpoint_dir").as_str() {
+            c.checkpoint_dir = Some(PathBuf::from(s));
+        }
+        if let Some(s) = v.get("resume_from").as_str() {
+            c.resume_from = Some(PathBuf::from(s));
+        }
+        if let Some(arr) = v.get("chaos").as_arr() {
+            c.chaos = Vec::with_capacity(arr.len());
+            for item in arr {
+                match item.as_str() {
+                    Some(s) => c.chaos.push(s.to_string()),
+                    None => {
+                        return Err(Error::Config(
+                            "chaos must be an array of fault spec strings"
+                                .into(),
+                        ))
+                    }
+                }
+            }
+        }
         let sim = v.get("sim");
         if sim.as_obj().is_some() {
             c.sim.apply_json(sim)?;
@@ -809,6 +869,18 @@ impl Config {
                 return Err(Error::Config(
                     "trace_out and metrics_out must be different paths"
                         .into(),
+                ));
+            }
+        }
+        if self.checkpoint_every > 0 && self.checkpoint_dir.is_none() {
+            return Err(Error::Config(
+                "checkpoint_every > 0 requires checkpoint_dir".into(),
+            ));
+        }
+        for spec in &self.chaos {
+            if spec.trim().is_empty() {
+                return Err(Error::Config(
+                    "chaos fault specs must be non-empty".into(),
                 ));
             }
         }
@@ -974,6 +1046,35 @@ mod tests {
     }
 
     #[test]
+    fn checkpoint_chaos_churn_knobs_parse_and_default() {
+        let c = Config::default();
+        assert_eq!(c.checkpoint_every, 0);
+        assert!(c.checkpoint_dir.is_none());
+        assert!(c.resume_from.is_none());
+        assert!(c.chaos.is_empty());
+        assert_eq!(c.sim.churn, "none");
+        let j = Json::parse(
+            r#"{"checkpoint_every": 3, "checkpoint_dir": "ckpts",
+                "resume_from": "ckpts/ckpt_round_6.bin",
+                "chaos": ["kill_server_at_round(10)", "drop_frames(0.05)"],
+                "sim": {"churn": "flux(2,1)"}}"#,
+        )
+        .unwrap();
+        let c = Config::from_json(&j).unwrap();
+        assert_eq!(c.checkpoint_every, 3);
+        assert_eq!(c.checkpoint_dir.as_deref(), Some(Path::new("ckpts")));
+        assert_eq!(
+            c.resume_from.as_deref(),
+            Some(Path::new("ckpts/ckpt_round_6.bin"))
+        );
+        assert_eq!(
+            c.chaos,
+            vec!["kill_server_at_round(10)", "drop_frames(0.05)"]
+        );
+        assert_eq!(c.sim.churn, "flux(2,1)");
+    }
+
+    #[test]
     fn ingest_and_sketch_knobs_parse_and_default() {
         let c = Config::default();
         assert_eq!(c.ingest, "reactor");
@@ -1036,6 +1137,10 @@ mod tests {
             r#"{"ingest": "epoll"}"#,
             r#"{"trace_sample": 0}"#,
             r#"{"trace_sample": 1.5}"#,
+            r#"{"checkpoint_every": 3}"#,
+            r#"{"chaos": [" "]}"#,
+            r#"{"chaos": [42]}"#,
+            r#"{"sim": {"churn": " "}}"#,
         ];
         for src in cases {
             let j = Json::parse(src).unwrap();

@@ -238,6 +238,11 @@ fn cmd_simulate(argv: &[String]) -> easyfl::Result<()> {
         Opt { name: "robust-aggs", help: "comma list of aggregators for --robust-sweep", default: Some("mean,trimmed_mean,median,norm_clip"), is_flag: false },
         Opt { name: "adv-fracs", help: "comma list of fractions for --robust-sweep", default: Some("0,0.1,0.3"), is_flag: false },
         Opt { name: "edge-bandwidth", help: "edge→cloud backhaul bytes/ms (0 = cost model)", default: None, is_flag: false },
+        Opt { name: "churn", help: "elastic membership: none | grow(n) | shrink(n) | flux(j,l)", default: None, is_flag: false },
+        Opt { name: "checkpoint-every", help: "write a round-boundary checkpoint every n rounds (0 = off)", default: None, is_flag: false },
+        Opt { name: "checkpoint-dir", help: "directory for round checkpoints", default: None, is_flag: false },
+        Opt { name: "resume-from", help: "resume from this checkpoint file", default: None, is_flag: false },
+        Opt { name: "chaos", help: "comma list of faults: kill_server_at_round(r) | partition_edge(c) | drop_frames(f) | corrupt_checkpoint", default: None, is_flag: false },
         Opt { name: "hier-sweep", help: "run topology × tier-aggregator fan-in grid", default: None, is_flag: true },
         Opt { name: "topologies", help: "comma list of topologies for --hier-sweep", default: Some("flat,edges(4),edges(16)"), is_flag: false },
         Opt { name: "hier-aggs", help: "comma list of tier aggregators for --hier-sweep", default: Some("mean"), is_flag: false },
@@ -275,6 +280,26 @@ fn cmd_simulate(argv: &[String]) -> easyfl::Result<()> {
     cfg.sim.adversary_frac = a.get_f64("adversary-frac")?;
     if a.get("edge-bandwidth").is_some() {
         cfg.sim.edge_bandwidth = a.get_f64("edge-bandwidth")?;
+    }
+    // Crash-safe knobs: absent flags keep a --config file's choice.
+    if let Some(churn) = a.get("churn") {
+        cfg.sim.churn = churn.to_string();
+    }
+    if a.get("checkpoint-every").is_some() {
+        cfg.checkpoint_every = a.get_usize("checkpoint-every")?;
+    }
+    if let Some(dir) = a.get("checkpoint-dir") {
+        cfg.checkpoint_dir = Some(dir.into());
+    }
+    if let Some(path) = a.get("resume-from") {
+        cfg.resume_from = Some(path.into());
+    }
+    if let Some(faults) = a.get("chaos") {
+        cfg.chaos = faults
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect();
     }
     cfg.validate()?;
 
@@ -383,6 +408,13 @@ fn cmd_simulate(argv: &[String]) -> easyfl::Result<()> {
             report.adversary_frac * 100.0,
             report.aggregator,
             report.envelope_deviation
+        );
+    }
+    if report.faults_injected > 0 || report.cancelled {
+        println!(
+            "  chaos     {} fault(s) injected{}",
+            report.faults_injected,
+            if report.cancelled { " | run stopped at a boundary" } else { "" }
         );
     }
     println!("  trace digest {:#018x} (same seed ⇒ same digest)", report.trace_digest);
@@ -694,13 +726,14 @@ fn cmd_info(argv: &[String]) -> easyfl::Result<()> {
     }
     let (algos, datasets, partitions, flows) =
         easyfl::registry::with_global(|r| r.names());
-    let (availability, cost_models, adversaries) =
+    let (availability, cost_models, adversaries, churn) =
         easyfl::registry::with_global(|r| r.sim_names());
     let aggregators =
         easyfl::registry::with_global(|r| r.aggregator_names());
     let topologies =
         easyfl::registry::with_global(|r| r.topology_names());
     let codecs = easyfl::registry::with_global(|r| r.codec_names());
+    let faults = easyfl::registry::with_global(|r| r.fault_names());
     println!("\nregistered components:");
     println!("  algorithms:   {}", algos.join(", "));
     println!("  data sources: {}", datasets.join(", "));
@@ -712,5 +745,7 @@ fn cmd_info(argv: &[String]) -> easyfl::Result<()> {
     println!("  availability: {}", availability.join(", "));
     println!("  cost models:  {}", cost_models.join(", "));
     println!("  adversaries:  {}", adversaries.join(", "));
+    println!("  churn models: {}", churn.join(", "));
+    println!("  faults:       {}", faults.join(", "));
     Ok(())
 }

@@ -368,6 +368,10 @@ impl Platform {
             r.cost_model(&cfg.sim.cost_model, &cfg)?;
             r.adversary(&cfg.sim.adversary)?;
             r.topology(&cfg.topology)?;
+            r.churn(&cfg.sim.churn)?;
+            for spec in &cfg.chaos {
+                r.fault(spec)?;
+            }
             if let Some(spec) = &cfg.codec {
                 r.codec(spec)?;
             }

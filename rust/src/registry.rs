@@ -38,7 +38,9 @@ use crate::data::registry::DataSource;
 use crate::error::{Error, Result};
 use crate::flow::ServerFlow;
 use crate::hierarchy::Topology;
-use crate::simnet::{AdversaryModel, AvailabilityModel, CostModel};
+use crate::simnet::{
+    AdversaryModel, AvailabilityModel, ChurnModel, CostModel, Fault,
+};
 
 /// Everything an algorithm contributes to a session: the server half and
 /// a per-device factory for the client half of the training flow.
@@ -91,6 +93,17 @@ pub type TopologyBuilder =
 pub type CodecBuilder =
     Arc<dyn Fn(&str) -> Result<Arc<dyn UpdateCodec>> + Send + Sync>;
 
+/// Parser closure for an elastic-membership churn spec (receives the
+/// full spec string, e.g. `"flux(2,1)"` for the registered name
+/// `"flux"`).
+pub type ChurnBuilder =
+    Arc<dyn Fn(&str) -> Result<ChurnModel> + Send + Sync>;
+
+/// Parser closure for a chaos-plane fault spec (receives the full spec
+/// string, e.g. `"kill_server_at_round(10)"` for the registered name
+/// `"kill_server_at_round"`).
+pub type FaultBuilder = Arc<dyn Fn(&str) -> Result<Fault> + Send + Sync>;
+
 /// Name → constructor tables for every pluggable component kind.
 #[derive(Default)]
 pub struct ComponentRegistry {
@@ -104,6 +117,8 @@ pub struct ComponentRegistry {
     adversaries: BTreeMap<String, AdversaryBuilder>,
     topologies: BTreeMap<String, TopologyBuilder>,
     codecs: BTreeMap<String, CodecBuilder>,
+    churn: BTreeMap<String, ChurnBuilder>,
+    faults: BTreeMap<String, FaultBuilder>,
 }
 
 fn unknown(kind: &str, name: &str, have: Vec<&String>) -> Error {
@@ -215,6 +230,20 @@ impl ComponentRegistry {
     /// `"top_k_i8"` (selected via `Config.codec`).
     pub fn register_codec(&mut self, name: &str, b: CodecBuilder) {
         self.codecs.insert(name.to_string(), b);
+    }
+
+    /// Register (or replace) an elastic-membership churn model. `name`
+    /// is the spec head: `"flux(2,1)"` resolves the parser registered
+    /// as `"flux"` (selected via `Config.sim.churn`).
+    pub fn register_churn(&mut self, name: &str, b: ChurnBuilder) {
+        self.churn.insert(name.to_string(), b);
+    }
+
+    /// Register (or replace) a chaos-plane fault. `name` is the spec
+    /// head: `"drop_frames(0.05)"` resolves the parser registered as
+    /// `"drop_frames"` (selected via the `Config.chaos` list).
+    pub fn register_fault(&mut self, name: &str, b: FaultBuilder) {
+        self.faults.insert(name.to_string(), b);
     }
 
     // ------------------------------------------------------------ lookup
@@ -404,13 +433,49 @@ impl ComponentRegistry {
         self.codecs.keys().cloned().collect()
     }
 
+    /// Parse an elastic-membership churn spec (`"none"`, `"grow(2)"`,
+    /// `"flux(2,1)"`, any registered name). Lookup mirrors
+    /// [`ComponentRegistry::partition`].
+    pub fn churn(&self, spec: &str) -> Result<ChurnModel> {
+        let head = spec_head(spec);
+        match self.churn.get(head.as_str()) {
+            Some(b) => b(spec),
+            None => Err(unknown(
+                "churn model",
+                spec,
+                self.churn.keys().collect(),
+            )),
+        }
+    }
+
+    /// Parse a chaos-plane fault spec (`"kill_server_at_round(10)"`,
+    /// `"corrupt_checkpoint"`, any registered name). Lookup mirrors
+    /// [`ComponentRegistry::partition`].
+    pub fn fault(&self, spec: &str) -> Result<Fault> {
+        let head = spec_head(spec);
+        match self.faults.get(head.as_str()) {
+            Some(b) => b(spec),
+            None => {
+                Err(unknown("fault", spec, self.faults.keys().collect()))
+            }
+        }
+    }
+
+    /// Registered chaos-plane fault names.
+    pub fn fault_names(&self) -> Vec<String> {
+        self.faults.keys().cloned().collect()
+    }
+
     /// Registered SimNet model names:
-    /// `(availability, cost models, adversaries)`.
-    pub fn sim_names(&self) -> (Vec<String>, Vec<String>, Vec<String>) {
+    /// `(availability, cost models, adversaries, churn models)`.
+    pub fn sim_names(
+        &self,
+    ) -> (Vec<String>, Vec<String>, Vec<String>, Vec<String>) {
         (
             self.availability.keys().cloned().collect(),
             self.cost_models.keys().cloned().collect(),
             self.adversaries.keys().cloned().collect(),
+            self.churn.keys().cloned().collect(),
         )
     }
 }
@@ -526,7 +591,7 @@ mod tests {
     #[test]
     fn builtin_adversaries_resolve_by_name() {
         let reg = ComponentRegistry::with_builtins();
-        let (_, _, adversaries) = reg.sim_names();
+        let (_, _, adversaries, _) = reg.sim_names();
         for a in ["sign-flip", "scaled-noise", "zero-update"] {
             assert!(
                 adversaries.iter().any(|n| n == a),
@@ -543,6 +608,38 @@ mod tests {
         ));
         let err = reg.adversary("gaslight").unwrap_err().to_string();
         assert!(err.contains("sign-flip"), "{err}");
+    }
+
+    #[test]
+    fn builtin_churn_and_faults_resolve_by_spec() {
+        let reg = ComponentRegistry::with_builtins();
+        let (_, _, _, churn) = reg.sim_names();
+        for c in ["none", "grow", "shrink", "flux"] {
+            assert!(churn.iter().any(|n| n == c), "missing churn model {c}");
+        }
+        assert_eq!(reg.churn("none").unwrap(), ChurnModel::None);
+        assert!(matches!(
+            reg.churn("flux(2,1)").unwrap(),
+            ChurnModel::Flux { .. }
+        ));
+        let err = reg.churn("stampede").unwrap_err().to_string();
+        assert!(err.contains("flux"), "{err} should list registered names");
+
+        let faults = reg.fault_names();
+        for f in [
+            "kill_server_at_round",
+            "partition_edge",
+            "drop_frames",
+            "corrupt_checkpoint",
+        ] {
+            assert!(faults.iter().any(|n| n == f), "missing fault {f}");
+        }
+        assert!(matches!(
+            reg.fault("kill_server_at_round(10)").unwrap(),
+            Fault::KillServerAtRound { round: 10 }
+        ));
+        let err = reg.fault("meteor").unwrap_err().to_string();
+        assert!(err.contains("drop_frames"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,389 @@
+//! Round-boundary checkpoint container: the crash-safe operations
+//! substrate (ROADMAP item 4).
+//!
+//! A checkpoint is a flat sequence of u64 words (f64s as raw bits) in a
+//! self-verifying envelope:
+//!
+//! ```text
+//! [ 8-byte magic "EFCKPT01" | N × 8-byte LE words | 8-byte LE FNV-1a ]
+//! ```
+//!
+//! The trailing hash is FNV-1a 64 over the payload bytes — the same
+//! construction the codec plane uses for update integrity — so a
+//! tampered, truncated, or trashed file surfaces as a typed
+//! [`Error::Integrity`] instead of a garbage resume. The word-stream
+//! design keeps the format dependency-free and byte-stable across
+//! platforms (everything is explicit little-endian).
+//!
+//! This module owns the envelope (writer/reader), the config
+//! fingerprint that pins a checkpoint to the run shape that produced it,
+//! and the file-naming scheme. What goes *into* the words is owned by
+//! the engine being checkpointed (see `simnet::rounds`): global params,
+//! aggregator/adaptive-clip state, RNG stream positions, and the full
+//! event-queue/lifecycle state — enough that `resume_from` reproduces
+//! the uninterrupted run's trace digest bit-for-bit.
+
+use std::path::{Path, PathBuf};
+
+use crate::config::Config;
+use crate::error::{Error, Result};
+
+/// Leading file magic: format name + version.
+pub const MAGIC: &[u8; 8] = b"EFCKPT01";
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// FNV-1a 64 over a byte slice (the codec plane's hash, reimplemented
+/// here so `runtime` does not reach into `codec` internals).
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Canonical checkpoint file name for a completed round count.
+pub fn checkpoint_path(dir: &Path, rounds_done: usize) -> PathBuf {
+    dir.join(format!("ckpt_round_{rounds_done}.bin"))
+}
+
+/// Fingerprint of the config facets a checkpoint is only valid for.
+/// Resuming under a different seed, population, engine, or component
+/// stack would silently diverge from the uninterrupted run, so the
+/// reader rejects a fingerprint mismatch as [`Error::Config`] (the file
+/// is intact — it just belongs to another run).
+pub fn config_fingerprint(cfg: &Config) -> u64 {
+    let mut bytes = Vec::with_capacity(128);
+    for word in [
+        cfg.seed,
+        cfg.rounds as u64,
+        cfg.num_clients as u64,
+        cfg.clients_per_round as u64,
+        cfg.num_devices as u64,
+    ] {
+        bytes.extend_from_slice(&word.to_le_bytes());
+    }
+    let partition = cfg.partition.name();
+    for s in [
+        cfg.sim.mode.name(),
+        cfg.allocation.name(),
+        cfg.dataset.name(),
+        partition.as_str(),
+        cfg.sim.availability.as_str(),
+        cfg.sim.cost_model.as_str(),
+        cfg.sim.adversary.as_str(),
+        cfg.topology.as_str(),
+        cfg.sim.churn.as_str(),
+    ] {
+        bytes.extend_from_slice(s.as_bytes());
+        bytes.push(0); // field separator
+    }
+    fnv1a(&bytes)
+}
+
+/// Accumulates checkpoint words and writes the enveloped file.
+#[derive(Default)]
+pub struct CheckpointWriter {
+    words: Vec<u64>,
+}
+
+impl CheckpointWriter {
+    pub fn new() -> CheckpointWriter {
+        CheckpointWriter::default()
+    }
+
+    pub fn push_u64(&mut self, v: u64) {
+        self.words.push(v);
+    }
+
+    pub fn push_usize(&mut self, v: usize) {
+        self.words.push(v as u64);
+    }
+
+    pub fn push_f64(&mut self, v: f64) {
+        self.words.push(v.to_bits());
+    }
+
+    pub fn push_bool(&mut self, v: bool) {
+        self.words.push(u64::from(v));
+    }
+
+    /// Option<f64> as a presence flag followed by the bits (0 when
+    /// absent), keeping the stream fixed-shape per record.
+    pub fn push_opt_f64(&mut self, v: Option<f64>) {
+        match v {
+            Some(x) => {
+                self.words.push(1);
+                self.words.push(x.to_bits());
+            }
+            None => {
+                self.words.push(0);
+                self.words.push(0);
+            }
+        }
+    }
+
+    /// Words pushed so far (for length-prefix bookkeeping).
+    pub fn len(&self) -> usize {
+        self.words.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.words.is_empty()
+    }
+
+    /// Serialize into the enveloped byte form (magic + payload + hash).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(16 + self.words.len() * 8);
+        out.extend_from_slice(MAGIC);
+        for w in &self.words {
+            out.extend_from_slice(&w.to_le_bytes());
+        }
+        let hash = fnv1a(&out[MAGIC.len()..]);
+        out.extend_from_slice(&hash.to_le_bytes());
+        out
+    }
+
+    /// Write the enveloped file; parent directories are created. Returns
+    /// the byte size written (the `checkpoint.bytes` counter's unit).
+    pub fn write(&self, path: &Path) -> Result<usize> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent).map_err(|e| {
+                    Error::Runtime(format!(
+                        "checkpoint: cannot create {}: {e}",
+                        parent.display()
+                    ))
+                })?;
+            }
+        }
+        let bytes = self.to_bytes();
+        std::fs::write(path, &bytes).map_err(|e| {
+            Error::Runtime(format!(
+                "checkpoint: cannot write {}: {e}",
+                path.display()
+            ))
+        })?;
+        Ok(bytes.len())
+    }
+}
+
+/// Verifies the envelope and replays the word stream.
+pub struct CheckpointReader {
+    words: Vec<u64>,
+    pos: usize,
+}
+
+impl CheckpointReader {
+    /// Parse enveloped bytes: checks magic, 8-byte word alignment, and
+    /// the trailing FNV-1a. Every failure mode — wrong file type,
+    /// truncation, bit flips — is a typed [`Error::Integrity`].
+    pub fn from_bytes(bytes: &[u8]) -> Result<CheckpointReader> {
+        if bytes.len() < MAGIC.len() + 8 || &bytes[..MAGIC.len()] != MAGIC {
+            return Err(Error::Integrity(
+                "checkpoint: bad magic (not a checkpoint file, or truncated)"
+                    .into(),
+            ));
+        }
+        let payload = &bytes[MAGIC.len()..bytes.len() - 8];
+        if payload.len() % 8 != 0 {
+            return Err(Error::Integrity(format!(
+                "checkpoint: payload length {} is not word-aligned (truncated?)",
+                payload.len()
+            )));
+        }
+        let stored = u64::from_le_bytes(
+            bytes[bytes.len() - 8..].try_into().unwrap(),
+        );
+        let computed = fnv1a(payload);
+        if stored != computed {
+            return Err(Error::Integrity(format!(
+                "checkpoint: content hash mismatch \
+                 (stored {stored:#018x}, computed {computed:#018x})"
+            )));
+        }
+        let words = payload
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        Ok(CheckpointReader { words, pos: 0 })
+    }
+
+    /// Read and verify a checkpoint file.
+    pub fn open(path: &Path) -> Result<CheckpointReader> {
+        let bytes = std::fs::read(path).map_err(|e| {
+            Error::Runtime(format!(
+                "checkpoint: cannot read {}: {e}",
+                path.display()
+            ))
+        })?;
+        CheckpointReader::from_bytes(&bytes)
+    }
+
+    pub fn take_u64(&mut self) -> Result<u64> {
+        let w = self.words.get(self.pos).copied().ok_or_else(|| {
+            Error::Integrity(format!(
+                "checkpoint: word stream exhausted at position {}",
+                self.pos
+            ))
+        })?;
+        self.pos += 1;
+        Ok(w)
+    }
+
+    pub fn take_usize(&mut self) -> Result<usize> {
+        Ok(self.take_u64()? as usize)
+    }
+
+    pub fn take_f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.take_u64()?))
+    }
+
+    pub fn take_bool(&mut self) -> Result<bool> {
+        Ok(self.take_u64()? != 0)
+    }
+
+    pub fn take_opt_f64(&mut self) -> Result<Option<f64>> {
+        let present = self.take_u64()? != 0;
+        let bits = self.take_u64()?;
+        Ok(present.then(|| f64::from_bits(bits)))
+    }
+
+    /// Words remaining (a fully-consumed stream ends at 0).
+    pub fn remaining(&self) -> usize {
+        self.words.len() - self.pos
+    }
+}
+
+/// Deterministically flip one payload byte in a written checkpoint —
+/// the `corrupt_checkpoint` chaos fault and the tamper tests both go
+/// through here so "corruption" means the same thing everywhere. The
+/// flipped byte sits mid-payload, so magic and trailer stay intact and
+/// the damage is only detectable through the content hash.
+pub fn corrupt_file(path: &Path) -> Result<()> {
+    let mut bytes = std::fs::read(path).map_err(|e| {
+        Error::Runtime(format!(
+            "checkpoint: cannot read {}: {e}",
+            path.display()
+        ))
+    })?;
+    if bytes.len() <= MAGIC.len() + 8 {
+        return Err(Error::Runtime(format!(
+            "checkpoint: {} too small to corrupt",
+            path.display()
+        )));
+    }
+    let payload_len = bytes.len() - MAGIC.len() - 8;
+    let target = MAGIC.len() + payload_len / 2;
+    bytes[target] ^= 0xFF;
+    std::fs::write(path, &bytes).map_err(|e| {
+        Error::Runtime(format!(
+            "checkpoint: cannot rewrite {}: {e}",
+            path.display()
+        ))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn word_stream_round_trips() {
+        let mut w = CheckpointWriter::new();
+        w.push_u64(42);
+        w.push_usize(7);
+        w.push_f64(-1.5);
+        w.push_bool(true);
+        w.push_opt_f64(Some(2.25));
+        w.push_opt_f64(None);
+        let mut r = CheckpointReader::from_bytes(&w.to_bytes()).unwrap();
+        assert_eq!(r.take_u64().unwrap(), 42);
+        assert_eq!(r.take_usize().unwrap(), 7);
+        assert_eq!(r.take_f64().unwrap().to_bits(), (-1.5f64).to_bits());
+        assert!(r.take_bool().unwrap());
+        assert_eq!(r.take_opt_f64().unwrap(), Some(2.25));
+        assert_eq!(r.take_opt_f64().unwrap(), None);
+        assert_eq!(r.remaining(), 0);
+        assert!(matches!(r.take_u64(), Err(Error::Integrity(_))));
+    }
+
+    #[test]
+    fn tampered_and_truncated_bytes_are_integrity_errors() {
+        let mut w = CheckpointWriter::new();
+        for i in 0..16u64 {
+            w.push_u64(i.wrapping_mul(0x9E37_79B9));
+        }
+        let good = w.to_bytes();
+        assert!(CheckpointReader::from_bytes(&good).is_ok());
+
+        // A single flipped payload bit trips the hash.
+        let mut bad = good.clone();
+        bad[MAGIC.len() + 3] ^= 0x01;
+        assert!(matches!(
+            CheckpointReader::from_bytes(&bad),
+            Err(Error::Integrity(_))
+        ));
+
+        // Truncation (word-aligned or not) never verifies.
+        for cut in [good.len() - 1, good.len() - 8, MAGIC.len() + 4, 2] {
+            assert!(matches!(
+                CheckpointReader::from_bytes(&good[..cut]),
+                Err(Error::Integrity(_)),
+            ));
+        }
+
+        // Wrong magic is rejected before any hashing.
+        let mut other = good;
+        other[0] ^= 0xFF;
+        assert!(matches!(
+            CheckpointReader::from_bytes(&other),
+            Err(Error::Integrity(_))
+        ));
+    }
+
+    #[test]
+    fn file_round_trip_and_corruption() {
+        let dir = std::env::temp_dir().join(format!(
+            "easyfl_ckpt_test_{}",
+            std::process::id()
+        ));
+        let path = checkpoint_path(&dir, 3);
+        assert!(path.to_string_lossy().ends_with("ckpt_round_3.bin"));
+        let mut w = CheckpointWriter::new();
+        w.push_u64(0xDEAD_BEEF);
+        w.push_f64(1.0 / 3.0);
+        let size = w.write(&path).unwrap();
+        assert_eq!(size, 8 + 2 * 8 + 8);
+
+        let mut r = CheckpointReader::open(&path).unwrap();
+        assert_eq!(r.take_u64().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.take_f64().unwrap(), 1.0 / 3.0);
+
+        corrupt_file(&path).unwrap();
+        assert!(matches!(
+            CheckpointReader::open(&path),
+            Err(Error::Integrity(_))
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fingerprint_pins_the_run_shape() {
+        let base = Config::default();
+        let fp = config_fingerprint(&base);
+        assert_eq!(fp, config_fingerprint(&base.clone()));
+        let mut reseeded = base.clone();
+        reseeded.seed ^= 1;
+        assert_ne!(fp, config_fingerprint(&reseeded));
+        let mut regrown = base.clone();
+        regrown.num_clients += 1;
+        assert_ne!(fp, config_fingerprint(&regrown));
+        let mut remoded = base;
+        remoded.sim.availability = "diurnal(0.5)".into();
+        assert_ne!(fp, config_fingerprint(&remoded));
+    }
+}

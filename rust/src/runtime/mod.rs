@@ -9,6 +9,8 @@
 //! (Table VI reproduction).
 
 pub mod artifact_cache;
+pub mod checkpoint;
 pub mod engine;
 
+pub use checkpoint::{CheckpointReader, CheckpointWriter};
 pub use engine::{Batch, Engine, Features, StepOut};

@@ -62,6 +62,18 @@ impl Strategy for SlowestAlloc {
     fn predicted_ms(&self, client: usize) -> Option<f64> {
         Some(self.time(client))
     }
+
+    fn snapshot_profile(&self) -> (Vec<(usize, f64)>, f64) {
+        let mut pairs: Vec<(usize, f64)> =
+            self.times.iter().map(|(&c, &t)| (c, t)).collect();
+        pairs.sort_unstable_by_key(|&(c, _)| c);
+        (pairs, self.default_ms)
+    }
+
+    fn restore_profile(&mut self, profiled: &[(usize, f64)], default_ms: f64) {
+        self.times = profiled.iter().copied().collect();
+        self.default_ms = default_ms;
+    }
 }
 
 /// Deal ≈len/M contiguous chunks (the paper's "around 20/M clients").

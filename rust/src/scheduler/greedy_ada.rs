@@ -96,6 +96,18 @@ impl Strategy for GreedyAda {
     fn predicted_ms(&self, client: usize) -> Option<f64> {
         Some(self.estimate_ms(client))
     }
+
+    fn snapshot_profile(&self) -> (Vec<(usize, f64)>, f64) {
+        let mut pairs: Vec<(usize, f64)> =
+            self.profiled.iter().map(|(&c, &t)| (c, t)).collect();
+        pairs.sort_unstable_by_key(|&(c, _)| c);
+        (pairs, self.default_ms)
+    }
+
+    fn restore_profile(&mut self, profiled: &[(usize, f64)], default_ms: f64) {
+        self.profiled = profiled.iter().copied().collect();
+        self.default_ms = default_ms;
+    }
 }
 
 #[cfg(test)]

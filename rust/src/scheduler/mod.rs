@@ -40,6 +40,17 @@ pub trait Strategy: Send {
     fn predicted_ms(&self, _client: usize) -> Option<f64> {
         None
     }
+
+    /// Serialized profiling state: sorted `(client, ms)` pairs plus the
+    /// current default time. This is what a round checkpoint persists so
+    /// a resumed run allocates identically; stateless strategies return
+    /// an empty profile.
+    fn snapshot_profile(&self) -> (Vec<(usize, f64)>, f64) {
+        (Vec::new(), 0.0)
+    }
+
+    /// Restore state captured by [`Strategy::snapshot_profile`].
+    fn restore_profile(&mut self, _profiled: &[(usize, f64)], _default_ms: f64) {}
 }
 
 /// Construct the configured strategy.
@@ -98,5 +109,27 @@ mod tests {
             let s = make_strategy(a, 100.0, 0.5);
             assert_eq!(s.name(), a.name());
         }
+    }
+
+    #[test]
+    fn profile_snapshot_round_trips_across_strategies() {
+        for a in [Allocation::GreedyAda, Allocation::Slowest] {
+            let mut s = make_strategy(a, 100.0, 0.5);
+            s.observe(&[(3, 40.0), (9, 80.0)]);
+            let (pairs, default_ms) = s.snapshot_profile();
+            // Restore into a strategy built with a *different* default:
+            // the profile must fully determine allocation behavior.
+            let mut t = make_strategy(a, 1.0, 0.5);
+            t.restore_profile(&pairs, default_ms);
+            let cohort: Vec<usize> = (0..12).collect();
+            assert_eq!(
+                s.allocate(&cohort, 3, &mut Rng::new(2)),
+                t.allocate(&cohort, 3, &mut Rng::new(2))
+            );
+            assert_eq!(t.predicted_ms(3), s.predicted_ms(3));
+        }
+        // Random is stateless: empty profile, restore is a no-op.
+        let s = make_strategy(Allocation::Random, 1.0, 0.5);
+        assert!(s.snapshot_profile().0.is_empty());
     }
 }

@@ -1,0 +1,156 @@
+//! Chaos plane: registry-injectable faults for crash-safety testing.
+//!
+//! A [`Fault`] is a deterministic, seed-reproducible failure injected
+//! into a simulation from `Config.chaos`. Each fault is designed to be
+//! paired with a recovery assertion: a run that is killed, partitioned,
+//! or lossy must — after checkpoint/resume — reproduce the
+//! uninterrupted run's trace digest bit-for-bit (see
+//! `tests/chaos_recovery.rs`). An empty fault list burns zero RNG and
+//! leaves every pre-existing digest untouched.
+
+use crate::error::{Error, Result};
+
+/// One injectable fault (registered under the `chaos` config list).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Fault {
+    /// `kill_server_at_round(r)`: hard-stop the run once `r` rounds have
+    /// aggregated — after that boundary's checkpoint is written, so the
+    /// run is resumable. Models a server crash.
+    KillServerAtRound { round: usize },
+    /// `partition_edge(c)`: network-partition edge cluster `c` — its
+    /// clients' reports never reach the cloud (hierarchical topologies;
+    /// a no-op cluster id on flat runs is a config error at submit).
+    PartitionEdge { cluster: usize },
+    /// `drop_frames(f)`: each report is lost in transit with
+    /// probability `f`, converting it into a dropout. Draws only from
+    /// the dedicated chaos RNG stream.
+    DropFrames { frac: f64 },
+    /// `corrupt_checkpoint`: flip one payload byte of every checkpoint
+    /// just after it is written — resuming from it must surface a typed
+    /// integrity error, never a wrong-answer run.
+    CorruptCheckpoint,
+}
+
+fn parse_args(spec: &str) -> Result<Vec<f64>> {
+    let Some(inner) = spec
+        .find('(')
+        .map(|i| &spec[i + 1..])
+        .and_then(|r| r.strip_suffix(')'))
+    else {
+        return Ok(Vec::new());
+    };
+    inner
+        .split(',')
+        .map(|a| {
+            a.trim().parse::<f64>().map_err(|_| {
+                Error::Config(format!("bad chaos arg {a:?} in {spec:?}"))
+            })
+        })
+        .collect()
+}
+
+fn index_arg(spec: &str, args: &[f64], what: &str) -> Result<usize> {
+    match args.first().copied() {
+        Some(x) if x >= 0.0 && x.fract() == 0.0 && x.is_finite() => {
+            Ok(x as usize)
+        }
+        _ => Err(Error::Config(format!(
+            "{what} needs a non-negative integer argument, got {spec:?}"
+        ))),
+    }
+}
+
+impl Fault {
+    /// Parse a fault spec string. Accepted heads are exactly the
+    /// registered names — the registry resolves the head first.
+    pub fn parse(spec: &str) -> Result<Fault> {
+        let head = crate::registry::spec_head(spec);
+        let args = parse_args(spec)?;
+        match head.as_str() {
+            "kill_server_at_round" => Ok(Fault::KillServerAtRound {
+                round: index_arg(spec, &args, "kill_server_at_round")?,
+            }),
+            "partition_edge" => Ok(Fault::PartitionEdge {
+                cluster: index_arg(spec, &args, "partition_edge")?,
+            }),
+            "drop_frames" => {
+                let frac = args.first().copied().unwrap_or(f64::NAN);
+                if !(0.0..=1.0).contains(&frac) {
+                    return Err(Error::Config(format!(
+                        "drop_frames needs a fraction in [0, 1], got {spec:?}"
+                    )));
+                }
+                Ok(Fault::DropFrames { frac })
+            }
+            "corrupt_checkpoint" => Ok(Fault::CorruptCheckpoint),
+            other => Err(Error::Config(format!(
+                "unknown fault {other:?} (kill_server_at_round(r) | \
+                 partition_edge(c) | drop_frames(f) | corrupt_checkpoint)"
+            ))),
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            Fault::KillServerAtRound { round } => {
+                format!("kill_server_at_round({round})")
+            }
+            Fault::PartitionEdge { cluster } => {
+                format!("partition_edge({cluster})")
+            }
+            Fault::DropFrames { frac } => format!("drop_frames({frac})"),
+            Fault::CorruptCheckpoint => "corrupt_checkpoint".into(),
+        }
+    }
+}
+
+/// Parse every spec in a config's `chaos` list.
+pub fn parse_faults(specs: &[String]) -> Result<Vec<Fault>> {
+    specs.iter().map(|s| Fault::parse(s)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn specs_parse_and_round_trip() {
+        for (spec, want) in [
+            (
+                "kill_server_at_round(10)",
+                Fault::KillServerAtRound { round: 10 },
+            ),
+            ("partition_edge(2)", Fault::PartitionEdge { cluster: 2 }),
+            ("drop_frames(0.05)", Fault::DropFrames { frac: 0.05 }),
+            ("corrupt_checkpoint", Fault::CorruptCheckpoint),
+        ] {
+            let f = Fault::parse(spec).unwrap();
+            assert_eq!(f, want, "{spec}");
+            assert_eq!(Fault::parse(&f.name()).unwrap(), f);
+        }
+    }
+
+    #[test]
+    fn bad_specs_are_config_errors() {
+        for spec in [
+            "meteor_strike",
+            "kill_server_at_round",
+            "kill_server_at_round(-1)",
+            "kill_server_at_round(1.5)",
+            "partition_edge(x)",
+            "drop_frames",
+            "drop_frames(1.5)",
+            "drop_frames(-0.1)",
+        ] {
+            assert!(Fault::parse(spec).is_err(), "{spec}");
+        }
+    }
+
+    #[test]
+    fn fault_lists_parse_together() {
+        let specs =
+            vec!["drop_frames(0.1)".to_string(), "corrupt_checkpoint".into()];
+        assert_eq!(parse_faults(&specs).unwrap().len(), 2);
+        assert!(parse_faults(&["nope".to_string()]).is_err());
+    }
+}

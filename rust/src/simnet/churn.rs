@@ -1,0 +1,203 @@
+//! Elastic membership: seed-deterministic between-round client churn.
+//!
+//! A [`ChurnModel`] adds and/or removes clients at aggregation
+//! boundaries, extending the lifecycle machine in
+//! [`crate::simnet::client_state`] with join/leave transitions. All
+//! randomness (device class, bandwidth, availability phase of a joiner;
+//! which idle client departs) comes from a dedicated churn RNG stream,
+//! so `"none"` — the default — burns zero RNG and leaves every
+//! pre-existing trace digest bit-identical.
+//!
+//! Per-round rates may be fractional: `grow(0.5)` admits one client
+//! every other round via a fractional-credit accumulator that is
+//! serialized into round checkpoints, so a resumed run churns exactly
+//! like the uninterrupted one.
+
+use crate::error::{Error, Result};
+
+/// A between-round membership change model (registered under `sim.churn`).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ChurnModel {
+    /// No churn: zero RNG draws, zero membership changes.
+    None,
+    /// `grow(n)`: admit `n` new clients per round (may be fractional).
+    Grow { per_round: f64 },
+    /// `shrink(n)`: retire `n` idle clients per round (may be fractional).
+    Shrink { per_round: f64 },
+    /// `flux(j,l)`: admit `j` and retire `l` clients per round.
+    Flux { join_per_round: f64, leave_per_round: f64 },
+}
+
+fn parse_args(spec: &str) -> Result<Vec<f64>> {
+    let Some(inner) = spec
+        .find('(')
+        .map(|i| &spec[i + 1..])
+        .and_then(|r| r.strip_suffix(')'))
+    else {
+        return Ok(Vec::new());
+    };
+    inner
+        .split(',')
+        .map(|a| {
+            a.trim().parse::<f64>().map_err(|_| {
+                Error::Config(format!("bad churn arg {a:?} in {spec:?}"))
+            })
+        })
+        .collect()
+}
+
+fn rate(spec: &str, args: &[f64], i: usize, what: &str) -> Result<f64> {
+    let r = args.get(i).copied().unwrap_or(1.0);
+    if !(r >= 0.0 && r.is_finite()) {
+        return Err(Error::Config(format!(
+            "{what} rate must be finite and ≥ 0, got {spec:?}"
+        )));
+    }
+    Ok(r)
+}
+
+impl ChurnModel {
+    /// Parse a spec string (head selects the model, args set per-round
+    /// rates). Accepted heads are exactly the registered names — the
+    /// registry resolves the head before calling this.
+    pub fn parse(spec: &str) -> Result<ChurnModel> {
+        let head = crate::registry::spec_head(spec);
+        let args = parse_args(spec)?;
+        match head.as_str() {
+            "none" | "off" => Ok(ChurnModel::None),
+            "grow" => {
+                Ok(ChurnModel::Grow { per_round: rate(spec, &args, 0, "grow")? })
+            }
+            "shrink" => Ok(ChurnModel::Shrink {
+                per_round: rate(spec, &args, 0, "shrink")?,
+            }),
+            "flux" => Ok(ChurnModel::Flux {
+                join_per_round: rate(spec, &args, 0, "flux join")?,
+                leave_per_round: rate(spec, &args, 1, "flux leave")?,
+            }),
+            other => Err(Error::Config(format!(
+                "unknown churn model {other:?} (none | grow(n) | shrink(n) \
+                 | flux(j,l))"
+            ))),
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            ChurnModel::None => "none".into(),
+            ChurnModel::Grow { per_round } => format!("grow({per_round})"),
+            ChurnModel::Shrink { per_round } => format!("shrink({per_round})"),
+            ChurnModel::Flux { join_per_round, leave_per_round } => {
+                format!("flux({join_per_round},{leave_per_round})")
+            }
+        }
+    }
+
+    /// True when this model never changes membership (no RNG stream is
+    /// touched at all for `None`).
+    pub fn is_none(&self) -> bool {
+        matches!(self, ChurnModel::None)
+            || matches!(
+                self,
+                ChurnModel::Grow { per_round: r } | ChurnModel::Shrink { per_round: r }
+                    if *r == 0.0
+            )
+            || matches!(
+                self,
+                ChurnModel::Flux { join_per_round: j, leave_per_round: l }
+                    if *j == 0.0 && *l == 0.0
+            )
+    }
+
+    /// Per-round (join, leave) rates.
+    pub fn rates(&self) -> (f64, f64) {
+        match *self {
+            ChurnModel::None => (0.0, 0.0),
+            ChurnModel::Grow { per_round } => (per_round, 0.0),
+            ChurnModel::Shrink { per_round } => (0.0, per_round),
+            ChurnModel::Flux { join_per_round, leave_per_round } => {
+                (join_per_round, leave_per_round)
+            }
+        }
+    }
+}
+
+/// Fractional-credit accumulator: integer churn counts per boundary.
+///
+/// Rates below one client/round accrue as credit; each call returns the
+/// whole clients owed this boundary and keeps the remainder. The credit
+/// pair is persisted in round checkpoints (as f64 bits) so resumed runs
+/// replay churn identically.
+#[derive(Debug, Clone, Default)]
+pub struct ChurnCredits {
+    pub join: f64,
+    pub leave: f64,
+}
+
+impl ChurnCredits {
+    /// Accrue one round's rates and withdraw the integer parts.
+    pub fn accrue(&mut self, join_rate: f64, leave_rate: f64) -> (usize, usize) {
+        self.join += join_rate;
+        self.leave += leave_rate;
+        let j = self.join.floor();
+        let l = self.leave.floor();
+        self.join -= j;
+        self.leave -= l;
+        (j as usize, l as usize)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn specs_parse_and_round_trip() {
+        for (spec, want) in [
+            ("none", ChurnModel::None),
+            ("grow(2)", ChurnModel::Grow { per_round: 2.0 }),
+            ("grow", ChurnModel::Grow { per_round: 1.0 }),
+            ("shrink(0.5)", ChurnModel::Shrink { per_round: 0.5 }),
+            (
+                "flux(2,1)",
+                ChurnModel::Flux { join_per_round: 2.0, leave_per_round: 1.0 },
+            ),
+        ] {
+            let m = ChurnModel::parse(spec).unwrap();
+            assert_eq!(m, want, "{spec}");
+            // name() re-parses to the same model.
+            assert_eq!(ChurnModel::parse(&m.name()).unwrap(), m);
+        }
+        assert!(ChurnModel::parse("evaporate").is_err());
+        assert!(ChurnModel::parse("grow(x)").is_err());
+        assert!(ChurnModel::parse("grow(-1)").is_err());
+        assert!(ChurnModel::parse("flux(1,-2)").is_err());
+    }
+
+    #[test]
+    fn zero_rates_count_as_none() {
+        assert!(ChurnModel::None.is_none());
+        assert!(ChurnModel::parse("grow(0)").unwrap().is_none());
+        assert!(ChurnModel::parse("flux(0,0)").unwrap().is_none());
+        assert!(!ChurnModel::parse("grow(0.1)").unwrap().is_none());
+    }
+
+    #[test]
+    fn fractional_credits_accumulate_exactly() {
+        let mut c = ChurnCredits::default();
+        let mut joined = 0;
+        for _ in 0..10 {
+            let (j, l) = c.accrue(0.5, 0.0);
+            joined += j;
+            assert_eq!(l, 0);
+        }
+        // 0.5/round over 10 rounds ⇒ exactly 5 joins.
+        assert_eq!(joined, 5);
+        assert!(c.join < 1.0);
+
+        // Integer rates withdraw fully every round.
+        let mut c = ChurnCredits::default();
+        assert_eq!(c.accrue(2.0, 1.0), (2, 1));
+        assert_eq!(c.accrue(2.0, 1.0), (2, 1));
+    }
+}

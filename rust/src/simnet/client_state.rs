@@ -46,6 +46,34 @@ impl ClientPhase {
             ClientPhase::Selected | ClientPhase::Training | ClientPhase::Uploading
         )
     }
+
+    /// Stable small tag for checkpoint serialization.
+    pub fn tag(self) -> u64 {
+        match self {
+            ClientPhase::Offline => 0,
+            ClientPhase::Available => 1,
+            ClientPhase::Selected => 2,
+            ClientPhase::Training => 3,
+            ClientPhase::Uploading => 4,
+            ClientPhase::Reported => 5,
+            ClientPhase::Dropped => 6,
+        }
+    }
+
+    /// Inverse of [`ClientPhase::tag`]; `None` on a tag no phase owns
+    /// (a corrupt checkpoint, surfaced as `Error::Integrity` upstream).
+    pub fn from_tag(tag: u64) -> Option<ClientPhase> {
+        Some(match tag {
+            0 => ClientPhase::Offline,
+            1 => ClientPhase::Available,
+            2 => ClientPhase::Selected,
+            3 => ClientPhase::Training,
+            4 => ClientPhase::Uploading,
+            5 => ClientPhase::Reported,
+            6 => ClientPhase::Dropped,
+            _ => return None,
+        })
+    }
 }
 
 /// One simulated client.
@@ -519,6 +547,32 @@ impl Pool {
         }
         out
     }
+
+    /// Membership in insertion/swap order. This order is load-bearing:
+    /// [`Pool::sample`] indexes into it, so a checkpoint must persist it
+    /// verbatim — it is *not* reconstructible from client phases alone
+    /// (removals permute survivors via swap-remove).
+    pub fn members(&self) -> &[usize] {
+        &self.members
+    }
+
+    /// Rebuild a pool with the given member order over a population of
+    /// `num_clients` (the checkpoint-restore constructor).
+    pub fn from_members(num_clients: usize, members: Vec<usize>) -> Pool {
+        let mut pos = vec![usize::MAX; num_clients];
+        for (p, &c) in members.iter().enumerate() {
+            pos[c] = p;
+        }
+        Pool { members, pos }
+    }
+
+    /// Extend the population to `num_clients` ids (elastic-membership
+    /// joins). Existing membership is untouched; new ids start absent.
+    pub fn grow(&mut self, num_clients: usize) {
+        if num_clients > self.pos.len() {
+            self.pos.resize(num_clients, usize::MAX);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -731,5 +785,43 @@ mod tests {
         pool.insert(1);
         pool.insert(1);
         assert_eq!(pool.len(), 1);
+    }
+
+    #[test]
+    fn pool_round_trips_through_members_and_grows() {
+        let mut pool = Pool::new(10);
+        for c in [4, 1, 7, 2, 9] {
+            pool.insert(c);
+        }
+        pool.remove(1); // Swap-remove permutes the survivors.
+        let twin = Pool::from_members(10, pool.members().to_vec());
+        assert_eq!(twin.members(), pool.members());
+        // Identical member order ⇒ identical draws from the same stream.
+        let mut a = pool.clone();
+        let mut b = twin;
+        let mut ra = Rng::new(5);
+        let mut rb = Rng::new(5);
+        assert_eq!(a.sample(3, &mut ra), b.sample(3, &mut rb));
+        // Growth admits new ids without disturbing existing members.
+        a.grow(12);
+        a.insert(11);
+        assert!(a.contains(11));
+        assert_eq!(a.len(), 2);
+    }
+
+    #[test]
+    fn phase_tags_round_trip() {
+        for phase in [
+            ClientPhase::Offline,
+            ClientPhase::Available,
+            ClientPhase::Selected,
+            ClientPhase::Training,
+            ClientPhase::Uploading,
+            ClientPhase::Reported,
+            ClientPhase::Dropped,
+        ] {
+            assert_eq!(ClientPhase::from_tag(phase.tag()), Some(phase));
+        }
+        assert_eq!(ClientPhase::from_tag(7), None);
     }
 }

@@ -11,6 +11,8 @@
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
+use crate::error::{Error, Result};
+
 /// What happens when an event fires.
 ///
 /// `epoch` fields carry the client's selection epoch at scheduling time;
@@ -58,6 +60,36 @@ impl EventKind {
             | EventKind::Dropout { client, epoch } => (client as u64, epoch),
         }
     }
+
+    /// Inverse of [`EventKind::tag`]/[`EventKind::payload`]: rebuild a
+    /// kind from its digest triple when a checkpointed queue is restored.
+    /// An unknown tag means the checkpoint bytes are bad, not a bug here.
+    fn from_parts(tag: u64, a: u64, b: u64) -> Option<EventKind> {
+        Some(match tag {
+            1 => EventKind::Online { client: a as usize },
+            2 => EventKind::Offline { client: a as usize },
+            3 => EventKind::RoundStart { round: a as usize },
+            4 => EventKind::Report { client: a as usize, epoch: b },
+            5 => EventKind::Dropout { client: a as usize, epoch: b },
+            6 => EventKind::Deadline { round: a as usize },
+            _ => return None,
+        })
+    }
+}
+
+/// Full serialized queue state: clock, counters, the running digest, and
+/// every pending event as `(time bits, seq, kind tag, payload a, payload
+/// b)` sorted by `(time, seq)` so the snapshot is canonical regardless of
+/// the heap's internal layout. [`EventQueue::restore`] rebuilds a queue
+/// that pops the identical event sequence and continues the identical
+/// digest — the property the crash-safe resume tests assert bit-for-bit.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct QueueSnapshot {
+    pub now_ms_bits: u64,
+    pub next_seq: u64,
+    pub processed: u64,
+    pub digest: u64,
+    pub events: Vec<(u64, u64, u64, u64, u64)>,
 }
 
 /// A timestamped event. Total order: (time, insertion sequence).
@@ -164,6 +196,59 @@ impl EventQueue {
     pub fn trace_digest(&self) -> u64 {
         self.digest
     }
+
+    /// Serialize the complete queue state (see [`QueueSnapshot`]).
+    pub fn snapshot(&self) -> QueueSnapshot {
+        let mut events: Vec<(u64, u64, u64, u64, u64)> = self
+            .heap
+            .iter()
+            .map(|e| {
+                let ev = &e.0;
+                let (a, b) = ev.kind.payload();
+                (ev.time_ms.to_bits(), ev.seq, ev.kind.tag(), a, b)
+            })
+            .collect();
+        events.sort_unstable_by(|x, y| {
+            f64::from_bits(x.0)
+                .total_cmp(&f64::from_bits(y.0))
+                .then(x.1.cmp(&y.1))
+        });
+        QueueSnapshot {
+            now_ms_bits: self.now_ms.to_bits(),
+            next_seq: self.next_seq,
+            processed: self.processed,
+            digest: self.digest,
+            events,
+        }
+    }
+
+    /// Rebuild a queue from a [`QueueSnapshot`]. Events are re-inserted
+    /// verbatim (times and sequence numbers unclamped, unlike
+    /// [`EventQueue::push`]) so the restored heap pops the exact sequence
+    /// the original would have. A snapshot carrying an unknown event tag
+    /// is an [`Error::Integrity`].
+    pub fn restore(snap: &QueueSnapshot) -> Result<EventQueue> {
+        let mut heap = BinaryHeap::with_capacity(snap.events.len());
+        for &(time_bits, seq, tag, a, b) in &snap.events {
+            let kind = EventKind::from_parts(tag, a, b).ok_or_else(|| {
+                Error::Integrity(format!(
+                    "checkpointed event queue has unknown event tag {tag}"
+                ))
+            })?;
+            heap.push(std::cmp::Reverse(Event {
+                time_ms: f64::from_bits(time_bits),
+                seq,
+                kind,
+            }));
+        }
+        Ok(EventQueue {
+            heap,
+            next_seq: snap.next_seq,
+            now_ms: f64::from_bits(snap.now_ms_bits),
+            processed: snap.processed,
+            digest: snap.digest,
+        })
+    }
 }
 
 #[cfg(test)]
@@ -209,6 +294,53 @@ mod tests {
         let mut q = EventQueue::new();
         q.push(f64::INFINITY, EventKind::Online { client: 0 });
         assert!(q.is_empty());
+    }
+
+    #[test]
+    fn snapshot_restore_pops_identically_and_continues_the_digest() {
+        let mut q = EventQueue::new();
+        q.push(4.0, EventKind::Deadline { round: 1 });
+        q.push(1.0, EventKind::Online { client: 3 });
+        q.push(2.5, EventKind::Report { client: 7, epoch: 9 });
+        q.push(2.5, EventKind::Dropout { client: 8, epoch: 2 });
+        // Pop one so now/processed/digest are mid-stream.
+        q.pop().unwrap();
+
+        let snap = q.snapshot();
+        let mut twin = EventQueue::restore(&snap).unwrap();
+        assert_eq!(twin.now_ms(), q.now_ms());
+        assert_eq!(twin.processed(), q.processed());
+        assert_eq!(twin.trace_digest(), q.trace_digest());
+
+        // Identical remaining pops, identical final digest, and pushes
+        // after the restore keep the FIFO tie-break aligned (next_seq
+        // round-trips too).
+        q.push(3.0, EventKind::RoundStart { round: 2 });
+        twin.push(3.0, EventKind::RoundStart { round: 2 });
+        loop {
+            match (q.pop(), twin.pop()) {
+                (None, None) => break,
+                (a, b) => {
+                    let (a, b) = (a.unwrap(), b.unwrap());
+                    assert_eq!(a.kind, b.kind);
+                    assert_eq!(a.seq, b.seq);
+                    assert_eq!(a.time_ms.to_bits(), b.time_ms.to_bits());
+                }
+            }
+        }
+        assert_eq!(q.trace_digest(), twin.trace_digest());
+    }
+
+    #[test]
+    fn restore_rejects_unknown_event_tags() {
+        let mut q = EventQueue::new();
+        q.push(1.0, EventKind::Online { client: 0 });
+        let mut snap = q.snapshot();
+        snap.events[0].2 = 99;
+        match EventQueue::restore(&snap) {
+            Err(Error::Integrity(_)) => {}
+            other => panic!("expected Error::Integrity, got {other:?}"),
+        }
     }
 
     #[test]

@@ -22,7 +22,12 @@
 //! * [`rounds`] — the two engines: synchronous deadline rounds with
 //!   over-selection, and async FedBuff with staleness-discounted
 //!   aggregation. Both reuse the scheduler [`crate::scheduler::Strategy`]
-//!   trait unchanged.
+//!   trait unchanged;
+//! * [`churn`] — elastic membership: seed-deterministic between-round
+//!   join/leave models extending the lifecycle machine (`"none"` burns
+//!   zero RNG, keeping pre-existing digests bit-identical);
+//! * [`chaos`] — fault-injection plane (server kill, edge partition,
+//!   frame drops, checkpoint corruption) for crash-safety testing.
 //!
 //! A 100k-client, 200-round scenario simulates in seconds and is
 //! bit-for-bit reproducible per seed. Low-code as everything else:
@@ -39,6 +44,8 @@
 //! ```
 
 pub mod adversary;
+pub mod chaos;
+pub mod churn;
 pub mod client_state;
 pub mod cost;
 pub mod events;
@@ -46,6 +53,8 @@ pub mod rounds;
 pub mod surrogate;
 
 pub use adversary::AdversaryModel;
+pub use chaos::Fault;
+pub use churn::ChurnModel;
 pub use client_state::{AvailabilityModel, ClientPhase, ClientState, Pool};
 pub use cost::CostModel;
 pub use events::{Event, EventKind, EventQueue};
@@ -80,6 +89,17 @@ pub(crate) fn register_builtins(reg: &mut ComponentRegistry) {
     );
     for name in ["sign-flip", "scaled-noise", "zero-update"] {
         reg.register_adversary(name, Arc::new(AdversaryModel::parse));
+    }
+    for name in ["none", "grow", "shrink", "flux"] {
+        reg.register_churn(name, Arc::new(ChurnModel::parse));
+    }
+    for name in [
+        "kill_server_at_round",
+        "partition_edge",
+        "drop_frames",
+        "corrupt_checkpoint",
+    ] {
+        reg.register_fault(name, Arc::new(Fault::parse));
     }
 }
 

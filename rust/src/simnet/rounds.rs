@@ -18,6 +18,7 @@
 //! Engine in for small cohorts.
 
 use std::collections::BTreeSet;
+use std::path::Path;
 use std::sync::Arc;
 
 use crate::aggregate::{AggContext, FedBuffBuffer};
@@ -25,12 +26,14 @@ use crate::config::{Config, SimMode};
 use crate::coordinator::Server;
 use crate::data::partition::build_clients;
 use crate::data::synth;
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::flow::Update;
 use crate::hierarchy::{HierPlane, Topology};
 use crate::model::ParamVec;
 use crate::obs::{Histogram, Span, Telemetry};
 use crate::registry;
+use crate::runtime::checkpoint;
+use crate::runtime::{CheckpointReader, CheckpointWriter};
 use crate::scheduler::{make_strategy, Strategy};
 use crate::tracking::{RoundMetrics, Tracker};
 use crate::util::clock::{Stopwatch, VirtualClock};
@@ -38,9 +41,11 @@ use crate::util::json::{obj, Json};
 use crate::util::rng::Rng;
 
 use super::adversary::AdversaryModel;
+use super::chaos::Fault;
+use super::churn::{ChurnCredits, ChurnModel};
 use super::client_state::{AvailabilityModel, ClientPhase, ClientState, Pool};
 use super::cost::CostModel;
-use super::events::{EventKind, EventQueue};
+use super::events::{EventKind, EventQueue, QueueSnapshot};
 use super::surrogate::SurrogateModel;
 
 /// Skew is a population statistic; estimating it from a bounded sample
@@ -120,6 +125,9 @@ pub struct SimReport {
     pub fold_ms_p50: f64,
     pub fold_ms_p95: f64,
     pub fold_ms_p99: f64,
+    /// Faults the chaos plane injected over the run (0 with `chaos`
+    /// empty — the plane is completely inert then).
+    pub faults_injected: u64,
 }
 
 impl SimReport {
@@ -240,6 +248,48 @@ pub struct SimNet {
     client_hist: Histogram,
     /// Wall-clock latency of each aggregation-window fold.
     fold_hist: Histogram,
+    /// Elastic-membership model applied between rounds (`"none"` = off).
+    churn: ChurnModel,
+    /// Dedicated churn RNG: joiner device/bandwidth/phase and leaver
+    /// picks draw only here, so `"none"` burns nothing and pre-churn
+    /// trace digests are bit-identical.
+    churn_rng: Rng,
+    /// Fractional per-round join/leave credit (checkpointed so resumed
+    /// runs churn exactly like the uninterrupted one).
+    churn_credits: ChurnCredits,
+    /// Clients retired by churn: pending events for them pop inert and
+    /// they never re-enter the pool.
+    departed: Vec<bool>,
+    /// Chaos plane, pre-resolved from `Config.chaos`.
+    kill_at: Option<usize>,
+    drop_frac: Option<f64>,
+    partitioned: Option<usize>,
+    corrupt_ckpt: bool,
+    /// Dedicated chaos RNG (`drop_frames` draws; an empty fault list
+    /// burns nothing).
+    chaos_rng: Rng,
+    /// Faults injected so far (mirrors the `chaos.faults` counter).
+    faults_injected: u64,
+    /// Rounds / comm bytes completed before this process when resuming
+    /// from a checkpoint; the in-memory tracker only sees the resumed
+    /// segment, so reports add these offsets back.
+    base_rounds: usize,
+    base_comm_bytes: usize,
+}
+
+/// Engine-loop locals restored from a checkpoint (everything else lives
+/// on [`SimNet`] fields and is restored in place).
+struct ResumeAux {
+    rounds_done: usize,
+    makespan: f64,
+    t_last: f64,
+}
+
+/// Rebuild one RNG stream from its checkpointed `(state, spare)` pair.
+fn take_rng(r: &mut CheckpointReader) -> Result<Rng> {
+    let state = r.take_u64()?;
+    let spare = r.take_opt_f64()?;
+    Ok(Rng::restore(state, spare))
 }
 
 impl SimNet {
@@ -270,6 +320,30 @@ impl SimNet {
         let adversary =
             registry::with_global(|r| r.adversary(&cfg.sim.adversary))?;
         let topology = registry::with_global(|r| r.topology(&cfg.topology))?;
+        let churn = registry::with_global(|r| r.churn(&cfg.sim.churn))?;
+        // Chaos plane: resolve every fault spec up front so a bad one
+        // fails fast, and collapse the list into per-kind knobs.
+        let mut kill_at = None;
+        let mut drop_frac = None;
+        let mut partitioned = None;
+        let mut corrupt_ckpt = false;
+        for spec in &cfg.chaos {
+            match registry::with_global(|r| r.fault(spec))? {
+                Fault::KillServerAtRound { round } => kill_at = Some(round),
+                Fault::DropFrames { frac } => drop_frac = Some(frac),
+                Fault::PartitionEdge { cluster } => {
+                    partitioned = Some(cluster)
+                }
+                Fault::CorruptCheckpoint => corrupt_ckpt = true,
+            }
+        }
+        if partitioned.is_some() && topology.is_flat() {
+            return Err(Error::Config(
+                "partition_edge needs a hierarchical topology (a flat run \
+                 has no edge clusters to partition)"
+                    .into(),
+            ));
+        }
         let agg_name = cfg.agg.clone().unwrap_or_else(|| "mean".to_string());
         if cfg.agg.is_some() || cfg.sim.adversary_frac > 0.0 {
             // Fail fast on an unknown or misconfigured aggregator before
@@ -303,6 +377,12 @@ impl SimNet {
         // flipping `adversary_frac` must never shift selection,
         // scheduling or availability draws (trace digests stay equal).
         let mut adv_rng = Rng::new(cfg.seed ^ 0x4144_5645_5253); // "ADVERS"
+
+        // Churn and chaos get the same treatment: dedicated streams that
+        // burn nothing while their plane is off, so every pre-existing
+        // digest survives the knobs being merely *available*.
+        let churn_rng = Rng::new(cfg.seed ^ 0x4348_5552_4E21); // "CHURN!"
+        let chaos_rng = Rng::new(cfg.seed ^ 0x4348_414F_5321); // "CHAOS!"
 
         // Partition skew drives the surrogate curves; estimate it from a
         // bounded client sample so huge populations stay cheap.
@@ -365,6 +445,12 @@ impl SimNet {
             tracker
                 .set_config("adversary_frac", cfg.sim.adversary_frac.to_string());
         }
+        if !churn.is_none() {
+            tracker.set_config("churn", churn.name());
+        }
+        if !cfg.chaos.is_empty() {
+            tracker.set_config("chaos", cfg.chaos.join(","));
+        }
 
         let vclock = Arc::new(VirtualClock::new());
         let tel = Telemetry::from_config(cfg, vclock.clone())?;
@@ -406,6 +492,18 @@ impl SimNet {
             vclock,
             client_hist: Histogram::new(),
             fold_hist: Histogram::new(),
+            churn,
+            churn_rng,
+            churn_credits: ChurnCredits::default(),
+            departed: vec![false; num_clients],
+            kill_at,
+            drop_frac,
+            partitioned,
+            corrupt_ckpt,
+            chaos_rng,
+            faults_injected: 0,
+            base_rounds: 0,
+            base_comm_bytes: 0,
             cfg: cfg.clone(),
         })
     }
@@ -447,9 +545,16 @@ impl SimNet {
         &mut self,
         cancel: &dyn Fn() -> bool,
     ) -> Result<SimReport> {
+        // Resume before dispatching so both engines start from the
+        // restored event queue / RNG streams / population instead of
+        // re-seeding them.
+        let resume = match self.cfg.resume_from.clone() {
+            Some(path) => Some(self.restore_checkpoint(&path)?),
+            None => None,
+        };
         match self.cfg.sim.mode {
-            SimMode::Sync => self.run_sync(cancel),
-            SimMode::Async => self.run_async(cancel),
+            SimMode::Sync => self.run_sync(cancel, resume),
+            SimMode::Async => self.run_async(cancel, resume),
         }
     }
 
@@ -481,6 +586,13 @@ impl SimNet {
 
     /// Apply an availability flip and schedule the next one.
     fn handle_toggle(&mut self, client: usize, online: bool, now_ms: f64) {
+        if self.departed[client] {
+            // Churned-out clients keep their pending toggle events in the
+            // queue (popping them still folds into the trace digest
+            // deterministically) but the flips themselves are inert: the
+            // client never re-enters the pool and schedules no successor.
+            return;
+        }
         self.clients[client].online = online;
         if !self.clients[client].is_busy() {
             // Idle clients move between pool and offline immediately;
@@ -693,14 +805,17 @@ impl SimNet {
 
     // ------------------------------------------------------ sync engine
 
-    fn run_sync(&mut self, cancel: &dyn Fn() -> bool) -> Result<SimReport> {
+    fn run_sync(
+        &mut self,
+        cancel: &dyn Fn() -> bool,
+        resume: Option<ResumeAux>,
+    ) -> Result<SimReport> {
         let sw = Stopwatch::start();
         let rounds = self.cfg.rounds;
         let k_target = self.cfg.clients_per_round;
         let k_select =
             ((k_target as f64) * self.cfg.sim.over_select).ceil() as usize;
         let deadline_ms = self.cfg.sim.deadline_ms;
-        self.init_population();
 
         let mut round = 0usize;
         let mut t0 = 0.0f64;
@@ -710,11 +825,21 @@ impl SimNet {
         let mut round_dropped = 0usize;
         let mut measured: Vec<(usize, f64)> = Vec::new();
         let mut awaiting = false;
-        let mut rounds_done = 0usize;
-        let mut makespan = 0.0f64;
         let mut round_span = Span::noop();
 
-        self.queue.push(0.0, EventKind::RoundStart { round: 0 });
+        // A checkpoint is taken between rounds (after the next
+        // RoundStart is queued), so a resumed run re-enters the loop
+        // exactly where the uninterrupted one would be: no cohort in
+        // flight, the restored queue carrying RoundStart + pending
+        // availability toggles.
+        let (mut rounds_done, mut makespan) = match resume {
+            Some(aux) => (aux.rounds_done, aux.makespan),
+            None => {
+                self.init_population();
+                self.queue.push(0.0, EventKind::RoundStart { round: 0 });
+                (0, 0.0)
+            }
+        };
         while rounds_done < rounds {
             let Some(ev) = self.queue.pop() else {
                 self.tracker
@@ -769,17 +894,31 @@ impl SimNet {
                 }
                 EventKind::Report { client, epoch } => {
                     if awaiting && self.live_event(client, epoch) {
-                        self.clients[client].begin_upload();
-                        self.clients[client].report();
-                        // Profile the client's own service time (compute
-                        // + upload), not its queue-inclusive completion
-                        // time — same as the real Server's observe().
-                        measured.push((client, self.clients[client].service_ms));
-                        self.release(client);
-                        self.total_reported += 1;
-                        reported += 1;
-                        finish_now = reported >= target
-                            || reported + round_dropped >= cohort.len();
+                        if self.chaos_report_lost(client) {
+                            // Lost in transit (partition / frame drop):
+                            // the server sees a dropout, the client just
+                            // wasted a round.
+                            self.clients[client].drop_out();
+                            self.release(client);
+                            self.total_dropped += 1;
+                            round_dropped += 1;
+                            finish_now =
+                                reported + round_dropped >= cohort.len();
+                        } else {
+                            self.clients[client].begin_upload();
+                            self.clients[client].report();
+                            // Profile the client's own service time
+                            // (compute + upload), not its queue-inclusive
+                            // completion time — same as the real Server's
+                            // observe().
+                            measured
+                                .push((client, self.clients[client].service_ms));
+                            self.release(client);
+                            self.total_reported += 1;
+                            reported += 1;
+                            finish_now = reported >= target
+                                || reported + round_dropped >= cohort.len();
+                        }
                     }
                 }
                 EventKind::Dropout { client, epoch } => {
@@ -866,8 +1005,18 @@ impl SimNet {
                         self.cancelled = true;
                         break;
                     }
+                    // Between-round churn, then queue the next round so
+                    // the checkpoint snapshot includes it; the kill fault
+                    // fires *after* its boundary checkpoint, so a killed
+                    // run is always resumable at the kill point.
+                    self.apply_churn(close);
                     self.queue
                         .push(close, EventKind::RoundStart { round: round + 1 });
+                    self.maybe_checkpoint(rounds_done, makespan, close)?;
+                    if self.chaos_kill_now(rounds_done) {
+                        self.cancelled = true;
+                        break;
+                    }
                 }
             }
         }
@@ -879,7 +1028,11 @@ impl SimNet {
 
     // ----------------------------------------------------- async engine
 
-    fn run_async(&mut self, cancel: &dyn Fn() -> bool) -> Result<SimReport> {
+    fn run_async(
+        &mut self,
+        cancel: &dyn Fn() -> bool,
+        resume: Option<ResumeAux>,
+    ) -> Result<SimReport> {
         let sw = Stopwatch::start();
         let rounds = self.cfg.rounds;
         let k_target = self.cfg.clients_per_round.max(1);
@@ -893,7 +1046,6 @@ impl SimNet {
         } else {
             2 * k_target
         };
-        self.init_population();
 
         let mut active = 0usize;
         // FedBuff window from the aggregation plane: staleness discounts
@@ -909,7 +1061,27 @@ impl SimNet {
         let mut window_span = Span::noop();
         let mut window_service = Histogram::new();
 
-        self.refill_async(&mut active, concurrency, 0.0);
+        // Async checkpoints land on window flushes, so a restored run
+        // resumes with an empty FedBuff buffer and every in-flight
+        // client's Report/Dropout already in the restored queue — the
+        // refill below replays the post-flush refill the uninterrupted
+        // run performed at the same boundary.
+        match resume {
+            Some(aux) => {
+                makespan = aux.makespan;
+                t_last = aux.t_last;
+                active =
+                    self.clients.iter().filter(|c| c.is_busy()).count();
+                if self.version < rounds {
+                    let now = self.queue.now_ms();
+                    self.refill_async(&mut active, concurrency, now);
+                }
+            }
+            None => {
+                self.init_population();
+                self.refill_async(&mut active, concurrency, 0.0);
+            }
+        }
         while self.version < rounds {
             let Some(ev) = self.queue.pop() else {
                 self.tracker.warn(
@@ -931,76 +1103,112 @@ impl SimNet {
                     if !self.live_event(client, epoch) {
                         continue;
                     }
-                    let staleness =
-                        (self.version - self.clients[client].start_version) as f64;
-                    self.clients[client].begin_upload();
-                    self.clients[client].report();
-                    window_service.record_ms(self.clients[client].service_ms);
-                    self.release(client);
-                    active -= 1;
-                    self.total_reported += 1;
-                    if window_members.is_empty() {
-                        window_span = self.tel.span_with("sim.window", || {
-                            vec![("round", self.version.to_string())]
-                        });
-                    }
-                    let weight = buffer.push(staleness, None)?;
-                    window_members.push((client, weight));
-                    self.staleness_sum += staleness;
-                    self.staleness_n += 1;
-                    if buffer.len() >= buffer_target {
-                        // FedBuff aggregation: staleness-discounted
-                        // weights, normalized against the sync target K
-                        // so sync/async progress is comparable.
-                        let sw_fold = Stopwatch::start();
-                        let round = self.version;
-                        self.version += 1;
-                        let base = buffer.total_weight() / k_target as f64;
-                        let inc = if self.adversary_active() {
-                            base * self.robust_aggregate(&window_members)?
-                        } else {
-                            base
-                        };
-                        // Window fan-in before the member list resets
-                        // (flat windows close at `t` exactly, as before).
-                        let (window_bytes, hop_ms) = self.close_fanin(
-                            window_members.iter().map(|&(c, _)| c),
-                            window_members.len(),
-                        );
-                        let close = t + hop_ms;
-                        window_members.clear();
-                        self.progress = (self.progress + inc).max(0.0);
-                        let (train_loss, acc) = self.backend_metrics(round)?;
-                        let window = buffer.flush()?;
-                        // Async "selected" = selections *resolved* in
-                        // this window (reports + drops), so the
-                        // reported ≤ selected invariant holds per round.
-                        self.record_round(
-                            round,
-                            close - t_last,
-                            window.arrivals + agg_dropped,
-                            window.arrivals,
-                            agg_dropped,
-                            window.avg_staleness,
-                            window_bytes,
-                            train_loss,
-                            acc,
-                            &window_service,
-                        );
-                        window_service = Histogram::new();
-                        let fold_ms = sw_fold.elapsed_ms();
-                        self.fold_hist.record_ms(fold_ms);
-                        self.tel.observe_ms("sim.fold_ms", fold_ms);
-                        if self.tel.enabled() {
-                            self.vclock.set_ms(close);
+                    if self.chaos_report_lost(client) {
+                        // Lost in transit (partition / frame drop): the
+                        // window sees a dropout. Falls through to the
+                        // loop-bottom refill like any other resolution —
+                        // a `continue` here could starve the engine.
+                        self.clients[client].drop_out();
+                        self.release(client);
+                        active -= 1;
+                        agg_dropped += 1;
+                        self.total_dropped += 1;
+                    } else {
+                        let staleness = (self.version
+                            - self.clients[client].start_version)
+                            as f64;
+                        self.clients[client].begin_upload();
+                        self.clients[client].report();
+                        window_service
+                            .record_ms(self.clients[client].service_ms);
+                        self.release(client);
+                        active -= 1;
+                        self.total_reported += 1;
+                        if window_members.is_empty() {
+                            window_span =
+                                self.tel.span_with("sim.window", || {
+                                    vec![("round", self.version.to_string())]
+                                });
                         }
-                        window_span = Span::noop();
-                        agg_dropped = 0;
-                        t_last = close;
-                        makespan = close;
-                        if self.version < rounds && cancel() {
-                            self.cancelled = true;
-                            break;
+                        let weight = buffer.push(staleness, None)?;
+                        window_members.push((client, weight));
+                        self.staleness_sum += staleness;
+                        self.staleness_n += 1;
+                        if buffer.len() >= buffer_target {
+                            // FedBuff aggregation: staleness-discounted
+                            // weights, normalized against the sync target
+                            // K so sync/async progress is comparable.
+                            let sw_fold = Stopwatch::start();
+                            let round = self.version;
+                            self.version += 1;
+                            let base =
+                                buffer.total_weight() / k_target as f64;
+                            let inc = if self.adversary_active() {
+                                base * self.robust_aggregate(&window_members)?
+                            } else {
+                                base
+                            };
+                            // Window fan-in before the member list resets
+                            // (flat windows close at `t` exactly, as
+                            // before).
+                            let (window_bytes, hop_ms) = self.close_fanin(
+                                window_members.iter().map(|&(c, _)| c),
+                                window_members.len(),
+                            );
+                            let close = t + hop_ms;
+                            window_members.clear();
+                            self.progress = (self.progress + inc).max(0.0);
+                            let (train_loss, acc) =
+                                self.backend_metrics(round)?;
+                            let window = buffer.flush()?;
+                            // Async "selected" = selections *resolved* in
+                            // this window (reports + drops), so the
+                            // reported ≤ selected invariant holds per
+                            // round.
+                            self.record_round(
+                                round,
+                                close - t_last,
+                                window.arrivals + agg_dropped,
+                                window.arrivals,
+                                agg_dropped,
+                                window.avg_staleness,
+                                window_bytes,
+                                train_loss,
+                                acc,
+                                &window_service,
+                            );
+                            window_service = Histogram::new();
+                            let fold_ms = sw_fold.elapsed_ms();
+                            self.fold_hist.record_ms(fold_ms);
+                            self.tel.observe_ms("sim.fold_ms", fold_ms);
+                            if self.tel.enabled() {
+                                self.vclock.set_ms(close);
+                            }
+                            window_span = Span::noop();
+                            agg_dropped = 0;
+                            t_last = close;
+                            makespan = close;
+                            if self.version < rounds {
+                                if cancel() {
+                                    self.cancelled = true;
+                                    break;
+                                }
+                                // Same boundary order as the sync engine:
+                                // churn, checkpoint (buffer just flushed,
+                                // so none of its state needs
+                                // serializing), then the kill fault —
+                                // always after its checkpoint.
+                                self.apply_churn(close);
+                                self.maybe_checkpoint(
+                                    self.version,
+                                    makespan,
+                                    t_last,
+                                )?;
+                                if self.chaos_kill_now(self.version) {
+                                    self.cancelled = true;
+                                    break;
+                                }
+                            }
                         }
                     }
                 }
@@ -1038,6 +1246,388 @@ impl SimNet {
             self.schedule_client(c, now_ms);
             *active += 1;
         }
+    }
+
+    // ---------------------------------------------------- churn plane
+
+    /// Between-round elastic membership: accrue this boundary's
+    /// fractional join/leave credit and apply the whole-client part.
+    /// `"none"` (the default) returns before touching the churn RNG.
+    fn apply_churn(&mut self, now_ms: f64) {
+        if self.churn.is_none() {
+            return;
+        }
+        let (join_rate, leave_rate) = self.churn.rates();
+        let (joins, leaves) = self.churn_credits.accrue(join_rate, leave_rate);
+        for _ in 0..joins {
+            self.churn_join(now_ms);
+        }
+        for _ in 0..leaves {
+            self.churn_leave();
+        }
+    }
+
+    /// Admit one new client: sampled like `init_population` but from the
+    /// dedicated churn stream, entering at `now_ms` on the virtual clock.
+    fn churn_join(&mut self, now_ms: f64) {
+        let c = self.clients.len();
+        let device = self.cost.sample_device(&mut self.churn_rng);
+        let bandwidth = self.cost.sample_bandwidth(&mut self.churn_rng);
+        let mut state = ClientState::new(device, bandwidth);
+        let phase = self.availability.sample_phase_ms(&mut self.churn_rng);
+        let online =
+            self.availability.initial_online(phase, &mut self.churn_rng);
+        state.avail_phase_ms = phase;
+        state.online = online;
+        state.release();
+        self.clients.push(state);
+        self.adversarial.push(false);
+        self.departed.push(false);
+        self.pool.grow(self.clients.len());
+        if online {
+            self.pool.insert(c);
+        }
+        let next = self.availability.next_toggle_ms(
+            online,
+            phase,
+            now_ms,
+            &mut self.churn_rng,
+        );
+        if next.is_finite() {
+            let kind = if online {
+                EventKind::Offline { client: c }
+            } else {
+                EventKind::Online { client: c }
+            };
+            self.queue.push(next, kind);
+        }
+    }
+
+    /// Retire one idle client, picked uniformly from the available pool
+    /// (busy clients finish their round; an empty pool spends the credit
+    /// as a no-op). Departed clients never come back: their pending
+    /// availability toggles pop inert.
+    fn churn_leave(&mut self) {
+        let picked = self.pool.sample(1, &mut self.churn_rng);
+        let Some(&c) = picked.first() else {
+            return;
+        };
+        self.departed[c] = true;
+        self.clients[c].online = false;
+        self.clients[c].release();
+    }
+
+    // ---------------------------------------------------- chaos plane
+
+    /// True when the chaos plane eats this report in transit (edge
+    /// partition or random frame drop). Draws from the chaos RNG only
+    /// when `drop_frames` is armed.
+    fn chaos_report_lost(&mut self, client: usize) -> bool {
+        if let Some(cluster) = self.partitioned {
+            if self.topology.cluster_of(client) == cluster {
+                self.faults_injected += 1;
+                self.tel.counter("chaos.faults", 1);
+                return true;
+            }
+        }
+        if let Some(frac) = self.drop_frac {
+            if self.chaos_rng.uniform() < frac {
+                self.faults_injected += 1;
+                self.tel.counter("chaos.faults", 1);
+                return true;
+            }
+        }
+        false
+    }
+
+    /// `kill_server_at_round(r)`: hard-stop once `r` rounds aggregated
+    /// (the boundary's checkpoint has already been written).
+    fn chaos_kill_now(&mut self, rounds_done: usize) -> bool {
+        if self.kill_at == Some(rounds_done) {
+            self.faults_injected += 1;
+            self.tel.counter("chaos.faults", 1);
+            self.tracker.warn(&format!(
+                "chaos: kill_server_at_round({rounds_done}) fired"
+            ));
+            true
+        } else {
+            false
+        }
+    }
+
+    // ----------------------------------------------------- checkpoints
+
+    /// Write a round-boundary checkpoint when one is due: every
+    /// `checkpoint_every` rounds, plus unconditionally at a
+    /// `kill_server_at_round` boundary so killed runs are always
+    /// resumable. No `checkpoint_dir` ⇒ never.
+    fn maybe_checkpoint(
+        &mut self,
+        rounds_done: usize,
+        makespan: f64,
+        t_last: f64,
+    ) -> Result<()> {
+        let Some(dir) = self.cfg.checkpoint_dir.clone() else {
+            return Ok(());
+        };
+        let every = self.cfg.checkpoint_every;
+        let due = every > 0 && rounds_done % every == 0;
+        let killing = self.kill_at == Some(rounds_done);
+        if !(due || killing) {
+            return Ok(());
+        }
+        let span = self.tel.span_with("sim.checkpoint", || {
+            vec![("round", rounds_done.to_string())]
+        });
+        let path = checkpoint::checkpoint_path(&dir, rounds_done);
+        let bytes = self.write_checkpoint(&path, rounds_done, makespan, t_last)?;
+        self.tel.counter("checkpoint.saves", 1);
+        self.tel.counter("checkpoint.bytes", bytes as u64);
+        if self.corrupt_ckpt {
+            checkpoint::corrupt_file(&path)?;
+            self.faults_injected += 1;
+            self.tel.counter("chaos.faults", 1);
+        }
+        drop(span);
+        Ok(())
+    }
+
+    /// Serialize the full simulation state at a round boundary: engine
+    /// progress, all four RNG streams, churn credits, every client's
+    /// lifecycle, the available pool, the scheduler's learned profile,
+    /// real-training global params (when on) and the pending event
+    /// queue. Histograms are deliberately *not* serialized — a resumed
+    /// run's latency quantiles cover the resumed segment only; trace
+    /// digests, metrics and membership are exact.
+    fn write_checkpoint(
+        &self,
+        path: &Path,
+        rounds_done: usize,
+        makespan: f64,
+        t_last: f64,
+    ) -> Result<usize> {
+        let mut w = CheckpointWriter::new();
+        w.push_u64(checkpoint::config_fingerprint(&self.cfg));
+        w.push_usize(rounds_done);
+        w.push_f64(makespan);
+        w.push_f64(t_last);
+        w.push_usize(self.version);
+        w.push_f64(self.progress);
+        w.push_u64(self.total_selected);
+        w.push_u64(self.total_reported);
+        w.push_u64(self.total_dropped);
+        w.push_f64(self.staleness_sum);
+        w.push_u64(self.staleness_n);
+        w.push_usize(self.bytes_to_cloud);
+        w.push_f64(self.env_dev_sum);
+        w.push_u64(self.env_dev_n);
+        w.push_u64(self.faults_injected);
+        // Metric offsets: the resuming process starts a fresh tracker,
+        // so completed-round and comm-byte totals carry over as bases.
+        w.push_usize(self.base_rounds + self.tracker.num_rounds());
+        w.push_usize(self.base_comm_bytes + self.tracker.total_comm_bytes());
+        for rng in [&self.rng, &self.adv_rng, &self.churn_rng, &self.chaos_rng]
+        {
+            let (state, spare) = rng.snapshot();
+            w.push_u64(state);
+            w.push_opt_f64(spare);
+        }
+        w.push_f64(self.churn_credits.join);
+        w.push_f64(self.churn_credits.leave);
+        w.push_usize(self.clients.len());
+        for (i, c) in self.clients.iter().enumerate() {
+            w.push_u64(c.phase.tag());
+            w.push_bool(c.online);
+            w.push_usize(c.device_class);
+            w.push_f64(c.bandwidth_bytes_per_ms);
+            w.push_f64(c.avail_phase_ms);
+            w.push_u64(c.epoch);
+            w.push_usize(c.start_version);
+            w.push_f64(c.service_ms);
+            w.push_u64(c.reports as u64);
+            w.push_u64(c.dropouts as u64);
+            w.push_bool(self.adversarial[i]);
+            w.push_bool(self.departed[i]);
+        }
+        let members = self.pool.members();
+        w.push_usize(members.len());
+        for &m in members {
+            w.push_usize(m);
+        }
+        let (profiled, default_ms) = self.strategy.snapshot_profile();
+        w.push_f64(default_ms);
+        w.push_usize(profiled.len());
+        for &(client, ms) in &profiled {
+            w.push_usize(client);
+            w.push_f64(ms);
+        }
+        match self.server.as_ref() {
+            Some(server) => {
+                let params = server.params();
+                w.push_bool(true);
+                w.push_usize(params.len());
+                for v in params.iter() {
+                    w.push_f64(*v as f64);
+                }
+            }
+            None => w.push_bool(false),
+        }
+        let snap = self.queue.snapshot();
+        w.push_u64(snap.now_ms_bits);
+        w.push_u64(snap.next_seq);
+        w.push_u64(snap.processed);
+        w.push_u64(snap.digest);
+        w.push_usize(snap.events.len());
+        for &(time_bits, seq, tag, a, b) in &snap.events {
+            w.push_u64(time_bits);
+            w.push_u64(seq);
+            w.push_u64(tag);
+            w.push_u64(a);
+            w.push_u64(b);
+        }
+        w.write(path)
+    }
+
+    /// Restore a checkpoint written by [`Self::write_checkpoint`] into
+    /// this freshly-built simulator. A fingerprint mismatch (the file is
+    /// intact but belongs to a different run shape) is a config error;
+    /// any truncation, corruption or impossible value is
+    /// [`Error::Integrity`].
+    fn restore_checkpoint(&mut self, path: &Path) -> Result<ResumeAux> {
+        let mut r = CheckpointReader::open(path)?;
+        let fingerprint = r.take_u64()?;
+        if fingerprint != checkpoint::config_fingerprint(&self.cfg) {
+            return Err(Error::Config(format!(
+                "checkpoint {} was written by a run with a different \
+                 config (seed / rounds / population / model knobs must \
+                 match to resume)",
+                path.display()
+            )));
+        }
+        let rounds_done = r.take_usize()?;
+        let makespan = r.take_f64()?;
+        let t_last = r.take_f64()?;
+        self.version = r.take_usize()?;
+        self.progress = r.take_f64()?;
+        self.total_selected = r.take_u64()?;
+        self.total_reported = r.take_u64()?;
+        self.total_dropped = r.take_u64()?;
+        self.staleness_sum = r.take_f64()?;
+        self.staleness_n = r.take_u64()?;
+        self.bytes_to_cloud = r.take_usize()?;
+        self.env_dev_sum = r.take_f64()?;
+        self.env_dev_n = r.take_u64()?;
+        self.faults_injected = r.take_u64()?;
+        self.base_rounds = r.take_usize()?;
+        self.base_comm_bytes = r.take_usize()?;
+        self.rng = take_rng(&mut r)?;
+        self.adv_rng = take_rng(&mut r)?;
+        self.churn_rng = take_rng(&mut r)?;
+        self.chaos_rng = take_rng(&mut r)?;
+        self.churn_credits.join = r.take_f64()?;
+        self.churn_credits.leave = r.take_f64()?;
+        let n = r.take_usize()?;
+        let mut clients = Vec::with_capacity(n);
+        let mut adversarial = Vec::with_capacity(n);
+        let mut departed = Vec::with_capacity(n);
+        for _ in 0..n {
+            let tag = r.take_u64()?;
+            let phase = ClientPhase::from_tag(tag).ok_or_else(|| {
+                Error::Integrity(format!("unknown client phase tag {tag}"))
+            })?;
+            let online = r.take_bool()?;
+            let device_class = r.take_usize()?;
+            let bandwidth = r.take_f64()?;
+            let mut c = ClientState::new(device_class, bandwidth);
+            c.phase = phase;
+            c.online = online;
+            c.avail_phase_ms = r.take_f64()?;
+            c.epoch = r.take_u64()?;
+            c.start_version = r.take_usize()?;
+            c.service_ms = r.take_f64()?;
+            c.reports = r.take_u64()? as u32;
+            c.dropouts = r.take_u64()? as u32;
+            clients.push(c);
+            adversarial.push(r.take_bool()?);
+            departed.push(r.take_bool()?);
+        }
+        self.clients = clients;
+        self.adversarial = adversarial;
+        self.departed = departed;
+        let pool_len = r.take_usize()?;
+        let mut members = Vec::with_capacity(pool_len);
+        for _ in 0..pool_len {
+            let m = r.take_usize()?;
+            if m >= n {
+                return Err(Error::Integrity(format!(
+                    "pool member {m} out of range (population {n})"
+                )));
+            }
+            members.push(m);
+        }
+        self.pool = Pool::from_members(n, members);
+        let default_ms = r.take_f64()?;
+        let profiled_len = r.take_usize()?;
+        let mut profiled = Vec::with_capacity(profiled_len);
+        for _ in 0..profiled_len {
+            let client = r.take_usize()?;
+            let ms = r.take_f64()?;
+            profiled.push((client, ms));
+        }
+        self.strategy.restore_profile(&profiled, default_ms);
+        if r.take_bool()? {
+            let p = r.take_usize()?;
+            let mut params = Vec::with_capacity(p);
+            for _ in 0..p {
+                params.push(r.take_f64()? as f32);
+            }
+            match self.server.as_mut() {
+                Some(server) => server.set_params(ParamVec(params)),
+                None => {
+                    return Err(Error::Config(
+                        "checkpoint carries real-training params but \
+                         sim.real_training is off in the resuming config"
+                            .into(),
+                    ))
+                }
+            }
+        }
+        let now_ms_bits = r.take_u64()?;
+        let next_seq = r.take_u64()?;
+        let processed = r.take_u64()?;
+        let digest = r.take_u64()?;
+        let ev_len = r.take_usize()?;
+        let mut events = Vec::with_capacity(ev_len);
+        for _ in 0..ev_len {
+            let time_bits = r.take_u64()?;
+            let seq = r.take_u64()?;
+            let tag = r.take_u64()?;
+            let a = r.take_u64()?;
+            let b = r.take_u64()?;
+            // Client-carrying events must point inside the restored
+            // population (tags: Online/Offline/Report/Dropout).
+            if matches!(tag, 1 | 2 | 4 | 5) && a as usize >= n {
+                return Err(Error::Integrity(format!(
+                    "event client {a} out of range (population {n})"
+                )));
+            }
+            events.push((time_bits, seq, tag, a, b));
+        }
+        self.queue = EventQueue::restore(&QueueSnapshot {
+            now_ms_bits,
+            next_seq,
+            processed,
+            digest,
+            events,
+        })?;
+        if r.remaining() != 0 {
+            return Err(Error::Integrity(format!(
+                "checkpoint has {} trailing words",
+                r.remaining()
+            )));
+        }
+        self.tel.counter("checkpoint.restores", 1);
+        Ok(ResumeAux { rounds_done, makespan, t_last })
     }
 
     // -------------------------------------------------------- wrap-up
@@ -1128,7 +1718,7 @@ impl SimNet {
             allocation: self.cfg.allocation.name().to_string(),
             availability: self.availability.name(),
             num_clients: self.clients.len(),
-            rounds: self.tracker.num_rounds(),
+            rounds: self.base_rounds + self.tracker.num_rounds(),
             makespan_ms,
             events: self.queue.processed(),
             selected: self.total_selected,
@@ -1146,11 +1736,12 @@ impl SimNet {
             },
             final_accuracy,
             final_train_loss,
-            comm_bytes: self.tracker.total_comm_bytes(),
+            comm_bytes: self.base_comm_bytes + self.tracker.total_comm_bytes(),
             trace_digest: self.queue.trace_digest(),
             wall_ms,
-            converged: self.tracker.num_rounds() == self.cfg.rounds
-                && self.tracker.num_rounds() > 0,
+            converged: self.base_rounds + self.tracker.num_rounds()
+                == self.cfg.rounds
+                && self.base_rounds + self.tracker.num_rounds() > 0,
             cancelled: self.cancelled,
             aggregator: self.agg_name.clone(),
             topology: self.topology.name(),
@@ -1168,6 +1759,7 @@ impl SimNet {
             fold_ms_p50,
             fold_ms_p95,
             fold_ms_p99,
+            faults_injected: self.faults_injected,
         }
     }
 }
@@ -1556,5 +2148,125 @@ mod tests {
         // Roughly 30% of 400 clients online at a time; rounds still run.
         assert_eq!(report.rounds, 12);
         assert!(report.reported > 0);
+    }
+
+    #[test]
+    fn crash_safe_knobs_off_keep_digests_bit_identical() {
+        // Checkpointing must be a pure observer: a run that *writes*
+        // checkpoints (but never resumes) is bit-identical to one that
+        // doesn't, across sync, async and hierarchical timelines. And a
+        // tampered checkpoint must be a typed integrity error, never a
+        // silently-wrong resume.
+        for (i, (mode, topo)) in [
+            (SimMode::Sync, "flat"),
+            (SimMode::Async, "flat"),
+            (SimMode::Sync, "edges(4)"),
+        ]
+        .into_iter()
+        .enumerate()
+        {
+            let mut base = sim_cfg(mode);
+            base.topology = topo.to_string();
+            if matches!(mode, SimMode::Async) {
+                base.sim.async_buffer = 10;
+                base.sim.async_concurrency = 60;
+            }
+            let clean = SimNet::from_config(&base).unwrap().run().unwrap();
+            assert_eq!(clean.faults_injected, 0, "chaos off ⇒ no faults");
+
+            let dir = std::env::temp_dir().join(format!(
+                "easyfl_ckpt_neutral_{}_{i}",
+                std::process::id()
+            ));
+            let mut ck_cfg = base.clone();
+            ck_cfg.checkpoint_every = 4;
+            ck_cfg.checkpoint_dir = Some(dir.clone());
+            let saved = SimNet::from_config(&ck_cfg).unwrap().run().unwrap();
+            assert_eq!(
+                clean.trace_digest, saved.trace_digest,
+                "{mode:?}/{topo}: checkpointing shifted the event trace"
+            );
+            assert_eq!(clean.makespan_ms, saved.makespan_ms);
+            assert_eq!(clean.comm_bytes, saved.comm_bytes);
+            let ckpt = checkpoint::checkpoint_path(&dir, 4);
+            assert!(ckpt.is_file(), "missing {}", ckpt.display());
+
+            // Flip one payload byte: resuming must fail loudly.
+            checkpoint::corrupt_file(&ckpt).unwrap();
+            let mut bad_cfg = ck_cfg.clone();
+            bad_cfg.checkpoint_every = 0;
+            bad_cfg.checkpoint_dir = None;
+            bad_cfg.resume_from = Some(ckpt);
+            let err = SimNet::from_config(&bad_cfg)
+                .unwrap()
+                .run()
+                .unwrap_err();
+            assert!(
+                matches!(err, Error::Integrity(_)),
+                "tampered checkpoint must be Error::Integrity, got {err:?}"
+            );
+            std::fs::remove_dir_all(&dir).ok();
+        }
+    }
+
+    #[test]
+    fn sync_resume_from_checkpoint_reproduces_the_digest() {
+        let base = sim_cfg(SimMode::Sync);
+        let clean = SimNet::from_config(&base).unwrap().run().unwrap();
+
+        // Kill the server after round 6 (the boundary checkpoint is
+        // written first, so the kill point is always resumable).
+        let dir = std::env::temp_dir().join(format!(
+            "easyfl_ckpt_resume_{}",
+            std::process::id()
+        ));
+        let mut killed_cfg = base.clone();
+        killed_cfg.checkpoint_every = 3;
+        killed_cfg.checkpoint_dir = Some(dir.clone());
+        killed_cfg.chaos = vec!["kill_server_at_round(6)".into()];
+        let killed = SimNet::from_config(&killed_cfg).unwrap().run().unwrap();
+        assert!(killed.cancelled, "the kill fault must stop the run");
+        assert_eq!(killed.rounds, 6);
+        assert!(killed.faults_injected >= 1);
+
+        // Resume in a fresh process-equivalent: new simulator, chaos
+        // cleared, state restored from the round-6 checkpoint.
+        let mut resume_cfg = base.clone();
+        resume_cfg.resume_from = Some(checkpoint::checkpoint_path(&dir, 6));
+        let resumed =
+            SimNet::from_config(&resume_cfg).unwrap().run().unwrap();
+        assert_eq!(
+            resumed.trace_digest, clean.trace_digest,
+            "resumed run must replay the uninterrupted trace bit-for-bit"
+        );
+        assert_eq!(resumed.makespan_ms, clean.makespan_ms);
+        assert_eq!(resumed.rounds, clean.rounds);
+        assert_eq!(resumed.selected, clean.selected);
+        assert_eq!(resumed.comm_bytes, clean.comm_bytes);
+        assert!(resumed.converged);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn churn_grows_the_population_deterministically() {
+        let mut cfg = sim_cfg(SimMode::Sync);
+        cfg.sim.churn = "grow(2)".into();
+        let mut net = SimNet::from_config(&cfg).unwrap();
+        let report = net.run().unwrap();
+        // Churn applies at the 11 interior boundaries of a 12-round run.
+        assert_eq!(report.num_clients, 400 + 2 * 11);
+        assert_eq!(net.num_clients(), 422);
+        assert_eq!(report.rounds, 12);
+
+        // Same seed ⇒ same churn ⇒ same trace, twice.
+        let again = SimNet::from_config(&cfg).unwrap().run().unwrap();
+        assert_eq!(report.trace_digest, again.trace_digest);
+        assert_eq!(again.num_clients, 422);
+
+        // And churn off leaves the population alone.
+        let mut off = sim_cfg(SimMode::Sync);
+        off.sim.churn = "none".into();
+        let still = SimNet::from_config(&off).unwrap().run().unwrap();
+        assert_eq!(still.num_clients, 400);
     }
 }

@@ -1,0 +1,335 @@
+//! Crash-safe operations: checkpoint/resume equivalence, chaos faults
+//! and elastic membership.
+//!
+//! The contract under test: for every engine (sync, async FedBuff,
+//! hierarchical), a run that is checkpointed, killed and resumed must
+//! reproduce the *uninterrupted* run's trace digest bit-for-bit — same
+//! events, same makespan, same metrics. Tampered checkpoints must fail
+//! with a typed integrity error, and every new knob (checkpointing,
+//! churn, chaos) must be digest-neutral when unset.
+
+mod common;
+
+use std::path::PathBuf;
+
+use common::sim_base_cfg as base_cfg;
+use easyfl::config::{Config, SimMode};
+use easyfl::runtime::checkpoint;
+use easyfl::simnet::SimNet;
+use easyfl::Error;
+
+/// One scenario per engine: sync flat, async FedBuff flat, sync
+/// hierarchical. Every property below holds across all three.
+fn engine_grid() -> Vec<(&'static str, Config)> {
+    let mut sync = base_cfg();
+    sync.sim.mode = SimMode::Sync;
+
+    let mut fedbuff = base_cfg();
+    fedbuff.sim.mode = SimMode::Async;
+    fedbuff.sim.async_buffer = 8;
+    fedbuff.sim.async_concurrency = 40;
+
+    let mut hier = base_cfg();
+    hier.sim.mode = SimMode::Sync;
+    hier.topology = "edges(4)".to_string();
+
+    vec![("sync", sync), ("fedbuff", fedbuff), ("hier", hier)]
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir()
+        .join(format!("easyfl_chaos_{tag}_{}", std::process::id()))
+}
+
+#[test]
+fn resume_reproduces_the_uninterrupted_digest_on_every_engine() {
+    for (name, cfg) in engine_grid() {
+        let clean = SimNet::from_config(&cfg).unwrap().run().unwrap();
+        assert!(clean.converged, "{name}: clean run must finish");
+
+        // Kill after 5 aggregations; the boundary checkpoint is written
+        // before the kill fires, so the kill point is resumable even
+        // off the every-2 cadence... (5 % 2 != 0 exercises that).
+        let dir = tmp_dir(name);
+        let mut killed_cfg = cfg.clone();
+        killed_cfg.checkpoint_every = 2;
+        killed_cfg.checkpoint_dir = Some(dir.clone());
+        killed_cfg.chaos = vec!["kill_server_at_round(5)".into()];
+        let killed =
+            SimNet::from_config(&killed_cfg).unwrap().run().unwrap();
+        assert!(killed.cancelled, "{name}: kill fault must stop the run");
+        assert_eq!(killed.rounds, 5, "{name}");
+        assert!(killed.faults_injected >= 1, "{name}");
+
+        // Fresh simulator, chaos cleared: the resumed run must replay
+        // the rest of the uninterrupted timeline exactly.
+        let mut resume_cfg = cfg.clone();
+        resume_cfg.resume_from = Some(checkpoint::checkpoint_path(&dir, 5));
+        let resumed =
+            SimNet::from_config(&resume_cfg).unwrap().run().unwrap();
+        assert_eq!(
+            resumed.trace_digest, clean.trace_digest,
+            "{name}: resumed trace must equal the uninterrupted one"
+        );
+        assert_eq!(
+            resumed.makespan_ms.to_bits(),
+            clean.makespan_ms.to_bits(),
+            "{name}: makespan must be bit-identical"
+        );
+        assert_eq!(resumed.rounds, clean.rounds, "{name}");
+        assert_eq!(resumed.events, clean.events, "{name}");
+        assert_eq!(resumed.selected, clean.selected, "{name}");
+        assert_eq!(resumed.reported, clean.reported, "{name}");
+        assert_eq!(resumed.dropped, clean.dropped, "{name}");
+        assert_eq!(resumed.comm_bytes, clean.comm_bytes, "{name}");
+        assert_eq!(resumed.bytes_to_cloud, clean.bytes_to_cloud, "{name}");
+        assert_eq!(
+            resumed.final_accuracy.to_bits(),
+            clean.final_accuracy.to_bits(),
+            "{name}: accuracy must be bit-identical"
+        );
+        assert!(resumed.converged, "{name}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+#[test]
+fn tampered_checkpoints_fail_with_a_typed_integrity_error() {
+    let (_, cfg) = engine_grid().remove(0);
+    let dir = tmp_dir("tamper");
+    let mut ck_cfg = cfg.clone();
+    ck_cfg.checkpoint_every = 5;
+    ck_cfg.checkpoint_dir = Some(dir.clone());
+    SimNet::from_config(&ck_cfg).unwrap().run().unwrap();
+    let ckpt = checkpoint::checkpoint_path(&dir, 5);
+    assert!(ckpt.is_file());
+
+    // Flip one payload byte: the content hash must catch it.
+    checkpoint::corrupt_file(&ckpt).unwrap();
+    let mut resume_cfg = cfg.clone();
+    resume_cfg.resume_from = Some(ckpt.clone());
+    let err = SimNet::from_config(&resume_cfg)
+        .unwrap()
+        .run()
+        .unwrap_err();
+    assert!(
+        matches!(err, Error::Integrity(_)),
+        "tampering must be Error::Integrity, got {err:?}"
+    );
+
+    // Truncation too: half the file is not a quietly-shorter run.
+    let bytes = std::fs::read(&ckpt).unwrap();
+    std::fs::write(&ckpt, &bytes[..bytes.len() / 2]).unwrap();
+    let err = SimNet::from_config(&resume_cfg)
+        .unwrap()
+        .run()
+        .unwrap_err();
+    assert!(
+        matches!(err, Error::Integrity(_)),
+        "truncation must be Error::Integrity, got {err:?}"
+    );
+
+    // And a checkpoint from a different run shape is a config error
+    // (the file itself is intact).
+    let dir2 = tmp_dir("tamper2");
+    let mut other_cfg = cfg.clone();
+    other_cfg.seed = cfg.seed + 1;
+    other_cfg.checkpoint_every = 5;
+    other_cfg.checkpoint_dir = Some(dir2.clone());
+    SimNet::from_config(&other_cfg).unwrap().run().unwrap();
+    let mut cross_cfg = cfg.clone();
+    cross_cfg.resume_from = Some(checkpoint::checkpoint_path(&dir2, 5));
+    let err = SimNet::from_config(&cross_cfg)
+        .unwrap()
+        .run()
+        .unwrap_err();
+    assert!(
+        matches!(err, Error::Config(_)),
+        "wrong-run checkpoint must be Error::Config, got {err:?}"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::remove_dir_all(&dir2).ok();
+}
+
+#[test]
+fn crash_safe_knobs_unset_leave_every_engine_bit_identical() {
+    // Regression grid: with churn "none", chaos empty and checkpointing
+    // off (the defaults), the digests of all three engines must be
+    // exactly what they were before this subsystem existed — and
+    // explicitly-default knobs must match implicitly-default ones.
+    for (name, cfg) in engine_grid() {
+        let implicit = SimNet::from_config(&cfg).unwrap().run().unwrap();
+        assert_eq!(implicit.faults_injected, 0, "{name}");
+
+        let mut explicit_cfg = cfg.clone();
+        explicit_cfg.sim.churn = "none".into();
+        explicit_cfg.checkpoint_every = 0;
+        explicit_cfg.chaos = Vec::new();
+        let explicit =
+            SimNet::from_config(&explicit_cfg).unwrap().run().unwrap();
+        assert_eq!(implicit.trace_digest, explicit.trace_digest, "{name}");
+        assert_eq!(
+            implicit.makespan_ms.to_bits(),
+            explicit.makespan_ms.to_bits(),
+            "{name}"
+        );
+        assert_eq!(implicit.comm_bytes, explicit.comm_bytes, "{name}");
+
+        // Checkpoint *writing* is a pure observer as well.
+        let dir = tmp_dir(&format!("neutral_{name}"));
+        let mut saved_cfg = cfg.clone();
+        saved_cfg.checkpoint_every = 3;
+        saved_cfg.checkpoint_dir = Some(dir.clone());
+        let saved =
+            SimNet::from_config(&saved_cfg).unwrap().run().unwrap();
+        assert_eq!(
+            implicit.trace_digest, saved.trace_digest,
+            "{name}: checkpoint writes shifted the trace"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+#[test]
+fn drop_frames_converts_reports_into_dropouts_deterministically() {
+    for (name, cfg) in engine_grid() {
+        let clean = SimNet::from_config(&cfg).unwrap().run().unwrap();
+        let mut lossy_cfg = cfg.clone();
+        lossy_cfg.chaos = vec!["drop_frames(0.3)".into()];
+        let lossy =
+            SimNet::from_config(&lossy_cfg).unwrap().run().unwrap();
+        assert!(
+            lossy.faults_injected > 0,
+            "{name}: 30% frame loss must fire"
+        );
+        assert!(
+            lossy.dropped > clean.dropped,
+            "{name}: lost frames must surface as dropouts \
+             ({} !> {})",
+            lossy.dropped,
+            clean.dropped
+        );
+        assert_eq!(
+            lossy.selected,
+            lossy.reported + lossy.dropped,
+            "{name}: every selection still resolves"
+        );
+        // Seed-deterministic like everything else.
+        let again =
+            SimNet::from_config(&lossy_cfg).unwrap().run().unwrap();
+        assert_eq!(lossy.trace_digest, again.trace_digest, "{name}");
+        assert_eq!(lossy.faults_injected, again.faults_injected, "{name}");
+    }
+}
+
+#[test]
+fn partition_edge_blacks_out_one_cluster() {
+    let mut cfg = base_cfg();
+    cfg.topology = "edges(4)".to_string();
+    let clean = SimNet::from_config(&cfg).unwrap().run().unwrap();
+
+    let mut parted_cfg = cfg.clone();
+    parted_cfg.chaos = vec!["partition_edge(1)".into()];
+    let parted =
+        SimNet::from_config(&parted_cfg).unwrap().run().unwrap();
+    assert!(parted.faults_injected > 0, "the partition must eat reports");
+    assert!(
+        parted.reported < clean.reported,
+        "a quarter of the population cannot report: {} !< {}",
+        parted.reported,
+        clean.reported
+    );
+
+    // A flat run has no edge clusters to partition: config error, fast.
+    let mut flat_cfg = base_cfg();
+    flat_cfg.chaos = vec!["partition_edge(1)".into()];
+    assert!(matches!(
+        SimNet::from_config(&flat_cfg),
+        Err(Error::Config(_))
+    ));
+}
+
+#[test]
+fn corrupt_checkpoint_fault_poisons_what_it_writes() {
+    let (_, cfg) = engine_grid().remove(0);
+    let dir = tmp_dir("poison");
+    let mut ck_cfg = cfg.clone();
+    ck_cfg.checkpoint_every = 4;
+    ck_cfg.checkpoint_dir = Some(dir.clone());
+    ck_cfg.chaos = vec!["corrupt_checkpoint".into()];
+    let report = SimNet::from_config(&ck_cfg).unwrap().run().unwrap();
+    assert!(report.faults_injected > 0);
+
+    let mut resume_cfg = cfg.clone();
+    resume_cfg.resume_from = Some(checkpoint::checkpoint_path(&dir, 4));
+    let err = SimNet::from_config(&resume_cfg)
+        .unwrap()
+        .run()
+        .unwrap_err();
+    assert!(matches!(err, Error::Integrity(_)), "got {err:?}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn churn_models_change_membership_between_rounds() {
+    // grow: +1/round at the 9 interior boundaries of a 10-round run.
+    let mut grow_cfg = base_cfg();
+    grow_cfg.sim.churn = "grow(1)".into();
+    let grow = SimNet::from_config(&grow_cfg).unwrap().run().unwrap();
+    assert_eq!(grow.num_clients, 300 + 9);
+    assert!(grow.converged);
+
+    // shrink: population stays (departures only idle the retired
+    // clients) but fewer distinct clients remain selectable.
+    let mut shrink_cfg = base_cfg();
+    shrink_cfg.sim.churn = "shrink(2)".into();
+    let shrink =
+        SimNet::from_config(&shrink_cfg).unwrap().run().unwrap();
+    assert_eq!(shrink.num_clients, 300);
+    assert!(shrink.converged, "rounds still close as clients retire");
+
+    // Fractional flux is deterministic and accrues exactly.
+    let mut flux_cfg = base_cfg();
+    flux_cfg.sim.churn = "flux(0.5,0.5)".into();
+    let a = SimNet::from_config(&flux_cfg).unwrap().run().unwrap();
+    let b = SimNet::from_config(&flux_cfg).unwrap().run().unwrap();
+    assert_eq!(a.trace_digest, b.trace_digest);
+    // 0.5/round over 9 interior boundaries ⇒ exactly 4 joins.
+    assert_eq!(a.num_clients, 300 + 4);
+}
+
+#[test]
+fn checkpoint_resume_composes_with_churn_and_codec_knobs() {
+    // The hardest composition: hierarchical topology, codec-compressed
+    // uplinks, churn growing the population *and* a mid-run kill. The
+    // resumed run must still replay the uninterrupted digest — churn
+    // credits and the churn RNG stream ride the checkpoint.
+    let mut cfg = base_cfg();
+    cfg.topology = "edges(4)".to_string();
+    cfg.codec = Some("top_k_i8(0.05)".into());
+    cfg.sim.churn = "flux(1,0.5)".into();
+    let clean = SimNet::from_config(&cfg).unwrap().run().unwrap();
+    assert!(clean.converged);
+
+    let dir = tmp_dir("compose");
+    let mut killed_cfg = cfg.clone();
+    killed_cfg.checkpoint_every = 3;
+    killed_cfg.checkpoint_dir = Some(dir.clone());
+    killed_cfg.chaos = vec!["kill_server_at_round(6)".into()];
+    let killed =
+        SimNet::from_config(&killed_cfg).unwrap().run().unwrap();
+    assert!(killed.cancelled);
+
+    let mut resume_cfg = cfg.clone();
+    resume_cfg.resume_from = Some(checkpoint::checkpoint_path(&dir, 6));
+    let resumed =
+        SimNet::from_config(&resume_cfg).unwrap().run().unwrap();
+    assert_eq!(resumed.trace_digest, clean.trace_digest);
+    assert_eq!(resumed.num_clients, clean.num_clients);
+    assert_eq!(resumed.comm_bytes, clean.comm_bytes);
+    assert_eq!(
+        resumed.makespan_ms.to_bits(),
+        clean.makespan_ms.to_bits()
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -16,10 +16,20 @@ use easyfl::util::rng::Rng;
 
 /// True when the AOT artifact bundle is present (artifact-gated e2e
 /// tests skip without it).
+///
+/// Tracking (ROADMAP "seed tests failing"): the seed's real-training
+/// tests need compiled AOT artifacts (`make artifacts`) that the bare
+/// checkout doesn't carry, so every caller gates on this and returns
+/// early — an explicit, logged skip rather than a red suite. When the
+/// PJRT-backed path lands (ROADMAP carried-over item 1), drop the gate.
 pub fn artifacts_ready() -> bool {
-    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+    let ready = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
         .join("artifacts/manifest.json")
-        .exists()
+        .exists();
+    if !ready {
+        eprintln!("skipping artifact-gated test: run `make artifacts` first");
+    }
+    ready
 }
 
 /// A uniform random parameter vector in [-1, 1).

@@ -6,10 +6,17 @@ use std::sync::Arc;
 use easyfl::tracking::Tracker;
 use easyfl::{Allocation, Config, DatasetKind, Partition};
 
+// Tracking (ROADMAP "seed tests failing"): every test here drives real
+// training and needs the AOT artifact bundle (`make artifacts`) the bare
+// checkout doesn't carry — logged skip, not a red suite.
 fn artifacts_ready() -> bool {
-    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+    let ready = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
         .join("artifacts/manifest.json")
-        .exists()
+        .exists();
+    if !ready {
+        eprintln!("skipping artifact-gated test: run `make artifacts` first");
+    }
+    ready
 }
 
 fn quick_cfg() -> Config {

@@ -7,10 +7,17 @@ use std::path::PathBuf;
 use easyfl::platform::JobStatus;
 use easyfl::{Config, DatasetKind, Partition, Platform, Sweep};
 
+// Tracking (ROADMAP "seed tests failing"): concurrent-job tests train
+// for real and need the AOT artifact bundle (`make artifacts`) the bare
+// checkout doesn't carry — logged skip, not a red suite.
 fn artifacts_ready() -> bool {
-    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+    let ready = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
         .join("artifacts/manifest.json")
-        .exists()
+        .exists();
+    if !ready {
+        eprintln!("skipping artifact-gated test: run `make artifacts` first");
+    }
+    ready
 }
 
 fn quick_cfg() -> Config {
@@ -31,7 +38,6 @@ fn quick_cfg() -> Config {
 #[test]
 fn three_concurrent_jobs_complete_with_distinct_trackers() {
     if !artifacts_ready() {
-        eprintln!("skipping: run `make artifacts` first");
         return;
     }
     let tracking_dir =

@@ -1,6 +1,14 @@
 //! Integration: the remote path (registry → client services → remote
 //! coordinator) over loopback TCP, in-process.
+//!
+//! The reactor fault suite at the bottom drives the nonblocking ingest
+//! path with raw sockets — mid-frame disconnects, stalled partial
+//! frames, slow consumers — and asserts the failure contract: typed
+//! per-client errors, no hangs, no dropped replies. It needs no AOT
+//! artifacts, so it runs everywhere.
 
+use std::io::Write;
+use std::net::{TcpListener, TcpStream};
 use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::Duration;
@@ -11,10 +19,17 @@ use easyfl::flow::DefaultServerFlow;
 use easyfl::tracking::Tracker;
 use easyfl::{Config, DatasetKind, Partition};
 
+// Tracking (ROADMAP "seed tests failing"): real-training loopback tests
+// need AOT artifacts the bare checkout doesn't carry — logged skip, not
+// a red suite. The reactor fault suite below is NOT gated.
 fn artifacts_ready() -> bool {
-    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+    let ready = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
         .join("artifacts/manifest.json")
-        .exists()
+        .exists();
+    if !ready {
+        eprintln!("skipping artifact-gated test: run `make artifacts` first");
+    }
+    ready
 }
 
 fn quick_cfg() -> Config {
@@ -216,4 +231,152 @@ fn dead_client_surfaces_as_comm_error() {
     coord.set_clients(vec![(0, "127.0.0.1:1".into())]);
     let err = coord.run_round(0);
     assert!(err.is_err());
+}
+
+// ------------------------------------------------- reactor fault suite
+
+use easyfl::comm::reactor::gather_reactor;
+use easyfl::comm::rpc::Connection;
+use easyfl::comm::Message;
+use easyfl::Error;
+
+/// `n` coordinator-side connections paired with their raw peer sockets
+/// (the "clients" the tests drive byte-by-byte). Pairing is sequential
+/// (connect then accept), so index `i` on both sides is the same wire.
+fn fake_cohort(n: usize) -> (Vec<(usize, Connection)>, Vec<TcpStream>) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let mut conns = Vec::with_capacity(n);
+    let mut peers = Vec::with_capacity(n);
+    for i in 0..n {
+        conns.push((i, Connection::connect(&addr).unwrap()));
+        let (peer, _) = listener.accept().unwrap();
+        peer.set_nodelay(true).ok();
+        peers.push(peer);
+    }
+    (conns, peers)
+}
+
+/// A wire frame exactly as `write_frame` lays it out: 4-byte LE length
+/// prefix, then the encoded message body.
+fn frame(msg: &Message) -> Vec<u8> {
+    let body = msg.encode();
+    let mut out = (body.len() as u32).to_le_bytes().to_vec();
+    out.extend_from_slice(&body);
+    out
+}
+
+#[test]
+fn mid_frame_disconnect_is_a_typed_error_for_that_client_only() {
+    let (conns, mut peers) = fake_cohort(3);
+    let good = frame(&Message::Pong);
+
+    // Clients 0 and 2 answer normally; client 1 dies two bytes into its
+    // length prefix.
+    peers[0].write_all(&good).unwrap();
+    peers[1].write_all(&good[..2]).unwrap();
+    peers[2].write_all(&good).unwrap();
+    drop(peers.remove(1)); // close the socket mid-frame
+
+    let ingest = gather_reactor(conns, 2, 8);
+    let mut ok = 0;
+    let mut failed = Vec::new();
+    while let Some((idx, res)) = ingest.recv() {
+        match res {
+            Ok(msg) => {
+                assert!(matches!(msg, Message::Pong), "client {idx}");
+                ok += 1;
+            }
+            Err(e) => {
+                assert!(
+                    matches!(e, Error::Comm(_)),
+                    "client {idx}: want a typed comm error, got {e:?}"
+                );
+                assert!(
+                    e.to_string().contains("mid-frame"),
+                    "client {idx}: {e}"
+                );
+                failed.push(idx);
+            }
+        }
+    }
+    // Every connection resolved — the two healthy replies delivered,
+    // exactly one typed failure, nobody hung.
+    assert_eq!(ok, 2);
+    assert_eq!(failed, vec![1]);
+}
+
+#[test]
+fn stalled_partial_frames_reassemble_without_blocking_the_shard() {
+    let (conns, mut peers) = fake_cohort(3);
+    let good = frame(&Message::Pong);
+    let stalled = frame(&Message::Err { msg: "late but intact".into() });
+
+    // Client 1 trickles: half its frame now, the rest after a pause long
+    // enough that its shard-mates must complete first. One reactor
+    // worker multiplexes all three connections, so a blocking read on
+    // the stalled socket would wedge everyone — the assertion that
+    // clients 0 and 2 arrive first is the no-head-of-line-blocking
+    // proof.
+    peers[1].write_all(&stalled[..stalled.len() / 2]).unwrap();
+    peers[0].write_all(&good).unwrap();
+    peers[2].write_all(&good).unwrap();
+    let mut late = peers.remove(1);
+    let rest = stalled[stalled.len() / 2..].to_vec();
+    let writer = std::thread::spawn(move || {
+        std::thread::sleep(Duration::from_millis(150));
+        late.write_all(&rest).unwrap();
+    });
+
+    let ingest = gather_reactor(conns, 1, 8);
+    let mut order = Vec::new();
+    while let Some((idx, res)) = ingest.recv() {
+        let msg = res.unwrap_or_else(|e| panic!("client {idx}: {e}"));
+        if idx == 1 {
+            match msg {
+                Message::Err { msg } => {
+                    assert_eq!(msg, "late but intact")
+                }
+                other => panic!("client 1: wrong frame {other:?}"),
+            }
+        }
+        order.push(idx);
+    }
+    writer.join().unwrap();
+    assert_eq!(order.len(), 3, "every client resolved");
+    assert_eq!(order[2], 1, "the stalled frame must arrive last — the \
+                             fast clients were not blocked behind it");
+}
+
+#[test]
+fn slow_reader_backpressure_bounds_the_queue_without_dropping() {
+    const N: usize = 24;
+    const CAP: usize = 4;
+    let (conns, mut peers) = fake_cohort(N);
+    let good = frame(&Message::Pong);
+    for peer in &mut peers {
+        peer.write_all(&good).unwrap();
+    }
+
+    // All replies are wire-complete before the consumer reads one; a
+    // capacity-4 queue forces the reactor workers to park in send()
+    // instead of buffering unboundedly or dropping.
+    let ingest = gather_reactor(conns, 2, CAP);
+    std::thread::sleep(Duration::from_millis(50));
+    let mut seen = vec![false; N];
+    let mut count = 0;
+    while let Some((idx, res)) = ingest.recv() {
+        assert!(res.is_ok(), "client {idx}: {:?}", res.err());
+        assert!(!seen[idx], "client {idx} delivered twice");
+        seen[idx] = true;
+        count += 1;
+        // Consumer slower than the wire: backpressure stays engaged.
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    assert_eq!(count, N, "backpressure must never drop a reply");
+    assert!(
+        ingest.max_depth() <= CAP,
+        "queue depth {} exceeded its bound {CAP}",
+        ingest.max_depth()
+    );
 }
