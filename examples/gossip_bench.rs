@@ -1,0 +1,165 @@
+//! gossip_bench — serverless P2P federation smoke at 10k clients.
+//!
+//! Runs the same population twice on one seed: once under the gossip
+//! engine on a `gossip(k)` peer graph (every client exchanges deltas
+//! with its k neighbors, no server anywhere) and once as the classic
+//! flat-star baseline at the same round budget. CI runs the 10k-client
+//! variant, asserts the gossip run moved zero bytes to the cloud while
+//! still driving consensus distance below a threshold, and records the
+//! decentralization trade-off to `BENCH_gossip.json`:
+//!
+//! ```text
+//! cargo run --release --example gossip_bench -- \
+//!     --clients 10000 --rounds 20 --gossip-k 8 --budget-ms 60000 \
+//!     --bench-out BENCH_gossip.json
+//! ```
+
+use easyfl::config::{Config, DatasetKind};
+use easyfl::util::args::{usage, Args, Opt};
+use easyfl::util::bench::write_bench;
+use easyfl::util::json::{obj, Json};
+use easyfl::SimReport;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn opts() -> Vec<Opt> {
+    vec![
+        Opt { name: "clients", help: "federation population", default: Some("10000"), is_flag: false },
+        Opt { name: "rounds", help: "rounds to simulate", default: Some("20"), is_flag: false },
+        Opt { name: "gossip-k", help: "peer-graph degree", default: Some("8"), is_flag: false },
+        Opt { name: "clients-per-round", help: "star baseline's aggregation target K", default: Some("100"), is_flag: false },
+        Opt { name: "seed", help: "RNG seed", default: Some("42"), is_flag: false },
+        Opt { name: "consensus-max", help: "fail if final consensus distance exceeds this", default: Some("1.0"), is_flag: false },
+        Opt { name: "budget-ms", help: "fail if gossip wall time exceeds this (0 = off)", default: Some("0"), is_flag: false },
+        Opt { name: "bench-out", help: "write trade-off JSON here", default: None, is_flag: false },
+        Opt { name: "help", help: "show help", default: None, is_flag: true },
+    ]
+}
+
+fn base_config(a: &Args) -> easyfl::Result<Config> {
+    let mut cfg = Config::for_dataset(DatasetKind::Femnist);
+    cfg.num_clients = a.get_usize("clients")?;
+    cfg.clients_per_round = a.get_usize("clients-per-round")?;
+    cfg.rounds = a.get_usize("rounds")?;
+    cfg.seed = a.get_usize("seed")? as u64;
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn describe(tag: &str, rep: &SimReport) {
+    println!(
+        "{tag:<10} {:>2} rounds | makespan {:>8.1} s | P2P {:>7.1} MiB | \
+         cloud {:>7.1} MiB | consensus {:.4} | {:.0} events/s",
+        rep.rounds,
+        rep.makespan_ms / 1000.0,
+        rep.comm_bytes as f64 / (1024.0 * 1024.0),
+        rep.bytes_to_cloud as f64 / (1024.0 * 1024.0),
+        rep.consensus_distance,
+        rep.events_per_sec()
+    );
+}
+
+fn run() -> easyfl::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let opts = opts();
+    let a = Args::parse(&argv, &opts)?;
+    if a.has_flag("help") {
+        println!(
+            "{}",
+            usage(
+                "gossip_bench",
+                "Serverless gossip rounds vs the flat-star baseline at \
+                 one seed: zero cloud bytes, bounded consensus distance.",
+                &opts
+            )
+        );
+        return Ok(());
+    }
+    let k = a.get_usize("gossip-k")?;
+
+    let mut gossip_cfg = base_config(&a)?;
+    gossip_cfg.topology = format!("gossip({k})");
+    gossip_cfg.sim.engine = "gossip".into();
+    gossip_cfg.validate()?;
+    let star_cfg = base_config(&a)?;
+
+    println!(
+        "simulating {} clients × {} rounds: gossip({k}) vs flat star...",
+        gossip_cfg.num_clients, gossip_cfg.rounds
+    );
+    let sw = std::time::Instant::now();
+    let gossip = easyfl::simnet::simulate(&gossip_cfg)?;
+    let gossip_wall_ms = sw.elapsed().as_secs_f64() * 1000.0;
+    describe("gossip", &gossip);
+    let star = easyfl::simnet::simulate(&star_cfg)?;
+    describe("star", &star);
+
+    if gossip.bytes_to_cloud != 0 {
+        return Err(easyfl::Error::Runtime(format!(
+            "gossip run moved {} bytes to the cloud — the engine is not \
+             serverless",
+            gossip.bytes_to_cloud
+        )));
+    }
+    if gossip.comm_bytes == 0 {
+        return Err(easyfl::Error::Runtime(
+            "gossip run reported zero P2P traffic".into(),
+        ));
+    }
+    if star.bytes_to_cloud == 0 {
+        return Err(easyfl::Error::Runtime(
+            "star baseline moved no bytes to the cloud — bad baseline".into(),
+        ));
+    }
+    let consensus_max = a.get_f64("consensus-max")?;
+    if gossip.consensus_distance > consensus_max {
+        return Err(easyfl::Error::Runtime(format!(
+            "consensus distance {:.4} exceeded the {consensus_max} bound \
+             after {} rounds",
+            gossip.consensus_distance, gossip.rounds
+        )));
+    }
+    println!(
+        "serverless: 0 cloud bytes over {} rounds, consensus {:.4} ≤ \
+         {consensus_max} (star pushed {:.1} MiB through the server)",
+        gossip.rounds,
+        gossip.consensus_distance,
+        star.bytes_to_cloud as f64 / (1024.0 * 1024.0)
+    );
+
+    if let Some(path) = a.get("bench-out") {
+        write_bench(
+            path,
+            "gossip_bench",
+            Some(&gossip_cfg),
+            obj([
+                ("gossip_k", Json::Num(k as f64)),
+                ("gossip_digest", Json::Str(format!("{:016x}", gossip.trace_digest))),
+                ("consensus_distance", Json::Num(gossip.consensus_distance)),
+                ("gossip_p2p_bytes", Json::Num(gossip.comm_bytes as f64)),
+                ("gossip_cloud_bytes", Json::Num(gossip.bytes_to_cloud as f64)),
+                ("star_cloud_bytes", Json::Num(star.bytes_to_cloud as f64)),
+                ("gossip_makespan_ms", Json::Num(gossip.makespan_ms)),
+                ("star_makespan_ms", Json::Num(star.makespan_ms)),
+                ("gossip_wall_ms", Json::Num(gossip_wall_ms)),
+                ("star_wall_ms", Json::Num(star.wall_ms)),
+                ("gossip_events_per_sec", Json::Num(gossip.events_per_sec())),
+            ]),
+        )?;
+        println!("benchmark written to {path}");
+    }
+
+    let budget_ms = a.get_f64("budget-ms")?;
+    if budget_ms > 0.0 && gossip_wall_ms > budget_ms {
+        return Err(easyfl::Error::Runtime(format!(
+            "gossip wall time {gossip_wall_ms:.0} ms exceeded the \
+             {budget_ms:.0} ms budget"
+        )));
+    }
+    Ok(())
+}

@@ -40,7 +40,8 @@ pub mod sketch;
 pub use masked::SliceMaskedAggregator;
 pub use mean::MeanAggregator;
 pub use robust::{
-    CoordinateMedianAggregator, NormClipAggregator, TrimmedMeanAggregator,
+    CoordinateMedianAggregator, KrumAggregator, NormClipAggregator,
+    TrimmedMeanAggregator,
 };
 pub use sketch::{SketchMedian, SketchTrimmedMean};
 
@@ -293,6 +294,13 @@ pub(crate) fn register_builtins(reg: &mut crate::registry::ComponentRegistry) {
         "norm_clip",
         Arc::new(|ctx| {
             Ok(Box::new(NormClipAggregator::from_ctx(ctx)?)
+                as Box<dyn Aggregator>)
+        }),
+    );
+    reg.register_aggregator(
+        "krum",
+        Arc::new(|ctx| {
+            Ok(Box::new(KrumAggregator::from_ctx(ctx)?)
                 as Box<dyn Aggregator>)
         }),
     );

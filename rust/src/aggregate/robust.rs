@@ -516,6 +516,108 @@ impl Aggregator for NormClipAggregator {
     }
 }
 
+// --------------------------------------------------------------- krum
+
+/// Krum selection (the `"krum"` entry): return the *single* buffered
+/// update whose summed squared distance to its `n − f − 2` nearest
+/// peers is smallest.
+///
+/// Where the trimmed mean and the median are per-coordinate order
+/// statistics, Krum is a whole-vector distance rule: a corrupted update
+/// is far from the honest cluster in L2 no matter which coordinates it
+/// poisoned, so with `f < (n − 2) / 2` Byzantine updates the minimizer
+/// is an honest vector (Blanchard et al., NeurIPS 2017). The assumed
+/// Byzantine count is `f = ⌊trim_frac·n⌋` — the same knob the trimmed
+/// mean uses — clamped so at least one neighbor distance always scores.
+///
+/// Selection ignores weights (distance is a property of the vectors);
+/// the chosen update is returned verbatim. O(n²·P) pairwise distances —
+/// the intrinsic price of distance-based robustness — which at gossip
+/// neighborhood sizes (k+1 updates) is trivially cheap, making `krum`
+/// a natural per-neighborhood rule for the gossip engine.
+pub struct KrumAggregator {
+    buf: UpdateBuffer,
+    /// Assumed Byzantine fraction, in [0, 0.5) (`ctx.trim_frac`).
+    trim_frac: f64,
+}
+
+impl KrumAggregator {
+    /// Build from a construction context; `ctx.trim_frac` is the
+    /// assumed Byzantine fraction, validated like `trimmed_mean`'s.
+    pub fn from_ctx(ctx: &AggContext) -> Result<KrumAggregator> {
+        if !(0.0..0.5).contains(&ctx.trim_frac) {
+            return Err(Error::Config(format!(
+                "krum: trim_frac must be in [0, 0.5), got {}",
+                ctx.trim_frac
+            )));
+        }
+        Ok(KrumAggregator {
+            buf: UpdateBuffer::from_ctx(ctx),
+            trim_frac: ctx.trim_frac,
+        })
+    }
+}
+
+impl Aggregator for KrumAggregator {
+    fn name(&self) -> &'static str {
+        "krum"
+    }
+
+    fn add(&mut self, update: &Update, weight: f64) -> Result<()> {
+        self.buf.add(update, weight)
+    }
+
+    fn count(&self) -> usize {
+        self.buf.rows.len()
+    }
+
+    fn total_weight(&self) -> f64 {
+        self.buf.total_weight
+    }
+
+    fn finish(&mut self) -> Result<ParamVec> {
+        self.buf.check_finish()?;
+        let rows = &self.buf.rows;
+        let n = rows.len();
+        let f = ((self.trim_frac * n as f64).floor() as usize)
+            .min(n.saturating_sub(3));
+        // Score over the n−f−2 nearest peers; degenerate cohorts (n ≤ 3)
+        // still score their single nearest neighbor.
+        let closest = (n - f).saturating_sub(2).max(1);
+        let mut best = 0usize;
+        let mut best_score = f64::INFINITY;
+        let mut dists = Vec::with_capacity(n.saturating_sub(1));
+        for i in 0..n {
+            dists.clear();
+            for j in 0..n {
+                if j == i {
+                    continue;
+                }
+                let d2: f64 = rows[i]
+                    .0
+                    .iter()
+                    .zip(rows[j].0.iter())
+                    .map(|(a, b)| {
+                        let d = (*a - *b) as f64;
+                        d * d
+                    })
+                    .sum();
+                dists.push(d2);
+            }
+            dists.sort_by(|a, b| a.total_cmp(b));
+            let score: f64 = dists[..closest.min(dists.len())].iter().sum();
+            // Strict `<` keeps the lowest index on ties — deterministic.
+            if score < best_score {
+                best_score = score;
+                best = i;
+            }
+        }
+        let out = ParamVec(rows[best].0.clone());
+        self.buf.reset();
+        Ok(out)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -813,5 +915,89 @@ mod tests {
         assert_eq!(agg.total_weight(), 0.0);
         agg.add(&dense(vec![2.0, 2.0]), 1.0).unwrap();
         assert_eq!(agg.finish().unwrap().0, vec![2.0, 2.0]);
+    }
+
+    #[test]
+    fn krum_picks_an_honest_update_under_sign_flip_corruption() {
+        // Property: over many seeded cohorts with f < n/2 − 1 sign-flip
+        // corruptions, the Krum winner is always one of the honest rows.
+        let p = 8;
+        let n = 10;
+        let mut rng = crate::util::rng::Rng::new(0x4B52_554D);
+        for trial in 0..50 {
+            // f ∈ {1, 2, 3} satisfies f < n/2 − 1 = 4.
+            let f = 1 + (trial % 3);
+            let mut c = ctx(vec![0.0; p]);
+            c.trim_frac = f as f64 / n as f64 + 1e-9;
+            let mut agg = KrumAggregator::from_ctx(&c).unwrap();
+            // Honest updates cluster around a common direction.
+            let center: Vec<f32> =
+                (0..p).map(|_| rng.normal() as f32).collect();
+            let mut honest: Vec<Vec<f32>> = Vec::new();
+            for _ in 0..n - f {
+                let row: Vec<f32> = center
+                    .iter()
+                    .map(|v| v + (rng.normal() * 0.05) as f32)
+                    .collect();
+                honest.push(row);
+            }
+            // Corrupted rows are honest-shaped but sign-flipped (and
+            // scaled, the classic model-poisoning shape).
+            let mut rows: Vec<Vec<f32>> = honest.clone();
+            for _ in 0..f {
+                rows.push(center.iter().map(|v| v * -5.0).collect());
+            }
+            // Interleave: corrupt rows first, so index order can't help.
+            rows.rotate_right(f);
+            for row in &rows {
+                agg.add(&dense(row.clone()), 1.0).unwrap();
+            }
+            let out = agg.finish().unwrap();
+            assert!(
+                honest.iter().any(|h| h[..] == out.0[..]),
+                "trial {trial}: krum returned a corrupted row: {:?}",
+                out.0
+            );
+        }
+    }
+
+    #[test]
+    fn krum_degenerates_gracefully_on_tiny_cohorts() {
+        let mut c = ctx(vec![0.0; 2]);
+        c.trim_frac = 0.2;
+        let mut agg = KrumAggregator::from_ctx(&c).unwrap();
+        // Singleton cohort: the only row wins.
+        agg.add(&dense(vec![3.0, 4.0]), 1.0).unwrap();
+        assert_eq!(agg.finish().unwrap().0, vec![3.0, 4.0]);
+        // Pair: symmetric scores, lowest index wins deterministically.
+        agg.add(&dense(vec![1.0, 1.0]), 1.0).unwrap();
+        agg.add(&dense(vec![2.0, 2.0]), 1.0).unwrap();
+        assert_eq!(agg.finish().unwrap().0, vec![1.0, 1.0]);
+        // Empty cohort errors like every other aggregator.
+        assert!(agg.finish().is_err());
+        // Hostile fraction rejected at construction.
+        let mut bad = ctx(vec![0.0; 2]);
+        bad.trim_frac = 0.5;
+        assert!(KrumAggregator::from_ctx(&bad).is_err());
+    }
+
+    #[test]
+    fn krum_returns_a_buffered_row_verbatim_and_resets() {
+        let mut c = ctx(vec![0.0; 3]);
+        c.trim_frac = 0.0;
+        let mut agg = KrumAggregator::from_ctx(&c).unwrap();
+        let rows =
+            [vec![1.0, 0.0, 0.0], vec![1.1, 0.0, 0.0], vec![9.0, 9.0, 9.0]];
+        for r in &rows {
+            agg.add(&dense(r.clone()), 1.0).unwrap();
+        }
+        assert_eq!(agg.count(), 3);
+        let out = agg.finish().unwrap();
+        assert!(
+            rows.iter().any(|r| r[..] == out.0[..]),
+            "krum must return one of its inputs verbatim"
+        );
+        assert!(out.0[0] < 2.0, "the outlier row must not win");
+        assert_eq!(agg.count(), 0, "finish resets for the next round");
     }
 }

@@ -204,6 +204,13 @@ pub struct SimConfig {
     /// registered name. "none" burns zero RNG and leaves every
     /// pre-existing trace digest bit-identical.
     pub churn: String,
+    /// Round engine family: "server" (sync/async/hierarchical, the
+    /// default) or "gossip" (serverless P2P rounds over a `gossip(k)` /
+    /// `ring` peer-graph topology; `bytes_to_cloud` stays 0). "server"
+    /// leaves every pre-existing trace digest bit-identical.
+    pub engine: String,
+    /// Gossip rounds to run when `engine = "gossip"` (0 ⇒ `Config.rounds`).
+    pub gossip_rounds: usize,
 }
 
 impl Default for SimConfig {
@@ -226,6 +233,8 @@ impl Default for SimConfig {
             adversary_frac: 0.0,
             cloud_ingest_bytes_per_ms: 0.0,
             churn: "none".into(),
+            engine: "server".into(),
+            gossip_rounds: 0,
         }
     }
 }
@@ -284,6 +293,12 @@ impl SimConfig {
         if let Some(s) = v.get("churn").as_str() {
             self.churn = s.to_string();
         }
+        if let Some(s) = v.get("engine").as_str() {
+            self.engine = s.to_string();
+        }
+        if let Some(n) = v.get("gossip_rounds").as_usize() {
+            self.gossip_rounds = n;
+        }
         Ok(())
     }
 
@@ -333,6 +348,12 @@ impl SimConfig {
                  disables elastic membership)"
                     .into(),
             ));
+        }
+        if self.engine != "server" && self.engine != "gossip" {
+            return Err(Error::Config(format!(
+                "sim.engine must be \"server\" or \"gossip\", got {:?}",
+                self.engine
+            )));
         }
         Ok(())
     }
@@ -500,6 +521,10 @@ pub struct Config {
     /// The resumed run reproduces the uninterrupted run's trace digest
     /// bit-for-bit; a tampered or truncated file is an integrity error.
     pub resume_from: Option<PathBuf>,
+    /// Retain only the newest N checkpoint files, pruning older
+    /// `ckpt_round_*.bin` after each successful save (0 = keep all, the
+    /// default). The most recent checkpoint is never deleted.
+    pub checkpoint_keep: usize,
     /// Chaos plane: registered fault specs injected into the run, e.g.
     /// `kill_server_at_round(10)`, `partition_edge(2)`,
     /// `drop_frames(0.05)`, `corrupt_checkpoint`. Empty (the default)
@@ -559,6 +584,7 @@ impl Default for Config {
             checkpoint_every: 0,
             checkpoint_dir: None,
             resume_from: None,
+            checkpoint_keep: 0,
             chaos: Vec::new(),
             sim: SimConfig::default(),
         }
@@ -743,6 +769,9 @@ impl Config {
         }
         if let Some(s) = v.get("resume_from").as_str() {
             c.resume_from = Some(PathBuf::from(s));
+        }
+        if let Some(n) = v.get("checkpoint_keep").as_usize() {
+            c.checkpoint_keep = n;
         }
         if let Some(arr) = v.get("chaos").as_arr() {
             c.chaos = Vec::with_capacity(arr.len());
@@ -1075,6 +1104,24 @@ mod tests {
     }
 
     #[test]
+    fn gossip_and_retention_knobs_parse_and_default() {
+        let c = Config::default();
+        assert_eq!(c.sim.engine, "server");
+        assert_eq!(c.sim.gossip_rounds, 0);
+        assert_eq!(c.checkpoint_keep, 0, "0 keeps every checkpoint");
+        let j = Json::parse(
+            r#"{"topology": "gossip(8)", "checkpoint_keep": 3,
+                "sim": {"engine": "gossip", "gossip_rounds": 25}}"#,
+        )
+        .unwrap();
+        let c = Config::from_json(&j).unwrap();
+        assert_eq!(c.sim.engine, "gossip");
+        assert_eq!(c.sim.gossip_rounds, 25);
+        assert_eq!(c.topology, "gossip(8)");
+        assert_eq!(c.checkpoint_keep, 3);
+    }
+
+    #[test]
     fn ingest_and_sketch_knobs_parse_and_default() {
         let c = Config::default();
         assert_eq!(c.ingest, "reactor");
@@ -1141,6 +1188,8 @@ mod tests {
             r#"{"chaos": [" "]}"#,
             r#"{"chaos": [42]}"#,
             r#"{"sim": {"churn": " "}}"#,
+            r#"{"sim": {"engine": "telepathy"}}"#,
+            r#"{"sim": {"engine": " "}}"#,
         ];
         for src in cases {
             let j = Json::parse(src).unwrap();

@@ -1,0 +1,335 @@
+//! GossipEngine — the serverless consensus state machine.
+//!
+//! The engine owns one surrogate parameter vector per client and steps
+//! them through gossip rounds: every participating client takes a local
+//! training step (a fixed per-client drift direction with geometrically
+//! decaying magnitude — clients pull *apart*), broadcasts its state to
+//! its [`PeerGraph`] neighbors, and folds what it received through a
+//! registered streaming [`Aggregator`] (clients pull *together*). With
+//! the plain mean this is classic gossip averaging; with
+//! `trimmed_mean` / `median` / `krum` each neighborhood fold is
+//! Byzantine-robust, so the adversary plane composes per-neighborhood
+//! exactly as it does per-cohort on the server engines.
+//!
+//! The engine is deliberately a *pure* state machine: all randomness
+//! (initial states, drift directions) is drawn once at construction
+//! from the RNG the caller passes in, and `local_train` / `exchange`
+//! draw nothing. That is what makes gossip checkpointing cheap — a
+//! snapshot is just the state matrix plus the round counter, and resume
+//! rebuilds the graph and drift table from the same seed.
+//!
+//! Progress is measured by **consensus distance**: the maximum
+//! per-coordinate spread (`max − min`) across honest clients, i.e. the
+//! exact maximum pairwise L∞ divergence. It starts at the initial
+//! spread, shrinks geometrically as gossip mixes, and stalls if the
+//! graph is too sparse or an adversary keeps re-injecting outliers —
+//! which is exactly the signal a federation operator needs.
+
+use crate::aggregate::Aggregator;
+use crate::error::{Error, Result};
+use crate::flow::Update;
+use crate::model::ParamVec;
+use crate::util::rng::Rng;
+
+use super::graph::PeerGraph;
+
+/// Standard deviation of the initial per-coordinate states: peers start
+/// genuinely disagreeing, so consensus distance has something to shrink.
+const INIT_SPREAD: f64 = 1.0;
+
+/// Scale of the per-client drift direction applied by `local_train`.
+const DRIFT_SCALE: f64 = 0.1;
+
+/// Geometric decay of the drift magnitude per round — local training
+/// converges, so later rounds perturb less and consensus can close.
+const DRIFT_DECAY: f64 = 0.8;
+
+/// Per-client surrogate states evolving under drift + neighborhood
+/// folds over a fixed peer graph.
+pub struct GossipEngine {
+    graph: PeerGraph,
+    dim: usize,
+    /// `n × dim` flattened current parameter state per client.
+    states: Vec<f32>,
+    /// `n × dim` fixed per-client drift directions (seed-deterministic,
+    /// rebuilt identically on resume — never checkpointed).
+    grads: Vec<f32>,
+    /// Local-training steps applied so far (== closed gossip rounds).
+    round: usize,
+    /// Double buffer for synchronous folds.
+    scratch: Vec<f32>,
+}
+
+impl GossipEngine {
+    /// Draw initial states and drift directions. This is the only place
+    /// the engine consumes randomness.
+    pub fn new(graph: PeerGraph, dim: usize, rng: &mut Rng) -> GossipEngine {
+        let n = graph.n();
+        let states: Vec<f32> = (0..n * dim)
+            .map(|_| (rng.normal() * INIT_SPREAD) as f32)
+            .collect();
+        let grads: Vec<f32> = (0..n * dim)
+            .map(|_| (rng.normal() * DRIFT_SCALE) as f32)
+            .collect();
+        let scratch = states.clone();
+        GossipEngine { graph, dim, states, grads, round: 0, scratch }
+    }
+
+    /// The wiring diagram the engine folds over.
+    pub fn graph(&self) -> &PeerGraph {
+        &self.graph
+    }
+
+    /// Closed rounds so far.
+    pub fn round(&self) -> usize {
+        self.round
+    }
+
+    /// Flattened `n × dim` state matrix (checkpoint snapshot source).
+    pub fn states(&self) -> &[f32] {
+        &self.states
+    }
+
+    /// Client `c`'s current state.
+    pub fn state(&self, c: usize) -> &[f32] {
+        &self.states[c * self.dim..(c + 1) * self.dim]
+    }
+
+    /// Overwrite state matrix + round counter from a checkpoint.
+    pub fn restore(&mut self, round: usize, states: Vec<f32>) -> Result<()> {
+        if states.len() != self.states.len() {
+            return Err(Error::Integrity(format!(
+                "gossip checkpoint carries {} state words, engine needs {}",
+                states.len(),
+                self.states.len()
+            )));
+        }
+        self.states = states;
+        self.scratch = self.states.clone();
+        self.round = round;
+        Ok(())
+    }
+
+    /// One local training step for every participating client: add its
+    /// drift direction scaled by `DRIFT_DECAY^round`. Draws no RNG.
+    pub fn local_train(&mut self, participating: &[bool]) {
+        let scale = DRIFT_DECAY.powi(self.round as i32) as f32;
+        for c in 0..self.graph.n() {
+            if !participating[c] {
+                continue;
+            }
+            let base = c * self.dim;
+            for p in 0..self.dim {
+                self.states[base + p] += self.grads[base + p] * scale;
+            }
+        }
+        self.round += 1;
+    }
+
+    /// Synchronous neighborhood fold: every participating client folds
+    /// its own (true) state with the *broadcast* states of its
+    /// participating neighbors through `agg`, all against the previous
+    /// round's snapshot (double-buffered, so fold order across clients
+    /// cannot matter). Non-participants keep their state.
+    ///
+    /// `broadcasts` is what each client *claims* its state is — the
+    /// caller corrupts adversarial rows before handing it in, so a liar
+    /// poisons its neighbors but never its own copy.
+    pub fn exchange(
+        &mut self,
+        participating: &[bool],
+        broadcasts: &[f32],
+        agg: &mut dyn Aggregator,
+    ) -> Result<()> {
+        let (n, dim) = (self.graph.n(), self.dim);
+        debug_assert_eq!(broadcasts.len(), n * dim);
+        for c in 0..n {
+            let dst = c * dim;
+            if !participating[c] {
+                self.scratch[dst..dst + dim]
+                    .copy_from_slice(&self.states[dst..dst + dim]);
+                continue;
+            }
+            agg.add(
+                &Update::Dense(ParamVec(
+                    self.states[dst..dst + dim].to_vec(),
+                )),
+                1.0,
+            )?;
+            for &j in self.graph.neighbors(c) {
+                if participating[j] {
+                    let src = j * dim;
+                    agg.add(
+                        &Update::Dense(ParamVec(
+                            broadcasts[src..src + dim].to_vec(),
+                        )),
+                        1.0,
+                    )?;
+                }
+            }
+            let folded = agg.finish()?;
+            self.scratch[dst..dst + dim].copy_from_slice(&folded.0);
+        }
+        std::mem::swap(&mut self.states, &mut self.scratch);
+        Ok(())
+    }
+
+    /// Ring all-reduce: one global fold of every participant's
+    /// broadcast, then every participant adopts the result. On the
+    /// degree-2 ring this is the classic allreduce outcome; robust
+    /// aggregators make it a Byzantine-filtered allreduce.
+    pub fn ring_all_reduce(
+        &mut self,
+        participating: &[bool],
+        broadcasts: &[f32],
+        agg: &mut dyn Aggregator,
+    ) -> Result<()> {
+        let (n, dim) = (self.graph.n(), self.dim);
+        debug_assert_eq!(broadcasts.len(), n * dim);
+        let mut any = false;
+        for c in 0..n {
+            if participating[c] {
+                let src = c * dim;
+                agg.add(
+                    &Update::Dense(ParamVec(
+                        broadcasts[src..src + dim].to_vec(),
+                    )),
+                    1.0,
+                )?;
+                any = true;
+            }
+        }
+        if !any {
+            return Ok(());
+        }
+        let folded = agg.finish()?;
+        for c in 0..n {
+            if participating[c] {
+                let dst = c * dim;
+                self.states[dst..dst + dim].copy_from_slice(&folded.0);
+            }
+        }
+        Ok(())
+    }
+
+    /// Maximum pairwise L∞ divergence across the flagged clients:
+    /// `max_p (max_i x_ip − min_i x_ip)`. Exact (not sampled), O(n·dim).
+    /// The mask selects whose divergence counts — pass the honest set so
+    /// an adversary's own outlier state does not inflate the metric.
+    pub fn consensus_distance(&self, mask: &[bool]) -> f64 {
+        let (n, dim) = (self.graph.n(), self.dim);
+        let mut worst = 0.0f64;
+        for p in 0..dim {
+            let mut lo = f64::INFINITY;
+            let mut hi = f64::NEG_INFINITY;
+            for c in 0..n {
+                if mask[c] {
+                    let v = self.states[c * dim + p] as f64;
+                    lo = lo.min(v);
+                    hi = hi.max(v);
+                }
+            }
+            if hi >= lo {
+                worst = worst.max(hi - lo);
+            }
+        }
+        worst
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Arc;
+
+    use super::*;
+    use crate::aggregate::AggContext;
+    use crate::registry;
+
+    const DIM: usize = 8;
+
+    fn engine(n: usize, k: usize, seed: u64) -> GossipEngine {
+        let mut rng = Rng::new(seed);
+        let graph = PeerGraph::build("gossip", k, n, &mut rng).unwrap();
+        GossipEngine::new(graph, DIM, &mut rng)
+    }
+
+    fn mean_agg() -> Box<dyn Aggregator> {
+        let ctx = AggContext::new(Arc::new(ParamVec::zeros(DIM)));
+        registry::with_global(|r| r.aggregator("mean", &ctx)).unwrap()
+    }
+
+    #[test]
+    fn gossip_rounds_shrink_consensus_distance() {
+        let mut e = engine(40, 4, 9);
+        let all = vec![true; 40];
+        let d0 = e.consensus_distance(&all);
+        assert!(d0 > 0.5, "initial states should disagree, got {d0}");
+        let mut agg = mean_agg();
+        for _ in 0..30 {
+            e.local_train(&all);
+            let broadcasts = e.states().to_vec();
+            e.exchange(&all, &broadcasts, agg.as_mut()).unwrap();
+        }
+        let d = e.consensus_distance(&all);
+        assert!(
+            d < d0 / 4.0,
+            "30 gossip rounds should mix: {d0} -> {d}"
+        );
+    }
+
+    #[test]
+    fn ring_all_reduce_reaches_exact_consensus_in_one_fold() {
+        let mut rng = Rng::new(5);
+        let graph = PeerGraph::build("ring", 2, 16, &mut rng).unwrap();
+        let mut e = GossipEngine::new(graph, DIM, &mut rng);
+        let all = vec![true; 16];
+        let mut agg = mean_agg();
+        e.local_train(&all);
+        let broadcasts = e.states().to_vec();
+        e.ring_all_reduce(&all, &broadcasts, agg.as_mut()).unwrap();
+        let d = e.consensus_distance(&all);
+        assert!(
+            d < 1e-5,
+            "all-reduce puts every participant on one state, got {d}"
+        );
+    }
+
+    #[test]
+    fn non_participants_keep_their_state() {
+        let mut e = engine(10, 4, 3);
+        let mut part = vec![true; 10];
+        part[7] = false;
+        let before = e.state(7).to_vec();
+        let mut agg = mean_agg();
+        e.local_train(&part);
+        let broadcasts = e.states().to_vec();
+        e.exchange(&part, &broadcasts, agg.as_mut()).unwrap();
+        assert_eq!(e.state(7), &before[..], "offline peer must not move");
+    }
+
+    #[test]
+    fn snapshot_restore_is_exact() {
+        let mut e = engine(12, 4, 21);
+        let all = vec![true; 12];
+        let mut agg = mean_agg();
+        for _ in 0..3 {
+            e.local_train(&all);
+            let b = e.states().to_vec();
+            e.exchange(&all, &b, agg.as_mut()).unwrap();
+        }
+        let snap = e.states().to_vec();
+        let round = e.round();
+        // A fresh engine from the same seed, restored, then stepped,
+        // must match the original stepped forward.
+        let mut f = engine(12, 4, 21);
+        f.restore(round, snap.clone()).unwrap();
+        for eng in [&mut e, &mut f] {
+            eng.local_train(&all);
+            let b = eng.states().to_vec();
+            eng.exchange(&all, &b, agg.as_mut()).unwrap();
+        }
+        assert_eq!(e.states(), f.states());
+        // Wrong-length restore is an integrity error.
+        assert!(f.restore(round, vec![0.0; 3]).is_err());
+    }
+}

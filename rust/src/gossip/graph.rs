@@ -1,0 +1,224 @@
+//! PeerGraph — seed-deterministic peer graphs for serverless rounds.
+//!
+//! A [`PeerGraph`] is the wiring diagram of a decentralized federation:
+//! every client owns exactly `k` undirected links and exchanges updates
+//! only over those links, so no coordinator ever sees an update. Two
+//! families are constructible:
+//!
+//! * **`gossip(k)`** — a k-regular circulant: clients are laid out on a
+//!   seed-permuted cycle and linked to the `k/2` nearest positions on
+//!   each side (odd `k` adds the diameter chord, which needs an even
+//!   population). Offset 1 alone already makes the graph connected; the
+//!   extra chords shrink its diameter so consensus spreads in
+//!   `O(n / k)` hops.
+//! * **`ring`** — the degree-2 cycle itself, the classic all-reduce
+//!   substrate.
+//!
+//! The node permutation is drawn from a dedicated RNG stream, so the
+//! same `(seed, n, k)` always yields the same graph — a requirement for
+//! bit-reproducible simulations and checkpoint resume — while different
+//! seeds decorrelate neighborhoods. Construction validates degree
+//! bounds and parity up front and BFS-checks connectivity afterwards:
+//! a partitioned peer graph would silently stall consensus, so it is a
+//! config error, not a runtime surprise.
+
+use crate::error::{Error, Result};
+use crate::util::rng::Rng;
+
+/// An undirected k-regular peer graph over `n` clients.
+///
+/// Adjacency is stored flattened (`n × k`, stride `k`) with each
+/// client's neighbor list sorted ascending, so iteration order — and
+/// therefore every downstream fold — is deterministic.
+#[derive(Debug, Clone)]
+pub struct PeerGraph {
+    n: usize,
+    k: usize,
+    /// Flattened adjacency: client `c`'s neighbors occupy
+    /// `[c*k, (c+1)*k)`, sorted ascending.
+    neighbors: Vec<usize>,
+    /// Spec head this graph was built from (`"gossip"` / `"ring"`).
+    kind: &'static str,
+}
+
+impl PeerGraph {
+    /// Check `(k, n)` feasibility without building anything — used by
+    /// `SimNet::from_config` to fail fast at construction time.
+    pub fn validate_dims(kind: &str, k: usize, n: usize) -> Result<()> {
+        if n < 3 {
+            return Err(Error::Config(format!(
+                "{kind} topology needs at least 3 clients, got {n}"
+            )));
+        }
+        if k < 2 || k >= n {
+            return Err(Error::Config(format!(
+                "{kind} degree k={k} must satisfy 2 <= k < n (n={n})"
+            )));
+        }
+        if k % 2 == 1 && n % 2 == 1 {
+            return Err(Error::Config(format!(
+                "{kind} with odd degree k={k} needs an even population \
+                 (got n={n}): the diameter chord must pair clients up"
+            )));
+        }
+        Ok(())
+    }
+
+    /// Build the seed-deterministic k-regular graph. The permutation is
+    /// the only randomness; everything after it is structural.
+    pub fn build(
+        kind: &'static str,
+        k: usize,
+        n: usize,
+        rng: &mut Rng,
+    ) -> Result<PeerGraph> {
+        PeerGraph::validate_dims(kind, k, n)?;
+        let mut perm: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut perm);
+        let mut neighbors = vec![0usize; n * k];
+        for pos in 0..n {
+            let c = perm[pos];
+            let mut slot = c * k;
+            for off in 1..=(k / 2) {
+                neighbors[slot] = perm[(pos + off) % n];
+                neighbors[slot + 1] = perm[(pos + n - off) % n];
+                slot += 2;
+            }
+            if k % 2 == 1 {
+                neighbors[slot] = perm[(pos + n / 2) % n];
+            }
+        }
+        for c in 0..n {
+            neighbors[c * k..(c + 1) * k].sort_unstable();
+        }
+        let graph = PeerGraph { n, k, neighbors, kind };
+        graph.check_connected()?;
+        Ok(graph)
+    }
+
+    /// BFS connectivity check: every client must reach every other, or
+    /// gossip consensus can never close the gap between components.
+    fn check_connected(&self) -> Result<()> {
+        let mut seen = vec![false; self.n];
+        let mut frontier = vec![0usize];
+        seen[0] = true;
+        let mut visited = 1usize;
+        while let Some(c) = frontier.pop() {
+            for &j in self.neighbors(c) {
+                if !seen[j] {
+                    seen[j] = true;
+                    visited += 1;
+                    frontier.push(j);
+                }
+            }
+        }
+        if visited != self.n {
+            return Err(Error::Config(format!(
+                "{} peer graph is disconnected: BFS reached {visited} of \
+                 {} clients",
+                self.kind, self.n
+            )));
+        }
+        Ok(())
+    }
+
+    /// Population size.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Uniform degree `k` — every client sends to exactly this many
+    /// peers per round, which is what the cost model charges.
+    pub fn degree(&self) -> usize {
+        self.k
+    }
+
+    /// Undirected edge count (`n·k / 2`).
+    pub fn num_edges(&self) -> usize {
+        self.n * self.k / 2
+    }
+
+    /// Client `c`'s neighbors, sorted ascending.
+    pub fn neighbors(&self, c: usize) -> &[usize] {
+        &self.neighbors[c * self.k..(c + 1) * self.k]
+    }
+
+    /// Spec head this graph was built from.
+    pub fn kind(&self) -> &'static str {
+        self.kind
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn degrees_ok(g: &PeerGraph) {
+        for c in 0..g.n() {
+            let nb = g.neighbors(c);
+            assert_eq!(nb.len(), g.degree());
+            // No self-loops, no duplicate edges (sorted ⇒ adjacent dups).
+            assert!(nb.iter().all(|&j| j != c), "self-loop at {c}");
+            assert!(
+                nb.windows(2).all(|w| w[0] < w[1]),
+                "duplicate neighbor at {c}: {nb:?}"
+            );
+            // Undirected: every link appears from both ends.
+            for &j in nb {
+                assert!(
+                    g.neighbors(j).contains(&c),
+                    "edge {c}->{j} missing its reverse"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn gossip_graphs_are_k_regular_symmetric_and_connected() {
+        for (k, n) in [(2, 5), (4, 9), (8, 100), (3, 10), (5, 64)] {
+            let mut rng = Rng::new(7);
+            let g = PeerGraph::build("gossip", k, n, &mut rng).unwrap();
+            degrees_ok(&g);
+            assert_eq!(g.num_edges(), n * k / 2);
+        }
+    }
+
+    #[test]
+    fn ring_is_the_degree_two_cycle() {
+        let mut rng = Rng::new(11);
+        let g = PeerGraph::build("ring", 2, 12, &mut rng).unwrap();
+        degrees_ok(&g);
+        assert_eq!(g.degree(), 2);
+        assert_eq!(g.num_edges(), 12);
+    }
+
+    #[test]
+    fn same_seed_reproduces_the_graph_and_different_seeds_differ() {
+        let build = |seed| {
+            let mut rng = Rng::new(seed);
+            PeerGraph::build("gossip", 4, 50, &mut rng).unwrap()
+        };
+        let a = build(3);
+        let b = build(3);
+        assert_eq!(a.neighbors, b.neighbors);
+        let c = build(4);
+        assert_ne!(
+            a.neighbors, c.neighbors,
+            "distinct seeds should permute the graph differently"
+        );
+    }
+
+    #[test]
+    fn infeasible_dims_are_config_errors() {
+        let mut rng = Rng::new(1);
+        // Too few clients.
+        assert!(PeerGraph::build("gossip", 2, 2, &mut rng).is_err());
+        // Degree out of range.
+        assert!(PeerGraph::build("gossip", 1, 10, &mut rng).is_err());
+        assert!(PeerGraph::build("gossip", 10, 10, &mut rng).is_err());
+        // Odd degree needs an even population.
+        assert!(PeerGraph::build("gossip", 3, 9, &mut rng).is_err());
+        assert!(PeerGraph::validate_dims("gossip", 3, 9).is_err());
+        assert!(PeerGraph::validate_dims("gossip", 8, 100).is_ok());
+    }
+}

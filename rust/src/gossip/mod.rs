@@ -1,0 +1,40 @@
+//! Decentralized gossip federation: serverless P2P rounds over peer
+//! graphs.
+//!
+//! Every other engine in the platform — sync deadline, async FedBuff,
+//! hierarchical client→edge→cloud — funnels updates through one trusted
+//! coordinator. This subsystem removes it: clients exchange updates
+//! directly with their neighbors on a seed-deterministic [`PeerGraph`]
+//! and fold what they receive through the same registered streaming
+//! aggregators the server engines use, so `bytes_to_cloud` is zero *by
+//! construction* and robustness rules (`trimmed_mean`, `median`,
+//! `krum`) apply per-neighborhood.
+//!
+//! Selecting it is pure config, like every other flow abstraction:
+//!
+//! ```no_run
+//! let mut cfg = easyfl::Config::default();
+//! cfg.sim.engine = "gossip".into();   // serverless rounds
+//! cfg.topology = "gossip(8)".into();  // 8-regular peer graph
+//! let report = easyfl::simnet::simulate(&cfg).unwrap();
+//! assert_eq!(report.bytes_to_cloud, 0);
+//! # let _ = report.consensus_distance;
+//! ```
+//!
+//! Two layers live here; the event-level driver (per-edge upload
+//! costing, dropout, chaos, checkpointing) is `SimNet::run_gossip` in
+//! the simnet module, which owns clocks and clients:
+//!
+//! * [`PeerGraph`] — seed-deterministic `gossip(k)` k-regular graphs
+//!   and the degree-2 `ring`, registered as topology specs beside
+//!   `flat` / `edges(n)` / `clusters(file)`, with degree/parity and
+//!   BFS-connectivity validation.
+//! * [`GossipEngine`] — the pure per-client state machine: local drift,
+//!   neighborhood folds, ring all-reduce, and the consensus-distance
+//!   metric (max pairwise L∞ divergence) that `SimReport` surfaces.
+
+mod engine;
+mod graph;
+
+pub use engine::GossipEngine;
+pub use graph::PeerGraph;

@@ -9,7 +9,9 @@
 //!
 //! * [`Topology`] — `flat` / `edges(n)` / `clusters(file)` specs behind
 //!   the registry's `register_topology` hook, selected by
-//!   `Config.topology`;
+//!   `Config.topology` (plus the serverless peer shapes `gossip(k)` /
+//!   `ring`, which skip the tree entirely and select the
+//!   [`crate::gossip`] engine);
 //! * [`EdgeAggregator`] — consumes one cluster's client outcomes through
 //!   the streaming [`crate::aggregate::Aggregator`] trait, so robust
 //!   reductions apply *per tier* (`Config.edge_agg` picks the edge
@@ -48,7 +50,7 @@ use crate::registry::ComponentRegistry;
 /// Install the built-in topologies (called by
 /// [`ComponentRegistry::with_builtins`]).
 pub(crate) fn register_builtins(reg: &mut ComponentRegistry) {
-    for name in ["flat", "edges", "clusters"] {
+    for name in ["flat", "edges", "clusters", "gossip", "ring"] {
         reg.register_topology(name, Arc::new(Topology::parse));
     }
 }
@@ -68,8 +70,13 @@ mod tests {
         let err = reg.topology("torus(3)").unwrap_err().to_string();
         assert!(err.contains("torus"), "{err}");
         assert!(err.contains("edges"), "{err}");
+        assert_eq!(
+            reg.topology("gossip(8)").unwrap(),
+            Topology::Gossip { k: 8 }
+        );
+        assert_eq!(reg.topology("ring").unwrap(), Topology::Ring);
         let names = reg.topology_names();
-        for t in ["flat", "edges", "clusters"] {
+        for t in ["flat", "edges", "clusters", "gossip", "ring"] {
             assert!(names.iter().any(|n| n == t), "missing topology {t}");
         }
     }

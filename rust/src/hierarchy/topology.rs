@@ -42,6 +42,15 @@ pub enum Topology {
         /// Number of edges (`max(map) + 1`).
         edges: usize,
     },
+    /// Seed-deterministic k-regular peer graph for the serverless
+    /// gossip engine (`sim.engine = "gossip"`, see [`crate::gossip`]).
+    /// Not an aggregation *tree*: there is no edge tier and no cloud.
+    Gossip {
+        /// Uniform peer degree (2 ≤ k < population).
+        k: usize,
+    },
+    /// Degree-2 cycle for the ring all-reduce gossip variant.
+    Ring,
 }
 
 impl Topology {
@@ -77,8 +86,33 @@ impl Topology {
                 })?;
                 Self::load_clusters(path)
             }
+            "gossip" => {
+                let k: usize = inner.unwrap_or("").parse().map_err(|_| {
+                    Error::Config(format!(
+                        "gossip(k) needs a peer degree, got {spec:?}"
+                    ))
+                })?;
+                if k < 2 {
+                    return Err(Error::Config(
+                        "gossip(k) needs k ≥ 2 (use \"ring\" for the \
+                         degree-2 cycle)"
+                            .into(),
+                    ));
+                }
+                Ok(Topology::Gossip { k })
+            }
+            "ring" => {
+                if inner.is_some() {
+                    return Err(Error::Config(format!(
+                        "ring takes no argument (got {spec:?}); use \
+                         gossip(k) for higher degrees"
+                    )));
+                }
+                Ok(Topology::Ring)
+            }
             other => Err(Error::Config(format!(
-                "unknown topology {other:?} (flat | edges(n) | clusters(file))"
+                "unknown topology {other:?} (flat | edges(n) | \
+                 clusters(file) | gossip(k) | ring)"
             ))),
         }
     }
@@ -119,6 +153,24 @@ impl Topology {
             Topology::Flat => "flat".into(),
             Topology::Edges { n } => format!("edges({n})"),
             Topology::Clusters { path, .. } => format!("clusters({path})"),
+            Topology::Gossip { k } => format!("gossip({k})"),
+            Topology::Ring => "ring".into(),
+        }
+    }
+
+    /// True for the serverless peer-graph shapes (`gossip(k)` / `ring`),
+    /// which require `sim.engine = "gossip"` and never build a
+    /// hierarchy plane.
+    pub fn is_peer(&self) -> bool {
+        matches!(self, Topology::Gossip { .. } | Topology::Ring)
+    }
+
+    /// Uniform peer degree for peer-graph shapes (`None` for trees).
+    pub fn peer_degree(&self) -> Option<usize> {
+        match self {
+            Topology::Gossip { k } => Some(*k),
+            Topology::Ring => Some(2),
+            _ => None,
         }
     }
 
@@ -135,6 +187,9 @@ impl Topology {
             Topology::Flat => 1,
             Topology::Edges { n } => *n,
             Topology::Clusters { edges, .. } => *edges,
+            // Peer shapes have no edge tier; the gossip engine rejects
+            // any path that would ask (SimNet validates at construction).
+            Topology::Gossip { .. } | Topology::Ring => 1,
         }
     }
 
@@ -145,6 +200,7 @@ impl Topology {
             Topology::Flat => 0,
             Topology::Edges { n } => client % n,
             Topology::Clusters { map, .. } => map[client % map.len()],
+            Topology::Gossip { .. } | Topology::Ring => 0,
         }
     }
 }
@@ -164,9 +220,32 @@ mod tests {
         assert_eq!(Topology::parse("edges(16)").unwrap().name(), "edges(16)");
         assert!(Topology::parse("edges(0)").is_err());
         assert!(Topology::parse("edges").is_err());
-        assert!(Topology::parse("ring(4)").is_err());
         assert!(Topology::parse("clusters()").is_err());
         assert!(Topology::parse("clusters(/no/such/file.json)").is_err());
+        assert_eq!(
+            Topology::parse("gossip(8)").unwrap(),
+            Topology::Gossip { k: 8 }
+        );
+        assert_eq!(Topology::parse("gossip(8)").unwrap().name(), "gossip(8)");
+        assert_eq!(Topology::parse("ring").unwrap(), Topology::Ring);
+        assert_eq!(Topology::parse("ring").unwrap().name(), "ring");
+        // Ring is degree-2 by definition; degrees are gossip(k)'s axis.
+        assert!(Topology::parse("ring(4)").is_err());
+        assert!(Topology::parse("gossip").is_err());
+        assert!(Topology::parse("gossip(1)").is_err());
+    }
+
+    #[test]
+    fn peer_shapes_expose_degree_and_never_a_tree() {
+        let g = Topology::parse("gossip(6)").unwrap();
+        assert!(g.is_peer());
+        assert!(!g.is_flat());
+        assert_eq!(g.peer_degree(), Some(6));
+        let r = Topology::parse("ring").unwrap();
+        assert!(r.is_peer());
+        assert_eq!(r.peer_degree(), Some(2));
+        assert_eq!(Topology::Flat.peer_degree(), None);
+        assert!(!Topology::parse("edges(4)").unwrap().is_peer());
     }
 
     #[test]

@@ -83,6 +83,16 @@
 //! robust reductions (`edge_agg` / `agg`) and a [`HierSweep`] grid over
 //! topology × aggregator.
 //!
+//! ## Decentralized federation
+//!
+//! [`gossip`] removes the server entirely: `sim.engine = "gossip"` with
+//! a peer topology (`"gossip(8)"` or `"ring"`) runs serverless P2P
+//! rounds where every client exchanges deltas with its [`PeerGraph`]
+//! neighbors and folds them through the registered aggregator —
+//! `bytes_to_cloud` is 0 for the whole run, convergence is measured as
+//! consensus distance, and [`GossipSweep`] grids topology × codec
+//! against the star/hierarchy baselines.
+//!
 //! See `examples/` for heterogeneity simulation, distributed-training
 //! optimization (GreedyAda), remote training, the application plugins
 //! (FedProx, STC, FedReID), and `simnet_scale` for a million-client
@@ -100,6 +110,7 @@ pub mod data;
 pub mod deployment;
 pub mod error;
 pub mod flow;
+pub mod gossip;
 pub mod hierarchy;
 pub mod model;
 pub mod obs;
@@ -117,13 +128,15 @@ pub use api::{init, Report, Session, SessionBuilder};
 pub use codec::{EncodedUpdate, TimedCodec, UpdateCodec};
 pub use config::{Allocation, Config, DatasetKind, Partition, SimMode};
 pub use error::{Error, Result};
+pub use gossip::{GossipEngine, PeerGraph};
 pub use hierarchy::{HierPlane, Topology};
 pub use obs::{
     ChromeTraceSink, Histogram, MetricsRegistry, NullSink, Span, Telemetry,
     TelemetrySink,
 };
 pub use platform::{
-    CodecSweep, CodecSweepReport, HierSweep, HierSweepReport, JobHandle,
-    JobStatus, Platform, SimSweep, SimSweepReport, Sweep, SweepReport,
+    CodecSweep, CodecSweepReport, GossipSweep, GossipSweepReport, HierSweep,
+    HierSweepReport, JobHandle, JobStatus, Platform, SimSweep, SimSweepReport,
+    Sweep, SweepReport,
 };
 pub use simnet::{SimNet, SimReport};

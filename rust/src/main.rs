@@ -17,7 +17,9 @@ use std::time::Duration;
 use easyfl::comm::{ClientService, RemoteCoordinator, Registry};
 use easyfl::config::{Allocation, Config, DatasetKind, Partition, SimMode};
 use easyfl::deployment::Deployment;
-use easyfl::platform::{CodecSweep, HierSweep, Platform, RobustSweep, SimSweep, Sweep};
+use easyfl::platform::{
+    CodecSweep, GossipSweep, HierSweep, Platform, RobustSweep, SimSweep, Sweep,
+};
 use easyfl::tracking::Tracker;
 use easyfl::util::args::{usage, Args, Opt};
 
@@ -246,6 +248,11 @@ fn cmd_simulate(argv: &[String]) -> easyfl::Result<()> {
         Opt { name: "hier-sweep", help: "run topology × tier-aggregator fan-in grid", default: None, is_flag: true },
         Opt { name: "topologies", help: "comma list of topologies for --hier-sweep", default: Some("flat,edges(4),edges(16)"), is_flag: false },
         Opt { name: "hier-aggs", help: "comma list of tier aggregators for --hier-sweep", default: Some("mean"), is_flag: false },
+        Opt { name: "engine", help: "round engine: server | gossip (needs a peer topology)", default: None, is_flag: false },
+        Opt { name: "gossip-k", help: "shortcut: --topology gossip(k) + --engine gossip", default: None, is_flag: false },
+        Opt { name: "gossip-rounds", help: "gossip round budget (0 = --rounds)", default: None, is_flag: false },
+        Opt { name: "gossip-sweep", help: "run peer-topology × codec grid vs star/edge baselines", default: None, is_flag: true },
+        Opt { name: "gossip-topologies", help: "comma list of topologies for --gossip-sweep", default: Some("gossip(4),gossip(8),ring,flat,edges(16)"), is_flag: false },
         Opt { name: "codec-sweep", help: "run codec × fraction transport grid", default: None, is_flag: true },
         Opt { name: "codecs", help: "comma list of codecs for --codec-sweep", default: Some("identity,top_k,top_k_f16,top_k_i8"), is_flag: false },
         Opt { name: "codec-fracs", help: "comma list of kept fractions for --codec-sweep", default: Some("0.05,0.2"), is_flag: false },
@@ -301,6 +308,18 @@ fn cmd_simulate(argv: &[String]) -> easyfl::Result<()> {
             .filter(|s| !s.is_empty())
             .collect();
     }
+    // Decentralized knobs: absent flags keep a --config file's choice.
+    if let Some(engine) = a.get("engine") {
+        cfg.sim.engine = engine.to_string();
+    }
+    if a.get("gossip-k").is_some() {
+        let k = a.get_usize("gossip-k")?;
+        cfg.topology = format!("gossip({k})");
+        cfg.sim.engine = "gossip".into();
+    }
+    if a.get("gossip-rounds").is_some() {
+        cfg.sim.gossip_rounds = a.get_usize("gossip-rounds")?;
+    }
     cfg.validate()?;
 
     if a.has_flag("hier-sweep") {
@@ -314,6 +333,29 @@ fn cmd_simulate(argv: &[String]) -> easyfl::Result<()> {
             .topologies(&topo_refs)
             .aggregators(&agg_refs)
             .run(&platform)?;
+        print!("{}", report.to_table());
+        return Ok(());
+    }
+
+    if a.has_flag("gossip-sweep") {
+        let topologies = list_opt(
+            &a,
+            "gossip-topologies",
+            "gossip(4),gossip(8),ring,flat,edges(16)",
+        );
+        let topo_refs: Vec<&str> =
+            topologies.iter().map(String::as_str).collect();
+        let mut sweep = GossipSweep::new(cfg).topologies(&topo_refs);
+        // An explicit --codecs list grids the wire format too; otherwise
+        // the sweep stays on the base config's codec.
+        if a.get("codecs").is_some() {
+            let codecs = list_opt(&a, "codecs", "identity");
+            let codec_refs: Vec<&str> =
+                codecs.iter().map(String::as_str).collect();
+            sweep = sweep.codecs(&codec_refs);
+        }
+        let platform = Platform::new(4);
+        let report = sweep.run(&platform)?;
         print!("{}", report.to_table());
         return Ok(());
     }
@@ -393,7 +435,16 @@ fn cmd_simulate(argv: &[String]) -> easyfl::Result<()> {
         report.avg_staleness,
         report.comm_bytes as f64 / (1024.0 * 1024.0)
     );
-    if report.topology != "flat" {
+    if report.mode == "gossip" {
+        println!(
+            "  gossip    {} | P2P traffic {:.1} MiB | bytes to cloud {} \
+             (serverless) | consensus {:.4}",
+            report.topology,
+            report.comm_bytes as f64 / (1024.0 * 1024.0),
+            report.bytes_to_cloud,
+            report.consensus_distance
+        );
+    } else if report.topology != "flat" {
         println!(
             "  hierarchy {} | bytes to cloud {:.1} MiB (uplinks stop at \
              the edge tier)",

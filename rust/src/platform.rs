@@ -1386,6 +1386,207 @@ impl CodecSweepReport {
     }
 }
 
+// ---------------------------------------------------------- gossip sweep
+
+/// Grid peer topologies × codecs under the gossip engine against the
+/// classic star/hierarchy baselines at equal round budgets: the
+/// decentralization trade-off table (P2P wire volume and consensus
+/// distance vs cloud fan-in) in one report.
+pub struct GossipSweep {
+    base: Config,
+    topologies: Vec<String>,
+    codecs: Vec<String>,
+}
+
+impl GossipSweep {
+    /// Default axes: two gossip degrees, the ring, and the flat-star /
+    /// edge-hierarchy baselines, all over the base config's codec.
+    pub fn new(base: Config) -> GossipSweep {
+        GossipSweep {
+            topologies: vec![
+                "gossip(4)".into(),
+                "gossip(8)".into(),
+                "ring".into(),
+                "flat".into(),
+                "edges(16)".into(),
+            ],
+            codecs: vec![base
+                .codec
+                .clone()
+                .unwrap_or_else(|| "identity".to_string())],
+            base,
+        }
+    }
+
+    pub fn topologies(mut self, topologies: &[&str]) -> GossipSweep {
+        self.topologies = topologies.iter().map(|s| s.to_string()).collect();
+        self
+    }
+
+    pub fn codecs(mut self, codecs: &[&str]) -> GossipSweep {
+        self.codecs = codecs.iter().map(|s| s.to_string()).collect();
+        self
+    }
+
+    /// Expand the grid (topology-major). Peer shapes run under the
+    /// gossip engine; server shapes become the baseline cells, whatever
+    /// engine the base config carried.
+    pub fn configs(&self) -> Result<Vec<Config>> {
+        let mut out = Vec::new();
+        for topo in &self.topologies {
+            let shape = registry::with_global(|r| r.topology(topo))?;
+            for codec in &self.codecs {
+                let mut cfg = self.base.clone();
+                cfg.topology = topo.clone();
+                cfg.codec = Some(codec.clone());
+                cfg.sim.engine = if shape.is_peer() {
+                    "gossip".to_string()
+                } else {
+                    "server".to_string()
+                };
+                out.push(cfg);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Submit every cell as a SimNet job and join them into a report.
+    /// Topology and codec specs are probed up front so a bad axis fails
+    /// the whole sweep fast.
+    pub fn run(self, platform: &Platform) -> Result<GossipSweepReport> {
+        let mut handles = Vec::new();
+        for cfg in self.configs()? {
+            cfg.validate()?;
+            let topology = cfg.topology.clone();
+            let spec =
+                cfg.codec.clone().unwrap_or_else(|| "identity".to_string());
+            registry::with_global(|r| r.codec(&spec).map(|_| ()))?;
+            let slot: Arc<Mutex<Option<SimReport>>> =
+                Arc::new(Mutex::new(None));
+            let slot_w = slot.clone();
+            let label = format!("gossip-{topology}-{spec}");
+            let tracker = Arc::new(Tracker::new(&label));
+            let rounds = cfg.rounds;
+            let handle = platform.spawn_job(
+                &label,
+                rounds,
+                tracker,
+                Box::new(move |ctx| {
+                    let sim = run_sim_job(&cfg, ctx)?;
+                    let report = sim.to_report();
+                    *slot_w.lock().unwrap() = Some(sim);
+                    Ok(report)
+                }),
+            )?;
+            handles.push((topology, spec, slot, handle));
+        }
+        let rows = handles
+            .into_iter()
+            .map(|(topology, codec, slot, handle)| {
+                let outcome = match handle.join() {
+                    Ok(_) => slot.lock().unwrap().take().ok_or_else(|| {
+                        Error::Runtime(
+                            "sim job finished without a report".into(),
+                        )
+                    }),
+                    Err(e) => Err(e),
+                };
+                GossipSweepRow { topology, codec, outcome }
+            })
+            .collect();
+        Ok(GossipSweepReport { rows })
+    }
+}
+
+/// One gossip-sweep cell's identity and outcome.
+pub struct GossipSweepRow {
+    /// Topology spec of the cell (e.g. `"gossip(8)"`, `"flat"`).
+    pub topology: String,
+    /// Codec spec the cell's uplinks rode.
+    pub codec: String,
+    pub outcome: Result<SimReport>,
+}
+
+/// Results of a [`GossipSweep`], renderable as an aligned text table.
+pub struct GossipSweepReport {
+    pub rows: Vec<GossipSweepRow>,
+}
+
+impl GossipSweepReport {
+    /// Successful cells only.
+    pub fn ok_rows(
+        &self,
+    ) -> impl Iterator<Item = (&GossipSweepRow, &SimReport)> {
+        self.rows
+            .iter()
+            .filter_map(|r| r.outcome.as_ref().ok().map(|rep| (r, rep)))
+    }
+
+    /// Final consensus distance of the first successful cell on the
+    /// given topology, if one ran (server baselines report 0).
+    pub fn consensus_of(&self, topology: &str) -> Option<f64> {
+        self.ok_rows()
+            .find(|(row, _)| row.topology == topology)
+            .map(|(_, rep)| rep.consensus_distance)
+    }
+
+    fn mb(bytes: usize) -> f64 {
+        bytes as f64 / (1024.0 * 1024.0)
+    }
+
+    /// Render the decentralization table the `simulate --gossip-sweep`
+    /// subcommand prints: P2P wire volume, cloud fan-in and consensus
+    /// distance side by side per topology × codec cell.
+    pub fn to_table(&self) -> String {
+        let mut out = String::new();
+        let header = format!(
+            "{:<12} {:<16} {:>7} {:>8} {:>12} {:>9} {:>9} {:>10}  {}\n",
+            "topology",
+            "codec",
+            "rounds",
+            "acc%",
+            "makespan s",
+            "MB/round",
+            "cloud MB",
+            "consensus",
+            "status"
+        );
+        out.push_str(&header);
+        out.push_str(&"-".repeat(header.len().saturating_sub(1)));
+        out.push('\n');
+        for row in &self.rows {
+            match &row.outcome {
+                Ok(rep) => {
+                    let consensus = if rep.mode == "gossip" {
+                        format!("{:.4}", rep.consensus_distance)
+                    } else {
+                        "-".to_string()
+                    };
+                    out.push_str(&format!(
+                        "{:<12} {:<16} {:>7} {:>8.2} {:>12.1} {:>9.2} \
+                         {:>9.2} {:>10}  {}\n",
+                        row.topology,
+                        row.codec,
+                        rep.rounds,
+                        rep.final_accuracy * 100.0,
+                        rep.makespan_ms / 1000.0,
+                        Self::mb(rep.comm_bytes) / rep.rounds.max(1) as f64,
+                        Self::mb(rep.bytes_to_cloud),
+                        consensus,
+                        if rep.converged { "ok" } else { "partial" },
+                    ));
+                }
+                Err(e) => out.push_str(&format!(
+                    "{:<12} {:<16} {:>7} {:>8} {:>12} {:>9} {:>9} {:>10}  \
+                     error: {e}\n",
+                    row.topology, row.codec, "-", "-", "-", "-", "-", "-",
+                )),
+            }
+        }
+        out
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1863,6 +2064,51 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("middle_out"), "{err}");
+    }
+
+    #[test]
+    fn gossip_sweep_grids_peer_shapes_against_server_baselines() {
+        let sweep = GossipSweep::new(small_sim_config())
+            .topologies(&["gossip(8)", "ring", "flat"])
+            .codecs(&["identity"]);
+        let cells = sweep.configs().unwrap();
+        assert_eq!(cells.len(), 3);
+        assert!(cells
+            .iter()
+            .any(|c| c.topology == "gossip(8)" && c.sim.engine == "gossip"));
+        assert!(cells
+            .iter()
+            .any(|c| c.topology == "flat" && c.sim.engine == "server"));
+        let platform = Platform::new(3);
+        let report = sweep.run(&platform).unwrap();
+        assert_eq!(report.ok_rows().count(), 3);
+        let table = report.to_table();
+        assert!(table.contains("consensus"), "{table}");
+        assert!(table.contains("cloud MB"), "{table}");
+        assert!(table.contains("gossip(8)"), "{table}");
+        // Peer cells never touch the cloud; the star baseline must.
+        for (row, rep) in report.ok_rows() {
+            if rep.mode == "gossip" {
+                assert_eq!(rep.bytes_to_cloud, 0, "{}", row.topology);
+                assert!(rep.comm_bytes > 0, "{}", row.topology);
+            } else {
+                assert!(rep.bytes_to_cloud > 0, "{}", row.topology);
+            }
+        }
+        assert!(report.consensus_of("gossip(8)").unwrap() > 0.0);
+        assert_eq!(report.consensus_of("flat"), Some(0.0));
+        assert!(report.consensus_of("edges(16)").is_none());
+    }
+
+    #[test]
+    fn gossip_sweep_rejects_unknown_topologies_up_front() {
+        let platform = Platform::new(1);
+        let err = GossipSweep::new(small_sim_config())
+            .topologies(&["torus(3)"])
+            .run(&platform)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("torus"), "{err}");
     }
 
     #[test]

@@ -81,7 +81,67 @@ pub fn config_fingerprint(cfg: &Config) -> u64 {
         bytes.extend_from_slice(s.as_bytes());
         bytes.push(0); // field separator
     }
+    if cfg.sim.engine != "server" {
+        // Engine selection joined the fingerprint with the gossip PR;
+        // gating on the non-default keeps every pre-existing
+        // checkpoint's fingerprint valid.
+        bytes.extend_from_slice(cfg.sim.engine.as_bytes());
+        bytes.push(0);
+        bytes
+            .extend_from_slice(&(cfg.sim.gossip_rounds as u64).to_le_bytes());
+    }
     fnv1a(&bytes)
+}
+
+/// Retention GC: delete all but the `keep` highest-round
+/// `ckpt_round_*.bin` files in `dir`, returning the deleted paths.
+/// `keep == 0` disables pruning (keep everything); the newest
+/// checkpoint by round number is never deleted, and files that do not
+/// match the naming scheme are never touched.
+pub fn prune_checkpoints(dir: &Path, keep: usize) -> Result<Vec<PathBuf>> {
+    if keep == 0 {
+        return Ok(Vec::new());
+    }
+    let entries = std::fs::read_dir(dir).map_err(|e| {
+        Error::Runtime(format!(
+            "checkpoint: cannot list {}: {e}",
+            dir.display()
+        ))
+    })?;
+    let mut rounds: Vec<(usize, PathBuf)> = Vec::new();
+    for entry in entries {
+        let entry = entry.map_err(|e| {
+            Error::Runtime(format!(
+                "checkpoint: cannot list {}: {e}",
+                dir.display()
+            ))
+        })?;
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        let Some(round) = name
+            .strip_prefix("ckpt_round_")
+            .and_then(|r| r.strip_suffix(".bin"))
+            .and_then(|r| r.parse::<usize>().ok())
+        else {
+            continue;
+        };
+        rounds.push((round, entry.path()));
+    }
+    // Numeric round order, not directory order: round 10 outlives
+    // round 2.
+    rounds.sort_unstable_by_key(|&(round, _)| round);
+    let cut = rounds.len().saturating_sub(keep);
+    let mut pruned = Vec::with_capacity(cut);
+    for (_, path) in rounds.into_iter().take(cut) {
+        std::fs::remove_file(&path).map_err(|e| {
+            Error::Runtime(format!(
+                "checkpoint: cannot prune {}: {e}",
+                path.display()
+            ))
+        })?;
+        pruned.push(path);
+    }
+    Ok(pruned)
 }
 
 /// Accumulates checkpoint words and writes the enveloped file.
@@ -382,8 +442,57 @@ mod tests {
         let mut regrown = base.clone();
         regrown.num_clients += 1;
         assert_ne!(fp, config_fingerprint(&regrown));
-        let mut remoded = base;
+        let mut remoded = base.clone();
         remoded.sim.availability = "diurnal(0.5)".into();
         assert_ne!(fp, config_fingerprint(&remoded));
+        // The gossip engine fingerprints its own knobs — but only when
+        // selected, so pre-gossip checkpoints stay resumable.
+        let mut peered = base;
+        peered.sim.engine = "gossip".into();
+        peered.topology = "gossip(8)".into();
+        let pfp = config_fingerprint(&peered);
+        assert_ne!(fp, pfp);
+        let mut longer = peered.clone();
+        longer.sim.gossip_rounds = 50;
+        assert_ne!(pfp, config_fingerprint(&longer));
+    }
+
+    #[test]
+    fn prune_keeps_the_newest_rounds_in_numeric_order() {
+        let dir = std::env::temp_dir().join(format!(
+            "easyfl_ckpt_prune_{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        for round in [1, 2, 10] {
+            let mut w = CheckpointWriter::new();
+            w.push_u64(round as u64);
+            w.write(&checkpoint_path(&dir, round)).unwrap();
+        }
+        let bystander = dir.join("notes.txt");
+        std::fs::write(&bystander, "not a checkpoint").unwrap();
+
+        // keep == 0 disables pruning entirely.
+        assert!(prune_checkpoints(&dir, 0).unwrap().is_empty());
+        for round in [1, 2, 10] {
+            assert!(checkpoint_path(&dir, round).is_file());
+        }
+
+        // keep = 2: round 1 goes; rounds 2 and 10 survive (numeric
+        // order — lexically "10" < "2" would wrongly prune round 10).
+        let pruned = prune_checkpoints(&dir, 2).unwrap();
+        assert_eq!(pruned, vec![checkpoint_path(&dir, 1)]);
+        assert!(!checkpoint_path(&dir, 1).exists());
+        assert!(checkpoint_path(&dir, 2).is_file());
+        assert!(checkpoint_path(&dir, 10).is_file());
+
+        // keep beyond the population is a no-op; the newest always
+        // survives even at keep = 1.
+        assert!(prune_checkpoints(&dir, 5).unwrap().is_empty());
+        let pruned = prune_checkpoints(&dir, 1).unwrap();
+        assert_eq!(pruned, vec![checkpoint_path(&dir, 2)]);
+        assert!(checkpoint_path(&dir, 10).is_file());
+        assert!(bystander.is_file(), "unrelated files are never touched");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -29,6 +29,19 @@ pub enum Fault {
     /// just after it is written — resuming from it must surface a typed
     /// integrity error, never a wrong-answer run.
     CorruptCheckpoint,
+    /// `drop_midframe(f)`: each report's frame is cut mid-transfer with
+    /// probability `f` — the bytes were partially shipped but the
+    /// update never lands, converting the reporter into a dropout.
+    /// The wire-level twin of `drop_frames` (the reactor's mid-frame
+    /// cut, promoted from `tests/remote_loopback.rs` into the config
+    /// plane). Draws only from the dedicated chaos RNG stream.
+    DropMidframe { frac: f64 },
+    /// `stall_frames(f, ms)`: each report's frame stalls partially
+    /// written with probability `f` and completes `ms` later — the
+    /// slow-trickle reactor fault. The report still lands (late); a
+    /// stall past the round deadline turns the client into a genuine
+    /// straggler.
+    StallFrames { frac: f64, delay_ms: f64 },
 }
 
 fn parse_args(spec: &str) -> Result<Vec<f64>> {
@@ -83,9 +96,33 @@ impl Fault {
                 Ok(Fault::DropFrames { frac })
             }
             "corrupt_checkpoint" => Ok(Fault::CorruptCheckpoint),
+            "drop_midframe" => {
+                let frac = args.first().copied().unwrap_or(f64::NAN);
+                if !(0.0..=1.0).contains(&frac) {
+                    return Err(Error::Config(format!(
+                        "drop_midframe needs a fraction in [0, 1], got \
+                         {spec:?}"
+                    )));
+                }
+                Ok(Fault::DropMidframe { frac })
+            }
+            "stall_frames" => {
+                let frac = args.first().copied().unwrap_or(f64::NAN);
+                let delay_ms = args.get(1).copied().unwrap_or(f64::NAN);
+                if !(0.0..=1.0).contains(&frac)
+                    || !(delay_ms > 0.0 && delay_ms.is_finite())
+                {
+                    return Err(Error::Config(format!(
+                        "stall_frames needs (fraction in [0, 1], \
+                         delay_ms > 0), got {spec:?}"
+                    )));
+                }
+                Ok(Fault::StallFrames { frac, delay_ms })
+            }
             other => Err(Error::Config(format!(
                 "unknown fault {other:?} (kill_server_at_round(r) | \
-                 partition_edge(c) | drop_frames(f) | corrupt_checkpoint)"
+                 partition_edge(c) | drop_frames(f) | corrupt_checkpoint \
+                 | drop_midframe(f) | stall_frames(f,ms))"
             ))),
         }
     }
@@ -100,6 +137,10 @@ impl Fault {
             }
             Fault::DropFrames { frac } => format!("drop_frames({frac})"),
             Fault::CorruptCheckpoint => "corrupt_checkpoint".into(),
+            Fault::DropMidframe { frac } => format!("drop_midframe({frac})"),
+            Fault::StallFrames { frac, delay_ms } => {
+                format!("stall_frames({frac},{delay_ms})")
+            }
         }
     }
 }
@@ -123,6 +164,11 @@ mod tests {
             ("partition_edge(2)", Fault::PartitionEdge { cluster: 2 }),
             ("drop_frames(0.05)", Fault::DropFrames { frac: 0.05 }),
             ("corrupt_checkpoint", Fault::CorruptCheckpoint),
+            ("drop_midframe(0.02)", Fault::DropMidframe { frac: 0.02 }),
+            (
+                "stall_frames(0.1,2500)",
+                Fault::StallFrames { frac: 0.1, delay_ms: 2500.0 },
+            ),
         ] {
             let f = Fault::parse(spec).unwrap();
             assert_eq!(f, want, "{spec}");
@@ -141,6 +187,11 @@ mod tests {
             "drop_frames",
             "drop_frames(1.5)",
             "drop_frames(-0.1)",
+            "drop_midframe",
+            "drop_midframe(2)",
+            "stall_frames(0.1)",
+            "stall_frames(0.1,0)",
+            "stall_frames(1.5,100)",
         ] {
             assert!(Fault::parse(spec).is_err(), "{spec}");
         }

@@ -19,15 +19,19 @@
 //!   zero-update) corrupting a configurable, seed-deterministic fraction
 //!   of the population's surrogate deltas, reduced through the *real*
 //!   registered aggregators so robustness is measured, not assumed;
-//! * [`rounds`] — the two engines: synchronous deadline rounds with
-//!   over-selection, and async FedBuff with staleness-discounted
-//!   aggregation. Both reuse the scheduler [`crate::scheduler::Strategy`]
-//!   trait unchanged;
+//! * [`rounds`] — the round engines: synchronous deadline rounds with
+//!   over-selection, async FedBuff with staleness-discounted
+//!   aggregation (both reuse the scheduler
+//!   [`crate::scheduler::Strategy`] trait unchanged), and — behind
+//!   `sim.engine = "gossip"` — serverless P2P gossip rounds over a
+//!   [`crate::gossip::PeerGraph`] (`bytes_to_cloud == 0`, consensus
+//!   distance in [`SimReport`]);
 //! * [`churn`] — elastic membership: seed-deterministic between-round
 //!   join/leave models extending the lifecycle machine (`"none"` burns
 //!   zero RNG, keeping pre-existing digests bit-identical);
 //! * [`chaos`] — fault-injection plane (server kill, edge partition,
-//!   frame drops, checkpoint corruption) for crash-safety testing.
+//!   frame drops, mid-frame cuts, stalled frames, checkpoint
+//!   corruption) for crash-safety testing.
 //!
 //! A 100k-client, 200-round scenario simulates in seconds and is
 //! bit-for-bit reproducible per seed. Low-code as everything else:
@@ -98,6 +102,8 @@ pub(crate) fn register_builtins(reg: &mut ComponentRegistry) {
         "partition_edge",
         "drop_frames",
         "corrupt_checkpoint",
+        "drop_midframe",
+        "stall_frames",
     ] {
         reg.register_fault(name, Arc::new(Fault::parse));
     }

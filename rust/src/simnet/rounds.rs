@@ -28,6 +28,7 @@ use crate::data::partition::build_clients;
 use crate::data::synth;
 use crate::error::{Error, Result};
 use crate::flow::Update;
+use crate::gossip::{GossipEngine, PeerGraph};
 use crate::hierarchy::{HierPlane, Topology};
 use crate::model::ParamVec;
 use crate::obs::{Histogram, Span, Telemetry};
@@ -128,6 +129,11 @@ pub struct SimReport {
     /// Faults the chaos plane injected over the run (0 with `chaos`
     /// empty — the plane is completely inert then).
     pub faults_injected: u64,
+    /// Final consensus distance of a gossip run: the maximum pairwise
+    /// L∞ parameter divergence across honest clients (exact, not
+    /// sampled). 0 for the server engines, which hold one global model
+    /// by construction.
+    pub consensus_distance: f64,
 }
 
 impl SimReport {
@@ -158,6 +164,7 @@ impl SimReport {
             ("fold_ms_p50", Json::Num(self.fold_ms_p50)),
             ("fold_ms_p95", Json::Num(self.fold_ms_p95)),
             ("fold_ms_p99", Json::Num(self.fold_ms_p99)),
+            ("consensus_distance", Json::Num(self.consensus_distance)),
         ])
     }
 
@@ -265,6 +272,11 @@ pub struct SimNet {
     drop_frac: Option<f64>,
     partitioned: Option<usize>,
     corrupt_ckpt: bool,
+    /// `drop_midframe(f)`: reports cut mid-frame in transit.
+    midframe_frac: Option<f64>,
+    /// `stall_frames(f, ms)`: reports stalling partially written, then
+    /// completing `ms` later.
+    stall: Option<(f64, f64)>,
     /// Dedicated chaos RNG (`drop_frames` draws; an empty fault list
     /// burns nothing).
     chaos_rng: Rng,
@@ -275,6 +287,11 @@ pub struct SimNet {
     /// segment, so reports add these offsets back.
     base_rounds: usize,
     base_comm_bytes: usize,
+    /// Gossip state matrix carried out of a checkpoint restore until
+    /// `run_gossip` hands it to the engine (`None` otherwise).
+    gossip_states: Option<Vec<f32>>,
+    /// Latest consensus distance of a gossip run (0 for server engines).
+    consensus_distance: f64,
 }
 
 /// Engine-loop locals restored from a checkpoint (everything else lives
@@ -327,6 +344,8 @@ impl SimNet {
         let mut drop_frac = None;
         let mut partitioned = None;
         let mut corrupt_ckpt = false;
+        let mut midframe_frac = None;
+        let mut stall = None;
         for spec in &cfg.chaos {
             match registry::with_global(|r| r.fault(spec))? {
                 Fault::KillServerAtRound { round } => kill_at = Some(round),
@@ -335,6 +354,10 @@ impl SimNet {
                     partitioned = Some(cluster)
                 }
                 Fault::CorruptCheckpoint => corrupt_ckpt = true,
+                Fault::DropMidframe { frac } => midframe_frac = Some(frac),
+                Fault::StallFrames { frac, delay_ms } => {
+                    stall = Some((frac, delay_ms))
+                }
             }
         }
         if partitioned.is_some() && topology.is_flat() {
@@ -344,8 +367,55 @@ impl SimNet {
                     .into(),
             ));
         }
+        // Gossip cross-validation: the peer engine and the peer shapes
+        // come as a pair, and the engine only composes with the planes
+        // that make sense without a server.
+        let gossip = cfg.sim.engine == "gossip";
+        if gossip != topology.is_peer() {
+            return Err(Error::Config(if gossip {
+                format!(
+                    "sim.engine = \"gossip\" needs a peer topology \
+                     (gossip(k) | ring), got {:?}",
+                    topology.name()
+                )
+            } else {
+                format!(
+                    "peer topology {:?} needs sim.engine = \"gossip\"",
+                    topology.name()
+                )
+            }));
+        }
+        if gossip {
+            if cfg.sim.real_training {
+                return Err(Error::Config(
+                    "gossip engine is surrogate-only (sim.real_training \
+                     is incompatible)"
+                        .into(),
+                ));
+            }
+            if cfg.sim.churn != "none" {
+                return Err(Error::Config(
+                    "gossip engine needs sim.churn = \"none\" (the peer \
+                     graph is fixed for the run)"
+                        .into(),
+                ));
+            }
+            if partitioned.is_some() {
+                return Err(Error::Config(
+                    "partition_edge targets edge clusters; a gossip run \
+                     has none"
+                        .into(),
+                ));
+            }
+            let k = topology.peer_degree().unwrap_or(0);
+            PeerGraph::validate_dims(
+                if k == 2 { "ring" } else { "gossip" },
+                k,
+                num_clients,
+            )?;
+        }
         let agg_name = cfg.agg.clone().unwrap_or_else(|| "mean".to_string());
-        if cfg.agg.is_some() || cfg.sim.adversary_frac > 0.0 {
+        if cfg.agg.is_some() || cfg.sim.adversary_frac > 0.0 || gossip {
             // Fail fast on an unknown or misconfigured aggregator before
             // the run starts (the probe also validates trim/clip knobs).
             let probe =
@@ -451,6 +521,11 @@ impl SimNet {
         if !cfg.chaos.is_empty() {
             tracker.set_config("chaos", cfg.chaos.join(","));
         }
+        if gossip {
+            tracker.set_config("engine", "gossip".to_string());
+            tracker
+                .set_config("gossip_rounds", cfg.sim.gossip_rounds.to_string());
+        }
 
         let vclock = Arc::new(VirtualClock::new());
         let tel = Telemetry::from_config(cfg, vclock.clone())?;
@@ -500,10 +575,14 @@ impl SimNet {
             drop_frac,
             partitioned,
             corrupt_ckpt,
+            midframe_frac,
+            stall,
             chaos_rng,
             faults_injected: 0,
             base_rounds: 0,
             base_comm_bytes: 0,
+            gossip_states: None,
+            consensus_distance: 0.0,
             cfg: cfg.clone(),
         })
     }
@@ -552,6 +631,9 @@ impl SimNet {
             Some(path) => Some(self.restore_checkpoint(&path)?),
             None => None,
         };
+        if self.cfg.sim.engine == "gossip" {
+            return self.run_gossip(cancel, resume);
+        }
         match self.cfg.sim.mode {
             SimMode::Sync => self.run_sync(cancel, resume),
             SimMode::Async => self.run_async(cancel, resume),
@@ -904,6 +986,14 @@ impl SimNet {
                             round_dropped += 1;
                             finish_now =
                                 reported + round_dropped >= cohort.len();
+                        } else if let Some(delay) = self.chaos_stall_ms() {
+                            // Stalled frame: the report lands late. Past
+                            // the deadline it becomes a straggler drop
+                            // like any other.
+                            self.queue.push(
+                                t + delay,
+                                EventKind::Report { client, epoch },
+                            );
                         } else {
                             self.clients[client].begin_upload();
                             self.clients[client].report();
@@ -977,6 +1067,13 @@ impl SimNet {
                 for &(_, ms) in &measured {
                     service.record_ms(ms);
                 }
+                // Downlink distributes the dense model to every selected
+                // client; the uplink charges each report's actual wire
+                // size (equal to model_bytes when no codec is
+                // configured, so the legacy (selected + reported) ·
+                // model_bytes is preserved).
+                let comm = cohort.len() * self.cost.model_bytes
+                    + reported * self.uplink_bytes;
                 self.record_round(
                     round,
                     close - t0,
@@ -984,6 +1081,7 @@ impl SimNet {
                     reported,
                     round_dropped,
                     0.0,
+                    comm,
                     round_bytes,
                     train_loss,
                     acc,
@@ -1012,7 +1110,7 @@ impl SimNet {
                     self.apply_churn(close);
                     self.queue
                         .push(close, EventKind::RoundStart { round: round + 1 });
-                    self.maybe_checkpoint(rounds_done, makespan, close)?;
+                    self.maybe_checkpoint(rounds_done, makespan, close, None)?;
                     if self.chaos_kill_now(rounds_done) {
                         self.cancelled = true;
                         break;
@@ -1113,6 +1211,12 @@ impl SimNet {
                         active -= 1;
                         agg_dropped += 1;
                         self.total_dropped += 1;
+                    } else if let Some(delay) = self.chaos_stall_ms() {
+                        // Stalled frame: re-queue the report `delay`
+                        // later; the client stays busy, so the refill
+                        // below cannot double-book its slot.
+                        self.queue
+                            .push(t + delay, EventKind::Report { client, epoch });
                     } else {
                         let staleness = (self.version
                             - self.clients[client].start_version)
@@ -1165,6 +1269,9 @@ impl SimNet {
                             // this window (reports + drops), so the
                             // reported ≤ selected invariant holds per
                             // round.
+                            let comm = (window.arrivals + agg_dropped)
+                                * self.cost.model_bytes
+                                + window.arrivals * self.uplink_bytes;
                             self.record_round(
                                 round,
                                 close - t_last,
@@ -1172,6 +1279,7 @@ impl SimNet {
                                 window.arrivals,
                                 agg_dropped,
                                 window.avg_staleness,
+                                comm,
                                 window_bytes,
                                 train_loss,
                                 acc,
@@ -1203,6 +1311,7 @@ impl SimNet {
                                     self.version,
                                     makespan,
                                     t_last,
+                                    None,
                                 )?;
                                 if self.chaos_kill_now(self.version) {
                                     self.cancelled = true;
@@ -1245,6 +1354,329 @@ impl SimNet {
             self.total_selected += 1;
             self.schedule_client(c, now_ms);
             *active += 1;
+        }
+    }
+
+    // --------------------------------------------------- gossip engine
+
+    /// Serverless P2P rounds over a [`PeerGraph`]: every online client
+    /// trains locally, ships its state to each neighbor (edge-charged
+    /// P2P uploads — `bytes_to_cloud` stays 0 for the whole run) and
+    /// folds what it received through the registered aggregator. The
+    /// `ring` shape runs the all-reduce variant: one global fold per
+    /// round that every participant adopts. Convergence is measured as
+    /// consensus distance — the exact maximum pairwise L∞ parameter
+    /// divergence across honest clients — surfaced per round through
+    /// telemetry and finally in [`SimReport::consensus_distance`].
+    fn run_gossip(
+        &mut self,
+        cancel: &dyn Fn() -> bool,
+        resume: Option<ResumeAux>,
+    ) -> Result<SimReport> {
+        let sw = Stopwatch::start();
+        let rounds = self.target_rounds();
+        let deadline_ms = self.cfg.sim.deadline_ms;
+        let n = self.clients.len();
+        let degree = self.topology.peer_degree().unwrap_or(2);
+        let ring = matches!(self.topology, Topology::Ring);
+        let kind = if ring { "ring" } else { "gossip" };
+        // Graph permutation, initial states and drift directions come
+        // from a dedicated stream seeded once here: the main stream's
+        // draws stay aligned with the server engines, and a resumed run
+        // rebuilds the identical graph/drift table from the seed before
+        // overwriting the states from the checkpoint.
+        let mut gossip_rng = Rng::new(self.cfg.seed ^ 0x474F_5353_4950); // "GOSSIP"
+        let graph = PeerGraph::build(kind, degree, n, &mut gossip_rng)?;
+        let mut engine = GossipEngine::new(graph, SURROGATE_P, &mut gossip_rng);
+        // One registered aggregator reused across every fold (`finish`
+        // resets it); robust rules make each neighborhood fold — or the
+        // ring's global fold — Byzantine-filtered.
+        let ctx = AggContext::from_config(
+            Arc::new(ParamVec::zeros(SURROGATE_P)),
+            &self.cfg,
+        )
+        .expect_updates(if ring { n } else { degree + 1 })
+        .telemetry(self.tel.clone());
+        let mut agg =
+            registry::with_global(|r| r.aggregator(&self.agg_name, &ctx))?;
+
+        let mut round = 0usize;
+        let mut t0 = 0.0f64;
+        let mut cohort: Vec<usize> = Vec::new();
+        let mut reporters: Vec<usize> = Vec::new();
+        let mut round_dropped = 0usize;
+        let mut measured: Vec<(usize, f64)> = Vec::new();
+        let mut awaiting = false;
+        let mut round_span = Span::noop();
+
+        // Checkpoints land between rounds exactly like the sync engine's,
+        // carrying the state matrix as an appendix; a resumed run
+        // re-enters here with the restored queue and the rebuilt engine
+        // overwritten from the snapshot.
+        let (mut rounds_done, mut makespan) = match resume {
+            Some(aux) => {
+                if let Some(states) = self.gossip_states.take() {
+                    engine.restore(aux.rounds_done, states)?;
+                }
+                (aux.rounds_done, aux.makespan)
+            }
+            None => {
+                self.init_population();
+                self.queue.push(0.0, EventKind::RoundStart { round: 0 });
+                (0, 0.0)
+            }
+        };
+        while rounds_done < rounds {
+            let Some(ev) = self.queue.pop() else {
+                self.tracker
+                    .warn("simnet: event queue drained before all rounds ran");
+                break;
+            };
+            let t = ev.time_ms;
+            if self.tel.enabled() {
+                self.vclock.set_ms(t);
+            }
+            let mut finish_now = false;
+            match ev.kind {
+                EventKind::Online { client } => self.handle_toggle(client, true, t),
+                EventKind::Offline { client } => {
+                    self.handle_toggle(client, false, t)
+                }
+                EventKind::RoundStart { round: r } => {
+                    round = r;
+                    t0 = t;
+                    reporters.clear();
+                    round_dropped = 0;
+                    measured.clear();
+                    // No server-side selection: every available client
+                    // participates. Index order keeps the per-client
+                    // schedule draws deterministic.
+                    cohort = self.pool.members().to_vec();
+                    cohort.sort_unstable();
+                    for &c in &cohort {
+                        self.clients[c].select(self.version);
+                        self.clients[c].begin_training();
+                    }
+                    self.total_selected += cohort.len() as u64;
+                    awaiting = true;
+                    round_span = self.tel.span_with("sim.round", || {
+                        vec![
+                            ("round", r.to_string()),
+                            ("cohort", cohort.len().to_string()),
+                        ]
+                    });
+                    // P2P: no device queuing — every peer starts its
+                    // round at the boundary on its own hardware.
+                    for i in 0..cohort.len() {
+                        let c = cohort[i];
+                        self.schedule_gossip_client(c, t0, degree);
+                    }
+                    self.queue
+                        .push(t0 + deadline_ms, EventKind::Deadline { round: r });
+                }
+                EventKind::Report { client, epoch } => {
+                    if awaiting && self.live_event(client, epoch) {
+                        if self.chaos_report_lost(client) {
+                            self.clients[client].drop_out();
+                            self.release(client);
+                            self.total_dropped += 1;
+                            round_dropped += 1;
+                            finish_now = reporters.len() + round_dropped
+                                >= cohort.len();
+                        } else if let Some(delay) = self.chaos_stall_ms() {
+                            // Stalled frame: the exchange lands late; past
+                            // the deadline the peer misses the round.
+                            self.queue.push(
+                                t + delay,
+                                EventKind::Report { client, epoch },
+                            );
+                        } else {
+                            self.clients[client].begin_upload();
+                            self.clients[client].report();
+                            measured
+                                .push((client, self.clients[client].service_ms));
+                            self.release(client);
+                            self.total_reported += 1;
+                            reporters.push(client);
+                            finish_now = reporters.len() + round_dropped
+                                >= cohort.len();
+                        }
+                    }
+                }
+                EventKind::Dropout { client, epoch } => {
+                    if self.live_event(client, epoch) {
+                        self.clients[client].drop_out();
+                        self.release(client);
+                        self.total_dropped += 1;
+                        round_dropped += 1;
+                        finish_now = awaiting
+                            && reporters.len() + round_dropped >= cohort.len();
+                    }
+                }
+                EventKind::Deadline { round: r } => {
+                    finish_now = awaiting && r == round;
+                }
+            }
+            if awaiting && finish_now {
+                let sw_fold = Stopwatch::start();
+                let now = self.queue.now_ms();
+                // Peers still mid-exchange missed the round: their
+                // neighbors fold without them.
+                for i in 0..cohort.len() {
+                    let c = cohort[i];
+                    if self.clients[c].is_busy() {
+                        self.clients[c].drop_out();
+                        self.release(c);
+                        self.total_dropped += 1;
+                        round_dropped += 1;
+                    }
+                }
+                let reported = reporters.len();
+                let mut participating = vec![false; n];
+                for &c in &reporters {
+                    participating[c] = true;
+                }
+                let span = self.tel.span_with("gossip.exchange", || {
+                    vec![
+                        ("round", round.to_string()),
+                        ("participants", reported.to_string()),
+                    ]
+                });
+                engine.local_train(&participating);
+                // Broadcasts are what peers *claim*: the adversary
+                // corrupts Byzantine participants' outgoing rows (index
+                // order, dedicated stream), poisoning their neighbors
+                // but never their own true state.
+                let mut broadcasts = engine.states().to_vec();
+                if self.adversary_active() {
+                    for c in 0..n {
+                        if participating[c] && self.adversarial[c] {
+                            let row = c * SURROGATE_P;
+                            self.adversary.corrupt(
+                                &mut broadcasts[row..row + SURROGATE_P],
+                                &mut self.adv_rng,
+                            );
+                        }
+                    }
+                }
+                if ring {
+                    engine.ring_all_reduce(
+                        &participating,
+                        &broadcasts,
+                        agg.as_mut(),
+                    )?;
+                } else {
+                    engine.exchange(&participating, &broadcasts, agg.as_mut())?;
+                }
+                drop(span);
+                // Consensus over honest clients only — an adversary's
+                // own outlier state is its problem, not the metric's.
+                let honest: Vec<bool> =
+                    self.adversarial.iter().map(|&a| !a).collect();
+                let dist = engine.consensus_distance(&honest);
+                self.consensus_distance = dist;
+                self.tel.observe_ms("gossip.consensus", dist);
+                // Surrogate progress tracks mixing participation; the
+                // curves give the fleet-average loss/accuracy.
+                let part = reported as f64 / n as f64;
+                self.progress = (self.progress + part).max(0.0);
+                let (train_loss, acc) = self.backend_metrics(round)?;
+                let mut service = Histogram::new();
+                for &(_, ms) in &measured {
+                    service.record_ms(ms);
+                }
+                // Every byte is P2P: `degree` uplink frames per reporter,
+                // no model downlink, nothing to the cloud.
+                let comm = reported * degree * self.uplink_bytes;
+                self.record_round(
+                    round,
+                    now - t0,
+                    cohort.len(),
+                    reported,
+                    round_dropped,
+                    0.0,
+                    comm,
+                    0,
+                    train_loss,
+                    acc,
+                    &service,
+                );
+                let fold_ms = sw_fold.elapsed_ms();
+                self.fold_hist.record_ms(fold_ms);
+                self.tel.observe_ms("sim.fold_ms", fold_ms);
+                round_span = Span::noop();
+                self.version += 1;
+                awaiting = false;
+                rounds_done += 1;
+                makespan = now;
+                if rounds_done < rounds {
+                    if cancel() {
+                        self.cancelled = true;
+                        break;
+                    }
+                    // Same boundary order as the server engines (no
+                    // churn — the peer graph is fixed): next round into
+                    // the queue so the checkpoint snapshot carries it,
+                    // then the kill fault after its checkpoint.
+                    self.queue
+                        .push(now, EventKind::RoundStart { round: round + 1 });
+                    self.maybe_checkpoint(
+                        rounds_done,
+                        makespan,
+                        now,
+                        Some(&engine),
+                    )?;
+                    if self.chaos_kill_now(rounds_done) {
+                        self.cancelled = true;
+                        break;
+                    }
+                }
+            }
+        }
+        drop(round_span);
+        self.teardown();
+        self.finish_telemetry()?;
+        Ok(self.build_report("gossip", makespan, sw.elapsed_ms()))
+    }
+
+    /// Schedule one gossip participant's exchange: local compute plus
+    /// `degree` neighbor uploads (P2P frames leave serially on the
+    /// client's uplink — one cost draw per edge, so the wire schedule
+    /// reflects the graph). Mirrors [`Self::schedule_client`]'s draw
+    /// order: compute, uploads, then the dropout decision.
+    fn schedule_gossip_client(
+        &mut self,
+        client: usize,
+        start_ms: f64,
+        degree: usize,
+    ) {
+        let device = self.clients[client].device_class;
+        let bandwidth = self.clients[client].bandwidth_bytes_per_ms;
+        let compute = self.cost.compute_ms(device, &mut self.rng);
+        let mut total = compute;
+        for _ in 0..degree {
+            total += self.cost.upload_bytes_ms(
+                self.uplink_bytes,
+                bandwidth,
+                &mut self.rng,
+            );
+        }
+        self.tel
+            .counter("codec.encoded_bytes", (degree * self.uplink_bytes) as u64);
+        self.tel.counter(
+            "codec.dense_bytes",
+            (degree * self.cost.model_bytes) as u64,
+        );
+        self.clients[client].service_ms = total;
+        let epoch = self.clients[client].epoch;
+        let dropout = self.cfg.sim.dropout;
+        if dropout > 0.0 && self.rng.uniform() < dropout {
+            let duration = total * self.rng.uniform();
+            self.queue
+                .push(start_ms + duration, EventKind::Dropout { client, epoch });
+        } else {
+            self.queue
+                .push(start_ms + total, EventKind::Report { client, epoch });
         }
     }
 
@@ -1337,7 +1769,32 @@ impl SimNet {
                 return true;
             }
         }
+        if let Some(frac) = self.midframe_frac {
+            // The reactor's mid-frame cut: bytes partially shipped, the
+            // update never lands. Indistinguishable from drop_frames at
+            // this abstraction level, but a separate knob (and draw) so
+            // wire-level and network-level loss can be mixed.
+            if self.chaos_rng.uniform() < frac {
+                self.faults_injected += 1;
+                self.tel.counter("chaos.faults", 1);
+                return true;
+            }
+        }
         false
+    }
+
+    /// `stall_frames(f, ms)`: this report's frame stalls partially
+    /// written and completes `ms` later. Returns the extra delay when
+    /// the stall fires; draws from the chaos RNG only when armed.
+    fn chaos_stall_ms(&mut self) -> Option<f64> {
+        let (frac, delay_ms) = self.stall?;
+        if self.chaos_rng.uniform() < frac {
+            self.faults_injected += 1;
+            self.tel.counter("chaos.faults", 1);
+            Some(delay_ms)
+        } else {
+            None
+        }
     }
 
     /// `kill_server_at_round(r)`: hard-stop once `r` rounds aggregated
@@ -1366,6 +1823,7 @@ impl SimNet {
         rounds_done: usize,
         makespan: f64,
         t_last: f64,
+        gossip: Option<&GossipEngine>,
     ) -> Result<()> {
         let Some(dir) = self.cfg.checkpoint_dir.clone() else {
             return Ok(());
@@ -1380,13 +1838,23 @@ impl SimNet {
             vec![("round", rounds_done.to_string())]
         });
         let path = checkpoint::checkpoint_path(&dir, rounds_done);
-        let bytes = self.write_checkpoint(&path, rounds_done, makespan, t_last)?;
+        let bytes =
+            self.write_checkpoint(&path, rounds_done, makespan, t_last, gossip)?;
         self.tel.counter("checkpoint.saves", 1);
         self.tel.counter("checkpoint.bytes", bytes as u64);
         if self.corrupt_ckpt {
             checkpoint::corrupt_file(&path)?;
             self.faults_injected += 1;
             self.tel.counter("chaos.faults", 1);
+        }
+        // Retention: prune old checkpoints past `checkpoint_keep`, never
+        // touching the one just written (it is the newest by round).
+        if self.cfg.checkpoint_keep > 0 {
+            let pruned =
+                checkpoint::prune_checkpoints(&dir, self.cfg.checkpoint_keep)?;
+            if !pruned.is_empty() {
+                self.tel.counter("checkpoint.pruned", pruned.len() as u64);
+            }
         }
         drop(span);
         Ok(())
@@ -1405,6 +1873,7 @@ impl SimNet {
         rounds_done: usize,
         makespan: f64,
         t_last: f64,
+        gossip: Option<&GossipEngine>,
     ) -> Result<usize> {
         let mut w = CheckpointWriter::new();
         w.push_u64(checkpoint::config_fingerprint(&self.cfg));
@@ -1484,6 +1953,17 @@ impl SimNet {
             w.push_u64(tag);
             w.push_u64(a);
             w.push_u64(b);
+        }
+        // Gossip appendix: the engine's state matrix (lossless f32→f64).
+        // The drift table and peer graph are never serialized — they
+        // rebuild bit-identically from the seed; the engine's round
+        // counter equals `rounds_done`.
+        if let Some(engine) = gossip {
+            let states = engine.states();
+            w.push_usize(states.len());
+            for &v in states {
+                w.push_f64(v as f64);
+            }
         }
         w.write(path)
     }
@@ -1620,6 +2100,16 @@ impl SimNet {
             digest,
             events,
         })?;
+        if self.cfg.sim.engine == "gossip" {
+            let len = r.take_usize()?;
+            let mut states = Vec::with_capacity(len);
+            for _ in 0..len {
+                states.push(r.take_f64()? as f32);
+            }
+            // Stashed until `run_gossip` has rebuilt the engine from the
+            // seed; the length check happens at `GossipEngine::restore`.
+            self.gossip_states = Some(states);
+        }
         if r.remaining() != 0 {
             return Err(Error::Integrity(format!(
                 "checkpoint has {} trailing words",
@@ -1641,6 +2131,7 @@ impl SimNet {
         reported: usize,
         dropped: usize,
         avg_staleness: f64,
+        comm_bytes: usize,
         bytes_to_cloud: usize,
         train_loss: f64,
         accuracy: f64,
@@ -1659,12 +2150,7 @@ impl SimNet {
             test_accuracy: if eval { Some(accuracy) } else { None },
             round_ms,
             distribution_ms: 0.0,
-            // Downlink distributes the dense model to every selected
-            // client; the uplink charges each report's actual wire size
-            // (equal to model_bytes when no codec is configured, so the
-            // legacy (selected + reported) · model_bytes is preserved).
-            comm_bytes: selected * self.cost.model_bytes
-                + reported * self.uplink_bytes,
+            comm_bytes,
             bytes_to_cloud,
             clients: Vec::new(),
             selected,
@@ -1740,7 +2226,7 @@ impl SimNet {
             trace_digest: self.queue.trace_digest(),
             wall_ms,
             converged: self.base_rounds + self.tracker.num_rounds()
-                == self.cfg.rounds
+                == self.target_rounds()
                 && self.base_rounds + self.tracker.num_rounds() > 0,
             cancelled: self.cancelled,
             aggregator: self.agg_name.clone(),
@@ -1760,6 +2246,17 @@ impl SimNet {
             fold_ms_p95,
             fold_ms_p99,
             faults_injected: self.faults_injected,
+            consensus_distance: self.consensus_distance,
+        }
+    }
+
+    /// Rounds this run is configured to complete: `sim.gossip_rounds`
+    /// overrides the shared `rounds` knob on the gossip engine only.
+    fn target_rounds(&self) -> usize {
+        if self.cfg.sim.engine == "gossip" && self.cfg.sim.gossip_rounds > 0 {
+            self.cfg.sim.gossip_rounds
+        } else {
+            self.cfg.rounds
         }
     }
 }
@@ -1950,9 +2447,9 @@ mod tests {
     #[test]
     fn unknown_aggregator_or_adversary_fails_fast_at_construction() {
         let mut cfg = sim_cfg(SimMode::Sync);
-        cfg.agg = Some("krum".into());
+        cfg.agg = Some("medoid".into());
         let err = SimNet::from_config(&cfg).unwrap_err().to_string();
-        assert!(err.contains("krum"), "{err}");
+        assert!(err.contains("medoid"), "{err}");
         assert!(err.contains("trimmed_mean"), "{err}");
 
         let mut cfg = sim_cfg(SimMode::Sync);
@@ -2268,5 +2765,218 @@ mod tests {
         off.sim.churn = "none".into();
         let still = SimNet::from_config(&off).unwrap().run().unwrap();
         assert_eq!(still.num_clients, 400);
+    }
+
+    fn gossip_cfg(k: usize) -> Config {
+        let mut cfg = sim_cfg(SimMode::Sync);
+        cfg.sim.engine = "gossip".into();
+        cfg.topology = format!("gossip({k})");
+        cfg
+    }
+
+    #[test]
+    fn gossip_engine_runs_p2p_rounds_with_zero_cloud_bytes() {
+        let cfg = gossip_cfg(8);
+        let report = SimNet::from_config(&cfg).unwrap().run().unwrap();
+        assert_eq!(report.mode, "gossip");
+        assert_eq!(report.rounds, 12);
+        assert!(report.converged);
+        assert_eq!(
+            report.bytes_to_cloud, 0,
+            "gossip is serverless — nothing may cross into the cloud"
+        );
+        assert!(report.comm_bytes > 0, "P2P traffic must be charged");
+        assert!(report.reported > 0);
+        assert!(report.consensus_distance.is_finite());
+        assert!(report.consensus_distance > 0.0);
+
+        // More gossip rounds ⇒ more mixing against decaying drift.
+        let mut long = gossip_cfg(8);
+        long.sim.gossip_rounds = 40;
+        let mixed = SimNet::from_config(&long).unwrap().run().unwrap();
+        assert_eq!(mixed.rounds, 40, "gossip_rounds overrides rounds");
+        assert!(
+            mixed.consensus_distance < report.consensus_distance,
+            "40 rounds must mix tighter than 12: {} !< {}",
+            mixed.consensus_distance,
+            report.consensus_distance
+        );
+
+        // Same seed ⇒ same trace, twice.
+        let again = SimNet::from_config(&cfg).unwrap().run().unwrap();
+        assert_eq!(report.trace_digest, again.trace_digest);
+        assert_eq!(report.consensus_distance, again.consensus_distance);
+    }
+
+    #[test]
+    fn ring_all_reduce_closes_consensus_with_full_participation() {
+        let mut cfg = sim_cfg(SimMode::Sync);
+        cfg.sim.engine = "gossip".into();
+        cfg.topology = "ring".into();
+        cfg.sim.dropout = 0.0;
+        // Generous deadline: the slowest of all 400 peers must land, or
+        // its stale state keeps consensus open.
+        cfg.sim.deadline_ms = 10_000_000.0;
+        let report = SimNet::from_config(&cfg).unwrap().run().unwrap();
+        assert_eq!(report.mode, "gossip");
+        assert_eq!(report.bytes_to_cloud, 0);
+        assert!(
+            report.consensus_distance < 1e-4,
+            "every round's all-reduce puts all participants on one \
+             state, got {}",
+            report.consensus_distance
+        );
+    }
+
+    #[test]
+    fn gossip_config_pairing_is_validated() {
+        // Engine without a peer shape.
+        let mut cfg = sim_cfg(SimMode::Sync);
+        cfg.sim.engine = "gossip".into();
+        assert!(SimNet::from_config(&cfg).is_err());
+        // Peer shape without the engine.
+        let mut cfg = sim_cfg(SimMode::Sync);
+        cfg.topology = "gossip(8)".into();
+        assert!(SimNet::from_config(&cfg).is_err());
+        // Gossip composes with neither churn, real training, nor
+        // partition_edge.
+        let mut cfg = gossip_cfg(8);
+        cfg.sim.churn = "grow(2)".into();
+        assert!(SimNet::from_config(&cfg).is_err());
+        let mut cfg = gossip_cfg(8);
+        cfg.sim.real_training = true;
+        assert!(SimNet::from_config(&cfg).is_err());
+        let mut cfg = gossip_cfg(8);
+        cfg.chaos = vec!["partition_edge(0)".into()];
+        assert!(SimNet::from_config(&cfg).is_err());
+        // Infeasible graph dims fail at construction, and the
+        // aggregator probe runs for gossip even without an adversary.
+        let mut cfg = gossip_cfg(8);
+        cfg.num_clients = 5;
+        assert!(SimNet::from_config(&cfg).is_err());
+        let mut cfg = gossip_cfg(8);
+        cfg.agg = Some("medoid".into());
+        assert!(SimNet::from_config(&cfg).is_err());
+    }
+
+    #[test]
+    fn gossip_resume_from_chaos_kill_reproduces_the_digest() {
+        let base = gossip_cfg(8);
+        let clean = SimNet::from_config(&base).unwrap().run().unwrap();
+
+        let dir = std::env::temp_dir().join(format!(
+            "easyfl_ckpt_gossip_{}",
+            std::process::id()
+        ));
+        let mut killed_cfg = base.clone();
+        killed_cfg.checkpoint_every = 3;
+        killed_cfg.checkpoint_dir = Some(dir.clone());
+        killed_cfg.chaos = vec!["kill_server_at_round(6)".into()];
+        let killed = SimNet::from_config(&killed_cfg).unwrap().run().unwrap();
+        assert!(killed.cancelled);
+        assert_eq!(killed.rounds, 6);
+
+        let mut resume_cfg = base.clone();
+        resume_cfg.resume_from = Some(checkpoint::checkpoint_path(&dir, 6));
+        let resumed =
+            SimNet::from_config(&resume_cfg).unwrap().run().unwrap();
+        assert_eq!(
+            resumed.trace_digest, clean.trace_digest,
+            "resumed gossip run must replay the uninterrupted trace"
+        );
+        assert_eq!(resumed.makespan_ms, clean.makespan_ms);
+        assert_eq!(resumed.rounds, clean.rounds);
+        assert_eq!(resumed.consensus_distance, clean.consensus_distance);
+        assert_eq!(resumed.bytes_to_cloud, 0);
+        assert!(resumed.converged);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn robust_neighborhood_folds_blunt_gossip_adversaries() {
+        // A sign-flipping minority poisons mean neighborhood folds but
+        // is filtered by per-neighborhood trimmed means — consensus
+        // across honest clients stays tighter under the robust rule.
+        let mut mean_cfg = gossip_cfg(8);
+        mean_cfg.sim.adversary = "scaled-noise".into();
+        mean_cfg.sim.adversary_frac = 0.2;
+        mean_cfg.sim.gossip_rounds = 20;
+        let mut trim_cfg = mean_cfg.clone();
+        trim_cfg.agg = Some("trimmed_mean".into());
+        trim_cfg.agg_trim_frac = 0.3;
+        let mean = SimNet::from_config(&mean_cfg).unwrap().run().unwrap();
+        let trim = SimNet::from_config(&trim_cfg).unwrap().run().unwrap();
+        assert!(
+            trim.consensus_distance < mean.consensus_distance,
+            "trimmed folds must out-mix the mean under attack: {} !< {}",
+            trim.consensus_distance,
+            mean.consensus_distance
+        );
+        // The attack never shifts the event timeline (dedicated
+        // streams): both runs replay the same trace.
+        assert_eq!(mean.trace_digest, trim.trace_digest);
+    }
+
+    #[test]
+    fn wire_chaos_faults_count_and_rounds_still_complete() {
+        let base = sim_cfg(SimMode::Sync);
+        let clean = SimNet::from_config(&base).unwrap().run().unwrap();
+        assert_eq!(clean.faults_injected, 0);
+
+        let mut cut_cfg = base.clone();
+        cut_cfg.chaos = vec!["drop_midframe(0.3)".into()];
+        let cut = SimNet::from_config(&cut_cfg).unwrap().run().unwrap();
+        assert_eq!(cut.rounds, 12);
+        assert!(cut.faults_injected > 0, "mid-frame cuts must count");
+        assert!(cut.reported < clean.reported);
+
+        let mut stall_cfg = base.clone();
+        stall_cfg.chaos = vec!["stall_frames(0.5,2000)".into()];
+        let stalled = SimNet::from_config(&stall_cfg).unwrap().run().unwrap();
+        assert_eq!(stalled.rounds, 12);
+        assert!(stalled.faults_injected > 0, "stalls must count");
+        assert!(
+            stalled.makespan_ms >= clean.makespan_ms,
+            "stalled frames cannot shorten the run: {} < {}",
+            stalled.makespan_ms,
+            clean.makespan_ms
+        );
+    }
+
+    #[test]
+    fn checkpoint_retention_keeps_only_the_newest() {
+        let dir = std::env::temp_dir().join(format!(
+            "easyfl_ckpt_retention_{}",
+            std::process::id()
+        ));
+        let mut cfg = sim_cfg(SimMode::Sync);
+        cfg.checkpoint_every = 3;
+        cfg.checkpoint_dir = Some(dir.clone());
+        cfg.checkpoint_keep = 1;
+        let report = SimNet::from_config(&cfg).unwrap().run().unwrap();
+        assert_eq!(report.rounds, 12);
+        // Boundaries at 3, 6 and 9 each saved; only round 9 survives the
+        // prune, and it must still be resumable.
+        for gone in [3, 6] {
+            assert!(
+                !checkpoint::checkpoint_path(&dir, gone).exists(),
+                "round-{gone} checkpoint should have been pruned"
+            );
+        }
+        let kept = checkpoint::checkpoint_path(&dir, 9);
+        assert!(kept.is_file(), "newest checkpoint must survive");
+        let mut resume_cfg = cfg.clone();
+        resume_cfg.checkpoint_every = 0;
+        resume_cfg.checkpoint_dir = None;
+        resume_cfg.checkpoint_keep = 0;
+        resume_cfg.resume_from = Some(kept);
+        let clean = SimNet::from_config(&sim_cfg(SimMode::Sync))
+            .unwrap()
+            .run()
+            .unwrap();
+        let resumed =
+            SimNet::from_config(&resume_cfg).unwrap().run().unwrap();
+        assert_eq!(resumed.trace_digest, clean.trace_digest);
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

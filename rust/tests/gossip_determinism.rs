@@ -1,0 +1,137 @@
+//! Gossip-engine determinism + inertness invariants.
+//!
+//! The decentralized engine must hold the same contract the server
+//! engines do: same config + seed ⇒ bit-identical trace digest,
+//! makespan and consensus distance, independent of fold thread count.
+//! And the knobs must be inert when off: a config that never asks for
+//! the gossip engine reproduces the pre-gossip baseline exactly.
+
+mod common;
+
+use common::sim_base_cfg as base_cfg;
+use easyfl::config::SimMode;
+use easyfl::simnet::SimNet;
+
+fn gossip_cfg(topology: &str) -> easyfl::Config {
+    let mut cfg = base_cfg();
+    cfg.topology = topology.into();
+    cfg.sim.engine = "gossip".into();
+    cfg.rounds = 8;
+    cfg
+}
+
+#[test]
+fn gossip_and_ring_reproduce_per_seed() {
+    for topology in ["gossip(6)", "ring"] {
+        let mut cfg = gossip_cfg(topology);
+        cfg.seed = 1234;
+        let a = SimNet::from_config(&cfg).unwrap().run().unwrap();
+        let b = SimNet::from_config(&cfg).unwrap().run().unwrap();
+        assert_eq!(a.mode, "gossip", "{topology}");
+        assert_eq!(a.trace_digest, b.trace_digest, "{topology} event trace");
+        assert_eq!(a.events, b.events, "{topology} event count");
+        assert_eq!(a.reported, b.reported, "{topology} reported");
+        assert_eq!(
+            a.makespan_ms.to_bits(),
+            b.makespan_ms.to_bits(),
+            "{topology} makespan must be bit-identical"
+        );
+        assert_eq!(
+            a.consensus_distance.to_bits(),
+            b.consensus_distance.to_bits(),
+            "{topology} consensus distance must be bit-identical"
+        );
+        // Serverless means serverless: the whole run never touches the
+        // cloud, while the peer edges carry real traffic.
+        assert_eq!(a.bytes_to_cloud, 0, "{topology} cloud bytes");
+        assert!(a.comm_bytes > 0, "{topology} P2P bytes");
+        assert_eq!(a.comm_bytes, b.comm_bytes, "{topology} comm bytes");
+
+        cfg.seed = 4321;
+        let c = SimNet::from_config(&cfg).unwrap().run().unwrap();
+        assert_ne!(a.trace_digest, c.trace_digest, "{topology} seeds diverge");
+    }
+}
+
+#[test]
+fn fold_thread_count_never_shifts_the_gossip_trace() {
+    // The neighborhood folds ride the streaming aggregators, whose
+    // chunk-parallel reduce must be order-insensitive: 1 thread and 4
+    // threads land on the same digest and the same consensus distance.
+    let mut results = Vec::new();
+    for threads in [1usize, 4] {
+        let mut cfg = gossip_cfg("gossip(6)");
+        cfg.agg_threads = threads;
+        let rep = SimNet::from_config(&cfg).unwrap().run().unwrap();
+        results.push(rep);
+    }
+    assert_eq!(
+        results[0].trace_digest, results[1].trace_digest,
+        "fold thread count leaked into the event trace"
+    );
+    assert_eq!(
+        results[0].consensus_distance.to_bits(),
+        results[1].consensus_distance.to_bits(),
+        "fold thread count leaked into the consensus distance"
+    );
+}
+
+#[test]
+fn codec_plane_composes_with_gossip_edges() {
+    // A lossy codec shrinks every peer exchange: same engine, fewer
+    // wire bytes, still perfectly reproducible.
+    let mut dense_cfg = gossip_cfg("gossip(6)");
+    dense_cfg.sim.model_bytes = 4096;
+    let dense = SimNet::from_config(&dense_cfg).unwrap().run().unwrap();
+
+    let mut coded_cfg = dense_cfg.clone();
+    coded_cfg.codec = Some("top_k_i8(0.05)".into());
+    let a = SimNet::from_config(&coded_cfg).unwrap().run().unwrap();
+    let b = SimNet::from_config(&coded_cfg).unwrap().run().unwrap();
+    assert_eq!(a.trace_digest, b.trace_digest, "coded gossip trace");
+    assert_eq!(a.bytes_to_cloud, 0);
+    assert!(
+        a.comm_bytes < dense.comm_bytes,
+        "top_k_i8(0.05) must shrink P2P traffic: {} !< {}",
+        a.comm_bytes,
+        dense.comm_bytes
+    );
+}
+
+#[test]
+fn gossip_knobs_off_reproduces_the_server_baseline() {
+    // The pre-gossip grid must be untouched by this subsystem existing:
+    // engine = "server" (the default) draws nothing from the gossip RNG
+    // stream, and an explicit inert gossip_rounds changes nothing.
+    for (mode, topology) in [
+        (SimMode::Sync, "flat"),
+        (SimMode::Async, "flat"),
+        (SimMode::Sync, "edges(4)"),
+    ] {
+        let mut cfg = base_cfg();
+        cfg.sim.mode = mode;
+        cfg.topology = topology.into();
+        cfg.rounds = 5;
+        let baseline = SimNet::from_config(&cfg).unwrap().run().unwrap();
+        assert_ne!(baseline.mode, "gossip");
+        assert_eq!(
+            baseline.consensus_distance, 0.0,
+            "{mode:?}/{topology}: server engines hold one global model"
+        );
+
+        let mut knobbed = cfg.clone();
+        knobbed.sim.engine = "server".into();
+        knobbed.sim.gossip_rounds = 40;
+        let rep = SimNet::from_config(&knobbed).unwrap().run().unwrap();
+        assert_eq!(
+            rep.trace_digest, baseline.trace_digest,
+            "{mode:?}/{topology}: inert gossip knobs shifted the trace"
+        );
+        assert_eq!(rep.rounds, baseline.rounds);
+        assert_eq!(
+            rep.final_accuracy.to_bits(),
+            baseline.final_accuracy.to_bits(),
+            "{mode:?}/{topology}: inert gossip knobs shifted training"
+        );
+    }
+}
